@@ -1,0 +1,46 @@
+//! Window ablation driver (Fig. 5 companion): sweep the sink/recent split of
+//! the 128-token high-precision window for one method and print the quality
+//! curve. A focused version of `innerq exp fig5`.
+//!
+//! ```bash
+//! cargo run --release --example ablation_windows [method]
+//! ```
+
+use anyhow::Result;
+use innerq::eval::{evaluate, EvalConfig};
+use innerq::runtime::Manifest;
+use innerq::QuantMethod;
+
+fn main() -> Result<()> {
+    let method = std::env::args()
+        .nth(1)
+        .and_then(|s| QuantMethod::parse(&s))
+        .unwrap_or(QuantMethod::InnerQSmall);
+    let manifest = Manifest::load("artifacts")?;
+    let cfg = EvalConfig { n_docs: 4, n_assign: 40, n_queries: 10, seed: 55 };
+
+    eprintln!("[ablation] baseline ...");
+    let (base, base_logits) = evaluate(&manifest, QuantMethod::BaselineFp16.config(), cfg, None)?;
+    println!(
+        "baseline_fp16: NLL {:.4}, acc {:.1}%",
+        base.nll,
+        base.accuracy * 100.0
+    );
+
+    println!("\nw_sink  w_recent  NLL      acc%   agree%  (method: {})", method.name());
+    for w_sink in [0usize, 16, 32, 64, 96, 128] {
+        let mut mc = method.config();
+        mc.w_sink = w_sink;
+        mc.w_recent = 128 - w_sink;
+        let (r, _) = evaluate(&manifest, mc, cfg, Some(&base_logits))?;
+        println!(
+            "{:>6} {:>9} {:>8.4} {:>6.1} {:>8.1}",
+            w_sink,
+            mc.w_recent,
+            r.nll,
+            r.accuracy * 100.0,
+            r.agreement * 100.0
+        );
+    }
+    Ok(())
+}

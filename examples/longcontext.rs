@@ -1,0 +1,77 @@
+//! Long-context generation: prefill a multi-thousand-token document, then
+//! compare decode-path behaviour and cache memory across methods — the
+//! paper's motivating workload (§1: "long-context generation", Table 2).
+//!
+//! ```bash
+//! cargo run --release --example longcontext [n_assign]
+//! ```
+
+use anyhow::Result;
+use innerq::coordinator::Engine;
+use innerq::quant::bitwidth;
+use innerq::runtime::Manifest;
+use innerq::workload::corpus::CorpusGen;
+use innerq::QuantMethod;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let n_assign: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(380);
+    let manifest = Manifest::load("artifacts")?;
+    let mut gen = CorpusGen::new(4242);
+    let doc = gen.document(n_assign, 6);
+    let prompt = &doc.text[..doc.query_start + 3]; // through the first "?x="
+    let tokens = {
+        let mut t = vec![manifest.bos];
+        t.extend(manifest.encode(prompt)?);
+        t
+    };
+    println!(
+        "document: {} chars ({} tokens prefilled), querying '{}'",
+        doc.text.len(),
+        tokens.len(),
+        &doc.queries[0].0
+    );
+
+    println!(
+        "\n{:<16} {:>9} {:>12} {:>12} {:>10} {:>8}",
+        "method", "bits/num", "prefill µs", "decode µs/t", "cache KiB", "answer"
+    );
+    for method in [
+        QuantMethod::BaselineFp16,
+        QuantMethod::Kivi,
+        QuantMethod::TurboQuant,
+        QuantMethod::InnerQBase,
+        QuantMethod::InnerQHybrid,
+        QuantMethod::InnerQSmall,
+    ] {
+        let engine = Engine::new(manifest.clone(), method.config())?;
+        let t0 = Instant::now();
+        let mut seq = engine.prefill(&tokens)?;
+        let prefill_us = t0.elapsed().as_micros();
+
+        // greedy-decode the queried value
+        let mut answer = String::new();
+        let mut next = Engine::argmax(&seq.last_logits);
+        let t1 = Instant::now();
+        let steps = 4;
+        for _ in 0..steps {
+            engine.decode_step(&mut [&mut seq], &[next])?;
+            answer.push_str(&engine.manifest.decode_text(&[next]));
+            next = Engine::argmax(&seq.last_logits);
+        }
+        let decode_us = t1.elapsed().as_micros() / steps as u128;
+
+        let bits = bitwidth::bit_width(&method.config(), engine.manifest.model.d_h).effective();
+        println!(
+            "{:<16} {:>9.2} {:>12} {:>12} {:>10.1} {:>8}",
+            method.name(),
+            bits,
+            prefill_us,
+            decode_us,
+            seq.cache_bytes() as f64 / 1024.0,
+            answer
+        );
+    }
+    println!("\nexpected answer: {} (latest assignment of '{}')", doc.queries[0].1, doc.queries[0].0);
+    Ok(())
+}

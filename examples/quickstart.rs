@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, start an InnerQ-quantized engine,
+//! and generate a completion for one recall prompt.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use innerq::coordinator::{Engine, Request, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::QuantMethod;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    println!(
+        "model: {} layers, d_model {}, vocab {} (train loss {:.3})",
+        manifest.model.n_layers, manifest.model.d_model, manifest.model.vocab,
+        manifest.final_train_loss
+    );
+
+    // The paper's flagship variant: 3-bit inner-grouped K & V, sink+recent
+    // high-precision windows, per-channel key normalization.
+    let method = QuantMethod::InnerQBase;
+    println!("compiling {} stages for {} ...", manifest.artifacts.len(), method.name());
+    let engine = Engine::new(manifest, method.config())?;
+    let mut sched = Scheduler::new(engine, 1 << 30);
+
+    let prompt = "a=41;b=07;c=93;d=22;e=58;f=64;g=11;h=85;i=30;j=76;a=55;c=12;?b=";
+    sched.submit(Request {
+        id: 1,
+        prompt: prompt.to_string(),
+        max_new_tokens: 12,
+        temperature: None,
+        arrived: Instant::now(),
+    });
+    let done = sched.run_to_completion()?;
+    let c = &done[0];
+    println!("\nprompt:     {prompt}");
+    println!("completion: {}", c.text);
+    println!(
+        "ttft: {} µs, total: {} µs, {} tokens generated",
+        c.ttft_us, c.total_us, c.n_generated
+    );
+    println!("\n(b was assigned 07 — a faithful cache recalls it.)");
+    Ok(())
+}

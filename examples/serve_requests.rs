@@ -1,0 +1,115 @@
+//! End-to-end serving driver (the paper's deployment scenario): start the
+//! TCP server with a quantized engine, fire a batch of concurrent client
+//! requests from the workload trace, and report latency/throughput plus
+//! recall correctness. This is the EXPERIMENTS.md §E2E run.
+//!
+//! ```bash
+//! cargo run --release --example serve_requests [method] [n_requests]
+//! ```
+
+use anyhow::Result;
+use innerq::server::{serve, Client};
+use innerq::workload::trace::{generate, TraceConfig};
+use innerq::QuantMethod;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let method = args
+        .get(1)
+        .and_then(|s| QuantMethod::parse(s))
+        .unwrap_or(QuantMethod::InnerQBase);
+    let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+
+    eprintln!("[e2e] compiling stages (method={}) ...", method.name());
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop_srv = stop.clone();
+    let server = std::thread::spawn(move || -> Result<()> {
+        // Engine lives on the server thread (PJRT client is thread-local).
+        let manifest = innerq::runtime::Manifest::load("artifacts")?;
+        let engine = innerq::coordinator::Engine::new(manifest, method.config())?;
+        let sched = innerq::coordinator::Scheduler::new(engine, 1 << 30);
+        serve(sched, "127.0.0.1:0", stop_srv, move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv()?;
+    eprintln!("[e2e] server on {addr}");
+
+    let reqs = generate(TraceConfig {
+        n_requests,
+        n_vars: 40,
+        n_queries: 2,
+        max_new_tokens: 8,
+        seed: 11,
+    });
+
+    // Concurrent clients, one per request.
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for r in reqs {
+        handles.push(std::thread::spawn(move || -> Result<(String, String, u64, u64)> {
+            let mut c = Client::connect(addr)?;
+            let resp = c.generate(&r.prompt, r.max_new_tokens)?;
+            Ok((
+                r.prompt.clone(),
+                resp.get("text").as_str().unwrap_or("").to_string(),
+                resp.get("ttft_us").as_f64().unwrap_or(0.0) as u64,
+                resp.get("total_us").as_f64().unwrap_or(0.0) as u64,
+            ))
+        }));
+    }
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut ttfts = Vec::new();
+    let mut totals = Vec::new();
+    let mut gen_tokens = 0usize;
+    for h in handles {
+        let (prompt, text, ttft, total_us) = h.join().unwrap()?;
+        // ground truth: prompt ends "?x=" — find x's latest assignment
+        // (search only the assignment body; the query stem also matches)
+        let name = prompt.chars().rev().nth(1).unwrap();
+        let body = &prompt[..prompt.rfind('?').unwrap_or(prompt.len())];
+        let want = body
+            .match_indices(&format!("{name}="))
+            .map(|(p, _)| &body[p + 2..p + 4])
+            .last()
+            .unwrap_or("??");
+        let got = text.get(0..2).unwrap_or("");
+        correct += (got == want) as usize;
+        total += 1;
+        gen_tokens += text.len();
+        ttfts.push(ttft);
+        totals.push(total_us);
+        println!("  ?{name}= -> {got:<4} (want {want})  ttft {ttft:>7}µs total {total_us:>8}µs");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    ttfts.sort_unstable();
+    totals.sort_unstable();
+    println!("\n== E2E serving report ({}) ==", method.name());
+    println!(
+        "requests: {total}, recall accuracy: {:.0}%",
+        100.0 * correct as f64 / total as f64
+    );
+    println!(
+        "ttft p50/p95: {} / {} µs, total p50/p95: {} / {} µs",
+        ttfts[ttfts.len() / 2],
+        ttfts[(ttfts.len() * 95 / 100).min(ttfts.len() - 1)],
+        totals[totals.len() / 2],
+        totals[(totals.len() * 95 / 100).min(totals.len() - 1)]
+    );
+    println!(
+        "wall: {wall:.2}s, throughput: {:.1} req/s, {:.0} gen tok/s",
+        total as f64 / wall,
+        gen_tokens as f64 / wall
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(addr); // poke the acceptor awake
+    let _ = server.join();
+    Ok(())
+}

@@ -1,0 +1,223 @@
+"""AOT lowering: train (or load cached) weights, lower every decode stage to
+HLO text, and emit the artifact manifest + golden cross-layer test vectors.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Runs once under `make artifacts`. Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model, train
+from .kernels import ref
+
+DECODE_BATCHES = [1, 2, 4, 8]
+PREFILL_BUCKETS = [64, 128, 256, 512, 1024, 2048]
+QUANT_ATTN_TOKENS = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, args, path):
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return os.path.basename(path)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_decode_stages(cfg, params, out_dir):
+    """One artifact per (stage, batch size)."""
+    names = {}
+    for B in DECODE_BATCHES:
+        names[f"embed_b{B}"] = lower_to_file(
+            lambda toks: model.embed_fn(cfg, params, toks),
+            (spec((B,), jnp.int32),),
+            f"{out_dir}/decode_embed_b{B}.hlo.txt",
+        )
+        for l in range(cfg.n_layers):
+            names[f"qkv_l{l}_b{B}"] = lower_to_file(
+                (lambda l: lambda h, pos: model.qkv_fn(cfg, params, l, h, pos))(l),
+                (spec((B, cfg.d_model)), spec((B,), jnp.int32)),
+                f"{out_dir}/decode_qkv_l{l}_b{B}.hlo.txt",
+            )
+            names[f"out_l{l}_b{B}"] = lower_to_file(
+                (lambda l: lambda h, ctx: model.attn_out_fn(cfg, params, l, h, ctx))(l),
+                (spec((B, cfg.d_model)), spec((B, cfg.q_dim))),
+                f"{out_dir}/decode_out_l{l}_b{B}.hlo.txt",
+            )
+        names[f"head_b{B}"] = lower_to_file(
+            lambda h: model.lm_head_fn(cfg, params, h),
+            (spec((B, cfg.d_model)),),
+            f"{out_dir}/decode_head_b{B}.hlo.txt",
+        )
+    return names
+
+
+def export_prefill(cfg, params, out_dir):
+    names = {}
+    for L in PREFILL_BUCKETS:
+        names[f"prefill_l{L}"] = lower_to_file(
+            lambda toks: model.prefill_fn(cfg, params, toks),
+            (spec((1, L), jnp.int32),),
+            f"{out_dir}/prefill_l{L}.hlo.txt",
+        )
+    return names
+
+
+def export_quant_attention(cfg, out_dir):
+    """The L1-in-L2 artifact: Pallas InnerQ attention lowered into HLO."""
+    n, d_h = QUANT_ATTN_TOKENS, cfg.d_h
+    ng = d_h // 32
+    fn = model.quant_attention_fn(cfg, n)
+    return {
+        "quant_attn": lower_to_file(
+            fn,
+            (
+                spec((d_h,)),
+                spec((n, ng, 32), jnp.int32),  # i32: the xla crate has no i8 literal ctor
+                spec((n, ng)),
+                spec((n // 32, d_h, 32), jnp.int32),
+                spec((n // 32, d_h)),
+            ),
+            f"{out_dir}/quant_attn.hlo.txt",
+        )
+    }
+
+
+def export_golden(cfg, params, out_dir):
+    """Cross-layer test vectors consumed by Rust integration tests."""
+    os.makedirs(f"{out_dir}/golden", exist_ok=True)
+    rng = np.random.default_rng(1234)
+
+    # 1. FP decode trace: prompt -> per-step logits through the staged path.
+    tokens = corpus.sample_tokens(rng, n_assign=12, n_queries=3)[:56]
+    logits = model.decode_reference(cfg, params, jnp.asarray(tokens))
+    with open(f"{out_dir}/golden/decode_fp.json", "w") as f:
+        json.dump(
+            {
+                "tokens": tokens.tolist(),
+                "logits": np.asarray(logits, np.float64).round(6).tolist(),
+            },
+            f,
+        )
+
+    # 2. Per-stage vectors at B=1 (runtime executable smoke tests).
+    h = np.asarray(model.embed_fn(cfg, params, jnp.asarray(tokens[:1]))[0])
+    q, k, v = (np.asarray(a) for a in model.qkv_fn(
+        cfg, params, 0, jnp.asarray(h), jnp.array([0], jnp.int32)))
+    ctx = rng.standard_normal((1, cfg.q_dim)).astype(np.float32)
+    h2 = np.asarray(model.attn_out_fn(cfg, params, 0, jnp.asarray(h), jnp.asarray(ctx))[0])
+    head = np.asarray(model.lm_head_fn(cfg, params, jnp.asarray(h2))[0])
+    with open(f"{out_dir}/golden/stages.json", "w") as f:
+        json.dump(
+            {
+                "token": int(tokens[0]),
+                "h": h.flatten().tolist(),
+                "q": q.flatten().tolist(),
+                "k": k.flatten().tolist(),
+                "v": v.flatten().tolist(),
+                "ctx": ctx.flatten().tolist(),
+                "h2": h2.flatten().tolist(),
+                "head": head.flatten().tolist(),
+            },
+            f,
+        )
+
+    # 3. Quantizer parity vectors: same matrix quantized by ref.py; Rust must
+    # produce identical codes/scales (f16 rounding parity).
+    mat = rng.standard_normal((64, 64)).astype(np.float32)
+    mat[:, 7] *= 9.0  # an outlier channel
+    out = {"matrix": mat.flatten().round(6).tolist(), "cases": []}
+    for bits, mode in [(3, "sym"), (2, "asym"), (2, "hybrid")]:
+        kq = ref.quantize_key_inner(jnp.asarray(mat), bits, mode)
+        out["cases"].append(
+            {
+                "bits": bits,
+                "mode": mode,
+                "codes": np.asarray(kq["codes"]).flatten().tolist(),
+                "scale": np.asarray(kq["scale"], np.float64).flatten().tolist(),
+                "zero": np.asarray(kq["zero"], np.float64).flatten().tolist(),
+                "mask": np.asarray(kq["mask"]).astype(int).flatten().tolist(),
+            }
+        )
+    with open(f"{out_dir}/golden/quantizer.json", "w") as f:
+        json.dump(out, f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=240)
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = model.ModelConfig()
+    weights_path = f"{args.out_dir}/weights.npz"
+    t0 = time.time()
+    if os.path.exists(weights_path) and not args.retrain:
+        print(f"[aot] loading cached weights from {weights_path}")
+        flat = dict(np.load(weights_path))
+        params = train.unflatten_params(flat, cfg.n_layers)
+        history = json.load(open(f"{args.out_dir}/train_log.json"))
+    else:
+        print(f"[aot] training {cfg.n_layers}-layer d={cfg.d_model} model ...")
+        params, history = train.train(cfg, steps=args.steps)
+        np.savez(weights_path, **train.flatten_params(params))
+        json.dump(history, open(f"{args.out_dir}/train_log.json", "w"))
+
+    print("[aot] lowering decode stages ...")
+    names = export_decode_stages(cfg, params, args.out_dir)
+    print("[aot] lowering prefill buckets ...")
+    names.update(export_prefill(cfg, params, args.out_dir))
+    print("[aot] lowering pallas quantized-attention stage ...")
+    names.update(export_quant_attention(cfg, args.out_dir))
+    print("[aot] writing golden vectors ...")
+    export_golden(cfg, params, args.out_dir)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_h": cfg.d_h,
+            "d_ff": cfg.d_ff,
+            "rope_theta": cfg.rope_theta,
+        },
+        "charset": corpus.CHARSET,
+        "bos": corpus.BOS,
+        "decode_batches": DECODE_BATCHES,
+        "prefill_buckets": PREFILL_BUCKETS,
+        "quant_attn_tokens": QUANT_ATTN_TOKENS,
+        "artifacts": names,
+        "final_train_loss": history[-1][1],
+    }
+    with open(f"{args.out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done: {len(names)} artifacts in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Synthetic structured corpus: the variable-recall language.
+
+Documents are streams of single-letter variable assignments with
+*reassignment* (latest binding wins), followed by recall queries::
+
+    c=41;a=07;c=93;f=22;...;?c=93;?a=07.
+
+Predicting the two value digits after ``?x=`` requires attending back to the
+latest assignment of ``x`` — a long-range dependency at a random depth in the
+context, which makes held-out NLL, recall accuracy and top-1-agreement
+directly sensitive to KV-cache fidelity (DESIGN.md substitutions). Document
+length scales freely through the number of assignments (LongBench-shaped
+evaluation uses thousands).
+
+The Rust workload generator (`rust/src/workload/corpus.rs`) implements the
+same grammar; the charset travels in the artifact manifest so both sides
+tokenize identically.
+"""
+
+import numpy as np
+
+# Token 0 is BOS/PAD. Order is part of the model contract — do not reorder.
+CHARSET = "abcdefghij0123456789=;?."
+BOS = 0
+N_NAMES = 10
+
+
+def vocab_size() -> int:
+    return len(CHARSET) + 1
+
+
+def encode(text: str) -> list[int]:
+    idx = {c: i + 1 for i, c in enumerate(CHARSET)}
+    return [idx[c] for c in text]
+
+
+def decode(tokens) -> str:
+    return "".join(CHARSET[t - 1] for t in tokens if t > 0)
+
+
+def sample_sequence(rng: np.random.Generator, n_assign: int, n_queries: int) -> str:
+    """One corpus document: `n_assign` (re)assignments, then queries."""
+    values = {}
+    parts = []
+    for i in range(n_assign):
+        # first N_NAMES assignments cover every name once (so early queries
+        # are always answerable); later ones reassign at random.
+        name = CHARSET[i % N_NAMES] if i < N_NAMES else CHARSET[rng.integers(0, N_NAMES)]
+        val = f"{rng.integers(0, 100):02d}"
+        values[name] = val
+        parts.append(f"{name}={val};")
+    names = list(values)
+    for _ in range(n_queries):
+        name = names[rng.integers(0, len(names))]
+        parts.append(f"?{name}={values[name]};")
+    return "".join(parts)[:-1] + "."
+
+
+def sample_tokens(rng, n_assign, n_queries, length=None):
+    """Encoded document with BOS, optionally padded/truncated to `length`."""
+    toks = [BOS] + encode(sample_sequence(rng, n_assign, n_queries))
+    if length is not None:
+        toks = toks[:length] + [BOS] * max(0, length - len(toks))
+    return np.array(toks, np.int32)
+
+
+def batch(rng, batch_size, seq_len, n_assign=30, n_queries=12):
+    """Training batch (B, L) of padded documents."""
+    return np.stack(
+        [sample_tokens(rng, n_assign, n_queries, seq_len) for _ in range(batch_size)]
+    )
+
+
+def query_positions(tokens) -> list[tuple[int, int]]:
+    """(position, target) pairs for the value digits of recall queries:
+    position p's logits must predict token p+1 ('?', name, '=', d0, d1)."""
+    q = encode("?")[0]
+    eq = encode("=")[0]
+    out = []
+    toks = list(tokens)
+    i = 0
+    while i < len(toks):
+        if toks[i] == q and i + 4 < len(toks) and toks[i + 2] == eq:
+            out.append((i + 2, toks[i + 3]))  # '=' predicts d0
+            out.append((i + 3, toks[i + 4]))  # d0 predicts d1
+            i += 5
+        else:
+            i += 1
+    return out

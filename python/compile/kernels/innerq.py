@@ -1,0 +1,149 @@
+"""Layer-1 Pallas kernels for InnerQ fused dequantize-GEMV (§4.4).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernels assign a thread block per cache row and reuse one scale per warp.
+On TPU the same insight maps to the VPU/MXU tiling: quantization groups
+running along the reduction axis mean a (block_t, d_h) VMEM tile needs only
+a (block_t, d_h/32) scale tile — an 32x reduction in scale traffic — and the
+group-partial accumulate-then-scale structure vectorizes along lanes.
+
+BlockSpecs express the HBM->VMEM schedule over the token axis (the axis the
+paper tiles with thread blocks). Codes are carried as int8 *logical* codes
+(signed for symmetric, biased-unsigned handled on the Rust side); physical
+3-bit packing is a storage-layer concern that lives in Rust — XLA/Mosaic has
+no sub-byte loads, so a TPU deployment would pack into int8 lanes the same
+way.
+
+All kernels run with interpret=True: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 32
+
+
+def _qk_inner_kernel(q_ref, codes_ref, scale_ref, zero_ref, o_ref):
+    """One token-block of scores: group-partial dot, scale applied per group.
+
+    q_ref:     (ng, G)        query, reshaped by group
+    codes_ref: (T, ng, G)     int8 codes for T tokens
+    scale_ref: (T, ng)        f32 scales (f16-rounded upstream)
+    zero_ref:  (T, ng)        f32 effective zero terms (0 for symmetric)
+    o_ref:     (T,)           scores
+    """
+    q = q_ref[...]
+    codes = codes_ref[...].astype(jnp.float32)
+    # group-partial accumulation: one multiply-add per element ...
+    acc = jnp.sum(codes * q[None, :, :], axis=-1)  # (T, ng)
+    # ... then one scale application per *group*, not per element:
+    qsum = jnp.sum(q, axis=-1)  # (ng,)
+    o_ref[...] = jnp.sum(acc * scale_ref[...] + zero_ref[...] * qsum[None, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def qk_inner(q, codes, scale, zero, block_t: int = 256):
+    """Fused dequant-GEMV scores over the InnerQ key layout.
+
+    q: (d_h,); codes: (n, d_h/G, G) int8; scale/zero: (n, d_h/G) f32.
+    n must be a multiple of block_t (the cache manager pads chunks).
+    Returns (n,) f32 scores.
+    """
+    n, ng, g = codes.shape
+    assert g == GROUP and q.shape[0] == ng * g
+    block_t = min(block_t, n)
+    assert n % block_t == 0, f"n={n} not a multiple of block_t={block_t}"
+    grid = (n // block_t,)
+    return pl.pallas_call(
+        _qk_inner_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ng, GROUP), lambda i: (0, 0)),          # q: resident
+            pl.BlockSpec((block_t, ng, GROUP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(q.reshape(ng, GROUP), codes, scale, zero)
+
+
+def _pv_inner_kernel(p_ref, codes_ref, scale_ref, zero_ref, o_ref):
+    """One 32-token chunk of context accumulation (channel-major codes).
+
+    p_ref:     (1, G)       softmax weights for this chunk's tokens
+    codes_ref: (1, d_h, G)  int8 codes, channel rows
+    scale_ref: (1, d_h)     f32 per-channel-group scales
+    zero_ref:  (1, d_h)     f32 effective zero terms
+    o_ref:     (d_h,)       accumulated context (all chunks map here)
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = p_ref[0]
+    codes = codes_ref[0].astype(jnp.float32)          # (d_h, G)
+    acc = jnp.sum(codes * p[None, :], axis=-1)        # (d_h,)
+    psum = jnp.sum(p)
+    o_ref[...] += acc * scale_ref[0] + zero_ref[0] * psum
+
+
+@jax.jit
+def pv_inner(p, codes, scale, zero):
+    """Fused context accumulation over the InnerQ value layout.
+
+    p: (n,) with n = 32*C; codes: (C, d_h, G) int8; scale/zero: (C, d_h).
+    Returns (d_h,) f32 context.
+    """
+    c, d_h, g = codes.shape
+    assert g == GROUP and p.shape[0] == c * g
+    return pl.pallas_call(
+        _pv_inner_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, GROUP), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_h, GROUP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d_h), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_h), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d_h,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d_h,), jnp.float32),
+        interpret=True,
+    )(p.reshape(c, GROUP), codes, scale, zero)
+
+
+def effective_zero(scale, zero, mask, bits):
+    """Fold the symmetric bias into a single effective zero term.
+
+    Rust stores symmetric codes biased-unsigned; the reference and Pallas
+    kernels carry *signed* symmetric codes, so symmetric groups have zero
+    effective zero-term and asymmetric ones use Z (Eq. 14).
+    """
+    del bits
+    return jnp.where(mask, zero, 0.0)
+
+
+def vmem_report(n_tokens: int, d_h: int, bits: int, block_t: int = 256):
+    """Static VMEM footprint estimate for one qk_inner block (DESIGN §Perf).
+
+    Returns bytes resident per grid step; the target is to stay well under
+    ~16 MiB of VMEM while keeping blocks MXU/VPU aligned.
+    """
+    ng = d_h // GROUP
+    codes = block_t * d_h  # int8
+    scales = block_t * ng * 4 * 2  # scale + zero, f32
+    q = d_h * 4
+    out = block_t * 4
+    return {
+        "codes_bytes": codes,
+        "scale_bytes": scales,
+        "q_bytes": q,
+        "out_bytes": out,
+        "total_bytes": codes + scales + q + out,
+        "scale_traffic_ratio_vs_outer": 1.0 / 1.0,  # see kivi.vmem_report
+    }

@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernels for the KIVI (outer-grouped) baseline layout.
+
+The contrast with `innerq.py` is the point of the paper's Figure 1: here the
+scale tile for a (block_t, d_h) code tile is (d_h,)-wide *per 32-token chunk*
+— every output element needs a different scale, so the kernel materializes a
+hoisted q*s vector per chunk (on GPU: per-lane scale loads with no warp
+reuse; on TPU: a full-lane-width scale tile per chunk instead of ng scalars
+per token row).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 32
+
+
+def _qk_outer_kernel(q_ref, codes_ref, scale_ref, zero_ref, o_ref):
+    """One 32-token chunk of scores under per-channel (outer) grouping.
+
+    q_ref:     (d_h,)
+    codes_ref: (1, d_h, G) int8 codes, channel rows x token columns
+    scale_ref: (1, d_h)    per-channel scales for this chunk
+    zero_ref:  (1, d_h)    per-channel effective zero terms
+    o_ref:     (G,)        scores for the chunk's tokens
+    """
+    q = q_ref[...]
+    codes = codes_ref[0].astype(jnp.float32)       # (d_h, G)
+    qs = q * scale_ref[0]                          # (d_h,) hoisted per chunk
+    zacc = jnp.sum(q * zero_ref[0])
+    o_ref[...] = jnp.sum(codes * qs[:, None], axis=0) + zacc
+
+
+@jax.jit
+def qk_outer(q, codes, scale, zero):
+    """Scores over the KIVI key layout.
+
+    q: (d_h,); codes: (C, d_h, G) int8 (chunk-major, channel rows);
+    scale/zero: (C, d_h). Returns (C*G,) scores.
+    """
+    c, d_h, g = codes.shape
+    assert g == GROUP
+    return pl.pallas_call(
+        _qk_outer_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((d_h,), lambda i: (0,)),
+            pl.BlockSpec((1, d_h, GROUP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d_h), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_h), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((GROUP,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c * g,), jnp.float32),
+        interpret=True,
+    )(q, codes, scale, zero)
+
+
+def _pv_outer_kernel(p_ref, codes_ref, scale_ref, zero_ref, o_ref):
+    """One token-block of context under per-token (outer) value grouping.
+
+    p_ref:     (T,)
+    codes_ref: (T, ng, G) int8 codes (token rows, channel groups)
+    scale_ref: (T, ng)
+    zero_ref:  (T, ng)
+    o_ref:     (ng, G) accumulated context, reshaped by channel group
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = p_ref[...]
+    codes = codes_ref[...].astype(jnp.float32)     # (T, ng, G)
+    deq = codes * scale_ref[...][..., None] + zero_ref[...][..., None]
+    o_ref[...] += jnp.sum(deq * p[:, None, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def pv_outer(p, codes, scale, zero, block_t: int = 256):
+    """Context over the KIVI value layout.
+
+    p: (n,); codes: (n, d_h/G, G) int8; scale/zero: (n, d_h/G).
+    Returns (d_h,) f32.
+    """
+    n, ng, g = codes.shape
+    assert g == GROUP
+    block_t = min(block_t, n)
+    assert n % block_t == 0
+    out = pl.pallas_call(
+        _pv_outer_kernel,
+        grid=(n // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t, ng, GROUP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ng, GROUP), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ng, GROUP), jnp.float32),
+        interpret=True,
+    )(p, codes, scale, zero)
+    return out.reshape(-1)
+
+
+def vmem_report(n_tokens: int, d_h: int, bits: int):
+    """Scale-traffic comparison vs the inner layout (DESIGN §Perf).
+
+    For a 32-token chunk the outer key kernel streams d_h scales + d_h zeros;
+    the inner key kernel streams 32*(d_h/32) = d_h scales total for the same
+    32 tokens but reuses each within a contiguous group-partial accumulation
+    (one FMA tail per group) — and symmetric InnerQ carries no zeros at all.
+    """
+    chunk_scale_loads_outer = 2 * d_h       # scales + zeros per 32 tokens
+    chunk_scale_loads_inner = d_h // GROUP * GROUP  # = d_h, but no zeros (sym)
+    return {
+        "outer_scale_loads_per_chunk": chunk_scale_loads_outer,
+        "inner_scale_loads_per_chunk": chunk_scale_loads_inner,
+        "ratio": chunk_scale_loads_outer / chunk_scale_loads_inner,
+    }

@@ -1,0 +1,97 @@
+"""Layer-1 Pallas quantization kernels (the Table-5 operations).
+
+Each kernel quantizes a block of groups: computes the group statistics
+(amax / min / max), derives the f16-rounded scale (and zero-point), and emits
+int8 logical codes. The hybrid kernel evaluates both modes and selects per
+group by reconstruction error (§4.1.2) entirely inside the block — no extra
+HBM round-trip.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 32
+
+
+def _f16(x):
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def _sym_block(vals, bits):
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(vals), axis=-1, keepdims=True)
+    scale = _f16(jnp.where(amax > 0, amax / qmax, 1.0))
+    codes = jnp.clip(jnp.round(vals / scale), -qmax, qmax)
+    return codes, scale
+
+def _asym_block(vals, bits):
+    levels = (1 << bits) - 1
+    lo = jnp.min(vals, axis=-1, keepdims=True)
+    hi = jnp.max(vals, axis=-1, keepdims=True)
+    zero = _f16(lo)
+    scale = _f16(jnp.where(hi > lo, (hi - zero) / levels, 1.0))
+    codes = jnp.clip(jnp.round((vals - zero) / scale), 0, levels)
+    return codes, scale, zero
+
+
+def _make_kernel(mode, bits):
+    def kernel(x_ref, codes_ref, scale_ref, zero_ref, mask_ref):
+        vals = x_ref[...]  # (T, ng, G)
+        if mode == "sym":
+            codes, scale = _sym_block(vals, bits)
+            zero = jnp.zeros_like(scale)
+            mask = jnp.zeros(scale.shape, jnp.int8)
+        elif mode == "asym":
+            codes, scale, zero = _asym_block(vals, bits)
+            mask = jnp.ones(scale.shape, jnp.int8)
+        else:  # hybrid
+            cs, ss = _sym_block(vals, bits)
+            ca, sa, za = _asym_block(vals, bits)
+            es = jnp.sum((cs * ss - vals) ** 2, axis=-1, keepdims=True)
+            ea = jnp.sum((ca * sa + za - vals) ** 2, axis=-1, keepdims=True)
+            pick_a = ea < es
+            codes = jnp.where(pick_a, ca, cs)
+            scale = jnp.where(pick_a, sa, ss)
+            zero = jnp.where(pick_a, za, 0.0)
+            mask = pick_a.astype(jnp.int8)
+        codes_ref[...] = codes.astype(jnp.int8)
+        scale_ref[...] = scale[..., 0]
+        zero_ref[...] = zero[..., 0]
+        mask_ref[...] = mask[..., 0]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mode", "block_t"))
+def quantize_groups(x, bits: int, mode: str = "sym", block_t: int = 64):
+    """Quantize grouped values with a Pallas kernel.
+
+    x: (n, ng, G) f32 — any grouped layout (the caller reshapes).
+    Returns (codes int8, scale f32 (n, ng), zero f32, mask int8).
+    """
+    n, ng, g = x.shape
+    assert g == GROUP
+    block_t = min(block_t, n)
+    assert n % block_t == 0
+    kernel = _make_kernel(mode, bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_t,),
+        in_specs=[pl.BlockSpec((block_t, ng, GROUP), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((block_t, ng, GROUP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, ng), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, ng, GROUP), jnp.int8),
+            jax.ShapeDtypeStruct((n, ng), jnp.float32),
+            jax.ShapeDtypeStruct((n, ng), jnp.float32),
+            jax.ShapeDtypeStruct((n, ng), jnp.int8),
+        ],
+        interpret=True,
+    )(x)

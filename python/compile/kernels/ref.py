@@ -1,0 +1,210 @@
+"""Pure-jnp reference oracle for the InnerQ quantization math.
+
+This module is the single source of truth the Pallas kernels (L1) and the
+Rust kernels (L3, via golden vectors) are validated against. It mirrors the
+paper's equations directly:
+
+* Eq. (10)-(12): group-wise asymmetric quantization;
+* Eq. (13) as clarified in DESIGN.md: signed symmetric quantization with
+  codes in [-(2^{b-1}-1), 2^{b-1}-1];
+* Eq. (14) / §4.1.2: hybrid per-group mode selection by reconstruction error;
+* §4.4: fused dequantize-GEMV with inner- and outer-dimension grouping.
+
+Scales and zero-points are rounded through float16 exactly as the stored
+representation (Table 3 budgets FP16 overheads), matching the Rust side's
+software-f16 path bit-for-bit.
+"""
+
+import jax.numpy as jnp
+
+GROUP = 32
+
+
+def f16_round(x):
+    """Round f32 values through IEEE float16 storage precision."""
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def sym_qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def quantize_sym(groups, bits):
+    """Symmetric group quantization.
+
+    groups: (..., G) f32. Returns (codes int32 in [-qmax, qmax], scale f32).
+    """
+    qmax = sym_qmax(bits)
+    amax = jnp.max(jnp.abs(groups), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    scale = f16_round(scale)
+    codes = jnp.clip(jnp.round(groups / scale), -qmax, qmax).astype(jnp.int32)
+    return codes, scale
+
+
+def dequantize_sym(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def quantize_asym(groups, bits):
+    """Asymmetric group quantization (Eq. 10-12).
+
+    Returns (codes int32 in [0, 2^b-1], scale f32, zero f32).
+    """
+    levels = (1 << bits) - 1
+    lo = jnp.min(groups, axis=-1, keepdims=True)
+    hi = jnp.max(groups, axis=-1, keepdims=True)
+    zero = f16_round(lo)
+    scale = jnp.where(hi > lo, (hi - zero) / levels, 1.0)
+    scale = f16_round(scale)
+    codes = jnp.clip(jnp.round((groups - zero) / scale), 0, levels).astype(jnp.int32)
+    return codes, scale, zero
+
+
+def dequantize_asym(codes, scale, zero):
+    return codes.astype(jnp.float32) * scale + zero
+
+
+def quantize_hybrid(groups, bits):
+    """Hybrid quantization (§4.1.2): per-group sym/asym by squared error.
+
+    Returns (codes int32, scale f32, zero f32, mask bool) where mask=True
+    means the group is asymmetric (the paper's M). Symmetric codes are
+    reported in signed form; `dequantize_hybrid` applies Eq. (14).
+    """
+    cs, ss = quantize_sym(groups, bits)
+    ca, sa, za = quantize_asym(groups, bits)
+    err_s = jnp.sum((dequantize_sym(cs, ss) - groups) ** 2, axis=-1, keepdims=True)
+    err_a = jnp.sum((dequantize_asym(ca, sa, za) - groups) ** 2, axis=-1, keepdims=True)
+    mask = err_a < err_s  # ties favour symmetric
+    codes = jnp.where(mask, ca, cs)
+    scale = jnp.where(mask, sa, ss)
+    zero = jnp.where(mask, za, 0.0)
+    return codes, scale, zero, mask
+
+
+def dequantize_hybrid(codes, scale, zero, mask):
+    """Eq. (14): dequant = S*K + M*Z (M folded into zero here)."""
+    del mask  # zero is already masked (0 for symmetric groups)
+    return codes.astype(jnp.float32) * scale + zero
+
+
+# ---------------------------------------------------------------------------
+# Grouped cache quantization (inner / outer layouts) and fused GEMVs.
+# ---------------------------------------------------------------------------
+
+
+def quantize_key_inner(k, bits, mode="sym"):
+    """InnerQ key layout: per-token groups along d_h.
+
+    k: (n, d_h). Returns dict with codes (n, d_h/G, G) and params
+    (n, d_h/G, 1) arrays.
+    """
+    n, d_h = k.shape
+    groups = k.reshape(n, d_h // GROUP, GROUP)
+    return _quantize_groups(groups, bits, mode)
+
+
+def quantize_val_inner(v, bits, mode="sym"):
+    """InnerQ value layout: per-channel groups along 32-token chunks.
+
+    v: (n, d_h) with n % 32 == 0. Returns groups shaped
+    (n/G, d_h, G): chunk-major, channel rows, token columns.
+    """
+    n, d_h = v.shape
+    assert n % GROUP == 0
+    chunks = v.reshape(n // GROUP, GROUP, d_h).transpose(0, 2, 1)  # (C, d_h, G)
+    return _quantize_groups(chunks, bits, mode)
+
+
+def quantize_key_outer(k, bits, mode="asym"):
+    """KIVI key layout: per-channel groups along 32-token chunks.
+
+    k: (n, d_h), n % 32 == 0. Groups shaped (n/G, d_h, G) like val_inner —
+    the layouts are transposes of each other; what differs is which GEMV
+    axis the groups align with.
+    """
+    return quantize_val_inner(k, bits, mode)
+
+
+def quantize_val_outer(v, bits, mode="asym"):
+    """KIVI value layout: per-token groups along channels."""
+    return quantize_key_inner(v, bits, mode)
+
+
+def _quantize_groups(groups, bits, mode):
+    if mode == "sym":
+        codes, scale = quantize_sym(groups, bits)
+        return {"codes": codes, "scale": scale, "zero": jnp.zeros_like(scale),
+                "mask": jnp.zeros(scale.shape, bool), "mode": mode, "bits": bits}
+    if mode == "asym":
+        codes, scale, zero = quantize_asym(groups, bits)
+        return {"codes": codes, "scale": scale, "zero": zero,
+                "mask": jnp.ones(scale.shape, bool), "mode": mode, "bits": bits}
+    if mode == "hybrid":
+        codes, scale, zero, mask = quantize_hybrid(groups, bits)
+        return {"codes": codes, "scale": scale, "zero": zero, "mask": mask,
+                "mode": mode, "bits": bits}
+    raise ValueError(f"unknown mode {mode}")
+
+
+def dequantize_groups(q):
+    return q["codes"].astype(jnp.float32) * q["scale"] + q["zero"]
+
+
+def qk_inner(q, kq):
+    """Fused dequant-GEMV scores, InnerQ key layout (reference).
+
+    q: (d_h,); kq: quantize_key_inner output. Returns (n,) scores.
+    Formulated the way the fused kernel computes it: group-partial code dot
+    products scaled once per group, plus the zero term times the group's
+    query prefix sum.
+    """
+    codes, scale, zero = kq["codes"], kq["scale"], kq["zero"]
+    n, n_groups, g = codes.shape
+    qg = q.reshape(n_groups, g)
+    acc = jnp.einsum("ngi,gi->ng", codes.astype(jnp.float32), qg)
+    qsum = jnp.sum(qg, axis=-1)
+    return jnp.sum(acc * scale[..., 0] + zero[..., 0] * qsum[None, :], axis=-1)
+
+
+def pv_inner(p, vq):
+    """Fused context accumulation, InnerQ value layout (reference).
+
+    p: (n,); vq: quantize_val_inner output with chunks (C, d_h, G).
+    Returns (d_h,).
+    """
+    codes, scale, zero = vq["codes"], vq["scale"], vq["zero"]
+    n_chunks, d_h, g = codes.shape
+    pc = p.reshape(n_chunks, g)
+    acc = jnp.einsum("cdg,cg->cd", codes.astype(jnp.float32), pc)
+    psum = jnp.sum(pc, axis=-1)
+    out = acc * scale[..., 0] + zero[..., 0] * psum[:, None]
+    return jnp.sum(out, axis=0)
+
+
+def qk_outer(q, kq):
+    """Fused scores, KIVI key layout: per-channel scales hoisted into q."""
+    codes, scale, zero = kq["codes"], kq["scale"], kq["zero"]
+    n_chunks, d_h, g = codes.shape
+    qs = q[None, :] * scale[..., 0]           # (C, d_h) hoisted q*s
+    zacc = jnp.sum(q[None, :] * zero[..., 0], axis=-1)  # (C,)
+    scores = jnp.einsum("cdg,cd->cg", codes.astype(jnp.float32), qs)
+    return (scores + zacc[:, None]).reshape(-1)
+
+
+def pv_outer(p, vq):
+    """Fused context, KIVI value layout: per-token groups along channels."""
+    codes, scale, zero = vq["codes"], vq["scale"], vq["zero"]
+    n, n_groups, g = codes.shape
+    deq = codes.astype(jnp.float32) * scale + zero  # (n, d_h/G, G)
+    return jnp.einsum("n,ngi->gi", p, deq).reshape(-1)
+
+
+def attention_reference(q, k, v):
+    """Plain FP decode attention: one query against n cached tokens."""
+    d_h = q.shape[-1]
+    s = k @ q / jnp.sqrt(d_h)
+    p = jnp.exp(s - jnp.max(s))
+    p = p / jnp.sum(p)
+    return p @ v

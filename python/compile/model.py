@@ -1,0 +1,249 @@
+"""Layer-2: the tiny-Llama model (RMSNorm + RoPE + GQA + SwiGLU).
+
+Two views of the same parameters:
+
+* `forward` — full causal forward pass used for build-time training and as
+  the numerical reference;
+* staged functions (`embed_fn`, `qkv_fn`, `attn_out_fn`, `lm_head_fn`,
+  `prefill_fn`) — the decode pipeline cut exactly where the Rust coordinator
+  owns the quantized-cache attention (Eq. 3-5 + Fig. 2 merge live in Rust).
+  `aot.py` lowers each stage to an HLO-text artifact with the weights baked
+  in as constants.
+
+The L1 Pallas kernels enter through `quant_attention_fn`, a fixed-shape
+quantized-cache attention stage composed from `kernels.innerq` — exported as
+its own artifact to prove all three layers lower into one executable (see
+DESIGN.md; the Rust native kernels remain the primary hot path because the
+cache is dynamically shaped).
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .kernels import innerq, ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = corpus.vocab_size()
+    d_model: int = 128
+    n_layers: int = 3
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    d_h: int = 32
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+
+    @property
+    def q_dim(self):
+        return self.n_q_heads * self.d_h
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.d_h
+
+
+def init_params(cfg: ModelConfig, key):
+    """Glorot-ish init, a dict-of-dicts pytree."""
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+
+    def dense(k, fan_in, fan_out):
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) / np.sqrt(fan_in)
+
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "head": dense(ks[1], cfg.d_model, cfg.vocab),
+        "final_norm": jnp.ones(cfg.d_model),
+        "layers": [],
+    }
+    for l in range(cfg.n_layers):
+        lk = jax.random.split(ks[2 + l], 7)
+        params["layers"].append({
+            "attn_norm": jnp.ones(cfg.d_model),
+            "wq": dense(lk[0], cfg.d_model, cfg.q_dim),
+            "wk": dense(lk[1], cfg.d_model, cfg.kv_dim),
+            "wv": dense(lk[2], cfg.d_model, cfg.kv_dim),
+            "wo": dense(lk[3], cfg.q_dim, cfg.d_model),
+            "mlp_norm": jnp.ones(cfg.d_model),
+            "w_gate": dense(lk[4], cfg.d_model, cfg.d_ff),
+            "w_up": dense(lk[5], cfg.d_model, cfg.d_ff),
+            "w_down": dense(lk[6], cfg.d_ff, cfg.d_model),
+        })
+    return params
+
+
+def rmsnorm(x, w, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: (..., n_heads, d_h); positions: (...,) int32."""
+    d_h = x.shape[-1]
+    half = d_h // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(cfg, layer, h, positions):
+    """RMSNorm + QKV projection + RoPE for one layer.
+
+    h: (..., d_model); positions: (...,). Returns q (..., n_q, d_h),
+    k/v (..., n_kv, d_h).
+    """
+    x = rmsnorm(h, layer["attn_norm"])
+    q = (x @ layer["wq"]).reshape(*x.shape[:-1], cfg.n_q_heads, cfg.d_h)
+    k = (x @ layer["wk"]).reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_h)
+    v = (x @ layer["wv"]).reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_h)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_out(layer, h, ctx_flat):
+    """Residual add of the attention output + the MLP block."""
+    h = h + ctx_flat @ layer["wo"]
+    x = rmsnorm(h, layer["mlp_norm"])
+    return h + (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Full causal forward. tokens: (B, L) int32 -> logits (B, L, vocab)."""
+    B, L = tokens.shape
+    h = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    rep = cfg.n_q_heads // cfg.n_kv_heads
+    for layer in params["layers"]:
+        q, k, v = _qkv(cfg, layer, h, positions)  # (B, L, heads, d_h)
+        kq = jnp.repeat(k, rep, axis=2)
+        vq = jnp.repeat(v, rep, axis=2)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, kq) / np.sqrt(cfg.d_h)
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhlm,bmhd->blhd", p, vq).reshape(B, L, cfg.q_dim)
+        h = _attn_out(layer, h, ctx)
+    return rmsnorm(h, params["final_norm"]) @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Staged decode functions (one HLO artifact each; weights baked in by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def embed_fn(cfg, params, tokens):
+    """tokens (B,) int32 -> hidden (B, d_model)."""
+    return (params["embed"][tokens],)
+
+
+def qkv_fn(cfg, params, l, h, positions):
+    """h (B, d_model), positions (B,) -> q (B, n_q, d_h), k/v (B, n_kv, d_h)."""
+    return _qkv(cfg, params["layers"][l], h, positions)
+
+
+def attn_out_fn(cfg, params, l, h, ctx):
+    """h (B, d_model) residual + ctx (B, q_dim) -> next hidden (B, d_model)."""
+    return (_attn_out(params["layers"][l], h, ctx),)
+
+
+def lm_head_fn(cfg, params, h):
+    """h (B, d_model) -> logits (B, vocab)."""
+    return (rmsnorm(h, params["final_norm"]) @ params["head"],)
+
+
+def prefill_fn(cfg, params, tokens):
+    """Full prefill for one sequence. tokens (1, L) ->
+    (logits (L, vocab), ks (n_layers, L, n_kv, d_h), vs likewise).
+    Padded positions are harmless under the causal mask; the Rust side
+    slices K/V to the true length.
+    """
+    _, L = tokens.shape
+    h = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(L), tokens.shape)
+    ks, vs = [], []
+    rep = cfg.n_q_heads // cfg.n_kv_heads
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    for layer in params["layers"]:
+        q, k, v = _qkv(cfg, layer, h, positions)
+        ks.append(k[0])
+        vs.append(v[0])
+        kq = jnp.repeat(k, rep, axis=2)
+        vq = jnp.repeat(v, rep, axis=2)
+        s = jnp.einsum("blhd,bmhd->bhlm", q, kq) / np.sqrt(cfg.d_h)
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhlm,bmhd->blhd", p, vq).reshape(*tokens.shape, cfg.q_dim)
+        h = _attn_out(layer, h, ctx)
+    logits = rmsnorm(h, params["final_norm"])[0] @ params["head"]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def quant_attention_fn(cfg, n_tokens: int, bits: int = 3):
+    """L1-in-L2 composition: a fixed-shape InnerQ quantized-cache attention
+    stage built from the Pallas kernels, for one KV head.
+
+    Returns a function (q (d_h,), kcodes (n, d_h/G, G) int8, kscale (n, d_h/G),
+    vcodes (n/G, d_h, G) int8, vscale (n/G, d_h)) -> ctx (d_h,). Symmetric
+    3-bit K / V (InnerQ_Base) so no zero inputs. Lowered by aot.py into
+    `quant_attn.hlo.txt`.
+    """
+
+    def fn(q, kcodes, kscale, vcodes, vscale):
+        zk = jnp.zeros_like(kscale)
+        scores = innerq.qk_inner(q, kcodes, kscale, zk)
+        p = jax.nn.softmax(scores / np.sqrt(cfg.d_h))
+        zv = jnp.zeros_like(vscale)
+        ctx = innerq.pv_inner(p, vcodes, vscale, zv)
+        return (ctx,)
+
+    return fn
+
+
+def decode_reference(cfg, params, tokens, quant=None):
+    """Python decode loop through the *staged* functions with an FP (or
+    simulated-quantized) cache — the oracle for the Rust engine.
+
+    tokens: (L,) prompt+continuation; returns logits at every position,
+    computed autoregressively (prefill length 1: pure decode, worst case for
+    the cache path). `quant`: None for FP cache or a dict like
+    {"key_bits":3, "val_bits":3, "mode":"sym"} applying InnerQ-layout
+    quantization to the whole cache each step (window-free simulation used
+    by golden tests; the windowed policy is exercised in Rust).
+    """
+    L = tokens.shape[0]
+    rep = cfg.n_q_heads // cfg.n_kv_heads
+    caches = [{"k": [], "v": []} for _ in range(cfg.n_layers)]
+    logits_all = []
+    for t in range(L):
+        h = embed_fn(cfg, params, tokens[t : t + 1])[0]
+        pos = jnp.array([t], jnp.int32)
+        for l in range(cfg.n_layers):
+            q, k, v = qkv_fn(cfg, params, l, h, pos)
+            caches[l]["k"].append(k[0])
+            caches[l]["v"].append(v[0])
+            K = jnp.stack(caches[l]["k"])  # (t+1, n_kv, d_h)
+            V = jnp.stack(caches[l]["v"])
+            ctx = []
+            for hq in range(cfg.n_q_heads):
+                kv = hq // rep
+                Kh, Vh = K[:, kv], V[:, kv]
+                if quant is not None and (t + 1) >= 64:
+                    kq = ref.quantize_key_inner(Kh, quant["key_bits"], quant["mode"])
+                    Kh = ref.dequantize_groups(kq).reshape(Kh.shape)
+                    n_full = (Vh.shape[0] // 32) * 32
+                    if n_full:
+                        vq = ref.quantize_val_inner(Vh[:n_full], quant["val_bits"], quant["mode"])
+                        Vh = jnp.concatenate(
+                            [ref.dequantize_groups(vq).transpose(0, 2, 1).reshape(n_full, -1),
+                             Vh[n_full:]])
+                ctx.append(ref.attention_reference(q[0, hq], Kh, Vh))
+            h = attn_out_fn(cfg, params, l, h, jnp.concatenate(ctx)[None])[0]
+        logits_all.append(lm_head_fn(cfg, params, h)[0][0])
+    return jnp.stack(logits_all)

@@ -1,0 +1,98 @@
+"""Build-time training of the tiny-Llama on the variable-recall corpus.
+
+Runs once inside `make artifacts` (cached in artifacts/weights.npz). A few
+hundred Adam steps are enough for the model to learn the grammar and most of
+the recall task — what matters for the reproduction is that held-out NLL is
+meaningfully sensitive to KV-cache fidelity, not SOTA accuracy.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def loss_fn(cfg, params, tokens):
+    """Next-token cross entropy over non-pad positions."""
+    logits = model.forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = targets != corpus.BOS
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8, clip=1.0):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: model.ModelConfig, steps=3000, batch_size=16, seq_len=192, lr=2e-3,
+          seed=0, log_every=40, init_params=None):
+    """Returns (params, history) — history is [(step, train_loss)].
+
+    `init_params`: optionally resume from existing weights (used to continue
+    a cached run). LR follows a cosine decay to lr/10.
+    """
+    rng = np.random.default_rng(seed)
+    params = init_params if init_params is not None else model.init_params(
+        cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, lr_t):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+        params, opt = adam_step(params, grads, opt, lr_t)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        lr_t = lr * (0.55 + 0.45 * np.cos(np.pi * i / steps))
+        tokens = jnp.asarray(corpus.batch(rng, batch_size, seq_len))
+        params, opt, loss = step(params, opt, tokens, lr_t)
+        if i % log_every == 0 or i == steps - 1:
+            history.append((i, float(loss)))
+            print(f"[train] step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)",
+                  flush=True)
+    return params, history
+
+
+def flatten_params(params):
+    """Flatten to {name: array} for npz round-tripping."""
+    out = {"embed": params["embed"], "head": params["head"], "final_norm": params["final_norm"]}
+    for l, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            out[f"layer{l}/{k}"] = v
+    return out
+
+
+def unflatten_params(flat, n_layers):
+    params = {
+        "embed": jnp.asarray(flat["embed"]),
+        "head": jnp.asarray(flat["head"]),
+        "final_norm": jnp.asarray(flat["final_norm"]),
+        "layers": [],
+    }
+    for l in range(n_layers):
+        prefix = f"layer{l}/"
+        params["layers"].append(
+            {k[len(prefix):]: jnp.asarray(v) for k, v in flat.items() if k.startswith(prefix)}
+        )
+    return params

@@ -1,0 +1,116 @@
+#![allow(dead_code)] // shared across bench targets; each uses a subset
+
+//! Shared bench helpers: build quantized segments at Table-4 geometry
+//! (one Llama-3.1-8B layer: 32 query heads, 8 KV heads, d_h = 128) and
+//! time with the paper's protocol (10 warmup + 100 reps, scaled down for
+//! very long sequences on this single-core testbed).
+
+use innerq::cache::segments::*;
+use innerq::quant::group::Mode;
+use innerq::util::rng::Rng;
+
+pub const D_H: usize = 128;
+pub const N_KV: usize = 8;
+pub const N_Q: usize = 32;
+pub const LENGTHS: [usize; 7] = [512, 1024, 2048, 4096, 8192, 16384, 32768];
+
+pub fn reps_for(n_tokens: usize) -> (usize, usize) {
+    // (warmup, reps): paper uses 10/100; scale down as work grows.
+    match n_tokens {
+        0..=2048 => (10, 100),
+        2049..=8192 => (5, 30),
+        _ => (3, 10),
+    }
+}
+
+pub fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal()).collect()
+}
+
+/// Per-KV-head data for one layer at `n` tokens.
+pub struct LayerData {
+    pub keys: Vec<Vec<f32>>, // [n_kv] of n*d_h
+    pub vals: Vec<Vec<f32>>,
+    pub q: Vec<f32>,   // n_q * d_h query block
+    pub p: Vec<f32>,   // n softmax weights (shared across heads for the bench)
+}
+
+pub fn layer_data(n: usize, seed: u64) -> LayerData {
+    let mut rng = Rng::new(seed);
+    let keys = (0..N_KV).map(|_| rand_vec(&mut rng, n * D_H)).collect();
+    let vals = (0..N_KV).map(|_| rand_vec(&mut rng, n * D_H)).collect();
+    let q = rand_vec(&mut rng, N_Q * D_H);
+    let mut p = rand_vec(&mut rng, n);
+    let m = p.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let mut s = 0.0;
+    for v in p.iter_mut() {
+        *v = (*v - m).exp();
+        s += *v;
+    }
+    for v in p.iter_mut() {
+        *v /= s;
+    }
+    LayerData { keys, vals, q, p }
+}
+
+pub struct BuiltSegments {
+    pub inner_k: Vec<InnerKeySegment>,
+    pub inner_v3: Vec<InnerValSegment>,
+    pub inner_v2: Vec<InnerValSegment>,
+    pub inner_v2h: Vec<InnerValSegment>,
+    pub outer_k: Vec<OuterKeySegment>,
+    pub outer_v: Vec<OuterValSegment>,
+    pub turbo_k: Vec<TurboKeySegment>,
+    pub turbo_v: Vec<TurboValSegment>,
+}
+
+pub fn build_segments(d: &LayerData, n: usize) -> BuiltSegments {
+    let mut b = BuiltSegments {
+        inner_k: Vec::new(),
+        inner_v3: Vec::new(),
+        inner_v2: Vec::new(),
+        inner_v2h: Vec::new(),
+        outer_k: Vec::new(),
+        outer_v: Vec::new(),
+        turbo_k: Vec::new(),
+        turbo_v: Vec::new(),
+    };
+    for h in 0..N_KV {
+        let mut ik = InnerKeySegment::new(D_H, 3, Mode::Sym);
+        for row in d.keys[h].chunks_exact(D_H) {
+            ik.append_token(row);
+        }
+        b.inner_k.push(ik);
+        let mut iv3 = InnerValSegment::new(D_H, 3, Mode::Sym);
+        let mut iv2 = InnerValSegment::new(D_H, 2, Mode::Sym);
+        let mut iv2h = InnerValSegment::new(D_H, 2, Mode::Hybrid);
+        for chunk in d.vals[h].chunks_exact(32 * D_H) {
+            iv3.append_chunk(chunk);
+            iv2.append_chunk(chunk);
+            iv2h.append_chunk(chunk);
+        }
+        b.inner_v3.push(iv3);
+        b.inner_v2.push(iv2);
+        b.inner_v2h.push(iv2h);
+        let mut ok = OuterKeySegment::new(D_H, 2, Mode::Asym);
+        for chunk in d.keys[h].chunks_exact(32 * D_H) {
+            ok.append_chunk(chunk);
+        }
+        b.outer_k.push(ok);
+        let mut ov = OuterValSegment::new(D_H, 2, Mode::Asym);
+        for row in d.vals[h].chunks_exact(D_H) {
+            ov.append_token(row);
+        }
+        b.outer_v.push(ov);
+        let mut tk = TurboKeySegment::new(D_H, 4, 42);
+        let mut tv = TurboValSegment::new(D_H, 3, 43);
+        for (krow, vrow) in d.keys[h].chunks_exact(D_H).zip(d.vals[h].chunks_exact(D_H)) {
+            tk.append_token(krow);
+            tv.append_token(vrow);
+        }
+        b.turbo_k.push(tk);
+        b.turbo_v.push(tv);
+    }
+    let _ = n;
+    b
+}

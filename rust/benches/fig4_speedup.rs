@@ -1,0 +1,157 @@
+//! Figure 4: total speedup of each InnerQ variant over (left) the FP16
+//! baseline, (middle) KIVI, and (right) TurboQuant, across sequence lengths.
+//! Derived from the same measurements as Table 4 (key op + value op totals).
+//!
+//! ```bash
+//! cargo bench --bench fig4_speedup
+//! ```
+
+mod common;
+
+use common::*;
+use innerq::kernels::gemv_fp;
+use innerq::util::stats::time_us;
+
+struct Totals {
+    fp16: f64,
+    kivi: f64,
+    turbo: f64,
+    base: f64,
+    hybrid: f64,
+    small: f64,
+}
+
+fn measure(n: usize) -> Totals {
+    let d = layer_data(n, 17);
+    let segs = build_segments(&d, n);
+    let mut scratch = vec![0f32; D_H];
+    let mut scores = vec![0f32; n];
+    let mut ctx = vec![0f32; D_H];
+    let (w, r) = reps_for(n);
+    let rep = N_Q / N_KV;
+
+    let key_fp = time_us(w, r, || {
+        for hq in 0..N_Q {
+            gemv_fp::qk_fp(&d.q[hq * D_H..(hq + 1) * D_H], &d.keys[hq / rep], D_H, &mut scores);
+        }
+        scores[0]
+    })
+    .mean_us;
+    let key_kivi = time_us(w, r, || {
+        for hq in 0..N_Q {
+            segs.outer_k[hq / rep].scores(&d.q[hq * D_H..(hq + 1) * D_H], &mut scratch, &mut scores);
+        }
+        scores[0]
+    })
+    .mean_us;
+    let key_turbo = time_us(w, r, || {
+        for hq in 0..N_Q {
+            segs.turbo_k[hq / rep].scores(&d.q[hq * D_H..(hq + 1) * D_H], &mut scores);
+        }
+        scores[0]
+    })
+    .mean_us;
+    let key_inner = time_us(w, r, || {
+        for hq in 0..N_Q {
+            segs.inner_k[hq / rep].scores(&d.q[hq * D_H..(hq + 1) * D_H], &mut scores);
+        }
+        scores[0]
+    })
+    .mean_us;
+
+    let mut val = |run: &mut dyn FnMut(usize, &mut Vec<f32>)| {
+        time_us(w, r, || {
+            for hk in 0..N_KV {
+                for _ in 0..rep {
+                    ctx.iter_mut().for_each(|v| *v = 0.0);
+                    run(hk, &mut ctx);
+                }
+            }
+            ctx[0]
+        })
+        .mean_us
+    };
+    let mut ctx2 = vec![0f32; D_H];
+    let val_fp = {
+        let mut f = |hk: usize, c: &mut Vec<f32>| gemv_fp::pv_fp(&d.p, &d.vals[hk], D_H, c);
+        val(&mut f)
+    };
+    let val_kivi = {
+        let mut f = |hk: usize, c: &mut Vec<f32>| segs.outer_v[hk].accumulate(&d.p, c);
+        val(&mut f)
+    };
+    let val_turbo = {
+        let mut f = |hk: usize, c: &mut Vec<f32>| {
+            ctx2.iter_mut().for_each(|v| *v = 0.0);
+            segs.turbo_v[hk].accumulate_rotated(&d.p, &mut ctx2);
+            segs.turbo_v[hk].finalize_into(ctx2.clone(), c);
+        };
+        val(&mut f)
+    };
+    let val_base = {
+        let mut f = |hk: usize, c: &mut Vec<f32>| segs.inner_v3[hk].accumulate(&d.p, c);
+        val(&mut f)
+    };
+    let val_hybrid = {
+        let mut f = |hk: usize, c: &mut Vec<f32>| segs.inner_v2h[hk].accumulate(&d.p, c);
+        val(&mut f)
+    };
+    let val_small = {
+        let mut f = |hk: usize, c: &mut Vec<f32>| segs.inner_v2[hk].accumulate(&d.p, c);
+        val(&mut f)
+    };
+
+    Totals {
+        fp16: key_fp + val_fp,
+        kivi: key_kivi + val_kivi,
+        turbo: key_turbo + val_turbo,
+        base: key_inner + val_base,
+        hybrid: key_inner + val_hybrid,
+        small: key_inner + val_small,
+    }
+}
+
+fn main() {
+    let lengths = [512usize, 1024, 2048, 4096, 8192, 16384, 32768];
+    let mut rows = Vec::new();
+    for &n in &lengths {
+        rows.push(measure(n));
+        eprintln!("  [n={n}] done");
+    }
+
+    println!("Figure 4 (measured, CPU): total speedup of InnerQ variants");
+    for (title, denom) in [
+        ("vs FP16 baseline", 0usize),
+        ("vs KIVI", 1),
+        ("vs TurboQuant", 2),
+    ] {
+        println!("\n{title}:");
+        println!(
+            "{:<16} {}",
+            "variant",
+            lengths.iter().map(|n| format!("{n:>8}")).collect::<String>()
+        );
+        for (name, pick) in [
+            ("innerq_base", 0usize),
+            ("innerq_hybrid", 1),
+            ("innerq_small", 2),
+        ] {
+            print!("{name:<16}");
+            for row in &rows {
+                let d = match denom {
+                    0 => row.fp16,
+                    1 => row.kivi,
+                    _ => row.turbo,
+                };
+                let v = match pick {
+                    0 => row.base,
+                    1 => row.hybrid,
+                    _ => row.small,
+                };
+                print!("{:>8.2}", d / v);
+            }
+            println!();
+        }
+    }
+    println!("\n(paper Fig. 4: ~2.7x vs FP16, ~1.2-1.4x vs KIVI, ~1.2-1.3x vs TurboQuant, rising with length)");
+}

@@ -1,0 +1,163 @@
+//! Table 4: latency breakdown (µs) of the fused dequantize-GEMV kernels for
+//! one Llama-3.1-8B layer (32 q heads, 8 KV heads, d_h 128, batch 1) across
+//! sequence lengths, for the key op (Eq. 3), the value op (Eq. 5) and total.
+//!
+//! Protocol mirrors the paper (§5.3): warmup then averaged timed reps
+//! (counts scaled to the single-core CPU testbed — see rust/benches/common).
+//!
+//! ```bash
+//! cargo bench --bench table4_gemv            # full table
+//! cargo bench --bench table4_gemv 512 2048   # subset of lengths
+//! ```
+
+mod common;
+
+use common::*;
+use innerq::kernels::gemv_fp;
+use innerq::util::stats::time_us;
+
+fn main() {
+    let args: Vec<usize> =
+        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let lengths: Vec<usize> = if args.is_empty() { LENGTHS.to_vec() } else { args };
+
+    println!("Table 4 (measured, CPU): fused dequant-GEMV latency (µs), one Llama-3.1-8B layer");
+
+    let mut rows: Vec<(String, String, Vec<f64>)> = Vec::new();
+    for &n in &lengths {
+        let d = layer_data(n, 7);
+        let segs = build_segments(&d, n);
+        let mut scratch = vec![0f32; D_H];
+        let mut scores = vec![0f32; n];
+        let mut ctx = vec![0f32; D_H];
+        let (w, r) = reps_for(n);
+
+        let mut push = |cache: &str, method: &str, us: f64| {
+            if let Some(row) = rows.iter_mut().find(|(c, m, _)| c == cache && m == method) {
+                row.2.push(us);
+            } else {
+                rows.push((cache.into(), method.into(), vec![us]));
+            }
+        };
+
+        // ---- key op: all 32 query heads against their KV head's cache ----
+        let s = time_us(w, r, || {
+            for hq in 0..N_Q {
+                let hk = hq / (N_Q / N_KV);
+                gemv_fp::qk_fp(&d.q[hq * D_H..(hq + 1) * D_H], &d.keys[hk], D_H, &mut scores);
+            }
+            scores[0]
+        });
+        push("key", "baseline_fp16", s.mean_us);
+
+        let s = time_us(w, r, || {
+            for hq in 0..N_Q {
+                let hk = hq / (N_Q / N_KV);
+                segs.outer_k[hk].scores(&d.q[hq * D_H..(hq + 1) * D_H], &mut scratch, &mut scores);
+            }
+            scores[0]
+        });
+        push("key", "kivi", s.mean_us);
+
+        let s = time_us(w, r, || {
+            for hq in 0..N_Q {
+                let hk = hq / (N_Q / N_KV);
+                segs.turbo_k[hk].scores(&d.q[hq * D_H..(hq + 1) * D_H], &mut scores);
+            }
+            scores[0]
+        });
+        push("key", "turboquant", s.mean_us);
+
+        let s = time_us(w, r, || {
+            for hq in 0..N_Q {
+                let hk = hq / (N_Q / N_KV);
+                segs.inner_k[hk].scores(&d.q[hq * D_H..(hq + 1) * D_H], &mut scores);
+            }
+            scores[0]
+        });
+        push("key", "innerq_all", s.mean_us);
+
+        // ---- value op: P·V per KV head, repeated per attending q head ----
+        let rep = N_Q / N_KV;
+        let s = time_us(w, r, || {
+            for hk in 0..N_KV {
+                for _ in 0..rep {
+                    ctx.iter_mut().for_each(|v| *v = 0.0);
+                    gemv_fp::pv_fp(&d.p, &d.vals[hk], D_H, &mut ctx);
+                }
+            }
+            ctx[0]
+        });
+        push("value", "baseline_fp16", s.mean_us);
+
+        let s = time_us(w, r, || {
+            for hk in 0..N_KV {
+                for _ in 0..rep {
+                    ctx.iter_mut().for_each(|v| *v = 0.0);
+                    segs.outer_v[hk].accumulate(&d.p, &mut ctx);
+                }
+            }
+            ctx[0]
+        });
+        push("value", "kivi", s.mean_us);
+
+        let s = time_us(w, r, || {
+            for hk in 0..N_KV {
+                for _ in 0..rep {
+                    ctx.iter_mut().for_each(|v| *v = 0.0);
+                    let mut acc = vec![0f32; D_H];
+                    segs.turbo_v[hk].accumulate_rotated(&d.p, &mut acc);
+                    segs.turbo_v[hk].finalize_into(acc, &mut ctx);
+                }
+            }
+            ctx[0]
+        });
+        push("value", "turboquant", s.mean_us);
+
+        for (name, vsegs) in [
+            ("innerq_base", &segs.inner_v3),
+            ("innerq_hybrid", &segs.inner_v2h),
+            ("innerq_small", &segs.inner_v2),
+        ] {
+            let s = time_us(w, r, || {
+                for hk in 0..N_KV {
+                    for _ in 0..rep {
+                        ctx.iter_mut().for_each(|v| *v = 0.0);
+                        vsegs[hk].accumulate(&d.p, &mut ctx);
+                    }
+                }
+                ctx[0]
+            });
+            push("value", name, s.mean_us);
+        }
+        eprintln!("  [n={n}] done");
+    }
+
+    let get = |cache: &str, method: &str| -> &Vec<f64> {
+        &rows.iter().find(|(c, m, _)| c == cache && m == method).unwrap().2
+    };
+    let fmt = |v: &[f64]| v.iter().map(|x| format!("{x:>9.0}")).collect::<String>();
+    println!("{:<28} {}", "seq len", lengths.iter().map(|n| format!("{n:>9}")).collect::<String>());
+    println!("Key cache (Eq. 3):");
+    for m in ["baseline_fp16", "kivi", "turboquant", "innerq_all"] {
+        println!("  {:<26} {}", m, fmt(get("key", m)));
+    }
+    println!("Value cache (Eq. 5):");
+    for m in ["baseline_fp16", "kivi", "turboquant", "innerq_base", "innerq_hybrid", "innerq_small"] {
+        println!("  {:<26} {}", m, fmt(get("value", m)));
+    }
+    println!("Total:");
+    for (m, key_m) in [
+        ("baseline_fp16", "baseline_fp16"),
+        ("kivi", "kivi"),
+        ("turboquant", "turboquant"),
+        ("innerq_base", "innerq_all"),
+        ("innerq_hybrid", "innerq_all"),
+        ("innerq_small", "innerq_all"),
+    ] {
+        let k = get("key", key_m);
+        let v = get("value", m);
+        let tot: Vec<f64> = k.iter().zip(v).map(|(a, b)| a + b).collect();
+        println!("  {:<26} {}", m, fmt(&tot));
+    }
+}

@@ -1,0 +1,567 @@
+//! Per-head quantized KV-cache manager: ties together the sink window, the
+//! recent window, the quantized segments, per-channel key normalization, and
+//! the method-specific eviction→quantize policy (§4.2, §4.4, Fig. 2).
+//!
+//! Token partition at any time (in global generation order):
+//!
+//! ```text
+//!   [ sink (fp) | quantized segment | recent (fp) ]
+//! ```
+//!
+//! The key and value stores evict on different cadences (InnerQ quantizes
+//! one key per step but 32 values every 32 steps; KIVI is mirrored), so the
+//! K and V partitions have *independent* quantized/recent boundaries; the
+//! attention entry point handles both splits.
+
+use crate::cache::segments::*;
+use crate::cache::window::{RecentWindow, SinkWindow};
+use crate::kernels::gemv_fp;
+use crate::kernels::softmax::softmax_scaled;
+use crate::quant::norm::ChannelNorm;
+use crate::quant::{Grouping, MethodConfig};
+
+/// Unified key-segment dispatch.
+#[derive(Debug)]
+pub enum KeySegment {
+    Fp(FpSegment),
+    Inner(InnerKeySegment),
+    Outer(OuterKeySegment),
+    Turbo(TurboKeySegment),
+}
+
+impl KeySegment {
+    pub fn len(&self) -> usize {
+        match self {
+            KeySegment::Fp(s) => s.len(),
+            KeySegment::Inner(s) => s.len(),
+            KeySegment::Outer(s) => s.len(),
+            KeySegment::Turbo(s) => s.len(),
+        }
+    }
+    /// How many tokens the quantizer consumes per eviction.
+    pub fn evict_batch(&self) -> usize {
+        match self {
+            // Per-channel (outer) key grouping needs a full group of tokens.
+            KeySegment::Outer(_) => 32,
+            _ => 1,
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        match self {
+            KeySegment::Fp(s) => s.bytes(),
+            KeySegment::Inner(s) => s.bytes(),
+            KeySegment::Outer(s) => s.bytes(),
+            KeySegment::Turbo(s) => s.bytes(),
+        }
+    }
+    /// Quantize-append `n x d_h` token-major rows (n == evict_batch or bulk
+    /// multiples of it during prefill).
+    pub fn append(&mut self, rows: &[f32], d_h: usize) {
+        match self {
+            KeySegment::Fp(s) => {
+                for r in rows.chunks_exact(d_h) {
+                    s.append_token(r);
+                }
+            }
+            KeySegment::Inner(s) => {
+                for r in rows.chunks_exact(d_h) {
+                    s.append_token(r);
+                }
+            }
+            KeySegment::Outer(s) => {
+                for chunk in rows.chunks_exact(32 * d_h) {
+                    s.append_chunk(chunk);
+                }
+            }
+            KeySegment::Turbo(s) => {
+                for r in rows.chunks_exact(d_h) {
+                    s.append_token(r);
+                }
+            }
+        }
+    }
+    pub fn scores(&self, q: &[f32], d_h: usize, scratch: &mut [f32], out: &mut [f32]) {
+        match self {
+            KeySegment::Fp(s) => gemv_fp::qk_fp(q, &s.rows, d_h, out),
+            KeySegment::Inner(s) => s.scores(q, out),
+            KeySegment::Outer(s) => s.scores(q, scratch, out),
+            KeySegment::Turbo(s) => s.scores(q, out),
+        }
+    }
+}
+
+/// Unified value-segment dispatch.
+#[derive(Debug)]
+pub enum ValSegment {
+    Fp(FpSegment),
+    Inner(InnerValSegment),
+    Outer(OuterValSegment),
+    Turbo(TurboValSegment),
+}
+
+impl ValSegment {
+    pub fn len(&self) -> usize {
+        match self {
+            ValSegment::Fp(s) => s.len(),
+            ValSegment::Inner(s) => s.len(),
+            ValSegment::Outer(s) => s.len(),
+            ValSegment::Turbo(s) => s.len(),
+        }
+    }
+    pub fn evict_batch(&self) -> usize {
+        match self {
+            // Per-channel (inner) value grouping needs a full group of tokens.
+            ValSegment::Inner(_) => 32,
+            _ => 1,
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        match self {
+            ValSegment::Fp(s) => s.bytes(),
+            ValSegment::Inner(s) => s.bytes(),
+            ValSegment::Outer(s) => s.bytes(),
+            ValSegment::Turbo(s) => s.bytes(),
+        }
+    }
+    pub fn append(&mut self, rows: &[f32], d_h: usize) {
+        match self {
+            ValSegment::Fp(s) => {
+                for r in rows.chunks_exact(d_h) {
+                    s.append_token(r);
+                }
+            }
+            ValSegment::Inner(s) => {
+                for chunk in rows.chunks_exact(32 * d_h) {
+                    s.append_chunk(chunk);
+                }
+            }
+            ValSegment::Outer(s) => {
+                for r in rows.chunks_exact(d_h) {
+                    s.append_token(r);
+                }
+            }
+            ValSegment::Turbo(s) => {
+                for r in rows.chunks_exact(d_h) {
+                    s.append_token(r);
+                }
+            }
+        }
+    }
+    /// `out[c] += Σ p_t · v_t[c]` over the segment's tokens.
+    pub fn accumulate(&self, p: &[f32], d_h: usize, out: &mut [f32]) {
+        match self {
+            ValSegment::Fp(s) => gemv_fp::pv_fp(p, &s.rows, d_h, out),
+            ValSegment::Inner(s) => s.accumulate(p, out),
+            ValSegment::Outer(s) => s.accumulate(p, out),
+            ValSegment::Turbo(s) => {
+                let mut acc = vec![0f32; d_h];
+                s.accumulate_rotated(p, &mut acc);
+                s.finalize_into(acc, out);
+            }
+        }
+    }
+}
+
+/// KV cache for one attention (KV) head of one sequence.
+#[derive(Debug)]
+pub struct HeadCache {
+    pub cfg: MethodConfig,
+    pub d_h: usize,
+    pub sink_k: SinkWindow,
+    pub sink_v: SinkWindow,
+    pub recent_k: RecentWindow,
+    pub recent_v: RecentWindow,
+    pub qk: KeySegment,
+    pub qv: ValSegment,
+    pub norm: ChannelNorm,
+    n_tokens: usize,
+}
+
+fn make_key_segment(cfg: &MethodConfig, d_h: usize, seed: u64) -> KeySegment {
+    if !cfg.is_quantized() {
+        KeySegment::Fp(FpSegment::new(d_h))
+    } else if cfg.turbo {
+        KeySegment::Turbo(TurboKeySegment::new(d_h, cfg.key_bits, seed))
+    } else {
+        match cfg.key_grouping {
+            Grouping::Inner => KeySegment::Inner(InnerKeySegment::new(d_h, cfg.key_bits, cfg.key_mode)),
+            Grouping::Outer => KeySegment::Outer(OuterKeySegment::new(d_h, cfg.key_bits, cfg.key_mode)),
+        }
+    }
+}
+
+fn make_val_segment(cfg: &MethodConfig, d_h: usize, seed: u64) -> ValSegment {
+    if !cfg.is_quantized() {
+        ValSegment::Fp(FpSegment::new(d_h))
+    } else if cfg.turbo {
+        ValSegment::Turbo(TurboValSegment::new(d_h, cfg.val_bits, seed))
+    } else {
+        match cfg.val_grouping {
+            Grouping::Inner => ValSegment::Inner(InnerValSegment::new(d_h, cfg.val_bits, cfg.val_mode)),
+            Grouping::Outer => ValSegment::Outer(OuterValSegment::new(d_h, cfg.val_bits, cfg.val_mode)),
+        }
+    }
+}
+
+impl HeadCache {
+    pub fn new(cfg: MethodConfig, d_h: usize) -> HeadCache {
+        // Distinct rotation seeds for K and V (shared across heads is fine —
+        // the rotation is data-oblivious).
+        HeadCache {
+            sink_k: SinkWindow::new(d_h, cfg.w_sink),
+            sink_v: SinkWindow::new(d_h, cfg.w_sink),
+            recent_k: RecentWindow::new(d_h),
+            recent_v: RecentWindow::new(d_h),
+            qk: make_key_segment(&cfg, d_h, 0x5eed_0001),
+            qv: make_val_segment(&cfg, d_h, 0x5eed_0002),
+            norm: ChannelNorm::identity(d_h),
+            cfg,
+            d_h,
+            n_tokens: 0,
+        }
+    }
+
+    /// Initialize from prefill keys/values (`n x d_h`, token-major).
+    /// Computes the per-channel key norm over the prefill keys (§4.3), then
+    /// applies Eq. 15: sink window, bulk-quantized middle, recent window.
+    pub fn from_prefill(cfg: MethodConfig, d_h: usize, keys: &[f32], vals: &[f32]) -> HeadCache {
+        assert_eq!(keys.len(), vals.len());
+        assert_eq!(keys.len() % d_h, 0);
+        let mut hc = HeadCache::new(cfg, d_h);
+        if cfg.key_norm {
+            hc.norm = ChannelNorm::from_prefill_keys(keys, d_h);
+        }
+        for (k, v) in keys.chunks_exact(d_h).zip(vals.chunks_exact(d_h)) {
+            hc.append(k, v);
+        }
+        hc
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_tokens
+    }
+
+    /// Total cache bytes (FP16-equivalent for the windows).
+    pub fn bytes(&self) -> usize {
+        self.sink_k.bytes()
+            + self.sink_v.bytes()
+            + self.recent_k.bytes()
+            + self.recent_v.bytes()
+            + self.qk.bytes()
+            + self.qv.bytes()
+    }
+
+    /// Append one token's key/value and run the eviction policy.
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.n_tokens += 1;
+        if self.sink_k.try_push(k) {
+            let ok = self.sink_v.try_push(v);
+            debug_assert!(ok);
+            return;
+        }
+        self.recent_k.push(k);
+        self.recent_v.push(v);
+        self.evict();
+    }
+
+    fn evict(&mut self) {
+        let d_h = self.d_h;
+        // Keys: pop evict_batch rows whenever the window exceeds w_recent by
+        // at least one batch.
+        let kb = self.qk.evict_batch();
+        while self.recent_k.len() >= self.cfg.w_recent + kb {
+            let qk = &mut self.qk;
+            let norm = &self.norm;
+            let use_norm = self.cfg.key_norm;
+            self.recent_k.pop_front(kb, |rows| {
+                if use_norm {
+                    let mut buf = rows.to_vec();
+                    for r in buf.chunks_exact_mut(d_h) {
+                        norm.apply_key(r);
+                    }
+                    qk.append(&buf, d_h);
+                } else {
+                    qk.append(rows, d_h);
+                }
+            });
+        }
+        let vb = self.qv.evict_batch();
+        while self.recent_v.len() >= self.cfg.w_recent + vb {
+            let qv = &mut self.qv;
+            self.recent_v.pop_front(vb, |rows| qv.append(rows, d_h));
+        }
+    }
+
+    /// Full decode attention for one query head vector against this cache
+    /// (Eq. 3–5 with the Fig. 2 merge). `out` receives the context vector.
+    ///
+    /// `scratch` must hold at least `n_tokens + d_h` f32.
+    pub fn attend(&self, q: &[f32], out: &mut [f32], scratch: &mut Vec<f32>) {
+        let n = self.n_tokens;
+        let d_h = self.d_h;
+        debug_assert_eq!(q.len(), d_h);
+        debug_assert_eq!(out.len(), d_h);
+        scratch.clear();
+        scratch.resize(n + d_h, 0.0);
+        let (scores, kscratch) = scratch.split_at_mut(n);
+
+        // ---- scores over the K partition ----
+        let ws = self.sink_k.len();
+        let nqk = self.qk.len();
+        let nrk = self.recent_k.len();
+        debug_assert_eq!(ws + nqk + nrk, n);
+        gemv_fp::qk_fp(q, &self.sink_k.rows, d_h, &mut scores[..ws]);
+        if nqk > 0 {
+            if self.cfg.key_norm {
+                // Fold the per-channel norm into the query for the quantized
+                // span (keys were normalized at insertion).
+                let mut qn = q.to_vec();
+                self.norm.apply_query(&mut qn);
+                self.qk.scores(&qn, d_h, kscratch, &mut scores[ws..ws + nqk]);
+            } else {
+                self.qk.scores(q, d_h, kscratch, &mut scores[ws..ws + nqk]);
+            }
+        }
+        gemv_fp::qk_fp(q, self.recent_k.rows(), d_h, &mut scores[ws + nqk..]);
+
+        // ---- softmax over all tokens ----
+        softmax_scaled(scores, 1.0 / (d_h as f32).sqrt());
+
+        // ---- context over the V partition (independent boundaries) ----
+        let nqv = self.qv.len();
+        let nrv = self.recent_v.len();
+        debug_assert_eq!(ws + nqv + nrv, n);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        gemv_fp::pv_fp(&scores[..ws], &self.sink_v.rows, d_h, out);
+        if nqv > 0 {
+            self.qv.accumulate(&scores[ws..ws + nqv], d_h, out);
+        }
+        gemv_fp::pv_fp(&scores[ws + nqv..], self.recent_v.rows(), d_h, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantMethod;
+    use crate::util::ptest::normal_vec;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    fn reference_attention(q: &[f32], keys: &[f32], vals: &[f32], d_h: usize) -> Vec<f32> {
+        let n = keys.len() / d_h;
+        let mut s = vec![0f32; n];
+        gemv_fp::qk_fp(q, keys, d_h, &mut s);
+        softmax_scaled(&mut s, 1.0 / (d_h as f32).sqrt());
+        let mut out = vec![0f32; d_h];
+        gemv_fp::pv_fp(&s, vals, d_h, &mut out);
+        out
+    }
+
+    fn run_method(m: QuantMethod, n_prefill: usize, n_decode: usize, seed: u64) -> (f32, usize) {
+        let d_h = 64;
+        let mut rng = Rng::new(seed);
+        let keys = normal_vec(&mut rng, (n_prefill + n_decode) * d_h, 1.0, 0.02);
+        let vals = normal_vec(&mut rng, (n_prefill + n_decode) * d_h, 1.0, 0.02);
+        let cfg = m.config();
+        let mut hc = HeadCache::from_prefill(
+            cfg,
+            d_h,
+            &keys[..n_prefill * d_h],
+            &vals[..n_prefill * d_h],
+        );
+        for t in n_prefill..n_prefill + n_decode {
+            hc.append(&keys[t * d_h..(t + 1) * d_h], &vals[t * d_h..(t + 1) * d_h]);
+        }
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let mut out = vec![0f32; d_h];
+        let mut scratch = Vec::new();
+        hc.attend(&q, &mut out, &mut scratch);
+        let want = reference_attention(&q, &keys, &vals, d_h);
+        (rel_l2(&out, &want), hc.len())
+    }
+
+    #[test]
+    fn baseline_is_exact() {
+        let (err, n) = run_method(QuantMethod::BaselineFp16, 200, 50, 1);
+        assert_eq!(n, 250);
+        assert!(err < 1e-5, "baseline err {err}");
+    }
+
+    #[test]
+    fn all_methods_approximate_reference() {
+        // Random (structure-free) data is the worst case for quantized
+        // attention: score noise is amplified exponentially by softmax. The
+        // bounds below are sanity rails against egregious breakage; exact
+        // plumbing correctness is covered by the grid tests that follow and
+        // fidelity ordering by the eval harness (Table 1).
+        for (m, tol) in [
+            (QuantMethod::InnerQBase, 0.8),
+            (QuantMethod::InnerQHybrid, 1.0),
+            (QuantMethod::InnerQSmall, 1.2),
+            (QuantMethod::Kivi, 1.2),
+            (QuantMethod::KiviSink, 1.2),
+            (QuantMethod::TurboQuant, 1.0),
+        ] {
+            let (err, n) = run_method(m, 300, 77, 2);
+            assert_eq!(n, 377);
+            assert!(err < tol, "{m:?} err {err} > {tol}");
+            assert!(err.is_finite());
+        }
+    }
+
+    /// Build token rows whose values are exactly representable under 3-bit
+    /// symmetric quantization with per-token (inner) groups: each group gets
+    /// values from {0, ±s, ±2s, ±3s} with both ±3s present, so amax/qmax = s
+    /// exactly (and s is f16-exact).
+    fn grid_rows_sym3(rng: &mut Rng, n: usize, d_h: usize) -> Vec<f32> {
+        let s = 0.5f32;
+        let mut out = Vec::with_capacity(n * d_h);
+        for _ in 0..n {
+            for g in 0..d_h / 32 {
+                let _ = g;
+                let mut vals: Vec<f32> = (0..32)
+                    .map(|_| (rng.next_range(7) as i32 - 3) as f32 * s)
+                    .collect();
+                vals[0] = 3.0 * s; // pin amax so the scale is exactly s
+                vals[1] = -3.0 * s;
+                out.extend(vals);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn innerq_grid_data_is_exact_end_to_end() {
+        // With grid-representable data (and key-norm off), the quantized
+        // path must reproduce the FP attention bit-for-bit (up to f32
+        // accumulation order): this pins the whole plumbing — windows,
+        // eviction cadence, segment layouts, partition splits, merge.
+        let mut cfg = QuantMethod::InnerQBase.config();
+        cfg.key_norm = false; // sqrt-norms would leave the grid
+        let d_h = 64;
+        let mut rng = Rng::new(31);
+        let n = 400;
+        let keys = grid_rows_sym3(&mut rng, n, d_h);
+        // value grid: inner grouping for V is per-channel over token groups
+        // of 32; make every value the same per channel within each 32-token
+        // block so each group is constant => asym would also be exact, and
+        // sym represents {0,±s..} exactly. Simpler: reuse the same grid —
+        // groups are columns of the 32-token chunk, whose values are drawn
+        // from the same representable set but amax may be < 3s; quantization
+        // is still exact because every value is a multiple of s and
+        // amax/qmax divides s... that only holds when amax = 3s, so pin
+        // columns the same way via transpose-aware construction below.
+        let mut vals = vec![0f32; n * d_h];
+        for t in 0..n {
+            for c in 0..d_h {
+                vals[t * d_h + c] = (((t + c) % 7) as i32 - 3) as f32 * 0.5;
+            }
+        }
+        // ^ every 32-token column window contains both ±1.5 (period 7 < 32),
+        //   so each V group's amax is exactly 3s.
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let mut hc = HeadCache::from_prefill(cfg, d_h, &keys, &vals);
+        let mut out = vec![0f32; d_h];
+        let mut scratch = Vec::new();
+        hc.attend(&q, &mut out, &mut scratch);
+        let want = reference_attention(&q, &keys, &vals, d_h);
+        let err = rel_l2(&out, &want);
+        assert!(err < 2e-4, "grid-exact InnerQ err {err}");
+    }
+
+    #[test]
+    fn partitions_account_for_every_token() {
+        for m in QuantMethod::ALL {
+            let cfg = m.config();
+            let d_h = 64;
+            let mut rng = Rng::new(5);
+            let mut hc = HeadCache::new(cfg, d_h);
+            for t in 0..500 {
+                let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                let v = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                hc.append(&k, &v);
+                let nk = hc.sink_k.len() + hc.qk.len() + hc.recent_k.len();
+                let nv = hc.sink_v.len() + hc.qv.len() + hc.recent_v.len();
+                assert_eq!(nk, t + 1, "{m:?} K partition at {t}");
+                assert_eq!(nv, t + 1, "{m:?} V partition at {t}");
+                // recent window bounded by w_recent + batch - 1
+                assert!(hc.recent_k.len() < cfg.w_recent + hc.qk.evict_batch());
+                assert!(hc.recent_v.len() < cfg.w_recent + hc.qv.evict_batch());
+            }
+        }
+    }
+
+    #[test]
+    fn innerq_eviction_cadence() {
+        // InnerQ: one key per step, 32 values every 32 steps (§5.3).
+        let cfg = QuantMethod::InnerQBase.config();
+        let d_h = 64;
+        let mut rng = Rng::new(6);
+        let mut hc = HeadCache::new(cfg, d_h);
+        // fill sink + recent exactly
+        for _ in 0..(cfg.w_sink + cfg.w_recent) {
+            let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            hc.append(&k.clone(), &k);
+        }
+        assert_eq!(hc.qk.len(), 0);
+        assert_eq!(hc.qv.len(), 0);
+        let mut key_evictions = 0;
+        let mut val_evictions = Vec::new();
+        for t in 0..96 {
+            let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            hc.append(&k.clone(), &k);
+            if hc.qk.len() > key_evictions {
+                key_evictions = hc.qk.len();
+                assert_eq!(hc.qk.len(), t + 1, "keys evict one per step");
+            }
+            val_evictions.push(hc.qv.len());
+        }
+        // values move in jumps of 32
+        assert_eq!(*val_evictions.last().unwrap(), 96);
+        assert!(val_evictions.iter().all(|&v| v % 32 == 0));
+    }
+
+    #[test]
+    fn kivi_eviction_cadence_mirrored() {
+        let cfg = QuantMethod::Kivi.config();
+        let d_h = 64;
+        let mut rng = Rng::new(7);
+        let mut hc = HeadCache::new(cfg, d_h);
+        for _ in 0..cfg.w_recent {
+            let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            hc.append(&k.clone(), &k);
+        }
+        for t in 0..64 {
+            let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            hc.append(&k.clone(), &k);
+            assert_eq!(hc.qv.len(), t + 1, "KIVI evicts one value per step");
+            assert_eq!(hc.qk.len() % 32, 0, "KIVI evicts keys in groups");
+        }
+    }
+
+    #[test]
+    fn key_norm_does_not_break_scores() {
+        // Sanity rail: normalization must not blow the output up (score
+        // preservation is tested exactly in quant::norm; here we run it
+        // through the full eviction + attend pipeline).
+        let (err_with, _) = run_method(QuantMethod::InnerQBase, 400, 10, 9);
+        assert!(err_with.is_finite());
+        assert!(err_with < 0.8, "with norm {err_with}");
+    }
+
+    #[test]
+    fn short_sequences_stay_in_windows() {
+        // Sequences shorter than w_sink + w_recent never quantize anything,
+        // so every method is exact there.
+        for m in QuantMethod::ALL {
+            if m == QuantMethod::BaselineFp16 {
+                continue;
+            }
+            let (err, _) = run_method(m, 64, 10, 11);
+            assert!(err < 1e-4, "{m:?} short-seq err {err}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantized KV-cache subsystem: high-precision windows (§4.2), packed
+//! quantized segments (§4.4), the per-head manager with method-specific
+//! eviction, and the cross-sequence memory pool.
+
+pub mod manager;
+pub mod pool;
+pub mod segments;
+pub mod window;
+
+pub use manager::{HeadCache, KeySegment, ValSegment};
+pub use pool::{Admission, CachePool};

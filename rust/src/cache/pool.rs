@@ -1,0 +1,106 @@
+//! Cache memory pool: byte accounting and admission control across
+//! sequences. The scheduler consults the pool before admitting a prefill and
+//! preempts the youngest sequence under pressure (vLLM-style recompute
+//! preemption, simplified to fit the paper's single-node setting).
+
+use std::collections::BTreeMap;
+
+/// Outcome of an admission request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    /// Not enough budget even if everything else were evicted.
+    TooLarge,
+    /// Needs `preempt` sequences evicted first (by id, youngest first).
+    Pressure,
+}
+
+#[derive(Debug)]
+pub struct CachePool {
+    pub budget_bytes: usize,
+    used: BTreeMap<u64, usize>, // seq id -> bytes
+}
+
+impl CachePool {
+    pub fn new(budget_bytes: usize) -> CachePool {
+        CachePool { budget_bytes, used: BTreeMap::new() }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used.values().sum()
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.budget_bytes.saturating_sub(self.used_bytes())
+    }
+
+    /// Try to admit a sequence expected to need `est_bytes`.
+    pub fn admit(&mut self, seq: u64, est_bytes: usize) -> Admission {
+        if est_bytes > self.budget_bytes {
+            return Admission::TooLarge;
+        }
+        if est_bytes <= self.free_bytes() {
+            self.used.insert(seq, est_bytes);
+            Admission::Admitted
+        } else {
+            Admission::Pressure
+        }
+    }
+
+    /// Youngest (highest-id) sequence, the preemption victim.
+    pub fn youngest(&self) -> Option<u64> {
+        self.used.keys().next_back().copied()
+    }
+
+    /// Update a sequence's live byte count (caches grow during decode).
+    pub fn update(&mut self, seq: u64, bytes: usize) {
+        if let Some(b) = self.used.get_mut(&seq) {
+            *b = bytes;
+        }
+    }
+
+    pub fn release(&mut self, seq: u64) {
+        self.used.remove(&seq);
+    }
+
+    pub fn over_budget(&self) -> bool {
+        self.used_bytes() > self.budget_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_until_full_then_pressure() {
+        let mut p = CachePool::new(1000);
+        assert_eq!(p.admit(1, 400), Admission::Admitted);
+        assert_eq!(p.admit(2, 400), Admission::Admitted);
+        assert_eq!(p.admit(3, 400), Admission::Pressure);
+        assert_eq!(p.admit(4, 2000), Admission::TooLarge);
+        p.release(1);
+        assert_eq!(p.admit(3, 400), Admission::Admitted);
+    }
+
+    #[test]
+    fn growth_tracking_and_preemption_order() {
+        let mut p = CachePool::new(1000);
+        p.admit(1, 100);
+        p.admit(2, 100);
+        p.update(1, 600);
+        p.update(2, 500);
+        assert!(p.over_budget());
+        assert_eq!(p.youngest(), Some(2), "youngest sequence is the victim");
+        p.release(2);
+        assert!(!p.over_budget());
+    }
+
+    #[test]
+    fn free_bytes_never_underflows() {
+        let mut p = CachePool::new(100);
+        p.admit(1, 100);
+        p.update(1, 150);
+        assert_eq!(p.free_bytes(), 0);
+    }
+}

@@ -1,0 +1,490 @@
+//! Quantized cache segments: the packed stores behind `K̂_cache` / `V̂_cache`
+//! (Eq. 8), one layout per method family.
+//!
+//! Each segment owns its packed codes + group parameters and exposes the
+//! fused-kernel entry points. Token order inside a segment is global
+//! generation order: the cache manager guarantees tokens are appended
+//! oldest-first as they are evicted from the recent window (§4.2).
+
+use crate::kernels::{gemv_inner, gemv_outer, gemv_turbo};
+use crate::quant::group::{quantize, Mode};
+use crate::quant::packing::{pack, packed_len};
+use crate::quant::turbo::{codebook, quantize_token, Rotation, TurboToken};
+use crate::quant::GroupParams;
+
+/// Plain f32 rows — the BaselineFp16 "segment" (no quantization).
+#[derive(Debug, Default)]
+pub struct FpSegment {
+    pub d_h: usize,
+    pub rows: Vec<f32>,
+}
+
+impl FpSegment {
+    pub fn new(d_h: usize) -> FpSegment {
+        FpSegment { d_h, rows: Vec::new() }
+    }
+    pub fn len(&self) -> usize {
+        self.rows.len() / self.d_h
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+    pub fn append_token(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d_h);
+        self.rows.extend_from_slice(row);
+    }
+    pub fn bytes(&self) -> usize {
+        // FP16 storage equivalent: 2 bytes per number (DESIGN.md).
+        self.rows.len() * 2
+    }
+}
+
+/// InnerQ key segment: per-token groups along `d_h` (§4.4).
+#[derive(Debug)]
+pub struct InnerKeySegment {
+    pub d_h: usize,
+    pub bits: u8,
+    pub mode: Mode,
+    pub codes: Vec<u8>,
+    pub params: Vec<GroupParams>,
+    /// Runtime shadow of `params` as (scale, zeff) f32 pairs — hoists the
+    /// f16 widening out of the GEMV hot loop (see kernels::zeff_params).
+    pub pf: Vec<(f32, f32)>,
+    n_tokens: usize,
+}
+
+impl InnerKeySegment {
+    pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
+        assert_eq!(d_h % 32, 0);
+        InnerKeySegment {
+            d_h,
+            bits,
+            mode,
+            codes: Vec::new(),
+            params: Vec::new(),
+            pf: Vec::new(),
+            n_tokens: 0,
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.n_tokens
+    }
+    /// Quantize and append one key token (InnerQ quantizes one key per step).
+    pub fn append_token(&mut self, k: &[f32]) {
+        debug_assert_eq!(k.len(), self.d_h);
+        let mut raw = [0u8; 32];
+        for g in k.chunks_exact(32) {
+            let p = quantize(self.mode, g, self.bits, &mut raw);
+            self.params.push(p);
+            self.pf.push(crate::kernels::zeff(p, self.bits));
+            pack(&raw, self.bits, &mut self.codes);
+        }
+        self.n_tokens += 1;
+    }
+    /// Fused dequant-GEMV scores for all quantized tokens.
+    pub fn scores(&self, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n_tokens);
+        gemv_inner::qk_inner(q, &self.codes, &self.pf, self.bits, self.d_h, out);
+    }
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.params.len() * 4
+    }
+}
+
+/// InnerQ value segment: per-channel groups along the token axis, stored as
+/// channel-major chunks of 32 tokens (§4.4).
+#[derive(Debug)]
+pub struct InnerValSegment {
+    pub d_h: usize,
+    pub bits: u8,
+    pub mode: Mode,
+    /// Per chunk: `d_h` packed 32-code groups (channel-major).
+    pub codes: Vec<u8>,
+    /// Per chunk: `d_h` group params.
+    pub params: Vec<GroupParams>,
+    /// Runtime (scale, zeff) shadow of `params`.
+    pub pf: Vec<(f32, f32)>,
+    n_chunks: usize,
+}
+
+impl InnerValSegment {
+    pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
+        InnerValSegment {
+            d_h,
+            bits,
+            mode,
+            codes: Vec::new(),
+            params: Vec::new(),
+            pf: Vec::new(),
+            n_chunks: 0,
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.n_chunks * 32
+    }
+    /// Quantize and append 32 tokens (token-major input `32 x d_h`).
+    /// Group statistics run along the token axis per channel (inner
+    /// grouping); the packed codes stay token-major so the CPU value kernel
+    /// is reduction-free (see `gemv_inner::pv_inner_chunk`).
+    pub fn append_chunk(&mut self, vs: &[f32]) {
+        debug_assert_eq!(vs.len(), 32 * self.d_h);
+        let mut col = [0f32; 32];
+        let mut ccodes = [0u8; 32];
+        let mut raw = vec![0u8; 32 * self.d_h]; // token-major raw codes
+        for c in 0..self.d_h {
+            for t in 0..32 {
+                col[t] = vs[t * self.d_h + c];
+            }
+            let p = quantize(self.mode, &col, self.bits, &mut ccodes);
+            self.params.push(p);
+            self.pf.push(crate::kernels::zeff(p, self.bits));
+            for t in 0..32 {
+                raw[t * self.d_h + c] = ccodes[t];
+            }
+        }
+        for t in 0..32 {
+            pack(&raw[t * self.d_h..(t + 1) * self.d_h], self.bits, &mut self.codes);
+        }
+        self.n_chunks += 1;
+    }
+    /// `out[c] += Σ_t p[t]·dequant(V[t][c])` over all chunks.
+    pub fn accumulate(&self, p: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(p.len(), self.len());
+        let chunk_bytes = 32 * (self.d_h / 32) * packed_len(32, self.bits);
+        for k in 0..self.n_chunks {
+            gemv_inner::pv_inner_chunk(
+                &p[k * 32..(k + 1) * 32],
+                &self.codes[k * chunk_bytes..],
+                &self.pf[k * self.d_h..(k + 1) * self.d_h],
+                self.bits,
+                self.d_h,
+                out,
+            );
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.params.len() * 4
+    }
+}
+
+/// KIVI key segment: per-channel groups along the token axis, stored as
+/// token-major chunks of 32 tokens.
+#[derive(Debug)]
+pub struct OuterKeySegment {
+    pub d_h: usize,
+    pub bits: u8,
+    pub mode: Mode,
+    /// Per chunk: 32 token rows of packed `d_h` codes.
+    pub codes: Vec<u8>,
+    /// Per chunk: `d_h` group params (one per channel).
+    pub params: Vec<GroupParams>,
+    /// Runtime (scale, zeff) shadow of `params`.
+    pub pf: Vec<(f32, f32)>,
+    n_chunks: usize,
+}
+
+impl OuterKeySegment {
+    pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
+        assert_eq!(d_h % 32, 0);
+        OuterKeySegment {
+            d_h,
+            bits,
+            mode,
+            codes: Vec::new(),
+            params: Vec::new(),
+            pf: Vec::new(),
+            n_chunks: 0,
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.n_chunks * 32
+    }
+    /// Quantize and append 32 key tokens (KIVI evicts keys in groups of G).
+    pub fn append_chunk(&mut self, ks: &[f32]) {
+        debug_assert_eq!(ks.len(), 32 * self.d_h);
+        let mut col = [0f32; 32];
+        let mut ccodes = [0u8; 32];
+        let mut raw = vec![0u8; 32 * self.d_h];
+        for c in 0..self.d_h {
+            for t in 0..32 {
+                col[t] = ks[t * self.d_h + c];
+            }
+            let p = quantize(self.mode, &col, self.bits, &mut ccodes);
+            self.params.push(p);
+            self.pf.push(crate::kernels::zeff(p, self.bits));
+            for t in 0..32 {
+                raw[t * self.d_h + c] = ccodes[t];
+            }
+        }
+        for t in 0..32 {
+            pack(&raw[t * self.d_h..(t + 1) * self.d_h], self.bits, &mut self.codes);
+        }
+        self.n_chunks += 1;
+    }
+    /// Fused scores over all chunks; `scratch` holds `d_h` f32.
+    pub fn scores(&self, q: &[f32], scratch: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        let row_bytes = (self.d_h / 32) * packed_len(32, self.bits);
+        let chunk_bytes = 32 * row_bytes;
+        for k in 0..self.n_chunks {
+            gemv_outer::qk_outer_chunk(
+                q,
+                &self.codes[k * chunk_bytes..],
+                &self.pf[k * self.d_h..(k + 1) * self.d_h],
+                self.bits,
+                self.d_h,
+                scratch,
+                &mut out[k * 32..(k + 1) * 32],
+            );
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.params.len() * 4
+    }
+}
+
+/// KIVI value segment: per-token groups along channels, one row per token.
+#[derive(Debug)]
+pub struct OuterValSegment {
+    pub d_h: usize,
+    pub bits: u8,
+    pub mode: Mode,
+    pub codes: Vec<u8>,
+    pub params: Vec<GroupParams>,
+    /// Runtime (scale, zeff) shadow of `params`.
+    pub pf: Vec<(f32, f32)>,
+    n_tokens: usize,
+}
+
+impl OuterValSegment {
+    pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
+        assert_eq!(d_h % 32, 0);
+        OuterValSegment {
+            d_h,
+            bits,
+            mode,
+            codes: Vec::new(),
+            params: Vec::new(),
+            pf: Vec::new(),
+            n_tokens: 0,
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.n_tokens
+    }
+    /// Quantize and append one value token (KIVI quantizes one value/step).
+    pub fn append_token(&mut self, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.d_h);
+        let mut raw = [0u8; 32];
+        for g in v.chunks_exact(32) {
+            let p = quantize(self.mode, g, self.bits, &mut raw);
+            self.params.push(p);
+            self.pf.push(crate::kernels::zeff(p, self.bits));
+            pack(&raw, self.bits, &mut self.codes);
+        }
+        self.n_tokens += 1;
+    }
+    pub fn accumulate(&self, p: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(p.len(), self.n_tokens);
+        let groups = self.d_h / 32;
+        let row_bytes = groups * packed_len(32, self.bits);
+        for (t, &w) in p.iter().enumerate() {
+            gemv_outer::pv_outer_row(
+                w,
+                &self.codes[t * row_bytes..],
+                &self.pf[t * groups..(t + 1) * groups],
+                self.bits,
+                self.d_h,
+                out,
+            );
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.params.len() * 4
+    }
+}
+
+/// TurboQuant key segment: rotated codebook-coded tokens.
+#[derive(Debug)]
+pub struct TurboKeySegment {
+    pub d_h: usize,
+    pub bits: u8,
+    pub rotation: Rotation,
+    pub tokens: Vec<TurboToken>,
+}
+
+impl TurboKeySegment {
+    pub fn new(d_h: usize, bits: u8, seed: u64) -> Self {
+        TurboKeySegment { d_h, bits, rotation: Rotation::new(d_h, seed), tokens: Vec::new() }
+    }
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+    pub fn append_token(&mut self, k: &[f32]) {
+        self.tokens.push(quantize_token(&self.rotation, k, self.bits));
+    }
+    /// Rotate the query once, then codebook-GEMV over all tokens.
+    pub fn scores(&self, q: &[f32], out: &mut [f32]) {
+        let mut q_rot = q.to_vec();
+        self.rotation.apply(&mut q_rot);
+        gemv_turbo::qk_turbo(&q_rot, &self.tokens, codebook(self.bits), self.bits, self.d_h, out);
+    }
+    pub fn bytes(&self) -> usize {
+        self.tokens.iter().map(|t| t.codes.len() + 4).sum()
+    }
+}
+
+/// TurboQuant value segment: accumulates in the rotated basis; `finalize`
+/// un-rotates the context contribution once per decode step.
+#[derive(Debug)]
+pub struct TurboValSegment {
+    pub d_h: usize,
+    pub bits: u8,
+    pub rotation: Rotation,
+    pub tokens: Vec<TurboToken>,
+}
+
+impl TurboValSegment {
+    pub fn new(d_h: usize, bits: u8, seed: u64) -> Self {
+        TurboValSegment { d_h, bits, rotation: Rotation::new(d_h, seed), tokens: Vec::new() }
+    }
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+    pub fn append_token(&mut self, v: &[f32]) {
+        self.tokens.push(quantize_token(&self.rotation, v, self.bits));
+    }
+    /// Accumulate `Σ p_t·R(v_t)` into `out_rot` (rotated basis).
+    pub fn accumulate_rotated(&self, p: &[f32], out_rot: &mut [f32]) {
+        gemv_turbo::pv_turbo(p, &self.tokens, codebook(self.bits), self.bits, self.d_h, out_rot);
+    }
+    /// Un-rotate a rotated-basis accumulation and add it into `out`.
+    pub fn finalize_into(&self, mut acc_rot: Vec<f32>, out: &mut [f32]) {
+        crate::quant::turbo::fwht(&mut acc_rot);
+        for ((o, v), &s) in out.iter_mut().zip(&acc_rot).zip(&self.rotation.signs) {
+            *o += v * s;
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        self.tokens.iter().map(|t| t.codes.len() + 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::normal_vec;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn inner_key_segment_append_and_score() {
+        let mut rng = Rng::new(21);
+        let d_h = 64;
+        let mut seg = InnerKeySegment::new(d_h, 3, Mode::Sym);
+        let keys = normal_vec(&mut rng, 10 * d_h, 1.0, 0.0);
+        for row in keys.chunks_exact(d_h) {
+            seg.append_token(row);
+        }
+        assert_eq!(seg.len(), 10);
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let mut out = vec![0f32; 10];
+        seg.scores(&q, &mut out);
+        let mut exact = vec![0f32; 10];
+        crate::kernels::gemv_fp::qk_fp(&q, &keys, d_h, &mut exact);
+        assert!(rel_l2(&out, &exact) < 0.15);
+    }
+
+    #[test]
+    fn inner_val_segment_round_trip() {
+        let mut rng = Rng::new(22);
+        let d_h = 64;
+        let mut seg = InnerValSegment::new(d_h, 3, Mode::Sym);
+        let vals = normal_vec(&mut rng, 64 * d_h, 1.0, 0.0);
+        seg.append_chunk(&vals[..32 * d_h]);
+        seg.append_chunk(&vals[32 * d_h..]);
+        assert_eq!(seg.len(), 64);
+        let p: Vec<f32> = (0..64).map(|_| rng.next_f32() / 64.0).collect();
+        let mut out = vec![0f32; d_h];
+        seg.accumulate(&p, &mut out);
+        let mut exact = vec![0f32; d_h];
+        crate::kernels::gemv_fp::pv_fp(&p, &vals, d_h, &mut exact);
+        // 3-bit symmetric with near-uniform positive weights: honest error is
+        // ~step/sqrt(12) relative to the data scale.
+        assert!(rel_l2(&out, &exact) < 0.3, "rel {}", rel_l2(&out, &exact));
+    }
+
+    #[test]
+    fn outer_key_segment_matches_fp_shape() {
+        let mut rng = Rng::new(23);
+        let d_h = 128;
+        let mut seg = OuterKeySegment::new(d_h, 4, Mode::Asym);
+        let keys = normal_vec(&mut rng, 32 * d_h, 1.0, 0.0);
+        seg.append_chunk(&keys);
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let mut scratch = vec![0f32; d_h];
+        let mut out = vec![0f32; 32];
+        seg.scores(&q, &mut scratch, &mut out);
+        let mut exact = vec![0f32; 32];
+        crate::kernels::gemv_fp::qk_fp(&q, &keys, d_h, &mut exact);
+        assert!(rel_l2(&out, &exact) < 0.1);
+    }
+
+    #[test]
+    fn outer_val_segment_matches_fp_shape() {
+        let mut rng = Rng::new(24);
+        let d_h = 64;
+        let mut seg = OuterValSegment::new(d_h, 4, Mode::Asym);
+        let vals = normal_vec(&mut rng, 20 * d_h, 1.0, 0.0);
+        for row in vals.chunks_exact(d_h) {
+            seg.append_token(row);
+        }
+        let p: Vec<f32> = (0..20).map(|_| rng.next_f32() / 20.0).collect();
+        let mut out = vec![0f32; d_h];
+        seg.accumulate(&p, &mut out);
+        let mut exact = vec![0f32; d_h];
+        crate::kernels::gemv_fp::pv_fp(&p, &vals, d_h, &mut exact);
+        assert!(rel_l2(&out, &exact) < 0.12);
+    }
+
+    #[test]
+    fn turbo_segments_round_trip() {
+        let mut rng = Rng::new(25);
+        let d_h = 128;
+        let mut ks = TurboKeySegment::new(d_h, 4, 42);
+        let mut vs = TurboValSegment::new(d_h, 3, 43);
+        let keys = normal_vec(&mut rng, 16 * d_h, 1.0, 0.0);
+        let vals = normal_vec(&mut rng, 16 * d_h, 1.0, 0.0);
+        for (k, v) in keys.chunks_exact(d_h).zip(vals.chunks_exact(d_h)) {
+            ks.append_token(k);
+            vs.append_token(v);
+        }
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let mut out = vec![0f32; 16];
+        ks.scores(&q, &mut out);
+        let mut exact = vec![0f32; 16];
+        crate::kernels::gemv_fp::qk_fp(&q, &keys, d_h, &mut exact);
+        assert!(rel_l2(&out, &exact) < 0.25, "turbo key rel {}", rel_l2(&out, &exact));
+
+        let p: Vec<f32> = (0..16).map(|_| 1.0 / 16.0).collect();
+        let acc = vec![0f32; d_h];
+        let mut ctx = vec![0f32; d_h];
+        let mut acc = acc;
+        vs.accumulate_rotated(&p, &mut acc);
+        vs.finalize_into(acc, &mut ctx);
+        let mut exact_ctx = vec![0f32; d_h];
+        crate::kernels::gemv_fp::pv_fp(&p, &vals, d_h, &mut exact_ctx);
+        assert!(rel_l2(&ctx, &exact_ctx) < 0.25, "turbo val rel {}", rel_l2(&ctx, &exact_ctx));
+    }
+
+    #[test]
+    fn segment_bytes_track_bit_width() {
+        // 3-bit inner key: 12 bytes codes + 4 bytes params per 32 channels.
+        let mut seg = InnerKeySegment::new(128, 3, Mode::Sym);
+        seg.append_token(&vec![0.5f32; 128]);
+        assert_eq!(seg.bytes(), 4 * 12 + 4 * 4); // 4 groups
+        let mut kivi = OuterValSegment::new(128, 2, Mode::Asym);
+        kivi.append_token(&vec![0.5f32; 128]);
+        assert_eq!(kivi.bytes(), 4 * 8 + 4 * 4);
+    }
+}

@@ -1,0 +1,151 @@
+//! High-precision token windows (§4.2).
+//!
+//! `SinkWindow` pins the first `w_sink` tokens (attention sinks) in full
+//! precision for the lifetime of the sequence. `RecentWindow` is a FIFO of
+//! the most recent tokens; evictions from its front are what the quantizers
+//! consume. Both store f32 rows (the FP16-storage stand-in).
+
+/// Fixed window over the first tokens of the sequence.
+#[derive(Debug, Default)]
+pub struct SinkWindow {
+    pub d_h: usize,
+    pub rows: Vec<f32>,
+    capacity: usize,
+}
+
+impl SinkWindow {
+    pub fn new(d_h: usize, capacity: usize) -> SinkWindow {
+        SinkWindow { d_h, rows: Vec::with_capacity(capacity * d_h), capacity }
+    }
+    pub fn len(&self) -> usize {
+        self.rows.len() / self.d_h.max(1)
+    }
+    pub fn is_full(&self) -> bool {
+        self.len() >= self.capacity
+    }
+    /// Push a token if the window still has room; returns false when full.
+    pub fn try_push(&mut self, row: &[f32]) -> bool {
+        if self.is_full() || self.capacity == 0 {
+            return false;
+        }
+        debug_assert_eq!(row.len(), self.d_h);
+        self.rows.extend_from_slice(row);
+        true
+    }
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * 2
+    }
+}
+
+/// FIFO window over the most recent tokens, with amortized O(1) front pops.
+#[derive(Debug)]
+pub struct RecentWindow {
+    pub d_h: usize,
+    data: Vec<f32>,
+    /// Index (in rows) of the logical front.
+    start: usize,
+}
+
+impl RecentWindow {
+    pub fn new(d_h: usize) -> RecentWindow {
+        RecentWindow { d_h, data: Vec::new(), start: 0 }
+    }
+    pub fn len(&self) -> usize {
+        self.data.len() / self.d_h - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn push(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d_h);
+        self.data.extend_from_slice(row);
+    }
+    /// Contiguous view of the live rows (oldest first).
+    pub fn rows(&self) -> &[f32] {
+        &self.data[self.start * self.d_h..]
+    }
+    /// Pop `n` rows from the front, passing them to `consume` as one
+    /// contiguous token-major slice (oldest first).
+    pub fn pop_front<F: FnOnce(&[f32])>(&mut self, n: usize, consume: F) {
+        assert!(n <= self.len(), "pop {n} > len {}", self.len());
+        let lo = self.start * self.d_h;
+        consume(&self.data[lo..lo + n * self.d_h]);
+        self.start += n;
+        // Compact when more than half the buffer is dead.
+        if self.start * self.d_h * 2 > self.data.len() {
+            self.data.drain(..self.start * self.d_h);
+            self.start = 0;
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        self.len() * self.d_h * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(d_h: usize, v: f32) -> Vec<f32> {
+        vec![v; d_h]
+    }
+
+    #[test]
+    fn sink_fills_then_rejects() {
+        let mut s = SinkWindow::new(4, 2);
+        assert!(s.try_push(&row(4, 1.0)));
+        assert!(s.try_push(&row(4, 2.0)));
+        assert!(!s.try_push(&row(4, 3.0)));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.rows[4], 2.0);
+    }
+
+    #[test]
+    fn zero_capacity_sink_rejects_all() {
+        let mut s = SinkWindow::new(4, 0);
+        assert!(!s.try_push(&row(4, 1.0)));
+    }
+
+    #[test]
+    fn recent_fifo_order() {
+        let mut r = RecentWindow::new(2);
+        for i in 0..5 {
+            r.push(&row(2, i as f32));
+        }
+        assert_eq!(r.len(), 5);
+        r.pop_front(2, |rows| {
+            assert_eq!(rows, &[0.0, 0.0, 1.0, 1.0]);
+        });
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.rows()[0], 2.0);
+        // push after pop keeps order
+        r.push(&row(2, 9.0));
+        r.pop_front(3, |rows| {
+            assert_eq!(rows[0], 2.0);
+            assert_eq!(rows[4], 4.0);
+        });
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.rows(), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn compaction_preserves_contents() {
+        let mut r = RecentWindow::new(1);
+        for i in 0..100 {
+            r.push(&[i as f32]);
+        }
+        for i in 0..90 {
+            r.pop_front(1, |rows| assert_eq!(rows[0], i as f32));
+        }
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.rows()[0], 90.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_pop_panics() {
+        let mut r = RecentWindow::new(1);
+        r.push(&[1.0]);
+        r.pop_front(2, |_| {});
+    }
+}

@@ -1,0 +1,62 @@
+//! Dynamic decode batcher: groups live sequences into the exported batch
+//! buckets each step (continuous batching à la Orca/vLLM, sized to the
+//! decode executables AOT-compiled per bucket).
+
+/// Decide the decode batch for this step.
+///
+/// * `live`: ids of sequences currently in the decode phase;
+/// * `buckets`: available executable batch sizes (ascending);
+/// * returns at most `max(buckets)` ids, preferring the oldest sequences
+///   (FIFO fairness; the rest run next step).
+pub fn plan_decode_batch(live: &[u64], buckets: &[usize]) -> Vec<u64> {
+    if live.is_empty() || buckets.is_empty() {
+        return Vec::new();
+    }
+    let cap = *buckets.last().unwrap();
+    live.iter().copied().take(cap).collect()
+}
+
+/// Pick the bucket an n-sequence batch compiles into (smallest fit).
+pub fn bucket_for(n: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+/// Padding waste of running `n` sequences in bucket `b` (fraction of compute
+/// spent on padding rows) — exported to metrics to guide bucket choices.
+pub fn padding_waste(n: usize, b: usize) -> f64 {
+    if b == 0 {
+        return 0.0;
+    }
+    (b - n) as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_and_capacity() {
+        let live: Vec<u64> = (0..10).collect();
+        let batch = plan_decode_batch(&live, &[1, 2, 4, 8]);
+        assert_eq!(batch, (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(1, &[1, 2, 4, 8]), Some(1));
+        assert_eq!(bucket_for(3, &[1, 2, 4, 8]), Some(4));
+        assert_eq!(bucket_for(9, &[1, 2, 4, 8]), None);
+    }
+
+    #[test]
+    fn waste_accounting() {
+        assert_eq!(padding_waste(3, 4), 0.25);
+        assert_eq!(padding_waste(4, 4), 0.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(plan_decode_batch(&[], &[1, 2]).is_empty());
+        assert!(plan_decode_batch(&[1], &[]).is_empty());
+    }
+}

@@ -1,0 +1,222 @@
+//! The decode engine: drives the AOT-compiled model stages through PJRT and
+//! owns the quantized KV cache between the QKV and output stages.
+//!
+//! One decode step for a batch of sequences:
+//!
+//! ```text
+//!   embed(tokens) -> h
+//!   for each layer:  qkv(h, pos) -> q,k,v       [PJRT]
+//!                    cache.append(k, v)          [Rust, per seq/KV head]
+//!                    ctx = attend(q)             [Rust fused kernels]
+//!                    h = out(h, ctx)             [PJRT]
+//!   logits = head(h)                             [PJRT]
+//! ```
+//!
+//! Python never runs here; the executables were compiled from
+//! `artifacts/*.hlo.txt` at engine start.
+
+use crate::cache::HeadCache;
+use crate::quant::MethodConfig;
+use crate::runtime::executable::{In, Stage};
+use crate::runtime::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// One live sequence: token history + per-layer, per-KV-head caches.
+pub struct Sequence {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub caches: Vec<Vec<HeadCache>>, // [layer][kv_head]
+    pub n_prefill: usize,
+    pub last_logits: Vec<f32>,
+    scratch: Vec<f32>,
+}
+
+impl Sequence {
+    /// Total cache bytes across layers/heads (for the pool).
+    pub fn cache_bytes(&self) -> usize {
+        self.caches.iter().flatten().map(|c| c.bytes()).sum()
+    }
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// The model engine for one quantization method.
+pub struct Engine {
+    pub manifest: Manifest,
+    pub cfg: MethodConfig,
+    stages: HashMap<String, Stage>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load and compile every decode stage eagerly (prefill buckets lazily
+    /// would also work, but eager keeps decode latency deterministic).
+    pub fn new(manifest: Manifest, cfg: MethodConfig) -> Result<Engine> {
+        let mut stages = HashMap::new();
+        for (key, _) in manifest.artifacts.iter() {
+            let stage = Stage::load(key, &manifest.path(key)?)?;
+            stages.insert(key.clone(), stage);
+        }
+        Ok(Engine { manifest, cfg, stages, next_id: 0.into() })
+    }
+
+    fn stage(&self, key: &str) -> Result<&Stage> {
+        self.stages.get(key).with_context(|| format!("stage '{key}' not loaded"))
+    }
+
+    /// Run prefill for a prompt; returns an initialized sequence whose
+    /// caches follow Eq. (15) (sink / bulk-quantized middle / recent).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<Sequence> {
+        let dims = &self.manifest.model;
+        let bucket = self.manifest.prefill_bucket(prompt.len())?;
+        let mut padded = prompt.to_vec();
+        padded.resize(bucket, self.manifest.bos);
+        let out = self.stage(&format!("prefill_l{bucket}"))?.run(&[In::I32(
+            &padded,
+            &[1, bucket as i64],
+        )])?;
+        let logits = out.f32(0)?; // (bucket, vocab)
+        let ks = out.f32(1)?; // (n_layers, bucket, n_kv, d_h)
+        let vs = out.f32(2)?;
+
+        let n = prompt.len();
+        let (n_l, n_kv, d_h) = (dims.n_layers, dims.n_kv_heads, dims.d_h);
+        let mut caches = Vec::with_capacity(n_l);
+        for l in 0..n_l {
+            let mut heads = Vec::with_capacity(n_kv);
+            for h in 0..n_kv {
+                // gather this head's rows: layout (L, n_kv, d_h) per layer
+                let mut k_rows = Vec::with_capacity(n * d_h);
+                let mut v_rows = Vec::with_capacity(n * d_h);
+                for t in 0..n {
+                    let base = ((l * bucket + t) * n_kv + h) * d_h;
+                    k_rows.extend_from_slice(&ks[base..base + d_h]);
+                    v_rows.extend_from_slice(&vs[base..base + d_h]);
+                }
+                heads.push(HeadCache::from_prefill(self.cfg, d_h, &k_rows, &v_rows));
+            }
+            caches.push(heads);
+        }
+        let vstart = (n - 1) * dims.vocab;
+        Ok(Sequence {
+            id: self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            tokens: prompt.to_vec(),
+            caches,
+            n_prefill: n,
+            last_logits: logits[vstart..vstart + dims.vocab].to_vec(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// One batched decode step: appends `next_tokens[i]` to each sequence
+    /// and computes its logits. Sequences may have different lengths.
+    pub fn decode_step(&self, seqs: &mut [&mut Sequence], next_tokens: &[i32]) -> Result<()> {
+        assert_eq!(seqs.len(), next_tokens.len());
+        let dims = self.manifest.model.clone();
+        let nb = seqs.len();
+        let bb = self.manifest.decode_batch(nb)?; // padded batch bucket
+
+        let mut tokens = vec![self.manifest.bos; bb];
+        let mut positions = vec![0i32; bb];
+        for (i, s) in seqs.iter().enumerate() {
+            tokens[i] = next_tokens[i];
+            positions[i] = s.tokens.len() as i32; // position of the new token
+        }
+
+        let mut h = self
+            .stage(&format!("embed_b{bb}"))?
+            .run(&[In::I32(&tokens, &[bb as i64])])?
+            .f32(0)?; // (bb, d_model)
+
+        let rep = dims.heads_per_kv();
+        let (d_h, q_dim) = (dims.d_h, dims.q_dim());
+        for l in 0..dims.n_layers {
+            let out = self.stage(&format!("qkv_l{l}_b{bb}"))?.run(&[
+                In::F32(&h, &[bb as i64, dims.d_model as i64]),
+                In::I32(&positions, &[bb as i64]),
+            ])?;
+            let q = out.f32(0)?; // (bb, n_q, d_h)
+            let k = out.f32(1)?; // (bb, n_kv, d_h)
+            let v = out.f32(2)?;
+
+            // Rust-owned quantized attention per sequence / head.
+            let mut ctx = vec![0f32; bb * q_dim];
+            for (i, s) in seqs.iter_mut().enumerate() {
+                for hk in 0..dims.n_kv_heads {
+                    let kb = (i * dims.n_kv_heads + hk) * d_h;
+                    let cache = &mut s.caches[l][hk];
+                    cache.append(&k[kb..kb + d_h], &v[kb..kb + d_h]);
+                    for r in 0..rep {
+                        let hq = hk * rep + r;
+                        let qb = (i * dims.n_q_heads + hq) * d_h;
+                        let ob = i * q_dim + hq * d_h;
+                        let mut scratch = std::mem::take(&mut s.scratch);
+                        cache.attend(
+                            &q[qb..qb + d_h],
+                            &mut ctx[ob..ob + d_h],
+                            &mut scratch,
+                        );
+                        s.scratch = scratch;
+                    }
+                }
+            }
+
+            h = self
+                .stage(&format!("out_l{l}_b{bb}"))?
+                .run(&[
+                    In::F32(&h, &[bb as i64, dims.d_model as i64]),
+                    In::F32(&ctx, &[bb as i64, q_dim as i64]),
+                ])?
+                .f32(0)?;
+        }
+
+        let logits = self
+            .stage(&format!("head_b{bb}"))?
+            .run(&[In::F32(&h, &[bb as i64, dims.d_model as i64])])?
+            .f32(0)?; // (bb, vocab)
+
+        for (i, s) in seqs.iter_mut().enumerate() {
+            s.tokens.push(next_tokens[i]);
+            let vb = i * dims.vocab;
+            s.last_logits = logits[vb..vb + dims.vocab].to_vec();
+        }
+        Ok(())
+    }
+
+    /// Start a sequence from a single BOS token without a prefill executable
+    /// (pure-decode mode; used by tests and the quality harness when the
+    /// prompt should go through the *decode* cache path token by token).
+    pub fn start_empty(&self) -> Sequence {
+        let dims = &self.manifest.model;
+        let caches = (0..dims.n_layers)
+            .map(|_| (0..dims.n_kv_heads).map(|_| HeadCache::new(self.cfg, dims.d_h)).collect())
+            .collect();
+        Sequence {
+            id: self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            tokens: Vec::new(),
+            caches,
+            n_prefill: 0,
+            last_logits: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Greedy next token from a sequence's last logits.
+    pub fn argmax(logits: &[f32]) -> i32 {
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+
+    /// Log-softmax probability of `token` under `logits`.
+    pub fn log_prob(logits: &[f32], token: i32) -> f32 {
+        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = m + logits.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+        logits[token as usize] - lse
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 serving coordinator: the decode engine (PJRT stages + Rust
+//! quantized-cache attention), the dynamic batcher, the prefill/decode
+//! scheduler with cache-pressure preemption, and request plumbing.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod scheduler;
+
+pub use engine::{Engine, Sequence};
+pub use request::{Completion, Phase, Request, StepMetrics};
+pub use scheduler::Scheduler;

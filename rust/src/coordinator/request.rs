@@ -1,0 +1,44 @@
+//! Request lifecycle for the serving coordinator.
+
+use std::time::Instant;
+
+/// A generation request as submitted by a client.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// Greedy when None; otherwise softmax temperature.
+    pub temperature: Option<f32>,
+    pub arrived: Instant,
+}
+
+/// Terminal states.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    /// Time-to-first-token and total latency, in microseconds.
+    pub ttft_us: u64,
+    pub total_us: u64,
+}
+
+/// Scheduler-visible request state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+    Failed,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepMetrics {
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    pub batched_seqs: u64,
+    pub preemptions: u64,
+}

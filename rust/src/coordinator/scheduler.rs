@@ -1,0 +1,212 @@
+//! Prefill/decode scheduler: admission via the cache pool, FIFO prefill, and
+//! continuous decode batching. Single-worker synchronous loop (the testbed
+//! is one CPU core; the router generalizes across workers).
+
+use crate::cache::{Admission, CachePool};
+use crate::coordinator::batcher;
+use crate::coordinator::engine::{Engine, Sequence};
+use crate::coordinator::request::{Completion, Request, StepMetrics};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+struct Live {
+    req: Request,
+    seq: Sequence,
+    generated: Vec<i32>,
+    next_token: i32,
+    ttft_us: Option<u64>,
+}
+
+pub struct Scheduler {
+    pub engine: Engine,
+    pub pool: CachePool,
+    queue: VecDeque<Request>,
+    live: Vec<Live>,
+    pub done: Vec<Completion>,
+    pub metrics: StepMetrics,
+    stop_token: i32,
+    rng: Rng,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, cache_budget_bytes: usize) -> Scheduler {
+        // '.' ends a document in the corpus grammar.
+        let stop_token = engine
+            .manifest
+            .charset
+            .chars()
+            .position(|c| c == '.')
+            .map(|i| i as i32 + 1)
+            .unwrap_or(-1);
+        Scheduler {
+            engine,
+            pool: CachePool::new(cache_budget_bytes),
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            done: Vec::new(),
+            metrics: StepMetrics::default(),
+            stop_token,
+            rng: Rng::new(0xd1ce),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.live.len()
+    }
+
+    /// Estimated cache bytes for a prompt + its generation budget.
+    fn estimate_bytes(&self, req: &Request) -> usize {
+        let d = &self.engine.manifest.model;
+        let n = req.prompt.len() + req.max_new_tokens;
+        // FP16-equivalent upper bound across layers/heads, both K and V.
+        2 * 2 * n * d.d_h * d.n_kv_heads * d.n_layers
+    }
+
+    /// One scheduler tick: admit at most one prefill, then one decode step
+    /// over the live batch. Returns false when idle.
+    pub fn tick(&mut self) -> Result<bool> {
+        if self.queue.is_empty() && self.live.is_empty() {
+            return Ok(false);
+        }
+        // --- admission / prefill ---
+        if let Some(req) = self.queue.front() {
+            let est = self.estimate_bytes(req);
+            match self.pool.admit(req.id, est) {
+                Admission::Admitted => {
+                    let req = self.queue.pop_front().unwrap();
+                    let prompt = self.engine.manifest.encode(&req.prompt)?;
+                    let t0 = Instant::now();
+                    let seq = self.engine.prefill(&prompt)?;
+                    self.metrics.prefill_tokens += prompt.len() as u64;
+                    let next = self.sample(&seq.last_logits, req.temperature);
+                    self.live.push(Live {
+                        ttft_us: Some(t0.elapsed().as_micros() as u64),
+                        req,
+                        seq,
+                        generated: Vec::new(),
+                        next_token: next,
+                    });
+                }
+                Admission::Pressure => {
+                    // Preempt the youngest live sequence (recompute-style):
+                    // push its request back to the queue and drop its cache.
+                    if let Some(victim) = self.pool.youngest() {
+                        if let Some(idx) = self.live.iter().position(|l| l.req.id == victim) {
+                            let l = self.live.swap_remove(idx);
+                            self.pool.release(victim);
+                            self.metrics.preemptions += 1;
+                            self.queue.push_back(l.req);
+                        }
+                    }
+                }
+                Admission::TooLarge => {
+                    let req = self.queue.pop_front().unwrap();
+                    self.done.push(Completion {
+                        id: req.id,
+                        text: String::new(),
+                        n_prompt: req.prompt.len(),
+                        n_generated: 0,
+                        ttft_us: 0,
+                        total_us: 0,
+                    });
+                }
+            }
+        }
+
+        // --- decode step ---
+        if !self.live.is_empty() {
+            let ids: Vec<u64> = self.live.iter().map(|l| l.req.id).collect();
+            let batch = batcher::plan_decode_batch(&ids, &self.engine.manifest.decode_batches);
+            let mut idxs: Vec<usize> = batch
+                .iter()
+                .map(|id| self.live.iter().position(|l| l.req.id == *id).unwrap())
+                .collect();
+            idxs.sort_unstable();
+            let tokens: Vec<i32> = idxs.iter().map(|&i| self.live[i].next_token).collect();
+            // split_at_mut dance: collect &mut Sequence for the batch
+            let mut seqs: Vec<&mut Sequence> = Vec::with_capacity(idxs.len());
+            let mut rest: &mut [Live] = &mut self.live;
+            let mut consumed = 0usize;
+            for &i in &idxs {
+                let (_, tail) = rest.split_at_mut(i - consumed);
+                let (item, tail2) = tail.split_at_mut(1);
+                seqs.push(&mut item[0].seq);
+                rest = tail2;
+                consumed = i + 1;
+            }
+            self.engine.decode_step(&mut seqs, &tokens)?;
+            drop(seqs);
+            self.metrics.decode_steps += 1;
+            self.metrics.batched_seqs += idxs.len() as u64;
+
+            // post-step: record generated tokens, sample next, finish.
+            let mut finished = Vec::new();
+            for &i in &idxs {
+                let l = &mut self.live[i];
+                l.generated.push(l.next_token);
+                self.pool.update(l.req.id, l.seq.cache_bytes());
+                let done = l.next_token == self.stop_token
+                    || l.generated.len() >= l.req.max_new_tokens;
+                if done {
+                    finished.push(i);
+                } else {
+                    l.next_token = Self::sample_with(
+                        &mut self.rng,
+                        &l.seq.last_logits,
+                        l.req.temperature,
+                    );
+                }
+            }
+            finished.sort_unstable_by(|a, b| b.cmp(a));
+            for i in finished {
+                let l = self.live.swap_remove(i);
+                self.pool.release(l.req.id);
+                self.done.push(Completion {
+                    id: l.req.id,
+                    text: self.engine.manifest.decode_text(&l.generated),
+                    n_prompt: l.req.prompt.len(),
+                    n_generated: l.generated.len(),
+                    ttft_us: l.ttft_us.unwrap_or(0),
+                    total_us: l.req.arrived.elapsed().as_micros() as u64,
+                });
+            }
+        }
+        Ok(true)
+    }
+
+    fn sample(&mut self, logits: &[f32], temperature: Option<f32>) -> i32 {
+        Self::sample_with(&mut self.rng, logits, temperature)
+    }
+
+    fn sample_with(rng: &mut Rng, logits: &[f32], temperature: Option<f32>) -> i32 {
+        match temperature {
+            None => Engine::argmax(logits),
+            Some(t) => {
+                let t = t.max(1e-3);
+                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let ps: Vec<f32> = logits.iter().map(|&v| ((v - m) / t).exp()).collect();
+                let sum: f32 = ps.iter().sum();
+                let mut u = rng.next_f32() * sum;
+                for (i, &p) in ps.iter().enumerate() {
+                    u -= p;
+                    if u <= 0.0 {
+                        return i as i32;
+                    }
+                }
+                (ps.len() - 1) as i32
+            }
+        }
+    }
+
+    /// Drain the queue and all live sequences to completion.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.tick()? {}
+        Ok(std::mem::take(&mut self.done))
+    }
+}

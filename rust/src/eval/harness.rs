@@ -1,0 +1,145 @@
+//! Teacher-forced evaluation over corpus documents for one quant method.
+
+use crate::coordinator::Engine;
+use crate::quant::MethodConfig;
+use crate::runtime::Manifest;
+use crate::workload::corpus::{query_positions, CorpusGen};
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalConfig {
+    pub n_docs: usize,
+    pub n_assign: usize,
+    pub n_queries: usize,
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        // ~150-token contexts: past the 128-token high-precision window, so
+        // the quantized segment is actually exercised (Table 1 scale).
+        EvalConfig { n_docs: 8, n_assign: 40, n_queries: 10, seed: 2026 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalResult {
+    pub method: String,
+    /// Mean NLL of ground-truth value digits.
+    pub nll: f64,
+    /// Greedy recall accuracy on value digits.
+    pub accuracy: f64,
+    /// Top-1 agreement with the baseline run (1.0 for the baseline itself).
+    pub agreement: f64,
+    /// Mean KL(baseline || method) over value-digit logits.
+    pub kl: f64,
+    pub n_positions: usize,
+    /// Mean sparsity of the hybrid mask M (fraction symmetric), if any.
+    pub m_sparsity: Option<f64>,
+}
+
+/// Teacher-force one document through the decode path, returning the logits
+/// at every query-digit position.
+fn run_document(
+    engine: &Engine,
+    tokens: &[i32],
+    positions: &[(usize, i32)],
+) -> Result<Vec<Vec<f32>>> {
+    // Prefill everything before the first query position; decode the rest.
+    let first_q = positions.first().map(|&(p, _)| p).unwrap_or(tokens.len() - 1);
+    let split = first_q.max(1).min(tokens.len() - 1);
+    let mut seq = engine.prefill(&tokens[..split])?;
+    let mut out = Vec::with_capacity(positions.len());
+    let mut pi = 0usize;
+    // position split-1 logits predict token[split]
+    while pi < positions.len() && positions[pi].0 == split - 1 {
+        out.push(seq.last_logits.clone());
+        pi += 1;
+    }
+    for t in split..tokens.len() {
+        engine.decode_step(&mut [&mut seq], &[tokens[t]])?;
+        while pi < positions.len() && positions[pi].0 == t {
+            out.push(seq.last_logits.clone());
+            pi += 1;
+        }
+    }
+    debug_assert_eq!(out.len(), positions.len());
+    Ok(out)
+}
+
+fn kl_divergence(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    let lsm = |l: &[f32]| -> Vec<f64> {
+        let m = l.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+        let lse = m + l.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>().ln();
+        l.iter().map(|&v| v as f64 - lse).collect()
+    };
+    let lp = lsm(p_logits);
+    let lq = lsm(q_logits);
+    lp.iter().zip(&lq).map(|(&a, &b)| a.exp() * (a - b)).sum()
+}
+
+/// Evaluate one method against a baseline engine over `cfg.n_docs` documents.
+/// `baseline_logits`: pass None to compute the baseline itself; Some(ref)
+/// to reuse logits from the baseline run (same seed => same documents).
+pub fn evaluate(
+    manifest: &Manifest,
+    method_cfg: MethodConfig,
+    cfg: EvalConfig,
+    baseline_logits: Option<&[Vec<Vec<f32>>]>,
+) -> Result<(EvalResult, Vec<Vec<Vec<f32>>>)> {
+    let engine = Engine::new(manifest.clone(), method_cfg)?;
+    let mut gen = CorpusGen::new(cfg.seed);
+    let mut res = EvalResult {
+        method: method_cfg.method.name().to_string(),
+        ..Default::default()
+    };
+    let mut all_logits = Vec::with_capacity(cfg.n_docs);
+    let (mut nll, mut acc, mut agree, mut kl, mut n) = (0.0, 0.0, 0.0, 0.0, 0usize);
+    for d in 0..cfg.n_docs {
+        let doc = gen.document(cfg.n_assign, cfg.n_queries);
+        let mut tokens = vec![manifest.bos];
+        tokens.extend(manifest.encode(&doc.text)?);
+        let positions = query_positions(&tokens, &manifest.charset);
+        let logits = run_document(&engine, &tokens, &positions)?;
+        for (i, (&(_, target), l)) in positions.iter().zip(&logits).enumerate() {
+            nll += -(Engine::log_prob(l, target) as f64);
+            let pred = Engine::argmax(l);
+            acc += (pred == target) as u8 as f64;
+            if let Some(base) = baseline_logits {
+                let bl = &base[d][i];
+                agree += (pred == Engine::argmax(bl)) as u8 as f64;
+                kl += kl_divergence(bl, l);
+            } else {
+                agree += 1.0;
+            }
+            n += 1;
+        }
+        all_logits.push(logits);
+    }
+    res.nll = nll / n as f64;
+    res.accuracy = acc / n as f64;
+    res.agreement = agree / n as f64;
+    res.kl = kl / n as f64;
+    res.n_positions = n;
+    Ok((res, all_logits))
+}
+
+/// Pretty-print a block of results as an aligned table.
+pub fn print_table(title: &str, rows: &[EvalResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<16} {:>8} {:>8} {:>10} {:>10} {:>6}",
+        "method", "NLL", "acc%", "agree%", "KL", "n"
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:>8.4} {:>8.1} {:>10.1} {:>10.4} {:>6}",
+            r.method,
+            r.nll,
+            r.accuracy * 100.0,
+            r.agreement * 100.0,
+            r.kl,
+            r.n_positions
+        );
+    }
+}

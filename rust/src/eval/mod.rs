@@ -1,0 +1,15 @@
+//! Quality-evaluation harness: the substitute for the paper's few-shot task
+//! scores (Tables 1, 2, 7; Fig. 5). See DESIGN.md substitutions.
+//!
+//! Protocol per document: the assignment context is prefilled (Eq. 15
+//! bulk-quantization path), then the query section is teacher-forced through
+//! the decode path, recording for each queried value digit:
+//!
+//! * NLL of the ground-truth digit;
+//! * greedy-prediction correctness (recall accuracy — the task metric);
+//! * top-1 agreement and logit KL against the FP16-baseline run on the
+//!   *same* document (cache-fidelity metrics, meaningful at any length).
+
+pub mod harness;
+
+pub use harness::{evaluate, EvalConfig, EvalResult};

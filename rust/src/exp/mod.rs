@@ -1,0 +1,242 @@
+//! Experiment harnesses: regenerate every paper table/figure
+//! (`innerq exp <id>`). Latency tables (4, 5, 6, Fig. 4) live in
+//! `rust/benches/`; this module owns the quality tables (1, 2, 7), the
+//! bit-width table (3), the window ablation (Fig. 5), the M-sparsity study
+//! (§6.2) and the GPU cost-model cross-check.
+
+use crate::cache::ValSegment;
+use crate::coordinator::Engine;
+use crate::eval::{evaluate, harness::print_table, EvalConfig, EvalResult};
+use crate::quant::{bitwidth, MethodConfig, Mode, QuantMethod};
+use crate::runtime::Manifest;
+use crate::simulator;
+use crate::workload::corpus::CorpusGen;
+use anyhow::Result;
+
+fn methods_table1() -> Vec<QuantMethod> {
+    vec![
+        QuantMethod::BaselineFp16,
+        QuantMethod::Kivi,
+        QuantMethod::KiviSink,
+        QuantMethod::TurboQuant,
+        QuantMethod::InnerQBase,
+        QuantMethod::InnerQHybrid,
+        QuantMethod::InnerQSmall,
+    ]
+}
+
+/// Run a method list over one EvalConfig, reusing the baseline logits.
+fn run_suite(manifest: &Manifest, cfg: EvalConfig, methods: &[QuantMethod]) -> Result<Vec<EvalResult>> {
+    let (base_res, base_logits) =
+        evaluate(manifest, QuantMethod::BaselineFp16.config(), cfg, None)?;
+    let mut rows = vec![base_res];
+    for &m in methods.iter().filter(|&&m| m != QuantMethod::BaselineFp16) {
+        let (r, _) = evaluate(manifest, m.config(), cfg, Some(&base_logits))?;
+        rows.push(r);
+        eprintln!("  [{}] done", m.name());
+    }
+    Ok(rows)
+}
+
+/// Table 1 substitute: short-context quality suite.
+pub fn table1(manifest: &Manifest) -> Result<Vec<EvalResult>> {
+    let cfg = EvalConfig { n_docs: 8, n_assign: 40, n_queries: 10, seed: 2026 };
+    let rows = run_suite(manifest, cfg, &methods_table1())?;
+    print_table("Table 1 (substitute): short-context recall suite (~210 tok)", &rows);
+    Ok(rows)
+}
+
+/// Table 2 substitute: long-context quality suite.
+pub fn table2(manifest: &Manifest) -> Result<Vec<EvalResult>> {
+    let mut all = Vec::new();
+    for (name, n_assign) in [("2k-token docs", 380usize), ("1k-token docs", 190)] {
+        let cfg = EvalConfig { n_docs: 4, n_assign, n_queries: 8, seed: 1126 };
+        let rows = run_suite(manifest, cfg, &methods_table1())?;
+        print_table(&format!("Table 2 (substitute): {name}"), &rows);
+        all.extend(rows);
+    }
+    Ok(all)
+}
+
+/// Table 3: effective bit-width accounting (exact reproduction).
+pub fn table3() {
+    println!("\n== Table 3: per-number effective bit-width (G=32, d_h=128) ==");
+    println!(
+        "{:<16} {:>6} {:>7} {:>6} {:>6} {:>9}",
+        "method", "K int", "K ovh", "V int", "V ovh", "effective"
+    );
+    for row in bitwidth::table3() {
+        println!(
+            "{:<16} {:>6.0} {:>7.2} {:>6.0} {:>6.2} {:>9.2}",
+            row.method.name(),
+            row.key.integer,
+            row.key.total() - row.key.integer,
+            row.val.integer,
+            row.val.total() - row.val.integer,
+            row.effective()
+        );
+    }
+    println!("(paper: kivi 3.0, turboquant 3.75, innerq_base 3.5, innerq_hybrid 3.25, innerq_small 3.0)");
+}
+
+/// Table 7: quantization-mode ablation on the recall suite.
+pub fn table7(manifest: &Manifest) -> Result<()> {
+    let cfg = EvalConfig { n_docs: 6, n_assign: 40, n_queries: 10, seed: 707 };
+    let (base_res, base_logits) =
+        evaluate(manifest, QuantMethod::BaselineFp16.config(), cfg, None)?;
+    for val_bits in [3u8, 2] {
+        let mut rows = vec![base_res.clone()];
+        for (label, key_mode, val_mode) in [
+            ("K:Sym,V:Sym", Mode::Sym, Mode::Sym),
+            ("K:Sym,V:Asym", Mode::Sym, Mode::Asym),
+            ("K:Asym,V:Sym", Mode::Asym, Mode::Sym),
+            ("K:Asym,V:Asym", Mode::Asym, Mode::Asym),
+            ("K:Sym,V:Hybrid", Mode::Sym, Mode::Hybrid),
+        ] {
+            let mut mc = QuantMethod::InnerQBase.config();
+            mc.key_mode = key_mode;
+            mc.val_mode = val_mode;
+            mc.val_bits = val_bits;
+            let (mut r, _) = evaluate(manifest, mc, cfg, Some(&base_logits))?;
+            r.method = format!("{label}");
+            rows.push(r);
+            eprintln!("  [K:3,V:{val_bits} {label}] done");
+        }
+        print_table(
+            &format!("Table 7 (substitute): quantization modes, K:3,V:{val_bits} (inner groups)"),
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 5: high-precision window split ablation (w_sink + w_recent = 128).
+pub fn fig5(manifest: &Manifest) -> Result<()> {
+    let cfg = EvalConfig { n_docs: 6, n_assign: 40, n_queries: 10, seed: 55 };
+    let (_, base_logits) = evaluate(manifest, QuantMethod::BaselineFp16.config(), cfg, None)?;
+    println!("\n== Fig. 5 (substitute): w_sink sweep, w_recent = 128 - w_sink ==");
+    println!("{:<16} {:>7} {:>8} {:>8} {:>10}", "method", "w_sink", "NLL", "acc%", "agree%");
+    for m in [
+        QuantMethod::Kivi,
+        QuantMethod::InnerQBase,
+        QuantMethod::InnerQHybrid,
+        QuantMethod::InnerQSmall,
+    ] {
+        for w_sink in [0usize, 16, 32, 64, 96, 128] {
+            let mut mc = m.config();
+            mc.w_sink = w_sink;
+            mc.w_recent = 128 - w_sink;
+            let (r, _) = evaluate(manifest, mc, cfg, Some(&base_logits))?;
+            println!(
+                "{:<16} {:>7} {:>8.4} {:>8.1} {:>10.1}",
+                m.name(),
+                w_sink,
+                r.nll,
+                r.accuracy * 100.0,
+                r.agreement * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+/// §6.2: measured sparsity of the hybrid mask M on real cache traffic.
+pub fn msparsity(manifest: &Manifest) -> Result<()> {
+    let engine = Engine::new(manifest.clone(), QuantMethod::InnerQHybrid.config())?;
+    let mut gen = CorpusGen::new(99);
+    let mut asym = 0usize;
+    let mut total = 0usize;
+    for _ in 0..6 {
+        let doc = gen.document(120, 4);
+        let mut tokens = vec![manifest.bos];
+        tokens.extend(manifest.encode(&doc.text)?);
+        let mut seq = engine.prefill(&tokens[..tokens.len() - 1])?;
+        engine.decode_step(&mut [&mut seq], &[*tokens.last().unwrap()])?;
+        for layer in &seq.caches {
+            for hc in layer {
+                if let ValSegment::Inner(s) = &hc.qv {
+                    for p in &s.params {
+                        total += 1;
+                        asym += p.is_asym() as usize;
+                    }
+                }
+            }
+        }
+    }
+    let sparsity = 1.0 - asym as f64 / total.max(1) as f64;
+    println!("\n== §6.2: hybrid mask M on real cache traffic ==");
+    println!("groups: {total}, asymmetric: {asym}, sparsity (fraction symmetric): {sparsity:.3}");
+    println!("(paper: ~0.99 average; distribution-dependent — see EXPERIMENTS.md)");
+    Ok(())
+}
+
+/// GPU cost-model cross-check of Tables 4 / Fig. 4.
+pub fn simulate() {
+    let m = simulator::GpuModel::default();
+    let lengths = [512usize, 1024, 2048, 4096, 8192, 16384, 32768];
+    println!("\n== GPU cost model: predicted fused-kernel totals (µs), Llama-3.1-8B layer ==");
+    print!("{:<16}", "method");
+    for n in lengths {
+        print!("{n:>8}");
+    }
+    println!();
+    for method in QuantMethod::ALL {
+        if method == QuantMethod::KiviSink {
+            continue; // same kernels as KIVI
+        }
+        print!("{:<16}", method.name());
+        for n in lengths {
+            let (_, _, total) = simulator::table4_row(&m, method, n);
+            print!("{total:>8.0}");
+        }
+        println!();
+    }
+    println!("\nspeedup of innerq_base @32768:");
+    let (_, _, base) = simulator::table4_row(&m, QuantMethod::InnerQBase, 32768);
+    for other in [QuantMethod::BaselineFp16, QuantMethod::Kivi, QuantMethod::TurboQuant] {
+        let (_, _, t) = simulator::table4_row(&m, other, 32768);
+        println!("  vs {:<14} {:.2}x", other.name(), t / base);
+    }
+}
+
+/// Parse a `MethodConfig` override of the form used by the CLI, e.g.
+/// `--method innerq_base`.
+pub fn method_config(name: &str) -> Option<MethodConfig> {
+    QuantMethod::parse(name).map(|m| m.config())
+}
+
+/// Quick textual description of a config (logging).
+pub fn describe(cfg: &MethodConfig) -> String {
+    format!(
+        "{} K:{}b/{:?}/{:?} V:{}b/{:?}/{:?} sink={} recent={} norm={}",
+        cfg.method.name(),
+        cfg.key_bits,
+        cfg.key_mode,
+        cfg.key_grouping,
+        cfg.val_bits,
+        cfg.val_mode,
+        cfg.val_grouping,
+        cfg.w_sink,
+        cfg.w_recent,
+        cfg.key_norm
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_prints_and_matches() {
+        table3(); // smoke (assertions live in quant::bitwidth)
+    }
+
+    #[test]
+    fn method_config_parsing() {
+        assert!(method_config("innerq_base").is_some());
+        assert!(method_config("bogus").is_none());
+        let c = method_config("kivi").unwrap();
+        assert_eq!(c.key_grouping, crate::quant::Grouping::Outer);
+        assert!(describe(&c).contains("kivi"));
+    }
+}

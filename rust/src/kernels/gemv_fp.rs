@@ -1,0 +1,94 @@
+//! Non-quantized GEMV baseline ("Baseline (FP16)" rows of Table 4).
+//!
+//! Cache rows are f32 (the f32-compute stand-in for FP16 storage — see
+//! DESIGN.md substitutions). These kernels set the baseline latency that the
+//! quantized kernels' speedups are measured against.
+
+/// Scores: `out[j] = q · keys[j]` for `n` rows of length `d_h`.
+pub fn qk_fp(q: &[f32], keys: &[f32], d_h: usize, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d_h);
+    debug_assert_eq!(keys.len(), out.len() * d_h);
+    for (o, row) in out.iter_mut().zip(keys.chunks_exact(d_h)) {
+        // 16-lane split accumulation (one AVX-512 FMA per 16 elements).
+        let mut acc = [0f32; 16];
+        let mut i = 0;
+        while i + 16 <= d_h {
+            for j in 0..16 {
+                acc[j] += q[i + j] * row[i + j];
+            }
+            i += 16;
+        }
+        let mut tail = 0.0f32;
+        while i < d_h {
+            tail += q[i] * row[i];
+            i += 1;
+        }
+        *o = acc.iter().sum::<f32>() + tail;
+    }
+}
+
+/// Context accumulation: `out[c] += sum_t p[t] * vals[t][c]`.
+/// `vals` is `p.len()` rows of `d_h`, row-major (token-major, as a
+/// non-quantized cache stores them).
+pub fn pv_fp(p: &[f32], vals: &[f32], d_h: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), d_h);
+    debug_assert_eq!(vals.len(), p.len() * d_h);
+    for (&w, row) in p.iter().zip(vals.chunks_exact(d_h)) {
+        if w == 0.0 {
+            continue;
+        }
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += w * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{check, normal_vec, PropCfg};
+
+    #[test]
+    fn qk_matches_naive() {
+        check("qk_fp == naive", PropCfg::default(), |rng, _| {
+            let d_h = 64;
+            let n = 1 + rng.next_range(50);
+            let q = normal_vec(rng, d_h, 1.0, 0.0);
+            let keys = normal_vec(rng, n * d_h, 1.0, 0.0);
+            let mut out = vec![0f32; n];
+            qk_fp(&q, &keys, d_h, &mut out);
+            for j in 0..n {
+                let want: f32 =
+                    (0..d_h).map(|c| q[c] * keys[j * d_h + c]).sum();
+                assert!((out[j] - want).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn pv_matches_naive_and_accumulates() {
+        check("pv_fp == naive", PropCfg::default(), |rng, _| {
+            let d_h = 64;
+            let n = 1 + rng.next_range(50);
+            let p = normal_vec(rng, n, 1.0, 0.0);
+            let vals = normal_vec(rng, n * d_h, 1.0, 0.0);
+            let mut out = vec![1.0f32; d_h]; // nonzero: verify +=
+            pv_fp(&p, &vals, d_h, &mut out);
+            for c in 0..d_h {
+                let want: f32 =
+                    1.0 + (0..n).map(|t| p[t] * vals[t * d_h + c]).sum::<f32>();
+                assert!((out[c] - want).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn odd_dh_tail_handled() {
+        let d_h = 7;
+        let q = vec![1.0f32; d_h];
+        let keys: Vec<f32> = (0..d_h).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 1];
+        qk_fp(&q, &keys, d_h, &mut out);
+        assert_eq!(out[0], 21.0);
+    }
+}

@@ -1,0 +1,310 @@
+//! InnerQ fused dequantize-GEMV (§4.4): quantization groups run along the
+//! *inner* (reduction) dimension, so the kernel accumulates a group-partial
+//! dot product over raw codes and applies the group's scale **once per
+//! group** instead of once per element:
+//!
+//! `score_j = Σ_g [ s_{j,g} · (Σ_i q_i·code_i) + zeff_{j,g} · (Σ_i q_i) ]`
+//!
+//! The `Σ_i q_i` prefix sums are computed once per call, so asymmetric /
+//! hybrid groups cost one extra FMA per group, not per element — this is the
+//! data-reuse property the paper gets from inner-dimension grouping on GPU
+//! (one scale load per compute tile) expressed in CPU-register form.
+
+use crate::quant::packing::{packed_len, unpack32};
+
+/// Key-cache scores (Eq. 3), InnerQ layout: per-token groups along `d_h`.
+///
+/// * `codes`: `n_tokens` rows, each `d_h/32` packed groups of 32 codes;
+/// * `params`: `n_tokens * d_h/32` precomputed `(scale, zeff)` pairs,
+///   row-major (see [`crate::kernels::zeff_params`]).
+///
+/// Writes `out[j] = q · dequant(K_j)` for each quantized token row.
+pub fn qk_inner(
+    q: &[f32],
+    codes: &[u8],
+    params: &[(f32, f32)],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    debug_assert_eq!(q.len(), d_h);
+    debug_assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    debug_assert!(codes.len() >= n * groups * gbytes);
+    debug_assert!(params.len() >= n * groups);
+
+    // Per-group query prefix sums (for the zeff term), once per call.
+    let mut qsum = [0f32; 64]; // supports d_h up to 2048
+    for g in 0..groups {
+        qsum[g] = q[g * 32..(g + 1) * 32].iter().sum();
+    }
+
+    let row_bytes = groups * gbytes;
+    let mut buf = [0u8; 32];
+    for j in 0..n {
+        let row = &codes[j * row_bytes..(j + 1) * row_bytes];
+        let prow = &params[j * groups..(j + 1) * groups];
+        // Row-level lane accumulator: each group's partial dot is scaled in
+        // lane space (one vector multiply-add per group), so only ONE
+        // horizontal reduction happens per token row — the CPU-register form
+        // of "load the scale once per group and keep accumulating".
+        let mut row_acc = [0f32; 16];
+        let mut zterm = 0.0f32;
+        for g in 0..groups {
+            unpack32(&row[g * gbytes..], bits, &mut buf);
+            let qg = &q[g * 32..(g + 1) * 32];
+            // 16-lane split accumulation: breaks the strict-FP reduction
+            // dependency chain so the loop vectorizes (one vcvt + vfma per
+            // 16 codes on AVX-512).
+            let mut acc = [0f32; 16];
+            for half in 0..2 {
+                let (qh, bh) = (&qg[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
+                for i in 0..16 {
+                    acc[i] += qh[i] * bh[i] as f32;
+                }
+            }
+            let (s, z) = prow[g];
+            for i in 0..16 {
+                row_acc[i] += s * acc[i];
+            }
+            zterm += z * qsum[g];
+        }
+        out[j] = hsum16(&row_acc) + zterm;
+    }
+}
+
+/// Pairwise horizontal sum of 16 lanes (vectorizer-friendly).
+#[inline(always)]
+fn hsum16(a: &[f32; 16]) -> f32 {
+    let mut s8 = [0f32; 8];
+    for i in 0..8 {
+        s8[i] = a[i] + a[i + 8];
+    }
+    let s4 = [s8[0] + s8[4], s8[1] + s8[5], s8[2] + s8[6], s8[3] + s8[7]];
+    (s4[0] + s4[2]) + (s4[1] + s4[3])
+}
+
+/// Value-cache context accumulation (Eq. 5), InnerQ layout: per-channel
+/// groups along the token axis. One *chunk* covers 32 consecutive tokens.
+///
+/// Because the scale of channel `c` is constant across the chunk's tokens
+/// (the defining property of inner grouping for V), the codes are stored
+/// **token-major** and the kernel runs reduction-free: each token row is a
+/// broadcast-`p[t]` vector FMA over channel lanes, and the per-channel scale
+/// is applied once per chunk at the end. (The Pallas/TPU kernel keeps the
+/// channel-major sublane layout — see DESIGN.md §Hardware-Adaptation.)
+///
+/// * `chunk_codes`: 32 token rows of packed `d_h` codes;
+/// * `params`: `d_h` (scale, zeff) pairs (one per channel group);
+/// * `p`: the 32 softmax weights for this chunk's tokens.
+///
+/// Accumulates `out[c] += Σ_t p[t] · dequant(V[t][c])`.
+pub fn pv_inner_chunk(
+    p: &[f32],
+    chunk_codes: &[u8],
+    params: &[(f32, f32)],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), 32);
+    debug_assert_eq!(out.len(), d_h);
+    debug_assert_eq!(params.len(), d_h);
+    debug_assert!(d_h <= 512, "stack accumulator sized for d_h <= 512");
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    debug_assert!(chunk_codes.len() >= 32 * row_bytes);
+    let psum: f32 = p.iter().sum();
+
+    // Unscaled accumulation: acc[c] = sum_t p[t] * code[t][c].
+    let mut acc = [0f32; 512];
+    let acc = &mut acc[..d_h];
+    let mut buf = [0u8; 32];
+    for (t, &w) in p.iter().enumerate() {
+        let row = &chunk_codes[t * row_bytes..(t + 1) * row_bytes];
+        for g in 0..d_h / 32 {
+            unpack32(&row[g * gbytes..], bits, &mut buf);
+            let ag = &mut acc[g * 32..(g + 1) * 32];
+            for i in 0..32 {
+                ag[i] += w * buf[i] as f32;
+            }
+        }
+    }
+    // One scale application per channel per chunk (1/32 per code).
+    for c in 0..d_h {
+        let (s, z) = params[c];
+        out[c] += s * acc[c] + z * psum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::group::{quantize, Mode};
+    use crate::quant::packing::pack;
+    use crate::util::ptest::{check, normal_vec, PropCfg};
+
+    use crate::quant::GroupParams;
+
+    /// Quantize an n x d_h matrix in the InnerQ key layout.
+    pub fn build_key_rows(
+        vals: &[f32],
+        d_h: usize,
+        bits: u8,
+        mode: Mode,
+    ) -> (Vec<u8>, Vec<GroupParams>) {
+        let mut codes = Vec::new();
+        let mut params = Vec::new();
+        for row in vals.chunks_exact(d_h) {
+            for g in row.chunks_exact(32) {
+                let mut raw = [0u8; 32];
+                params.push(quantize(mode, g, bits, &mut raw));
+                pack(&raw, bits, &mut codes);
+            }
+        }
+        (codes, params)
+    }
+
+    /// Quantize 32 tokens x d_h values (token-major input) into one
+    /// token-major InnerQ value chunk (groups run along tokens per channel).
+    pub fn build_val_chunk(
+        vals: &[f32],
+        d_h: usize,
+        bits: u8,
+        mode: Mode,
+    ) -> (Vec<u8>, Vec<GroupParams>) {
+        assert_eq!(vals.len(), 32 * d_h);
+        let mut params = Vec::new();
+        let mut col = [0f32; 32];
+        let mut ccodes = [0u8; 32];
+        let mut raw = vec![0u8; 32 * d_h];
+        for c in 0..d_h {
+            for t in 0..32 {
+                col[t] = vals[t * d_h + c];
+            }
+            params.push(quantize(mode, &col, bits, &mut ccodes));
+            for t in 0..32 {
+                raw[t * d_h + c] = ccodes[t];
+            }
+        }
+        let mut codes = Vec::new();
+        for t in 0..32 {
+            pack(&raw[t * d_h..(t + 1) * d_h], bits, &mut codes);
+        }
+        (codes, params)
+    }
+
+    /// Reference: dequantize-then-dot, straight from the group math.
+    fn qk_reference(
+        q: &[f32],
+        codes: &[u8],
+        params: &[GroupParams],
+        bits: u8,
+        d_h: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        use crate::quant::group::dequantize;
+        use crate::quant::packing::unpack;
+        let groups = d_h / 32;
+        let gbytes = packed_len(32, bits);
+        let mut out = vec![0f32; n];
+        for j in 0..n {
+            let mut k = vec![0f32; d_h];
+            for g in 0..groups {
+                let mut raw = vec![0u8; 32];
+                unpack(&codes[(j * groups + g) * gbytes..], bits, 32, &mut raw);
+                dequantize(&raw, params[j * groups + g], bits, &mut k[g * 32..(g + 1) * 32]);
+            }
+            out[j] = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    #[test]
+    fn qk_inner_matches_dequant_then_dot() {
+        check("qk_inner == dequant+dot", PropCfg::default(), |rng, case| {
+            let d_h = if case % 2 == 0 { 64 } else { 128 };
+            let n = 1 + rng.next_range(40);
+            let mode = *crate::util::ptest::choose(rng, &[Mode::Sym, Mode::Asym, Mode::Hybrid]);
+            let bits = *crate::util::ptest::choose(rng, &[2u8, 3, 4]);
+            let q = normal_vec(rng, d_h, 1.0, 0.0);
+            let keys = normal_vec(rng, n * d_h, 1.0, 0.1);
+            let (codes, params) = build_key_rows(&keys, d_h, bits, mode);
+            let pf = crate::kernels::zeff_params(&params, bits);
+            let mut out = vec![0f32; n];
+            qk_inner(&q, &codes, &pf, bits, d_h, &mut out);
+            let want = qk_reference(&q, &codes, &params, bits, d_h, n);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-2 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn qk_inner_close_to_unquantized_at_4_bits() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let d_h = 128;
+        let n = 64;
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.0);
+        let (codes, params) = build_key_rows(&keys, d_h, 4, Mode::Sym);
+        let pf = crate::kernels::zeff_params(&params, 4);
+        let mut out = vec![0f32; n];
+        qk_inner(&q, &codes, &pf, 4, d_h, &mut out);
+        let mut exact = vec![0f32; n];
+        crate::kernels::gemv_fp::qk_fp(&q, &keys, d_h, &mut exact);
+        // 4-bit sym: step = amax/7; dot error is a random walk over d_h terms.
+        let rel = crate::util::stats::rel_l2(&out, &exact);
+        assert!(rel < 0.12, "rel err {rel}");
+    }
+
+    #[test]
+    fn pv_inner_matches_dequant_then_dot() {
+        check("pv_inner == dequant+dot", PropCfg::default(), |rng, _| {
+            let d_h = 64;
+            let mode = *crate::util::ptest::choose(rng, &[Mode::Sym, Mode::Asym, Mode::Hybrid]);
+            let bits = *crate::util::ptest::choose(rng, &[2u8, 3]);
+            let vals = normal_vec(rng, 32 * d_h, 1.0, 0.1);
+            let p = normal_vec(rng, 32, 0.3, 0.0);
+            let (codes, params) = build_val_chunk(&vals, d_h, bits, mode);
+            let pf = crate::kernels::zeff_params(&params, bits);
+            let mut out = vec![0f32; d_h];
+            pv_inner_chunk(&p, &codes, &pf, bits, d_h, &mut out);
+            // reference: dequantize token rows (value = s*raw + zeff) and
+            // accumulate with p
+            use crate::quant::packing::unpack;
+            let gbytes = packed_len(32, bits);
+            let row_bytes = (d_h / 32) * gbytes;
+            let mut want = vec![0f32; d_h];
+            for t in 0..32 {
+                let mut raw = vec![0u8; d_h];
+                unpack(&codes[t * row_bytes..], bits, d_h, &mut raw);
+                for c in 0..d_h {
+                    let (s, z) = pf[c];
+                    want[c] += p[t] * (s * raw[c] as f32 + z);
+                }
+            }
+            for c in 0..d_h {
+                assert!((out[c] - want[c]).abs() < 1e-3, "c={c}: {} vs {}", out[c], want[c]);
+            }
+        });
+    }
+
+    #[test]
+    fn value_chunk_transposes_correctly() {
+        // Token t, channel c must land at channel-row c, position t.
+        let d_h = 32;
+        let mut vals = vec![0f32; 32 * d_h];
+        vals[5 * d_h + 7] = 3.0; // token 5, channel 7
+        let (codes, params) = build_val_chunk(&vals, d_h, 3, Mode::Sym);
+        let pf = crate::kernels::zeff_params(&params, 3);
+        let mut p = vec![0f32; 32];
+        p[5] = 1.0;
+        let mut out = vec![0f32; d_h];
+        pv_inner_chunk(&p, &codes, &pf, 3, d_h, &mut out);
+        assert!((out[7] - 3.0).abs() < 0.01, "out[7]={}", out[7]);
+        assert!(out.iter().enumerate().all(|(c, &v)| c == 7 || v.abs() < 1e-4));
+    }
+}

@@ -1,0 +1,239 @@
+//! KIVI-layout fused dequantize-GEMV: quantization groups run along the
+//! *outer* (output) dimension.
+//!
+//! For the key cache this means per-channel groups spanning 32 tokens: every
+//! dot product `q·K_j` needs a *different* scale for each of the `d_h`
+//! channels. The kernel hoists what it can — `q_c·s_c` and the zero term are
+//! precomputed per 32-token chunk — but that hoisted vector is `d_h` wide
+//! (vs. `d_h/32` scales in the inner layout) and must be re-materialized for
+//! every chunk. On a GPU the same structure shows up as per-lane scale loads
+//! with no reuse across the warp (§4.4, Fig. 1a); on CPU it shows up as the
+//! extra `qs`/`zs` buffer traffic and per-chunk setup measured in Table 4.
+
+use crate::quant::packing::{packed_len, unpack32};
+
+/// Key-cache scores, KIVI layout. One chunk = 32 consecutive tokens:
+///
+/// * `chunk_codes`: 32 token rows × `d_h` codes, packed row-major;
+/// * `params`: `d_h` group params (channel `c` shared by the chunk's tokens);
+/// * `out`: scores for the chunk's `n_rows` tokens (≤ 32; tail chunks are
+///   shorter only transiently during bulk prefill quantization).
+///
+/// `scratch` must hold `d_h` f32; it carries the hoisted `q_c·s_c` products.
+pub fn qk_outer_chunk(
+    q: &[f32],
+    chunk_codes: &[u8],
+    params: &[(f32, f32)],
+    bits: u8,
+    d_h: usize,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let n_rows = out.len();
+    debug_assert!(n_rows <= 32);
+    debug_assert_eq!(q.len(), d_h);
+    debug_assert_eq!(params.len(), d_h);
+    debug_assert!(scratch.len() >= d_h);
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    debug_assert!(chunk_codes.len() >= n_rows * row_bytes);
+
+    // Hoist per-channel scale/zero into query space: one pass over d_h.
+    let mut zacc = 0.0f32;
+    for c in 0..d_h {
+        let (s, z) = params[c];
+        scratch[c] = q[c] * s;
+        zacc += q[c] * z;
+    }
+
+    let mut buf = [0u8; 32];
+    for (j, o) in out.iter_mut().enumerate() {
+        let row = &chunk_codes[j * row_bytes..(j + 1) * row_bytes];
+        // 16-lane split accumulation (see gemv_inner): vectorizable FMA.
+        let mut acc = [0f32; 16];
+        for g in 0..d_h / 32 {
+            unpack32(&row[g * gbytes..], bits, &mut buf);
+            let qs = &scratch[g * 32..(g + 1) * 32];
+            for half in 0..2 {
+                let (qh, bh) =
+                    (&qs[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
+                for i in 0..16 {
+                    acc[i] += qh[i] * bh[i] as f32;
+                }
+            }
+        }
+        *o = acc.iter().sum::<f32>() + zacc;
+    }
+}
+
+/// Value-cache context accumulation, KIVI layout: per-token groups along the
+/// channel axis. One call processes one token row (KIVI quantizes values one
+/// token at a time):
+///
+/// * `row_codes`: `d_h` packed codes for this token;
+/// * `params`: `d_h/32` group params for this token's channel groups;
+/// * `w`: this token's softmax weight.
+///
+/// Accumulates `out[c] += w * dequant(V[t][c])`.
+pub fn pv_outer_row(
+    w: f32,
+    row_codes: &[u8],
+    params: &[(f32, f32)],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), d_h);
+    debug_assert_eq!(params.len(), d_h / 32);
+    let gbytes = packed_len(32, bits);
+    let mut buf = [0u8; 32];
+    for g in 0..d_h / 32 {
+        unpack32(&row_codes[g * gbytes..], bits, &mut buf);
+        let (s, z) = params[g];
+        let (a, b) = (w * s, w * z);
+        let og = &mut out[g * 32..(g + 1) * 32];
+        for i in 0..32 {
+            og[i] += a * buf[i] as f32 + b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::group::{dequantize, quantize, Mode};
+    use crate::quant::GroupParams;
+    use crate::quant::packing::{pack, unpack};
+    use crate::util::ptest::{check, choose, normal_vec, PropCfg};
+
+    /// Build one KIVI key chunk from 32 tokens x d_h values (token-major):
+    /// groups run along the token axis per channel; codes stay token-major.
+    pub fn build_key_chunk(
+        vals: &[f32],
+        d_h: usize,
+        bits: u8,
+        mode: Mode,
+    ) -> (Vec<u8>, Vec<GroupParams>) {
+        assert_eq!(vals.len(), 32 * d_h);
+        let mut params = vec![GroupParams::default(); d_h];
+        let mut raw = vec![0u8; 32 * d_h]; // token-major raw codes
+        let mut col = [0f32; 32];
+        let mut ccodes = [0u8; 32];
+        for c in 0..d_h {
+            for t in 0..32 {
+                col[t] = vals[t * d_h + c];
+            }
+            params[c] = quantize(mode, &col, bits, &mut ccodes);
+            for t in 0..32 {
+                raw[t * d_h + c] = ccodes[t];
+            }
+        }
+        let mut codes = Vec::new();
+        for t in 0..32 {
+            pack(&raw[t * d_h..(t + 1) * d_h], bits, &mut codes);
+        }
+        (codes, params)
+    }
+
+    /// Build one KIVI value row: per-token groups along channels.
+    pub fn build_val_row(
+        row: &[f32],
+        bits: u8,
+        mode: Mode,
+    ) -> (Vec<u8>, Vec<GroupParams>) {
+        let mut codes = Vec::new();
+        let mut params = Vec::new();
+        for g in row.chunks_exact(32) {
+            let mut raw = [0u8; 32];
+            params.push(quantize(mode, g, bits, &mut raw));
+            pack(&raw, bits, &mut codes);
+        }
+        (codes, params)
+    }
+
+    #[test]
+    fn qk_outer_matches_dequant_then_dot() {
+        check("qk_outer == dequant+dot", PropCfg::default(), |rng, _| {
+            let d_h = 128;
+            let bits = *choose(rng, &[2u8, 3, 4]);
+            let mode = *choose(rng, &[Mode::Sym, Mode::Asym]);
+            let q = normal_vec(rng, d_h, 1.0, 0.0);
+            let keys = normal_vec(rng, 32 * d_h, 1.0, 0.1);
+            let (codes, params) = build_key_chunk(&keys, d_h, bits, mode);
+            let pf = crate::kernels::zeff_params(&params, bits);
+            let mut scratch = vec![0f32; d_h];
+            let mut out = vec![0f32; 32];
+            qk_outer_chunk(&q, &codes, &pf, bits, d_h, &mut scratch, &mut out);
+            // reference: per token, dequantize channel-wise and dot
+            let gbytes = packed_len(32, bits);
+            for j in 0..32 {
+                let mut raw = vec![0u8; d_h];
+                for g in 0..d_h / 32 {
+                    unpack(
+                        &codes[j * (d_h / 32) * gbytes + g * gbytes..],
+                        bits,
+                        32,
+                        &mut raw[g * 32..(g + 1) * 32],
+                    );
+                }
+                let want: f32 = (0..d_h)
+                    .map(|c| {
+                        let mut v = [0f32];
+                        dequantize(&raw[c..c + 1], params[c], bits, &mut v);
+                        q[c] * v[0]
+                    })
+                    .sum();
+                assert!(
+                    (out[j] - want).abs() < 2e-2 * want.abs().max(1.0),
+                    "j={j}: {} vs {want}",
+                    out[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn kivi_isolates_channel_outliers() {
+        // The motivating KIVI property: a persistent channel outlier stays in
+        // one (channel) group and does not blow up other channels' scales.
+        let d_h = 64;
+        let mut keys = vec![0.1f32; 32 * d_h];
+        for t in 0..32 {
+            keys[t * d_h + 3] = 50.0; // hot channel 3
+        }
+        let (codes, params) = build_key_chunk(&keys, d_h, 2, Mode::Asym);
+        // channel 7's group must still resolve 0.1 well
+        let gbytes = packed_len(32, 2);
+        let mut raw = vec![0u8; d_h];
+        unpack(&codes[0..], 2, 32, &mut raw[0..32]);
+        unpack(&codes[gbytes..], 2, 32, &mut raw[32..64]);
+        let mut v = [0f32];
+        dequantize(&raw[7..8], params[7], 2, &mut v);
+        assert!((v[0] - 0.1).abs() < 1e-3, "channel 7 dequant {}", v[0]);
+    }
+
+    #[test]
+    fn pv_outer_matches_dequant_then_dot() {
+        check("pv_outer == dequant+dot", PropCfg::default(), |rng, _| {
+            let d_h = 64;
+            let bits = *choose(rng, &[2u8, 3]);
+            let row = normal_vec(rng, d_h, 1.0, 0.1);
+            let w = rng.next_f32();
+            let (codes, params) = build_val_row(&row, bits, Mode::Asym);
+            let pf = crate::kernels::zeff_params(&params, bits);
+            let mut out = vec![0f32; d_h];
+            pv_outer_row(w, &codes, &pf, bits, d_h, &mut out);
+            let gbytes = packed_len(32, bits);
+            for g in 0..d_h / 32 {
+                let mut raw = vec![0u8; 32];
+                unpack(&codes[g * gbytes..], bits, 32, &mut raw);
+                let mut deq = vec![0f32; 32];
+                dequantize(&raw, params[g], bits, &mut deq);
+                for i in 0..32 {
+                    let want = w * deq[i];
+                    assert!((out[g * 32 + i] - want).abs() < 1e-4);
+                }
+            }
+        });
+    }
+}

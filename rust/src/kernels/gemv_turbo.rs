@@ -1,0 +1,161 @@
+//! TurboQuant fused dequantize-GEMV: scores and context are computed in the
+//! *rotated* basis (the rotation is orthogonal, so `<q,k> = <Rq,Rk>`), and
+//! every dequantized element comes from a codebook lookup. The lookup is the
+//! latency cost the paper measures against InnerQ's multiply-only dequant
+//! (§5.3: "the codebook lookup requires multiple accesses to CUDA shared
+//! memory"); on CPU it is an in-register table index that still breaks the
+//! pure-FMA pipeline.
+
+use crate::quant::packing::{packed_len, unpack32};
+use crate::quant::turbo::TurboToken;
+
+/// Key-cache scores: `out[j] = norm_j * Σ_c q_rot[c] * CB[code_{j,c}]`.
+/// `q_rot` must already be rotated with the segment's rotation.
+pub fn qk_turbo(
+    q_rot: &[f32],
+    tokens: &[TurboToken],
+    codebook: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), tokens.len());
+    debug_assert_eq!(d_h % 32, 0);
+    let gbytes = packed_len(32, bits);
+    let mut buf = [0u8; 32];
+    for (o, tok) in out.iter_mut().zip(tokens) {
+        // split accumulators (see gemv_inner); the codebook gather itself
+        // stays a per-element lookup — that is TurboQuant's structural cost.
+        let mut acc = [0f32; 16];
+        for g in 0..d_h / 32 {
+            unpack32(&tok.codes[g * gbytes..], bits, &mut buf);
+            let qg = &q_rot[g * 32..(g + 1) * 32];
+            for half in 0..2 {
+                let (qh, bh) =
+                    (&qg[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
+                for i in 0..16 {
+                    acc[i] += qh[i] * codebook[bh[i] as usize];
+                }
+            }
+        }
+        *o = acc.iter().sum::<f32>() * tok.norm;
+    }
+}
+
+/// Value-cache accumulation in the rotated basis:
+/// `out_rot[c] += Σ_t p[t] * norm_t * CB[code_{t,c}]`.
+/// The caller un-rotates `out_rot` once per decode step (see
+/// `cache::segments::TurboValSegment::finalize`).
+pub fn pv_turbo(
+    p: &[f32],
+    tokens: &[TurboToken],
+    codebook: &[f32],
+    bits: u8,
+    d_h: usize,
+    out_rot: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), tokens.len());
+    debug_assert_eq!(out_rot.len(), d_h);
+    let gbytes = packed_len(32, bits);
+    let mut buf = [0u8; 32];
+    for (&w, tok) in p.iter().zip(tokens) {
+        let a = w * tok.norm;
+        if a == 0.0 {
+            continue;
+        }
+        for g in 0..d_h / 32 {
+            unpack32(&tok.codes[g * gbytes..], bits, &mut buf);
+            let og = &mut out_rot[g * 32..(g + 1) * 32];
+            for i in 0..32 {
+                og[i] += a * codebook[buf[i] as usize];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::turbo::{codebook, dequantize_rotated, quantize_token, Rotation};
+    use crate::util::ptest::{check, normal_vec, PropCfg};
+
+    #[test]
+    fn qk_turbo_matches_dequant_then_dot() {
+        check("qk_turbo == dequant+dot", PropCfg::default(), |rng, _| {
+            let d_h = 128;
+            let bits = 4u8;
+            let rot = Rotation::new(d_h, 42);
+            let n = 1 + rng.next_range(20);
+            let keys: Vec<Vec<f32>> = (0..n).map(|_| normal_vec(rng, d_h, 1.0, 0.05)).collect();
+            let tokens: Vec<_> = keys.iter().map(|k| quantize_token(&rot, k, bits)).collect();
+            let q = normal_vec(rng, d_h, 1.0, 0.0);
+            let mut q_rot = q.clone();
+            rot.apply(&mut q_rot);
+            let mut out = vec![0f32; n];
+            qk_turbo(&q_rot, &tokens, codebook(bits), bits, d_h, &mut out);
+            for j in 0..n {
+                let mut deq = vec![0f32; d_h];
+                dequantize_rotated(&tokens[j], bits, d_h, &mut deq);
+                let want: f32 = q_rot.iter().zip(&deq).map(|(a, b)| a * b).sum();
+                assert!((out[j] - want).abs() < 1e-3 * want.abs().max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn scores_approximate_unquantized_dot() {
+        // End-to-end: quantized rotated scores track the true q·k.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let d_h = 128;
+        let rot = Rotation::new(d_h, 42);
+        let n = 128;
+        let keys: Vec<Vec<f32>> = (0..n).map(|_| normal_vec(&mut rng, d_h, 1.0, 0.0)).collect();
+        let tokens: Vec<_> = keys.iter().map(|k| quantize_token(&rot, k, 4)).collect();
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let mut q_rot = q.clone();
+        rot.apply(&mut q_rot);
+        let mut out = vec![0f32; n];
+        qk_turbo(&q_rot, &tokens, codebook(4), 4, d_h, &mut out);
+        let want: Vec<f32> = keys
+            .iter()
+            .map(|k| q.iter().zip(k).map(|(a, b)| a * b).sum())
+            .collect();
+        // Vector-level relative error (per-score relative error is undefined
+        // near zero-mean dot products).
+        let rel = crate::util::stats::rel_l2(&out, &want);
+        assert!(rel < 0.2, "rel l2 {rel}");
+    }
+
+    #[test]
+    fn pv_turbo_unrotation_recovers_context() {
+        // Accumulate in rotated space, un-rotate, compare to true P·V.
+        let mut rng = crate::util::rng::Rng::new(8);
+        let d_h = 64;
+        let rot = Rotation::new(d_h, 43);
+        let n = 32;
+        let vals: Vec<Vec<f32>> = (0..n).map(|_| normal_vec(&mut rng, d_h, 1.0, 0.0)).collect();
+        let tokens: Vec<_> = vals.iter().map(|v| quantize_token(&rot, v, 3)).collect();
+        let p: Vec<f32> = {
+            let raw = normal_vec(&mut rng, n, 1.0, 0.0);
+            let m = raw.iter().fold(f32::MIN, |a, &b| a.max(b));
+            let e: Vec<f32> = raw.iter().map(|&v| (v - m).exp()).collect();
+            let s: f32 = e.iter().sum();
+            e.iter().map(|v| v / s).collect()
+        };
+        let mut out_rot = vec![0f32; d_h];
+        pv_turbo(&p, &tokens, codebook(3), 3, d_h, &mut out_rot);
+        // un-rotate: R = H D, R^{-1} = D H (H symmetric orthonormal)
+        crate::quant::turbo::fwht(&mut out_rot);
+        for (v, &s) in out_rot.iter_mut().zip(&rot.signs) {
+            *v *= s;
+        }
+        let mut want = vec![0f32; d_h];
+        for t in 0..n {
+            for c in 0..d_h {
+                want[c] += p[t] * vals[t][c];
+            }
+        }
+        let rel = crate::util::stats::rel_l2(&out_rot, &want);
+        assert!(rel < 0.2, "rel {rel}");
+    }
+}

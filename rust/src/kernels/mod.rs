@@ -1,0 +1,49 @@
+//! Fused dequantize-GEMV kernels — the paper's hardware contribution
+//! (§4.4), as the native CPU hot path.
+//!
+//! Decode-phase attention is two GEMVs per head: scores `S = q·K^T`
+//! (Eq. 3) and context `o = P·V` (Eq. 5). Each kernel here fuses
+//! dequantization into the multiply so codes never materialize in memory:
+//!
+//! * [`gemv_fp`] — FP16-equivalent baseline (f32 rows, no quantization);
+//! * [`gemv_inner`] — InnerQ layout: groups along the *reduction* axis, so a
+//!   group's partial dot product accumulates first and its scale applies
+//!   once per 32 elements;
+//! * [`gemv_outer`] — KIVI layout: groups along the *output* axis, requiring
+//!   a per-channel scale vector to be combined with the query for every
+//!   32-token chunk;
+//! * [`gemv_turbo`] — TurboQuant: rotated basis + codebook lookups;
+//! * [`quant_step`] — per-decode-step quantization kernels following each
+//!   method's eviction pattern (Table 5);
+//! * [`softmax`] / merge helpers used by the attention layer.
+
+pub mod gemv_fp;
+pub mod gemv_inner;
+pub mod gemv_outer;
+pub mod gemv_turbo;
+pub mod quant_step;
+pub mod softmax;
+
+/// Effective zero term for a group: dequant is
+/// `s*(code - bias) = s*code - s*bias` for symmetric groups and
+/// `s*code + z` for asymmetric ones — i.e. always `s*code + zeff` with
+/// `zeff = -s*bias` (sym) or `z` (asym). Precomputing `zeff` makes every
+/// kernel branch-free over the hybrid mask.
+#[inline(always)]
+pub fn zeff(p: crate::quant::GroupParams, bits: u8) -> (f32, f32) {
+    let s = p.scale_f32();
+    let z = if p.is_asym() {
+        p.zero_f32()
+    } else {
+        -s * crate::quant::group::sym_bias(bits) as f32
+    };
+    (s, z)
+}
+
+/// Precompute `(scale, zeff)` f32 pairs for a params slice. Segments cache
+/// this shadow at quantize time so the GEMV hot loops do no f16 conversion
+/// or mode branching (a GPU kernel widens __half scales in-register for
+/// free; on CPU the conversion is real work, so it is hoisted here).
+pub fn zeff_params(params: &[crate::quant::GroupParams], bits: u8) -> Vec<(f32, f32)> {
+    params.iter().map(|&p| zeff(p, bits)).collect()
+}

@@ -1,0 +1,96 @@
+//! Per-decode-step quantization kernels (Table 5).
+//!
+//! Tokens evicted from the high-precision windows are quantized on the decode
+//! path; the *cadence* is set by the grouping axis (§5.3): InnerQ quantizes
+//! one key token every step and 32 value tokens every 32 steps; KIVI is
+//! mirrored; TurboQuant quantizes one key and one value every step. These
+//! free functions perform exactly one method's per-step quantization work so
+//! the Table-5 bench can measure it in isolation (amortized per step).
+
+use crate::cache::segments::{
+    InnerKeySegment, InnerValSegment, OuterKeySegment, OuterValSegment, TurboKeySegment,
+    TurboValSegment,
+};
+
+/// InnerQ per-step key work: quantize 1 token.
+pub fn step_inner_key(seg: &mut InnerKeySegment, k: &[f32]) {
+    seg.append_token(k);
+}
+
+/// InnerQ per-32-step value work: quantize a 32-token chunk.
+pub fn step_inner_val(seg: &mut InnerValSegment, vs: &[f32]) {
+    seg.append_chunk(vs);
+}
+
+/// KIVI per-32-step key work: quantize a 32-token chunk.
+pub fn step_outer_key(seg: &mut OuterKeySegment, ks: &[f32]) {
+    seg.append_chunk(ks);
+}
+
+/// KIVI per-step value work: quantize 1 token.
+pub fn step_outer_val(seg: &mut OuterValSegment, v: &[f32]) {
+    seg.append_token(v);
+}
+
+/// TurboQuant per-step work: rotate + codebook-quantize 1 token.
+pub fn step_turbo_key(seg: &mut TurboKeySegment, k: &[f32]) {
+    seg.append_token(k);
+}
+
+pub fn step_turbo_val(seg: &mut TurboValSegment, v: &[f32]) {
+    seg.append_token(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::group::Mode;
+    use crate::util::ptest::normal_vec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cadence_amortization_identity() {
+        // One 32-token chunk == 32 amortized steps: segment lengths agree.
+        let d_h = 128;
+        let mut rng = Rng::new(1);
+        let mut ik = InnerKeySegment::new(d_h, 3, Mode::Sym);
+        let mut iv = InnerValSegment::new(d_h, 3, Mode::Sym);
+        let toks = normal_vec(&mut rng, 32 * d_h, 1.0, 0.0);
+        for t in 0..32 {
+            step_inner_key(&mut ik, &toks[t * d_h..(t + 1) * d_h]);
+        }
+        step_inner_val(&mut iv, &toks);
+        assert_eq!(ik.len(), 32);
+        assert_eq!(iv.len(), 32);
+    }
+
+    #[test]
+    fn turbo_steps_append_single_tokens() {
+        let d_h = 128;
+        let mut rng = Rng::new(2);
+        let mut tk = TurboKeySegment::new(d_h, 4, 42);
+        let mut tv = TurboValSegment::new(d_h, 3, 43);
+        for _ in 0..5 {
+            let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            step_turbo_key(&mut tk, &k);
+            step_turbo_val(&mut tv, &k);
+        }
+        assert_eq!(tk.len(), 5);
+        assert_eq!(tv.len(), 5);
+    }
+
+    #[test]
+    fn kivi_steps_mirror_innerq() {
+        let d_h = 128;
+        let mut rng = Rng::new(3);
+        let mut ok = OuterKeySegment::new(d_h, 2, Mode::Asym);
+        let mut ov = OuterValSegment::new(d_h, 2, Mode::Asym);
+        let toks = normal_vec(&mut rng, 32 * d_h, 1.0, 0.0);
+        step_outer_key(&mut ok, &toks);
+        for t in 0..32 {
+            step_outer_val(&mut ov, &toks[t * d_h..(t + 1) * d_h]);
+        }
+        assert_eq!(ok.len(), 32);
+        assert_eq!(ov.len(), 32);
+    }
+}

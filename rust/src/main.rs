@@ -1,0 +1,162 @@
+//! InnerQ CLI — the leader entrypoint.
+//!
+//! ```text
+//! innerq serve   [--method M] [--addr HOST:PORT] [--artifacts DIR]
+//! innerq generate --prompt "a=13;?a=" [--method M] [--max-new N]
+//! innerq exp      table1|table2|table3|table7|fig5|msparsity|simulate|all
+//! innerq info     [--artifacts DIR]
+//! ```
+//!
+//! (clap is not in the offline vendor set; flags are parsed by hand.)
+
+use anyhow::{anyhow, Result};
+use innerq::coordinator::{Request, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::{exp, QuantMethod};
+use std::time::Instant;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+    let mut flags = std::collections::HashMap::new();
+    let mut i = 1;
+    // `exp <name>` positional
+    if cmd == "exp" && argv.len() > 1 && !argv[1].starts_with("--") {
+        flags.insert("name".to_string(), argv[1].clone());
+        i = 2;
+    }
+    while i < argv.len() {
+        if let Some(key) = argv[i].strip_prefix("--") {
+            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    Args { cmd, flags }
+}
+
+impl Args {
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn load_manifest(args: &Args) -> Result<Manifest> {
+    Manifest::load(args.get("artifacts", "artifacts"))
+}
+
+fn method(args: &Args) -> Result<QuantMethod> {
+    let name = args.get("method", "innerq_base");
+    QuantMethod::parse(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown method '{name}'; one of: {}",
+            QuantMethod::ALL.map(|m| m.name()).join(", ")
+        )
+    })
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "serve" => {
+            let manifest = load_manifest(&args)?;
+            let m = method(&args)?;
+            eprintln!("[serve] loading {} stages ...", manifest.artifacts.len());
+            let engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+            let sched = Scheduler::new(engine, 1 << 30);
+            let addr = args.get("addr", "127.0.0.1:7071");
+            eprintln!("[serve] method={} addr={addr}", m.name());
+            innerq::server::serve(
+                sched,
+                &addr,
+                std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
+                |a| eprintln!("[serve] listening on {a}"),
+            )
+        }
+        "generate" => {
+            let manifest = load_manifest(&args)?;
+            let m = method(&args)?;
+            let prompt = args.get("prompt", "a=13;b=88;?a=");
+            let max_new: usize = args.get("max-new", "16").parse()?;
+            let engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+            let mut sched = Scheduler::new(engine, 1 << 30);
+            sched.submit(Request {
+                id: 0,
+                prompt: prompt.clone(),
+                max_new_tokens: max_new,
+                temperature: None,
+                arrived: Instant::now(),
+            });
+            let done = sched.run_to_completion()?;
+            let c = &done[0];
+            println!("{prompt}{}", c.text);
+            eprintln!(
+                "[generate] method={} ttft={}us total={}us tokens={}",
+                m.name(),
+                c.ttft_us,
+                c.total_us,
+                c.n_generated
+            );
+            Ok(())
+        }
+        "exp" => {
+            let name = args.get("name", "all");
+            let needs_model = !matches!(name.as_str(), "table3" | "simulate");
+            let manifest = if needs_model { Some(load_manifest(&args)?) } else { None };
+            match name.as_str() {
+                "table1" => {
+                    exp::table1(manifest.as_ref().unwrap())?;
+                }
+                "table2" => {
+                    exp::table2(manifest.as_ref().unwrap())?;
+                }
+                "table3" => exp::table3(),
+                "table7" => exp::table7(manifest.as_ref().unwrap())?,
+                "fig5" => exp::fig5(manifest.as_ref().unwrap())?,
+                "msparsity" => exp::msparsity(manifest.as_ref().unwrap())?,
+                "simulate" => exp::simulate(),
+                "all" => {
+                    exp::table3();
+                    exp::simulate();
+                    let m = manifest.as_ref().unwrap();
+                    exp::table1(m)?;
+                    exp::table7(m)?;
+                    exp::msparsity(m)?;
+                    exp::fig5(m)?;
+                    exp::table2(m)?;
+                }
+                other => return Err(anyhow!("unknown experiment '{other}'")),
+            }
+            Ok(())
+        }
+        "info" => {
+            let manifest = load_manifest(&args)?;
+            println!("model: {:?}", manifest.model);
+            println!("charset: {:?}", manifest.charset);
+            println!("decode batches: {:?}", manifest.decode_batches);
+            println!("prefill buckets: {:?}", manifest.prefill_buckets);
+            println!("artifacts: {}", manifest.artifacts.len());
+            println!("final train loss: {:.4}", manifest.final_train_loss);
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: innerq <serve|generate|exp|info> [flags]\n\
+                 \n  serve    --method M --addr HOST:PORT --artifacts DIR\
+                 \n  generate --prompt S --method M --max-new N\
+                 \n  exp      table1|table2|table3|table7|fig5|msparsity|simulate|all\
+                 \n  info     --artifacts DIR\n\
+                 \nmethods: {}",
+                QuantMethod::ALL.map(|m| m.name()).join(", ")
+            );
+            Ok(())
+        }
+    }
+}

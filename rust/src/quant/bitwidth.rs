@@ -1,0 +1,140 @@
+//! Effective bit-width accounting (Table 3).
+//!
+//! Per-number overheads: an FP16 scale (or zero-point) shared by a group of
+//! G=32 contributes 16/32 = 0.5 bits; TurboQuant's FP32 channel norms shared
+//! across a head dimension of 128 contribute 32/128 = 0.25 bits. The hybrid
+//! variant stores its zero-point matrix densely even though the mask M is
+//! ~99% sparse (§5.2), so it budgets the full 0.5 bits.
+
+use super::{MethodConfig, QuantMethod};
+
+/// Bit-width breakdown for one cache (key or value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheBits {
+    pub integer: f64,
+    pub scale_overhead: f64,
+    pub zero_overhead: f64,
+    pub norm_overhead: f64,
+}
+
+impl CacheBits {
+    pub fn total(&self) -> f64 {
+        self.integer + self.scale_overhead + self.zero_overhead + self.norm_overhead
+    }
+}
+
+/// Full Table-3 row for a method.
+#[derive(Debug, Clone, Copy)]
+pub struct BitWidthRow {
+    pub method: QuantMethod,
+    pub key: CacheBits,
+    pub val: CacheBits,
+}
+
+impl BitWidthRow {
+    /// Per-number effective bit-width (key and value averaged, as Table 3).
+    pub fn effective(&self) -> f64 {
+        0.5 * (self.key.total() + self.val.total())
+    }
+}
+
+/// Compute the Table-3 accounting for a method at head dimension `d_h`.
+pub fn bit_width(cfg: &MethodConfig, d_h: usize) -> BitWidthRow {
+    let g = cfg.group_size as f64;
+    let cache = |bits: u8, has_zeros: bool| -> CacheBits {
+        if cfg.turbo {
+            CacheBits {
+                integer: bits as f64,
+                scale_overhead: 0.0,
+                zero_overhead: 0.0,
+                // FP32 channel norms amortized over the head dimension.
+                norm_overhead: 32.0 / d_h as f64,
+            }
+        } else if !cfg.is_quantized() {
+            CacheBits { integer: 16.0, scale_overhead: 0.0, zero_overhead: 0.0, norm_overhead: 0.0 }
+        } else {
+            CacheBits {
+                integer: bits as f64,
+                scale_overhead: 16.0 / g,
+                zero_overhead: if has_zeros { 16.0 / g } else { 0.0 },
+                norm_overhead: 0.0,
+            }
+        }
+    };
+    BitWidthRow {
+        method: cfg.method,
+        key: cache(cfg.key_bits, cfg.key_has_zeros()),
+        val: cache(cfg.val_bits, cfg.val_has_zeros()),
+    }
+}
+
+/// All Table-3 rows at the paper's reference dimensions (G=32, d_h=128).
+pub fn table3() -> Vec<BitWidthRow> {
+    [
+        QuantMethod::Kivi,
+        QuantMethod::TurboQuant,
+        QuantMethod::InnerQBase,
+        QuantMethod::InnerQHybrid,
+        QuantMethod::InnerQSmall,
+    ]
+    .iter()
+    .map(|m| bit_width(&m.config(), 128))
+    .collect()
+}
+
+/// Bytes needed to store a `n_tokens x d_h` cache at this effective width
+/// (used by the cache pool for memory accounting).
+pub fn cache_bytes(bits_per_number: f64, n_tokens: usize, d_h: usize) -> usize {
+    ((bits_per_number * (n_tokens * d_h) as f64) / 8.0).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(m: QuantMethod) -> BitWidthRow {
+        bit_width(&m.config(), 128)
+    }
+
+    #[test]
+    fn table3_matches_paper_exactly() {
+        // Paper Table 3, bottom row: KIVI 3, TurboQuant 3.75, InnerQ_Base 3.5,
+        // InnerQ_Hybrid 3.25, InnerQ_Small 3.
+        assert_eq!(row(QuantMethod::Kivi).effective(), 3.0);
+        assert_eq!(row(QuantMethod::TurboQuant).effective(), 3.75);
+        assert_eq!(row(QuantMethod::InnerQBase).effective(), 3.5);
+        assert_eq!(row(QuantMethod::InnerQHybrid).effective(), 3.25);
+        assert_eq!(row(QuantMethod::InnerQSmall).effective(), 3.0);
+    }
+
+    #[test]
+    fn table3_component_cells() {
+        // Spot-check individual cells of Table 3.
+        let kivi = row(QuantMethod::Kivi);
+        assert_eq!(kivi.key.integer, 2.0);
+        assert_eq!(kivi.key.scale_overhead, 0.5);
+        assert_eq!(kivi.key.zero_overhead, 0.5);
+        let turbo = row(QuantMethod::TurboQuant);
+        assert_eq!(turbo.key.integer, 4.0);
+        assert_eq!(turbo.key.norm_overhead, 0.25);
+        assert_eq!(turbo.val.integer, 3.0);
+        let hybrid = row(QuantMethod::InnerQHybrid);
+        assert_eq!(hybrid.val.integer, 2.0);
+        assert_eq!(hybrid.val.zero_overhead, 0.5, "dense zero-points budgeted");
+        let base = row(QuantMethod::InnerQBase);
+        assert_eq!(base.key.zero_overhead, 0.0, "symmetric keys carry no zeros");
+    }
+
+    #[test]
+    fn baseline_is_16_bits() {
+        assert_eq!(row(QuantMethod::BaselineFp16).effective(), 16.0);
+    }
+
+    #[test]
+    fn cache_bytes_scaling() {
+        // 4096 tokens x 128 ch at 3.5 bits = 4096*128*3.5/8 bytes.
+        assert_eq!(cache_bytes(3.5, 4096, 128), 229_376);
+        // FP16 is exactly 2 bytes per number.
+        assert_eq!(cache_bytes(16.0, 10, 128), 2560);
+    }
+}

@@ -1,0 +1,304 @@
+//! Group-wise quantizers: symmetric (Eq. 13), asymmetric (Eq. 10–12) and
+//! hybrid (Eq. 14, §4.1.2) per-group mode selection.
+//!
+//! Scales and zero-points are *stored* as IEEE f16 bit patterns; the hybrid
+//! mask `M` is encoded in the sign bit of the stored scale, exactly as the
+//! paper does ("since scale factors are strictly positive, we repurpose their
+//! sign bit"). Symmetric codes are stored with a `+qmax` bias so the packed
+//! representation is unsigned; see DESIGN.md for the Eq. (13) clarification.
+
+use crate::util::fp16::{f16_bits_to_f32, f16_round, f32_to_f16_bits};
+
+/// Per-group quantization mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Sym,
+    Asym,
+    /// Choose Sym or Asym per group by reconstruction error (§4.1.2).
+    Hybrid,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "sym" => Some(Mode::Sym),
+            "asym" => Some(Mode::Asym),
+            "hybrid" => Some(Mode::Hybrid),
+            _ => None,
+        }
+    }
+}
+
+/// Stored per-group parameters. `scale` is f16 bits with the sign bit used as
+/// the asymmetric-mode flag; `zero` is f16 bits (0 for symmetric groups —
+/// still *stored* in hybrid/asym segments to keep the layout dense, per
+/// §4.1.2 / Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GroupParams {
+    pub scale: u16,
+    pub zero: u16,
+}
+
+impl GroupParams {
+    /// True if this group was quantized asymmetrically (mask bit M).
+    #[inline(always)]
+    pub fn is_asym(self) -> bool {
+        self.scale & 0x8000 != 0
+    }
+    /// Positive scale factor as f32.
+    #[inline(always)]
+    pub fn scale_f32(self) -> f32 {
+        f16_bits_to_f32(self.scale & 0x7fff)
+    }
+    #[inline(always)]
+    pub fn zero_f32(self) -> f32 {
+        f16_bits_to_f32(self.zero)
+    }
+}
+
+/// Symmetric bias: codes are stored as `clamp(round(v/s), -qmax, qmax) + qmax`
+/// so raw codes span [0, 2*qmax] ⊂ [0, 2^b-1].
+#[inline(always)]
+pub const fn sym_bias(bits: u8) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Quantize one group symmetrically. Raw (biased) codes go to `codes`.
+pub fn quantize_sym(vals: &[f32], bits: u8, codes: &mut [u8]) -> GroupParams {
+    debug_assert_eq!(vals.len(), codes.len());
+    let qmax = sym_bias(bits); // 2^(b-1)-1
+    let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let mut s = if amax > 0.0 { amax / qmax as f32 } else { 1.0 };
+    s = f16_round(s).max(f32::MIN_POSITIVE);
+    let inv = 1.0 / s;
+    for (c, &v) in codes.iter_mut().zip(vals) {
+        let q = (v * inv).round_ties_even() as i32;
+        *c = (q.clamp(-qmax, qmax) + qmax) as u8;
+    }
+    GroupParams { scale: f32_to_f16_bits(s) & 0x7fff, zero: 0 }
+}
+
+/// Quantize one group asymmetrically (Eq. 10–12). Codes are unsigned.
+pub fn quantize_asym(vals: &[f32], bits: u8, codes: &mut [u8]) -> GroupParams {
+    debug_assert_eq!(vals.len(), codes.len());
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let z = f16_round(lo);
+    let mut s = if hi > lo { (hi - z) / levels } else { 1.0 };
+    s = f16_round(s).max(f32::MIN_POSITIVE);
+    let inv = 1.0 / s;
+    let maxc = (1u16 << bits) - 1;
+    for (c, &v) in codes.iter_mut().zip(vals) {
+        let q = ((v - z) * inv).round_ties_even() as i32;
+        *c = q.clamp(0, maxc as i32) as u8;
+    }
+    GroupParams {
+        scale: (f32_to_f16_bits(s) & 0x7fff) | 0x8000, // sign bit = asym flag
+        zero: f32_to_f16_bits(z),
+    }
+}
+
+/// Dequantize one raw code given its group parameters.
+#[inline(always)]
+pub fn dequant_code(raw: u8, p: GroupParams, bits: u8) -> f32 {
+    if p.is_asym() {
+        p.scale_f32() * raw as f32 + p.zero_f32()
+    } else {
+        p.scale_f32() * (raw as i32 - sym_bias(bits)) as f32
+    }
+}
+
+/// Sum of squared reconstruction error for a candidate encoding.
+fn sq_err(vals: &[f32], codes: &[u8], p: GroupParams, bits: u8) -> f32 {
+    vals.iter()
+        .zip(codes)
+        .map(|(&v, &c)| {
+            let d = dequant_code(c, p, bits) - v;
+            d * d
+        })
+        .sum()
+}
+
+/// Hybrid quantization (§4.1.2): encode with both modes, keep the one with
+/// the lower reconstruction error. Returns the chosen params (mask in scale
+/// sign bit) and writes the chosen codes.
+pub fn quantize_hybrid(vals: &[f32], bits: u8, codes: &mut [u8]) -> GroupParams {
+    let mut sym_codes = vec![0u8; vals.len()];
+    let p_sym = quantize_sym(vals, bits, &mut sym_codes);
+    let mut asym_codes = vec![0u8; vals.len()];
+    let p_asym = quantize_asym(vals, bits, &mut asym_codes);
+    let e_sym = sq_err(vals, &sym_codes, p_sym, bits);
+    let e_asym = sq_err(vals, &asym_codes, p_asym, bits);
+    // Ties favour symmetric (no zero-point load on the hot path).
+    if e_asym < e_sym {
+        codes.copy_from_slice(&asym_codes);
+        p_asym
+    } else {
+        codes.copy_from_slice(&sym_codes);
+        p_sym
+    }
+}
+
+/// Quantize one group with the given mode.
+pub fn quantize(mode: Mode, vals: &[f32], bits: u8, codes: &mut [u8]) -> GroupParams {
+    match mode {
+        Mode::Sym => quantize_sym(vals, bits, codes),
+        Mode::Asym => quantize_asym(vals, bits, codes),
+        Mode::Hybrid => quantize_hybrid(vals, bits, codes),
+    }
+}
+
+/// Dequantize a whole group into `out`.
+pub fn dequantize(codes: &[u8], p: GroupParams, bits: u8, out: &mut [f32]) {
+    if p.is_asym() {
+        let (s, z) = (p.scale_f32(), p.zero_f32());
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = s * c as f32 + z;
+        }
+    } else {
+        let s = p.scale_f32();
+        let bias = sym_bias(bits);
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = s * (c as i32 - bias) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{check, normal_vec, PropCfg};
+    use crate::util::rng::Rng;
+
+    fn rt_err(mode: Mode, vals: &[f32], bits: u8) -> f32 {
+        let mut codes = vec![0u8; vals.len()];
+        let p = quantize(mode, vals, bits, &mut codes);
+        let mut out = vec![0f32; vals.len()];
+        dequantize(&codes, p, bits, &mut out);
+        vals.iter().zip(&out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn sym_error_bounded_by_half_step() {
+        let mut rng = Rng::new(1);
+        for bits in [2u8, 3, 4] {
+            for _ in 0..50 {
+                let vals = normal_vec(&mut rng, 32, 1.0, 0.05);
+                let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let step = amax / sym_bias(bits) as f32;
+                // half a step plus f16 scale rounding slack
+                assert!(rt_err(Mode::Sym, &vals, bits) <= 0.5 * step * 1.01 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn asym_error_bounded_by_step() {
+        let mut rng = Rng::new(2);
+        for bits in [2u8, 3, 4] {
+            for _ in 0..50 {
+                let vals = normal_vec(&mut rng, 32, 1.0, 0.05);
+                let (lo, hi) = vals
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+                let step = (hi - lo) / ((1 << bits) - 1) as f32;
+                // half-step, plus slack for f16 rounding of z and s
+                assert!(
+                    rt_err(Mode::Asym, &vals, bits) <= 0.5 * step + 0.01 * (hi - lo) + 1e-6
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_never_worse_than_either_mode() {
+        check("hybrid<=min(sym,asym)", PropCfg::default(), |rng, _| {
+            let n = 32;
+            // Mix of distributions: centered, shifted-positive, outlier-heavy.
+            let shift = (rng.next_f32() - 0.3) * 4.0;
+            let mut vals = normal_vec(rng, n, 1.0, 0.1);
+            for v in &mut vals {
+                *v += shift;
+            }
+            for bits in [2u8, 3] {
+                let sq = |mode| {
+                    let mut codes = vec![0u8; n];
+                    let p = quantize(mode, &vals, bits, &mut codes);
+                    let mut out = vec![0f32; n];
+                    dequantize(&codes, p, bits, &mut out);
+                    vals.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+                };
+                let (es, ea, eh) = (sq(Mode::Sym), sq(Mode::Asym), sq(Mode::Hybrid));
+                assert!(eh <= es.min(ea) + 1e-5, "bits={bits} eh={eh} es={es} ea={ea}");
+            }
+        });
+    }
+
+    #[test]
+    fn hybrid_prefers_asym_for_shifted_groups() {
+        // An all-positive, narrow-range group wastes the sign range under
+        // symmetric quantization — the exact motivating case in §4.1.2.
+        let vals: Vec<f32> = (0..32).map(|i| 5.0 + 0.01 * i as f32).collect();
+        let mut codes = vec![0u8; 32];
+        let p = quantize_hybrid(&vals, 2, &mut codes);
+        assert!(p.is_asym());
+    }
+
+    #[test]
+    fn hybrid_prefers_sym_for_zero_centered_spiky_groups() {
+        // Near-zero mass with symmetric outliers: the symmetric grid hits the
+        // zeros and the ±amax spikes exactly, while the asymmetric grid
+        // (anchored at the minimum) cannot represent 0 — the distribution
+        // shape under which hybrid overwhelmingly picks symmetric (§6.2).
+        let mut vals = vec![0.0f32; 32];
+        vals[5] = 2.0;
+        vals[20] = -2.0;
+        let mut codes = vec![0u8; 32];
+        let p = quantize_hybrid(&vals, 3, &mut codes);
+        assert!(!p.is_asym());
+    }
+
+    #[test]
+    fn mask_lives_in_scale_sign_bit() {
+        let vals = vec![1.0f32; 32];
+        let mut codes = vec![0u8; 32];
+        let pa = quantize_asym(&vals, 3, &mut codes);
+        let ps = quantize_sym(&vals, 3, &mut codes);
+        assert!(pa.scale & 0x8000 != 0);
+        assert!(ps.scale & 0x8000 == 0);
+        assert!(pa.scale_f32() > 0.0, "magnitude must ignore the mask bit");
+    }
+
+    #[test]
+    fn all_zero_group_is_exact() {
+        let vals = vec![0.0f32; 32];
+        for mode in [Mode::Sym, Mode::Asym, Mode::Hybrid] {
+            assert_eq!(rt_err(mode, &vals, 3), 0.0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn constant_group_asym_is_exact() {
+        let vals = vec![3.25f32; 32]; // representable in f16
+        assert!(rt_err(Mode::Asym, &vals, 2) < 1e-6);
+        assert!(rt_err(Mode::Hybrid, &vals, 2) < 1e-6);
+    }
+
+    #[test]
+    fn codes_fit_bit_width() {
+        check("codes < 2^b", PropCfg { seed: 99, cases: 40 }, |rng, _| {
+            let vals = normal_vec(rng, 32, 2.0, 0.2);
+            for bits in [2u8, 3, 4] {
+                for mode in [Mode::Sym, Mode::Asym, Mode::Hybrid] {
+                    let mut codes = vec![0u8; 32];
+                    quantize(mode, &vals, bits, &mut codes);
+                    assert!(codes.iter().all(|&c| (c as u16) < (1 << bits)));
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,212 @@
+//! Core quantization library: grouping layouts, group quantizers
+//! (symmetric / asymmetric / hybrid), physical bit packing, per-channel key
+//! normalization, the TurboQuant baseline, and effective-bit-width
+//! accounting (Table 3).
+
+pub mod bitwidth;
+pub mod group;
+pub mod norm;
+pub mod packing;
+pub mod turbo;
+
+pub use group::{GroupParams, Mode};
+
+/// Which axis quantization groups run along, relative to the decode GEMV.
+///
+/// `Inner` groups run along the reduction dimension (InnerQ: per-token groups
+/// for K, per-channel groups for V) so one scale covers a contiguous run of
+/// the dot product. `Outer` groups run along the output dimension (KIVI:
+/// per-channel groups for K, per-token groups for V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grouping {
+    Inner,
+    Outer,
+}
+
+/// The methods evaluated in the paper (Tables 1–7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    BaselineFp16,
+    Kivi,
+    KiviSink,
+    TurboQuant,
+    InnerQBase,
+    InnerQHybrid,
+    InnerQSmall,
+}
+
+impl QuantMethod {
+    pub const ALL: [QuantMethod; 7] = [
+        QuantMethod::BaselineFp16,
+        QuantMethod::Kivi,
+        QuantMethod::KiviSink,
+        QuantMethod::TurboQuant,
+        QuantMethod::InnerQBase,
+        QuantMethod::InnerQHybrid,
+        QuantMethod::InnerQSmall,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMethod::BaselineFp16 => "baseline_fp16",
+            QuantMethod::Kivi => "kivi",
+            QuantMethod::KiviSink => "kivi_sink",
+            QuantMethod::TurboQuant => "turboquant",
+            QuantMethod::InnerQBase => "innerq_base",
+            QuantMethod::InnerQHybrid => "innerq_hybrid",
+            QuantMethod::InnerQSmall => "innerq_small",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QuantMethod> {
+        QuantMethod::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// The per-method configuration used throughout the paper's evaluation
+    /// (§5.1: G=32, total high-precision window 128; InnerQ/KIVI_Sink split
+    /// it 32 sink + 96 recent, KIVI keeps all 128 recent).
+    pub fn config(self) -> MethodConfig {
+        let base = MethodConfig {
+            method: self,
+            group_size: 32,
+            w_sink: 32,
+            w_recent: 96,
+            key_bits: 3,
+            val_bits: 3,
+            key_mode: Mode::Sym,
+            val_mode: Mode::Sym,
+            key_grouping: Grouping::Inner,
+            val_grouping: Grouping::Inner,
+            key_norm: true,
+            turbo: false,
+        };
+        match self {
+            QuantMethod::BaselineFp16 => MethodConfig {
+                key_bits: 16,
+                val_bits: 16,
+                key_norm: false,
+                w_sink: 0,
+                w_recent: 0,
+                ..base
+            },
+            QuantMethod::Kivi => MethodConfig {
+                key_bits: 2,
+                val_bits: 2,
+                key_mode: Mode::Asym,
+                val_mode: Mode::Asym,
+                key_grouping: Grouping::Outer,
+                val_grouping: Grouping::Outer,
+                key_norm: false,
+                w_sink: 0,
+                w_recent: 128,
+                ..base
+            },
+            QuantMethod::KiviSink => MethodConfig {
+                key_bits: 2,
+                val_bits: 2,
+                key_mode: Mode::Asym,
+                val_mode: Mode::Asym,
+                key_grouping: Grouping::Outer,
+                val_grouping: Grouping::Outer,
+                key_norm: false,
+                ..base
+            },
+            QuantMethod::TurboQuant => MethodConfig {
+                key_bits: 4,
+                val_bits: 3,
+                key_norm: false,
+                turbo: true,
+                w_sink: 0,
+                w_recent: 128,
+                ..base
+            },
+            QuantMethod::InnerQBase => base,
+            QuantMethod::InnerQHybrid => {
+                MethodConfig { val_bits: 2, val_mode: Mode::Hybrid, ..base }
+            }
+            QuantMethod::InnerQSmall => MethodConfig { val_bits: 2, ..base },
+        }
+    }
+}
+
+/// Full quantization configuration for one run. Produced by
+/// [`QuantMethod::config`] for the paper's setups; the ablation harnesses
+/// (Table 7, Fig. 5) construct modified copies directly.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodConfig {
+    pub method: QuantMethod,
+    pub group_size: usize,
+    /// First `w_sink` tokens kept in high precision (attention sinks, §4.2).
+    pub w_sink: usize,
+    /// Most recent `w_recent` tokens kept in high precision.
+    pub w_recent: usize,
+    pub key_bits: u8,
+    pub val_bits: u8,
+    pub key_mode: Mode,
+    pub val_mode: Mode,
+    pub key_grouping: Grouping,
+    pub val_grouping: Grouping,
+    /// Per-channel normalization of K (§4.3) — InnerQ variants only.
+    pub key_norm: bool,
+    /// TurboQuant pipeline (rotation + codebook) instead of uniform groups.
+    pub turbo: bool,
+}
+
+impl MethodConfig {
+    pub fn is_quantized(&self) -> bool {
+        self.method != QuantMethod::BaselineFp16
+    }
+    /// Whether the stored key segment carries zero-points.
+    pub fn key_has_zeros(&self) -> bool {
+        !self.turbo && matches!(self.key_mode, Mode::Asym | Mode::Hybrid)
+    }
+    pub fn val_has_zeros(&self) -> bool {
+        !self.turbo && matches!(self.val_mode, Mode::Asym | Mode::Hybrid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_round_trip() {
+        for m in QuantMethod::ALL {
+            assert_eq!(QuantMethod::parse(m.name()), Some(m));
+        }
+        assert_eq!(QuantMethod::parse("nope"), None);
+    }
+
+    #[test]
+    fn paper_configs() {
+        // §5.1: KIVI w_sink=0/w_recent=128; KIVI_Sink & InnerQ 32/96.
+        assert_eq!(QuantMethod::Kivi.config().w_sink, 0);
+        assert_eq!(QuantMethod::Kivi.config().w_recent, 128);
+        assert_eq!(QuantMethod::KiviSink.config().w_sink, 32);
+        assert_eq!(QuantMethod::InnerQBase.config().w_recent, 96);
+        // §4.4: K is 3-bit symmetric in all InnerQ variants.
+        for m in [QuantMethod::InnerQBase, QuantMethod::InnerQHybrid, QuantMethod::InnerQSmall] {
+            let c = m.config();
+            assert_eq!(c.key_bits, 3);
+            assert_eq!(c.key_mode, Mode::Sym);
+            assert_eq!(c.key_grouping, Grouping::Inner);
+            assert!(c.key_norm);
+        }
+        assert_eq!(QuantMethod::InnerQHybrid.config().val_mode, Mode::Hybrid);
+        assert_eq!(QuantMethod::InnerQHybrid.config().val_bits, 2);
+        assert_eq!(QuantMethod::InnerQSmall.config().val_mode, Mode::Sym);
+        // TurboQuant: 4-bit K / 3-bit V (§5.1).
+        let t = QuantMethod::TurboQuant.config();
+        assert!(t.turbo);
+        assert_eq!((t.key_bits, t.val_bits), (4, 3));
+    }
+
+    #[test]
+    fn zero_point_presence() {
+        assert!(QuantMethod::Kivi.config().key_has_zeros());
+        assert!(!QuantMethod::InnerQBase.config().key_has_zeros());
+        assert!(!QuantMethod::InnerQBase.config().val_has_zeros());
+        assert!(QuantMethod::InnerQHybrid.config().val_has_zeros());
+        assert!(!QuantMethod::TurboQuant.config().key_has_zeros());
+    }
+}

@@ -1,0 +1,110 @@
+//! Per-channel normalization of the key cache (§4.3).
+//!
+//! `norm_k = sqrt(max |K[:, :, k]|)` is computed once at the end of prefill.
+//! The paper folds the vector into `W_Q` and `W_K`; our weights are baked
+//! into AOT-compiled HLO artifacts, so we apply the mathematically identical
+//! fold at the cache boundary instead: keys are divided by `norm` when they
+//! enter the cache and queries are multiplied by `norm` before the score
+//! GEMV. Cost is O(d_h) per token — the same "hidden during decode" property
+//! (the projection GEMM it would otherwise be folded into is O(d·d_h)).
+
+/// Per-channel normalization vector for one KV head.
+#[derive(Debug, Clone)]
+pub struct ChannelNorm {
+    pub scale: Vec<f32>,     // norm_k, applied to q
+    pub inv_scale: Vec<f32>, // 1/norm_k, applied to k
+}
+
+impl ChannelNorm {
+    /// Identity normalization (used when the method disables key norm).
+    pub fn identity(d_h: usize) -> ChannelNorm {
+        ChannelNorm { scale: vec![1.0; d_h], inv_scale: vec![1.0; d_h] }
+    }
+
+    /// Compute from the prefill keys of one head: `keys` is `n_tokens` rows
+    /// of `d_h` channels, flattened row-major.
+    pub fn from_prefill_keys(keys: &[f32], d_h: usize) -> ChannelNorm {
+        assert_eq!(keys.len() % d_h, 0, "keys must be n_tokens x d_h");
+        let mut amax = vec![0.0f32; d_h];
+        for row in keys.chunks_exact(d_h) {
+            for (m, &v) in amax.iter_mut().zip(row) {
+                *m = m.max(v.abs());
+            }
+        }
+        let scale: Vec<f32> = amax
+            .iter()
+            .map(|&m| if m > 1e-12 { m.sqrt() } else { 1.0 })
+            .collect();
+        let inv_scale = scale.iter().map(|&s| 1.0 / s).collect();
+        ChannelNorm { scale, inv_scale }
+    }
+
+    /// Normalize a key row in place (cache-insertion side).
+    #[inline]
+    pub fn apply_key(&self, k: &mut [f32]) {
+        for (v, &s) in k.iter_mut().zip(&self.inv_scale) {
+            *v *= s;
+        }
+    }
+
+    /// Fold into a query row in place (score side).
+    #[inline]
+    pub fn apply_query(&self, q: &mut [f32]) {
+        for (v, &s) in q.iter_mut().zip(&self.scale) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::{check, normal_vec, PropCfg};
+
+    #[test]
+    fn dot_product_preserved_exactly() {
+        // q·k == (q*norm)·(k/norm): the fold must not change attention scores.
+        check("norm preserves scores", PropCfg::default(), |rng, _| {
+            let d_h = 64;
+            let n = 8;
+            let mut keys = Vec::new();
+            for _ in 0..n {
+                keys.extend(normal_vec(rng, d_h, 1.0, 0.1));
+            }
+            let norm = ChannelNorm::from_prefill_keys(&keys, d_h);
+            let mut q = normal_vec(rng, d_h, 1.0, 0.0);
+            let k_orig: Vec<f32> = keys[..d_h].to_vec();
+            let dot0: f32 = q.iter().zip(&k_orig).map(|(a, b)| a * b).sum();
+            let mut k = k_orig.clone();
+            norm.apply_key(&mut k);
+            norm.apply_query(&mut q);
+            let dot1: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+            assert!((dot0 - dot1).abs() <= 1e-3 * dot0.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    fn shrinks_outlier_channels() {
+        // A channel with amax 16 gets norm 4: its cached magnitude drops to
+        // amax/norm = sqrt(amax), compressing the group dynamic range.
+        let d_h = 4;
+        let keys = vec![
+            16.0, 1.0, 0.5, 0.25, //
+            -8.0, -1.0, 0.5, 0.25,
+        ];
+        let norm = ChannelNorm::from_prefill_keys(&keys, d_h);
+        assert!((norm.scale[0] - 4.0).abs() < 1e-6);
+        let mut k = vec![16.0, 1.0, 0.5, 0.25];
+        norm.apply_key(&mut k);
+        assert!((k[0] - 4.0).abs() < 1e-6);
+        // max normalized magnitude across channels is sqrt(amax_c)
+        assert!(k.iter().all(|v| v.abs() <= 4.0 + 1e-6));
+    }
+
+    #[test]
+    fn zero_channel_uses_unit_norm() {
+        let keys = vec![0.0f32; 8]; // 2 tokens x 4 channels, all zero
+        let norm = ChannelNorm::from_prefill_keys(&keys, 4);
+        assert!(norm.scale.iter().all(|&s| s == 1.0));
+    }
+}

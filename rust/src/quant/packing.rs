@@ -1,0 +1,167 @@
+//! Physical b-bit code packing.
+//!
+//! A quantization group of `G` codes (b ∈ {2,3,4} bits each) is stored as a
+//! little-endian bitstream of `G*b/8` bytes. With the paper's G=32 this is
+//! 8 / 12 / 16 bytes per group — small enough that the fused GEMV kernels
+//! unpack a whole group with two u64 loads and shifts, never touching memory
+//! for intermediates.
+//!
+//! Codes here are *raw* (unsigned, already biased for symmetric mode); the
+//! signed/zero-point interpretation lives in [`crate::quant::group`].
+
+/// Bytes needed to pack `n` codes of `bits` bits.
+#[inline]
+pub const fn packed_len(n: usize, bits: u8) -> usize {
+    (n * bits as usize + 7) / 8
+}
+
+/// Pack `codes` (each < 2^bits) into a little-endian bitstream appended to `out`.
+pub fn pack(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+    debug_assert!(matches!(bits, 1..=8));
+    let start = out.len();
+    out.resize(start + packed_len(codes.len(), bits), 0);
+    let dst = &mut out[start..];
+    let b = bits as usize;
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!((c as u16) < (1u16 << bits), "code {c} out of range for {bits} bits");
+        let bitpos = i * b;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let v = (c as u16) << off;
+        dst[byte] |= (v & 0xff) as u8;
+        if off + b > 8 {
+            dst[byte + 1] |= (v >> 8) as u8;
+        }
+    }
+}
+
+/// Unpack `n` codes from a little-endian bitstream (generic path).
+pub fn unpack(bytes: &[u8], bits: u8, n: usize, out: &mut [u8]) {
+    debug_assert!(out.len() >= n);
+    let b = bits as usize;
+    for (i, o) in out.iter_mut().enumerate().take(n) {
+        let bitpos = i * b;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = bytes[byte] as u16 >> off;
+        if off + b > 8 {
+            v |= (bytes[byte + 1] as u16) << (8 - off);
+        }
+        *o = (v & ((1u16 << bits) - 1)) as u8;
+    }
+}
+
+/// Fast path: unpack one 32-code group of 2-bit codes (8 bytes).
+#[inline(always)]
+pub fn unpack32_b2(bytes: &[u8], out: &mut [u8; 32]) {
+    debug_assert!(bytes.len() >= 8);
+    let w = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    for i in 0..32 {
+        out[i] = ((w >> (2 * i)) & 0x3) as u8;
+    }
+}
+
+/// Fast path: unpack one 32-code group of 3-bit codes (12 bytes).
+///
+/// Two *overlapping* u64 loads eliminate the bit-63 straddle: codes 0..=10
+/// live entirely in bytes[0..8] and codes 11..=31 in bytes[4..12] (bit 33
+/// onward), so both loops are branchless constant-shift extracts.
+#[inline(always)]
+pub fn unpack32_b3(bytes: &[u8], out: &mut [u8; 32]) {
+    debug_assert!(bytes.len() >= 12);
+    let lo = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let hi = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    for i in 0..11 {
+        out[i] = ((lo >> (3 * i)) & 0x7) as u8;
+    }
+    for i in 11..32 {
+        out[i] = ((hi >> (3 * i - 32)) & 0x7) as u8;
+    }
+}
+
+/// Fast path: unpack one 32-code group of 4-bit codes (16 bytes).
+#[inline(always)]
+pub fn unpack32_b4(bytes: &[u8], out: &mut [u8; 32]) {
+    debug_assert!(bytes.len() >= 16);
+    for (j, chunk) in bytes[..16].chunks_exact(8).enumerate() {
+        let w = u64::from_le_bytes(chunk.try_into().unwrap());
+        for i in 0..16 {
+            out[16 * j + i] = ((w >> (4 * i)) & 0xf) as u8;
+        }
+    }
+}
+
+/// Dispatch the 32-wide fast unpack by bit-width.
+#[inline(always)]
+pub fn unpack32(bytes: &[u8], bits: u8, out: &mut [u8; 32]) {
+    match bits {
+        2 => unpack32_b2(bytes, out),
+        3 => unpack32_b3(bytes, out),
+        4 => unpack32_b4(bytes, out),
+        _ => unpack(bytes, bits, 32, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_generic() {
+        let mut rng = Rng::new(7);
+        for bits in 1..=8u8 {
+            for n in [1usize, 5, 31, 32, 33, 100] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                assert_eq!(packed.len(), packed_len(n, bits));
+                let mut out = vec![0u8; n];
+                unpack(&packed, bits, n, &mut out);
+                assert_eq!(codes, out, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_generic() {
+        let mut rng = Rng::new(13);
+        for bits in [2u8, 3, 4] {
+            for _ in 0..200 {
+                let codes: Vec<u8> =
+                    (0..32).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                let mut fast = [0u8; 32];
+                unpack32(&packed, bits, &mut fast);
+                assert_eq!(&codes[..], &fast[..], "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn append_packs_are_independent() {
+        // Packing two groups back-to-back into one Vec must not interleave.
+        let g1: Vec<u8> = (0..32).map(|i| (i % 8) as u8).collect();
+        let g2: Vec<u8> = (0..32).map(|i| (7 - i % 8) as u8).collect();
+        let mut buf = Vec::new();
+        pack(&g1, 3, &mut buf);
+        let off = buf.len();
+        pack(&g2, 3, &mut buf);
+        let mut o1 = [0u8; 32];
+        let mut o2 = [0u8; 32];
+        unpack32_b3(&buf[..off], &mut o1);
+        unpack32_b3(&buf[off..], &mut o2);
+        assert_eq!(&g1[..], &o1[..]);
+        assert_eq!(&g2[..], &o2[..]);
+    }
+
+    #[test]
+    fn packed_len_matches_paper_group_bytes() {
+        // G=32: 2-bit -> 8B, 3-bit -> 12B, 4-bit -> 16B.
+        assert_eq!(packed_len(32, 2), 8);
+        assert_eq!(packed_len(32, 3), 12);
+        assert_eq!(packed_len(32, 4), 16);
+    }
+}

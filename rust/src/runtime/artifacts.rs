@@ -1,0 +1,184 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the Rust runtime (reader). Carries the model dimensions, tokenizer
+//! charset, available decode batch sizes / prefill buckets, and the artifact
+//! file names.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_h: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelDims {
+    pub fn q_dim(&self) -> usize {
+        self.n_q_heads * self.d_h
+    }
+    /// Query heads served by each KV head (GQA fan-in).
+    pub fn heads_per_kv(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub charset: String,
+    pub bos: i32,
+    pub decode_batches: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub quant_attn_tokens: usize,
+    pub artifacts: std::collections::BTreeMap<String, String>,
+    pub final_train_loss: f64,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let m = j.get("model");
+        let model = ModelDims {
+            vocab: m.get("vocab").as_usize().context("vocab")?,
+            d_model: m.get("d_model").as_usize().context("d_model")?,
+            n_layers: m.get("n_layers").as_usize().context("n_layers")?,
+            n_q_heads: m.get("n_q_heads").as_usize().context("n_q_heads")?,
+            n_kv_heads: m.get("n_kv_heads").as_usize().context("n_kv_heads")?,
+            d_h: m.get("d_h").as_usize().context("d_h")?,
+            d_ff: m.get("d_ff").as_usize().context("d_ff")?,
+            rope_theta: m.get("rope_theta").as_f64().unwrap_or(10000.0),
+        };
+        let list_usize = |key: &str| -> Result<Vec<usize>> {
+            j.get(key)
+                .as_arr()
+                .with_context(|| key.to_string())?
+                .iter()
+                .map(|v| v.as_usize().with_context(|| key.to_string()))
+                .collect()
+        };
+        let artifacts = j
+            .get("artifacts")
+            .as_obj()
+            .context("artifacts")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        Ok(Manifest {
+            model,
+            charset: j.get("charset").as_str().context("charset")?.to_string(),
+            bos: j.get("bos").as_f64().unwrap_or(0.0) as i32,
+            decode_batches: list_usize("decode_batches")?,
+            prefill_buckets: list_usize("prefill_buckets")?,
+            quant_attn_tokens: j.get("quant_attn_tokens").as_usize().unwrap_or(0),
+            artifacts,
+            final_train_loss: j.get("final_train_loss").as_f64().unwrap_or(f64::NAN),
+            dir,
+        })
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn path(&self, key: &str) -> Result<PathBuf> {
+        let name = self
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not in manifest"))?;
+        Ok(self.dir.join(name))
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow!("prompt of {len} tokens exceeds largest prefill bucket"))
+    }
+
+    /// Smallest exported decode batch that fits `n` sequences.
+    pub fn decode_batch(&self, n: usize) -> Result<usize> {
+        self.decode_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("batch of {n} exceeds largest decode batch"))
+    }
+
+    /// Tokenize with the manifest charset (token 0 = BOS/PAD).
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                self.charset
+                    .chars()
+                    .position(|x| x == c)
+                    .map(|i| i as i32 + 1)
+                    .ok_or_else(|| anyhow!("char {c:?} not in model charset"))
+            })
+            .collect()
+    }
+
+    pub fn decode_text(&self, tokens: &[i32]) -> String {
+        let chars: Vec<char> = self.charset.chars().collect();
+        tokens
+            .iter()
+            .filter(|&&t| t > 0 && (t as usize) <= chars.len())
+            .map(|&t| chars[t as usize - 1])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model":{"vocab":25,"d_model":128,"n_layers":3,"n_q_heads":4,
+                "n_kv_heads":2,"d_h":32,"d_ff":256,"rope_theta":10000.0},
+               "charset":"abcdefghij0123456789=;?.","bos":0,
+               "decode_batches":[1,2,4,8],"prefill_buckets":[64,128],
+               "quant_attn_tokens":512,
+               "artifacts":{"embed_b1":"decode_embed_b1.hlo.txt"},
+               "final_train_loss":1.25}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let dir = std::env::temp_dir().join("innerq_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_h, 32);
+        assert_eq!(m.model.heads_per_kv(), 2);
+        assert_eq!(m.prefill_bucket(65).unwrap(), 128);
+        assert!(m.prefill_bucket(1000).is_err());
+        assert_eq!(m.decode_batch(3).unwrap(), 4);
+        assert!(m.path("embed_b1").unwrap().ends_with("decode_embed_b1.hlo.txt"));
+        assert!(m.path("nope").is_err());
+    }
+
+    #[test]
+    fn tokenizer_round_trip() {
+        let dir = std::env::temp_dir().join("innerq_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let toks = m.encode("a7=13;?a7=13.").unwrap();
+        assert_eq!(m.decode_text(&toks), "a7=13;?a7=13.");
+        assert!(m.encode("Z").is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! The interchange is HLO *text* (`HloModuleProto::from_text_file`), not the
+//! serialized proto — see /opt/xla-example/README.md for the 64-bit-id
+//! incompatibility this sidesteps.
+
+pub mod artifacts;
+pub mod executable;
+
+pub use artifacts::Manifest;
+pub use executable::{Stage, StageOutput};
+
+use anyhow::Result;
+
+thread_local! {
+    // PjRtClient is Rc-based (not Send); the engine and all executables live
+    // on the scheduler thread, so a thread-local client is the right scope.
+    static CLIENT: std::cell::RefCell<Option<xla::PjRtClient>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The per-thread PJRT CPU client (a cheap Rc clone).
+pub fn client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?,
+            );
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}

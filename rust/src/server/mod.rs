@@ -1,0 +1,14 @@
+//! TCP line-protocol server: newline-delimited JSON requests/responses.
+//!
+//! tokio is not in the offline vendor set, so the server is thread-based:
+//! one acceptor, one scheduler thread owning the engine (the testbed is a
+//! single core; the scheduler loop *is* the worker), per-connection reader
+//! threads feeding an mpsc channel.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "a=13;?a=", "max_new_tokens": 8}
+//!   <- {"id": 3, "text": "13;", "n_generated": 3, "ttft_us": ..., "total_us": ...}
+
+pub mod tcp;
+
+pub use tcp::{serve, Client};

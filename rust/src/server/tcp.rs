@@ -1,0 +1,129 @@
+//! Thread-based TCP serving front-end over the scheduler.
+
+use crate::coordinator::request::Request;
+use crate::coordinator::Scheduler;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Inbound {
+    req: Request,
+    conn: TcpStream,
+}
+
+/// Serve until `stop` flips true (tests) or forever (CLI). Binds `addr`,
+/// returns the bound address via the callback before blocking.
+pub fn serve(
+    mut sched: Scheduler,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).context("bind")?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let (tx, rx) = mpsc::channel::<Inbound>();
+    let next_id = Arc::new(AtomicU64::new(1));
+
+    // Acceptor + reader threads.
+    let stop_acc = stop.clone();
+    let acceptor = std::thread::spawn(move || {
+        while !stop_acc.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((conn, _)) => {
+                    let tx = tx.clone();
+                    let next_id = next_id.clone();
+                    std::thread::spawn(move || {
+                        let reader = BufReader::new(conn.try_clone().unwrap());
+                        for line in reader.lines().map_while(|l| l.ok()) {
+                            if line.trim().is_empty() {
+                                continue;
+                            }
+                            if let Ok(j) = Json::parse(&line) {
+                                let req = Request {
+                                    id: next_id.fetch_add(1, Ordering::Relaxed),
+                                    prompt: j.get("prompt").as_str().unwrap_or("").to_string(),
+                                    max_new_tokens: j
+                                        .get("max_new_tokens")
+                                        .as_usize()
+                                        .unwrap_or(32),
+                                    temperature: j.get("temperature").as_f64().map(|t| t as f32),
+                                    arrived: Instant::now(),
+                                };
+                                let _ = tx.send(Inbound {
+                                    req,
+                                    conn: conn.try_clone().unwrap(),
+                                });
+                            }
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    // Scheduler loop (owns the engine; single worker).
+    let mut conns: std::collections::HashMap<u64, TcpStream> = Default::default();
+    while !stop.load(Ordering::Relaxed) {
+        // ingest
+        while let Ok(inb) = rx.try_recv() {
+            conns.insert(inb.req.id, inb.conn);
+            sched.submit(inb.req);
+        }
+        let worked = sched.tick()?;
+        // flush completions
+        for c in sched.done.drain(..) {
+            if let Some(mut conn) = conns.remove(&c.id) {
+                let line = Json::obj(vec![
+                    ("id", Json::Num(c.id as f64)),
+                    ("text", Json::str(&c.text)),
+                    ("n_generated", Json::Num(c.n_generated as f64)),
+                    ("ttft_us", Json::Num(c.ttft_us as f64)),
+                    ("total_us", Json::Num(c.total_us as f64)),
+                ])
+                .dump();
+                let _ = writeln!(conn, "{line}");
+            }
+        }
+        if !worked {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let _ = acceptor.join();
+    Ok(())
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let conn = TcpStream::connect(addr)?;
+        let reader = BufReader::new(conn.try_clone()?);
+        Ok(Client { conn, reader })
+    }
+
+    /// Send one generation request and block for its completion.
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
+        ]);
+        writeln!(self.conn, "{}", req.dump())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+}

@@ -1,0 +1,141 @@
+//! Software IEEE-754 binary16 conversion.
+//!
+//! The paper stores scale factors and zero-points as FP16 (Table 3 budgets
+//! 0.5 bits of overhead per quantized number at group size 32). No `half`
+//! crate is available offline, so we implement the two conversions directly.
+//! Compute stays in f32; only the *stored* representation is f16, exactly as
+//! a CUDA kernel would load `__half` scales and widen them.
+
+/// Convert an f32 to the nearest IEEE binary16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let nan = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan | ((mant >> 13) as u16);
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal range
+        let mut e16 = (unbiased + 15) as u32;
+        let mut m16 = mant >> 13;
+        // round to nearest even on the 13 dropped bits
+        let rem = mant & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m16 & 1) == 1) {
+            m16 += 1;
+            if m16 == 0x400 {
+                m16 = 0;
+                e16 += 1;
+                if e16 >= 31 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | ((e16 as u16) << 10) | (m16 as u16);
+    }
+    // Subnormal f16
+    if unbiased < -25 {
+        return sign; // underflow to zero
+    }
+    let full = mant | 0x0080_0000; // implicit bit
+    let shift = (-14 - unbiased) as u32 + 13;
+    let mut m16 = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && (m16 & 1) == 1) {
+        m16 += 1;
+    }
+    sign | (m16 as u16)
+}
+
+/// Convert an IEEE binary16 bit pattern to f32.
+#[inline(always)]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 - 10;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 10) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through f16 precision (what a stored scale loses).
+#[inline(always)]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 1.5, 0.25, -0.375, 65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e6)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(-1e6)).is_infinite());
+    }
+
+    #[test]
+    fn subnormals_round_trip() {
+        let tiny = 6.0e-8f32; // within f16 subnormal range
+        let rt = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((rt - tiny).abs() < 6.0e-8);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // f16 has 11 bits of significand => rel err <= 2^-11 for normals.
+        let mut x = 1.1754944e-2f32;
+        while x < 1.0e4 {
+            let rt = f16_round(x);
+            assert!(((rt - x) / x).abs() <= 1.0 / 2048.0 + 1e-7, "x={x} rt={rt}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn sign_bit_is_msb() {
+        // The hybrid mask repurposes the sign bit of stored scales (paper §4.1.2):
+        // verify setting the MSB flips the sign and nothing else.
+        let s = f32_to_f16_bits(0.123);
+        let neg = s | 0x8000;
+        assert_eq!(f16_bits_to_f32(neg), -f16_bits_to_f32(s));
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+}

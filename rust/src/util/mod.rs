@@ -1,0 +1,6 @@
+//! Small self-contained utilities (no external deps available offline).
+pub mod fp16;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod stats;

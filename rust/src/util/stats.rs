@@ -1,0 +1,107 @@
+//! Timing and summary-statistics helpers for the bench harnesses.
+//!
+//! criterion is not available offline; the bench targets are plain binaries
+//! (`harness = false`) built on these helpers: warmup + N timed reps,
+//! mean / median / p95, matching the paper's protocol ("10 warm-up
+//! iterations, averaged over 100 measured runs").
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+    pub reps: usize,
+}
+
+impl Summary {
+    pub fn from_us(mut samples: Vec<f64>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        Summary {
+            mean_us: mean,
+            median_us: samples[n / 2],
+            p95_us: samples[(n as f64 * 0.95) as usize % n],
+            min_us: samples[0],
+            reps: n,
+        }
+    }
+}
+
+/// Run `f` with `warmup` untimed and `reps` timed iterations, returning
+/// per-iteration microsecond samples. A `black_box`-style sink prevents the
+/// optimizer from deleting the work: callers should return a value that
+/// depends on the computation.
+pub fn time_us<R, F: FnMut() -> R>(warmup: usize, reps: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        sink(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    Summary::from_us(samples)
+}
+
+/// Opaque value sink (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn sink<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Relative L2 error ||a-b|| / (||b|| + eps).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    let den: f32 = b.iter().map(|y| y * y).sum();
+    (num / (den + 1e-12)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_orders() {
+        let s = Summary::from_us(vec![3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.min_us, 1.0);
+        assert!(s.mean_us > s.min_us);
+        assert!(s.p95_us >= s.median_us);
+    }
+
+    #[test]
+    fn rel_l2_zero_for_equal() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert!(rel_l2(&a, &a) < 1e-6);
+    }
+
+    #[test]
+    fn timing_runs() {
+        let s = time_us(2, 5, || (0..1000).map(|i| i as f64).sum::<f64>());
+        assert_eq!(s.reps, 5);
+        assert!(s.min_us >= 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Rust port of the variable-recall corpus grammar
+//! (`python/compile/corpus.py`): single-letter variables, reassignment with
+//! latest-binding-wins, recall queries at the end. Used by the eval harness
+//! (Tables 1/2/7, Fig. 5) and the serving trace generator.
+
+use crate::util::rng::Rng;
+
+pub const CHARSET: &str = "abcdefghij0123456789=;?.";
+pub const N_NAMES: usize = 10;
+
+/// One generated document plus its ground truth.
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub text: String,
+    /// Index of the first query ('?') character.
+    pub query_start: usize,
+    /// (name, value) pairs queried, in order.
+    pub queries: Vec<(char, String)>,
+}
+
+/// Deterministic corpus generator.
+pub struct CorpusGen {
+    rng: Rng,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64) -> CorpusGen {
+        CorpusGen { rng: Rng::new(seed) }
+    }
+
+    /// `n_assign` (re)assignments followed by `n_queries` recall queries.
+    /// The first `N_NAMES` assignments cover each name once.
+    pub fn document(&mut self, n_assign: usize, n_queries: usize) -> Document {
+        let names: Vec<char> = CHARSET.chars().take(N_NAMES).collect();
+        let mut values: Vec<Option<String>> = vec![None; N_NAMES];
+        let mut text = String::new();
+        for i in 0..n_assign {
+            let idx = if i < N_NAMES { i } else { self.rng.next_range(N_NAMES) };
+            let val = format!("{:02}", self.rng.next_range(100));
+            text.push(names[idx]);
+            text.push('=');
+            text.push_str(&val);
+            text.push(';');
+            values[idx] = Some(val);
+        }
+        let query_start = text.len();
+        let assigned: Vec<usize> =
+            (0..N_NAMES).filter(|&i| values[i].is_some()).collect();
+        let mut queries = Vec::with_capacity(n_queries);
+        for qi in 0..n_queries {
+            let idx = assigned[self.rng.next_range(assigned.len())];
+            let val = values[idx].clone().unwrap();
+            text.push('?');
+            text.push(names[idx]);
+            text.push('=');
+            text.push_str(&val);
+            text.push(if qi + 1 == n_queries { '.' } else { ';' });
+            queries.push((names[idx], val));
+        }
+        Document { text, query_start, queries }
+    }
+}
+
+/// Token positions whose next-token prediction is a queried value digit:
+/// (position, target_token) with logits at `position` predicting
+/// `position+1`. Mirrors `corpus.query_positions` (token streams include a
+/// leading BOS, so caller passes tokens *with* BOS).
+pub fn query_positions(tokens: &[i32], charset: &str) -> Vec<(usize, i32)> {
+    let q = charset.chars().position(|c| c == '?').unwrap() as i32 + 1;
+    let eq = charset.chars().position(|c| c == '=').unwrap() as i32 + 1;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if tokens[i] == q && i + 4 < tokens.len() && tokens[i + 2] == eq {
+            out.push((i + 2, tokens[i + 3]));
+            out.push((i + 3, tokens[i + 4]));
+            i += 5;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn document_structure() {
+        let mut g = CorpusGen::new(1);
+        let d = g.document(30, 8);
+        assert_eq!(d.queries.len(), 8);
+        assert!(d.text.ends_with('.'));
+        assert_eq!(&d.text[d.query_start..d.query_start + 1], "?");
+        // every query's value matches the last assignment before queries
+        let body = &d.text[..d.query_start];
+        for (name, val) in &d.queries {
+            let last = body
+                .match_indices(&format!("{name}="))
+                .last()
+                .map(|(p, _)| &body[p + 2..p + 4])
+                .unwrap();
+            assert_eq!(last, val, "query {name}");
+        }
+    }
+
+    #[test]
+    fn charset_matches_python() {
+        // Guard against drift with python/compile/corpus.py.
+        assert_eq!(CHARSET, "abcdefghij0123456789=;?.");
+        assert_eq!(CHARSET.len(), 24);
+    }
+
+    #[test]
+    fn document_length_scales() {
+        let mut g = CorpusGen::new(2);
+        let small = g.document(30, 4).text.len();
+        let big = g.document(500, 4).text.len();
+        assert!(big > 2400 && small < 200, "small {small} big {big}");
+    }
+
+    #[test]
+    fn query_positions_found() {
+        let mut g = CorpusGen::new(3);
+        let d = g.document(12, 5);
+        // encode with the rust charset (BOS prepended like the engine does)
+        let mut toks = vec![0i32];
+        for c in d.text.chars() {
+            toks.push(CHARSET.chars().position(|x| x == c).unwrap() as i32 + 1);
+        }
+        let qs = query_positions(&toks, CHARSET);
+        assert_eq!(qs.len(), 10); // 2 digits per query
+        for (p, target) in qs {
+            assert_eq!(toks[p + 1], target);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = CorpusGen::new(42).document(20, 3);
+        let b = CorpusGen::new(42).document(20, 3);
+        assert_eq!(a.text, b.text);
+    }
+}

@@ -1,0 +1,5 @@
+//! Workload generation: the synthetic corpus (shared grammar with
+//! `python/compile/corpus.py`) and serving request traces.
+
+pub mod corpus;
+pub mod trace;

@@ -1,0 +1,69 @@
+//! Serving request traces: Poisson-ish arrivals over corpus prompts, used by
+//! the serving examples and the throughput/latency harness.
+
+use crate::coordinator::request::Request;
+use crate::util::rng::Rng;
+use crate::workload::corpus::CorpusGen;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    /// Variables per document (controls prompt length).
+    pub n_vars: usize,
+    pub n_queries: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { n_requests: 16, n_vars: 24, n_queries: 4, max_new_tokens: 48, seed: 7 }
+    }
+}
+
+/// Generate a request trace. Prompts end right after a '?name=' query stem so
+/// the served generation must recall from the cache.
+pub fn generate(cfg: TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut gen = CorpusGen::new(cfg.seed ^ 0xabcd);
+    (0..cfg.n_requests)
+        .map(|i| {
+            let doc = gen.document(cfg.n_vars, cfg.n_queries);
+            // cut at the first query stem: "...;?x="
+            let cut = doc.text.find('?').map(|p| p + 3).unwrap_or(doc.text.len());
+            let _ = rng.next_u64();
+            Request {
+                id: i as u64,
+                prompt: doc.text[..cut].to_string(),
+                max_new_tokens: cfg.max_new_tokens,
+                temperature: None,
+                arrived: Instant::now(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompts_end_with_query_stem() {
+        let reqs = generate(TraceConfig::default());
+        assert_eq!(reqs.len(), 16);
+        for r in &reqs {
+            assert!(r.prompt.contains('='));
+            let tail: Vec<char> = r.prompt.chars().rev().take(3).collect();
+            assert_eq!(tail[0], '=', "prompt should end at '?x=': {}", r.prompt);
+            assert_eq!(tail[2], '?');
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(TraceConfig::default());
+        let b = generate(TraceConfig::default());
+        assert_eq!(a[3].prompt, b[3].prompt);
+    }
+}

@@ -1,0 +1,291 @@
+//! Cross-layer integration tests: Rust (L3) against the artifacts and golden
+//! vectors produced by the Python build path (L2/L1).
+//!
+//! These tests need `make artifacts` to have run; they skip (with a note)
+//! when the manifest is missing so `cargo test` stays green pre-build.
+
+use innerq::coordinator::Engine;
+use innerq::quant::group::{quantize, Mode};
+use innerq::quant::QuantMethod;
+use innerq::runtime::executable::{In, Stage};
+use innerq::runtime::Manifest;
+use innerq::util::json::Json;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("[skip] artifacts/ not built; run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn load_json(path: &str) -> Json {
+    let text = std::fs::read_to_string(path).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+/// The Rust quantizer must agree with the Python reference bit-for-bit:
+/// identical codes, f16-identical scales/zeros, identical hybrid mask.
+#[test]
+fn quantizer_parity_with_python_reference() {
+    if manifest().is_none() {
+        return;
+    }
+    let g = load_json("artifacts/golden/quantizer.json");
+    let mat = g.get("matrix").as_f32_vec().unwrap();
+    let d_h = 64usize;
+    assert_eq!(mat.len(), 64 * d_h);
+    for case in g.get("cases").as_arr().unwrap() {
+        let bits = case.get("bits").as_usize().unwrap() as u8;
+        let mode = match case.get("mode").as_str().unwrap() {
+            "sym" => Mode::Sym,
+            "asym" => Mode::Asym,
+            _ => Mode::Hybrid,
+        };
+        let want_codes = case.get("codes").as_f32_vec().unwrap();
+        let want_scale = case.get("scale").as_f32_vec().unwrap();
+        let want_zero = case.get("zero").as_f32_vec().unwrap();
+        let want_mask = case.get("mask").as_f32_vec().unwrap();
+
+        let mut gi = 0usize;
+        let mut mismatched_codes = 0usize;
+        for row in mat.chunks_exact(d_h) {
+            for group in row.chunks_exact(32) {
+                let mut raw = [0u8; 32];
+                let p = quantize(mode, group, bits, &mut raw);
+                // scale magnitude parity (f16-exact)
+                let scale = p.scale_f32();
+                assert!(
+                    (scale - want_scale[gi]).abs() < 1e-6 * scale.abs().max(1e-3),
+                    "{mode:?} b{bits} group {gi}: scale {scale} vs {}",
+                    want_scale[gi]
+                );
+                // mask parity
+                assert_eq!(
+                    p.is_asym(),
+                    want_mask[gi] != 0.0,
+                    "{mode:?} b{bits} group {gi} mask"
+                );
+                if p.is_asym() {
+                    assert!(
+                        (p.zero_f32() - want_zero[gi]).abs() < 1e-6,
+                        "group {gi} zero"
+                    );
+                }
+                // code parity: python stores signed symmetric codes, rust
+                // stores biased raw codes. Allow <=1 ULP-of-rounding flips.
+                let bias = if p.is_asym() { 0 } else { (1 << (bits - 1)) - 1 };
+                for (i, &r) in raw.iter().enumerate() {
+                    let rust_code = r as i32 - bias;
+                    let py_code = want_codes[gi * 32 + i] as i32;
+                    if (rust_code - py_code).abs() > 0 {
+                        mismatched_codes += 1;
+                        assert!(
+                            (rust_code - py_code).abs() <= 1,
+                            "group {gi} elem {i}: {rust_code} vs {py_code}"
+                        );
+                    }
+                }
+                gi += 1;
+            }
+        }
+        // rounding-tie flips must be rare (<0.5%)
+        assert!(
+            (mismatched_codes as f64) < 0.005 * (mat.len() as f64),
+            "{mode:?} b{bits}: {mismatched_codes} code mismatches"
+        );
+    }
+}
+
+/// Each decode stage executable must reproduce the Python-side outputs.
+#[test]
+fn stage_golden_vectors() {
+    let Some(m) = manifest() else { return };
+    let g = load_json("artifacts/golden/stages.json");
+    let close = |a: &[f32], b: &[f32], tol: f32, what: &str| {
+        assert_eq!(a.len(), b.len(), "{what} length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "{what}[{i}]: {x} vs {y}");
+        }
+    };
+
+    let token = g.get("token").as_f64().unwrap() as i32;
+    let h_want = g.get("h").as_f32_vec().unwrap();
+    let embed = Stage::load("embed", &m.path("embed_b1").unwrap()).unwrap();
+    let h = embed.run(&[In::I32(&[token], &[1])]).unwrap().f32(0).unwrap();
+    close(&h, &h_want, 1e-4, "embed");
+
+    let qkv = Stage::load("qkv", &m.path("qkv_l0_b1").unwrap()).unwrap();
+    let out = qkv
+        .run(&[In::F32(&h, &[1, m.model.d_model as i64]), In::I32(&[0], &[1])])
+        .unwrap();
+    close(&out.f32(0).unwrap(), &g.get("q").as_f32_vec().unwrap(), 1e-3, "q");
+    close(&out.f32(1).unwrap(), &g.get("k").as_f32_vec().unwrap(), 1e-3, "k");
+    close(&out.f32(2).unwrap(), &g.get("v").as_f32_vec().unwrap(), 1e-3, "v");
+
+    let ctx = g.get("ctx").as_f32_vec().unwrap();
+    let h2_want = g.get("h2").as_f32_vec().unwrap();
+    let outl = Stage::load("out", &m.path("out_l0_b1").unwrap()).unwrap();
+    let h2 = outl
+        .run(&[
+            In::F32(&h, &[1, m.model.d_model as i64]),
+            In::F32(&ctx, &[1, m.model.q_dim() as i64]),
+        ])
+        .unwrap()
+        .f32(0)
+        .unwrap();
+    close(&h2, &h2_want, 1e-3, "out");
+
+    let head = Stage::load("head", &m.path("head_b1").unwrap()).unwrap();
+    let logits = head
+        .run(&[In::F32(&h2, &[1, m.model.d_model as i64])])
+        .unwrap()
+        .f32(0)
+        .unwrap();
+    close(&logits, &g.get("head").as_f32_vec().unwrap(), 1e-3, "head");
+}
+
+/// The full Rust decode loop (FP16 cache) must reproduce the Python staged
+/// decode trace logits step by step.
+#[test]
+fn fp_decode_matches_python_trace() {
+    let Some(m) = manifest() else { return };
+    let g = load_json("artifacts/golden/decode_fp.json");
+    let tokens: Vec<i32> =
+        g.get("tokens").as_f32_vec().unwrap().iter().map(|&t| t as i32).collect();
+    let logits_rows = g.get("logits").as_arr().unwrap();
+
+    let engine = Engine::new(m, QuantMethod::BaselineFp16.config()).unwrap();
+    let mut seq = engine.start_empty();
+    for (t, want_row) in tokens.iter().zip(logits_rows) {
+        engine.decode_step(&mut [&mut seq], &[*t]).unwrap();
+        let want = want_row.as_f32_vec().unwrap();
+        let got = &seq.last_logits;
+        let err = innerq::util::stats::max_abs_diff(got, &want);
+        assert!(err < 5e-3, "step logits diverged: {err}");
+    }
+}
+
+/// Prefill and step-by-step decode must agree (FP path): same final logits.
+#[test]
+fn prefill_equals_stepwise_decode() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new(m.clone(), QuantMethod::BaselineFp16.config()).unwrap();
+    let prompt = {
+        let mut t = vec![m.bos];
+        t.extend(m.encode("a=41;b=07;c=93;?b=").unwrap());
+        t
+    };
+    let seq_prefill = engine.prefill(&prompt).unwrap();
+    let mut seq_step = engine.start_empty();
+    for t in &prompt {
+        engine.decode_step(&mut [&mut seq_step], &[*t]).unwrap();
+    }
+    let err = innerq::util::stats::max_abs_diff(&seq_prefill.last_logits, &seq_step.last_logits);
+    assert!(err < 5e-3, "prefill vs stepwise logits: {err}");
+    assert_eq!(seq_prefill.len(), seq_step.len());
+}
+
+/// The Pallas-lowered quantized-attention artifact (L1 inside L2) must agree
+/// with the Rust native InnerQ attention on the same quantized cache.
+#[test]
+fn pallas_quant_attention_matches_rust() {
+    let Some(m) = manifest() else { return };
+    let n = m.quant_attn_tokens;
+    let d_h = m.model.d_h;
+    let ng = d_h / 32;
+    let mut rng = innerq::util::rng::Rng::new(77);
+
+    // Build a random cache and quantize it with the Rust quantizer in the
+    // exact layouts the artifact expects (signed sym codes as i32).
+    let keys: Vec<f32> = (0..n * d_h).map(|_| rng.next_normal()).collect();
+    let vals: Vec<f32> = (0..n * d_h).map(|_| rng.next_normal()).collect();
+    let q: Vec<f32> = (0..d_h).map(|_| rng.next_normal()).collect();
+
+    let bias = 3i32; // 3-bit symmetric
+    let mut kcodes = vec![0i32; n * d_h];
+    let mut kscale = vec![0f32; n * ng];
+    let mut raw = [0u8; 32];
+    for (t, row) in keys.chunks_exact(d_h).enumerate() {
+        for (gi, group) in row.chunks_exact(32).enumerate() {
+            let p = quantize(Mode::Sym, group, 3, &mut raw);
+            kscale[t * ng + gi] = p.scale_f32();
+            for i in 0..32 {
+                kcodes[t * d_h + gi * 32 + i] = raw[i] as i32 - bias;
+            }
+        }
+    }
+    // value chunks: (n/32, d_h, 32) channel-major
+    let chunks = n / 32;
+    let mut vcodes = vec![0i32; n * d_h];
+    let mut vscale = vec![0f32; chunks * d_h];
+    let mut col = [0f32; 32];
+    for c in 0..chunks {
+        for ch in 0..d_h {
+            for t in 0..32 {
+                col[t] = vals[(c * 32 + t) * d_h + ch];
+            }
+            let p = quantize(Mode::Sym, &col, 3, &mut raw);
+            vscale[c * d_h + ch] = p.scale_f32();
+            for t in 0..32 {
+                vcodes[(c * d_h + ch) * 32 + t] = raw[t] as i32 - bias;
+            }
+        }
+    }
+
+    let stage = Stage::load("quant_attn", &m.path("quant_attn").unwrap()).unwrap();
+    let out = stage
+        .run(&[
+            In::F32(&q, &[d_h as i64]),
+            In::I32(&kcodes, &[n as i64, ng as i64, 32]),
+            In::F32(&kscale, &[n as i64, ng as i64]),
+            In::I32(&vcodes, &[chunks as i64, d_h as i64, 32]),
+            In::F32(&vscale, &[chunks as i64, d_h as i64]),
+        ])
+        .unwrap();
+    let pallas_ctx = out.f32(0).unwrap();
+
+    // Rust native: same quantized cache via a window-less InnerQ config.
+    let mut cfg = QuantMethod::InnerQBase.config();
+    cfg.w_sink = 0;
+    cfg.w_recent = 0;
+    cfg.key_norm = false;
+    let mut hc = innerq::cache::HeadCache::new(cfg, d_h);
+    for (k, v) in keys.chunks_exact(d_h).zip(vals.chunks_exact(d_h)) {
+        hc.append(k, v);
+    }
+    assert_eq!(hc.qk.len(), n, "all tokens quantized");
+    let mut ctx = vec![0f32; d_h];
+    let mut scratch = Vec::new();
+    hc.attend(&q, &mut ctx, &mut scratch);
+
+    let rel = innerq::util::stats::rel_l2(&pallas_ctx, &ctx);
+    assert!(rel < 5e-3, "pallas vs rust quantized attention: rel {rel}");
+}
+
+/// End-to-end scheduler smoke: submit a few requests, run to completion.
+#[test]
+fn scheduler_serves_requests() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new(m, QuantMethod::InnerQBase.config()).unwrap();
+    let mut sched = innerq::coordinator::Scheduler::new(engine, 1 << 30);
+    for (i, prompt) in ["a=41;b=07;?a=", "c=15;d=33;?d=", "e=99;?e="].iter().enumerate() {
+        sched.submit(innerq::coordinator::Request {
+            id: i as u64,
+            prompt: prompt.to_string(),
+            max_new_tokens: 6,
+            temperature: None,
+            arrived: std::time::Instant::now(),
+        });
+    }
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 3);
+    for c in &done {
+        assert!(c.n_generated > 0);
+        assert!(c.ttft_us > 0);
+    }
+    assert!(sched.metrics.decode_steps > 0);
+    assert!(sched.metrics.batched_seqs >= sched.metrics.decode_steps);
+}
