@@ -1,0 +1,116 @@
+//! Decode attention scaling: batched (sequence x KV head) fan-out through
+//! the worker pool, sweeping batch size x worker count at one Llama-3.1-8B
+//! layer geometry (32 q heads over 8 KV heads, d_h 128, InnerQ_Base caches).
+//!
+//! This is the tentpole measurement for the parallel decode path: jobs are
+//! built exactly like `Engine::decode_step` builds them (one job per
+//! sequence x KV head, owning a contiguous rep*d_h slice of the context
+//! buffer), so the numbers are the engine's attention phase without PJRT
+//! stage noise. The harness also *checks* the determinism contract: every
+//! worker count must reproduce the workers=1 context buffer byte-for-byte.
+//!
+//! ```bash
+//! cargo bench --bench decode_scaling              # full sweep
+//! cargo bench --bench decode_scaling 1024         # override tokens/seq
+//! ```
+
+use innerq::cache::{attention_fanout, HeadCache};
+use innerq::util::rng::Rng;
+use innerq::util::stats::time_us;
+use innerq::util::threadpool::ThreadPool;
+use innerq::QuantMethod;
+
+const D_H: usize = 128;
+const N_KV: usize = 8;
+const N_Q: usize = 32;
+const REP: usize = N_Q / N_KV;
+
+/// One decode step's attention fan-out over `caches[..batch]`, built by the
+/// same `attention_fanout` the engine uses so the bench cannot drift from
+/// the production job shape.
+fn step(pool: &ThreadPool, caches: &[Vec<HeadCache>], q: &[f32], ctx: &mut [f32]) {
+    let heads = caches.iter().flat_map(|s| s.iter());
+    pool.run(attention_fanout(heads, q, ctx, REP, D_H));
+}
+
+fn main() {
+    let n_tokens: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(1024);
+    let batches = [1usize, 2, 4, 8];
+    let worker_counts = [1usize, 2, 4, 8];
+    let max_batch = *batches.last().unwrap();
+
+    eprintln!(
+        "[decode_scaling] building {max_batch} x {N_KV} InnerQ caches @ {n_tokens} tokens ..."
+    );
+    let cfg = QuantMethod::InnerQBase.config();
+    let mut rng = Rng::new(2026);
+    let caches: Vec<Vec<HeadCache>> = (0..max_batch)
+        .map(|_| {
+            (0..N_KV)
+                .map(|_| {
+                    let keys: Vec<f32> =
+                        (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
+                    let vals: Vec<f32> =
+                        (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
+                    HeadCache::from_prefill(cfg, D_H, &keys, &vals)
+                })
+                .collect()
+        })
+        .collect();
+    let q: Vec<f32> = (0..max_batch * N_Q * D_H).map(|_| rng.next_normal()).collect();
+
+    println!(
+        "Decode attention scaling (InnerQ_Base, d_h {D_H}, {N_KV} KV heads x{REP} GQA, {n_tokens} tok/seq)"
+    );
+    println!(
+        "{:<7} {:>9} {:>12} {:>12} {:>10} {:>12}",
+        "batch", "workers", "step µs", "speedup", "tok/s", "identical"
+    );
+
+    for &batch in &batches {
+        let caches = &caches[..batch];
+        let q = &q[..batch * N_Q * D_H];
+        let mut serial_ctx: Option<Vec<f32>> = None;
+        let mut serial_us = 0.0f64;
+        for &workers in &worker_counts {
+            let pool = ThreadPool::new(workers);
+            let mut ctx = vec![0f32; batch * N_Q * D_H];
+            let (w, r) = if n_tokens <= 2048 { (3, 12) } else { (2, 6) };
+            let s = time_us(w, r, || {
+                step(&pool, caches, q, &mut ctx);
+                ctx[0]
+            });
+            // Determinism contract: byte-identical to the serial baseline.
+            let identical = match &serial_ctx {
+                None => {
+                    serial_ctx = Some(ctx.clone());
+                    serial_us = s.mean_us;
+                    true
+                }
+                Some(base) => base == &ctx,
+            };
+            assert!(
+                identical,
+                "batch {batch} workers {workers}: context diverged from serial"
+            );
+            // Attention "token throughput": cache tokens scored+mixed per
+            // second across all query heads of the batch.
+            let toks = (batch * N_Q * n_tokens) as f64 / (s.mean_us * 1e-6);
+            println!(
+                "{:<7} {:>9} {:>12.0} {:>11.2}x {:>10.2e} {:>12}",
+                batch,
+                workers,
+                s.mean_us,
+                serial_us / s.mean_us,
+                toks,
+                identical
+            );
+        }
+        if batch == 8 {
+            println!("(acceptance: expect >= 2x speedup at batch 8, workers 4, on >= 4 cores)");
+        }
+    }
+}

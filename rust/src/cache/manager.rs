@@ -19,6 +19,39 @@ use crate::kernels::gemv_fp;
 use crate::kernels::softmax::softmax_scaled;
 use crate::quant::norm::ChannelNorm;
 use crate::quant::{Grouping, MethodConfig};
+use crate::util::threadpool::Job;
+
+/// Build one decode step's attention fan-out: `caches` yields one
+/// `&HeadCache` per (sequence, KV head) in sequence-major order, and job
+/// `c` attends query heads `c*rep .. (c+1)*rep` of `q` into its disjoint
+/// `rep * d_h` slice of `ctx` (so `ctx` must hold at least
+/// `count(caches) * rep * d_h` f32). This is the single definition of the
+/// fan-out shape — the engine, the decode-scaling bench, and the
+/// determinism tests all build their jobs here so they cannot drift apart.
+pub fn attention_fanout<'a>(
+    caches: impl IntoIterator<Item = &'a HeadCache>,
+    q: &'a [f32],
+    ctx: &'a mut [f32],
+    rep: usize,
+    d_h: usize,
+) -> Vec<Job<'a>> {
+    let mut jobs: Vec<Job<'a>> = Vec::new();
+    let mut chunks = ctx.chunks_mut(rep * d_h);
+    for (c, cache) in caches.into_iter().enumerate() {
+        let out_chunk = chunks.next().expect("one rep*d_h ctx chunk per cache");
+        jobs.push(Box::new(move |scratch: &mut Vec<f32>| {
+            for r in 0..rep {
+                let qb = (c * rep + r) * d_h;
+                cache.attend(
+                    &q[qb..qb + d_h],
+                    &mut out_chunk[r * d_h..(r + 1) * d_h],
+                    scratch,
+                );
+            }
+        }));
+    }
+    jobs
+}
 
 /// Unified key-segment dispatch.
 #[derive(Debug)]
@@ -295,7 +328,11 @@ impl HeadCache {
     /// Full decode attention for one query head vector against this cache
     /// (Eq. 3–5 with the Fig. 2 merge). `out` receives the context vector.
     ///
-    /// `scratch` must hold at least `n_tokens + d_h` f32.
+    /// Takes `&self` with externally-owned `scratch` (resized to
+    /// `n_tokens + d_h` f32 as needed) precisely so the engine's worker pool
+    /// can attend over disjoint heads concurrently: the caches are only
+    /// read here, each worker brings its own scratch arena, and all
+    /// mutation (`append`) stays on the driver thread between fan-outs.
     pub fn attend(&self, q: &[f32], out: &mut [f32], scratch: &mut Vec<f32>) {
         let n = self.n_tokens;
         let d_h = self.d_h;
@@ -550,6 +587,59 @@ mod tests {
         let (err_with, _) = run_method(QuantMethod::InnerQBase, 400, 10, 9);
         assert!(err_with.is_finite());
         assert!(err_with < 0.8, "with norm {err_with}");
+    }
+
+    #[test]
+    fn head_cache_is_shareable_across_workers() {
+        // The decode worker pool sends `&HeadCache` into jobs on other
+        // threads; this pins the auto-trait requirement at compile time so
+        // a future RefCell/Rc in any segment fails here, not in the engine.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<HeadCache>();
+    }
+
+    #[test]
+    fn concurrent_attend_matches_serial_bit_for_bit() {
+        use crate::util::threadpool::ThreadPool;
+        // 8 sequences x 2 heads of real InnerQ caches, fanned out exactly
+        // like Engine::decode_step. Any worker count must reproduce the
+        // serial context buffer byte-for-byte (disjoint outputs, unchanged
+        // FP reduction order).
+        let d_h = 64;
+        let cfg = QuantMethod::InnerQBase.config();
+        let mut rng = Rng::new(77);
+        let n_seq = 8;
+        let n_heads = 2;
+        let n_tokens = 300; // past the high-precision windows
+        let caches: Vec<Vec<HeadCache>> = (0..n_seq)
+            .map(|_| {
+                (0..n_heads)
+                    .map(|_| {
+                        let keys = normal_vec(&mut rng, n_tokens * d_h, 1.0, 0.02);
+                        let vals = normal_vec(&mut rng, n_tokens * d_h, 1.0, 0.02);
+                        HeadCache::from_prefill(cfg, d_h, &keys, &vals)
+                    })
+                    .collect()
+            })
+            .collect();
+        let q = normal_vec(&mut rng, n_seq * n_heads * d_h, 1.0, 0.0);
+
+        let run = |workers: usize| -> Vec<f32> {
+            let pool = ThreadPool::new(workers);
+            let mut ctx = vec![0f32; n_seq * n_heads * d_h];
+            {
+                let heads = caches.iter().flat_map(|s| s.iter());
+                pool.run(attention_fanout(heads, &q, &mut ctx, 1, d_h));
+            }
+            ctx
+        };
+
+        let serial = run(1);
+        assert!(serial.iter().all(|v| v.is_finite()));
+        assert!(serial.iter().any(|&v| v != 0.0));
+        for workers in [2usize, 4, 8] {
+            assert_eq!(run(workers), serial, "workers={workers} diverged");
+        }
     }
 
     #[test]

@@ -6,30 +6,42 @@
 //! ```text
 //!   embed(tokens) -> h
 //!   for each layer:  qkv(h, pos) -> q,k,v       [PJRT]
-//!                    cache.append(k, v)          [Rust, per seq/KV head]
-//!                    ctx = attend(q)             [Rust fused kernels]
+//!                    cache.append(k, v)          [Rust, driver thread]
+//!                    ctx = attend(q)             [Rust fused kernels,
+//!                                                 worker pool fan-out]
 //!                    h = out(h, ctx)             [PJRT]
 //!   logits = head(h)                             [PJRT]
 //! ```
 //!
+//! PJRT stages stay on the driver thread (the PJRT client is thread-local);
+//! the attention fan-out between them is where decode spends its time once
+//! dequantization is cheap (§4.4), so it runs on the worker pool: each
+//! (sequence, KV head) pair is one job that reads its `HeadCache` immutably
+//! and owns a disjoint `rep * d_h` slice of the context buffer. Jobs carry
+//! no cross-job reductions and their internal FP order matches the serial
+//! loop, so completions are byte-identical for any worker count, and
+//! `workers = 1` executes inline with zero pool overhead.
+//!
 //! Python never runs here; the executables were compiled from
 //! `artifacts/*.hlo.txt` at engine start.
 
-use crate::cache::HeadCache;
+use crate::cache::{attention_fanout, HeadCache};
 use crate::quant::MethodConfig;
 use crate::runtime::executable::{In, Stage};
 use crate::runtime::Manifest;
+use crate::util::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 
 /// One live sequence: token history + per-layer, per-KV-head caches.
+/// Attention scratch lives with the pool workers, not the sequence, so
+/// disjoint heads of the same sequence can attend concurrently.
 pub struct Sequence {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub caches: Vec<Vec<HeadCache>>, // [layer][kv_head]
     pub n_prefill: usize,
     pub last_logits: Vec<f32>,
-    scratch: Vec<f32>,
 }
 
 impl Sequence {
@@ -40,6 +52,9 @@ impl Sequence {
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
 }
 
 /// The model engine for one quantization method.
@@ -47,19 +62,39 @@ pub struct Engine {
     pub manifest: Manifest,
     pub cfg: MethodConfig,
     stages: HashMap<String, Stage>,
+    pool: ThreadPool,
     next_id: std::sync::atomic::AtomicU64,
 }
 
 impl Engine {
     /// Load and compile every decode stage eagerly (prefill buckets lazily
     /// would also work, but eager keeps decode latency deterministic).
+    /// Starts with one worker (serial attention); see [`Engine::set_workers`].
     pub fn new(manifest: Manifest, cfg: MethodConfig) -> Result<Engine> {
         let mut stages = HashMap::new();
         for (key, _) in manifest.artifacts.iter() {
             let stage = Stage::load(key, &manifest.path(key)?)?;
             stages.insert(key.clone(), stage);
         }
-        Ok(Engine { manifest, cfg, stages, next_id: 0.into() })
+        Ok(Engine {
+            manifest,
+            cfg,
+            stages,
+            pool: ThreadPool::new(1),
+            next_id: 0.into(),
+        })
+    }
+
+    /// Resize the attention worker pool to `workers` total threads (the
+    /// driver counts as one; 1 = the serial baseline).
+    pub fn set_workers(&mut self, workers: usize) {
+        if workers.max(1) != self.pool.workers() {
+            self.pool = ThreadPool::new(workers);
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     fn stage(&self, key: &str) -> Result<&Stage> {
@@ -106,7 +141,6 @@ impl Engine {
             caches,
             n_prefill: n,
             last_logits: logits[vstart..vstart + dims.vocab].to_vec(),
-            scratch: Vec::new(),
         })
     }
 
@@ -132,6 +166,7 @@ impl Engine {
 
         let rep = dims.heads_per_kv();
         let (d_h, q_dim) = (dims.d_h, dims.q_dim());
+        let n_kv = dims.n_kv_heads;
         for l in 0..dims.n_layers {
             let out = self.stage(&format!("qkv_l{l}_b{bb}"))?.run(&[
                 In::F32(&h, &[bb as i64, dims.d_model as i64]),
@@ -141,26 +176,24 @@ impl Engine {
             let k = out.f32(1)?; // (bb, n_kv, d_h)
             let v = out.f32(2)?;
 
-            // Rust-owned quantized attention per sequence / head.
-            let mut ctx = vec![0f32; bb * q_dim];
+            // Append this step's K/V on the driver — the only cache mutation.
             for (i, s) in seqs.iter_mut().enumerate() {
-                for hk in 0..dims.n_kv_heads {
-                    let kb = (i * dims.n_kv_heads + hk) * d_h;
-                    let cache = &mut s.caches[l][hk];
-                    cache.append(&k[kb..kb + d_h], &v[kb..kb + d_h]);
-                    for r in 0..rep {
-                        let hq = hk * rep + r;
-                        let qb = (i * dims.n_q_heads + hq) * d_h;
-                        let ob = i * q_dim + hq * d_h;
-                        let mut scratch = std::mem::take(&mut s.scratch);
-                        cache.attend(
-                            &q[qb..qb + d_h],
-                            &mut ctx[ob..ob + d_h],
-                            &mut scratch,
-                        );
-                        s.scratch = scratch;
-                    }
+                for hk in 0..n_kv {
+                    let kb = (i * n_kv + hk) * d_h;
+                    s.caches[l][hk].append(&k[kb..kb + d_h], &v[kb..kb + d_h]);
                 }
+            }
+
+            // Fan the attention out across the pool: one job per
+            // (sequence, KV head), each owning the contiguous rep*d_h slice
+            // of ctx its query heads write (see `cache::attention_fanout`
+            // for the shared job shape). Slices are disjoint by
+            // construction, so write-back is deterministic and matches the
+            // serial loop exactly.
+            let mut ctx = vec![0f32; bb * q_dim];
+            {
+                let heads = seqs.iter().flat_map(|s| s.caches[l].iter());
+                self.pool.run(attention_fanout(heads, &q, &mut ctx, rep, d_h));
             }
 
             h = self
@@ -199,24 +232,84 @@ impl Engine {
             caches,
             n_prefill: 0,
             last_logits: Vec::new(),
-            scratch: Vec::new(),
         }
     }
 
-    /// Greedy next token from a sequence's last logits.
+    /// Greedy next token from a sequence's last logits. NaN-safe: NaN logits
+    /// are skipped (a NaN must never panic the scheduler), and ties resolve
+    /// to the lowest index via the `total_cmp` total order.
     pub fn argmax(logits: &[f32]) -> i32 {
         logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap_or(0)
     }
 
-    /// Log-softmax probability of `token` under `logits`.
+    /// Log-softmax probability of `token` under `logits`. Guards empty
+    /// input, out-of-range tokens, and non-finite logits (returns -inf
+    /// rather than poisoning downstream NLL sums with NaN).
     pub fn log_prob(logits: &[f32], token: i32) -> f32 {
-        let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let lse = m + logits.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
-        logits[token as usize] - lse
+        if token < 0 || token as usize >= logits.len() {
+            return f32::NEG_INFINITY;
+        }
+        let m = logits
+            .iter()
+            .filter(|v| !v.is_nan())
+            .fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        if !m.is_finite() {
+            return f32::NEG_INFINITY;
+        }
+        let lse = m
+            + logits
+                .iter()
+                .map(|&v| if v.is_nan() { 0.0 } else { (v - m).exp() })
+                .sum::<f32>()
+                .ln();
+        let v = logits[token as usize];
+        if v.is_nan() {
+            return f32::NEG_INFINITY;
+        }
+        v - lse
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ignores_nan_and_survives_all_nan() {
+        assert_eq!(Engine::argmax(&[0.5, f32::NAN, 2.0, 1.0]), 2);
+        assert_eq!(Engine::argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(Engine::argmax(&[]), 0);
+        assert_eq!(Engine::argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn log_prob_guards_bad_inputs() {
+        assert_eq!(Engine::log_prob(&[], 0), f32::NEG_INFINITY);
+        assert_eq!(Engine::log_prob(&[1.0, 2.0], 5), f32::NEG_INFINITY);
+        assert_eq!(Engine::log_prob(&[1.0, 2.0], -1), f32::NEG_INFINITY);
+        let lp = Engine::log_prob(&[1.0, f32::NAN, 2.0], 2);
+        assert!(lp.is_finite() && lp < 0.0);
+        assert_eq!(Engine::log_prob(&[1.0, f32::NAN, 2.0], 1), f32::NEG_INFINITY);
+        assert_eq!(
+            Engine::log_prob(&[f32::NAN, f32::NAN], 0),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn log_prob_matches_softmax_on_clean_input() {
+        let logits = [0.1f32, 1.4, -0.7, 2.0];
+        let sum: f32 = logits.iter().map(|v| v.exp()).sum();
+        for (t, &v) in logits.iter().enumerate() {
+            let want = (v.exp() / sum).ln();
+            let got = Engine::log_prob(&logits, t as i32);
+            assert!((got - want).abs() < 1e-5, "token {t}: {got} vs {want}");
+        }
     }
 }

@@ -23,6 +23,24 @@ pub struct Completion {
     /// Time-to-first-token and total latency, in microseconds.
     pub ttft_us: u64,
     pub total_us: u64,
+    /// Why the request failed, if it did (rejected, unencodable prompt,
+    /// prefill failure) — `None` for a normal completion.
+    pub error: Option<String>,
+}
+
+impl Completion {
+    /// A failed terminal state: empty text, zero progress, the reason kept.
+    pub fn failed(req: &Request, reason: impl Into<String>) -> Completion {
+        Completion {
+            id: req.id,
+            text: String::new(),
+            n_prompt: req.prompt.len(),
+            n_generated: 0,
+            ttft_us: 0,
+            total_us: req.arrived.elapsed().as_micros() as u64,
+            error: Some(reason.into()),
+        }
+    }
 }
 
 /// Scheduler-visible request state.
@@ -41,4 +59,12 @@ pub struct StepMetrics {
     pub decode_steps: u64,
     pub batched_seqs: u64,
     pub preemptions: u64,
+    /// Attention jobs fanned out to the worker pool (one per sequence x
+    /// KV head x layer per decode step).
+    pub attn_jobs: u64,
+    /// Cache-pool reservations found without a live owner and released.
+    pub stale_reservations: u64,
+    /// Requests terminated without generation (unencodable, over budget,
+    /// unsatisfiable under pressure, prefill failure).
+    pub rejected: u64,
 }

@@ -1,6 +1,7 @@
 //! Prefill/decode scheduler: admission via the cache pool, FIFO prefill, and
-//! continuous decode batching. Single-worker synchronous loop (the testbed
-//! is one CPU core; the router generalizes across workers).
+//! continuous decode batching. Synchronous loop on the driver thread; the
+//! per-step attention fan-out inside `Engine::decode_step` runs on the
+//! engine's worker pool (`--workers N`).
 
 use crate::cache::{Admission, CachePool};
 use crate::coordinator::batcher;
@@ -52,6 +53,11 @@ impl Scheduler {
         }
     }
 
+    /// Resize the engine's attention worker pool (1 = serial baseline).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.engine.set_workers(workers);
+    }
+
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(req);
     }
@@ -68,56 +74,102 @@ impl Scheduler {
         2 * 2 * n * d.d_h * d.n_kv_heads * d.n_layers
     }
 
+    /// Admit the queue head if the cache pool allows it.
+    fn admit_head(&mut self) -> Result<()> {
+        let Some(req) = self.queue.front() else { return Ok(()) };
+        let est = self.estimate_bytes(req);
+        match self.pool.admit(req.id, est) {
+            Admission::Admitted => {
+                let req = self.queue.pop_front().unwrap();
+                // A bad prompt (or a failing prefill) must fail the request,
+                // not the scheduler — and must give its reservation back.
+                let prompt = match self.engine.manifest.encode(&req.prompt) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.pool.release(req.id);
+                        self.metrics.rejected += 1;
+                        self.done.push(Completion::failed(&req, e.to_string()));
+                        return Ok(());
+                    }
+                };
+                let t0 = Instant::now();
+                let seq = match self.engine.prefill(&prompt) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        self.pool.release(req.id);
+                        self.metrics.rejected += 1;
+                        self.done.push(Completion::failed(&req, e.to_string()));
+                        return Ok(());
+                    }
+                };
+                self.metrics.prefill_tokens += prompt.len() as u64;
+                let next = self.sample(&seq.last_logits, req.temperature);
+                self.live.push(Live {
+                    ttft_us: Some(t0.elapsed().as_micros() as u64),
+                    req,
+                    seq,
+                    generated: Vec::new(),
+                    next_token: next,
+                });
+            }
+            Admission::Pressure => {
+                // Preempt strictly-younger live work (recompute-style): the
+                // request goes back to the queue and its cache is dropped.
+                // Reservations without a live owner (e.g. left behind by a
+                // crashed prefill) are released on the way, so admission can
+                // never live-lock on a stale id. If all live work is older
+                // than the head, the head parks and waits — preempting older
+                // work would just thrash prefills back and forth.
+                let head_id = req.id;
+                let mut progressed = false;
+                while let Some(victim) = self.pool.youngest() {
+                    match self.live.iter().position(|l| l.req.id == victim) {
+                        None => {
+                            self.pool.release(victim);
+                            self.metrics.stale_reservations += 1;
+                            progressed = true;
+                        }
+                        Some(idx) if victim > head_id => {
+                            let l = self.live.swap_remove(idx);
+                            self.pool.release(victim);
+                            self.metrics.preemptions += 1;
+                            self.queue.push_back(l.req);
+                            progressed = true;
+                            break;
+                        }
+                        Some(_) => break, // oldest work keeps running
+                    }
+                }
+                if !progressed && self.live.is_empty() {
+                    // Nothing to wait for and nothing to evict: the estimate
+                    // cannot be satisfied — reject instead of spinning.
+                    let req = self.queue.pop_front().unwrap();
+                    self.metrics.rejected += 1;
+                    self.done.push(Completion::failed(
+                        &req,
+                        "cache pressure with nothing to preempt",
+                    ));
+                }
+            }
+            Admission::TooLarge => {
+                let req = self.queue.pop_front().unwrap();
+                self.metrics.rejected += 1;
+                self.done.push(Completion::failed(
+                    &req,
+                    "request exceeds the cache budget outright",
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// One scheduler tick: admit at most one prefill, then one decode step
     /// over the live batch. Returns false when idle.
     pub fn tick(&mut self) -> Result<bool> {
         if self.queue.is_empty() && self.live.is_empty() {
             return Ok(false);
         }
-        // --- admission / prefill ---
-        if let Some(req) = self.queue.front() {
-            let est = self.estimate_bytes(req);
-            match self.pool.admit(req.id, est) {
-                Admission::Admitted => {
-                    let req = self.queue.pop_front().unwrap();
-                    let prompt = self.engine.manifest.encode(&req.prompt)?;
-                    let t0 = Instant::now();
-                    let seq = self.engine.prefill(&prompt)?;
-                    self.metrics.prefill_tokens += prompt.len() as u64;
-                    let next = self.sample(&seq.last_logits, req.temperature);
-                    self.live.push(Live {
-                        ttft_us: Some(t0.elapsed().as_micros() as u64),
-                        req,
-                        seq,
-                        generated: Vec::new(),
-                        next_token: next,
-                    });
-                }
-                Admission::Pressure => {
-                    // Preempt the youngest live sequence (recompute-style):
-                    // push its request back to the queue and drop its cache.
-                    if let Some(victim) = self.pool.youngest() {
-                        if let Some(idx) = self.live.iter().position(|l| l.req.id == victim) {
-                            let l = self.live.swap_remove(idx);
-                            self.pool.release(victim);
-                            self.metrics.preemptions += 1;
-                            self.queue.push_back(l.req);
-                        }
-                    }
-                }
-                Admission::TooLarge => {
-                    let req = self.queue.pop_front().unwrap();
-                    self.done.push(Completion {
-                        id: req.id,
-                        text: String::new(),
-                        n_prompt: req.prompt.len(),
-                        n_generated: 0,
-                        ttft_us: 0,
-                        total_us: 0,
-                    });
-                }
-            }
-        }
+        self.admit_head()?;
 
         // --- decode step ---
         if !self.live.is_empty() {
@@ -142,17 +194,23 @@ impl Scheduler {
             }
             self.engine.decode_step(&mut seqs, &tokens)?;
             drop(seqs);
+            let d = &self.engine.manifest.model;
             self.metrics.decode_steps += 1;
             self.metrics.batched_seqs += idxs.len() as u64;
+            self.metrics.attn_jobs += (idxs.len() * d.n_kv_heads * d.n_layers) as u64;
 
-            // post-step: record generated tokens, sample next, finish.
+            // post-step: record generated tokens, sample next, finish. The
+            // stop token terminates the sequence but is *excluded* from the
+            // completion text and count.
             let mut finished = Vec::new();
             for &i in &idxs {
                 let l = &mut self.live[i];
-                l.generated.push(l.next_token);
+                let is_stop = l.next_token == self.stop_token;
+                if !is_stop {
+                    l.generated.push(l.next_token);
+                }
                 self.pool.update(l.req.id, l.seq.cache_bytes());
-                let done = l.next_token == self.stop_token
-                    || l.generated.len() >= l.req.max_new_tokens;
+                let done = is_stop || l.generated.len() >= l.req.max_new_tokens;
                 if done {
                     finished.push(i);
                 } else {
@@ -174,6 +232,7 @@ impl Scheduler {
                     n_generated: l.generated.len(),
                     ttft_us: l.ttft_us.unwrap_or(0),
                     total_us: l.req.arrived.elapsed().as_micros() as u64,
+                    error: None,
                 });
             }
         }
@@ -189,8 +248,19 @@ impl Scheduler {
             None => Engine::argmax(logits),
             Some(t) => {
                 let t = t.max(1e-3);
-                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-                let ps: Vec<f32> = logits.iter().map(|&v| ((v - m) / t).exp()).collect();
+                // Non-finite logits carry zero probability mass (a NaN here
+                // must not poison the whole distribution).
+                let m = logits
+                    .iter()
+                    .filter(|v| v.is_finite())
+                    .fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                if !m.is_finite() {
+                    return Engine::argmax(logits);
+                }
+                let ps: Vec<f32> = logits
+                    .iter()
+                    .map(|&v| if v.is_finite() { ((v - m) / t).exp() } else { 0.0 })
+                    .collect();
                 let sum: f32 = ps.iter().sum();
                 let mut u = rng.next_f32() * sum;
                 for (i, &p) in ps.iter().enumerate() {
@@ -208,5 +278,25 @@ impl Scheduler {
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
         while self.tick()? {}
         Ok(std::mem::take(&mut self.done))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temperature_sampling_survives_nan_logits() {
+        let mut rng = Rng::new(1);
+        let logits = [1.0f32, f32::NAN, 0.5, f32::NEG_INFINITY];
+        for _ in 0..50 {
+            let t = Scheduler::sample_with(&mut rng, &logits, Some(0.7));
+            assert!(t == 0 || t == 2, "sampled NaN/-inf token {t}");
+        }
+        // All-NaN falls back to argmax's index-0 default.
+        assert_eq!(
+            Scheduler::sample_with(&mut rng, &[f32::NAN, f32::NAN], Some(1.0)),
+            0
+        );
     }
 }

@@ -27,21 +27,43 @@ pub fn qk_inner(
     d_h: usize,
     out: &mut [f32],
 ) {
+    // The guards are per-call (not per-element) and gate raw slice
+    // arithmetic below, so they hold in release builds too: a short `codes`
+    // or `params` slice must fail loudly, never read out of bounds.
     let n = out.len();
-    debug_assert_eq!(q.len(), d_h);
-    debug_assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
+    assert_eq!(q.len(), d_h, "query length {} != d_h {d_h}", q.len());
+    assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
     let groups = d_h / 32;
     let gbytes = packed_len(32, bits);
-    debug_assert!(codes.len() >= n * groups * gbytes);
-    debug_assert!(params.len() >= n * groups);
+    let row_bytes = groups * gbytes;
+    assert!(
+        codes.len() >= n * row_bytes,
+        "codes slice too short: {} < {} ({n} rows)",
+        codes.len(),
+        n * row_bytes
+    );
+    assert!(
+        params.len() >= n * groups,
+        "params slice too short: {} < {} ({n} rows)",
+        params.len(),
+        n * groups
+    );
 
-    // Per-group query prefix sums (for the zeff term), once per call.
-    let mut qsum = [0f32; 64]; // supports d_h up to 2048
+    // Per-group query prefix sums (for the zeff term), once per call. The
+    // stack buffer covers d_h <= 2048; larger heads take one heap
+    // allocation instead of corrupting (or aborting on) the fixed array.
+    let mut qsum_stack = [0f32; 64];
+    let mut qsum_heap = Vec::new();
+    let qsum: &mut [f32] = if groups <= qsum_stack.len() {
+        &mut qsum_stack[..groups]
+    } else {
+        qsum_heap.resize(groups, 0.0f32);
+        &mut qsum_heap
+    };
     for g in 0..groups {
         qsum[g] = q[g * 32..(g + 1) * 32].iter().sum();
     }
 
-    let row_bytes = groups * gbytes;
     let mut buf = [0u8; 32];
     for j in 0..n {
         let row = &codes[j * row_bytes..(j + 1) * row_bytes];
@@ -109,18 +131,32 @@ pub fn pv_inner_chunk(
     d_h: usize,
     out: &mut [f32],
 ) {
-    debug_assert_eq!(p.len(), 32);
-    debug_assert_eq!(out.len(), d_h);
-    debug_assert_eq!(params.len(), d_h);
-    debug_assert!(d_h <= 512, "stack accumulator sized for d_h <= 512");
+    // Unconditional guards: these gate the raw slice math below and must
+    // hold in release builds too (see qk_inner).
+    assert_eq!(p.len(), 32, "value chunk needs exactly 32 weights");
+    assert_eq!(out.len(), d_h, "out length {} != d_h {d_h}", out.len());
+    assert_eq!(params.len(), d_h, "params length {} != d_h {d_h}", params.len());
+    assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
     let gbytes = packed_len(32, bits);
     let row_bytes = (d_h / 32) * gbytes;
-    debug_assert!(chunk_codes.len() >= 32 * row_bytes);
+    assert!(
+        chunk_codes.len() >= 32 * row_bytes,
+        "chunk_codes slice too short: {} < {}",
+        chunk_codes.len(),
+        32 * row_bytes
+    );
     let psum: f32 = p.iter().sum();
 
-    // Unscaled accumulation: acc[c] = sum_t p[t] * code[t][c].
-    let mut acc = [0f32; 512];
-    let acc = &mut acc[..d_h];
+    // Unscaled accumulation: acc[c] = sum_t p[t] * code[t][c]. Stack
+    // accumulator up to d_h = 512; one heap allocation beyond that.
+    let mut acc_stack = [0f32; 512];
+    let mut acc_heap = Vec::new();
+    let acc: &mut [f32] = if d_h <= acc_stack.len() {
+        &mut acc_stack[..d_h]
+    } else {
+        acc_heap.resize(d_h, 0.0f32);
+        &mut acc_heap
+    };
     let mut buf = [0u8; 32];
     for (t, &w) in p.iter().enumerate() {
         let row = &chunk_codes[t * row_bytes..(t + 1) * row_bytes];
@@ -290,6 +326,76 @@ mod tests {
                 assert!((out[c] - want[c]).abs() < 1e-3, "c={c}: {} vs {}", out[c], want[c]);
             }
         });
+    }
+
+    #[test]
+    fn qk_inner_supports_heads_beyond_the_stack_buffer() {
+        // d_h = 2176 -> 68 groups: exercises the heap fallback for the
+        // per-group query sums (the fixed 64-group buffer used to make this
+        // geometry a release-mode failure).
+        let mut rng = crate::util::rng::Rng::new(41);
+        let d_h = 2176;
+        let n = 3;
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.0);
+        let (codes, params) = build_key_rows(&keys, d_h, 4, Mode::Asym);
+        let pf = crate::kernels::zeff_params(&params, 4);
+        let mut out = vec![0f32; n];
+        qk_inner(&q, &codes, &pf, 4, d_h, &mut out);
+        let want = qk_reference(&q, &codes, &params, 4, d_h, n);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-2 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pv_inner_supports_heads_beyond_the_stack_buffer() {
+        // d_h = 544 > 512: exercises the heap accumulator fallback.
+        let mut rng = crate::util::rng::Rng::new(43);
+        let d_h = 544;
+        let vals = normal_vec(&mut rng, 32 * d_h, 1.0, 0.0);
+        let p = normal_vec(&mut rng, 32, 0.2, 0.0);
+        let (codes, params) = build_val_chunk(&vals, d_h, 3, Mode::Sym);
+        let pf = crate::kernels::zeff_params(&params, 3);
+        let mut out = vec![0f32; d_h];
+        pv_inner_chunk(&p, &codes, &pf, 3, d_h, &mut out);
+        let mut exact = vec![0f32; d_h];
+        crate::kernels::gemv_fp::pv_fp(&p, &vals, d_h, &mut exact);
+        assert!(
+            crate::util::stats::rel_l2(&out, &exact) < 0.2,
+            "rel {}",
+            crate::util::stats::rel_l2(&out, &exact)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "codes slice too short")]
+    fn qk_inner_rejects_short_codes() {
+        let q = vec![0f32; 64];
+        let codes = vec![0u8; 10]; // far less than 2 rows of 2 groups
+        let params = vec![(1.0f32, 0.0f32); 4];
+        let mut out = vec![0f32; 2];
+        qk_inner(&q, &codes, &params, 3, 64, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "params slice too short")]
+    fn qk_inner_rejects_short_params() {
+        let q = vec![0f32; 64];
+        let codes = vec![0u8; 2 * 2 * 12];
+        let params = vec![(1.0f32, 0.0f32); 1];
+        let mut out = vec![0f32; 2];
+        qk_inner(&q, &codes, &params, 3, 64, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk_codes slice too short")]
+    fn pv_inner_rejects_short_codes() {
+        let p = vec![0f32; 32];
+        let codes = vec![0u8; 16];
+        let params = vec![(1.0f32, 0.0f32); 64];
+        let mut out = vec![0f32; 64];
+        pv_inner_chunk(&p, &codes, &params, 3, 64, &mut out);
     }
 
     #[test]

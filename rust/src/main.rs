@@ -1,11 +1,14 @@
 //! InnerQ CLI — the leader entrypoint.
 //!
 //! ```text
-//! innerq serve   [--method M] [--addr HOST:PORT] [--artifacts DIR]
-//! innerq generate --prompt "a=13;?a=" [--method M] [--max-new N]
+//! innerq serve   [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
+//! innerq generate --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
 //! innerq exp      table1|table2|table3|table7|fig5|msparsity|simulate|all
 //! innerq info     [--artifacts DIR]
 //! ```
+//!
+//! `--workers N` sizes the decode-attention worker pool (default 1 = the
+//! serial baseline; the driver thread counts as one worker).
 //!
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
 
@@ -68,11 +71,13 @@ fn main() -> Result<()> {
         "serve" => {
             let manifest = load_manifest(&args)?;
             let m = method(&args)?;
+            let workers: usize = args.get("workers", "1").parse()?;
             eprintln!("[serve] loading {} stages ...", manifest.artifacts.len());
-            let engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+            let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+            engine.set_workers(workers);
             let sched = Scheduler::new(engine, 1 << 30);
             let addr = args.get("addr", "127.0.0.1:7071");
-            eprintln!("[serve] method={} addr={addr}", m.name());
+            eprintln!("[serve] method={} addr={addr} workers={workers}", m.name());
             innerq::server::serve(
                 sched,
                 &addr,
@@ -85,7 +90,9 @@ fn main() -> Result<()> {
             let m = method(&args)?;
             let prompt = args.get("prompt", "a=13;b=88;?a=");
             let max_new: usize = args.get("max-new", "16").parse()?;
-            let engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+            let workers: usize = args.get("workers", "1").parse()?;
+            let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+            engine.set_workers(workers);
             let mut sched = Scheduler::new(engine, 1 << 30);
             sched.submit(Request {
                 id: 0,
@@ -149,8 +156,8 @@ fn main() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: innerq <serve|generate|exp|info> [flags]\n\
-                 \n  serve    --method M --addr HOST:PORT --artifacts DIR\
-                 \n  generate --prompt S --method M --max-new N\
+                 \n  serve    --method M --addr HOST:PORT --artifacts DIR --workers N\
+                 \n  generate --prompt S --method M --max-new N --workers N\
                  \n  exp      table1|table2|table3|table7|fig5|msparsity|simulate|all\
                  \n  info     --artifacts DIR\n\
                  \nmethods: {}",

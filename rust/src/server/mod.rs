@@ -8,6 +8,10 @@
 //! Protocol (one JSON object per line):
 //!   -> {"prompt": "a=13;?a=", "max_new_tokens": 8}
 //!   <- {"id": 3, "text": "13;", "n_generated": 3, "ttft_us": ..., "total_us": ...}
+//!
+//! Failures are answered in-band, never silently dropped: malformed lines
+//! get {"error": ...} immediately, and failed completions (rejected or
+//! unencodable requests) carry an "error" field on the completion line.
 
 pub mod tcp;
 

@@ -1,4 +1,17 @@
 //! Thread-based TCP serving front-end over the scheduler.
+//!
+//! Failure handling rules (clients must never hang on a silent drop):
+//! * malformed request lines get an `{"error": ...}` response line instead
+//!   of being discarded;
+//! * stream-clone failures are answered (best effort) and close the reader
+//!   instead of panicking the thread;
+//! * failed completions (rejected / unencodable prompts) carry an `error`
+//!   field in their response line.
+//!
+//! Each connection has ONE writer handle, shared behind a mutex between the
+//! per-connection reader thread (error replies) and the scheduler loop
+//! (completion lines), so a pipelining client can never observe two
+//! response lines interleaved mid-line.
 
 use crate::coordinator::request::Request;
 use crate::coordinator::Scheduler;
@@ -8,12 +21,75 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// The per-connection write half, shared by the reader thread and the
+/// scheduler loop.
+type SharedConn = Arc<Mutex<TcpStream>>;
 
 struct Inbound {
     req: Request,
-    conn: TcpStream,
+    conn: SharedConn,
+}
+
+/// One `{"error": ...}` protocol line.
+fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).dump()
+}
+
+/// Write one response line while holding the connection's write lock, so
+/// concurrent writers cannot interleave bytes within a line.
+fn write_line(conn: &SharedConn, line: &str) {
+    let mut guard = conn.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = writeln!(guard, "{line}");
+}
+
+/// Per-connection reader: parse newline-delimited JSON requests and feed
+/// them to the scheduler channel. Every rejected line is answered in-band.
+fn reader_loop(conn: TcpStream, tx: mpsc::Sender<Inbound>, next_id: Arc<AtomicU64>) {
+    let reader = match conn.try_clone() {
+        Ok(c) => BufReader::new(c),
+        Err(e) => {
+            // Can't read without a second handle; tell the client and bail
+            // rather than leaving it waiting on a dead connection.
+            let writer: SharedConn = Arc::new(Mutex::new(conn));
+            write_line(&writer, &error_line(&format!("connection setup failed: {e}")));
+            return;
+        }
+    };
+    let writer: SharedConn = Arc::new(Mutex::new(conn));
+    for line in reader.lines().map_while(|l| l.ok()) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                write_line(&writer, &error_line(&format!("bad request JSON: {e}")));
+                continue;
+            }
+        };
+        let prompt = j.get("prompt").as_str().unwrap_or("").to_string();
+        if prompt.is_empty() {
+            write_line(
+                &writer,
+                &error_line("request needs a non-empty string field 'prompt'"),
+            );
+            continue;
+        }
+        let req = Request {
+            id: next_id.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(32),
+            temperature: j.get("temperature").as_f64().map(|t| t as f32),
+            arrived: Instant::now(),
+        };
+        if tx.send(Inbound { req, conn: writer.clone() }).is_err() {
+            write_line(&writer, &error_line("server is shutting down"));
+            return;
+        }
+    }
 }
 
 /// Serve until `stop` flips true (tests) or forever (CLI). Binds `addr`,
@@ -38,30 +114,7 @@ pub fn serve(
                 Ok((conn, _)) => {
                     let tx = tx.clone();
                     let next_id = next_id.clone();
-                    std::thread::spawn(move || {
-                        let reader = BufReader::new(conn.try_clone().unwrap());
-                        for line in reader.lines().map_while(|l| l.ok()) {
-                            if line.trim().is_empty() {
-                                continue;
-                            }
-                            if let Ok(j) = Json::parse(&line) {
-                                let req = Request {
-                                    id: next_id.fetch_add(1, Ordering::Relaxed),
-                                    prompt: j.get("prompt").as_str().unwrap_or("").to_string(),
-                                    max_new_tokens: j
-                                        .get("max_new_tokens")
-                                        .as_usize()
-                                        .unwrap_or(32),
-                                    temperature: j.get("temperature").as_f64().map(|t| t as f32),
-                                    arrived: Instant::now(),
-                                };
-                                let _ = tx.send(Inbound {
-                                    req,
-                                    conn: conn.try_clone().unwrap(),
-                                });
-                            }
-                        }
-                    });
+                    std::thread::spawn(move || reader_loop(conn, tx, next_id));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -71,8 +124,9 @@ pub fn serve(
         }
     });
 
-    // Scheduler loop (owns the engine; single worker).
-    let mut conns: std::collections::HashMap<u64, TcpStream> = Default::default();
+    // Scheduler loop (owns the engine; decode attention fans out over the
+    // engine's worker pool).
+    let mut conns: std::collections::HashMap<u64, SharedConn> = Default::default();
     while !stop.load(Ordering::Relaxed) {
         // ingest
         while let Ok(inb) = rx.try_recv() {
@@ -80,18 +134,20 @@ pub fn serve(
             sched.submit(inb.req);
         }
         let worked = sched.tick()?;
-        // flush completions
+        // flush completions (including failed ones, which carry `error`)
         for c in sched.done.drain(..) {
-            if let Some(mut conn) = conns.remove(&c.id) {
-                let line = Json::obj(vec![
+            if let Some(conn) = conns.remove(&c.id) {
+                let mut fields = vec![
                     ("id", Json::Num(c.id as f64)),
                     ("text", Json::str(&c.text)),
                     ("n_generated", Json::Num(c.n_generated as f64)),
                     ("ttft_us", Json::Num(c.ttft_us as f64)),
                     ("total_us", Json::Num(c.total_us as f64)),
-                ])
-                .dump();
-                let _ = writeln!(conn, "{line}");
+                ];
+                if let Some(err) = &c.error {
+                    fields.push(("error", Json::str(err)));
+                }
+                write_line(&conn, &Json::obj(fields).dump());
             }
         }
         if !worked {
@@ -121,9 +177,15 @@ impl Client {
             ("prompt", Json::str(prompt)),
             ("max_new_tokens", Json::Num(max_new_tokens as f64)),
         ]);
-        writeln!(self.conn, "{}", req.dump())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+        self.send_line(&req.dump())
+    }
+
+    /// Send one raw protocol line and block for one response line (lets
+    /// tests exercise the malformed-request path).
+    pub fn send_line(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.conn, "{line}")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Json::parse(&resp).map_err(|e| anyhow::anyhow!("bad response: {e}"))
     }
 }

@@ -1,0 +1,217 @@
+//! Synthetic AOT artifacts for tests and benches.
+//!
+//! The real artifacts come from `make artifacts` (Python/JAX lowering) and
+//! are absent in CI, which used to leave the scheduler, server, and engine
+//! decode loop untestable. This module writes a *fake* artifact directory —
+//! a manifest plus HLO-text stages the vendored interpreter can execute —
+//! whose model is degenerate on purpose: every stage returns constants, and
+//! the head stage emits logits peaked at one configurable token. That makes
+//! generation deterministic (`peak` repeated until `max_new_tokens`, or an
+//! immediate stop if `peak == '.'`) while still driving the full pipeline:
+//! prefill bucketing, cache append/attend across layers and KV heads, the
+//! decode batcher, and the worker-pool fan-out.
+//!
+//! Production code never calls this; it lives in `util` (not `#[cfg(test)]`)
+//! so integration tests and benches can share it.
+
+use crate::workload::corpus::CHARSET;
+use std::path::PathBuf;
+
+/// Model geometry of the fake artifacts (small, but multi-layer / multi-head
+/// so the decode fan-out is exercised): vocab 25 (BOS + 24-char charset),
+/// d_model 8, 2 layers, 4 query heads over 2 KV heads, d_h 32.
+pub const VOCAB: usize = 25;
+pub const D_MODEL: usize = 8;
+pub const N_LAYERS: usize = 2;
+pub const N_Q: usize = 4;
+pub const N_KV: usize = 2;
+pub const D_H: usize = 32;
+pub const DECODE_BATCHES: [usize; 3] = [1, 2, 4];
+pub const PREFILL_BUCKETS: [usize; 2] = [64, 128];
+
+/// Build a fake artifact directory under the system temp dir. `tag` keeps
+/// concurrent tests apart; `peak` is the character whose token the head
+/// stage always argmaxes to (use `'.'` for an immediate stop).
+pub fn write_fake_artifacts(tag: &str, peak: char) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "innerq_fake_{tag}_{}_{peak_code}",
+        std::process::id(),
+        peak_code = token_for(peak)
+    ));
+    std::fs::create_dir_all(&dir).expect("create fake artifact dir");
+
+    let mut artifacts = Vec::new();
+    let mut write_stage = |key: String, text: String| {
+        let file = format!("{key}.hlo.txt");
+        std::fs::write(dir.join(&file), text).expect("write fake stage");
+        artifacts.push((key, file));
+    };
+
+    for bb in DECODE_BATCHES {
+        write_stage(format!("embed_b{bb}"), embed_hlo(bb));
+        for l in 0..N_LAYERS {
+            write_stage(format!("qkv_l{l}_b{bb}"), qkv_hlo(bb));
+            write_stage(format!("out_l{l}_b{bb}"), out_hlo(bb));
+        }
+        write_stage(format!("head_b{bb}"), head_hlo(bb, peak));
+    }
+    for bucket in PREFILL_BUCKETS {
+        write_stage(format!("prefill_l{bucket}"), prefill_hlo(bucket, peak));
+    }
+
+    let artifact_entries: Vec<String> = artifacts
+        .iter()
+        .map(|(k, f)| format!("\"{k}\":\"{f}\""))
+        .collect();
+    let manifest = format!(
+        concat!(
+            "{{\"model\":{{\"vocab\":{vocab},\"d_model\":{dm},\"n_layers\":{nl},",
+            "\"n_q_heads\":{nq},\"n_kv_heads\":{nkv},\"d_h\":{dh},\"d_ff\":16,",
+            "\"rope_theta\":10000.0}},",
+            "\"charset\":\"{charset}\",\"bos\":0,",
+            "\"decode_batches\":[1,2,4],\"prefill_buckets\":[64,128],",
+            "\"quant_attn_tokens\":0,",
+            "\"artifacts\":{{{arts}}},\"final_train_loss\":0.5}}"
+        ),
+        vocab = VOCAB,
+        dm = D_MODEL,
+        nl = N_LAYERS,
+        nq = N_Q,
+        nkv = N_KV,
+        dh = D_H,
+        charset = CHARSET,
+        arts = artifact_entries.join(",")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).expect("write fake manifest");
+    dir
+}
+
+/// Token id of a charset character (1-based; 0 is BOS).
+pub fn token_for(c: char) -> i32 {
+    CHARSET
+        .chars()
+        .position(|x| x == c)
+        .map(|i| i as i32 + 1)
+        .expect("peak char must be in the model charset")
+}
+
+/// `{0, 0, ..., 5, ..., 0}` logits vector with the peak at `peak`'s token.
+fn logit_vector(peak: char) -> String {
+    let peak_tok = token_for(peak) as usize;
+    let vals: Vec<String> = (0..VOCAB)
+        .map(|i| if i == peak_tok { "5".to_string() } else { "0".to_string() })
+        .collect();
+    format!("{{{}}}", vals.join(", "))
+}
+
+fn embed_hlo(bb: usize) -> String {
+    format!(
+        "HloModule embed_b{bb}\n\n\
+         ENTRY main {{\n\
+         \x20 tok = s32[{bb}]{{0}} parameter(0)\n\
+         \x20 c = f32[] constant(0.25)\n\
+         \x20 h = f32[{bb},{D_MODEL}]{{1,0}} broadcast(c), dimensions={{}}\n\
+         \x20 ROOT t = (f32[{bb},{D_MODEL}]{{1,0}}) tuple(h)\n\
+         }}\n"
+    )
+}
+
+fn qkv_hlo(bb: usize) -> String {
+    format!(
+        "HloModule qkv_b{bb}\n\n\
+         ENTRY main {{\n\
+         \x20 h = f32[{bb},{D_MODEL}]{{1,0}} parameter(0)\n\
+         \x20 pos = s32[{bb}]{{0}} parameter(1)\n\
+         \x20 cq = f32[] constant(0.125)\n\
+         \x20 q = f32[{bb},{N_Q},{D_H}]{{2,1,0}} broadcast(cq), dimensions={{}}\n\
+         \x20 ck = f32[] constant(0.5)\n\
+         \x20 k = f32[{bb},{N_KV},{D_H}]{{2,1,0}} broadcast(ck), dimensions={{}}\n\
+         \x20 cv = f32[] constant(0.25)\n\
+         \x20 v = f32[{bb},{N_KV},{D_H}]{{2,1,0}} broadcast(cv), dimensions={{}}\n\
+         \x20 ROOT t = (f32[{bb},{N_Q},{D_H}]{{2,1,0}}) tuple(q, k, v)\n\
+         }}\n"
+    )
+}
+
+fn out_hlo(bb: usize) -> String {
+    let q_dim = N_Q * D_H;
+    format!(
+        "HloModule out_b{bb}\n\n\
+         ENTRY main {{\n\
+         \x20 h = f32[{bb},{D_MODEL}]{{1,0}} parameter(0)\n\
+         \x20 ctx = f32[{bb},{q_dim}]{{1,0}} parameter(1)\n\
+         \x20 ROOT t = (f32[{bb},{D_MODEL}]{{1,0}}) tuple(h)\n\
+         }}\n"
+    )
+}
+
+fn head_hlo(bb: usize, peak: char) -> String {
+    let logits = logit_vector(peak);
+    format!(
+        "HloModule head_b{bb}\n\n\
+         ENTRY main {{\n\
+         \x20 h = f32[{bb},{D_MODEL}]{{1,0}} parameter(0)\n\
+         \x20 l = f32[{VOCAB}]{{0}} constant({logits})\n\
+         \x20 lg = f32[{bb},{VOCAB}]{{1,0}} broadcast(l), dimensions={{1}}\n\
+         \x20 ROOT t = (f32[{bb},{VOCAB}]{{1,0}}) tuple(lg)\n\
+         }}\n"
+    )
+}
+
+fn prefill_hlo(bucket: usize, peak: char) -> String {
+    let logits = logit_vector(peak);
+    format!(
+        "HloModule prefill_l{bucket}\n\n\
+         ENTRY main {{\n\
+         \x20 tok = s32[1,{bucket}]{{1,0}} parameter(0)\n\
+         \x20 l = f32[{VOCAB}]{{0}} constant({logits})\n\
+         \x20 lg = f32[{bucket},{VOCAB}]{{1,0}} broadcast(l), dimensions={{1}}\n\
+         \x20 ck = f32[] constant(0.5)\n\
+         \x20 ks = f32[{N_LAYERS},{bucket},{N_KV},{D_H}]{{3,2,1,0}} broadcast(ck), dimensions={{}}\n\
+         \x20 cv = f32[] constant(0.25)\n\
+         \x20 vs = f32[{N_LAYERS},{bucket},{N_KV},{D_H}]{{3,2,1,0}} broadcast(cv), dimensions={{}}\n\
+         \x20 ROOT t = (f32[{bucket},{VOCAB}]{{1,0}}) tuple(lg, ks, vs)\n\
+         }}\n"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, Stage};
+
+    #[test]
+    fn fake_stages_load_and_execute() {
+        let dir = write_fake_artifacts("fakemodel_unit", '7');
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_h, D_H);
+        assert_eq!(m.model.heads_per_kv(), N_Q / N_KV);
+
+        let head = Stage::load("head_b1", &m.path("head_b1").unwrap()).unwrap();
+        let out = head
+            .run(&[crate::runtime::executable::In::F32(
+                &vec![0.0; D_MODEL],
+                &[1, D_MODEL as i64],
+            )])
+            .unwrap();
+        let logits = out.f32(0).unwrap();
+        assert_eq!(logits.len(), VOCAB);
+        let peak = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(peak as i32, token_for('7'));
+    }
+
+    #[test]
+    fn all_fake_stages_compile() {
+        let dir = write_fake_artifacts("fakemodel_all", '.');
+        let m = Manifest::load(&dir).unwrap();
+        for key in m.artifacts.keys() {
+            Stage::load(key, &m.path(key).unwrap())
+                .unwrap_or_else(|e| panic!("stage {key}: {e}"));
+        }
+    }
+}

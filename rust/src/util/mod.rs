@@ -1,6 +1,8 @@
 //! Small self-contained utilities (no external deps available offline).
+pub mod fakemodel;
 pub mod fp16;
 pub mod json;
 pub mod ptest;
 pub mod rng;
 pub mod stats;
+pub mod threadpool;

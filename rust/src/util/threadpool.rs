@@ -1,0 +1,302 @@
+//! Persistent scoped worker pool for the decode attention fan-out.
+//!
+//! `Engine::decode_step` turns every (sequence, KV head) pair into one job;
+//! jobs only *read* their head's cache and write a disjoint slice of the
+//! context buffer, so they parallelize without synchronization beyond the
+//! queue. The pool is std-only (no rayon/crossbeam offline) and built for
+//! exactly that shape of work:
+//!
+//! * **Scoped jobs.** [`ThreadPool::run`] accepts non-`'static` closures and
+//!   blocks until every submitted job has finished, so borrows of the
+//!   engine's per-step buffers are sound (see the safety comment in `run`).
+//! * **Driver participation.** `workers = N` means N threads total: the pool
+//!   spawns `N - 1` helpers and the *calling* thread drains the queue too.
+//!   With `workers = 1` no threads exist and `run` degenerates to an inline
+//!   `for` loop — bit-identical to the old serial path, zero overhead.
+//! * **Per-worker scratch.** Each executing thread owns one scratch arena
+//!   (the `Vec<f32>` passed to every job), replacing the old per-`Sequence`
+//!   scratch so concurrent jobs never share growable buffers.
+//!
+//! Determinism: the pool adds no reductions of its own. Each job's output
+//! slice is disjoint and its internal FP reduction order is unchanged, so
+//! results are byte-identical across worker counts.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// One unit of attention work. Receives the executing thread's scratch
+/// arena; must not panic across `run` calls it wants to survive (a panicking
+/// job is contained and re-raised on the driver once the batch drains).
+pub type Job<'a> = Box<dyn FnOnce(&mut Vec<f32>) + Send + 'a>;
+
+type StaticJob = Box<dyn FnOnce(&mut Vec<f32>) + Send + 'static>;
+
+struct State {
+    queue: VecDeque<StaticJob>,
+    /// Jobs submitted but not yet finished (queued + currently running).
+    pending: usize,
+    /// A job panicked since the last completed batch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Wakes workers when work arrives or shutdown is requested.
+    work: Condvar,
+    /// Wakes the driver when `pending` may have reached zero.
+    done: Condvar,
+}
+
+impl Shared {
+    /// Poison-tolerant lock: a panicked job never holds the lock (execution
+    /// happens outside the critical section), so recovered state is
+    /// consistent.
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+    /// Scratch arena for jobs executed on the driver thread.
+    driver_scratch: Mutex<Vec<f32>>,
+}
+
+impl ThreadPool {
+    /// A pool with `workers` total executing threads (the driver counts as
+    /// one). `workers <= 1` spawns nothing and runs jobs inline.
+    pub fn new(workers: usize) -> ThreadPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let threads = (1..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("innerq-attn-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn attention worker")
+            })
+            .collect();
+        ThreadPool { shared, threads, driver_scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Total executing threads, including the driver.
+    pub fn workers(&self) -> usize {
+        self.threads.len() + 1
+    }
+
+    /// Execute every job, blocking until all are done. Jobs may borrow
+    /// caller-local data (`'a` need not be `'static`). Panics if any job
+    /// panicked, after the whole batch has drained.
+    ///
+    /// One driver at a time: concurrent `run` calls from different threads
+    /// would interleave batches (jobs all still run exactly once, but each
+    /// caller waits for the union to finish).
+    pub fn run<'a>(&self, jobs: Vec<Job<'a>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let mut scratch = self
+            .driver_scratch
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+
+        // Serial fast path: no helper threads, no queue, no atomics.
+        if self.threads.is_empty() {
+            for job in jobs {
+                job(&mut scratch);
+            }
+            return;
+        }
+
+        // SAFETY: the lifetime of every job is erased to 'static so it can
+        // sit in the shared queue, but no job outlives this call: the wait
+        // loop below does not return until `pending` — which counts every
+        // job submitted here — is back to zero, and jobs are consumed
+        // exactly once (popped then invoked). Borrows captured by the jobs
+        // therefore remain live for as long as any job can run.
+        let jobs: Vec<StaticJob> = jobs
+            .into_iter()
+            .map(|j| unsafe { std::mem::transmute::<Job<'a>, StaticJob>(j) })
+            .collect();
+        {
+            let mut st = self.shared.lock();
+            st.pending += jobs.len();
+            st.queue.extend(jobs);
+        }
+        self.shared.work.notify_all();
+
+        // The driver drains the queue alongside the workers...
+        loop {
+            let job = self.shared.lock().queue.pop_front();
+            match job {
+                Some(job) => execute(&self.shared, job, &mut scratch),
+                None => break,
+            }
+        }
+        // ...then waits for in-flight stragglers.
+        let mut st = self.shared.lock();
+        while st.pending > 0 {
+            st = match self.shared.done.wait(st) {
+                Ok(g) => g,
+                Err(e) => e.into_inner(),
+            };
+        }
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        drop(scratch);
+        if panicked {
+            panic!("threadpool: an attention job panicked (see worker stderr)");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.lock().shutdown = true;
+        self.shared.work.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Run one job outside any lock, then account for its completion.
+fn execute(shared: &Shared, job: StaticJob, scratch: &mut Vec<f32>) {
+    let result = catch_unwind(AssertUnwindSafe(|| job(scratch)));
+    let mut st = shared.lock();
+    if result.is_err() {
+        st.panicked = true;
+    }
+    st.pending -= 1;
+    if st.pending == 0 {
+        shared.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut scratch: Vec<f32> = Vec::new();
+    loop {
+        let job = {
+            let mut st = shared.lock();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break Some(j);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = match shared.work.wait(st) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
+            }
+        };
+        match job {
+            Some(j) => execute(shared, j, &mut scratch),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_disjoint(pool: &ThreadPool, n_jobs: usize, chunk: usize) -> Vec<f32> {
+        let mut data = vec![0f32; n_jobs * chunk];
+        {
+            let mut jobs: Vec<Job> = Vec::with_capacity(n_jobs);
+            for (j, out) in data.chunks_mut(chunk).enumerate() {
+                jobs.push(Box::new(move |scratch: &mut Vec<f32>| {
+                    scratch.clear();
+                    scratch.resize(chunk, j as f32);
+                    for (o, s) in out.iter_mut().zip(scratch.iter()) {
+                        *o = *s + 1.0;
+                    }
+                }));
+            }
+            pool.run(jobs);
+        }
+        data
+    }
+
+    #[test]
+    fn disjoint_writes_all_workers() {
+        let want = fill_disjoint(&ThreadPool::new(1), 64, 7);
+        for workers in [2usize, 4, 8] {
+            let got = fill_disjoint(&ThreadPool::new(workers), 64, 7);
+            assert_eq!(got, want, "workers={workers}");
+        }
+        for (j, c) in want.chunks(7).enumerate() {
+            assert!(c.iter().all(|&v| v == j as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let pool = ThreadPool::new(4);
+        for round in 0..20 {
+            let n = 1 + round % 13;
+            let out = fill_disjoint(&pool, n, 3);
+            assert_eq!(out.len(), n * 3);
+        }
+        assert_eq!(pool.workers(), 4);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = ThreadPool::new(4);
+        pool.run(Vec::new());
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut jobs: Vec<Job> = Vec::new();
+            for i in 0..8 {
+                jobs.push(Box::new(move |_s: &mut Vec<f32>| {
+                    if i == 5 {
+                        panic!("job 5 exploded");
+                    }
+                }));
+            }
+            pool.run(jobs);
+        }));
+        assert!(result.is_err(), "panic must reach the driver");
+        // The pool keeps working after a contained panic.
+        let out = fill_disjoint(&pool, 10, 4);
+        assert_eq!(out.len(), 40);
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let caller = std::thread::current().id();
+        let mut seen = None;
+        {
+            let seen_ref = &mut seen;
+            let jobs: Vec<Job> = vec![Box::new(move |_s: &mut Vec<f32>| {
+                *seen_ref = Some(std::thread::current().id());
+            })];
+            pool.run(jobs);
+        }
+        assert_eq!(seen, Some(caller), "workers=1 must execute on the driver");
+    }
+}

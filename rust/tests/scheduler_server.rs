@@ -1,0 +1,193 @@
+//! Scheduler + server behaviour tests over the fake-model artifacts
+//! (`util::fakemodel`): no `make artifacts` required. The fake model emits
+//! constant logits peaked at one token, which makes completions exactly
+//! predictable while still driving prefill bucketing, cache append/attend
+//! across layers and heads, continuous batching, the worker-pool fan-out,
+//! and the TCP protocol.
+
+use innerq::coordinator::{Engine, Request, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::server::{serve, Client};
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::QuantMethod;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+fn fake_scheduler(tag: &str, peak: char, budget: usize, workers: usize) -> Scheduler {
+    let dir = write_fake_artifacts(tag, peak);
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    engine.set_workers(workers);
+    Scheduler::new(engine, budget)
+}
+
+fn req(id: u64, prompt: &str, max_new_tokens: usize) -> Request {
+    Request {
+        id,
+        prompt: prompt.to_string(),
+        max_new_tokens,
+        temperature: None,
+        arrived: Instant::now(),
+    }
+}
+
+#[test]
+fn stop_token_is_excluded_from_completions() {
+    // The fake head always argmaxes to '.': generation must stop
+    // immediately with an EMPTY completion — the stop token itself used to
+    // leak into `generated` and inflate n_generated.
+    let mut sched = fake_scheduler("stop", '.', 1 << 30, 1);
+    sched.submit(req(1, "a=11;?a=", 8));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].text, "", "stop token must not appear in the text");
+    assert_eq!(done[0].n_generated, 0);
+    assert!(done[0].error.is_none());
+    assert!(sched.metrics.decode_steps >= 1);
+}
+
+#[test]
+fn generation_runs_to_max_tokens() {
+    let mut sched = fake_scheduler("runmax", '7', 1 << 30, 1);
+    sched.submit(req(1, "a=17;?a=", 5));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].text, "77777");
+    assert_eq!(done[0].n_generated, 5);
+    assert_eq!(done[0].n_prompt, 8);
+}
+
+#[test]
+fn pressure_preempts_younger_live_work_and_completes_everyone() {
+    // Budget fits one sequence. The older request (lower id) arrives second,
+    // so admission preempts the younger live sequence, requeues it, and both
+    // finish.
+    let mut sched = fake_scheduler("preempt", '7', 6000, 1);
+    sched.submit(req(50, "a=1;?a=", 2));
+    sched.submit(req(3, "b=2;?b=", 2));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.text, "77", "req {} got '{}'", c.id, c.text);
+        assert!(c.error.is_none());
+    }
+    assert!(
+        sched.metrics.preemptions >= 1,
+        "the younger live sequence must have been preempted"
+    );
+}
+
+#[test]
+fn stale_reservation_cannot_livelock_admission() {
+    // Regression: a reservation whose owner is not live (id 999 never had a
+    // sequence) used to make `tick()` spin forever under pressure, because
+    // the youngest victim was not found in `live` and nothing was ever
+    // released. Now the stale reservation is dropped and admission proceeds.
+    let mut sched = fake_scheduler("stale", '7', 6000, 1);
+    assert_eq!(
+        sched.pool.admit(999, 3000),
+        innerq::cache::Admission::Admitted
+    );
+    sched.submit(req(1, "a=1;?a=", 2));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].text, "77");
+    assert_eq!(sched.metrics.stale_reservations, 1);
+    assert_eq!(sched.metrics.preemptions, 0);
+}
+
+#[test]
+fn oversized_requests_fail_with_an_error() {
+    let mut sched = fake_scheduler("toolarge", '7', 6000, 1);
+    sched.submit(req(1, "a=1;?a=", 200)); // estimate far over budget
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].n_generated, 0);
+    assert!(done[0].error.as_deref().unwrap_or("").contains("budget"));
+    assert_eq!(sched.metrics.rejected, 1);
+}
+
+#[test]
+fn unencodable_prompts_fail_the_request_not_the_scheduler() {
+    let mut sched = fake_scheduler("badprompt", '7', 1 << 30, 1);
+    sched.submit(req(1, "Z!", 4)); // 'Z' is not in the model charset
+    sched.submit(req(2, "a=1;?a=", 2));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    let bad = done.iter().find(|c| c.id == 1).unwrap();
+    assert!(bad.error.is_some());
+    assert_eq!(bad.n_generated, 0);
+    let good = done.iter().find(|c| c.id == 2).unwrap();
+    assert_eq!(good.text, "77");
+    assert!(good.error.is_none());
+}
+
+#[test]
+fn completions_are_identical_across_worker_counts() {
+    // workers=1 is the serial baseline; any pool size must produce the
+    // same completions in the same order (the fan-out only changes which
+    // thread computes each disjoint context slice).
+    let prompts = ["a=41;?a=", "b=07;c=22;?c=", "d=99;?d=", "e=15;f=33;?f="];
+    let run = |workers: usize, tag: &str| {
+        let mut sched = fake_scheduler(tag, '3', 1 << 30, workers);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.submit(req(i as u64, p, 4));
+        }
+        let mut done = sched.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        done.into_iter()
+            .map(|c| (c.id, c.text, c.n_generated))
+            .collect::<Vec<_>>()
+    };
+    let serial = run(1, "det1");
+    assert_eq!(serial.len(), prompts.len());
+    for (_, text, n) in &serial {
+        assert_eq!(text, "3333");
+        assert_eq!(*n, 4);
+    }
+    assert_eq!(run(4, "det4"), serial, "workers=4 diverged from serial");
+}
+
+#[test]
+fn server_answers_malformed_requests_and_serves_valid_ones() {
+    let dir = write_fake_artifacts("server", '7');
+    let stop = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let stop_srv = stop.clone();
+    let server = std::thread::spawn(move || {
+        let manifest = Manifest::load(&dir).expect("fake manifest");
+        let mut engine =
+            Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+        engine.set_workers(2);
+        let sched = Scheduler::new(engine, 1 << 30);
+        serve(sched, "127.0.0.1:0", stop_srv, move |a| {
+            let _ = addr_tx.send(a);
+        })
+    });
+    let addr = addr_rx.recv().expect("server bound");
+    let mut client = Client::connect(addr).expect("connect");
+
+    // Malformed JSON: used to be silently dropped (client hung forever).
+    let resp = client.send_line("this is not json").expect("error response");
+    assert!(resp.get("error").as_str().unwrap_or("").contains("JSON"));
+
+    // Parseable but missing the prompt field.
+    let resp = client.send_line(r#"{"max_new_tokens": 3}"#).expect("error response");
+    assert!(resp.get("error").as_str().unwrap_or("").contains("prompt"));
+
+    // Unencodable prompt: fails through the scheduler, with the error
+    // reported in-band on the completion line.
+    let resp = client.send_line(r#"{"prompt": "Z!", "max_new_tokens": 3}"#).unwrap();
+    assert!(resp.get("error").as_str().is_some());
+
+    // A valid request still completes on the same connection.
+    let resp = client.generate("a=15;?a=", 3).expect("completion");
+    assert_eq!(resp.get("text").as_str(), Some("777"));
+    assert_eq!(resp.get("n_generated").as_f64(), Some(3.0));
+    assert_eq!(resp.get("error").as_str(), None);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(addr); // poke the acceptor awake
+    server.join().expect("server thread").expect("serve result");
+}

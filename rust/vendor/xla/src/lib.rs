@@ -1,0 +1,692 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The real crate binds the PJRT C API and compiles HLO for the host CPU;
+//! it is not available in the offline build environment. This vendor crate
+//! keeps the same API surface (`HloModuleProto::from_text_file` →
+//! `XlaComputation` → `PjRtClient::compile` → `PjRtLoadedExecutable::execute`)
+//! backed by a small HLO-*text* interpreter instead.
+//!
+//! Supported opcodes: `parameter`, `constant` (scalar and 1-D list),
+//! `broadcast` (with `dimensions={...}`), `convert`, the elementwise binary
+//! ops `add / subtract / multiply / divide / maximum / minimum`, and
+//! `tuple`. That covers the runtime smoke tests and the synthetic fake-model
+//! artifacts used by the scheduler/server integration tests; a module using
+//! anything else fails at `compile` with a clear error, exactly where the
+//! real backend would surface an unsupported-program problem.
+
+use std::collections::HashMap;
+
+/// Stub error: a message, surfaced by the caller with `{:?}`.
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, Error> {
+    Err(Error(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+/// A host tensor (or tuple of tensors).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+/// Element types accepted by [`Literal::vec1`] / [`Literal::to_vec`].
+pub trait NativeType: Copy {
+    fn vec1(v: &[Self]) -> Literal;
+    fn from_literal(l: &Literal) -> Result<Vec<Self>, Error>;
+}
+
+impl NativeType for f32 {
+    fn vec1(v: &[Self]) -> Literal {
+        Literal::F32 { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+    fn from_literal(l: &Literal) -> Result<Vec<Self>, Error> {
+        match l {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => err(format!("literal is not f32: {other:?}")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec1(v: &[Self]) -> Literal {
+        Literal::I32 { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+    fn from_literal(l: &Literal) -> Result<Vec<Self>, Error> {
+        match l {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => err(format!("literal is not i32: {other:?}")),
+        }
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::vec1(v)
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.len(),
+        }
+    }
+
+    /// Reinterpret the flat data with new dimensions (element count checked).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if self.len() as i64 != n {
+            return err(format!("reshape: {} elements into dims {dims:?}", self.len()));
+        }
+        match self {
+            Literal::F32 { data, .. } => {
+                Ok(Literal::F32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::I32 { data, .. } => {
+                Ok(Literal::I32 { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => err("cannot reshape a tuple literal"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::from_literal(self)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            other => err(format!("literal is not a tuple: {} elements", other.len())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO text parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+struct Shape {
+    dtype: DType,
+    dims: Vec<i64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EwOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+#[derive(Debug, Clone)]
+enum Op {
+    Parameter(usize),
+    Constant(Vec<f64>),
+    Broadcast { operand: String, dimensions: Vec<usize> },
+    Convert { operand: String },
+    Elementwise { op: EwOp, lhs: String, rhs: String },
+    Tuple(Vec<String>),
+}
+
+#[derive(Debug, Clone)]
+struct Instr {
+    name: String,
+    shape: Option<Shape>, // None for tuple-shaped instructions
+    op: Op,
+    root: bool,
+}
+
+/// Parse `f32[4,24]{1,0}` (layout suffix optional) into a [`Shape`].
+fn parse_shape(s: &str) -> Result<Shape, Error> {
+    let s = s.trim();
+    let open = match s.find('[') {
+        Some(i) => i,
+        None => return err(format!("shape without dims: '{s}'")),
+    };
+    let dtype = match &s[..open] {
+        "f32" => DType::F32,
+        "s32" | "u32" | "i32" => DType::I32,
+        other => return err(format!("unsupported element type '{other}'")),
+    };
+    let close = match s.find(']') {
+        Some(i) => i,
+        None => return err(format!("unterminated shape dims: '{s}'")),
+    };
+    let body = &s[open + 1..close];
+    let mut dims = Vec::new();
+    for part in body.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.parse::<i64>() {
+            Ok(d) => dims.push(d),
+            Err(_) => return err(format!("bad dim '{part}' in shape '{s}'")),
+        }
+    }
+    Ok(Shape { dtype, dims })
+}
+
+/// Find the index of the `)` matching the `(` at `open` (no strings in HLO
+/// operand lists, so plain depth counting suffices).
+fn matching_paren(s: &str, open: usize) -> Result<usize, Error> {
+    let bytes = s.as_bytes();
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    err("unbalanced parentheses")
+}
+
+fn parse_instr(line: &str) -> Result<Instr, Error> {
+    let mut line = line.trim();
+    let root = line.starts_with("ROOT ");
+    if root {
+        line = line[5..].trim_start();
+    }
+    let eq = match line.find('=') {
+        Some(i) => i,
+        None => return err(format!("instruction without '=': '{line}'")),
+    };
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rest = line[eq + 1..].trim_start();
+
+    // Shape: either a tuple `(...)` or a single `f32[...]{...}` token.
+    let (shape, rest) = if rest.starts_with('(') {
+        let close = matching_paren(rest, 0)?;
+        (None, rest[close + 1..].trim_start())
+    } else {
+        let end = rest.find(char::is_whitespace).unwrap_or(rest.len());
+        (Some(parse_shape(&rest[..end])?), rest[end..].trim_start())
+    };
+
+    // Opcode and operand list.
+    let open = match rest.find('(') {
+        Some(i) => i,
+        None => return err(format!("instruction without operands: '{line}'")),
+    };
+    let opcode = rest[..open].trim();
+    let close = matching_paren(rest, open)?;
+    let args = &rest[open + 1..close];
+    let attrs = &rest[close + 1..];
+    let operand_names = || -> Vec<String> {
+        args.split(',')
+            .map(|a| a.trim().trim_start_matches('%').to_string())
+            .filter(|a| !a.is_empty())
+            .collect()
+    };
+
+    let op = match opcode {
+        "parameter" => {
+            let idx = args
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| Error(format!("bad parameter index '{args}'")))?;
+            Op::Parameter(idx)
+        }
+        "constant" => {
+            let body = args.trim();
+            let vals = if let Some(stripped) = body.strip_prefix('{') {
+                let inner = stripped.trim_end_matches('}');
+                inner
+                    .split(',')
+                    .map(|v| v.trim().parse::<f64>())
+                    .collect::<Result<Vec<f64>, _>>()
+                    .map_err(|_| Error(format!("bad constant list '{body}'")))?
+            } else {
+                vec![body
+                    .parse::<f64>()
+                    .map_err(|_| Error(format!("bad constant '{body}'")))?]
+            };
+            Op::Constant(vals)
+        }
+        "broadcast" => {
+            let names = operand_names();
+            if names.len() != 1 {
+                return err(format!("broadcast takes one operand, got '{args}'"));
+            }
+            let dimensions = match attrs.find("dimensions={") {
+                Some(i) => {
+                    let tail = &attrs[i + "dimensions={".len()..];
+                    let end = tail
+                        .find('}')
+                        .ok_or_else(|| Error("unterminated dimensions attr".into()))?;
+                    tail[..end]
+                        .split(',')
+                        .map(|v| v.trim())
+                        .filter(|v| !v.is_empty())
+                        .map(|v| v.parse::<usize>())
+                        .collect::<Result<Vec<usize>, _>>()
+                        .map_err(|_| Error("bad dimensions attr".into()))?
+                }
+                None => Vec::new(),
+            };
+            Op::Broadcast { operand: names.into_iter().next().unwrap(), dimensions }
+        }
+        "convert" => {
+            let names = operand_names();
+            if names.len() != 1 {
+                return err(format!("convert takes one operand, got '{args}'"));
+            }
+            Op::Convert { operand: names.into_iter().next().unwrap() }
+        }
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" => {
+            let names = operand_names();
+            if names.len() != 2 {
+                return err(format!("{opcode} takes two operands, got '{args}'"));
+            }
+            let op = match opcode {
+                "add" => EwOp::Add,
+                "subtract" => EwOp::Sub,
+                "multiply" => EwOp::Mul,
+                "divide" => EwOp::Div,
+                "maximum" => EwOp::Max,
+                _ => EwOp::Min,
+            };
+            let mut it = names.into_iter();
+            Op::Elementwise { op, lhs: it.next().unwrap(), rhs: it.next().unwrap() }
+        }
+        "tuple" => Op::Tuple(operand_names()),
+        other => return err(format!("unsupported HLO opcode '{other}'")),
+    };
+    Ok(Instr { name, shape, op, root })
+}
+
+/// Parse the ENTRY computation of an HLO-text module.
+fn parse_module(text: &str) -> Result<Vec<Instr>, Error> {
+    let mut instrs = Vec::new();
+    let mut in_entry = false;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if !in_entry {
+            if line.starts_with("ENTRY") {
+                in_entry = true;
+            }
+            continue;
+        }
+        if line == "}" {
+            break;
+        }
+        instrs.push(parse_instr(line)?);
+    }
+    if instrs.is_empty() {
+        return err("no ENTRY computation found in HLO text");
+    }
+    if !instrs.iter().any(|i| i.root) {
+        return err("ENTRY computation has no ROOT instruction");
+    }
+    Ok(instrs)
+}
+
+// ---------------------------------------------------------------------------
+// Interpretation
+// ---------------------------------------------------------------------------
+
+fn materialize_constant(shape: &Option<Shape>, vals: &[f64]) -> Result<Literal, Error> {
+    let shape = match shape {
+        Some(s) => s,
+        None => return err("tuple-shaped constant not supported"),
+    };
+    let n: i64 = shape.dims.iter().product();
+    if vals.len() as i64 != n && !(vals.len() == 1 && n == 1) {
+        return err(format!("constant has {} values for shape {:?}", vals.len(), shape.dims));
+    }
+    Ok(match shape.dtype {
+        DType::F32 => Literal::F32 {
+            data: vals.iter().map(|&v| v as f32).collect(),
+            dims: shape.dims.clone(),
+        },
+        DType::I32 => Literal::I32 {
+            data: vals.iter().map(|&v| v as i32).collect(),
+            dims: shape.dims.clone(),
+        },
+    })
+}
+
+fn literal_dims(l: &Literal) -> Result<&[i64], Error> {
+    match l {
+        Literal::F32 { dims, .. } => Ok(dims),
+        Literal::I32 { dims, .. } => Ok(dims),
+        Literal::Tuple(_) => err("tuple has no array dims"),
+    }
+}
+
+/// `out[idx] = operand[idx[dimensions]]` over every multi-index of `out`.
+fn broadcast(operand: &Literal, dimensions: &[usize], out_shape: &Shape) -> Result<Literal, Error> {
+    let in_dims = literal_dims(operand)?.to_vec();
+    if in_dims.len() != dimensions.len() {
+        return err(format!(
+            "broadcast rank mismatch: operand {in_dims:?} vs dimensions {dimensions:?}"
+        ));
+    }
+    let out_dims = &out_shape.dims;
+    let out_len: i64 = out_dims.iter().product();
+
+    // Strides of the operand, in operand-dimension order.
+    let mut in_strides = vec![1i64; in_dims.len()];
+    for k in (0..in_dims.len().saturating_sub(1)).rev() {
+        in_strides[k] = in_strides[k + 1] * in_dims[k + 1];
+    }
+    // Strides of the output.
+    let mut out_strides = vec![1i64; out_dims.len()];
+    for k in (0..out_dims.len().saturating_sub(1)).rev() {
+        out_strides[k] = out_strides[k + 1] * out_dims[k + 1];
+    }
+
+    let src_index = |flat: i64| -> usize {
+        let mut idx = 0i64;
+        for (k, &d) in dimensions.iter().enumerate() {
+            let coord = (flat / out_strides[d]) % out_dims[d];
+            idx += coord * in_strides[k];
+        }
+        idx as usize
+    };
+
+    Ok(match operand {
+        Literal::F32 { data, .. } => Literal::F32 {
+            data: (0..out_len).map(|f| data[src_index(f)]).collect(),
+            dims: out_dims.clone(),
+        },
+        Literal::I32 { data, .. } => Literal::I32 {
+            data: (0..out_len).map(|f| data[src_index(f)]).collect(),
+            dims: out_dims.clone(),
+        },
+        Literal::Tuple(_) => return err("cannot broadcast a tuple"),
+    })
+}
+
+fn elementwise(op: EwOp, a: &Literal, b: &Literal) -> Result<Literal, Error> {
+    match (a, b) {
+        (Literal::F32 { data: x, dims }, Literal::F32 { data: y, .. }) => {
+            if x.len() != y.len() {
+                return err("elementwise operand length mismatch");
+            }
+            let data = x
+                .iter()
+                .zip(y)
+                .map(|(&a, &b)| match op {
+                    EwOp::Add => a + b,
+                    EwOp::Sub => a - b,
+                    EwOp::Mul => a * b,
+                    EwOp::Div => a / b,
+                    EwOp::Max => a.max(b),
+                    EwOp::Min => a.min(b),
+                })
+                .collect();
+            Ok(Literal::F32 { data, dims: dims.clone() })
+        }
+        (Literal::I32 { data: x, dims }, Literal::I32 { data: y, .. }) => {
+            if x.len() != y.len() {
+                return err("elementwise operand length mismatch");
+            }
+            let data = x
+                .iter()
+                .zip(y)
+                .map(|(&a, &b)| match op {
+                    EwOp::Add => a.wrapping_add(b),
+                    EwOp::Sub => a.wrapping_sub(b),
+                    EwOp::Mul => a.wrapping_mul(b),
+                    EwOp::Div => {
+                        if b == 0 {
+                            0
+                        } else {
+                            a / b
+                        }
+                    }
+                    EwOp::Max => a.max(b),
+                    EwOp::Min => a.min(b),
+                })
+                .collect();
+            Ok(Literal::I32 { data, dims: dims.clone() })
+        }
+        _ => err("elementwise operand type mismatch"),
+    }
+}
+
+fn convert(operand: &Literal, shape: &Option<Shape>) -> Result<Literal, Error> {
+    let dtype = match shape {
+        Some(s) => s.dtype,
+        None => return err("convert needs an array shape"),
+    };
+    Ok(match (operand, dtype) {
+        (Literal::F32 { data, dims }, DType::I32) => Literal::I32 {
+            data: data.iter().map(|&v| v as i32).collect(),
+            dims: dims.clone(),
+        },
+        (Literal::I32 { data, dims }, DType::F32) => Literal::F32 {
+            data: data.iter().map(|&v| v as f32).collect(),
+            dims: dims.clone(),
+        },
+        (l, _) => l.clone(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Public API mirroring the real crate
+// ---------------------------------------------------------------------------
+
+/// Raw HLO module text, as loaded from an artifact file.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// The interpreter has no device state; the client is a unit handle.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        let instrs = parse_module(&comp.text)?;
+        Ok(PjRtLoadedExecutable { instrs })
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    instrs: Vec<Instr>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Run the ENTRY computation; mirrors the real crate's
+    /// per-device-per-output nesting (`result[0][0]`).
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        let mut env: HashMap<&str, Literal> = HashMap::new();
+        let mut root: Option<Literal> = None;
+        for instr in &self.instrs {
+            let value = match &instr.op {
+                Op::Parameter(i) => match args.get(*i) {
+                    Some(l) => l.borrow().clone(),
+                    None => return err(format!("missing argument {i}")),
+                },
+                Op::Constant(vals) => materialize_constant(&instr.shape, vals)?,
+                Op::Broadcast { operand, dimensions } => {
+                    let src = env
+                        .get(operand.as_str())
+                        .ok_or_else(|| Error(format!("unknown operand '{operand}'")))?;
+                    let shape = instr
+                        .shape
+                        .as_ref()
+                        .ok_or_else(|| Error("broadcast needs an array shape".into()))?;
+                    broadcast(src, dimensions, shape)?
+                }
+                Op::Convert { operand } => {
+                    let src = env
+                        .get(operand.as_str())
+                        .ok_or_else(|| Error(format!("unknown operand '{operand}'")))?;
+                    convert(src, &instr.shape)?
+                }
+                Op::Elementwise { op, lhs, rhs } => {
+                    let a = env
+                        .get(lhs.as_str())
+                        .ok_or_else(|| Error(format!("unknown operand '{lhs}'")))?;
+                    let b = env
+                        .get(rhs.as_str())
+                        .ok_or_else(|| Error(format!("unknown operand '{rhs}'")))?;
+                    elementwise(*op, a, b)?
+                }
+                Op::Tuple(names) => {
+                    let mut parts = Vec::with_capacity(names.len());
+                    for n in names {
+                        parts.push(
+                            env.get(n.as_str())
+                                .ok_or_else(|| Error(format!("unknown operand '{n}'")))?
+                                .clone(),
+                        );
+                    }
+                    Literal::Tuple(parts)
+                }
+            };
+            if instr.root {
+                root = Some(value.clone());
+            }
+            env.insert(instr.name.as_str(), value);
+        }
+        let root = root.ok_or_else(|| Error("no ROOT value produced".into()))?;
+        Ok(vec![vec![PjRtBuffer { lit: root }]])
+    }
+}
+
+/// Device buffer stand-in: the literal itself.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(hlo: &str, args: &[Literal]) -> Literal {
+        let comp = XlaComputation { text: hlo.to_string() };
+        let exe = PjRtClient.compile(&comp).expect("compile");
+        let out = exe.execute::<Literal>(args).expect("execute");
+        out[0][0].to_literal_sync().unwrap()
+    }
+
+    #[test]
+    fn add_and_tuple() {
+        let hlo = r#"
+HloModule tiny, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+        let a = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let b = Literal::vec1(&[10.0f32, 20.0, 30.0, 40.0]);
+        let out = run(hlo, &[a, b]);
+        let parts = out.to_tuple().unwrap();
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn broadcast_scalar_and_vector() {
+        let hlo = r#"
+ENTRY main {
+  p = s32[2]{0} parameter(0)
+  c = f32[] constant(0.5)
+  b = f32[2,3]{1,0} broadcast(c), dimensions={}
+  v = f32[3]{0} constant({1, 2, 3})
+  w = f32[2,3]{1,0} broadcast(v), dimensions={1}
+  s = f32[2,3]{1,0} add(b, w)
+  ROOT t = (f32[2,3]{0}) tuple(s)
+}
+"#;
+        let out = run(hlo, &[Literal::vec1(&[7i32, 8])]);
+        let parts = out.to_tuple().unwrap();
+        assert_eq!(
+            parts[0].to_vec::<f32>().unwrap(),
+            vec![1.5, 2.5, 3.5, 1.5, 2.5, 3.5]
+        );
+    }
+
+    #[test]
+    fn unsupported_op_fails_at_compile() {
+        let hlo = r#"
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  ROOT d = f32[4]{0} dot(x, x)
+}
+"#;
+        let comp = XlaComputation { text: hlo.to_string() };
+        assert!(PjRtClient.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+}
