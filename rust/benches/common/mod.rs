@@ -41,7 +41,13 @@ pub fn layer_data(n: usize, seed: u64) -> LayerData {
     let vals = (0..N_KV).map(|_| rand_vec(&mut rng, n * D_H)).collect();
     let q = rand_vec(&mut rng, N_Q * D_H);
     let mut p = rand_vec(&mut rng, n);
-    let m = p.iter().fold(f32::MIN, |a, &b| a.max(b));
+    // NaN-safe max seed (see kernels::softmax): f32::MIN is wrong for
+    // all-negative-infinite input and silently propagates NaN.
+    let m = p
+        .iter()
+        .filter(|v| !v.is_nan())
+        .fold(f32::NEG_INFINITY, |a, &b| if b.total_cmp(&a).is_gt() { b } else { a });
+    assert!(m.is_finite(), "bench softmax max must be finite");
     let mut s = 0.0;
     for v in p.iter_mut() {
         *v = (*v - m).exp();

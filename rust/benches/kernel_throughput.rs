@@ -1,0 +1,274 @@
+//! Kernel-level throughput for the fused dequant-GEMV hot path: blocked
+//! SIMD-friendly kernels vs (a) the pre-PR production shape (`*_prev`:
+//! row-at-a-time, u8 fast unpack, AoS params — the honest baseline for the
+//! blocking/planar win) and (b) the retained generic scalar references
+//! (`*_ref`: the bit-exactness oracle), per bit-width, at the Table-4 head
+//! geometry (d_h = 128).
+//!
+//! Every run *asserts* the blocked/reference bit-identity contract before
+//! timing (CI runs this in quick mode as a smoke test: any panic or bit
+//! mismatch fails the build), then emits both a human-readable table and a
+//! machine-readable `BENCH_kernels.json` (tokens/s and ns/row per kernel
+//! variant) so the perf trajectory is tracked across PRs.
+//!
+//! ```bash
+//! cargo bench --bench kernel_throughput          # full run (4096 tokens)
+//! cargo bench --bench kernel_throughput quick    # CI smoke (512 tokens)
+//! cargo bench --bench kernel_throughput 16384    # override tokens
+//! ```
+
+use innerq::cache::segments::{InnerKeySegment, InnerValSegment};
+use innerq::kernels::gemv_inner::{pv_inner_chunk, pv_inner_chunk_ref, qk_inner, qk_inner_ref};
+use innerq::kernels::gemv_fp;
+use innerq::quant::group::Mode;
+use innerq::quant::packing::{packed_len, unpack32};
+use innerq::util::json::Json;
+use innerq::util::rng::Rng;
+use innerq::util::stats::time_us;
+
+const D_H: usize = 128;
+
+// ---------------------------------------------------------------------------
+// Pre-PR production shape, kept verbatim so BENCH_kernels.json tracks the
+// *real* improvement of the blocked kernels over what previously shipped —
+// not over the deliberately-generic scalar references (which pay a per-code
+// bit loop the old hot path never paid). Row-at-a-time, u8 fast unpack,
+// interleaved AoS (scale, zeff) pairs.
+// ---------------------------------------------------------------------------
+
+fn hsum16(a: &[f32; 16]) -> f32 {
+    let mut s8 = [0f32; 8];
+    for i in 0..8 {
+        s8[i] = a[i] + a[i + 8];
+    }
+    let s4 = [s8[0] + s8[4], s8[1] + s8[5], s8[2] + s8[6], s8[3] + s8[7]];
+    (s4[0] + s4[2]) + (s4[1] + s4[3])
+}
+
+fn qk_inner_prev(q: &[f32], codes: &[u8], params: &[(f32, f32)], bits: u8, d_h: usize, out: &mut [f32]) {
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
+    let mut qsum = vec![0f32; groups];
+    for (g, s) in qsum.iter_mut().enumerate() {
+        *s = q[g * 32..(g + 1) * 32].iter().sum();
+    }
+    let mut buf = [0u8; 32];
+    for (j, o) in out.iter_mut().enumerate() {
+        let row = &codes[j * row_bytes..(j + 1) * row_bytes];
+        let prow = &params[j * groups..(j + 1) * groups];
+        let mut row_acc = [0f32; 16];
+        let mut zterm = 0.0f32;
+        for g in 0..groups {
+            unpack32(&row[g * gbytes..], bits, &mut buf);
+            let qg = &q[g * 32..(g + 1) * 32];
+            let mut acc = [0f32; 16];
+            for half in 0..2 {
+                let (qh, bh) = (&qg[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
+                for i in 0..16 {
+                    acc[i] += qh[i] * bh[i] as f32;
+                }
+            }
+            let (s, z) = prow[g];
+            for i in 0..16 {
+                row_acc[i] += s * acc[i];
+            }
+            zterm += z * qsum[g];
+        }
+        *o = hsum16(&row_acc) + zterm;
+    }
+}
+
+fn pv_inner_chunk_prev(
+    p: &[f32],
+    chunk_codes: &[u8],
+    params: &[(f32, f32)],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let psum: f32 = p.iter().sum();
+    let mut acc = vec![0f32; d_h];
+    let mut buf = [0u8; 32];
+    for (t, &w) in p.iter().enumerate() {
+        let row = &chunk_codes[t * row_bytes..(t + 1) * row_bytes];
+        for g in 0..d_h / 32 {
+            unpack32(&row[g * gbytes..], bits, &mut buf);
+            let ag = &mut acc[g * 32..(g + 1) * 32];
+            for i in 0..32 {
+                ag[i] += w * buf[i] as f32;
+            }
+        }
+    }
+    for c in 0..d_h {
+        let (s, z) = params[c];
+        out[c] += s * acc[c] + z * psum;
+    }
+}
+
+struct Record {
+    kernel: &'static str,
+    bits: u8,
+    ns_per_row: f64,
+    tokens_per_s: f64,
+}
+
+fn record(records: &mut Vec<Record>, kernel: &'static str, bits: u8, mean_us: f64, rows: usize) {
+    let ns_per_row = mean_us * 1e3 / rows as f64;
+    let tokens_per_s = rows as f64 / (mean_us * 1e-6);
+    println!("{kernel:<16} {bits:>4} {ns_per_row:>12.1} {tokens_per_s:>14.3e}");
+    records.push(Record { kernel, bits, ns_per_row, tokens_per_s });
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_tokens: usize = args
+        .iter()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(if quick { 512 } else { 4096 });
+    assert_eq!(n_tokens % 32, 0, "token count must be a multiple of the 32-token chunk");
+    let (warmup, reps) = if quick { (2, 8) } else { (10, 60) };
+
+    eprintln!("[kernel_throughput] d_h {D_H}, {n_tokens} tokens, quick={quick}");
+    let mut rng = Rng::new(0xBE7C);
+    let keys: Vec<f32> = (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
+    let vals: Vec<f32> = (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
+    let q: Vec<f32> = (0..D_H).map(|_| rng.next_normal()).collect();
+    let p: Vec<f32> = {
+        let mut w: Vec<f32> = (0..n_tokens).map(|_| rng.next_f32()).collect();
+        let s: f32 = w.iter().sum();
+        w.iter_mut().for_each(|v| *v /= s);
+        w
+    };
+
+    println!("{:<16} {:>4} {:>12} {:>14}", "kernel", "bits", "ns/row", "tokens/s");
+    let mut records: Vec<Record> = Vec::new();
+
+    // FP32 baselines for context (one entry each, bits recorded as 32).
+    let mut scores = vec![0f32; n_tokens];
+    let s = time_us(warmup, reps, || {
+        gemv_fp::qk_fp(&q, &keys, D_H, &mut scores);
+        scores[0]
+    });
+    record(&mut records, "qk_fp", 32, s.mean_us, n_tokens);
+    let mut ctx = vec![0f32; D_H];
+    let s = time_us(warmup, reps, || {
+        ctx.iter_mut().for_each(|v| *v = 0.0);
+        gemv_fp::pv_fp(&p, &vals, D_H, &mut ctx);
+        ctx[0]
+    });
+    record(&mut records, "pv_fp", 32, s.mean_us, n_tokens);
+
+    for bits in [2u8, 3, 4] {
+        // ---- key kernel: blocked vs scalar reference ----
+        let mut kseg = InnerKeySegment::new(D_H, bits, Mode::Sym);
+        for row in keys.chunks_exact(D_H) {
+            kseg.append_token(row);
+        }
+        // AoS (scale, zeff) pairs for the pre-PR production variant.
+        let aos: Vec<(f32, f32)> =
+            kseg.scales.iter().copied().zip(kseg.zeffs.iter().copied()).collect();
+        let mut fast = vec![0f32; n_tokens];
+        let mut refr = vec![0f32; n_tokens];
+        let mut prev = vec![0f32; n_tokens];
+        qk_inner(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut fast);
+        qk_inner_ref(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut refr);
+        qk_inner_prev(&q, &kseg.codes, &aos, bits, D_H, &mut prev);
+        assert_eq!(fast, refr, "qk blocked/reference bit-identity violated at {bits} bits");
+        assert_eq!(fast, prev, "qk blocked/pre-PR bit-identity violated at {bits} bits");
+
+        let s = time_us(warmup, reps, || {
+            qk_inner(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut fast);
+            fast[0]
+        });
+        record(&mut records, "qk_inner", bits, s.mean_us, n_tokens);
+        let s = time_us(warmup, reps, || {
+            qk_inner_prev(&q, &kseg.codes, &aos, bits, D_H, &mut prev);
+            prev[0]
+        });
+        record(&mut records, "qk_inner_prev", bits, s.mean_us, n_tokens);
+        let s = time_us(warmup, reps, || {
+            qk_inner_ref(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut refr);
+            refr[0]
+        });
+        record(&mut records, "qk_inner_ref", bits, s.mean_us, n_tokens);
+
+        // ---- value kernel: blocked vs scalar reference, over all chunks ----
+        let mut vseg = InnerValSegment::new(D_H, bits, Mode::Sym);
+        for chunk in vals.chunks_exact(32 * D_H) {
+            vseg.append_chunk(chunk);
+        }
+        let chunk_bytes = 32 * (D_H / 32) * packed_len(32, bits);
+        let n_chunks = n_tokens / 32;
+        let vaos: Vec<(f32, f32)> =
+            vseg.scales.iter().copied().zip(vseg.zeffs.iter().copied()).collect();
+        // variant: 0 = blocked, 1 = pre-PR production shape, 2 = scalar ref.
+        let run_pv = |out: &mut [f32], variant: usize| {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            for k in 0..n_chunks {
+                let pk = &p[k * 32..(k + 1) * 32];
+                let ck = &vseg.codes[k * chunk_bytes..];
+                let sk = &vseg.scales[k * D_H..(k + 1) * D_H];
+                let zk = &vseg.zeffs[k * D_H..(k + 1) * D_H];
+                match variant {
+                    0 => pv_inner_chunk(pk, ck, sk, zk, bits, D_H, out),
+                    1 => pv_inner_chunk_prev(pk, ck, &vaos[k * D_H..(k + 1) * D_H], bits, D_H, out),
+                    _ => pv_inner_chunk_ref(pk, ck, sk, zk, bits, D_H, out),
+                }
+            }
+        };
+        let mut fast_ctx = vec![0f32; D_H];
+        let mut prev_ctx = vec![0f32; D_H];
+        let mut ref_ctx = vec![0f32; D_H];
+        run_pv(&mut fast_ctx, 0);
+        run_pv(&mut prev_ctx, 1);
+        run_pv(&mut ref_ctx, 2);
+        assert_eq!(fast_ctx, ref_ctx, "pv blocked/reference bit-identity violated at {bits} bits");
+        assert_eq!(fast_ctx, prev_ctx, "pv blocked/pre-PR bit-identity violated at {bits} bits");
+
+        let s = time_us(warmup, reps, || {
+            run_pv(&mut fast_ctx, 0);
+            fast_ctx[0]
+        });
+        record(&mut records, "pv_inner", bits, s.mean_us, n_tokens);
+        let s = time_us(warmup, reps, || {
+            run_pv(&mut prev_ctx, 1);
+            prev_ctx[0]
+        });
+        record(&mut records, "pv_inner_prev", bits, s.mean_us, n_tokens);
+        let s = time_us(warmup, reps, || {
+            run_pv(&mut ref_ctx, 2);
+            ref_ctx[0]
+        });
+        record(&mut records, "pv_inner_ref", bits, s.mean_us, n_tokens);
+    }
+
+    // Machine-readable trajectory record.
+    let results: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("kernel", Json::str(r.kernel)),
+                ("bits", Json::Num(r.bits as f64)),
+                ("d_h", Json::Num(D_H as f64)),
+                ("n_tokens", Json::Num(n_tokens as f64)),
+                ("ns_per_row", Json::Num(r.ns_per_row)),
+                ("tokens_per_s", Json::Num(r.tokens_per_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("kernel_throughput")),
+        ("quick", Json::Bool(quick)),
+        ("d_h", Json::Num(D_H as f64)),
+        ("n_tokens", Json::Num(n_tokens as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_kernels.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_kernels.json");
+    eprintln!("[kernel_throughput] wrote {path}");
+}

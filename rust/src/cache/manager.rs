@@ -53,8 +53,42 @@ pub fn attention_fanout<'a>(
     jobs
 }
 
+/// Build the prefill bulk-quantization fan-out: one job per KV head. Each
+/// job calls its `gather` closure for the head's token-major `(keys, vals)`
+/// rows, quantizes them, and writes the finished [`HeadCache`] into its
+/// disjoint slot. The gather runs *inside* the job so peak extra memory is
+/// one head copy per in-flight worker, not the whole prompt KV at once (the
+/// engine gathers strided rows out of the shared prefill tensors). This is
+/// the single definition of the prefill job shape — the engine's prefill
+/// path and the prefill-determinism test both build their jobs here,
+/// mirroring [`attention_fanout`] for decode. Each head's quantization is
+/// independent and internally sequential (unchanged FP order), so results
+/// are byte-identical across worker counts.
+pub fn prefill_fanout<'a, F>(
+    cfg: MethodConfig,
+    d_h: usize,
+    gathers: Vec<F>,
+    slots: &'a mut [Option<HeadCache>],
+) -> Vec<Job<'a>>
+where
+    F: FnOnce() -> (Vec<f32>, Vec<f32>) + Send + 'a,
+{
+    assert_eq!(gathers.len(), slots.len(), "one output slot per head");
+    gathers
+        .into_iter()
+        .zip(slots.iter_mut())
+        .map(|(gather, slot)| {
+            let job: Job<'a> = Box::new(move |_scratch: &mut Vec<f32>| {
+                let (keys, vals) = gather();
+                *slot = Some(HeadCache::from_prefill(cfg, d_h, &keys, &vals));
+            });
+            job
+        })
+        .collect()
+}
+
 /// Unified key-segment dispatch.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum KeySegment {
     Fp(FpSegment),
     Inner(InnerKeySegment),
@@ -124,7 +158,7 @@ impl KeySegment {
 }
 
 /// Unified value-segment dispatch.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum ValSegment {
     Fp(FpSegment),
     Inner(InnerValSegment),
@@ -195,8 +229,11 @@ impl ValSegment {
     }
 }
 
-/// KV cache for one attention (KV) head of one sequence.
-#[derive(Debug)]
+/// KV cache for one attention (KV) head of one sequence. `PartialEq`
+/// compares the full quantized state (codes, params, planar planes,
+/// windows) — the prefill-determinism tests use it to assert byte-identical
+/// construction across worker counts.
+#[derive(Debug, PartialEq)]
 pub struct HeadCache {
     pub cfg: MethodConfig,
     pub d_h: usize,
@@ -639,6 +676,44 @@ mod tests {
         assert!(serial.iter().any(|&v| v != 0.0));
         for workers in [2usize, 4, 8] {
             assert_eq!(run(workers), serial, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_prefill_matches_serial_byte_for_byte() {
+        use crate::util::threadpool::ThreadPool;
+        // Mirror of `concurrent_attend_matches_serial_bit_for_bit` for the
+        // prefill bulk-quantization fan-out: building the caches through the
+        // pool at any worker count must produce state (codes, params, planar
+        // planes, windows, norms) identical to the serial build.
+        let d_h = 64;
+        let n_tokens = 300;
+        let mut rng = Rng::new(91);
+        for m in [QuantMethod::InnerQBase, QuantMethod::Kivi, QuantMethod::TurboQuant] {
+            let cfg = m.config();
+            let heads: Vec<(Vec<f32>, Vec<f32>)> = (0..12)
+                .map(|_| {
+                    (
+                        normal_vec(&mut rng, n_tokens * d_h, 1.0, 0.02),
+                        normal_vec(&mut rng, n_tokens * d_h, 1.0, 0.02),
+                    )
+                })
+                .collect();
+            let run = |workers: usize| -> Vec<HeadCache> {
+                let pool = ThreadPool::new(workers);
+                let mut slots: Vec<Option<HeadCache>> = (0..heads.len()).map(|_| None).collect();
+                let gathers: Vec<_> = heads
+                    .iter()
+                    .map(|(k, v)| move || (k.clone(), v.clone()))
+                    .collect();
+                pool.run(prefill_fanout(cfg, d_h, gathers, &mut slots));
+                slots.into_iter().map(|s| s.expect("slot filled")).collect()
+            };
+            let serial = run(1);
+            assert!(serial.iter().all(|hc| hc.len() == n_tokens));
+            for workers in [2usize, 4, 8] {
+                assert_eq!(run(workers), serial, "{m:?} workers={workers} diverged");
+            }
         }
     }
 

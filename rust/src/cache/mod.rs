@@ -7,5 +7,5 @@ pub mod pool;
 pub mod segments;
 pub mod window;
 
-pub use manager::{attention_fanout, HeadCache, KeySegment, ValSegment};
+pub use manager::{attention_fanout, prefill_fanout, HeadCache, KeySegment, ValSegment};
 pub use pool::{Admission, CachePool};

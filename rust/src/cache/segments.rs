@@ -13,7 +13,7 @@ use crate::quant::turbo::{codebook, quantize_token, Rotation, TurboToken};
 use crate::quant::GroupParams;
 
 /// Plain f32 rows — the BaselineFp16 "segment" (no quantization).
-#[derive(Debug, Default)]
+#[derive(Debug, Default, PartialEq)]
 pub struct FpSegment {
     pub d_h: usize,
     pub rows: Vec<f32>,
@@ -40,16 +40,19 @@ impl FpSegment {
 }
 
 /// InnerQ key segment: per-token groups along `d_h` (§4.4).
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct InnerKeySegment {
     pub d_h: usize,
     pub bits: u8,
     pub mode: Mode,
     pub codes: Vec<u8>,
     pub params: Vec<GroupParams>,
-    /// Runtime shadow of `params` as (scale, zeff) f32 pairs — hoists the
-    /// f16 widening out of the GEMV hot loop (see kernels::zeff_params).
-    pub pf: Vec<(f32, f32)>,
+    /// Planar runtime shadows of `params` — separate `scales[]` / `zeffs[]`
+    /// f32 planes materialized at quantization time, so the GEMV hot loop
+    /// does no f16 widening and loads contiguous vector-width runs instead
+    /// of deinterleaving AoS pairs (see kernels::zeff_planes / DESIGN.md).
+    pub scales: Vec<f32>,
+    pub zeffs: Vec<f32>,
     n_tokens: usize,
 }
 
@@ -62,7 +65,8 @@ impl InnerKeySegment {
             mode,
             codes: Vec::new(),
             params: Vec::new(),
-            pf: Vec::new(),
+            scales: Vec::new(),
+            zeffs: Vec::new(),
             n_tokens: 0,
         }
     }
@@ -76,7 +80,9 @@ impl InnerKeySegment {
         for g in k.chunks_exact(32) {
             let p = quantize(self.mode, g, self.bits, &mut raw);
             self.params.push(p);
-            self.pf.push(crate::kernels::zeff(p, self.bits));
+            let (s, z) = crate::kernels::zeff(p, self.bits);
+            self.scales.push(s);
+            self.zeffs.push(z);
             pack(&raw, self.bits, &mut self.codes);
         }
         self.n_tokens += 1;
@@ -84,7 +90,7 @@ impl InnerKeySegment {
     /// Fused dequant-GEMV scores for all quantized tokens.
     pub fn scores(&self, q: &[f32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.n_tokens);
-        gemv_inner::qk_inner(q, &self.codes, &self.pf, self.bits, self.d_h, out);
+        gemv_inner::qk_inner(q, &self.codes, &self.scales, &self.zeffs, self.bits, self.d_h, out);
     }
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
@@ -93,7 +99,7 @@ impl InnerKeySegment {
 
 /// InnerQ value segment: per-channel groups along the token axis, stored as
 /// channel-major chunks of 32 tokens (§4.4).
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct InnerValSegment {
     pub d_h: usize,
     pub bits: u8,
@@ -102,8 +108,9 @@ pub struct InnerValSegment {
     pub codes: Vec<u8>,
     /// Per chunk: `d_h` group params.
     pub params: Vec<GroupParams>,
-    /// Runtime (scale, zeff) shadow of `params`.
-    pub pf: Vec<(f32, f32)>,
+    /// Planar runtime shadows of `params` (see [`InnerKeySegment`]).
+    pub scales: Vec<f32>,
+    pub zeffs: Vec<f32>,
     n_chunks: usize,
 }
 
@@ -115,7 +122,8 @@ impl InnerValSegment {
             mode,
             codes: Vec::new(),
             params: Vec::new(),
-            pf: Vec::new(),
+            scales: Vec::new(),
+            zeffs: Vec::new(),
             n_chunks: 0,
         }
     }
@@ -137,7 +145,9 @@ impl InnerValSegment {
             }
             let p = quantize(self.mode, &col, self.bits, &mut ccodes);
             self.params.push(p);
-            self.pf.push(crate::kernels::zeff(p, self.bits));
+            let (s, z) = crate::kernels::zeff(p, self.bits);
+            self.scales.push(s);
+            self.zeffs.push(z);
             for t in 0..32 {
                 raw[t * self.d_h + c] = ccodes[t];
             }
@@ -155,7 +165,8 @@ impl InnerValSegment {
             gemv_inner::pv_inner_chunk(
                 &p[k * 32..(k + 1) * 32],
                 &self.codes[k * chunk_bytes..],
-                &self.pf[k * self.d_h..(k + 1) * self.d_h],
+                &self.scales[k * self.d_h..(k + 1) * self.d_h],
+                &self.zeffs[k * self.d_h..(k + 1) * self.d_h],
                 self.bits,
                 self.d_h,
                 out,
@@ -169,7 +180,7 @@ impl InnerValSegment {
 
 /// KIVI key segment: per-channel groups along the token axis, stored as
 /// token-major chunks of 32 tokens.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct OuterKeySegment {
     pub d_h: usize,
     pub bits: u8,
@@ -178,8 +189,9 @@ pub struct OuterKeySegment {
     pub codes: Vec<u8>,
     /// Per chunk: `d_h` group params (one per channel).
     pub params: Vec<GroupParams>,
-    /// Runtime (scale, zeff) shadow of `params`.
-    pub pf: Vec<(f32, f32)>,
+    /// Planar runtime shadows of `params` (see [`InnerKeySegment`]).
+    pub scales: Vec<f32>,
+    pub zeffs: Vec<f32>,
     n_chunks: usize,
 }
 
@@ -192,7 +204,8 @@ impl OuterKeySegment {
             mode,
             codes: Vec::new(),
             params: Vec::new(),
-            pf: Vec::new(),
+            scales: Vec::new(),
+            zeffs: Vec::new(),
             n_chunks: 0,
         }
     }
@@ -211,7 +224,9 @@ impl OuterKeySegment {
             }
             let p = quantize(self.mode, &col, self.bits, &mut ccodes);
             self.params.push(p);
-            self.pf.push(crate::kernels::zeff(p, self.bits));
+            let (s, z) = crate::kernels::zeff(p, self.bits);
+            self.scales.push(s);
+            self.zeffs.push(z);
             for t in 0..32 {
                 raw[t * self.d_h + c] = ccodes[t];
             }
@@ -230,7 +245,8 @@ impl OuterKeySegment {
             gemv_outer::qk_outer_chunk(
                 q,
                 &self.codes[k * chunk_bytes..],
-                &self.pf[k * self.d_h..(k + 1) * self.d_h],
+                &self.scales[k * self.d_h..(k + 1) * self.d_h],
+                &self.zeffs[k * self.d_h..(k + 1) * self.d_h],
                 self.bits,
                 self.d_h,
                 scratch,
@@ -244,15 +260,16 @@ impl OuterKeySegment {
 }
 
 /// KIVI value segment: per-token groups along channels, one row per token.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct OuterValSegment {
     pub d_h: usize,
     pub bits: u8,
     pub mode: Mode,
     pub codes: Vec<u8>,
     pub params: Vec<GroupParams>,
-    /// Runtime (scale, zeff) shadow of `params`.
-    pub pf: Vec<(f32, f32)>,
+    /// Planar runtime shadows of `params` (see [`InnerKeySegment`]).
+    pub scales: Vec<f32>,
+    pub zeffs: Vec<f32>,
     n_tokens: usize,
 }
 
@@ -265,7 +282,8 @@ impl OuterValSegment {
             mode,
             codes: Vec::new(),
             params: Vec::new(),
-            pf: Vec::new(),
+            scales: Vec::new(),
+            zeffs: Vec::new(),
             n_tokens: 0,
         }
     }
@@ -279,7 +297,9 @@ impl OuterValSegment {
         for g in v.chunks_exact(32) {
             let p = quantize(self.mode, g, self.bits, &mut raw);
             self.params.push(p);
-            self.pf.push(crate::kernels::zeff(p, self.bits));
+            let (s, z) = crate::kernels::zeff(p, self.bits);
+            self.scales.push(s);
+            self.zeffs.push(z);
             pack(&raw, self.bits, &mut self.codes);
         }
         self.n_tokens += 1;
@@ -292,7 +312,8 @@ impl OuterValSegment {
             gemv_outer::pv_outer_row(
                 w,
                 &self.codes[t * row_bytes..],
-                &self.pf[t * groups..(t + 1) * groups],
+                &self.scales[t * groups..(t + 1) * groups],
+                &self.zeffs[t * groups..(t + 1) * groups],
                 self.bits,
                 self.d_h,
                 out,
@@ -305,7 +326,7 @@ impl OuterValSegment {
 }
 
 /// TurboQuant key segment: rotated codebook-coded tokens.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct TurboKeySegment {
     pub d_h: usize,
     pub bits: u8,
@@ -336,7 +357,7 @@ impl TurboKeySegment {
 
 /// TurboQuant value segment: accumulates in the rotated basis; `finalize`
 /// un-rotates the context contribution once per decode step.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct TurboValSegment {
     pub d_h: usize,
     pub bits: u8,

@@ -6,7 +6,7 @@
 //! consume. Both store f32 rows (the FP16-storage stand-in).
 
 /// Fixed window over the first tokens of the sequence.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, PartialEq)]
 pub struct SinkWindow {
     pub d_h: usize,
     pub rows: Vec<f32>,
@@ -38,7 +38,7 @@ impl SinkWindow {
 }
 
 /// FIFO window over the most recent tokens, with amortized O(1) front pops.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub struct RecentWindow {
     pub d_h: usize,
     data: Vec<f32>,

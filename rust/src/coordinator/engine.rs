@@ -118,20 +118,42 @@ impl Engine {
 
         let n = prompt.len();
         let (n_l, n_kv, d_h) = (dims.n_layers, dims.n_kv_heads, dims.d_h);
-        let mut caches = Vec::with_capacity(n_l);
-        for l in 0..n_l {
-            let mut heads = Vec::with_capacity(n_kv);
-            for h in 0..n_kv {
-                // gather this head's rows: layout (L, n_kv, d_h) per layer
-                let mut k_rows = Vec::with_capacity(n * d_h);
-                let mut v_rows = Vec::with_capacity(n * d_h);
-                for t in 0..n {
-                    let base = ((l * bucket + t) * n_kv + h) * d_h;
-                    k_rows.extend_from_slice(&ks[base..base + d_h]);
-                    v_rows.extend_from_slice(&vs[base..base + d_h]);
+        // Fan the bulk quantization out across the worker pool: one job per
+        // (layer, KV head), built by the shared `cache::prefill_fanout` so
+        // the engine and the determinism test share one job shape. Each job
+        // gathers its head's strided token-major rows out of the shared
+        // prefill tensors *inside* the job (layout (L, n_kv, d_h) per
+        // layer), so peak extra memory is one head copy per in-flight
+        // worker, not a duplicate of the whole prompt KV. Quantization
+        // dominates prefill cache setup and each head is independent, so
+        // this closes the "prefill is still serial on the driver" ROADMAP
+        // item with byte-identical results at any worker count.
+        let (ks_ref, vs_ref): (&[f32], &[f32]) = (&ks, &vs);
+        let gathers: Vec<_> = (0..n_l * n_kv)
+            .map(|idx| {
+                let (l, h) = (idx / n_kv, idx % n_kv);
+                move || {
+                    let mut k_rows = Vec::with_capacity(n * d_h);
+                    let mut v_rows = Vec::with_capacity(n * d_h);
+                    for t in 0..n {
+                        let base = ((l * bucket + t) * n_kv + h) * d_h;
+                        k_rows.extend_from_slice(&ks_ref[base..base + d_h]);
+                        v_rows.extend_from_slice(&vs_ref[base..base + d_h]);
+                    }
+                    (k_rows, v_rows)
                 }
-                heads.push(HeadCache::from_prefill(self.cfg, d_h, &k_rows, &v_rows));
-            }
+            })
+            .collect();
+        let mut slots: Vec<Option<HeadCache>> = (0..n_l * n_kv).map(|_| None).collect();
+        self.pool.run(crate::cache::prefill_fanout(self.cfg, d_h, gathers, &mut slots));
+        let mut caches = Vec::with_capacity(n_l);
+        let mut slot_iter = slots.into_iter();
+        for _ in 0..n_l {
+            let heads: Vec<HeadCache> = slot_iter
+                .by_ref()
+                .take(n_kv)
+                .map(|s| s.expect("prefill job filled its slot"))
+                .collect();
             caches.push(heads);
         }
         let vstart = (n - 1) * dims.vocab;

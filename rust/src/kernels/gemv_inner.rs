@@ -9,33 +9,33 @@
 //! hybrid groups cost one extra FMA per group, not per element — this is the
 //! data-reuse property the paper gets from inner-dimension grouping on GPU
 //! (one scale load per compute tile) expressed in CPU-register form.
+//!
+//! The hot kernels here are *blocked*: `qk_inner` processes 4 token rows per
+//! pass so the query group and its prefix sum are loaded once per block and
+//! the four rows' accumulator chains interleave in the OoO window, and
+//! `pv_inner_chunk` walks group-major with a register-resident `[f32; 32]`
+//! accumulator per channel group. Group params arrive as planar `scales[]` /
+//! `zeffs[]` planes (see [`crate::kernels::zeff_planes`]); codes are
+//! unpacked straight to f32 (`unpack32_f32`). Every inner loop is an
+//! exact-trip-count chunk over fixed-size f32 arrays that rustc
+//! autovectorizes — no `unsafe`, no nightly SIMD. The `*_ref` scalar
+//! kernels are retained as the bit-exactness oracle: the blocked kernels
+//! perform each row's floating-point operations in the reference order, so
+//! results are bit-identical (asserted by the parity tests).
+//!
+//! Layout and blocking rationale: `kernels/DESIGN.md`.
 
-use crate::quant::packing::{packed_len, unpack32};
+use crate::quant::packing::{packed_len, unpack, unpack32_f32};
 
-/// Key-cache scores (Eq. 3), InnerQ layout: per-token groups along `d_h`.
-///
-/// * `codes`: `n_tokens` rows, each `d_h/32` packed groups of 32 codes;
-/// * `params`: `n_tokens * d_h/32` precomputed `(scale, zeff)` pairs,
-///   row-major (see [`crate::kernels::zeff_params`]).
-///
-/// Writes `out[j] = q · dequant(K_j)` for each quantized token row.
-pub fn qk_inner(
-    q: &[f32],
-    codes: &[u8],
-    params: &[(f32, f32)],
-    bits: u8,
-    d_h: usize,
-    out: &mut [f32],
-) {
-    // The guards are per-call (not per-element) and gate raw slice
-    // arithmetic below, so they hold in release builds too: a short `codes`
-    // or `params` slice must fail loudly, never read out of bounds.
-    let n = out.len();
+/// Per-call guards shared by the blocked and reference key kernels. The
+/// guards are per-call (not per-element) and gate raw slice arithmetic, so
+/// they hold in release builds too: a short `codes` or `scales`/`zeffs`
+/// slice must fail loudly, never read out of bounds.
+fn qk_guards(q: &[f32], codes: &[u8], scales: &[f32], zeffs: &[f32], bits: u8, d_h: usize, n: usize) {
     assert_eq!(q.len(), d_h, "query length {} != d_h {d_h}", q.len());
     assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
     let groups = d_h / 32;
-    let gbytes = packed_len(32, bits);
-    let row_bytes = groups * gbytes;
+    let row_bytes = groups * packed_len(32, bits);
     assert!(
         codes.len() >= n * row_bytes,
         "codes slice too short: {} < {} ({n} rows)",
@@ -43,57 +43,192 @@ pub fn qk_inner(
         n * row_bytes
     );
     assert!(
-        params.len() >= n * groups,
-        "params slice too short: {} < {} ({n} rows)",
-        params.len(),
+        scales.len() >= n * groups,
+        "scales slice too short: {} < {} ({n} rows)",
+        scales.len(),
         n * groups
     );
+    assert!(
+        zeffs.len() >= n * groups,
+        "zeffs slice too short: {} < {} ({n} rows)",
+        zeffs.len(),
+        n * groups
+    );
+}
 
-    // Per-group query prefix sums (for the zeff term), once per call. The
-    // stack buffer covers d_h <= 2048; larger heads take one heap
-    // allocation instead of corrupting (or aborting on) the fixed array.
+/// Per-group query prefix sums (for the zeff term), once per call. The
+/// stack buffer covers d_h <= 2048; larger heads take one heap allocation
+/// instead of corrupting (or aborting on) the fixed array.
+fn fill_qsum<'a>(
+    q: &[f32],
+    groups: usize,
+    stack: &'a mut [f32; 64],
+    heap: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    let qsum: &mut [f32] = if groups <= stack.len() {
+        &mut stack[..groups]
+    } else {
+        heap.resize(groups, 0.0f32);
+        heap
+    };
+    for (g, s) in qsum.iter_mut().enumerate() {
+        *s = q[g * 32..(g + 1) * 32].iter().sum();
+    }
+    qsum
+}
+
+/// One block of `R` token rows: the query group `qg` and prefix sum
+/// `qsum[g]` are loaded once per block and reused across all `R` rows, and
+/// the `R` independent accumulator chains give the OoO core parallel FMA
+/// streams. Per row, the operation order is exactly the scalar reference's
+/// (group-ascending, 16-lane split accumulation, one `hsum16` at the end),
+/// so any `R` produces bit-identical scores.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)] // internal: mirrors the kernel ABI plus block state
+fn qk_inner_block<const R: usize>(
+    q: &[f32],
+    qsum: &[f32],
+    rows: [&[u8]; R],
+    srows: [&[f32]; R],
+    zrows: [&[f32]; R],
+    bits: u8,
+    gbytes: usize,
+    out: &mut [f32],
+) {
+    let groups = qsum.len();
+    let mut row_acc = [[0f32; 16]; R];
+    let mut zterm = [0f32; R];
+    let mut buf = [0f32; 32];
+    for g in 0..groups {
+        let qg: &[f32; 32] = q[g * 32..(g + 1) * 32].try_into().unwrap();
+        let qs = qsum[g];
+        for r in 0..R {
+            unpack32_f32(&rows[r][g * gbytes..], bits, &mut buf);
+            // 16-lane split accumulation: breaks the strict-FP reduction
+            // dependency chain so the loop vectorizes (one vfma per 16
+            // codes on AVX-512).
+            let mut acc = [0f32; 16];
+            for i in 0..16 {
+                acc[i] += qg[i] * buf[i];
+            }
+            for i in 0..16 {
+                acc[i] += qg[16 + i] * buf[16 + i];
+            }
+            // Row-level lane accumulator: the group's partial dot is scaled
+            // in lane space (one vector multiply-add per group), so only ONE
+            // horizontal reduction happens per token row.
+            let s = srows[r][g];
+            for i in 0..16 {
+                row_acc[r][i] += s * acc[i];
+            }
+            zterm[r] += zrows[r][g] * qs;
+        }
+    }
+    for r in 0..R {
+        out[r] = hsum16(&row_acc[r]) + zterm[r];
+    }
+}
+
+/// Key-cache scores (Eq. 3), InnerQ layout: per-token groups along `d_h`.
+///
+/// * `codes`: `n_tokens` rows, each `d_h/32` packed groups of 32 codes;
+/// * `scales` / `zeffs`: planar per-group parameter planes, `n_tokens *
+///   d_h/32` f32 each, row-major (see [`crate::kernels::zeff_planes`]).
+///
+/// Writes `out[j] = q · dequant(K_j)` for each quantized token row. Blocked
+/// 4 rows per pass; bit-identical to [`qk_inner_ref`] for any row count.
+pub fn qk_inner(
+    q: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    qk_guards(q, codes, scales, zeffs, bits, d_h, n);
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
+
     let mut qsum_stack = [0f32; 64];
     let mut qsum_heap = Vec::new();
-    let qsum: &mut [f32] = if groups <= qsum_stack.len() {
-        &mut qsum_stack[..groups]
-    } else {
-        qsum_heap.resize(groups, 0.0f32);
-        &mut qsum_heap
-    };
-    for g in 0..groups {
-        qsum[g] = q[g * 32..(g + 1) * 32].iter().sum();
-    }
+    let qsum = fill_qsum(q, groups, &mut qsum_stack, &mut qsum_heap);
 
-    let mut buf = [0u8; 32];
-    for j in 0..n {
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        let srows: [&[f32]; 4] =
+            std::array::from_fn(|r| &scales[(j + r) * groups..(j + r + 1) * groups]);
+        let zrows: [&[f32]; 4] =
+            std::array::from_fn(|r| &zeffs[(j + r) * groups..(j + r + 1) * groups]);
+        qk_inner_block::<4>(q, qsum, rows, srows, zrows, bits, gbytes, &mut out[j..j + 4]);
+        j += 4;
+    }
+    // Tail rows (n % 4) go through the same block kernel one row at a time —
+    // identical per-row op order, so the tail is bit-identical too.
+    while j < n {
+        qk_inner_block::<1>(
+            q,
+            qsum,
+            [&codes[j * row_bytes..(j + 1) * row_bytes]],
+            [&scales[j * groups..(j + 1) * groups]],
+            [&zeffs[j * groups..(j + 1) * groups]],
+            bits,
+            gbytes,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}
+
+/// Scalar reference for [`qk_inner`]: one row at a time through the generic
+/// bit-loop unpacker. Retained as the blocked kernel's bit-exactness oracle
+/// (the parity tests assert `qk_inner == qk_inner_ref` exactly) and as the
+/// readable form of the algorithm.
+pub fn qk_inner_ref(
+    q: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    qk_guards(q, codes, scales, zeffs, bits, d_h, n);
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
+
+    let mut qsum_stack = [0f32; 64];
+    let mut qsum_heap = Vec::new();
+    let qsum = fill_qsum(q, groups, &mut qsum_stack, &mut qsum_heap);
+
+    let mut raw = [0u8; 32];
+    for (j, o) in out.iter_mut().enumerate() {
         let row = &codes[j * row_bytes..(j + 1) * row_bytes];
-        let prow = &params[j * groups..(j + 1) * groups];
-        // Row-level lane accumulator: each group's partial dot is scaled in
-        // lane space (one vector multiply-add per group), so only ONE
-        // horizontal reduction happens per token row — the CPU-register form
-        // of "load the scale once per group and keep accumulating".
         let mut row_acc = [0f32; 16];
         let mut zterm = 0.0f32;
         for g in 0..groups {
-            unpack32(&row[g * gbytes..], bits, &mut buf);
+            unpack(&row[g * gbytes..], bits, 32, &mut raw);
             let qg = &q[g * 32..(g + 1) * 32];
-            // 16-lane split accumulation: breaks the strict-FP reduction
-            // dependency chain so the loop vectorizes (one vcvt + vfma per
-            // 16 codes on AVX-512).
             let mut acc = [0f32; 16];
-            for half in 0..2 {
-                let (qh, bh) = (&qg[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
-                for i in 0..16 {
-                    acc[i] += qh[i] * bh[i] as f32;
-                }
+            for i in 0..16 {
+                acc[i] += qg[i] * raw[i] as f32;
             }
-            let (s, z) = prow[g];
+            for i in 0..16 {
+                acc[i] += qg[16 + i] * raw[16 + i] as f32;
+            }
+            let s = scales[j * groups + g];
             for i in 0..16 {
                 row_acc[i] += s * acc[i];
             }
-            zterm += z * qsum[g];
+            zterm += zeffs[j * groups + g] * qsum[g];
         }
-        out[j] = hsum16(&row_acc) + zterm;
+        *o = hsum16(&row_acc) + zterm;
     }
 }
 
@@ -108,6 +243,22 @@ fn hsum16(a: &[f32; 16]) -> f32 {
     (s4[0] + s4[2]) + (s4[1] + s4[3])
 }
 
+/// Guards shared by the blocked and reference value kernels.
+fn pv_guards(p: &[f32], chunk_codes: &[u8], scales: &[f32], zeffs: &[f32], bits: u8, d_h: usize, out: &[f32]) {
+    assert_eq!(p.len(), 32, "value chunk needs exactly 32 weights");
+    assert_eq!(out.len(), d_h, "out length {} != d_h {d_h}", out.len());
+    assert_eq!(scales.len(), d_h, "scales length {} != d_h {d_h}", scales.len());
+    assert_eq!(zeffs.len(), d_h, "zeffs length {} != d_h {d_h}", zeffs.len());
+    assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
+    let row_bytes = (d_h / 32) * packed_len(32, bits);
+    assert!(
+        chunk_codes.len() >= 32 * row_bytes,
+        "chunk_codes slice too short: {} < {}",
+        chunk_codes.len(),
+        32 * row_bytes
+    );
+}
+
 /// Value-cache context accumulation (Eq. 5), InnerQ layout: per-channel
 /// groups along the token axis. One *chunk* covers 32 consecutive tokens.
 ///
@@ -115,63 +266,95 @@ fn hsum16(a: &[f32; 16]) -> f32 {
 /// (the defining property of inner grouping for V), the codes are stored
 /// **token-major** and the kernel runs reduction-free: each token row is a
 /// broadcast-`p[t]` vector FMA over channel lanes, and the per-channel scale
-/// is applied once per chunk at the end. (The Pallas/TPU kernel keeps the
-/// channel-major sublane layout — see DESIGN.md §Hardware-Adaptation.)
+/// is applied once per chunk at the end.
+///
+/// Blocked form: walks group-major with a register-resident `[f32; 32]`
+/// accumulator per channel group (no `d_h`-sized scratch at all), unpacking
+/// 4 token rows per pass. Per channel, tokens still accumulate in ascending
+/// order and the planar scale/zeff apply once at the end, so the result is
+/// bit-identical to [`pv_inner_chunk_ref`].
 ///
 /// * `chunk_codes`: 32 token rows of packed `d_h` codes;
-/// * `params`: `d_h` (scale, zeff) pairs (one per channel group);
+/// * `scales` / `zeffs`: planar parameter planes, `d_h` f32 each (one per
+///   channel group);
 /// * `p`: the 32 softmax weights for this chunk's tokens.
 ///
 /// Accumulates `out[c] += Σ_t p[t] · dequant(V[t][c])`.
 pub fn pv_inner_chunk(
     p: &[f32],
     chunk_codes: &[u8],
-    params: &[(f32, f32)],
+    scales: &[f32],
+    zeffs: &[f32],
     bits: u8,
     d_h: usize,
     out: &mut [f32],
 ) {
-    // Unconditional guards: these gate the raw slice math below and must
-    // hold in release builds too (see qk_inner).
-    assert_eq!(p.len(), 32, "value chunk needs exactly 32 weights");
-    assert_eq!(out.len(), d_h, "out length {} != d_h {d_h}", out.len());
-    assert_eq!(params.len(), d_h, "params length {} != d_h {d_h}", params.len());
-    assert_eq!(d_h % 32, 0, "inner kernel requires G=32-aligned head dim");
+    pv_guards(p, chunk_codes, scales, zeffs, bits, d_h, out);
     let gbytes = packed_len(32, bits);
     let row_bytes = (d_h / 32) * gbytes;
-    assert!(
-        chunk_codes.len() >= 32 * row_bytes,
-        "chunk_codes slice too short: {} < {}",
-        chunk_codes.len(),
-        32 * row_bytes
-    );
     let psum: f32 = p.iter().sum();
 
-    // Unscaled accumulation: acc[c] = sum_t p[t] * code[t][c]. Stack
-    // accumulator up to d_h = 512; one heap allocation beyond that.
-    let mut acc_stack = [0f32; 512];
-    let mut acc_heap = Vec::new();
-    let acc: &mut [f32] = if d_h <= acc_stack.len() {
-        &mut acc_stack[..d_h]
-    } else {
-        acc_heap.resize(d_h, 0.0f32);
-        &mut acc_heap
-    };
-    let mut buf = [0u8; 32];
+    let mut buf = [[0f32; 32]; 4];
+    for g in 0..d_h / 32 {
+        // Unscaled accumulation for this channel group, entirely in
+        // registers: accg[i] = Σ_t p[t] * code[t][g*32+i].
+        let mut accg = [0f32; 32];
+        for tb in 0..8 {
+            // Unpack 4 token rows per pass, then apply their weights in
+            // token order (the reference accumulation order per channel).
+            for (r, b) in buf.iter_mut().enumerate() {
+                let t = tb * 4 + r;
+                unpack32_f32(&chunk_codes[t * row_bytes + g * gbytes..], bits, b);
+            }
+            for (r, b) in buf.iter().enumerate() {
+                let w = p[tb * 4 + r];
+                for i in 0..32 {
+                    accg[i] += w * b[i];
+                }
+            }
+        }
+        // One scale application per channel per chunk (1/32 per code),
+        // straight from the planar planes.
+        let sg: &[f32; 32] = scales[g * 32..(g + 1) * 32].try_into().unwrap();
+        let zg: &[f32; 32] = zeffs[g * 32..(g + 1) * 32].try_into().unwrap();
+        let og = &mut out[g * 32..(g + 1) * 32];
+        for i in 0..32 {
+            og[i] += sg[i] * accg[i] + zg[i] * psum;
+        }
+    }
+}
+
+/// Scalar reference for [`pv_inner_chunk`]: token-major walk through the
+/// generic unpacker with a `d_h`-sized accumulator. Retained as the blocked
+/// kernel's bit-exactness oracle.
+pub fn pv_inner_chunk_ref(
+    p: &[f32],
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    pv_guards(p, chunk_codes, scales, zeffs, bits, d_h, out);
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let psum: f32 = p.iter().sum();
+
+    let mut acc = vec![0f32; d_h];
+    let mut raw = [0u8; 32];
     for (t, &w) in p.iter().enumerate() {
         let row = &chunk_codes[t * row_bytes..(t + 1) * row_bytes];
         for g in 0..d_h / 32 {
-            unpack32(&row[g * gbytes..], bits, &mut buf);
+            unpack(&row[g * gbytes..], bits, 32, &mut raw);
             let ag = &mut acc[g * 32..(g + 1) * 32];
             for i in 0..32 {
-                ag[i] += w * buf[i] as f32;
+                ag[i] += w * raw[i] as f32;
             }
         }
     }
-    // One scale application per channel per chunk (1/32 per code).
     for c in 0..d_h {
-        let (s, z) = params[c];
-        out[c] += s * acc[c] + z * psum;
+        out[c] += scales[c] * acc[c] + zeffs[c] * psum;
     }
 }
 
@@ -242,7 +425,6 @@ mod tests {
         n: usize,
     ) -> Vec<f32> {
         use crate::quant::group::dequantize;
-        use crate::quant::packing::unpack;
         let groups = d_h / 32;
         let gbytes = packed_len(32, bits);
         let mut out = vec![0f32; n];
@@ -268,15 +450,20 @@ mod tests {
             let q = normal_vec(rng, d_h, 1.0, 0.0);
             let keys = normal_vec(rng, n * d_h, 1.0, 0.1);
             let (codes, params) = build_key_rows(&keys, d_h, bits, mode);
-            let pf = crate::kernels::zeff_params(&params, bits);
+            let (sc, ze) = crate::kernels::zeff_planes(&params, bits);
             let mut out = vec![0f32; n];
-            qk_inner(&q, &codes, &pf, bits, d_h, &mut out);
+            qk_inner(&q, &codes, &sc, &ze, bits, d_h, &mut out);
             let want = qk_reference(&q, &codes, &params, bits, d_h, n);
             for (a, b) in out.iter().zip(&want) {
                 assert!((a - b).abs() < 1e-2 * b.abs().max(1.0), "{a} vs {b}");
             }
         });
     }
+
+    // NOTE: the blocked-vs-scalar-reference bit-identity contract (and the
+    // fast-unpacker-vs-generic contract) lives in tests/kernel_parity.rs,
+    // which enumerates the full bits x d_h x mode x tail-length matrix —
+    // it is deliberately not duplicated here.
 
     #[test]
     fn qk_inner_close_to_unquantized_at_4_bits() {
@@ -286,9 +473,9 @@ mod tests {
         let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
         let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.0);
         let (codes, params) = build_key_rows(&keys, d_h, 4, Mode::Sym);
-        let pf = crate::kernels::zeff_params(&params, 4);
+        let (sc, ze) = crate::kernels::zeff_planes(&params, 4);
         let mut out = vec![0f32; n];
-        qk_inner(&q, &codes, &pf, 4, d_h, &mut out);
+        qk_inner(&q, &codes, &sc, &ze, 4, d_h, &mut out);
         let mut exact = vec![0f32; n];
         crate::kernels::gemv_fp::qk_fp(&q, &keys, d_h, &mut exact);
         // 4-bit sym: step = amax/7; dot error is a random walk over d_h terms.
@@ -305,12 +492,11 @@ mod tests {
             let vals = normal_vec(rng, 32 * d_h, 1.0, 0.1);
             let p = normal_vec(rng, 32, 0.3, 0.0);
             let (codes, params) = build_val_chunk(&vals, d_h, bits, mode);
-            let pf = crate::kernels::zeff_params(&params, bits);
+            let (sc, ze) = crate::kernels::zeff_planes(&params, bits);
             let mut out = vec![0f32; d_h];
-            pv_inner_chunk(&p, &codes, &pf, bits, d_h, &mut out);
+            pv_inner_chunk(&p, &codes, &sc, &ze, bits, d_h, &mut out);
             // reference: dequantize token rows (value = s*raw + zeff) and
             // accumulate with p
-            use crate::quant::packing::unpack;
             let gbytes = packed_len(32, bits);
             let row_bytes = (d_h / 32) * gbytes;
             let mut want = vec![0f32; d_h];
@@ -318,8 +504,7 @@ mod tests {
                 let mut raw = vec![0u8; d_h];
                 unpack(&codes[t * row_bytes..], bits, d_h, &mut raw);
                 for c in 0..d_h {
-                    let (s, z) = pf[c];
-                    want[c] += p[t] * (s * raw[c] as f32 + z);
+                    want[c] += p[t] * (sc[c] * raw[c] as f32 + ze[c]);
                 }
             }
             for c in 0..d_h {
@@ -339,9 +524,9 @@ mod tests {
         let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
         let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.0);
         let (codes, params) = build_key_rows(&keys, d_h, 4, Mode::Asym);
-        let pf = crate::kernels::zeff_params(&params, 4);
+        let (sc, ze) = crate::kernels::zeff_planes(&params, 4);
         let mut out = vec![0f32; n];
-        qk_inner(&q, &codes, &pf, 4, d_h, &mut out);
+        qk_inner(&q, &codes, &sc, &ze, 4, d_h, &mut out);
         let want = qk_reference(&q, &codes, &params, 4, d_h, n);
         for (a, b) in out.iter().zip(&want) {
             assert!((a - b).abs() < 1e-2 * b.abs().max(1.0), "{a} vs {b}");
@@ -349,16 +534,18 @@ mod tests {
     }
 
     #[test]
-    fn pv_inner_supports_heads_beyond_the_stack_buffer() {
-        // d_h = 544 > 512: exercises the heap accumulator fallback.
+    fn pv_inner_supports_large_heads() {
+        // d_h = 544: beyond the old 512-float stack accumulator; the blocked
+        // kernel needs no d_h-sized scratch at all, but the geometry stays
+        // covered.
         let mut rng = crate::util::rng::Rng::new(43);
         let d_h = 544;
         let vals = normal_vec(&mut rng, 32 * d_h, 1.0, 0.0);
         let p = normal_vec(&mut rng, 32, 0.2, 0.0);
         let (codes, params) = build_val_chunk(&vals, d_h, 3, Mode::Sym);
-        let pf = crate::kernels::zeff_params(&params, 3);
+        let (sc, ze) = crate::kernels::zeff_planes(&params, 3);
         let mut out = vec![0f32; d_h];
-        pv_inner_chunk(&p, &codes, &pf, 3, d_h, &mut out);
+        pv_inner_chunk(&p, &codes, &sc, &ze, 3, d_h, &mut out);
         let mut exact = vec![0f32; d_h];
         crate::kernels::gemv_fp::pv_fp(&p, &vals, d_h, &mut exact);
         assert!(
@@ -373,19 +560,32 @@ mod tests {
     fn qk_inner_rejects_short_codes() {
         let q = vec![0f32; 64];
         let codes = vec![0u8; 10]; // far less than 2 rows of 2 groups
-        let params = vec![(1.0f32, 0.0f32); 4];
+        let sc = vec![1.0f32; 4];
+        let ze = vec![0.0f32; 4];
         let mut out = vec![0f32; 2];
-        qk_inner(&q, &codes, &params, 3, 64, &mut out);
+        qk_inner(&q, &codes, &sc, &ze, 3, 64, &mut out);
     }
 
     #[test]
-    #[should_panic(expected = "params slice too short")]
-    fn qk_inner_rejects_short_params() {
+    #[should_panic(expected = "scales slice too short")]
+    fn qk_inner_rejects_short_scales() {
         let q = vec![0f32; 64];
         let codes = vec![0u8; 2 * 2 * 12];
-        let params = vec![(1.0f32, 0.0f32); 1];
+        let sc = vec![1.0f32; 1];
+        let ze = vec![0.0f32; 4];
         let mut out = vec![0f32; 2];
-        qk_inner(&q, &codes, &params, 3, 64, &mut out);
+        qk_inner(&q, &codes, &sc, &ze, 3, 64, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "zeffs slice too short")]
+    fn qk_inner_rejects_short_zeffs() {
+        let q = vec![0f32; 64];
+        let codes = vec![0u8; 2 * 2 * 12];
+        let sc = vec![1.0f32; 4];
+        let ze = vec![0.0f32; 1];
+        let mut out = vec![0f32; 2];
+        qk_inner(&q, &codes, &sc, &ze, 3, 64, &mut out);
     }
 
     #[test]
@@ -393,9 +593,10 @@ mod tests {
     fn pv_inner_rejects_short_codes() {
         let p = vec![0f32; 32];
         let codes = vec![0u8; 16];
-        let params = vec![(1.0f32, 0.0f32); 64];
+        let sc = vec![1.0f32; 64];
+        let ze = vec![0.0f32; 64];
         let mut out = vec![0f32; 64];
-        pv_inner_chunk(&p, &codes, &params, 3, 64, &mut out);
+        pv_inner_chunk(&p, &codes, &sc, &ze, 3, 64, &mut out);
     }
 
     #[test]
@@ -405,11 +606,11 @@ mod tests {
         let mut vals = vec![0f32; 32 * d_h];
         vals[5 * d_h + 7] = 3.0; // token 5, channel 7
         let (codes, params) = build_val_chunk(&vals, d_h, 3, Mode::Sym);
-        let pf = crate::kernels::zeff_params(&params, 3);
+        let (sc, ze) = crate::kernels::zeff_planes(&params, 3);
         let mut p = vec![0f32; 32];
         p[5] = 1.0;
         let mut out = vec![0f32; d_h];
-        pv_inner_chunk(&p, &codes, &pf, 3, d_h, &mut out);
+        pv_inner_chunk(&p, &codes, &sc, &ze, 3, d_h, &mut out);
         assert!((out[7] - 3.0).abs() < 0.01, "out[7]={}", out[7]);
         assert!(out.iter().enumerate().all(|(c, &v)| c == 7 || v.abs() < 1e-4));
     }

@@ -10,20 +10,23 @@
 //! with no reuse across the warp (§4.4, Fig. 1a); on CPU it shows up as the
 //! extra `qs`/`zs` buffer traffic and per-chunk setup measured in Table 4.
 
-use crate::quant::packing::{packed_len, unpack32};
+use crate::quant::packing::{packed_len, unpack32_f32};
 
 /// Key-cache scores, KIVI layout. One chunk = 32 consecutive tokens:
 ///
 /// * `chunk_codes`: 32 token rows × `d_h` codes, packed row-major;
-/// * `params`: `d_h` group params (channel `c` shared by the chunk's tokens);
+/// * `scales` / `zeffs`: planar per-channel parameter planes, `d_h` f32 each
+///   (channel `c` shared by the chunk's tokens);
 /// * `out`: scores for the chunk's `n_rows` tokens (≤ 32; tail chunks are
 ///   shorter only transiently during bulk prefill quantization).
 ///
 /// `scratch` must hold `d_h` f32; it carries the hoisted `q_c·s_c` products.
+#[allow(clippy::too_many_arguments)] // kernel ABI: planar planes are separate planes by design
 pub fn qk_outer_chunk(
     q: &[f32],
     chunk_codes: &[u8],
-    params: &[(f32, f32)],
+    scales: &[f32],
+    zeffs: &[f32],
     bits: u8,
     d_h: usize,
     scratch: &mut [f32],
@@ -32,33 +35,34 @@ pub fn qk_outer_chunk(
     let n_rows = out.len();
     debug_assert!(n_rows <= 32);
     debug_assert_eq!(q.len(), d_h);
-    debug_assert_eq!(params.len(), d_h);
+    debug_assert_eq!(scales.len(), d_h);
+    debug_assert_eq!(zeffs.len(), d_h);
     debug_assert!(scratch.len() >= d_h);
     let gbytes = packed_len(32, bits);
     let row_bytes = (d_h / 32) * gbytes;
     debug_assert!(chunk_codes.len() >= n_rows * row_bytes);
 
-    // Hoist per-channel scale/zero into query space: one pass over d_h.
+    // Hoist per-channel scale/zero into query space: one pass over d_h,
+    // straight multiplies over contiguous planes (no pair deinterleave).
     let mut zacc = 0.0f32;
     for c in 0..d_h {
-        let (s, z) = params[c];
-        scratch[c] = q[c] * s;
-        zacc += q[c] * z;
+        scratch[c] = q[c] * scales[c];
+        zacc += q[c] * zeffs[c];
     }
 
-    let mut buf = [0u8; 32];
+    let mut buf = [0f32; 32];
     for (j, o) in out.iter_mut().enumerate() {
         let row = &chunk_codes[j * row_bytes..(j + 1) * row_bytes];
         // 16-lane split accumulation (see gemv_inner): vectorizable FMA.
         let mut acc = [0f32; 16];
         for g in 0..d_h / 32 {
-            unpack32(&row[g * gbytes..], bits, &mut buf);
+            unpack32_f32(&row[g * gbytes..], bits, &mut buf);
             let qs = &scratch[g * 32..(g + 1) * 32];
             for half in 0..2 {
                 let (qh, bh) =
                     (&qs[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
                 for i in 0..16 {
-                    acc[i] += qh[i] * bh[i] as f32;
+                    acc[i] += qh[i] * bh[i];
                 }
             }
         }
@@ -71,29 +75,31 @@ pub fn qk_outer_chunk(
 /// token at a time):
 ///
 /// * `row_codes`: `d_h` packed codes for this token;
-/// * `params`: `d_h/32` group params for this token's channel groups;
+/// * `scales` / `zeffs`: planar planes, `d_h/32` f32 each, for this token's
+///   channel groups;
 /// * `w`: this token's softmax weight.
 ///
 /// Accumulates `out[c] += w * dequant(V[t][c])`.
 pub fn pv_outer_row(
     w: f32,
     row_codes: &[u8],
-    params: &[(f32, f32)],
+    scales: &[f32],
+    zeffs: &[f32],
     bits: u8,
     d_h: usize,
     out: &mut [f32],
 ) {
     debug_assert_eq!(out.len(), d_h);
-    debug_assert_eq!(params.len(), d_h / 32);
+    debug_assert_eq!(scales.len(), d_h / 32);
+    debug_assert_eq!(zeffs.len(), d_h / 32);
     let gbytes = packed_len(32, bits);
-    let mut buf = [0u8; 32];
+    let mut buf = [0f32; 32];
     for g in 0..d_h / 32 {
-        unpack32(&row_codes[g * gbytes..], bits, &mut buf);
-        let (s, z) = params[g];
-        let (a, b) = (w * s, w * z);
+        unpack32_f32(&row_codes[g * gbytes..], bits, &mut buf);
+        let (a, b) = (w * scales[g], w * zeffs[g]);
         let og = &mut out[g * 32..(g + 1) * 32];
         for i in 0..32 {
-            og[i] += a * buf[i] as f32 + b;
+            og[i] += a * buf[i] + b;
         }
     }
 }
@@ -160,10 +166,10 @@ mod tests {
             let q = normal_vec(rng, d_h, 1.0, 0.0);
             let keys = normal_vec(rng, 32 * d_h, 1.0, 0.1);
             let (codes, params) = build_key_chunk(&keys, d_h, bits, mode);
-            let pf = crate::kernels::zeff_params(&params, bits);
+            let (sc, ze) = crate::kernels::zeff_planes(&params, bits);
             let mut scratch = vec![0f32; d_h];
             let mut out = vec![0f32; 32];
-            qk_outer_chunk(&q, &codes, &pf, bits, d_h, &mut scratch, &mut out);
+            qk_outer_chunk(&q, &codes, &sc, &ze, bits, d_h, &mut scratch, &mut out);
             // reference: per token, dequantize channel-wise and dot
             let gbytes = packed_len(32, bits);
             for j in 0..32 {
@@ -220,9 +226,9 @@ mod tests {
             let row = normal_vec(rng, d_h, 1.0, 0.1);
             let w = rng.next_f32();
             let (codes, params) = build_val_row(&row, bits, Mode::Asym);
-            let pf = crate::kernels::zeff_params(&params, bits);
+            let (sc, ze) = crate::kernels::zeff_planes(&params, bits);
             let mut out = vec![0f32; d_h];
-            pv_outer_row(w, &codes, &pf, bits, d_h, &mut out);
+            pv_outer_row(w, &codes, &sc, &ze, bits, d_h, &mut out);
             let gbytes = packed_len(32, bits);
             for g in 0..d_h / 32 {
                 let mut raw = vec![0u8; 32];

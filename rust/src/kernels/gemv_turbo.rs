@@ -137,7 +137,14 @@ mod tests {
         let tokens: Vec<_> = vals.iter().map(|v| quantize_token(&rot, v, 3)).collect();
         let p: Vec<f32> = {
             let raw = normal_vec(&mut rng, n, 1.0, 0.0);
-            let m = raw.iter().fold(f32::MIN, |a, &b| a.max(b));
+            // NaN-safe max (total_cmp from NEG_INFINITY, non-finite guard),
+            // matching the sampling fixes: a f32::MIN seed silently corrupts
+            // the softmax if any input is -inf/NaN.
+            let m = raw
+                .iter()
+                .filter(|v| !v.is_nan())
+                .fold(f32::NEG_INFINITY, |a, &b| if b.total_cmp(&a).is_gt() { b } else { a });
+            assert!(m.is_finite(), "softmax max must be finite");
             let e: Vec<f32> = raw.iter().map(|&v| (v - m).exp()).collect();
             let s: f32 = e.iter().sum();
             e.iter().map(|v| v / s).collect()

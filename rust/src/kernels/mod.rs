@@ -40,10 +40,21 @@ pub fn zeff(p: crate::quant::GroupParams, bits: u8) -> (f32, f32) {
     (s, z)
 }
 
-/// Precompute `(scale, zeff)` f32 pairs for a params slice. Segments cache
-/// this shadow at quantize time so the GEMV hot loops do no f16 conversion
-/// or mode branching (a GPU kernel widens __half scales in-register for
-/// free; on CPU the conversion is real work, so it is hoisted here).
-pub fn zeff_params(params: &[crate::quant::GroupParams], bits: u8) -> Vec<(f32, f32)> {
-    params.iter().map(|&p| zeff(p, bits)).collect()
+/// Precompute *planar* `scales[]` / `zeffs[]` f32 planes for a params slice.
+/// Segments cache these shadows at quantize time so the GEMV hot loops do no
+/// f16 conversion or mode branching (a GPU kernel widens __half scales
+/// in-register for free; on CPU the conversion is real work, so it is
+/// hoisted here). The planes are SoA rather than AoS `(scale, zeff)` pairs:
+/// a contiguous f32 plane loads as whole vector registers in the blocked
+/// kernels, where interleaved pairs would need a stride-2 gather that
+/// defeats autovectorization (see kernels/DESIGN.md).
+pub fn zeff_planes(params: &[crate::quant::GroupParams], bits: u8) -> (Vec<f32>, Vec<f32>) {
+    let mut scales = Vec::with_capacity(params.len());
+    let mut zeffs = Vec::with_capacity(params.len());
+    for &p in params {
+        let (s, z) = zeff(p, bits);
+        scales.push(s);
+        zeffs.push(z);
+    }
+    (scales, zeffs)
 }

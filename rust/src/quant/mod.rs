@@ -132,7 +132,7 @@ impl QuantMethod {
 /// Full quantization configuration for one run. Produced by
 /// [`QuantMethod::config`] for the paper's setups; the ablation harnesses
 /// (Table 7, Fig. 5) construct modified copies directly.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MethodConfig {
     pub method: QuantMethod,
     pub group_size: usize,

@@ -9,7 +9,7 @@
 //! (the projection GEMM it would otherwise be folded into is O(d·d_h)).
 
 /// Per-channel normalization vector for one KV head.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ChannelNorm {
     pub scale: Vec<f32>,     // norm_k, applied to q
     pub inv_scale: Vec<f32>, // 1/norm_k, applied to k

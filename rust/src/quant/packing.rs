@@ -102,6 +102,84 @@ pub fn unpack32(bytes: &[u8], bits: u8, out: &mut [u8; 32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// f32-producing fast paths for the fused GEMV kernels.
+//
+// The blocked kernels multiply codes straight into f32 accumulators, so the
+// u8 bounce buffer of `unpack32` is pure overhead there: every group would
+// pay a store-to-[u8;32] + reload + widen before the first FMA. These
+// variants extract with the same two-u64-load scheme and convert in the same
+// exact-trip-count loop, producing a `[f32; 32]` the dot-product loops
+// consume directly. The u64→f32 path is exact (codes < 16), so kernels built
+// on these are bit-identical to ones built on the u8 unpackers.
+// ---------------------------------------------------------------------------
+
+/// Shift tables for the 3-bit path: code `i` lives at bit `3*i` of the
+/// 12-byte group. Codes 0..=10 fit in the low u64 (bits 0..33); codes
+/// 11..=31 are read from the overlapping high u64 loaded at byte 4 (their
+/// shifts are `3*i - 32`). Const tables keep both loops exact-trip-count
+/// with table-driven shifts instead of per-iteration shift arithmetic.
+const B3_SHIFT_LO: [u32; 11] = [0, 3, 6, 9, 12, 15, 18, 21, 24, 27, 30];
+const B3_SHIFT_HI: [u32; 21] = [
+    1, 4, 7, 10, 13, 16, 19, 22, 25, 28, 31, 34, 37, 40, 43, 46, 49, 52, 55, 58, 61,
+];
+
+/// Fast path: unpack one 32-code group of 2-bit codes (8 bytes) to f32.
+#[inline(always)]
+pub fn unpack32_b2_f32(bytes: &[u8], out: &mut [f32; 32]) {
+    debug_assert!(bytes.len() >= 8);
+    let w = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    for i in 0..32 {
+        out[i] = ((w >> (2 * i)) & 0x3) as f32;
+    }
+}
+
+/// Fast path: unpack one 32-code group of 3-bit codes (12 bytes) to f32.
+#[inline(always)]
+pub fn unpack32_b3_f32(bytes: &[u8], out: &mut [f32; 32]) {
+    debug_assert!(bytes.len() >= 12);
+    let lo = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let hi = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+    for i in 0..11 {
+        out[i] = ((lo >> B3_SHIFT_LO[i]) & 0x7) as f32;
+    }
+    for i in 0..21 {
+        out[11 + i] = ((hi >> B3_SHIFT_HI[i]) & 0x7) as f32;
+    }
+}
+
+/// Fast path: unpack one 32-code group of 4-bit codes (16 bytes) to f32.
+#[inline(always)]
+pub fn unpack32_b4_f32(bytes: &[u8], out: &mut [f32; 32]) {
+    debug_assert!(bytes.len() >= 16);
+    let lo = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let hi = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    for i in 0..16 {
+        out[i] = ((lo >> (4 * i)) & 0xf) as f32;
+    }
+    for i in 0..16 {
+        out[16 + i] = ((hi >> (4 * i)) & 0xf) as f32;
+    }
+}
+
+/// Dispatch the 32-wide f32 fast unpack by bit-width. The generic (bit-loop)
+/// path is kept as the reference for other widths.
+#[inline(always)]
+pub fn unpack32_f32(bytes: &[u8], bits: u8, out: &mut [f32; 32]) {
+    match bits {
+        2 => unpack32_b2_f32(bytes, out),
+        3 => unpack32_b3_f32(bytes, out),
+        4 => unpack32_b4_f32(bytes, out),
+        _ => {
+            let mut raw = [0u8; 32];
+            unpack(bytes, bits, 32, &mut raw);
+            for i in 0..32 {
+                out[i] = raw[i] as f32;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +214,25 @@ mod tests {
                 let mut fast = [0u8; 32];
                 unpack32(&packed, bits, &mut fast);
                 assert_eq!(&codes[..], &fast[..], "bits={bits}");
+            }
+        }
+    }
+
+    // NOTE: exhaustive f32-vs-generic unpacker parity (all widths, random
+    // codes) lives in tests/kernel_parity.rs; only the shift-table edge
+    // cases are pinned here.
+    #[test]
+    fn f32_paths_cover_extreme_codes() {
+        // All-zeros and all-max groups hit every shift-table entry.
+        for bits in [2u8, 3, 4] {
+            let max = (1u16 << bits) as u8 - 1;
+            for fill in [0u8, max] {
+                let codes = vec![fill; 32];
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                let mut fast = [0f32; 32];
+                unpack32_f32(&packed, bits, &mut fast);
+                assert!(fast.iter().all(|&f| f == fill as f32), "bits={bits} fill={fill}");
             }
         }
     }

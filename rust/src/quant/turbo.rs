@@ -56,7 +56,7 @@ pub fn fwht(x: &mut [f32]) {
 }
 
 /// The fixed random rotation R = H·D for one head dimension.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Rotation {
     /// Random ±1 signs (diagonal D), derived deterministically from a seed so
     /// Rust and the Python reference use the same rotation.
@@ -84,7 +84,7 @@ impl Rotation {
 
 /// One TurboQuant-encoded token vector: packed codebook indices plus an f32
 /// per-token norm (the "channel norm" budget line in Table 3).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TurboToken {
     pub codes: Vec<u8>, // packed `bits`-bit codebook indices, d_h of them
     pub norm: f32,      // per-token scale: rotated coords / norm ~ N(0,1)

@@ -1,0 +1,164 @@
+//! Parity matrix for the blocked SIMD-friendly kernels and the specialized
+//! unpackers (ISSUE 2 acceptance): the blocked `qk_inner` / `pv_inner_chunk`
+//! must be **bit-identical** to the retained scalar references across
+//! bits ∈ {2,3,4}, d_h ∈ {32, 64, 128, 2176 (heap-qsum path)}, all group
+//! modes (sym/asym/hybrid), and non-multiple-of-4 row counts; the f32 fast
+//! unpackers must agree exactly with the generic bit-loop unpacker.
+
+use innerq::kernels::gemv_inner::{pv_inner_chunk, pv_inner_chunk_ref, qk_inner, qk_inner_ref};
+use innerq::kernels::zeff_planes;
+use innerq::quant::group::{quantize, Mode};
+use innerq::quant::packing::{pack, packed_len, unpack, unpack32, unpack32_f32};
+use innerq::quant::GroupParams;
+use innerq::util::ptest::normal_vec;
+use innerq::util::rng::Rng;
+
+/// Quantize an n x d_h matrix in the InnerQ key layout (per-token groups).
+fn build_key_rows(vals: &[f32], d_h: usize, bits: u8, mode: Mode) -> (Vec<u8>, Vec<GroupParams>) {
+    let mut codes = Vec::new();
+    let mut params = Vec::new();
+    for row in vals.chunks_exact(d_h) {
+        for g in row.chunks_exact(32) {
+            let mut raw = [0u8; 32];
+            params.push(quantize(mode, g, bits, &mut raw));
+            pack(&raw, bits, &mut codes);
+        }
+    }
+    (codes, params)
+}
+
+/// Quantize 32 tokens x d_h (token-major) into one InnerQ value chunk
+/// (per-channel groups along the token axis, codes stored token-major).
+fn build_val_chunk(vals: &[f32], d_h: usize, bits: u8, mode: Mode) -> (Vec<u8>, Vec<GroupParams>) {
+    assert_eq!(vals.len(), 32 * d_h);
+    let mut params = Vec::new();
+    let mut col = [0f32; 32];
+    let mut ccodes = [0u8; 32];
+    let mut raw = vec![0u8; 32 * d_h];
+    for c in 0..d_h {
+        for (t, v) in col.iter_mut().enumerate() {
+            *v = vals[t * d_h + c];
+        }
+        params.push(quantize(mode, &col, bits, &mut ccodes));
+        for (t, &cc) in ccodes.iter().enumerate() {
+            raw[t * d_h + c] = cc;
+        }
+    }
+    let mut codes = Vec::new();
+    for t in 0..32 {
+        pack(&raw[t * d_h..(t + 1) * d_h], bits, &mut codes);
+    }
+    (codes, params)
+}
+
+const MODES: [Mode; 3] = [Mode::Sym, Mode::Asym, Mode::Hybrid];
+
+#[test]
+fn qk_blocked_bit_identical_across_full_matrix() {
+    let mut rng = Rng::new(0xB10C);
+    // Row counts deliberately include every tail length mod 4 and the
+    // single-row case; d_h = 2176 (68 groups) exercises the heap qsum path.
+    let row_counts = [1usize, 2, 3, 4, 5, 6, 7, 8, 11, 33];
+    for d_h in [32usize, 64, 128, 2176] {
+        for bits in [2u8, 3, 4] {
+            for mode in MODES {
+                // Keep the giant geometry cheap: fewer rows there.
+                let ns: &[usize] = if d_h >= 2048 { &[1, 3, 5] } else { &row_counts };
+                for &n in ns {
+                    let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                    let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.1);
+                    let (codes, params) = build_key_rows(&keys, d_h, bits, mode);
+                    let (sc, ze) = zeff_planes(&params, bits);
+                    let mut fast = vec![0f32; n];
+                    let mut refr = vec![0f32; n];
+                    qk_inner(&q, &codes, &sc, &ze, bits, d_h, &mut fast);
+                    qk_inner_ref(&q, &codes, &sc, &ze, bits, d_h, &mut refr);
+                    // Bit-identical, not approximately equal: compare bits so
+                    // -0.0 vs 0.0 or NaN drift would also be caught.
+                    for (j, (a, b)) in fast.iter().zip(&refr).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "d_h={d_h} bits={bits} {mode:?} n={n} row {j}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pv_blocked_bit_identical_across_full_matrix() {
+    let mut rng = Rng::new(0xB10D);
+    for d_h in [32usize, 64, 128, 2176] {
+        for bits in [2u8, 3, 4] {
+            for mode in MODES {
+                let vals = normal_vec(&mut rng, 32 * d_h, 1.0, 0.1);
+                let p = normal_vec(&mut rng, 32, 0.3, 0.0);
+                let (codes, params) = build_val_chunk(&vals, d_h, bits, mode);
+                let (sc, ze) = zeff_planes(&params, bits);
+                // Accumulate on top of a non-zero context, like attend does.
+                let init = normal_vec(&mut rng, d_h, 0.5, 0.0);
+                let mut fast = init.clone();
+                let mut refr = init;
+                pv_inner_chunk(&p, &codes, &sc, &ze, bits, d_h, &mut fast);
+                pv_inner_chunk_ref(&p, &codes, &sc, &ze, bits, d_h, &mut refr);
+                for (c, (a, b)) in fast.iter().zip(&refr).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "d_h={d_h} bits={bits} {mode:?} channel {c}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn specialized_unpackers_match_generic_reference() {
+    let mut rng = Rng::new(0xB10E);
+    for bits in 1..=8u8 {
+        for _ in 0..500 {
+            let codes: Vec<u8> =
+                (0..32).map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u8).collect();
+            let mut packed = Vec::new();
+            pack(&codes, bits, &mut packed);
+            assert_eq!(packed.len(), packed_len(32, bits));
+
+            let mut generic = vec![0u8; 32];
+            unpack(&packed, bits, 32, &mut generic);
+            assert_eq!(&generic[..], &codes[..], "generic round trip bits={bits}");
+
+            let mut fast_u8 = [0u8; 32];
+            unpack32(&packed, bits, &mut fast_u8);
+            assert_eq!(&fast_u8[..], &codes[..], "u8 fast path bits={bits}");
+
+            let mut fast_f32 = [0f32; 32];
+            unpack32_f32(&packed, bits, &mut fast_f32);
+            for i in 0..32 {
+                assert_eq!(fast_f32[i], codes[i] as f32, "f32 fast path bits={bits} i={i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn unpackers_handle_exact_length_group_slices() {
+    // The kernels hand the unpackers slices that end exactly at the group
+    // boundary (the last group of a row); the u64 loads must not need slack.
+    let mut rng = Rng::new(0xB10F);
+    for bits in [2u8, 3, 4] {
+        let codes: Vec<u8> =
+            (0..32).map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u8).collect();
+        let mut packed = Vec::new();
+        pack(&codes, bits, &mut packed);
+        let exact = &packed[..packed_len(32, bits)];
+        let mut out = [0f32; 32];
+        unpack32_f32(exact, bits, &mut out);
+        for i in 0..32 {
+            assert_eq!(out[i], codes[i] as f32, "bits={bits} i={i}");
+        }
+    }
+}
