@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Cross-PR bench trajectory check.
+
+Compares a freshly emitted bench JSON (BENCH_kernels.json from
+`cargo bench --bench kernel_throughput`, or BENCH_overload.json from
+`cargo bench --bench overload_tail`) against a committed baseline snapshot
+and fails when throughput regresses by more than the threshold — so CI
+catches "still bit-exact but 2x slower" changes, not just bit mismatches.
+
+Usage:
+    ci/check_bench_trajectory.py CURRENT.json ci/baselines/BASELINE.json
+        [--threshold 0.25] [--update]
+
+Behavior:
+  * baseline file absent  -> pass (exit 0) with instructions to seed it via
+    --update; the check only becomes enforcing once a baseline is committed.
+  * --update              -> overwrite the baseline with the current run and
+    exit 0 (commit the result to move the trajectory floor).
+  * regression > threshold in any cell shared by both files -> exit 1.
+
+Cells are keyed per bench type:
+  * kernel_throughput: (kernel, bits), metric tokens_per_s  (wall-clock —
+    the generous default threshold absorbs shared-runner noise);
+  * overload_tail:     (method, rate_rps, budget_bytes), metric
+    throughput_rps (virtual-clock — deterministic, so any drift is real).
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def cells(doc):
+    """Map cell key -> (metric_name, value) for a bench document."""
+    bench = doc.get("bench", "?")
+    out = {}
+    for r in doc.get("results", []):
+        if bench == "kernel_throughput":
+            key = (r["kernel"], r["bits"])
+            metric = "tokens_per_s"
+        elif bench == "overload_tail":
+            key = (r["method"], r["rate_rps"], r["budget_bytes"])
+            metric = "throughput_rps"
+        else:
+            continue
+        out[key] = (metric, float(r[metric]))
+    return bench, out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="bench JSON emitted by this run")
+    ap.add_argument("baseline", help="committed baseline snapshot")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional throughput drop (default 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the current run")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.current):
+        print(f"[trajectory] FAIL: current bench output {args.current} missing "
+              "(did the bench run?)")
+        return 1
+
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"[trajectory] baseline updated: {args.baseline} <- {args.current}")
+        print("[trajectory] commit the baseline to move the trajectory floor.")
+        return 0
+
+    cur_bench, cur = cells(load(args.current))
+    if not os.path.exists(args.baseline):
+        print(f"[trajectory] no baseline at {args.baseline} — passing.")
+        print(f"[trajectory] current {cur_bench}: {len(cur)} cells. To make this "
+              "check enforcing, seed the baseline on representative hardware:")
+        print(f"[trajectory]   {sys.argv[0]} {args.current} {args.baseline} --update")
+        return 0
+
+    base_bench, base = cells(load(args.baseline))
+    if base_bench != cur_bench:
+        print(f"[trajectory] FAIL: baseline is {base_bench}, current is {cur_bench}")
+        return 1
+
+    shared = sorted(set(cur) & set(base), key=str)
+    gone = sorted(set(base) - set(cur), key=str)
+    if gone:
+        print(f"[trajectory] WARN: {len(gone)} baseline cells missing from the "
+              f"current run (renamed/removed?): {gone[:5]}")
+    if not shared:
+        print("[trajectory] FAIL: no cells shared with the baseline — "
+              "refresh it with --update if the bench schema changed.")
+        return 1
+
+    failures = []
+    for key in shared:
+        metric, base_v = base[key]
+        _, cur_v = cur[key]
+        if base_v <= 0:
+            continue
+        drop = (base_v - cur_v) / base_v
+        marker = ""
+        if drop > args.threshold:
+            failures.append(key)
+            marker = "  <-- REGRESSION"
+        print(f"[trajectory] {key}: {metric} {base_v:.3e} -> {cur_v:.3e} "
+              f"({-drop * 100.0:+.1f}%){marker}")
+
+    if failures:
+        print(f"[trajectory] FAIL: {len(failures)}/{len(shared)} cells regressed "
+              f"more than {args.threshold * 100:.0f}%: {failures}")
+        print("[trajectory] if this slowdown is intentional (e.g. a correctness "
+              "fix), refresh the baseline with --update and commit it.")
+        return 1
+    print(f"[trajectory] OK: {len(shared)} cells within "
+          f"{args.threshold * 100:.0f}% of the {cur_bench} baseline.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,6 @@ use anyhow::Result;
 use innerq::coordinator::{Engine, Request, Scheduler};
 use innerq::runtime::Manifest;
 use innerq::QuantMethod;
-use std::time::Instant;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load("artifacts")?;
@@ -27,13 +26,7 @@ fn main() -> Result<()> {
     let mut sched = Scheduler::new(engine, 1 << 30);
 
     let prompt = "a=41;b=07;c=93;d=22;e=58;f=64;g=11;h=85;i=30;j=76;a=55;c=12;?b=";
-    sched.submit(Request {
-        id: 1,
-        prompt: prompt.to_string(),
-        max_new_tokens: 12,
-        temperature: None,
-        arrived: Instant::now(),
-    });
+    sched.submit(Request::new(1, prompt, 12));
     let done = sched.run_to_completion()?;
     let c = &done[0];
     println!("\nprompt:     {prompt}");

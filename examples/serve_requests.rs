@@ -47,13 +47,24 @@ fn main() -> Result<()> {
         seed: 11,
     });
 
-    // Concurrent clients, one per request.
+    // Concurrent clients, one per request. Every fourth request is tagged
+    // interactive with a generous deadline, exercising the SLO fields in
+    // the wire protocol end-to-end.
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for r in reqs {
+    for (i, r) in reqs.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || -> Result<(String, String, u64, u64)> {
             let mut c = Client::connect(addr)?;
-            let resp = c.generate(&r.prompt, r.max_new_tokens)?;
+            let resp = if i % 4 == 0 {
+                c.generate_with(
+                    &r.prompt,
+                    r.max_new_tokens,
+                    innerq::coordinator::Priority::Interactive,
+                    Some(60_000.0),
+                )?
+            } else {
+                c.generate(&r.prompt, r.max_new_tokens)?
+            };
             Ok((
                 r.prompt.clone(),
                 resp.get("text").as_str().unwrap_or("").to_string(),

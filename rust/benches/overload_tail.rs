@@ -1,0 +1,159 @@
+//! Tail latency under overload: replay timed Poisson traces through the
+//! scheduler on the virtual clock, sweeping arrival rate x cache budget x
+//! quantization method, and record p50/p99 TTFT and end-to-end latency plus
+//! throughput and shed load (rejected/expired) per cell.
+//!
+//! This is the serving-side counterpart of `kernel_throughput`: instead of
+//! ns/row it answers "how many concurrent users does a smaller KV cache
+//! buy, and what happens to the tail when arrivals outrun capacity?". The
+//! virtual clock makes every cell deterministic, so the emitted
+//! `BENCH_overload.json` is diffable across PRs (see
+//! `ci/check_bench_trajectory.py`), and the run *asserts* the replay
+//! byte-identity contract across worker counts before timing anything.
+//!
+//! ```bash
+//! cargo bench --bench overload_tail           # full sweep
+//! cargo bench --bench overload_tail quick     # CI smoke (reduced grid)
+//! ```
+
+use innerq::coordinator::{Engine, Policy, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::json::Json;
+use innerq::workload::replay::{replay, CostModel, Outcome, ReplayReport};
+use innerq::workload::trace::{generate_timed, Arrival, TimedRequest, TimedTraceConfig};
+use innerq::QuantMethod;
+
+fn scheduler(dir: &std::path::Path, method: QuantMethod, budget: usize, workers: usize) -> Scheduler {
+    let manifest = Manifest::load(dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, method.config()).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, budget);
+    sched.set_policy(Policy::Fifo);
+    sched
+}
+
+fn trace_for(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests,
+        arrival: Arrival::Poisson { rate_rps },
+        seed: 2026,
+        ..TimedTraceConfig::default()
+    })
+}
+
+struct Cell {
+    rate_rps: f64,
+    budget: usize,
+    method: QuantMethod,
+    report: ReplayReport,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_requests: usize = args
+        .iter()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(if quick { 32 } else { 96 });
+    let rates: &[f64] = if quick { &[200.0, 800.0] } else { &[100.0, 300.0, 600.0, 1200.0] };
+    let budgets: &[usize] =
+        if quick { &[64_000, 256_000] } else { &[48_000, 128_000, 512_000] };
+    let methods: &[QuantMethod] = if quick {
+        &[QuantMethod::InnerQBase, QuantMethod::BaselineFp16]
+    } else {
+        &[QuantMethod::InnerQBase, QuantMethod::Kivi, QuantMethod::BaselineFp16]
+    };
+    let cost = CostModel::default();
+    let dir = write_fake_artifacts("overload_tail", '7');
+
+    eprintln!(
+        "[overload_tail] {n_requests} requests/cell, {} rates x {} budgets x {} methods, quick={quick}",
+        rates.len(),
+        budgets.len(),
+        methods.len()
+    );
+
+    // Determinism contract first: the replay report must be byte-identical
+    // across worker counts (any panic or mismatch fails CI).
+    {
+        let trace = trace_for(rates[0], n_requests);
+        let mut s1 = scheduler(&dir, QuantMethod::InnerQBase, budgets[0], 1);
+        let mut s2 = scheduler(&dir, QuantMethod::InnerQBase, budgets[0], 2);
+        let a = replay(&mut s1, &trace, &cost).expect("replay w1").to_json().dump();
+        let b = replay(&mut s2, &trace, &cost).expect("replay w2").to_json().dump();
+        assert_eq!(a, b, "replay byte-identity violated between workers=1 and workers=2");
+        eprintln!("[overload_tail] determinism contract holds (workers 1 vs 2)");
+    }
+
+    println!(
+        "{:<14} {:>8} {:>9} {:>5} {:>5} {:>5} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "method", "rate", "budget", "ok", "rej", "exp", "req/s", "ttft p50", "ttft p99",
+        "e2e p50", "e2e p99"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    for &rate in rates {
+        let trace = trace_for(rate, n_requests);
+        for &budget in budgets {
+            for &method in methods {
+                let mut sched = scheduler(&dir, method, budget, 1);
+                let report = replay(&mut sched, &trace, &cost).expect("replay");
+                let o = report.overall();
+                let (t, e) = (o.ttft.summary(), o.e2e.summary());
+                println!(
+                    "{:<14} {:>8.0} {:>9} {:>5} {:>5} {:>5} {:>8.1} {:>9}µ {:>9}µ {:>9}µ {:>9}µ",
+                    method.name(),
+                    rate,
+                    budget,
+                    report.count(Outcome::Ok),
+                    report.count(Outcome::Rejected),
+                    report.count(Outcome::Expired),
+                    report.throughput_rps(),
+                    t.p50_us,
+                    t.p99_us,
+                    e.p50_us,
+                    e.p99_us,
+                );
+                cells.push(Cell { rate_rps: rate, budget, method, report });
+            }
+        }
+    }
+
+    // Machine-readable trajectory record (summaries only — the per-request
+    // records would dwarf the file at full-sweep sizes).
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let o = c.report.overall();
+            let (t, e) = (o.ttft.summary(), o.e2e.summary());
+            Json::obj(vec![
+                ("method", Json::str(c.method.name())),
+                ("rate_rps", Json::Num(c.rate_rps)),
+                ("budget_bytes", Json::Num(c.budget as f64)),
+                ("n_requests", Json::Num(c.report.records.len() as f64)),
+                ("completed", Json::Num(c.report.count(Outcome::Ok) as f64)),
+                ("rejected", Json::Num(c.report.count(Outcome::Rejected) as f64)),
+                ("expired", Json::Num(c.report.count(Outcome::Expired) as f64)),
+                ("preemptions", Json::Num(c.report.metrics.preemptions as f64)),
+                ("throughput_rps", Json::Num(c.report.throughput_rps())),
+                ("gen_tokens_per_s", Json::Num(c.report.gen_tokens_per_s())),
+                ("ttft_p50_us", Json::Num(t.p50_us as f64)),
+                ("ttft_p99_us", Json::Num(t.p99_us as f64)),
+                ("e2e_p50_us", Json::Num(e.p50_us as f64)),
+                ("e2e_p99_us", Json::Num(e.p99_us as f64)),
+                ("virtual_us", Json::Num(c.report.end_us as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("overload_tail")),
+        ("quick", Json::Bool(quick)),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("policy", Json::str("fifo")),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_overload.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_overload.json");
+    eprintln!("[overload_tail] wrote {path}");
+}

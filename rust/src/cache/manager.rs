@@ -90,13 +90,18 @@ where
 /// Unified key-segment dispatch.
 #[derive(Debug, PartialEq)]
 pub enum KeySegment {
+    /// Unquantized f32 rows (BaselineFp16).
     Fp(FpSegment),
+    /// InnerQ layout: groups along the GEMV reduction axis.
     Inner(InnerKeySegment),
+    /// KIVI layout: groups along the GEMV output axis.
     Outer(OuterKeySegment),
+    /// TurboQuant rotated codebook coding.
     Turbo(TurboKeySegment),
 }
 
 impl KeySegment {
+    /// Tokens stored in this segment.
     pub fn len(&self) -> usize {
         match self {
             KeySegment::Fp(s) => s.len(),
@@ -113,6 +118,7 @@ impl KeySegment {
             _ => 1,
         }
     }
+    /// Packed payload bytes of the segment.
     pub fn bytes(&self) -> usize {
         match self {
             KeySegment::Fp(s) => s.bytes(),
@@ -147,6 +153,7 @@ impl KeySegment {
             }
         }
     }
+    /// Fused dequant-GEMV scores of `q` against every stored key.
     pub fn scores(&self, q: &[f32], d_h: usize, scratch: &mut [f32], out: &mut [f32]) {
         match self {
             KeySegment::Fp(s) => gemv_fp::qk_fp(q, &s.rows, d_h, out),
@@ -160,13 +167,18 @@ impl KeySegment {
 /// Unified value-segment dispatch.
 #[derive(Debug, PartialEq)]
 pub enum ValSegment {
+    /// Unquantized f32 rows (BaselineFp16).
     Fp(FpSegment),
+    /// InnerQ layout: groups along the GEMV reduction axis.
     Inner(InnerValSegment),
+    /// KIVI layout: groups along the GEMV output axis.
     Outer(OuterValSegment),
+    /// TurboQuant rotated codebook coding.
     Turbo(TurboValSegment),
 }
 
 impl ValSegment {
+    /// Tokens stored in this segment.
     pub fn len(&self) -> usize {
         match self {
             ValSegment::Fp(s) => s.len(),
@@ -175,6 +187,7 @@ impl ValSegment {
             ValSegment::Turbo(s) => s.len(),
         }
     }
+    /// How many tokens the quantizer consumes per eviction.
     pub fn evict_batch(&self) -> usize {
         match self {
             // Per-channel (inner) value grouping needs a full group of tokens.
@@ -182,6 +195,7 @@ impl ValSegment {
             _ => 1,
         }
     }
+    /// Packed payload bytes of the segment.
     pub fn bytes(&self) -> usize {
         match self {
             ValSegment::Fp(s) => s.bytes(),
@@ -190,6 +204,7 @@ impl ValSegment {
             ValSegment::Turbo(s) => s.bytes(),
         }
     }
+    /// Quantize-append `n x d_h` token-major rows (n == evict_batch or bulk multiples of it during prefill).
     pub fn append(&mut self, rows: &[f32], d_h: usize) {
         match self {
             ValSegment::Fp(s) => {
@@ -235,14 +250,23 @@ impl ValSegment {
 /// construction across worker counts.
 #[derive(Debug, PartialEq)]
 pub struct HeadCache {
+    /// Quantization method configuration.
     pub cfg: MethodConfig,
+    /// Head dimension.
     pub d_h: usize,
+    /// Full-precision attention-sink keys (first `w_sink` tokens).
     pub sink_k: SinkWindow,
+    /// Full-precision attention-sink values.
     pub sink_v: SinkWindow,
+    /// Full-precision recent keys awaiting eviction.
     pub recent_k: RecentWindow,
+    /// Full-precision recent values awaiting eviction.
     pub recent_v: RecentWindow,
+    /// Quantized middle of the key partition.
     pub qk: KeySegment,
+    /// Quantized middle of the value partition.
     pub qv: ValSegment,
+    /// Per-channel key normalization folded into quantized scores.
     pub norm: ChannelNorm,
     n_tokens: usize,
 }
@@ -274,6 +298,7 @@ fn make_val_segment(cfg: &MethodConfig, d_h: usize, seed: u64) -> ValSegment {
 }
 
 impl HeadCache {
+    /// An empty cache for one KV head under `cfg`.
     pub fn new(cfg: MethodConfig, d_h: usize) -> HeadCache {
         // Distinct rotation seeds for K and V (shared across heads is fine —
         // the rotation is data-oblivious).
@@ -307,6 +332,7 @@ impl HeadCache {
         hc
     }
 
+    /// Tokens stored in this segment.
     pub fn len(&self) -> usize {
         self.n_tokens
     }

@@ -1,37 +1,55 @@
 //! Cache memory pool: byte accounting and admission control across
-//! sequences. The scheduler consults the pool before admitting a prefill and
-//! preempts the youngest sequence under pressure (vLLM-style recompute
-//! preemption, simplified to fit the paper's single-node setting).
+//! sequences. The scheduler consults the pool before admitting a prefill;
+//! under pressure it picks a preemption victim itself (policy-dependent —
+//! see `coordinator::scheduler::Policy`) and releases the victim's
+//! reservation here (vLLM-style recompute preemption, simplified to fit
+//! the paper's single-node setting).
 
 use std::collections::BTreeMap;
 
 /// Outcome of an admission request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
+    /// Reserved: the estimate fits the free budget.
     Admitted,
     /// Not enough budget even if everything else were evicted.
     TooLarge,
-    /// Needs `preempt` sequences evicted first (by id, youngest first).
+    /// Over budget: the scheduler must evict live work (or park) first.
     Pressure,
 }
 
+/// Byte-accounting admission controller over all live sequences' caches.
 #[derive(Debug)]
 pub struct CachePool {
+    /// Total cache budget shared by every live sequence.
     pub budget_bytes: usize,
     used: BTreeMap<u64, usize>, // seq id -> bytes
 }
 
 impl CachePool {
+    /// An empty pool with the given byte budget.
     pub fn new(budget_bytes: usize) -> CachePool {
         CachePool { budget_bytes, used: BTreeMap::new() }
     }
 
+    /// Bytes currently reserved across all sequences.
     pub fn used_bytes(&self) -> usize {
         self.used.values().sum()
     }
 
+    /// Remaining admissible bytes (0 when over budget).
     pub fn free_bytes(&self) -> usize {
         self.budget_bytes.saturating_sub(self.used_bytes())
+    }
+
+    /// Ids holding a reservation, oldest (lowest) first.
+    pub fn ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.used.keys().copied()
+    }
+
+    /// Number of sequences holding a reservation.
+    pub fn n_reserved(&self) -> usize {
+        self.used.len()
     }
 
     /// Try to admit a sequence expected to need `est_bytes`.
@@ -47,7 +65,9 @@ impl CachePool {
         }
     }
 
-    /// Youngest (highest-id) sequence, the preemption victim.
+    /// Youngest (highest-id) reservation — the FIFO policy's preferred
+    /// preemption victim (the scheduler makes the actual choice from its
+    /// live list; see `coordinator::scheduler::Policy`).
     pub fn youngest(&self) -> Option<u64> {
         self.used.keys().next_back().copied()
     }
@@ -59,10 +79,12 @@ impl CachePool {
         }
     }
 
+    /// Drop a sequence's reservation (no-op if absent).
     pub fn release(&mut self, seq: u64) {
         self.used.remove(&seq);
     }
 
+    /// True when live growth has pushed usage past the budget.
     pub fn over_budget(&self) -> bool {
         self.used_bytes() > self.budget_bytes
     }

@@ -15,24 +15,31 @@ use crate::quant::GroupParams;
 /// Plain f32 rows — the BaselineFp16 "segment" (no quantization).
 #[derive(Debug, Default, PartialEq)]
 pub struct FpSegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Token-major f32 rows (oldest first).
     pub rows: Vec<f32>,
 }
 
 impl FpSegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize) -> FpSegment {
         FpSegment { d_h, rows: Vec::new() }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.rows.len() / self.d_h
     }
+    /// True when no tokens are stored.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
+    /// Append one token row.
     pub fn append_token(&mut self, row: &[f32]) {
         debug_assert_eq!(row.len(), self.d_h);
         self.rows.extend_from_slice(row);
     }
+    /// FP16-storage-equivalent bytes held (2 bytes per number).
     pub fn bytes(&self) -> usize {
         // FP16 storage equivalent: 2 bytes per number (DESIGN.md).
         self.rows.len() * 2
@@ -42,21 +49,28 @@ impl FpSegment {
 /// InnerQ key segment: per-token groups along `d_h` (§4.4).
 #[derive(Debug, PartialEq)]
 pub struct InnerKeySegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Quantization bit-width per code.
     pub bits: u8,
+    /// Group quantization mode (symmetric / asymmetric / hybrid).
     pub mode: Mode,
+    /// Packed quantization codes, token-major append order.
     pub codes: Vec<u8>,
+    /// Per-group quantization parameters, in append order.
     pub params: Vec<GroupParams>,
     /// Planar runtime shadows of `params` — separate `scales[]` / `zeffs[]`
     /// f32 planes materialized at quantization time, so the GEMV hot loop
     /// does no f16 widening and loads contiguous vector-width runs instead
     /// of deinterleaving AoS pairs (see kernels::zeff_planes / DESIGN.md).
     pub scales: Vec<f32>,
+    /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
     n_tokens: usize,
 }
 
 impl InnerKeySegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
         assert_eq!(d_h % 32, 0);
         InnerKeySegment {
@@ -70,6 +84,7 @@ impl InnerKeySegment {
             n_tokens: 0,
         }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.n_tokens
     }
@@ -92,6 +107,7 @@ impl InnerKeySegment {
         debug_assert_eq!(out.len(), self.n_tokens);
         gemv_inner::qk_inner(q, &self.codes, &self.scales, &self.zeffs, self.bits, self.d_h, out);
     }
+    /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
@@ -101,8 +117,11 @@ impl InnerKeySegment {
 /// channel-major chunks of 32 tokens (§4.4).
 #[derive(Debug, PartialEq)]
 pub struct InnerValSegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Quantization bit-width per code.
     pub bits: u8,
+    /// Group quantization mode (symmetric / asymmetric / hybrid).
     pub mode: Mode,
     /// Per chunk: `d_h` packed 32-code groups (channel-major).
     pub codes: Vec<u8>,
@@ -110,11 +129,13 @@ pub struct InnerValSegment {
     pub params: Vec<GroupParams>,
     /// Planar runtime shadows of `params` (see [`InnerKeySegment`]).
     pub scales: Vec<f32>,
+    /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
     n_chunks: usize,
 }
 
 impl InnerValSegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
         InnerValSegment {
             d_h,
@@ -127,6 +148,7 @@ impl InnerValSegment {
             n_chunks: 0,
         }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.n_chunks * 32
     }
@@ -173,6 +195,7 @@ impl InnerValSegment {
             );
         }
     }
+    /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
@@ -182,8 +205,11 @@ impl InnerValSegment {
 /// token-major chunks of 32 tokens.
 #[derive(Debug, PartialEq)]
 pub struct OuterKeySegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Quantization bit-width per code.
     pub bits: u8,
+    /// Group quantization mode (symmetric / asymmetric / hybrid).
     pub mode: Mode,
     /// Per chunk: 32 token rows of packed `d_h` codes.
     pub codes: Vec<u8>,
@@ -191,11 +217,13 @@ pub struct OuterKeySegment {
     pub params: Vec<GroupParams>,
     /// Planar runtime shadows of `params` (see [`InnerKeySegment`]).
     pub scales: Vec<f32>,
+    /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
     n_chunks: usize,
 }
 
 impl OuterKeySegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
         assert_eq!(d_h % 32, 0);
         OuterKeySegment {
@@ -209,6 +237,7 @@ impl OuterKeySegment {
             n_chunks: 0,
         }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.n_chunks * 32
     }
@@ -254,6 +283,7 @@ impl OuterKeySegment {
             );
         }
     }
+    /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
@@ -262,18 +292,25 @@ impl OuterKeySegment {
 /// KIVI value segment: per-token groups along channels, one row per token.
 #[derive(Debug, PartialEq)]
 pub struct OuterValSegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Quantization bit-width per code.
     pub bits: u8,
+    /// Group quantization mode (symmetric / asymmetric / hybrid).
     pub mode: Mode,
+    /// Packed quantization codes, token-major append order.
     pub codes: Vec<u8>,
+    /// Per-group quantization parameters, in append order.
     pub params: Vec<GroupParams>,
     /// Planar runtime shadows of `params` (see [`InnerKeySegment`]).
     pub scales: Vec<f32>,
+    /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
     n_tokens: usize,
 }
 
 impl OuterValSegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize, bits: u8, mode: Mode) -> Self {
         assert_eq!(d_h % 32, 0);
         OuterValSegment {
@@ -287,6 +324,7 @@ impl OuterValSegment {
             n_tokens: 0,
         }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.n_tokens
     }
@@ -304,6 +342,7 @@ impl OuterValSegment {
         }
         self.n_tokens += 1;
     }
+    /// `out[c] += sum_t p[t] * dequant(V[t][c])` over stored tokens.
     pub fn accumulate(&self, p: &[f32], out: &mut [f32]) {
         debug_assert_eq!(p.len(), self.n_tokens);
         let groups = self.d_h / 32;
@@ -320,6 +359,7 @@ impl OuterValSegment {
             );
         }
     }
+    /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
@@ -328,19 +368,26 @@ impl OuterValSegment {
 /// TurboQuant key segment: rotated codebook-coded tokens.
 #[derive(Debug, PartialEq)]
 pub struct TurboKeySegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Quantization bit-width per code.
     pub bits: u8,
+    /// Data-oblivious random rotation shared by all tokens.
     pub rotation: Rotation,
+    /// Codebook-coded tokens, in append order.
     pub tokens: Vec<TurboToken>,
 }
 
 impl TurboKeySegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize, bits: u8, seed: u64) -> Self {
         TurboKeySegment { d_h, bits, rotation: Rotation::new(d_h, seed), tokens: Vec::new() }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
+    /// Rotate, codebook-quantize, and append one key token.
     pub fn append_token(&mut self, k: &[f32]) {
         self.tokens.push(quantize_token(&self.rotation, k, self.bits));
     }
@@ -350,6 +397,7 @@ impl TurboKeySegment {
         self.rotation.apply(&mut q_rot);
         gemv_turbo::qk_turbo(&q_rot, &self.tokens, codebook(self.bits), self.bits, self.d_h, out);
     }
+    /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.tokens.iter().map(|t| t.codes.len() + 4).sum()
     }
@@ -359,19 +407,26 @@ impl TurboKeySegment {
 /// un-rotates the context contribution once per decode step.
 #[derive(Debug, PartialEq)]
 pub struct TurboValSegment {
+    /// Head dimension.
     pub d_h: usize,
+    /// Quantization bit-width per code.
     pub bits: u8,
+    /// Data-oblivious random rotation shared by all tokens.
     pub rotation: Rotation,
+    /// Codebook-coded tokens, in append order.
     pub tokens: Vec<TurboToken>,
 }
 
 impl TurboValSegment {
+    /// An empty segment for head dimension `d_h`.
     pub fn new(d_h: usize, bits: u8, seed: u64) -> Self {
         TurboValSegment { d_h, bits, rotation: Rotation::new(d_h, seed), tokens: Vec::new() }
     }
+    /// Tokens stored.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
+    /// Rotate, codebook-quantize, and append one value token.
     pub fn append_token(&mut self, v: &[f32]) {
         self.tokens.push(quantize_token(&self.rotation, v, self.bits));
     }
@@ -386,6 +441,7 @@ impl TurboValSegment {
             *o += v * s;
         }
     }
+    /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.tokens.iter().map(|t| t.codes.len() + 4).sum()
     }

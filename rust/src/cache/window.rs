@@ -8,18 +8,23 @@
 /// Fixed window over the first tokens of the sequence.
 #[derive(Debug, Default, PartialEq)]
 pub struct SinkWindow {
+    /// Head dimension.
     pub d_h: usize,
+    /// Token-major f32 rows (oldest first).
     pub rows: Vec<f32>,
     capacity: usize,
 }
 
 impl SinkWindow {
+    /// An empty window holding at most `capacity` tokens.
     pub fn new(d_h: usize, capacity: usize) -> SinkWindow {
         SinkWindow { d_h, rows: Vec::with_capacity(capacity * d_h), capacity }
     }
+    /// Tokens currently held.
     pub fn len(&self) -> usize {
         self.rows.len() / self.d_h.max(1)
     }
+    /// True when the window has reached capacity.
     pub fn is_full(&self) -> bool {
         self.len() >= self.capacity
     }
@@ -32,6 +37,7 @@ impl SinkWindow {
         self.rows.extend_from_slice(row);
         true
     }
+    /// FP16-storage-equivalent bytes held (2 bytes per number).
     pub fn bytes(&self) -> usize {
         self.rows.len() * 2
     }
@@ -40,6 +46,7 @@ impl SinkWindow {
 /// FIFO window over the most recent tokens, with amortized O(1) front pops.
 #[derive(Debug, PartialEq)]
 pub struct RecentWindow {
+    /// Head dimension.
     pub d_h: usize,
     data: Vec<f32>,
     /// Index (in rows) of the logical front.
@@ -47,15 +54,19 @@ pub struct RecentWindow {
 }
 
 impl RecentWindow {
+    /// An empty window.
     pub fn new(d_h: usize) -> RecentWindow {
         RecentWindow { d_h, data: Vec::new(), start: 0 }
     }
+    /// Tokens currently held.
     pub fn len(&self) -> usize {
         self.data.len() / self.d_h - self.start
     }
+    /// True when no live tokens remain.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Append one token row at the back.
     pub fn push(&mut self, row: &[f32]) {
         debug_assert_eq!(row.len(), self.d_h);
         self.data.extend_from_slice(row);
@@ -77,6 +88,7 @@ impl RecentWindow {
             self.start = 0;
         }
     }
+    /// FP16-storage-equivalent bytes held (2 bytes per number).
     pub fn bytes(&self) -> usize {
         self.len() * self.d_h * 2
     }

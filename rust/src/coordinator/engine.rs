@@ -37,10 +37,15 @@ use std::collections::HashMap;
 /// Attention scratch lives with the pool workers, not the sequence, so
 /// disjoint heads of the same sequence can attend concurrently.
 pub struct Sequence {
+    /// Engine-assigned sequence id.
     pub id: u64,
+    /// Full token history (prompt + generated).
     pub tokens: Vec<i32>,
+    /// Per-layer, per-KV-head quantized caches, indexed `[layer][kv_head]`.
     pub caches: Vec<Vec<HeadCache>>, // [layer][kv_head]
+    /// Tokens that went through prefill (the prompt length).
     pub n_prefill: usize,
+    /// Logits of the most recent step, for sampling the next token.
     pub last_logits: Vec<f32>,
 }
 
@@ -49,9 +54,11 @@ impl Sequence {
     pub fn cache_bytes(&self) -> usize {
         self.caches.iter().flatten().map(|c| c.bytes()).sum()
     }
+    /// Total tokens in the sequence.
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
+    /// True before any token has been appended.
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
     }
@@ -59,7 +66,9 @@ impl Sequence {
 
 /// The model engine for one quantization method.
 pub struct Engine {
+    /// The loaded artifact manifest (model dims, stages, charset).
     pub manifest: Manifest,
+    /// The quantization method configuration for every cache.
     pub cfg: MethodConfig,
     stages: HashMap<String, Stage>,
     pool: ThreadPool,
@@ -93,6 +102,7 @@ impl Engine {
         }
     }
 
+    /// Current attention worker-pool size.
     pub fn workers(&self) -> usize {
         self.pool.workers()
     }

@@ -1,6 +1,7 @@
 //! Layer-3 serving coordinator: the decode engine (PJRT stages + Rust
 //! quantized-cache attention), the dynamic batcher, the prefill/decode
-//! scheduler with cache-pressure preemption, and request plumbing.
+//! scheduler with cache-pressure preemption and SLO-aware policies, and
+//! request plumbing.
 
 pub mod batcher;
 pub mod engine;
@@ -8,5 +9,5 @@ pub mod request;
 pub mod scheduler;
 
 pub use engine::{Engine, Sequence};
-pub use request::{Completion, Phase, Request, StepMetrics};
-pub use scheduler::Scheduler;
+pub use request::{Completion, Phase, Priority, Request, SchedEvent, StepMetrics};
+pub use scheduler::{Policy, Scheduler};

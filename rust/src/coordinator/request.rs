@@ -1,30 +1,123 @@
-//! Request lifecycle for the serving coordinator.
+//! Request lifecycle for the serving coordinator: the client-visible
+//! [`Request`] / [`Completion`] pair, SLO metadata ([`Priority`], deadlines),
+//! scheduler counters ([`StepMetrics`]), and the replayable event stream
+//! ([`SchedEvent`]) the trace harness uses to reconstruct per-request
+//! timelines on a virtual clock.
 
 use std::time::Instant;
+
+/// Scheduling priority class of a request, ordered most-important-first
+/// (`Interactive < Standard < Batch` under `Ord`).
+///
+/// Under [`crate::coordinator::scheduler::Policy::Slo`] a pending request may
+/// preempt live work of a *strictly lower* class; classes never preempt
+/// within themselves, so priority inversion cannot occur. Under the default
+/// FIFO policy the class is carried but ignored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic (chat turns, autocompletions).
+    Interactive,
+    /// The default class for unlabeled traffic.
+    Standard,
+    /// Throughput-oriented background work (evals, batch summarization).
+    Batch,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Standard
+    }
+}
+
+impl Priority {
+    /// All classes, most important first.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Stable wire/CLI name of the class.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a class from its [`Priority::name`] or numeric level
+    /// (`0`/`1`/`2`, most important first), as accepted in request JSON.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" | "0" => Some(Priority::Interactive),
+            "standard" | "1" => Some(Priority::Standard),
+            "batch" | "2" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    /// Numeric level (0 = most important); stable across releases.
+    pub fn level(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+}
 
 /// A generation request as submitted by a client.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Unique, monotonically assigned id; lower ids are older.
     pub id: u64,
+    /// The prompt text (must encode under the model charset).
     pub prompt: String,
+    /// Generation budget; decoding stops here or at the stop token.
     pub max_new_tokens: usize,
     /// Greedy when None; otherwise softmax temperature.
     pub temperature: Option<f32>,
+    /// Wall-clock arrival, kept for the live server's latency accounting.
+    /// The trace harness measures on the scheduler's virtual clock instead.
     pub arrived: Instant,
+    /// Scheduling class; [`Priority::Standard`] for unlabeled traffic.
+    pub priority: Priority,
+    /// Optional end-to-end deadline in virtual microseconds, *relative to
+    /// submission*. The scheduler fails the request (releasing its cache
+    /// reservation) once its absolute deadline passes; `None` never expires.
+    pub deadline_us: Option<u64>,
+}
+
+impl Request {
+    /// A greedy, standard-priority, deadline-free request — the common case;
+    /// override fields on the returned value for anything else.
+    pub fn new(id: u64, prompt: impl Into<String>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt: prompt.into(),
+            max_new_tokens,
+            temperature: None,
+            arrived: Instant::now(),
+            priority: Priority::Standard,
+            deadline_us: None,
+        }
+    }
 }
 
 /// Terminal states.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// Id of the originating [`Request`].
     pub id: u64,
+    /// The generated text (empty on failure; excludes the stop token).
     pub text: String,
+    /// Prompt length in characters/tokens.
     pub n_prompt: usize,
+    /// Number of generated tokens (stop token excluded).
     pub n_generated: usize,
     /// Time-to-first-token and total latency, in microseconds.
     pub ttft_us: u64,
+    /// End-to-end wall-clock latency in microseconds.
     pub total_us: u64,
     /// Why the request failed, if it did (rejected, unencodable prompt,
-    /// prefill failure) — `None` for a normal completion.
+    /// prefill failure, expired deadline) — `None` for a normal completion.
     pub error: Option<String>,
 }
 
@@ -46,18 +139,93 @@ impl Completion {
 /// Scheduler-visible request state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Waiting in the admission queue.
     Queued,
+    /// Running its prompt through a prefill executable.
     Prefilling,
+    /// In the continuous decode batch.
     Decoding,
+    /// Completed normally.
     Finished,
+    /// Terminated with an error (see [`Completion::error`]).
     Failed,
 }
 
+/// One scheduler state transition, recorded when event recording is enabled
+/// (see [`crate::coordinator::Scheduler::record_events`]). The trace-replay
+/// driver drains these each tick and stamps them with virtual time; the
+/// per-request timeline (admission, first token, preemptions, terminal
+/// state) is reconstructed entirely from this stream, which is deterministic
+/// for a fixed trace and therefore byte-comparable across runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// Entered the admission queue.
+    Submitted {
+        /// Request id.
+        id: u64,
+    },
+    /// Prefill completed and the first token was sampled; the request joins
+    /// the decode batch. TTFT is the tick in which this event fires.
+    Admitted {
+        /// Request id.
+        id: u64,
+        /// Prompt tokens prefilled (after any recompute preemption, the
+        /// request prefills again and a second `Admitted` fires).
+        prefill_tokens: usize,
+    },
+    /// Evicted from the decode batch under cache pressure and returned to
+    /// the queue (recompute-style: generated tokens are discarded).
+    Preempted {
+        /// Request id.
+        id: u64,
+    },
+    /// Failed terminally before completing (rejected, unencodable,
+    /// over-budget, or prefill failure).
+    Rejected {
+        /// Request id.
+        id: u64,
+    },
+    /// Deadline passed; terminal failure with the reservation released.
+    Expired {
+        /// Request id.
+        id: u64,
+        /// True if it expired while still queued (never held cache).
+        queued: bool,
+    },
+    /// Completed normally.
+    Finished {
+        /// Request id.
+        id: u64,
+        /// Tokens generated (stop token excluded).
+        n_generated: usize,
+    },
+}
+
+impl SchedEvent {
+    /// The request id this event concerns.
+    pub fn id(&self) -> u64 {
+        match *self {
+            SchedEvent::Submitted { id }
+            | SchedEvent::Admitted { id, .. }
+            | SchedEvent::Preempted { id }
+            | SchedEvent::Rejected { id }
+            | SchedEvent::Expired { id, .. }
+            | SchedEvent::Finished { id, .. } => id,
+        }
+    }
+}
+
+/// Monotonic scheduler counters, updated every tick.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepMetrics {
+    /// Prompt tokens run through prefill executables (recomputation after a
+    /// preemption counts again).
     pub prefill_tokens: u64,
+    /// Decode steps executed (one per tick with live work).
     pub decode_steps: u64,
+    /// Sequences decoded, summed over steps.
     pub batched_seqs: u64,
+    /// Live sequences evicted back to the queue under cache pressure.
     pub preemptions: u64,
     /// Attention jobs fanned out to the worker pool (one per sequence x
     /// KV head x layer per decode step).
@@ -67,4 +235,6 @@ pub struct StepMetrics {
     /// Requests terminated without generation (unencodable, over budget,
     /// unsatisfiable under pressure, prefill failure).
     pub rejected: u64,
+    /// Requests failed terminally because their deadline passed.
+    pub expired: u64,
 }

@@ -1,37 +1,130 @@
-//! Prefill/decode scheduler: admission via the cache pool, FIFO prefill, and
-//! continuous decode batching. Synchronous loop on the driver thread; the
-//! per-step attention fan-out inside `Engine::decode_step` runs on the
-//! engine's worker pool (`--workers N`).
+//! Prefill/decode scheduler: admission via the cache pool, pluggable
+//! admission/preemption policy (FIFO by default, priority-and-deadline-aware
+//! under [`Policy::Slo`]), and continuous decode batching. Synchronous loop
+//! on the driver thread; the per-step attention fan-out inside
+//! `Engine::decode_step` runs on the engine's worker pool (`--workers N`).
+//!
+//! ## Clocks
+//!
+//! The scheduler never reads a wall clock itself: deadlines are evaluated
+//! against a *virtual* clock advanced by the driver via
+//! [`Scheduler::set_now`]. The trace-replay harness advances it from a
+//! deterministic cost model (so replays are byte-identical), while the TCP
+//! server advances it from wall-clock elapsed time. `Completion::ttft_us`
+//! and `total_us` remain wall-clock measurements for live serving.
+//!
+//! ## Policies
+//!
+//! * [`Policy::Fifo`] (default) — admit in submission order; under cache
+//!   pressure, preempt only strictly-younger live work, otherwise the head
+//!   parks. This reproduces the pre-SLO scheduler ordering exactly.
+//! * [`Policy::Slo`] — admit the most urgent queued request first, ordered
+//!   by (priority class, deadline, submission time); under pressure, preempt
+//!   live work of a *strictly lower* priority class (least important,
+//!   youngest first). Priority inversion cannot occur: a class never
+//!   preempts itself or anything more important.
+//!
+//! Both policies admit greedily — as many prefills per tick as the cache
+//! budget allows — so a burst or ramp of arrivals does not serialize
+//! admission one request per tick. Requests carrying a deadline are failed
+//! terminally (reservation released) once the virtual clock passes it.
 
 use crate::cache::{Admission, CachePool};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::{Engine, Sequence};
-use crate::coordinator::request::{Completion, Request, StepMetrics};
+use crate::coordinator::request::{Completion, Request, SchedEvent, StepMetrics};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::time::Instant;
 
+/// Admission/preemption policy. See the module docs for the exact rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Strict submission order; strictly-younger-only preemption.
+    #[default]
+    Fifo,
+    /// Priority- and deadline-aware admission; cross-class preemption.
+    Slo,
+}
+
+impl Policy {
+    /// Parse a policy from its CLI name (`fifo` / `slo`).
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "slo" => Some(Policy::Slo),
+            _ => None,
+        }
+    }
+}
+
+/// A queued request plus the virtual time it was first submitted (preserved
+/// across preemptions so deadlines are relative to *first* submission).
+struct Queued {
+    req: Request,
+    submitted_us: u64,
+}
+
+impl Queued {
+    /// Absolute virtual deadline, if the request carries one.
+    fn deadline_abs(&self) -> Option<u64> {
+        self.req.deadline_us.map(|d| self.submitted_us.saturating_add(d))
+    }
+}
+
 struct Live {
     req: Request,
+    submitted_us: u64,
     seq: Sequence,
     generated: Vec<i32>,
     next_token: i32,
     ttft_us: Option<u64>,
 }
 
+impl Live {
+    fn deadline_abs(&self) -> Option<u64> {
+        self.req.deadline_us.map(|d| self.submitted_us.saturating_add(d))
+    }
+}
+
+/// Outcome of one admission attempt (see [`Scheduler::admit`]).
+enum AdmitStep {
+    /// The candidate reached a terminal or live state, or pressure was
+    /// relieved — try to admit again this tick.
+    Progress,
+    /// The candidate must wait for live work to finish; stop admitting.
+    Parked,
+}
+
+/// The serving scheduler: one instance owns the engine, the cache pool, the
+/// admission queue, and the live decode batch. Drive it with
+/// [`Scheduler::tick`] (one admission + decode round) or
+/// [`Scheduler::run_to_completion`].
 pub struct Scheduler {
+    /// The decode engine (PJRT stages + quantized-cache attention).
     pub engine: Engine,
+    /// Cross-sequence cache byte accounting and admission control.
     pub pool: CachePool,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Queued>,
     live: Vec<Live>,
+    /// Terminal states accumulated since the last drain.
     pub done: Vec<Completion>,
+    /// Monotonic counters across all ticks.
     pub metrics: StepMetrics,
+    /// State-transition stream for the replay harness; empty unless enabled
+    /// via [`Scheduler::record_events`].
+    pub events: Vec<SchedEvent>,
+    policy: Policy,
+    record: bool,
+    now_us: u64,
     stop_token: i32,
     rng: Rng,
 }
 
 impl Scheduler {
+    /// A FIFO scheduler over `engine` with a cache budget of
+    /// `cache_budget_bytes` across all live sequences.
     pub fn new(engine: Engine, cache_budget_bytes: usize) -> Scheduler {
         // '.' ends a document in the corpus grammar.
         let stop_token = engine
@@ -48,6 +141,10 @@ impl Scheduler {
             live: Vec::new(),
             done: Vec::new(),
             metrics: StepMetrics::default(),
+            events: Vec::new(),
+            policy: Policy::Fifo,
+            record: false,
+            now_us: 0,
             stop_token,
             rng: Rng::new(0xd1ce),
         }
@@ -58,118 +155,302 @@ impl Scheduler {
         self.engine.set_workers(workers);
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+    /// Switch the admission/preemption policy (default [`Policy::Fifo`]).
+    pub fn set_policy(&mut self, policy: Policy) {
+        self.policy = policy;
     }
 
+    /// The active admission/preemption policy.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Enable or disable [`SchedEvent`] recording into
+    /// [`Scheduler::events`]. Off by default so a long-running server does
+    /// not accumulate an unbounded log; the replay driver turns it on and
+    /// drains with [`Scheduler::take_events`] every tick.
+    pub fn record_events(&mut self, on: bool) {
+        self.record = on;
+        if !on {
+            self.events.clear();
+        }
+    }
+
+    /// Drain and return the recorded events.
+    pub fn take_events(&mut self) -> Vec<SchedEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    fn event(&mut self, ev: SchedEvent) {
+        if self.record {
+            self.events.push(ev);
+        }
+    }
+
+    /// Advance the virtual clock (monotonic; earlier values are ignored).
+    /// Deadlines are evaluated against this clock at every tick.
+    pub fn set_now(&mut self, now_us: u64) {
+        self.now_us = self.now_us.max(now_us);
+    }
+
+    /// Current virtual time in microseconds.
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Enqueue a request for admission. Its deadline (if any) starts
+    /// counting from the current virtual time.
+    pub fn submit(&mut self, req: Request) {
+        let now = self.now_us;
+        self.submit_at(req, now);
+    }
+
+    /// Enqueue with an explicit submission timestamp — the replay driver
+    /// passes the trace arrival time, so a request's deadline counts from
+    /// when it *arrived*, not from the end of whatever long tick was in
+    /// flight when the driver ingested it (keeping deadline accounting
+    /// consistent with TTFT, which is also measured from arrival).
+    pub fn submit_at(&mut self, req: Request, submitted_us: u64) {
+        self.event(SchedEvent::Submitted { id: req.id });
+        self.queue.push_back(Queued { req, submitted_us });
+    }
+
+    /// Requests not yet in a terminal state (queued + live).
     pub fn pending(&self) -> usize {
         self.queue.len() + self.live.len()
     }
 
-    /// Estimated cache bytes for a prompt + its generation budget.
+    /// Estimated steady-state cache bytes for a prompt plus its generation
+    /// budget: FP16 high-precision windows plus the quantized middle at the
+    /// method's bit-widths (packed codes + per-group parameters). For
+    /// unquantized methods, or sequences that fit inside the windows, this
+    /// is the FP16 upper bound. A method that compresses harder therefore
+    /// admits more concurrent sequences out of the same budget — the
+    /// serving-side payoff the overload harness measures.
     fn estimate_bytes(&self, req: &Request) -> usize {
         let d = &self.engine.manifest.model;
+        let cfg = &self.engine.cfg;
         let n = req.prompt.len() + req.max_new_tokens;
-        // FP16-equivalent upper bound across layers/heads, both K and V.
-        2 * 2 * n * d.d_h * d.n_kv_heads * d.n_layers
+        let window = cfg.w_sink + cfg.w_recent;
+        let (n_fp, n_q) = if cfg.is_quantized() && n > window {
+            (window, n - window)
+        } else {
+            (n, 0)
+        };
+        // Per (layer, KV head): K and V rows at 2 bytes/element in the
+        // windows; packed codes plus ~8 bytes of f32 params per 32-element
+        // group for each of K and V in the quantized middle.
+        let fp = 4 * n_fp * d.d_h;
+        let codes = n_q * d.d_h * (cfg.key_bits as usize + cfg.val_bits as usize) / 8;
+        let params = n_q * (d.d_h / 32).max(1) * 16;
+        (fp + codes + params) * d.n_kv_heads * d.n_layers
     }
 
-    /// Admit the queue head if the cache pool allows it.
-    fn admit_head(&mut self) -> Result<()> {
-        let Some(req) = self.queue.front() else { return Ok(()) };
-        let est = self.estimate_bytes(req);
-        match self.pool.admit(req.id, est) {
-            Admission::Admitted => {
-                let req = self.queue.pop_front().unwrap();
-                // A bad prompt (or a failing prefill) must fail the request,
-                // not the scheduler — and must give its reservation back.
-                let prompt = match self.engine.manifest.encode(&req.prompt) {
-                    Ok(p) => p,
-                    Err(e) => {
-                        self.pool.release(req.id);
-                        self.metrics.rejected += 1;
-                        self.done.push(Completion::failed(&req, e.to_string()));
-                        return Ok(());
-                    }
-                };
-                let t0 = Instant::now();
-                let seq = match self.engine.prefill(&prompt) {
-                    Ok(s) => s,
-                    Err(e) => {
-                        self.pool.release(req.id);
-                        self.metrics.rejected += 1;
-                        self.done.push(Completion::failed(&req, e.to_string()));
-                        return Ok(());
-                    }
-                };
-                self.metrics.prefill_tokens += prompt.len() as u64;
-                let next = self.sample(&seq.last_logits, req.temperature);
-                self.live.push(Live {
-                    ttft_us: Some(t0.elapsed().as_micros() as u64),
-                    req,
-                    seq,
-                    generated: Vec::new(),
-                    next_token: next,
-                });
-            }
-            Admission::Pressure => {
-                // Preempt strictly-younger live work (recompute-style): the
-                // request goes back to the queue and its cache is dropped.
-                // Reservations without a live owner (e.g. left behind by a
-                // crashed prefill) are released on the way, so admission can
-                // never live-lock on a stale id. If all live work is older
-                // than the head, the head parks and waits — preempting older
-                // work would just thrash prefills back and forth.
-                let head_id = req.id;
-                let mut progressed = false;
-                while let Some(victim) = self.pool.youngest() {
-                    match self.live.iter().position(|l| l.req.id == victim) {
-                        None => {
-                            self.pool.release(victim);
-                            self.metrics.stale_reservations += 1;
-                            progressed = true;
-                        }
-                        Some(idx) if victim > head_id => {
-                            let l = self.live.swap_remove(idx);
-                            self.pool.release(victim);
-                            self.metrics.preemptions += 1;
-                            self.queue.push_back(l.req);
-                            progressed = true;
-                            break;
-                        }
-                        Some(_) => break, // oldest work keeps running
-                    }
-                }
-                if !progressed && self.live.is_empty() {
-                    // Nothing to wait for and nothing to evict: the estimate
-                    // cannot be satisfied — reject instead of spinning.
-                    let req = self.queue.pop_front().unwrap();
-                    self.metrics.rejected += 1;
-                    self.done.push(Completion::failed(
-                        &req,
-                        "cache pressure with nothing to preempt",
-                    ));
-                }
-            }
-            Admission::TooLarge => {
-                let req = self.queue.pop_front().unwrap();
-                self.metrics.rejected += 1;
-                self.done.push(Completion::failed(
-                    &req,
-                    "request exceeds the cache budget outright",
-                ));
+    /// Fail every queued or live request whose absolute deadline has passed.
+    /// Live casualties release their cache reservation, so an expired
+    /// stragglers' budget immediately becomes admissible headroom.
+    fn expire_deadlines(&mut self) {
+        let now = self.now_us;
+        let mut expired: Vec<(Request, bool)> = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].deadline_abs().map_or(false, |d| d <= now) {
+                let q = self.queue.remove(i).unwrap();
+                expired.push((q.req, true));
+            } else {
+                i += 1;
             }
         }
-        Ok(())
+        let mut j = 0;
+        while j < self.live.len() {
+            if self.live[j].deadline_abs().map_or(false, |d| d <= now) {
+                let l = self.live.remove(j);
+                self.pool.release(l.req.id);
+                expired.push((l.req, false));
+            } else {
+                j += 1;
+            }
+        }
+        for (req, queued) in expired {
+            self.metrics.expired += 1;
+            self.event(SchedEvent::Expired { id: req.id, queued });
+            self.done.push(Completion::failed(&req, "deadline exceeded"));
+        }
     }
 
-    /// One scheduler tick: admit at most one prefill, then one decode step
-    /// over the live batch. Returns false when idle.
+    /// Index of the next admission candidate, or None when the queue is
+    /// empty. FIFO: the head. SLO: most urgent by (priority class, absolute
+    /// deadline, first-submission time, id).
+    fn next_candidate(&self) -> Option<usize> {
+        match self.policy {
+            Policy::Fifo => (!self.queue.is_empty()).then_some(0),
+            Policy::Slo => (0..self.queue.len()).min_by_key(|&i| {
+                let q = &self.queue[i];
+                (
+                    q.req.priority,
+                    q.deadline_abs().unwrap_or(u64::MAX),
+                    q.submitted_us,
+                    q.req.id,
+                )
+            }),
+        }
+    }
+
+    /// Release every cache-pool reservation without a live owner (left
+    /// behind by a crashed prefill, or injected by tests), so admission can
+    /// never live-lock on a stale id. Returns how many were dropped.
+    fn release_stale_reservations(&mut self) -> usize {
+        let stale: Vec<u64> = self
+            .pool
+            .ids()
+            .filter(|id| !self.live.iter().any(|l| l.req.id == *id))
+            .collect();
+        for id in &stale {
+            self.pool.release(*id);
+        }
+        self.metrics.stale_reservations += stale.len() as u64;
+        stale.len()
+    }
+
+    /// Pick a preemption victim for `candidate` under the active policy, or
+    /// None when nothing is eligible. FIFO: the youngest live sequence, and
+    /// only if strictly younger than the candidate. SLO: the least-important
+    /// live sequence of a *strictly lower* priority class, youngest first.
+    fn pick_victim(&self, candidate: &Request) -> Option<usize> {
+        match self.policy {
+            Policy::Fifo => self
+                .live
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, l)| l.req.id)
+                .filter(|(_, l)| l.req.id > candidate.id)
+                .map(|(i, _)| i),
+            Policy::Slo => self
+                .live
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.req.priority > candidate.priority)
+                .max_by_key(|(_, l)| (l.req.priority, l.req.id))
+                .map(|(i, _)| i),
+        }
+    }
+
+    /// One admission attempt for the queue entry at `cidx`.
+    fn try_admit(&mut self, cidx: usize) -> Result<AdmitStep> {
+        let est = self.estimate_bytes(&self.queue[cidx].req);
+        let id = self.queue[cidx].req.id;
+        match self.pool.admit(id, est) {
+            Admission::Admitted => {
+                let q = self.queue.remove(cidx).unwrap();
+                self.prefill_into_live(q);
+                Ok(AdmitStep::Progress)
+            }
+            Admission::TooLarge => {
+                let q = self.queue.remove(cidx).unwrap();
+                self.metrics.rejected += 1;
+                self.event(SchedEvent::Rejected { id: q.req.id });
+                self.done.push(Completion::failed(
+                    &q.req,
+                    "request exceeds the cache budget outright",
+                ));
+                Ok(AdmitStep::Progress)
+            }
+            Admission::Pressure => {
+                if self.release_stale_reservations() > 0 {
+                    return Ok(AdmitStep::Progress);
+                }
+                if let Some(vidx) = self.pick_victim(&self.queue[cidx].req) {
+                    // Recompute-style preemption: the victim's cache is
+                    // dropped, its generated tokens are discarded, and it
+                    // goes back to the queue (keeping its original
+                    // submission time, so its deadline keeps counting).
+                    let l = self.live.swap_remove(vidx);
+                    self.pool.release(l.req.id);
+                    self.metrics.preemptions += 1;
+                    self.event(SchedEvent::Preempted { id: l.req.id });
+                    self.queue.push_back(Queued { req: l.req, submitted_us: l.submitted_us });
+                    return Ok(AdmitStep::Progress);
+                }
+                if self.live.is_empty() {
+                    // Nothing to wait for and nothing to evict: the estimate
+                    // cannot be satisfied — reject instead of spinning.
+                    let q = self.queue.remove(cidx).unwrap();
+                    self.metrics.rejected += 1;
+                    self.event(SchedEvent::Rejected { id: q.req.id });
+                    self.done.push(Completion::failed(
+                        &q.req,
+                        "cache pressure with nothing to preempt",
+                    ));
+                    return Ok(AdmitStep::Progress);
+                }
+                Ok(AdmitStep::Parked)
+            }
+        }
+    }
+
+    /// Run the admitted request's prefill and move it into the live batch
+    /// (or fail it, giving its reservation back).
+    fn prefill_into_live(&mut self, q: Queued) {
+        let Queued { req, submitted_us } = q;
+        // A bad prompt (or a failing prefill) must fail the request, not
+        // the scheduler — and must give its reservation back.
+        let prompt = match self.engine.manifest.encode(&req.prompt) {
+            Ok(p) => p,
+            Err(e) => {
+                self.pool.release(req.id);
+                self.metrics.rejected += 1;
+                self.event(SchedEvent::Rejected { id: req.id });
+                self.done.push(Completion::failed(&req, e.to_string()));
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let seq = match self.engine.prefill(&prompt) {
+            Ok(s) => s,
+            Err(e) => {
+                self.pool.release(req.id);
+                self.metrics.rejected += 1;
+                self.event(SchedEvent::Rejected { id: req.id });
+                self.done.push(Completion::failed(&req, e.to_string()));
+                return;
+            }
+        };
+        self.metrics.prefill_tokens += prompt.len() as u64;
+        self.event(SchedEvent::Admitted { id: req.id, prefill_tokens: prompt.len() });
+        let next = self.sample(&seq.last_logits, req.temperature);
+        self.live.push(Live {
+            ttft_us: Some(t0.elapsed().as_micros() as u64),
+            req,
+            submitted_us,
+            seq,
+            generated: Vec::new(),
+            next_token: next,
+        });
+    }
+
+    /// Admit greedily: keep admitting the policy's next candidate until the
+    /// queue drains or a candidate parks under pressure. Every iteration
+    /// either retires a queue entry (admitted / rejected) or strictly
+    /// shrinks pool state (stale release, preemption), so this terminates.
+    fn admit(&mut self) -> Result<()> {
+        loop {
+            let Some(cidx) = self.next_candidate() else { return Ok(()) };
+            match self.try_admit(cidx)? {
+                AdmitStep::Progress => continue,
+                AdmitStep::Parked => return Ok(()),
+            }
+        }
+    }
+
+    /// One scheduler tick: expire deadlines, admit as many prefills as the
+    /// cache budget allows, then one decode step over the live batch.
+    /// Returns false when idle.
     pub fn tick(&mut self) -> Result<bool> {
         if self.queue.is_empty() && self.live.is_empty() {
             return Ok(false);
         }
-        self.admit_head()?;
+        self.expire_deadlines();
+        self.admit()?;
 
         // --- decode step ---
         if !self.live.is_empty() {
@@ -221,19 +502,29 @@ impl Scheduler {
                     );
                 }
             }
-            finished.sort_unstable_by(|a, b| b.cmp(a));
-            for i in finished {
+            // Emit completions in live (admission) order, then remove in
+            // descending index order so swap_remove cannot invalidate a
+            // pending index.
+            finished.sort_unstable();
+            for &i in &finished {
+                let c = {
+                    let l = &self.live[i];
+                    Completion {
+                        id: l.req.id,
+                        text: self.engine.manifest.decode_text(&l.generated),
+                        n_prompt: l.req.prompt.len(),
+                        n_generated: l.generated.len(),
+                        ttft_us: l.ttft_us.unwrap_or(0),
+                        total_us: l.req.arrived.elapsed().as_micros() as u64,
+                        error: None,
+                    }
+                };
+                self.event(SchedEvent::Finished { id: c.id, n_generated: c.n_generated });
+                self.done.push(c);
+            }
+            for &i in finished.iter().rev() {
                 let l = self.live.swap_remove(i);
                 self.pool.release(l.req.id);
-                self.done.push(Completion {
-                    id: l.req.id,
-                    text: self.engine.manifest.decode_text(&l.generated),
-                    n_prompt: l.req.prompt.len(),
-                    n_generated: l.generated.len(),
-                    ttft_us: l.ttft_us.unwrap_or(0),
-                    total_us: l.req.arrived.elapsed().as_micros() as u64,
-                    error: None,
-                });
             }
         }
         Ok(true)
@@ -298,5 +589,13 @@ mod tests {
             Scheduler::sample_with(&mut rng, &[f32::NAN, f32::NAN], Some(1.0)),
             0
         );
+    }
+
+    #[test]
+    fn policy_parses_cli_names() {
+        assert_eq!(Policy::parse("fifo"), Some(Policy::Fifo));
+        assert_eq!(Policy::parse("slo"), Some(Policy::Slo));
+        assert_eq!(Policy::parse("edf"), None);
+        assert_eq!(Policy::default(), Policy::Fifo);
     }
 }

@@ -1,22 +1,34 @@
 //! InnerQ CLI — the leader entrypoint.
 //!
 //! ```text
-//! innerq serve   [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
-//! innerq generate --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
-//! innerq exp      table1|table2|table3|table7|fig5|msparsity|simulate|all
-//! innerq info     [--artifacts DIR]
+//! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
+//!                    [--budget BYTES] [--policy fifo|slo]
+//! innerq generate    --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
+//! innerq serve-trace [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
+//!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
+//!                    [--method M] [--interactive FRAC] [--deadline-ms D]
+//!                    [--json PATH] [--fake]
+//! innerq exp         table1|table2|table3|table7|fig5|msparsity|simulate|all
+//! innerq info        [--artifacts DIR]
 //! ```
 //!
 //! `--workers N` sizes the decode-attention worker pool (default 1 = the
 //! serial baseline; the driver thread counts as one worker).
 //!
+//! `serve-trace` replays a timed synthetic trace through the scheduler on a
+//! virtual clock and prints p50/p90/p99 TTFT and end-to-end latency — the
+//! overload harness (see `workload::replay`). With `--fake` (or when the
+//! artifacts directory is missing) it runs against the synthetic fake-model
+//! artifacts, so it works without `make artifacts`.
+//!
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
 
 use anyhow::{anyhow, Result};
-use innerq::coordinator::{Request, Scheduler};
+use innerq::coordinator::{Policy, Request, Scheduler};
 use innerq::runtime::Manifest;
+use innerq::workload::replay::{replay, CostModel};
+use innerq::workload::trace::{generate_timed, Arrival, TimedTraceConfig};
 use innerq::{exp, QuantMethod};
-use std::time::Instant;
 
 struct Args {
     cmd: String,
@@ -35,12 +47,18 @@ fn parse_args() -> Args {
     }
     while i < argv.len() {
         if let Some(key) = argv[i].strip_prefix("--") {
-            let val = argv.get(i + 1).cloned().unwrap_or_default();
+            // A following "--flag" is the next flag, not this one's value,
+            // so boolean flags like `--fake` compose with anything.
+            let val = match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    i += 1;
+                    v.clone()
+                }
+                _ => String::new(),
+            };
             flags.insert(key.to_string(), val);
-            i += 2;
-        } else {
-            i += 1;
         }
+        i += 1;
     }
     Args { cmd, flags }
 }
@@ -48,6 +66,9 @@ fn parse_args() -> Args {
 impl Args {
     fn get(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
     }
 }
 
@@ -65,6 +86,43 @@ fn method(args: &Args) -> Result<QuantMethod> {
     })
 }
 
+fn policy(args: &Args) -> Result<Policy> {
+    let name = args.get("policy", "fifo");
+    Policy::parse(&name).ok_or_else(|| anyhow!("unknown policy '{name}'; one of: fifo, slo"))
+}
+
+/// Build the replay scheduler for `serve-trace`: real artifacts when
+/// available, the synthetic fake model under `--fake` or as a fallback.
+fn trace_scheduler(args: &Args, budget: usize, workers: usize) -> Result<Scheduler> {
+    let m = method(args)?;
+    let manifest = if args.has("fake") {
+        None
+    } else {
+        match load_manifest(args) {
+            Ok(man) => Some(man),
+            Err(e) => {
+                eprintln!(
+                    "[serve-trace] artifacts not loadable ({e}); falling back to the fake model \
+                     (pass --artifacts DIR for the real one)"
+                );
+                None
+            }
+        }
+    };
+    let manifest = match manifest {
+        Some(man) => man,
+        None => {
+            let dir = innerq::util::fakemodel::write_fake_artifacts("serve_trace", '7');
+            Manifest::load(&dir)?
+        }
+    };
+    let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, budget);
+    sched.set_policy(policy(args)?);
+    Ok(sched)
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     match args.cmd.as_str() {
@@ -72,12 +130,18 @@ fn main() -> Result<()> {
             let manifest = load_manifest(&args)?;
             let m = method(&args)?;
             let workers: usize = args.get("workers", "1").parse()?;
+            let budget: usize = args.get("budget", &(1usize << 30).to_string()).parse()?;
             eprintln!("[serve] loading {} stages ...", manifest.artifacts.len());
             let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
             engine.set_workers(workers);
-            let sched = Scheduler::new(engine, 1 << 30);
+            let mut sched = Scheduler::new(engine, budget);
+            sched.set_policy(policy(&args)?);
             let addr = args.get("addr", "127.0.0.1:7071");
-            eprintln!("[serve] method={} addr={addr} workers={workers}", m.name());
+            eprintln!(
+                "[serve] method={} addr={addr} workers={workers} policy={:?}",
+                m.name(),
+                sched.policy()
+            );
             innerq::server::serve(
                 sched,
                 &addr,
@@ -94,13 +158,7 @@ fn main() -> Result<()> {
             let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
             engine.set_workers(workers);
             let mut sched = Scheduler::new(engine, 1 << 30);
-            sched.submit(Request {
-                id: 0,
-                prompt: prompt.clone(),
-                max_new_tokens: max_new,
-                temperature: None,
-                arrived: Instant::now(),
-            });
+            sched.submit(Request::new(0, &prompt, max_new));
             let done = sched.run_to_completion()?;
             let c = &done[0];
             println!("{prompt}{}", c.text);
@@ -111,6 +169,46 @@ fn main() -> Result<()> {
                 c.total_us,
                 c.n_generated
             );
+            Ok(())
+        }
+        "serve-trace" => {
+            let rate: f64 = args.get("rate", "200").parse()?;
+            let arrival_name = args.get("arrival", "poisson");
+            let arrival = Arrival::parse(&arrival_name, rate)
+                .ok_or_else(|| anyhow!("unknown arrival process '{arrival_name}'"))?;
+            let n_requests: usize = args.get("requests", "64").parse()?;
+            let seed: u64 = args.get("seed", "7").parse()?;
+            let workers: usize = args.get("workers", "1").parse()?;
+            let budget: usize = args.get("budget", &(1usize << 20).to_string()).parse()?;
+            // Priority mix: --interactive FRAC of requests are interactive
+            // (the rest standard), with an optional per-request deadline.
+            let interactive: f64 = args.get("interactive", "0").parse()?;
+            let deadline_ms: f64 = args.get("deadline-ms", "0").parse()?;
+            let deadline = (deadline_ms > 0.0).then(|| (deadline_ms * 1e3) as u64);
+            let cfg = TimedTraceConfig {
+                n_requests,
+                arrival,
+                priority_mix: [interactive.clamp(0.0, 1.0), 1.0 - interactive.clamp(0.0, 1.0), 0.0],
+                deadlines_us: [deadline, deadline, deadline],
+                seed,
+                ..TimedTraceConfig::default()
+            };
+            let trace = generate_timed(&cfg);
+            let mut sched = trace_scheduler(&args, budget, workers)?;
+            eprintln!(
+                "[serve-trace] arrival={} rate={rate} requests={n_requests} budget={budget} \
+                 policy={:?} workers={workers} seed={seed}",
+                arrival.name(),
+                sched.policy()
+            );
+            let report = replay(&mut sched, &trace, &CostModel::default())?;
+            println!("== serve-trace report ==");
+            report.print_summary();
+            let json_path = args.get("json", "");
+            if !json_path.is_empty() {
+                std::fs::write(&json_path, report.to_json().dump())?;
+                eprintln!("[serve-trace] wrote {json_path}");
+            }
             Ok(())
         }
         "exp" => {
@@ -155,11 +253,15 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: innerq <serve|generate|exp|info> [flags]\n\
-                 \n  serve    --method M --addr HOST:PORT --artifacts DIR --workers N\
-                 \n  generate --prompt S --method M --max-new N --workers N\
-                 \n  exp      table1|table2|table3|table7|fig5|msparsity|simulate|all\
-                 \n  info     --artifacts DIR\n\
+                "usage: innerq <serve|generate|serve-trace|exp|info> [flags]\n\
+                 \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
+                 \n              --budget BYTES --policy fifo|slo\
+                 \n  generate    --prompt S --method M --max-new N --workers N\
+                 \n  serve-trace --arrival poisson|bursty|ramp|batch --rate R --requests N\
+                 \n              --seed S --budget BYTES --policy fifo|slo --workers N\
+                 \n              --interactive FRAC --deadline-ms D --json PATH --fake\
+                 \n  exp         table1|table2|table3|table7|fig5|msparsity|simulate|all\
+                 \n  info        --artifacts DIR\n\
                  \nmethods: {}",
                 QuantMethod::ALL.map(|m| m.name()).join(", ")
             );

@@ -13,7 +13,7 @@
 //! (completion lines), so a pipelining client can never observe two
 //! response lines interleaved mid-line.
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Priority, Request};
 use crate::coordinator::Scheduler;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -78,13 +78,64 @@ fn reader_loop(conn: TcpStream, tx: mpsc::Sender<Inbound>, next_id: Arc<AtomicU6
             );
             continue;
         }
-        let req = Request {
-            id: next_id.fetch_add(1, Ordering::Relaxed),
-            prompt,
-            max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(32),
-            temperature: j.get("temperature").as_f64().map(|t| t as f32),
-            arrived: Instant::now(),
+        // Optional SLO fields: "priority" (name or numeric level; unknown
+        // values get an in-band error so a typo'd class cannot silently run
+        // at the wrong priority) and "deadline_ms" (relative, must be > 0).
+        let priority = match j.get("priority") {
+            Json::Null => Priority::Standard,
+            Json::Str(s) => match Priority::parse(s) {
+                Some(p) => p,
+                None => {
+                    write_line(
+                        &writer,
+                        &error_line(&format!(
+                            "unknown priority '{s}' (one of: interactive, standard, batch)"
+                        )),
+                    );
+                    continue;
+                }
+            },
+            Json::Num(n) => {
+                let parsed = (n.fract() == 0.0)
+                    .then(|| format!("{}", *n as i64))
+                    .and_then(|s| Priority::parse(&s));
+                match parsed {
+                    Some(p) => p,
+                    None => {
+                        write_line(
+                            &writer,
+                            &error_line("numeric priority must be 0, 1, or 2"),
+                        );
+                        continue;
+                    }
+                }
+            }
+            _ => {
+                write_line(&writer, &error_line("priority must be a string or number"));
+                continue;
+            }
         };
+        let deadline_us = match j.get("deadline_ms") {
+            Json::Null => None,
+            Json::Num(ms) if ms.is_finite() && *ms > 0.0 => Some((*ms * 1e3) as u64),
+            _ => {
+                // Same contract as priority: a bad SLO field gets an
+                // in-band error instead of silently running unenforced.
+                write_line(
+                    &writer,
+                    &error_line("deadline_ms must be a positive number of milliseconds"),
+                );
+                continue;
+            }
+        };
+        let mut req = Request::new(
+            next_id.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            j.get("max_new_tokens").as_usize().unwrap_or(32),
+        );
+        req.temperature = j.get("temperature").as_f64().map(|t| t as f32);
+        req.priority = priority;
+        req.deadline_us = deadline_us;
         if tx.send(Inbound { req, conn: writer.clone() }).is_err() {
             write_line(&writer, &error_line("server is shutting down"));
             return;
@@ -125,9 +176,13 @@ pub fn serve(
     });
 
     // Scheduler loop (owns the engine; decode attention fans out over the
-    // engine's worker pool).
+    // engine's worker pool). The scheduler's virtual clock is advanced from
+    // wall-clock elapsed time so request deadlines expire in live serving
+    // exactly as they would in a replay.
+    let started = Instant::now();
     let mut conns: std::collections::HashMap<u64, SharedConn> = Default::default();
     while !stop.load(Ordering::Relaxed) {
+        sched.set_now(started.elapsed().as_micros() as u64);
         // ingest
         while let Ok(inb) = rx.try_recv() {
             conns.insert(inb.req.id, inb.conn);
@@ -178,6 +233,27 @@ impl Client {
             ("max_new_tokens", Json::Num(max_new_tokens as f64)),
         ]);
         self.send_line(&req.dump())
+    }
+
+    /// Send one generation request with explicit SLO fields (priority
+    /// class, optional relative deadline in milliseconds) and block for its
+    /// completion.
+    pub fn generate_with(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        priority: Priority,
+        deadline_ms: Option<f64>,
+    ) -> Result<Json> {
+        let mut fields = vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
+            ("priority", Json::str(priority.name())),
+        ];
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::Num(ms)));
+        }
+        self.send_line(&Json::obj(fields).dump())
     }
 
     /// Send one raw protocol line and block for one response line (lets

@@ -29,6 +29,12 @@ impl Rng {
     pub fn next_f32(&mut self) -> f32 {
         (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
+    /// Uniform in [0, 1) at f64 resolution (53 mantissa bits) — used by the
+    /// arrival-process samplers, where f32 grid effects would distort
+    /// exponential inter-arrival tails.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
     /// Standard normal via Box-Muller.
     pub fn next_normal(&mut self) -> f32 {
         let u1 = (self.next_f32() + 1e-9).min(1.0);

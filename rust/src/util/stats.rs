@@ -55,6 +55,97 @@ pub fn sink<T>(v: T) -> T {
     std::hint::black_box(v)
 }
 
+/// Tail summary of a latency distribution, in integer microseconds.
+/// All fields are exact order statistics (nearest-rank), so two runs that
+/// record the same samples produce bit-identical summaries — the overload
+/// harness relies on this for its byte-identity determinism contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Percentiles {
+    /// Number of recorded samples.
+    pub count: usize,
+    /// Arithmetic mean, rounded down to whole microseconds.
+    pub mean_us: u64,
+    /// Median (50th percentile).
+    pub p50_us: u64,
+    /// 90th percentile.
+    pub p90_us: u64,
+    /// 99th percentile.
+    pub p99_us: u64,
+    /// Largest sample.
+    pub max_us: u64,
+}
+
+/// Exact percentile histogram over microsecond latencies. Stores raw
+/// samples (serving traces are at most tens of thousands of requests), so
+/// percentiles are exact rather than bucket-approximated, and summaries are
+/// deterministic for the replay byte-identity contract.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    samples: Vec<u64>,
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { samples: Vec::new() }
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record(&mut self, us: u64) {
+        self.samples.push(us);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    /// Exact nearest-rank percentile (`p` in [0, 100]); 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+        sorted[rank - 1]
+    }
+
+    /// p50/p90/p99/max/mean summary (zeros when empty).
+    pub fn summary(&self) -> Percentiles {
+        if self.samples.is_empty() {
+            return Percentiles::default();
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = |p: f64| {
+            let r = ((p / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+            sorted[r - 1]
+        };
+        let sum: u128 = sorted.iter().map(|&v| v as u128).sum();
+        Percentiles {
+            count: n,
+            mean_us: (sum / n as u128) as u64,
+            p50_us: rank(50.0),
+            p90_us: rank(90.0),
+            p99_us: rank(99.0),
+            max_us: sorted[n - 1],
+        }
+    }
+}
+
 /// Mean of a slice.
 pub fn mean(xs: &[f32]) -> f32 {
     if xs.is_empty() {
@@ -96,6 +187,37 @@ mod tests {
     fn rel_l2_zero_for_equal() {
         let a = [1.0f32, -2.0, 3.0];
         assert!(rel_l2(&a, &a) < 1e-6);
+    }
+
+    #[test]
+    fn latency_histogram_exact_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p90_us, 90);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.max_us, 100);
+        assert_eq!(s.mean_us, 50); // floor(50.5)
+        assert_eq!(h.percentile(100.0), 100);
+        assert_eq!(h.percentile(0.0), 1);
+    }
+
+    #[test]
+    fn latency_histogram_empty_and_merge() {
+        let empty = LatencyHistogram::new();
+        assert_eq!(empty.summary(), Percentiles::default());
+        assert_eq!(empty.percentile(99.0), 0);
+        let mut a = LatencyHistogram::new();
+        a.record(5);
+        let mut b = LatencyHistogram::new();
+        b.record(15);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.summary().max_us, 15);
     }
 
     #[test]

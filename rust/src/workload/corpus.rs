@@ -5,12 +5,15 @@
 
 use crate::util::rng::Rng;
 
+/// The model's character set: variable names, digits, and grammar marks.
 pub const CHARSET: &str = "abcdefghij0123456789=;?.";
+/// Distinct variable names in the grammar.
 pub const N_NAMES: usize = 10;
 
 /// One generated document plus its ground truth.
 #[derive(Debug, Clone)]
 pub struct Document {
+    /// The document text.
     pub text: String,
     /// Index of the first query ('?') character.
     pub query_start: usize,
@@ -24,6 +27,7 @@ pub struct CorpusGen {
 }
 
 impl CorpusGen {
+    /// A generator with its own deterministic stream.
     pub fn new(seed: u64) -> CorpusGen {
         CorpusGen { rng: Rng::new(seed) }
     }

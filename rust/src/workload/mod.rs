@@ -1,5 +1,7 @@
-//! Workload generation: the synthetic corpus (shared grammar with
-//! `python/compile/corpus.py`) and serving request traces.
+//! Workload generation and replay: the synthetic corpus (shared grammar
+//! with `python/compile/corpus.py`), serving request traces with timed
+//! arrival processes, and the virtual-clock overload replay harness.
 
 pub mod corpus;
+pub mod replay;
 pub mod trace;

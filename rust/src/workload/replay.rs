@@ -1,0 +1,424 @@
+//! Trace replay on a virtual clock: the overload harness.
+//!
+//! [`replay`] feeds a timed trace ([`crate::workload::trace::generate_timed`])
+//! to a [`Scheduler`], advancing a virtual clock from a deterministic
+//! [`CostModel`] instead of wall time: each tick costs what the scheduler
+//! *did* that tick (prefill tokens, decode step, batched sequences). Because
+//! every input to the clock is a deterministic counter — and the engine's
+//! worker-pool fan-out is byte-identical at any worker count — replaying the
+//! same trace twice produces byte-identical [`ReplayReport`]s, including
+//! across different `--workers` values. That turns tail-latency numbers into
+//! something CI can diff, not just eyeball.
+//!
+//! Per-request TTFT / TPOT / end-to-end latency are reconstructed from the
+//! scheduler's [`SchedEvent`] stream and aggregated into exact
+//! [`LatencyHistogram`]s, overall and per priority class.
+
+use crate::coordinator::request::{Priority, SchedEvent, StepMetrics};
+use crate::coordinator::Scheduler;
+use crate::util::json::Json;
+use crate::util::stats::{LatencyHistogram, Percentiles};
+use crate::workload::trace::TimedRequest;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Virtual-time cost of one scheduler tick, as a linear model over what the
+/// tick executed. The defaults are loosely calibrated to the fused-kernel
+/// decode path (tens of microseconds of fixed overhead, prefill dominated
+/// by bulk quantization, decode by the attention fan-out); the absolute
+/// scale only shifts where "overload" begins — the *relative* tail behavior
+/// across rates, budgets, and methods is what the harness measures.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Fixed scheduler overhead per tick.
+    pub tick_overhead_us: u64,
+    /// Prefill cost per prompt token (QKV stages + bulk quantization).
+    pub prefill_us_per_token: u64,
+    /// Fixed cost of a decode step (PJRT stage dispatch).
+    pub decode_step_us: u64,
+    /// Marginal decode cost per batched sequence (attention + sampling).
+    pub decode_us_per_seq: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            tick_overhead_us: 20,
+            prefill_us_per_token: 10,
+            decode_step_us: 100,
+            decode_us_per_seq: 50,
+        }
+    }
+}
+
+impl CostModel {
+    /// Virtual microseconds consumed by a tick with the given deltas.
+    fn tick_cost(&self, d_prefill_tokens: u64, d_decode_steps: u64, d_batched: u64) -> u64 {
+        self.tick_overhead_us
+            + d_prefill_tokens * self.prefill_us_per_token
+            + d_decode_steps * self.decode_step_us
+            + d_batched * self.decode_us_per_seq
+    }
+}
+
+/// Terminal outcome of one replayed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed normally.
+    Ok,
+    /// Failed terminally without a deadline (unencodable, over budget,
+    /// unsatisfiable under pressure, prefill failure).
+    Rejected,
+    /// Deadline passed before completion.
+    Expired,
+}
+
+impl Outcome {
+    /// Stable name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Rejected => "rejected",
+            Outcome::Expired => "expired",
+        }
+    }
+}
+
+/// Per-request timeline reconstructed from the scheduler event stream, all
+/// timestamps in virtual microseconds.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    /// Request id.
+    pub id: u64,
+    /// Priority class the request carried.
+    pub priority: Priority,
+    /// Trace arrival time.
+    pub arrival_us: u64,
+    /// End of the tick in which the request was (first) admitted and its
+    /// first token sampled; `None` if it never got that far. TTFT is
+    /// `admitted_us - arrival_us`.
+    pub admitted_us: Option<u64>,
+    /// End of the tick in which the request reached a terminal state.
+    pub finished_us: Option<u64>,
+    /// Generated tokens (0 unless [`Outcome::Ok`]).
+    pub n_generated: usize,
+    /// Times the request was preempted back to the queue.
+    pub preemptions: u32,
+    /// Terminal outcome (`None` only mid-replay).
+    pub outcome: Option<Outcome>,
+}
+
+impl RequestRecord {
+    /// Time-to-first-token, if the request was admitted.
+    pub fn ttft_us(&self) -> Option<u64> {
+        self.admitted_us.map(|t| t - self.arrival_us)
+    }
+
+    /// End-to-end latency, if the request reached a terminal state.
+    pub fn e2e_us(&self) -> Option<u64> {
+        self.finished_us.map(|t| t - self.arrival_us)
+    }
+
+    /// Mean time per output token after the first, for completed requests
+    /// that generated at least one token.
+    pub fn tpot_us(&self) -> Option<u64> {
+        match (self.outcome, self.admitted_us, self.finished_us) {
+            (Some(Outcome::Ok), Some(a), Some(f)) if self.n_generated > 0 => {
+                Some((f - a) / self.n_generated as u64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Latency aggregates for one slice of the trace (overall or one class).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySlice {
+    /// TTFT over every admitted request in the slice.
+    pub ttft: LatencyHistogram,
+    /// End-to-end latency over completed ([`Outcome::Ok`]) requests.
+    pub e2e: LatencyHistogram,
+    /// Per-output-token latency over completed requests.
+    pub tpot: LatencyHistogram,
+}
+
+impl LatencySlice {
+    fn add(&mut self, r: &RequestRecord) {
+        if let Some(t) = r.ttft_us() {
+            self.ttft.record(t);
+        }
+        if r.outcome == Some(Outcome::Ok) {
+            if let Some(t) = r.e2e_us() {
+                self.e2e.record(t);
+            }
+            if let Some(t) = r.tpot_us() {
+                self.tpot.record(t);
+            }
+        }
+    }
+}
+
+/// Everything a replay produced: per-request timelines, scheduler counters,
+/// and the virtual span. Aggregates are computed on demand so callers can
+/// slice however they like; [`ReplayReport::to_json`] is the canonical
+/// machine-readable form (and the byte-identity determinism artifact).
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// One record per trace request, in trace order.
+    pub records: Vec<RequestRecord>,
+    /// Scheduler ticks executed.
+    pub ticks: u64,
+    /// Virtual time at which the last request reached a terminal state.
+    pub end_us: u64,
+    /// Final scheduler counters.
+    pub metrics: StepMetrics,
+}
+
+impl ReplayReport {
+    /// Count of records with the given outcome.
+    pub fn count(&self, o: Outcome) -> usize {
+        self.records.iter().filter(|r| r.outcome == Some(o)).count()
+    }
+
+    /// Latency aggregates over the whole trace.
+    pub fn overall(&self) -> LatencySlice {
+        let mut s = LatencySlice::default();
+        for r in &self.records {
+            s.add(r);
+        }
+        s
+    }
+
+    /// Latency aggregates for one priority class.
+    pub fn class(&self, p: Priority) -> LatencySlice {
+        let mut s = LatencySlice::default();
+        for r in self.records.iter().filter(|r| r.priority == p) {
+            s.add(r);
+        }
+        s
+    }
+
+    /// Completed requests per virtual second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.end_us == 0 {
+            return 0.0;
+        }
+        self.count(Outcome::Ok) as f64 / (self.end_us as f64 * 1e-6)
+    }
+
+    /// Generated tokens per virtual second.
+    pub fn gen_tokens_per_s(&self) -> f64 {
+        if self.end_us == 0 {
+            return 0.0;
+        }
+        let toks: usize = self.records.iter().map(|r| r.n_generated).sum();
+        toks as f64 / (self.end_us as f64 * 1e-6)
+    }
+
+    fn percentiles_json(p: &Percentiles) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(p.count as f64)),
+            ("mean_us", Json::Num(p.mean_us as f64)),
+            ("p50_us", Json::Num(p.p50_us as f64)),
+            ("p90_us", Json::Num(p.p90_us as f64)),
+            ("p99_us", Json::Num(p.p99_us as f64)),
+            ("max_us", Json::Num(p.max_us as f64)),
+        ])
+    }
+
+    fn slice_json(s: &LatencySlice) -> Json {
+        Json::obj(vec![
+            ("ttft", Self::percentiles_json(&s.ttft.summary())),
+            ("e2e", Self::percentiles_json(&s.e2e.summary())),
+            ("tpot", Self::percentiles_json(&s.tpot.summary())),
+        ])
+    }
+
+    /// Canonical machine-readable report. Deliberately excludes anything
+    /// that may differ between equivalent runs (wall time, worker count),
+    /// so two replays of the same trace compare byte-for-byte equal.
+    pub fn to_json(&self) -> Json {
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("class", Json::str(r.priority.name())),
+                    ("arrival_us", Json::Num(r.arrival_us as f64)),
+                    (
+                        "admitted_us",
+                        r.admitted_us.map_or(Json::Null, |v| Json::Num(v as f64)),
+                    ),
+                    (
+                        "finished_us",
+                        r.finished_us.map_or(Json::Null, |v| Json::Num(v as f64)),
+                    ),
+                    ("n_generated", Json::Num(r.n_generated as f64)),
+                    ("preemptions", Json::Num(r.preemptions as f64)),
+                    (
+                        "outcome",
+                        r.outcome.map_or(Json::Null, |o| Json::str(o.name())),
+                    ),
+                ])
+            })
+            .collect();
+        let per_class: Vec<(&str, Json)> = Priority::ALL
+            .iter()
+            .map(|&p| (p.name(), Self::slice_json(&self.class(p))))
+            .collect();
+        Json::obj(vec![
+            ("harness", Json::str("trace_replay")),
+            ("n_requests", Json::Num(self.records.len() as f64)),
+            ("completed", Json::Num(self.count(Outcome::Ok) as f64)),
+            ("rejected", Json::Num(self.count(Outcome::Rejected) as f64)),
+            ("expired", Json::Num(self.count(Outcome::Expired) as f64)),
+            ("preemptions", Json::Num(self.metrics.preemptions as f64)),
+            ("ticks", Json::Num(self.ticks as f64)),
+            ("virtual_us", Json::Num(self.end_us as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("gen_tokens_per_s", Json::Num(self.gen_tokens_per_s())),
+            ("overall", Self::slice_json(&self.overall())),
+            ("per_class", Json::obj(per_class)),
+            ("records", Json::Arr(records)),
+        ])
+    }
+
+    /// Human-readable summary on stdout: counts, throughput, and
+    /// p50/p90/p99 TTFT + end-to-end latency, overall and per class.
+    pub fn print_summary(&self) {
+        let ms = |us: u64| us as f64 / 1e3;
+        println!(
+            "requests {:>5}   completed {}   rejected {}   expired {}   preemptions {}",
+            self.records.len(),
+            self.count(Outcome::Ok),
+            self.count(Outcome::Rejected),
+            self.count(Outcome::Expired),
+            self.metrics.preemptions,
+        );
+        println!(
+            "virtual time {:.1} ms over {} ticks   throughput {:.1} req/s   {:.0} gen tok/s",
+            ms(self.end_us),
+            self.ticks,
+            self.throughput_rps(),
+            self.gen_tokens_per_s(),
+        );
+        let line = |label: &str, s: &LatencySlice| {
+            let t = s.ttft.summary();
+            let e = s.e2e.summary();
+            println!(
+                "{label:<14} ttft p50/p90/p99 {:>8.2}/{:>8.2}/{:>8.2} ms   e2e p50/p90/p99 {:>8.2}/{:>8.2}/{:>8.2} ms   (n={})",
+                ms(t.p50_us), ms(t.p90_us), ms(t.p99_us),
+                ms(e.p50_us), ms(e.p90_us), ms(e.p99_us),
+                e.count,
+            );
+        };
+        line("overall", &self.overall());
+        for p in Priority::ALL {
+            let s = self.class(p);
+            if !s.ttft.is_empty() || !s.e2e.is_empty() {
+                line(p.name(), &s);
+            }
+        }
+    }
+}
+
+/// Replay a timed trace through `sched` on a virtual clock.
+///
+/// The driver submits each request once its arrival time is reached, runs
+/// one scheduler tick, prices the tick with `cost`, and advances the clock;
+/// when the scheduler goes idle it jumps to the next arrival. Deadlines
+/// count from trace arrival time (consistent with TTFT), even when a
+/// request is ingested at the end of a long tick. The scheduler should be
+/// freshly constructed (its
+/// policy and workers already set); its event recording is enabled for the
+/// duration and disabled again before returning.
+pub fn replay(
+    sched: &mut Scheduler,
+    trace: &[TimedRequest],
+    cost: &CostModel,
+) -> Result<ReplayReport> {
+    sched.record_events(true);
+    sched.done.clear();
+    let mut records: Vec<RequestRecord> = trace
+        .iter()
+        .map(|t| RequestRecord {
+            id: t.req.id,
+            priority: t.req.priority,
+            arrival_us: t.arrival_us,
+            admitted_us: None,
+            finished_us: None,
+            n_generated: 0,
+            preemptions: 0,
+            outcome: None,
+        })
+        .collect();
+    let idx_of: HashMap<u64, usize> =
+        trace.iter().enumerate().map(|(i, t)| (t.req.id, i)).collect();
+
+    let mut now = 0u64;
+    let mut next = 0usize; // next trace arrival
+    let mut ticks = 0u64;
+    let mut prev = sched.metrics;
+    let mut last_terminal_us = 0u64;
+    loop {
+        while next < trace.len() && trace[next].arrival_us <= now {
+            // Anchor the submission (and so any deadline) at the trace
+            // arrival time, consistent with how TTFT/e2e are measured.
+            sched.submit_at(trace[next].req.clone(), trace[next].arrival_us);
+            next += 1;
+        }
+        sched.set_now(now);
+        let worked = sched.tick()?;
+        if worked {
+            ticks += 1;
+            let m = sched.metrics;
+            let dt = cost.tick_cost(
+                m.prefill_tokens - prev.prefill_tokens,
+                m.decode_steps - prev.decode_steps,
+                m.batched_seqs - prev.batched_seqs,
+            );
+            prev = m;
+            now = now.saturating_add(dt.max(1));
+        }
+        for ev in sched.take_events() {
+            let Some(&ri) = idx_of.get(&ev.id()) else { continue };
+            let r = &mut records[ri];
+            match ev {
+                SchedEvent::Submitted { .. } => {}
+                SchedEvent::Admitted { .. } => {
+                    if r.admitted_us.is_none() {
+                        r.admitted_us = Some(now);
+                    }
+                }
+                SchedEvent::Preempted { .. } => r.preemptions += 1,
+                SchedEvent::Rejected { .. } => {
+                    r.outcome = Some(Outcome::Rejected);
+                    r.finished_us = Some(now);
+                    last_terminal_us = now;
+                }
+                SchedEvent::Expired { .. } => {
+                    r.outcome = Some(Outcome::Expired);
+                    r.finished_us = Some(now);
+                    last_terminal_us = now;
+                }
+                SchedEvent::Finished { n_generated, .. } => {
+                    r.outcome = Some(Outcome::Ok);
+                    r.finished_us = Some(now);
+                    r.n_generated = n_generated;
+                    last_terminal_us = now;
+                }
+            }
+        }
+        sched.done.clear();
+        if !worked {
+            if next < trace.len() {
+                now = now.max(trace[next].arrival_us);
+            } else {
+                break;
+            }
+        }
+    }
+    sched.record_events(false);
+    Ok(ReplayReport { records, ticks, end_us: last_terminal_us, metrics: sched.metrics })
+}

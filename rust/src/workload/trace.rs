@@ -1,18 +1,34 @@
-//! Serving request traces: Poisson-ish arrivals over corpus prompts, used by
-//! the serving examples and the throughput/latency harness.
+//! Serving request traces over corpus prompts.
+//!
+//! Two generators live here:
+//!
+//! * [`generate`] — the legacy fixed batch (no arrival times), kept for the
+//!   serving examples;
+//! * [`generate_timed`] — timed traces for the overload harness
+//!   ([`crate::workload::replay`]): Poisson / bursty / ramp arrival
+//!   processes, heavy-tailed prompt and output length mixes, and a
+//!   per-request priority class + deadline, all deterministic per seed.
+//!
+//! Arrival timestamps are *virtual microseconds*; the replay driver feeds
+//! them to the scheduler on its virtual clock, so a trace replays
+//! identically regardless of wall-clock speed or worker count.
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Priority, Request};
 use crate::util::rng::Rng;
 use crate::workload::corpus::CorpusGen;
-use std::time::Instant;
 
+/// Configuration of the legacy fixed-batch trace ([`generate`]).
 #[derive(Debug, Clone, Copy)]
 pub struct TraceConfig {
+    /// Number of requests.
     pub n_requests: usize,
     /// Variables per document (controls prompt length).
     pub n_vars: usize,
+    /// Recall queries appended per document.
     pub n_queries: usize,
+    /// Generation budget per request.
     pub max_new_tokens: usize,
+    /// Trace seed (prompts are deterministic per seed).
     pub seed: u64,
 }
 
@@ -33,15 +49,211 @@ pub fn generate(cfg: TraceConfig) -> Vec<Request> {
             // cut at the first query stem: "...;?x="
             let cut = doc.text.find('?').map(|p| p + 3).unwrap_or(doc.text.len());
             let _ = rng.next_u64();
-            Request {
-                id: i as u64,
-                prompt: doc.text[..cut].to_string(),
-                max_new_tokens: cfg.max_new_tokens,
-                temperature: None,
-                arrived: Instant::now(),
-            }
+            Request::new(i as u64, &doc.text[..cut], cfg.max_new_tokens)
         })
         .collect()
+}
+
+/// Arrival process of a timed trace, in requests per *virtual* second.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Everything arrives at t = 0 (the legacy closed batch).
+    Batch,
+    /// Memoryless arrivals: exponential inter-arrival gaps at `rate_rps`.
+    Poisson {
+        /// Mean arrival rate, requests per virtual second.
+        rate_rps: f64,
+    },
+    /// Bursts of `burst` simultaneous arrivals; burst instants are Poisson
+    /// at `rate_rps / burst`, so the long-run rate still equals `rate_rps`.
+    Bursty {
+        /// Mean arrival rate, requests per virtual second.
+        rate_rps: f64,
+        /// Requests arriving together at each burst instant.
+        burst: usize,
+    },
+    /// Rate ramps linearly from `start_rps` to `end_rps` across the trace —
+    /// the overload shape: the tail of the trace arrives faster than the
+    /// system drains.
+    Ramp {
+        /// Arrival rate at the first request.
+        start_rps: f64,
+        /// Arrival rate at the last request.
+        end_rps: f64,
+    },
+}
+
+impl Arrival {
+    /// Parse a CLI arrival spec: a process name plus the `--rate` value
+    /// (`ramp` reads `rate` as the *end* rate, starting from a tenth of it;
+    /// `bursty` uses bursts of 8).
+    pub fn parse(name: &str, rate_rps: f64) -> Option<Arrival> {
+        match name {
+            "batch" => Some(Arrival::Batch),
+            "poisson" => Some(Arrival::Poisson { rate_rps }),
+            "bursty" => Some(Arrival::Bursty { rate_rps, burst: 8 }),
+            "ramp" => Some(Arrival::Ramp { start_rps: rate_rps / 10.0, end_rps: rate_rps }),
+            _ => None,
+        }
+    }
+
+    /// Stable name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arrival::Batch => "batch",
+            Arrival::Poisson { .. } => "poisson",
+            Arrival::Bursty { .. } => "bursty",
+            Arrival::Ramp { .. } => "ramp",
+        }
+    }
+}
+
+/// One request plus its virtual arrival time.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    /// Virtual arrival timestamp in microseconds (nondecreasing).
+    pub arrival_us: u64,
+    /// The request itself (priority and deadline already set).
+    pub req: Request,
+}
+
+/// Configuration of a timed overload trace ([`generate_timed`]).
+#[derive(Debug, Clone, Copy)]
+pub struct TimedTraceConfig {
+    /// Number of requests.
+    pub n_requests: usize,
+    /// Arrival process over virtual time.
+    pub arrival: Arrival,
+    /// Uniform range of variables per prompt (controls prompt length; one
+    /// assignment is ~5 characters).
+    pub vars_range: (usize, usize),
+    /// Recall queries per document (the prompt is cut at the first).
+    pub n_queries: usize,
+    /// Uniform range of the per-request generation budget.
+    pub max_new_range: (usize, usize),
+    /// Probability that a request is a heavy-tail outlier: its prompt vars
+    /// double (capped at `vars_cap`) and its generation budget quadruples
+    /// (capped at `max_new_cap`). 0 disables the tail.
+    pub tail_prob: f64,
+    /// Prompt-size cap for tail outliers.
+    pub vars_cap: usize,
+    /// Generation-budget cap for tail outliers.
+    pub max_new_cap: usize,
+    /// Sampling weights for [interactive, standard, batch] priority
+    /// classes; all-zero means every request is standard.
+    pub priority_mix: [f64; 3],
+    /// Per-class relative deadline in virtual microseconds
+    /// ([interactive, standard, batch]); `None` never expires.
+    pub deadlines_us: [Option<u64>; 3],
+    /// Trace seed: prompts, lengths, classes, and arrival gaps are all
+    /// deterministic functions of it.
+    pub seed: u64,
+}
+
+impl Default for TimedTraceConfig {
+    fn default() -> Self {
+        TimedTraceConfig {
+            n_requests: 64,
+            arrival: Arrival::Poisson { rate_rps: 100.0 },
+            vars_range: (4, 16),
+            n_queries: 1,
+            max_new_range: (8, 32),
+            tail_prob: 0.1,
+            vars_cap: 20,
+            max_new_cap: 96,
+            priority_mix: [0.0, 1.0, 0.0],
+            deadlines_us: [None, None, None],
+            seed: 7,
+        }
+    }
+}
+
+/// Exponential inter-arrival gap at `rate_rps`, in virtual microseconds.
+fn exp_gap_us(rng: &mut Rng, rate_rps: f64) -> u64 {
+    if rate_rps <= 0.0 {
+        return 0;
+    }
+    // u in [0,1); 1-u in (0,1] keeps ln finite.
+    let u = rng.next_f64();
+    (-(1.0 - u).ln() / rate_rps * 1e6).round() as u64
+}
+
+fn uniform_in(rng: &mut Rng, (lo, hi): (usize, usize)) -> usize {
+    if hi <= lo {
+        return lo;
+    }
+    lo + rng.next_range(hi - lo + 1)
+}
+
+fn sample_priority(rng: &mut Rng, mix: &[f64; 3]) -> Priority {
+    let total: f64 = mix.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    if total <= 0.0 {
+        return Priority::Standard;
+    }
+    let mut u = rng.next_f64() * total;
+    for (w, p) in mix.iter().zip(Priority::ALL) {
+        if w.is_finite() && *w > 0.0 {
+            u -= w;
+            if u <= 0.0 {
+                return p;
+            }
+        }
+    }
+    Priority::Batch
+}
+
+/// Generate a timed trace: deterministic per seed, arrivals nondecreasing.
+///
+/// The three random streams (arrival gaps, request shapes, corpus text) are
+/// seeded independently so changing e.g. the arrival process does not
+/// reshuffle the prompts.
+pub fn generate_timed(cfg: &TimedTraceConfig) -> Vec<TimedRequest> {
+    let mut arrive_rng = Rng::new(cfg.seed ^ 0x00a1_17ee);
+    let mut shape_rng = Rng::new(cfg.seed ^ 0x5a5a_0001);
+    let mut gen = CorpusGen::new(cfg.seed ^ 0xabcd);
+    let n = cfg.n_requests;
+    let mut now_us = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // --- arrival ---
+        let gap = match cfg.arrival {
+            Arrival::Batch => 0,
+            Arrival::Poisson { rate_rps } => exp_gap_us(&mut arrive_rng, rate_rps),
+            Arrival::Bursty { rate_rps, burst } => {
+                let burst = burst.max(1);
+                if i % burst == 0 {
+                    exp_gap_us(&mut arrive_rng, rate_rps / burst as f64)
+                } else {
+                    0
+                }
+            }
+            Arrival::Ramp { start_rps, end_rps } => {
+                let f = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+                exp_gap_us(&mut arrive_rng, start_rps + (end_rps - start_rps) * f)
+            }
+        };
+        now_us = now_us.saturating_add(gap);
+
+        // --- shape: lengths, class, deadline ---
+        let mut vars = uniform_in(&mut shape_rng, cfg.vars_range);
+        let mut max_new = uniform_in(&mut shape_rng, cfg.max_new_range);
+        let is_tail = shape_rng.next_f64() < cfg.tail_prob;
+        if is_tail {
+            vars = (vars * 2).min(cfg.vars_cap.max(1));
+            max_new = (max_new * 4).min(cfg.max_new_cap.max(1));
+        }
+        let priority = sample_priority(&mut shape_rng, &cfg.priority_mix);
+        let deadline_us = cfg.deadlines_us[priority.level() as usize];
+
+        // --- prompt ---
+        let doc = gen.document(vars.max(1), cfg.n_queries.max(1));
+        let cut = doc.text.find('?').map(|p| p + 3).unwrap_or(doc.text.len());
+        let mut req = Request::new(i as u64, &doc.text[..cut], max_new.max(1));
+        req.priority = priority;
+        req.deadline_us = deadline_us;
+        out.push(TimedRequest { arrival_us: now_us, req });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -65,5 +277,120 @@ mod tests {
         let a = generate(TraceConfig::default());
         let b = generate(TraceConfig::default());
         assert_eq!(a[3].prompt, b[3].prompt);
+    }
+
+    fn timed_key(t: &TimedRequest) -> (u64, u64, String, usize, u8, Option<u64>) {
+        (
+            t.arrival_us,
+            t.req.id,
+            t.req.prompt.clone(),
+            t.req.max_new_tokens,
+            t.req.priority.level(),
+            t.req.deadline_us,
+        )
+    }
+
+    #[test]
+    fn timed_trace_is_deterministic_and_monotone() {
+        let cfg = TimedTraceConfig::default();
+        let a = generate_timed(&cfg);
+        let b = generate_timed(&cfg);
+        assert_eq!(a.len(), cfg.n_requests);
+        assert_eq!(
+            a.iter().map(timed_key).collect::<Vec<_>>(),
+            b.iter().map(timed_key).collect::<Vec<_>>()
+        );
+        for w in a.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us, "arrivals must be nondecreasing");
+        }
+        let c = generate_timed(&TimedTraceConfig { seed: 8, ..cfg });
+        assert_ne!(
+            a.iter().map(timed_key).collect::<Vec<_>>(),
+            c.iter().map(timed_key).collect::<Vec<_>>(),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn poisson_rate_is_approximately_respected() {
+        let cfg = TimedTraceConfig {
+            n_requests: 512,
+            arrival: Arrival::Poisson { rate_rps: 1000.0 },
+            tail_prob: 0.0,
+            ..TimedTraceConfig::default()
+        };
+        let trace = generate_timed(&cfg);
+        let span_s = trace.last().unwrap().arrival_us as f64 * 1e-6;
+        let rate = (cfg.n_requests - 1) as f64 / span_s;
+        assert!(
+            (rate - 1000.0).abs() < 200.0,
+            "empirical rate {rate:.0} rps far from 1000"
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_share_instants() {
+        let cfg = TimedTraceConfig {
+            n_requests: 64,
+            arrival: Arrival::Bursty { rate_rps: 400.0, burst: 8 },
+            ..TimedTraceConfig::default()
+        };
+        let trace = generate_timed(&cfg);
+        for chunk in trace.chunks(8) {
+            assert!(chunk.iter().all(|t| t.arrival_us == chunk[0].arrival_us));
+        }
+    }
+
+    #[test]
+    fn ramp_accelerates() {
+        let cfg = TimedTraceConfig {
+            n_requests: 300,
+            arrival: Arrival::Ramp { start_rps: 20.0, end_rps: 2000.0 },
+            tail_prob: 0.0,
+            ..TimedTraceConfig::default()
+        };
+        let trace = generate_timed(&cfg);
+        let t = |i: usize| trace[i].arrival_us as f64;
+        let first_half = t(150) - t(0);
+        let second_half = t(299) - t(150);
+        assert!(
+            second_half < first_half,
+            "ramp tail should arrive faster: {first_half} vs {second_half}"
+        );
+    }
+
+    #[test]
+    fn priority_mix_and_deadlines_apply() {
+        let cfg = TimedTraceConfig {
+            n_requests: 300,
+            priority_mix: [1.0, 1.0, 1.0],
+            deadlines_us: [Some(5_000), None, Some(1_000_000)],
+            ..TimedTraceConfig::default()
+        };
+        let trace = generate_timed(&cfg);
+        let mut seen = [0usize; 3];
+        for t in &trace {
+            let lvl = t.req.priority.level() as usize;
+            seen[lvl] += 1;
+            assert_eq!(t.req.deadline_us, cfg.deadlines_us[lvl]);
+        }
+        for (lvl, &count) in seen.iter().enumerate() {
+            assert!(count > 50, "class {lvl} undersampled: {count}/300");
+        }
+    }
+
+    #[test]
+    fn prompts_fit_the_largest_fake_prefill_bucket() {
+        // The overload bench replays against the fake model, whose largest
+        // prefill bucket is 128 tokens; the default timed config must never
+        // emit a prompt that cannot prefill there.
+        let cfg = TimedTraceConfig { n_requests: 256, ..TimedTraceConfig::default() };
+        for t in generate_timed(&cfg) {
+            assert!(
+                t.req.prompt.len() <= 128,
+                "prompt of {} chars overflows the 128-token bucket",
+                t.req.prompt.len()
+            );
+        }
     }
 }

@@ -272,13 +272,7 @@ fn scheduler_serves_requests() {
     let engine = Engine::new(m, QuantMethod::InnerQBase.config()).unwrap();
     let mut sched = innerq::coordinator::Scheduler::new(engine, 1 << 30);
     for (i, prompt) in ["a=41;b=07;?a=", "c=15;d=33;?d=", "e=99;?e="].iter().enumerate() {
-        sched.submit(innerq::coordinator::Request {
-            id: i as u64,
-            prompt: prompt.to_string(),
-            max_new_tokens: 6,
-            temperature: None,
-            arrived: std::time::Instant::now(),
-        });
+        sched.submit(innerq::coordinator::Request::new(i as u64, *prompt, 6));
     }
     let done = sched.run_to_completion().unwrap();
     assert_eq!(done.len(), 3);

@@ -5,14 +5,13 @@
 //! across layers and heads, continuous batching, the worker-pool fan-out,
 //! and the TCP protocol.
 
-use innerq::coordinator::{Engine, Request, Scheduler};
+use innerq::coordinator::{Engine, Policy, Priority, Request, SchedEvent, Scheduler};
 use innerq::runtime::Manifest;
 use innerq::server::{serve, Client};
 use innerq::util::fakemodel::write_fake_artifacts;
 use innerq::QuantMethod;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
 
 fn fake_scheduler(tag: &str, peak: char, budget: usize, workers: usize) -> Scheduler {
     let dir = write_fake_artifacts(tag, peak);
@@ -23,13 +22,13 @@ fn fake_scheduler(tag: &str, peak: char, budget: usize, workers: usize) -> Sched
 }
 
 fn req(id: u64, prompt: &str, max_new_tokens: usize) -> Request {
-    Request {
-        id,
-        prompt: prompt.to_string(),
-        max_new_tokens,
-        temperature: None,
-        arrived: Instant::now(),
-    }
+    Request::new(id, prompt, max_new_tokens)
+}
+
+fn req_class(id: u64, prompt: &str, max_new_tokens: usize, p: Priority) -> Request {
+    let mut r = Request::new(id, prompt, max_new_tokens);
+    r.priority = p;
+    r
 }
 
 #[test]
@@ -149,6 +148,180 @@ fn completions_are_identical_across_worker_counts() {
     assert_eq!(run(4, "det4"), serial, "workers=4 diverged from serial");
 }
 
+// ---------------------------------------------------------------------------
+// Preemption-policy matrix: FIFO default ordering, SLO priority rules, and
+// deadline expiry. Budget 6000 fits exactly one est-4608 sequence
+// (7-char prompt + 2 new tokens at the fake geometry), forcing contention.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn default_policy_reproduces_fifo_ordering() {
+    // Under the default policy with one-sequence budget, requests complete
+    // strictly in submission order, and a younger head never preempts older
+    // live work (it parks) — today's FIFO semantics, exactly.
+    let mut sched = fake_scheduler("fifo_order", '7', 6000, 1);
+    for id in 0..5u64 {
+        sched.submit(req(id, "a=1;?a=", 2));
+    }
+    let done = sched.run_to_completion().unwrap();
+    let order: Vec<u64> = done.iter().map(|c| c.id).collect();
+    assert_eq!(order, vec![0, 1, 2, 3, 4], "completions must leave in FIFO order");
+    for c in &done {
+        assert_eq!(c.text, "77");
+        assert!(c.error.is_none());
+    }
+    assert_eq!(sched.metrics.preemptions, 0, "in-order arrivals never preempt");
+}
+
+#[test]
+fn greedy_admission_fills_budget_in_one_tick() {
+    // Regression for the one-prefill-per-tick bug: with budget to spare,
+    // a burst of queued requests must all be admitted by the first tick
+    // instead of serializing one admission per tick.
+    let mut sched = fake_scheduler("greedy", '7', 1 << 30, 1);
+    sched.record_events(true);
+    for id in 0..4u64 {
+        sched.submit(req(id, "a=1;?a=", 4));
+    }
+    sched.tick().unwrap();
+    let admitted: Vec<u64> = sched
+        .take_events()
+        .into_iter()
+        .filter_map(|e| match e {
+            SchedEvent::Admitted { id, .. } => Some(id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admitted, vec![0, 1, 2, 3], "burst must be admitted greedily in one tick");
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 4);
+}
+
+#[test]
+fn slo_policy_admits_by_priority_not_arrival() {
+    // Two queued requests, budget for one: the interactive request is
+    // admitted first even though the batch request arrived earlier.
+    let mut sched = fake_scheduler("slo_order", '7', 6000, 1);
+    sched.set_policy(Policy::Slo);
+    sched.submit(req_class(1, "a=1;?a=", 2, Priority::Batch));
+    sched.submit(req_class(2, "b=2;?b=", 2, Priority::Interactive));
+    let done = sched.run_to_completion().unwrap();
+    let order: Vec<u64> = done.iter().map(|c| c.id).collect();
+    assert_eq!(order, vec![2, 1], "interactive must complete before batch");
+    for c in &done {
+        assert!(c.error.is_none());
+    }
+    // No preemption was needed — the interactive request simply won the
+    // admission race while both were queued.
+    assert_eq!(sched.metrics.preemptions, 0);
+}
+
+#[test]
+fn slo_policy_preempts_lower_class_but_never_inverts() {
+    // Phase 1: a live batch-class sequence is preempted by an arriving
+    // interactive request. Phase 2 (inversion check): a live interactive
+    // sequence is NOT preempted by an arriving batch request — the batch
+    // request parks until the interactive one finishes.
+    let mut sched = fake_scheduler("slo_preempt", '7', 6000, 1);
+    sched.set_policy(Policy::Slo);
+
+    // Phase 1: batch live, interactive arrives.
+    sched.submit(req_class(1, "a=1;?a=", 2, Priority::Batch));
+    sched.tick().unwrap(); // admit batch
+    sched.submit(req_class(2, "b=2;?b=", 2, Priority::Interactive));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(
+        sched.metrics.preemptions, 1,
+        "interactive must preempt the live batch sequence"
+    );
+    let first = done.first().unwrap();
+    assert_eq!(first.id, 2, "interactive completes first after preempting");
+    assert_eq!(done.len(), 2, "the preempted batch request still completes");
+    for c in &done {
+        assert!(c.error.is_none(), "req {}: {:?}", c.id, c.error);
+    }
+
+    // Phase 2: interactive live, batch arrives — no inversion.
+    sched.submit(req_class(10, "c=3;?c=", 2, Priority::Interactive));
+    sched.tick().unwrap(); // admit interactive
+    sched.submit(req_class(11, "d=4;?d=", 2, Priority::Batch));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(
+        sched.metrics.preemptions, 1,
+        "a batch arrival must never preempt live interactive work"
+    );
+    assert_eq!(done.first().unwrap().id, 10, "interactive work runs to completion first");
+    assert_eq!(done.len(), 2);
+}
+
+#[test]
+fn equal_priority_never_preempts_under_slo() {
+    // Same class on both sides: SLO preemption requires a strictly lower
+    // class, so the later request parks exactly like FIFO.
+    let mut sched = fake_scheduler("slo_equal", '7', 6000, 1);
+    sched.set_policy(Policy::Slo);
+    sched.submit(req_class(1, "a=1;?a=", 2, Priority::Standard));
+    sched.tick().unwrap();
+    sched.submit(req_class(2, "b=2;?b=", 2, Priority::Standard));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(sched.metrics.preemptions, 0);
+    assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), vec![1, 2]);
+}
+
+#[test]
+fn live_deadline_expires_to_terminal_state_and_releases_reservation() {
+    let mut sched = fake_scheduler("deadline_live", '7', 1 << 30, 1);
+    let mut r = req(1, "a=1;?a=", 50);
+    r.deadline_us = Some(10_000);
+    sched.submit(r);
+    sched.tick().unwrap(); // admitted, decoding
+    assert!(sched.pool.used_bytes() > 0, "live sequence must hold a reservation");
+    sched.set_now(10_000);
+    sched.tick().unwrap();
+    assert_eq!(
+        sched.pool.used_bytes(),
+        0,
+        "expiry must release the cache reservation"
+    );
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert!(done[0].error.as_deref().unwrap_or("").contains("deadline"));
+    assert_eq!(done[0].n_generated, 0);
+    assert_eq!(sched.metrics.expired, 1);
+}
+
+#[test]
+fn queued_deadline_expires_without_blocking_the_live_sequence() {
+    let mut sched = fake_scheduler("deadline_queued", '7', 6000, 1);
+    sched.submit(req(1, "a=1;?a=", 2)); // fills the budget
+    let mut r = req(2, "b=2;?b=", 2);
+    r.deadline_us = Some(1_000);
+    sched.submit(r);
+    sched.tick().unwrap(); // 1 live, 2 parked
+    sched.set_now(2_000);
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    let expired = done.iter().find(|c| c.id == 2).unwrap();
+    assert!(expired.error.as_deref().unwrap_or("").contains("deadline"));
+    assert_eq!(expired.n_generated, 0);
+    let ok = done.iter().find(|c| c.id == 1).unwrap();
+    assert_eq!(ok.text, "77");
+    assert!(ok.error.is_none());
+    assert_eq!(sched.metrics.expired, 1);
+    assert_eq!(sched.metrics.preemptions, 0);
+}
+
+#[test]
+fn deadline_free_requests_never_expire() {
+    let mut sched = fake_scheduler("deadline_none", '7', 1 << 30, 1);
+    sched.submit(req(1, "a=1;?a=", 3));
+    sched.set_now(u64::MAX / 2);
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert!(done[0].error.is_none());
+    assert_eq!(sched.metrics.expired, 0);
+}
+
 #[test]
 fn server_answers_malformed_requests_and_serves_valid_ones() {
     let dir = write_fake_artifacts("server", '7');
@@ -186,6 +359,21 @@ fn server_answers_malformed_requests_and_serves_valid_ones() {
     assert_eq!(resp.get("text").as_str(), Some("777"));
     assert_eq!(resp.get("n_generated").as_f64(), Some(3.0));
     assert_eq!(resp.get("error").as_str(), None);
+
+    // SLO fields ride along in the request JSON: a labeled request with a
+    // generous deadline completes normally...
+    let resp = client
+        .generate_with("b=22;?b=", 2, innerq::coordinator::Priority::Interactive, Some(60_000.0))
+        .expect("completion");
+    assert_eq!(resp.get("text").as_str(), Some("77"));
+    assert_eq!(resp.get("error").as_str(), None);
+
+    // ... and an unknown priority class is answered in-band instead of
+    // silently running at the wrong priority.
+    let resp = client
+        .send_line(r#"{"prompt": "a=1;?a=", "priority": "warp"}"#)
+        .expect("error response");
+    assert!(resp.get("error").as_str().unwrap_or("").contains("priority"));
 
     stop.store(true, Ordering::Relaxed);
     let _ = std::net::TcpStream::connect(addr); // poke the acceptor awake
