@@ -2,10 +2,12 @@
 """Cross-PR bench trajectory check.
 
 Compares a freshly emitted bench JSON (BENCH_kernels.json from
-`cargo bench --bench kernel_throughput`, or BENCH_overload.json from
-`cargo bench --bench overload_tail`) against a committed baseline snapshot
-and fails when throughput regresses by more than the threshold — so CI
-catches "still bit-exact but 2x slower" changes, not just bit mismatches.
+`cargo bench --bench kernel_throughput`, BENCH_overload.json from
+`cargo bench --bench overload_tail`, or BENCH_offload.json from
+`cargo bench --bench offload_vs_recompute`) against a committed baseline
+snapshot and fails when throughput regresses by more than the threshold —
+so CI catches "still bit-exact but 2x slower" changes, not just bit
+mismatches.
 
 Usage:
     ci/check_bench_trajectory.py CURRENT.json ci/baselines/BASELINE.json
@@ -19,10 +21,12 @@ Behavior:
   * regression > threshold in any cell shared by both files -> exit 1.
 
 Cells are keyed per bench type:
-  * kernel_throughput: (kernel, bits), metric tokens_per_s  (wall-clock —
+  * kernel_throughput:    (kernel, bits), metric tokens_per_s  (wall-clock —
     the generous default threshold absorbs shared-runner noise);
-  * overload_tail:     (method, rate_rps, budget_bytes), metric
-    throughput_rps (virtual-clock — deterministic, so any drift is real).
+  * overload_tail:        (method, rate_rps, budget_bytes), metric
+    throughput_rps (virtual-clock — deterministic, so any drift is real);
+  * offload_vs_recompute: (method, preemption, rate_rps, budget_bytes),
+    metric throughput_rps (virtual-clock, deterministic).
 """
 
 import argparse
@@ -47,6 +51,9 @@ def cells(doc):
             metric = "tokens_per_s"
         elif bench == "overload_tail":
             key = (r["method"], r["rate_rps"], r["budget_bytes"])
+            metric = "throughput_rps"
+        elif bench == "offload_vs_recompute":
+            key = (r["method"], r["preemption"], r["rate_rps"], r["budget_bytes"])
             metric = "throughput_rps"
         else:
             continue

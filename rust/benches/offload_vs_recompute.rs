@@ -1,0 +1,224 @@
+//! Offload vs recompute preemption under the overload sweep: replay the
+//! same overloaded SLO trace through the scheduler in both preemption
+//! modes, per quantization method, and record throughput, tail latency, and
+//! the offload/restore traffic — the harness that answers the ROADMAP
+//! question "does quantized-cache offload-to-host beat recompute under the
+//! cost model?". Smaller snapshots (harder compression) make restores
+//! cheaper while recompute always pays the full prefill again, so the
+//! per-method split is the interesting axis.
+//!
+//! Before timing anything the run asserts two contracts (any panic or
+//! mismatch fails CI):
+//!   * snapshot bit-identity — every quantized segment variant round-trips
+//!     through `cache::store::snapshot` to an equal cache and identical
+//!     bytes;
+//!   * replay byte-identity — the offload-mode replay report is identical
+//!     between workers=1 and workers=2.
+//!
+//! ```bash
+//! cargo bench --bench offload_vs_recompute           # full sweep
+//! cargo bench --bench offload_vs_recompute quick     # CI smoke
+//! ```
+
+use innerq::cache::store::{restore_head, snapshot_head};
+use innerq::cache::HeadCache;
+use innerq::coordinator::{Engine, Policy, Preemption, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::json::Json;
+use innerq::util::ptest::normal_vec;
+use innerq::util::rng::Rng;
+use innerq::workload::replay::{replay, CostModel, Outcome, ReplayReport};
+use innerq::workload::trace::{generate_timed, Arrival, TimedRequest, TimedTraceConfig};
+use innerq::QuantMethod;
+
+/// Tight budget (≈ 2 concurrent sequences at the fake geometry) so the
+/// overloaded trace actually preempts.
+const BUDGET: usize = 64_000;
+const WARM_BUDGET: usize = 1 << 20;
+
+fn scheduler(
+    dir: &std::path::Path,
+    method: QuantMethod,
+    mode: Preemption,
+    workers: usize,
+) -> Scheduler {
+    let manifest = Manifest::load(dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, method.config()).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, BUDGET);
+    sched.set_policy(Policy::Slo);
+    sched.set_preemption(mode);
+    sched.set_warm_budget(WARM_BUDGET);
+    sched
+}
+
+fn trace_for(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests,
+        arrival: Arrival::Poisson { rate_rps },
+        // All three classes so SLO preemption (strictly-lower-class victims)
+        // actually fires; no deadlines, so preempted work must finish and
+        // the restore-vs-reprefill cost shows up in e2e latency.
+        priority_mix: [1.0, 2.0, 1.0],
+        seed: 2026,
+        ..TimedTraceConfig::default()
+    })
+}
+
+/// Snapshot bit-identity smoke over every quantized segment layout the
+/// sweep's methods use (plus turbo): quantize ragged-length caches, round
+/// trip, and require equality and byte-identical re-serialization.
+fn assert_snapshot_contract() {
+    let d_h = 64;
+    let mut seed = 0xbe9c_0001u64;
+    for m in QuantMethod::ALL {
+        for n in [100usize, 131, 240] {
+            seed += 1;
+            let mut rng = Rng::new(seed);
+            let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+            let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+            let hc = HeadCache::from_prefill(m.config(), d_h, &keys, &vals);
+            let bytes = snapshot_head(&hc);
+            let back = restore_head(&bytes).expect("restore");
+            assert_eq!(back, hc, "{m:?} n={n}: snapshot round trip diverged");
+            assert_eq!(snapshot_head(&back), bytes, "{m:?} n={n}: bytes diverged");
+        }
+    }
+    eprintln!("[offload_vs_recompute] snapshot bit-identity contract holds");
+}
+
+struct Cell {
+    rate_rps: f64,
+    method: QuantMethod,
+    mode: Preemption,
+    report: ReplayReport,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_requests: usize = args
+        .iter()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(if quick { 32 } else { 96 });
+    let rates: &[f64] = if quick { &[900.0] } else { &[300.0, 900.0, 2000.0] };
+    let methods: &[QuantMethod] = if quick {
+        &[QuantMethod::InnerQBase, QuantMethod::BaselineFp16]
+    } else {
+        &[QuantMethod::InnerQBase, QuantMethod::Kivi, QuantMethod::BaselineFp16]
+    };
+    let modes = [Preemption::Recompute, Preemption::Offload];
+    let cost = CostModel::default();
+    let dir = write_fake_artifacts("offload_vs_recompute", '7');
+
+    eprintln!(
+        "[offload_vs_recompute] {n_requests} requests/cell, {} rates x {} methods x 2 modes, \
+         budget={BUDGET}, quick={quick}",
+        rates.len(),
+        methods.len()
+    );
+
+    assert_snapshot_contract();
+
+    // Replay byte-identity with offloads in the event stream.
+    {
+        let trace = trace_for(rates[0], n_requests);
+        let mut s1 = scheduler(&dir, QuantMethod::InnerQBase, Preemption::Offload, 1);
+        let mut s2 = scheduler(&dir, QuantMethod::InnerQBase, Preemption::Offload, 2);
+        let a = replay(&mut s1, &trace, &cost).expect("replay w1");
+        let b = replay(&mut s2, &trace, &cost).expect("replay w2");
+        assert_eq!(
+            a.to_json().dump(),
+            b.to_json().dump(),
+            "offload replay byte-identity violated between workers=1 and workers=2"
+        );
+        eprintln!(
+            "[offload_vs_recompute] determinism contract holds (workers 1 vs 2, \
+             {} offloads / {} restores in stream)",
+            a.metrics.offloads, a.metrics.restores
+        );
+    }
+
+    println!(
+        "{:<14} {:>10} {:>6} {:>5} {:>6} {:>5} {:>5} {:>8} {:>10} {:>10}",
+        "method", "preemption", "rate", "ok", "preem", "offl", "rest", "req/s", "e2e p50",
+        "e2e p99"
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut any_offloads = 0u64;
+    for &rate in rates {
+        let trace = trace_for(rate, n_requests);
+        for &method in methods {
+            for &mode in &modes {
+                let mut sched = scheduler(&dir, method, mode, 1);
+                let report = replay(&mut sched, &trace, &cost).expect("replay");
+                let e = report.overall().e2e.summary();
+                if mode == Preemption::Offload {
+                    any_offloads += report.metrics.offloads;
+                }
+                println!(
+                    "{:<14} {:>10} {:>6.0} {:>5} {:>6} {:>5} {:>5} {:>8.1} {:>9}µ {:>9}µ",
+                    method.name(),
+                    mode.name(),
+                    rate,
+                    report.count(Outcome::Ok),
+                    report.metrics.preemptions,
+                    report.metrics.offloads,
+                    report.metrics.restores,
+                    report.throughput_rps(),
+                    e.p50_us,
+                    e.p99_us,
+                );
+                cells.push(Cell { rate_rps: rate, method, mode, report });
+            }
+        }
+    }
+    assert!(
+        any_offloads > 0,
+        "the sweep never exercised offload preemption — raise the rates or shrink the budget"
+    );
+
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let o = c.report.overall();
+            let (t, e) = (o.ttft.summary(), o.e2e.summary());
+            Json::obj(vec![
+                ("method", Json::str(c.method.name())),
+                ("preemption", Json::str(c.mode.name())),
+                ("rate_rps", Json::Num(c.rate_rps)),
+                ("budget_bytes", Json::Num(BUDGET as f64)),
+                ("n_requests", Json::Num(c.report.records.len() as f64)),
+                ("completed", Json::Num(c.report.count(Outcome::Ok) as f64)),
+                ("rejected", Json::Num(c.report.count(Outcome::Rejected) as f64)),
+                ("expired", Json::Num(c.report.count(Outcome::Expired) as f64)),
+                ("preemptions", Json::Num(c.report.metrics.preemptions as f64)),
+                ("offloads", Json::Num(c.report.metrics.offloads as f64)),
+                ("offload_bytes", Json::Num(c.report.metrics.offload_bytes as f64)),
+                ("restores", Json::Num(c.report.metrics.restores as f64)),
+                ("offload_lost", Json::Num(c.report.metrics.offload_lost as f64)),
+                ("throughput_rps", Json::Num(c.report.throughput_rps())),
+                ("gen_tokens_per_s", Json::Num(c.report.gen_tokens_per_s())),
+                ("ttft_p50_us", Json::Num(t.p50_us as f64)),
+                ("ttft_p99_us", Json::Num(t.p99_us as f64)),
+                ("e2e_p50_us", Json::Num(e.p50_us as f64)),
+                ("e2e_p99_us", Json::Num(e.p99_us as f64)),
+                ("virtual_us", Json::Num(c.report.end_us as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("offload_vs_recompute")),
+        ("quick", Json::Bool(quick)),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("policy", Json::str("slo")),
+        ("budget_bytes", Json::Num(BUDGET as f64)),
+        ("warm_budget_bytes", Json::Num(WARM_BUDGET as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_offload.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_offload.json");
+    eprintln!("[offload_vs_recompute] wrote {path}");
+}

@@ -268,7 +268,7 @@ pub struct HeadCache {
     pub qv: ValSegment,
     /// Per-channel key normalization folded into quantized scores.
     pub norm: ChannelNorm,
-    n_tokens: usize,
+    pub(crate) n_tokens: usize,
 }
 
 fn make_key_segment(cfg: &MethodConfig, d_h: usize, seed: u64) -> KeySegment {

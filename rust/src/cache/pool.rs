@@ -12,6 +12,12 @@ use std::collections::BTreeMap;
 pub enum Admission {
     /// Reserved: the estimate fits the free budget.
     Admitted,
+    /// The sequence already holds a reservation. Re-admitting used to
+    /// silently overwrite the old byte count (leaking accounting when the
+    /// stale figure was larger); now the pool refuses and the caller must
+    /// either [`CachePool::release`] first or reconcile via
+    /// [`CachePool::resize`].
+    AlreadyReserved,
     /// Not enough budget even if everything else were evicted.
     TooLarge,
     /// Over budget: the scheduler must evict live work (or park) first.
@@ -52,8 +58,18 @@ impl CachePool {
         self.used.len()
     }
 
-    /// Try to admit a sequence expected to need `est_bytes`.
+    /// Bytes currently reserved by one sequence, if it holds a reservation.
+    pub fn reserved(&self, seq: u64) -> Option<usize> {
+        self.used.get(&seq).copied()
+    }
+
+    /// Try to admit a sequence expected to need `est_bytes`. A sequence
+    /// already holding a reservation is refused ([`Admission::AlreadyReserved`])
+    /// instead of silently replacing its byte count.
     pub fn admit(&mut self, seq: u64, est_bytes: usize) -> Admission {
+        if self.used.contains_key(&seq) {
+            return Admission::AlreadyReserved;
+        }
         if est_bytes > self.budget_bytes {
             return Admission::TooLarge;
         }
@@ -72,10 +88,18 @@ impl CachePool {
         self.used.keys().next_back().copied()
     }
 
-    /// Update a sequence's live byte count (caches grow during decode).
-    pub fn update(&mut self, seq: u64, bytes: usize) {
-        if let Some(b) = self.used.get_mut(&seq) {
-            *b = bytes;
+    /// Reconcile a sequence's reservation with its *measured* byte count
+    /// (the scheduler calls this every decode step so estimates converge to
+    /// actual cache growth). Returns false — with the pool unchanged — when
+    /// the sequence holds no reservation; the caller should treat that as a
+    /// bookkeeping bug, not create one implicitly.
+    pub fn resize(&mut self, seq: u64, bytes: usize) -> bool {
+        match self.used.get_mut(&seq) {
+            Some(b) => {
+                *b = bytes;
+                true
+            }
+            None => false,
         }
     }
 
@@ -110,8 +134,8 @@ mod tests {
         let mut p = CachePool::new(1000);
         p.admit(1, 100);
         p.admit(2, 100);
-        p.update(1, 600);
-        p.update(2, 500);
+        assert!(p.resize(1, 600));
+        assert!(p.resize(2, 500));
         assert!(p.over_budget());
         assert_eq!(p.youngest(), Some(2), "youngest sequence is the victim");
         p.release(2);
@@ -122,7 +146,32 @@ mod tests {
     fn free_bytes_never_underflows() {
         let mut p = CachePool::new(100);
         p.admit(1, 100);
-        p.update(1, 150);
+        assert!(p.resize(1, 150));
         assert_eq!(p.free_bytes(), 0);
+    }
+
+    #[test]
+    fn re_admission_is_refused_not_overwritten() {
+        // Regression: a second admit for a held id used to replace the byte
+        // count, silently leaking whatever the first reservation tracked.
+        let mut p = CachePool::new(1000);
+        assert_eq!(p.admit(1, 400), Admission::Admitted);
+        assert_eq!(p.admit(1, 10), Admission::AlreadyReserved);
+        assert_eq!(p.used_bytes(), 400, "refused re-admission must not touch accounting");
+        // Even an over-budget re-admission reports AlreadyReserved, not
+        // TooLarge — the caller must release or resize explicitly.
+        assert_eq!(p.admit(1, 5000), Admission::AlreadyReserved);
+        p.release(1);
+        assert_eq!(p.admit(1, 10), Admission::Admitted);
+    }
+
+    #[test]
+    fn resize_requires_an_existing_reservation() {
+        let mut p = CachePool::new(1000);
+        assert!(!p.resize(9, 100), "resize must not create reservations");
+        assert_eq!(p.used_bytes(), 0);
+        p.admit(9, 50);
+        assert!(p.resize(9, 100));
+        assert_eq!(p.used_bytes(), 100);
     }
 }

@@ -66,7 +66,7 @@ pub struct InnerKeySegment {
     pub scales: Vec<f32>,
     /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
-    n_tokens: usize,
+    pub(crate) n_tokens: usize,
 }
 
 impl InnerKeySegment {
@@ -131,7 +131,7 @@ pub struct InnerValSegment {
     pub scales: Vec<f32>,
     /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
-    n_chunks: usize,
+    pub(crate) n_chunks: usize,
 }
 
 impl InnerValSegment {
@@ -219,7 +219,7 @@ pub struct OuterKeySegment {
     pub scales: Vec<f32>,
     /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
-    n_chunks: usize,
+    pub(crate) n_chunks: usize,
 }
 
 impl OuterKeySegment {
@@ -306,7 +306,7 @@ pub struct OuterValSegment {
     pub scales: Vec<f32>,
     /// Planar effective-zero plane paired with `scales` (see above).
     pub zeffs: Vec<f32>,
-    n_tokens: usize,
+    pub(crate) n_tokens: usize,
 }
 
 impl OuterValSegment {

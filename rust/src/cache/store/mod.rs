@@ -1,0 +1,25 @@
+//! Tiered cache store: snapshot serialization plus the segcache-style warm
+//! tier behind offload preemption.
+//!
+//! InnerQ's compressed segments are the cheapest bytes in the system to
+//! move: a preempted sequence's quantized middle is already 4–8× smaller
+//! than fp16, so recompute-style preemption (drop the cache, re-prefill
+//! later) throws away exactly the work quantization paid for. This module
+//! gives the scheduler the alternative:
+//!
+//! * [`snapshot`] — bit-exact serialize/restore of a [`crate::cache::HeadCache`]
+//!   or a whole live [`crate::coordinator::Sequence`];
+//! * [`tier`] — a pooled fixed-segment warm store ([`WarmTier`]) with a
+//!   free list, its own byte budget, LRU-with-priority eviction, and
+//!   hit/miss/eviction counters, shaped after pelikan's segcache.
+//!
+//! The scheduler's `Preemption::Offload` mode parks victims here and
+//! restores them (cheap memcpy + deserialize) instead of re-prefilling them
+//! (expensive recompute); `workload::replay`'s cost model prices both so the
+//! overload harness can answer offload-vs-recompute per quant method.
+
+pub mod snapshot;
+pub mod tier;
+
+pub use snapshot::{restore_head, restore_sequence, snapshot_head, snapshot_sequence};
+pub use tier::{TierStats, WarmTier, DEFAULT_SEG_BYTES};

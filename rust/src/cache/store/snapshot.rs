@@ -1,0 +1,632 @@
+//! Lossless snapshot serialization of quantized KV-cache state.
+//!
+//! A snapshot is a self-contained little-endian byte image of a
+//! [`HeadCache`] (or a whole [`Sequence`]): the sink and recent fp windows,
+//! whichever quantized segment variant the method uses — packed codes,
+//! `GroupParams`, and the planar `scales[]`/`zeffs[]` runtime planes — plus
+//! the per-channel key norm and the method configuration itself. Every f32
+//! travels as its IEEE bit pattern (`to_bits`/`from_bits`), so the round
+//! trip is *bit*-exact, NaN payloads included: `restore(snapshot(c)) == c`
+//! under the derived `PartialEq`, and `snapshot(restore(b)) == b` byte for
+//! byte. That exactness is what lets the scheduler's offload preemption
+//! promise that a restored sequence decodes identically to one that was
+//! never offloaded (asserted in `tests/offload_preemption.rs`).
+//!
+//! The format is internal to this crate (it ferries caches between the live
+//! engine and the [`super::tier::WarmTier`], and could ferry them to disk or
+//! a remote host later); a magic/version header rejects foreign bytes
+//! instead of misinterpreting them.
+
+use crate::cache::manager::{HeadCache, KeySegment, ValSegment};
+use crate::cache::segments::{
+    FpSegment, InnerKeySegment, InnerValSegment, OuterKeySegment, OuterValSegment,
+    TurboKeySegment, TurboValSegment,
+};
+use crate::cache::window::{RecentWindow, SinkWindow};
+use crate::coordinator::engine::Sequence;
+use crate::quant::group::Mode;
+use crate::quant::norm::ChannelNorm;
+use crate::quant::turbo::{Rotation, TurboToken};
+use crate::quant::{GroupParams, Grouping, MethodConfig, QuantMethod};
+use anyhow::{anyhow, Result};
+
+/// Header magic of a single-head snapshot ("IQHC").
+const MAGIC_HEAD: u32 = 0x4951_4843;
+/// Header magic of a full-sequence snapshot ("IQSQ").
+const MAGIC_SEQ: u32 = 0x4951_5351;
+/// Format version; bump on any layout change.
+const VERSION: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// primitive writer / reader
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usz(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.usz(b.len());
+        self.buf.extend_from_slice(b);
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.usz(xs.len());
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    fn i32s(&mut self, xs: &[i32]) {
+        self.usz(xs.len());
+        for &x in xs {
+            self.u32(x as u32);
+        }
+    }
+    fn params(&mut self, ps: &[GroupParams]) {
+        self.usz(ps.len());
+        for p in ps {
+            self.u16(p.scale);
+            self.u16(p.zero);
+        }
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(anyhow!("snapshot truncated at byte {} (need {n} more)", self.pos));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn usz(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+    /// Element count prefix, validated against the bytes actually left so a
+    /// corrupt length cannot trigger a huge allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usz()?;
+        if n.checked_mul(elem_bytes).map_or(true, |total| total > self.remaining()) {
+            return Err(anyhow!("snapshot length {n} exceeds remaining payload"));
+        }
+        Ok(n)
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()? as i32);
+        }
+        Ok(out)
+    }
+    fn params(&mut self) -> Result<Vec<GroupParams>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let scale = self.u16()?;
+            let zero = self.u16()?;
+            out.push(GroupParams { scale, zero });
+        }
+        Ok(out)
+    }
+    fn done(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(anyhow!("{} trailing bytes after snapshot payload", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// enum tags
+// ---------------------------------------------------------------------------
+
+fn mode_tag(m: Mode) -> u8 {
+    match m {
+        Mode::Sym => 0,
+        Mode::Asym => 1,
+        Mode::Hybrid => 2,
+    }
+}
+
+fn mode_from(tag: u8) -> Result<Mode> {
+    match tag {
+        0 => Ok(Mode::Sym),
+        1 => Ok(Mode::Asym),
+        2 => Ok(Mode::Hybrid),
+        t => Err(anyhow!("bad quantization mode tag {t}")),
+    }
+}
+
+fn grouping_tag(g: Grouping) -> u8 {
+    match g {
+        Grouping::Inner => 0,
+        Grouping::Outer => 1,
+    }
+}
+
+fn grouping_from(tag: u8) -> Result<Grouping> {
+    match tag {
+        0 => Ok(Grouping::Inner),
+        1 => Ok(Grouping::Outer),
+        t => Err(anyhow!("bad grouping tag {t}")),
+    }
+}
+
+fn write_cfg(w: &mut Writer, cfg: &MethodConfig) {
+    let midx = QuantMethod::ALL
+        .iter()
+        .position(|m| *m == cfg.method)
+        .expect("method present in QuantMethod::ALL") as u8;
+    w.u8(midx);
+    w.usz(cfg.group_size);
+    w.usz(cfg.w_sink);
+    w.usz(cfg.w_recent);
+    w.u8(cfg.key_bits);
+    w.u8(cfg.val_bits);
+    w.u8(mode_tag(cfg.key_mode));
+    w.u8(mode_tag(cfg.val_mode));
+    w.u8(grouping_tag(cfg.key_grouping));
+    w.u8(grouping_tag(cfg.val_grouping));
+    w.u8(cfg.key_norm as u8);
+    w.u8(cfg.turbo as u8);
+}
+
+fn read_cfg(r: &mut Reader) -> Result<MethodConfig> {
+    let midx = r.u8()? as usize;
+    let method = *QuantMethod::ALL
+        .get(midx)
+        .ok_or_else(|| anyhow!("bad quant method tag {midx}"))?;
+    Ok(MethodConfig {
+        method,
+        group_size: r.usz()?,
+        w_sink: r.usz()?,
+        w_recent: r.usz()?,
+        key_bits: r.u8()?,
+        val_bits: r.u8()?,
+        key_mode: mode_from(r.u8()?)?,
+        val_mode: mode_from(r.u8()?)?,
+        key_grouping: grouping_from(r.u8()?)?,
+        val_grouping: grouping_from(r.u8()?)?,
+        key_norm: r.u8()? != 0,
+        turbo: r.u8()? != 0,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// windows / segments
+// ---------------------------------------------------------------------------
+
+fn write_sink(w: &mut Writer, s: &SinkWindow) {
+    w.usz(s.d_h);
+    w.f32s(&s.rows);
+    w.usz(s.capacity);
+}
+
+fn read_sink(r: &mut Reader) -> Result<SinkWindow> {
+    Ok(SinkWindow { d_h: r.usz()?, rows: r.f32s()?, capacity: r.usz()? })
+}
+
+fn write_recent(w: &mut Writer, s: &RecentWindow) {
+    // The buffer is serialized verbatim, dead prefix included: the derived
+    // `PartialEq` on RecentWindow compares `data` and `start` exactly, and
+    // compaction bounds the dead prefix to at most the live length.
+    w.usz(s.d_h);
+    w.f32s(&s.data);
+    w.usz(s.start);
+}
+
+fn read_recent(r: &mut Reader) -> Result<RecentWindow> {
+    Ok(RecentWindow { d_h: r.usz()?, data: r.f32s()?, start: r.usz()? })
+}
+
+fn write_turbo_tokens(w: &mut Writer, tokens: &[TurboToken]) {
+    w.usz(tokens.len());
+    for t in tokens {
+        w.bytes(&t.codes);
+        w.f32(t.norm);
+    }
+}
+
+fn read_turbo_tokens(r: &mut Reader) -> Result<Vec<TurboToken>> {
+    // ≥ 13 bytes each on the wire (length prefix + norm), so /8 is a safe
+    // allocation bound.
+    let n = r.count(8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let codes = r.bytes()?;
+        let norm = r.f32()?;
+        out.push(TurboToken { codes, norm });
+    }
+    Ok(out)
+}
+
+const SEG_FP: u8 = 0;
+const SEG_INNER: u8 = 1;
+const SEG_OUTER: u8 = 2;
+const SEG_TURBO: u8 = 3;
+
+fn write_key_segment(w: &mut Writer, seg: &KeySegment) {
+    match seg {
+        KeySegment::Fp(s) => {
+            w.u8(SEG_FP);
+            w.usz(s.d_h);
+            w.f32s(&s.rows);
+        }
+        KeySegment::Inner(s) => {
+            w.u8(SEG_INNER);
+            w.usz(s.d_h);
+            w.u8(s.bits);
+            w.u8(mode_tag(s.mode));
+            w.bytes(&s.codes);
+            w.params(&s.params);
+            w.f32s(&s.scales);
+            w.f32s(&s.zeffs);
+            w.usz(s.n_tokens);
+        }
+        KeySegment::Outer(s) => {
+            w.u8(SEG_OUTER);
+            w.usz(s.d_h);
+            w.u8(s.bits);
+            w.u8(mode_tag(s.mode));
+            w.bytes(&s.codes);
+            w.params(&s.params);
+            w.f32s(&s.scales);
+            w.f32s(&s.zeffs);
+            w.usz(s.n_chunks);
+        }
+        KeySegment::Turbo(s) => {
+            w.u8(SEG_TURBO);
+            w.usz(s.d_h);
+            w.u8(s.bits);
+            w.f32s(&s.rotation.signs);
+            write_turbo_tokens(w, &s.tokens);
+        }
+    }
+}
+
+fn read_key_segment(r: &mut Reader) -> Result<KeySegment> {
+    match r.u8()? {
+        SEG_FP => Ok(KeySegment::Fp(FpSegment { d_h: r.usz()?, rows: r.f32s()? })),
+        SEG_INNER => Ok(KeySegment::Inner(InnerKeySegment {
+            d_h: r.usz()?,
+            bits: r.u8()?,
+            mode: mode_from(r.u8()?)?,
+            codes: r.bytes()?,
+            params: r.params()?,
+            scales: r.f32s()?,
+            zeffs: r.f32s()?,
+            n_tokens: r.usz()?,
+        })),
+        SEG_OUTER => Ok(KeySegment::Outer(OuterKeySegment {
+            d_h: r.usz()?,
+            bits: r.u8()?,
+            mode: mode_from(r.u8()?)?,
+            codes: r.bytes()?,
+            params: r.params()?,
+            scales: r.f32s()?,
+            zeffs: r.f32s()?,
+            n_chunks: r.usz()?,
+        })),
+        SEG_TURBO => Ok(KeySegment::Turbo(TurboKeySegment {
+            d_h: r.usz()?,
+            bits: r.u8()?,
+            rotation: Rotation { signs: r.f32s()? },
+            tokens: read_turbo_tokens(r)?,
+        })),
+        t => Err(anyhow!("bad key segment tag {t}")),
+    }
+}
+
+fn write_val_segment(w: &mut Writer, seg: &ValSegment) {
+    match seg {
+        ValSegment::Fp(s) => {
+            w.u8(SEG_FP);
+            w.usz(s.d_h);
+            w.f32s(&s.rows);
+        }
+        ValSegment::Inner(s) => {
+            w.u8(SEG_INNER);
+            w.usz(s.d_h);
+            w.u8(s.bits);
+            w.u8(mode_tag(s.mode));
+            w.bytes(&s.codes);
+            w.params(&s.params);
+            w.f32s(&s.scales);
+            w.f32s(&s.zeffs);
+            w.usz(s.n_chunks);
+        }
+        ValSegment::Outer(s) => {
+            w.u8(SEG_OUTER);
+            w.usz(s.d_h);
+            w.u8(s.bits);
+            w.u8(mode_tag(s.mode));
+            w.bytes(&s.codes);
+            w.params(&s.params);
+            w.f32s(&s.scales);
+            w.f32s(&s.zeffs);
+            w.usz(s.n_tokens);
+        }
+        ValSegment::Turbo(s) => {
+            w.u8(SEG_TURBO);
+            w.usz(s.d_h);
+            w.u8(s.bits);
+            w.f32s(&s.rotation.signs);
+            write_turbo_tokens(w, &s.tokens);
+        }
+    }
+}
+
+fn read_val_segment(r: &mut Reader) -> Result<ValSegment> {
+    match r.u8()? {
+        SEG_FP => Ok(ValSegment::Fp(FpSegment { d_h: r.usz()?, rows: r.f32s()? })),
+        SEG_INNER => Ok(ValSegment::Inner(InnerValSegment {
+            d_h: r.usz()?,
+            bits: r.u8()?,
+            mode: mode_from(r.u8()?)?,
+            codes: r.bytes()?,
+            params: r.params()?,
+            scales: r.f32s()?,
+            zeffs: r.f32s()?,
+            n_chunks: r.usz()?,
+        })),
+        SEG_OUTER => Ok(ValSegment::Outer(OuterValSegment {
+            d_h: r.usz()?,
+            bits: r.u8()?,
+            mode: mode_from(r.u8()?)?,
+            codes: r.bytes()?,
+            params: r.params()?,
+            scales: r.f32s()?,
+            zeffs: r.f32s()?,
+            n_tokens: r.usz()?,
+        })),
+        SEG_TURBO => Ok(ValSegment::Turbo(TurboValSegment {
+            d_h: r.usz()?,
+            bits: r.u8()?,
+            rotation: Rotation { signs: r.f32s()? },
+            tokens: read_turbo_tokens(r)?,
+        })),
+        t => Err(anyhow!("bad val segment tag {t}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// head cache / sequence
+// ---------------------------------------------------------------------------
+
+fn write_head_body(w: &mut Writer, hc: &HeadCache) {
+    write_cfg(w, &hc.cfg);
+    w.usz(hc.d_h);
+    write_sink(w, &hc.sink_k);
+    write_sink(w, &hc.sink_v);
+    write_recent(w, &hc.recent_k);
+    write_recent(w, &hc.recent_v);
+    write_key_segment(w, &hc.qk);
+    write_val_segment(w, &hc.qv);
+    w.f32s(&hc.norm.scale);
+    w.f32s(&hc.norm.inv_scale);
+    w.usz(hc.n_tokens);
+}
+
+fn read_head_body(r: &mut Reader) -> Result<HeadCache> {
+    let cfg = read_cfg(r)?;
+    let d_h = r.usz()?;
+    let sink_k = read_sink(r)?;
+    let sink_v = read_sink(r)?;
+    let recent_k = read_recent(r)?;
+    let recent_v = read_recent(r)?;
+    let qk = read_key_segment(r)?;
+    let qv = read_val_segment(r)?;
+    let scale = r.f32s()?;
+    let inv_scale = r.f32s()?;
+    let n_tokens = r.usz()?;
+    Ok(HeadCache {
+        cfg,
+        d_h,
+        sink_k,
+        sink_v,
+        recent_k,
+        recent_v,
+        qk,
+        qv,
+        norm: ChannelNorm { scale, inv_scale },
+        n_tokens,
+    })
+}
+
+/// Serialize one [`HeadCache`] into a self-contained byte image.
+pub fn snapshot_head(hc: &HeadCache) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_HEAD);
+    w.u8(VERSION);
+    write_head_body(&mut w, hc);
+    w.buf
+}
+
+/// Reconstruct a [`HeadCache`] from [`snapshot_head`] bytes. The result is
+/// bit-identical to the snapshotted cache (`==` under the derived
+/// `PartialEq`), so decoding on it matches the never-offloaded path exactly.
+pub fn restore_head(bytes: &[u8]) -> Result<HeadCache> {
+    let mut r = Reader::new(bytes);
+    if r.u32()? != MAGIC_HEAD {
+        return Err(anyhow!("not a head-cache snapshot (bad magic)"));
+    }
+    let v = r.u8()?;
+    if v != VERSION {
+        return Err(anyhow!("unsupported head snapshot version {v}"));
+    }
+    let hc = read_head_body(&mut r)?;
+    r.done()?;
+    Ok(hc)
+}
+
+/// Serialize a whole live [`Sequence`] — token history, prefill boundary,
+/// last-step logits, and every per-(layer, head) cache — into one byte
+/// image. This is what offload preemption parks in the warm tier.
+pub fn snapshot_sequence(seq: &Sequence) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_SEQ);
+    w.u8(VERSION);
+    w.u64(seq.id);
+    w.i32s(&seq.tokens);
+    w.usz(seq.n_prefill);
+    w.f32s(&seq.last_logits);
+    w.usz(seq.caches.len());
+    for layer in &seq.caches {
+        w.usz(layer.len());
+        for hc in layer {
+            write_head_body(&mut w, hc);
+        }
+    }
+    w.buf
+}
+
+/// Reconstruct a [`Sequence`] from [`snapshot_sequence`] bytes. The restored
+/// sequence resumes decoding exactly where the snapshot left off.
+pub fn restore_sequence(bytes: &[u8]) -> Result<Sequence> {
+    let mut r = Reader::new(bytes);
+    if r.u32()? != MAGIC_SEQ {
+        return Err(anyhow!("not a sequence snapshot (bad magic)"));
+    }
+    let v = r.u8()?;
+    if v != VERSION {
+        return Err(anyhow!("unsupported sequence snapshot version {v}"));
+    }
+    let id = r.u64()?;
+    let tokens = r.i32s()?;
+    let n_prefill = r.usz()?;
+    let last_logits = r.f32s()?;
+    let n_layers = r.count(1)?;
+    let mut caches = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let n_heads = r.count(1)?;
+        let mut layer = Vec::with_capacity(n_heads);
+        for _ in 0..n_heads {
+            layer.push(read_head_body(&mut r)?);
+        }
+        caches.push(layer);
+    }
+    r.done()?;
+    Ok(Sequence { id, tokens, caches, n_prefill, last_logits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest::normal_vec;
+    use crate::util::rng::Rng;
+
+    fn build(m: QuantMethod, n: usize, seed: u64) -> HeadCache {
+        let d_h = 64;
+        let mut rng = Rng::new(seed);
+        let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+        let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+        HeadCache::from_prefill(m.config(), d_h, &keys, &vals)
+    }
+
+    #[test]
+    fn head_round_trip_is_bit_exact_for_every_method() {
+        for m in QuantMethod::ALL {
+            let hc = build(m, 300, 11);
+            let bytes = snapshot_head(&hc);
+            let back = restore_head(&bytes).expect("restore");
+            assert_eq!(back, hc, "{m:?} snapshot round trip diverged");
+            assert_eq!(snapshot_head(&back), bytes, "{m:?} re-serialization diverged");
+        }
+    }
+
+    #[test]
+    fn restored_cache_keeps_decoding_identically() {
+        let d_h = 64;
+        let mut rng = Rng::new(17);
+        let mut hc = build(QuantMethod::InnerQBase, 250, 17);
+        let bytes = snapshot_head(&hc);
+        let mut back = restore_head(&bytes).expect("restore");
+        // Append past a value-eviction boundary on both and attend.
+        for _ in 0..40 {
+            let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            let v = normal_vec(&mut rng, d_h, 1.0, 0.0);
+            hc.append(&k, &v);
+            back.append(&k, &v);
+        }
+        assert_eq!(back, hc);
+        let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+        let (mut o1, mut o2) = (vec![0f32; d_h], vec![0f32; d_h]);
+        let mut scratch = Vec::new();
+        hc.attend(&q, &mut o1, &mut scratch);
+        back.attend(&q, &mut o2, &mut scratch);
+        let b1: Vec<u32> = o1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = o2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2, "restore-then-attend must be bit-identical");
+    }
+
+    #[test]
+    fn corrupt_or_foreign_bytes_are_rejected() {
+        let hc = build(QuantMethod::InnerQBase, 150, 5);
+        let bytes = snapshot_head(&hc);
+        assert!(restore_head(&bytes[..bytes.len() - 3]).is_err(), "truncation");
+        assert!(restore_head(&[0u8; 16]).is_err(), "bad magic");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(restore_head(&extra).is_err(), "trailing bytes");
+        assert!(restore_sequence(&bytes).is_err(), "head bytes are not a sequence");
+    }
+}

@@ -1,0 +1,383 @@
+//! Segcache-style warm tier for offloaded cache snapshots.
+//!
+//! Modeled on pelikan's segcache storage shape: the tier owns a bounded pool
+//! of fixed-size segments, hands them out from a free list, and returns them
+//! to the free list when a resident leaves — so long-running serving reuses
+//! the same allocations instead of fragmenting the heap with
+//! snapshot-sized `Vec`s. A resident (one preempted sequence's serialized
+//! snapshot, see [`super::snapshot`]) spans however many pooled segments its
+//! payload needs; the final segment is partially filled and the resident
+//! remembers its exact byte length.
+//!
+//! Eviction is LRU-with-priority: when an insert needs segments the pool
+//! cannot supply, the tier evicts the least-important (highest priority
+//! class value), least-recently-touched resident — but never one *more*
+//! important than the inserting class, in which case the insert itself is
+//! refused and the caller falls back to recompute-style preemption. Eviction
+//! is terminal: the snapshot is gone, and the scheduler discovers that as a
+//! miss at restore time (its recompute fallback). All bookkeeping is
+//! deterministic (`BTreeMap` iteration, an internal logical clock), so
+//! replays that route through the tier stay byte-identical.
+
+use std::collections::BTreeMap;
+
+/// Default pooled segment size. Snapshots of typical preempted sequences run
+/// tens of KiB, so 16 KiB keeps per-resident waste (< one segment) small
+/// while still amortizing allocation.
+pub const DEFAULT_SEG_BYTES: usize = 16 * 1024;
+
+/// Monotonic warm-tier counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Snapshots stored successfully.
+    pub inserts: u64,
+    /// Inserts refused (payload over budget, or only more-important
+    /// residents were in the way).
+    pub insert_rejected: u64,
+    /// Successful takes (restores).
+    pub hits: u64,
+    /// Takes of ids not resident (never stored, or evicted).
+    pub misses: u64,
+    /// Residents evicted to make room for an insert (terminal).
+    pub evictions: u64,
+    /// Payload bytes destroyed by those evictions.
+    pub evicted_bytes: u64,
+}
+
+#[derive(Debug)]
+struct Resident {
+    /// Pool segment indices holding the payload, in order.
+    segs: Vec<u32>,
+    /// Exact payload length (the last segment is partially filled).
+    len: usize,
+    /// Priority class level of the owning request (0 = most important).
+    class: u8,
+    /// Last-touched stamp from the tier's logical clock (LRU order).
+    stamp: u64,
+}
+
+/// Fixed-segment warm store for offloaded sequence snapshots.
+#[derive(Debug)]
+pub struct WarmTier {
+    seg_bytes: usize,
+    max_segs: usize,
+    /// Allocated pool segments; grows on demand up to `max_segs` and is
+    /// never shrunk — retired segments go to `free` for reuse.
+    segments: Vec<Box<[u8]>>,
+    free: Vec<u32>,
+    residents: BTreeMap<u64, Resident>,
+    clock: u64,
+    /// Hit/miss/eviction counters.
+    pub stats: TierStats,
+}
+
+impl WarmTier {
+    /// A tier holding at most `budget_bytes` of pooled segments of
+    /// `seg_bytes` each (clamped to a 256-byte minimum). A budget smaller
+    /// than one segment yields a zero-capacity tier that refuses every
+    /// insert — the scheduler then behaves exactly like recompute mode.
+    pub fn new(budget_bytes: usize, seg_bytes: usize) -> WarmTier {
+        let seg_bytes = seg_bytes.max(256);
+        WarmTier {
+            seg_bytes,
+            max_segs: budget_bytes / seg_bytes,
+            segments: Vec::new(),
+            free: Vec::new(),
+            residents: BTreeMap::new(),
+            clock: 0,
+            stats: TierStats::default(),
+        }
+    }
+
+    /// Pooled segment size in bytes.
+    pub fn seg_bytes(&self) -> usize {
+        self.seg_bytes
+    }
+
+    /// Total pool capacity in bytes (`max_segs * seg_bytes`).
+    pub fn budget_bytes(&self) -> usize {
+        self.max_segs * self.seg_bytes
+    }
+
+    /// Number of snapshots currently resident.
+    pub fn n_residents(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// True if `id` has a resident snapshot.
+    pub fn contains(&self, id: u64) -> bool {
+        self.residents.contains_key(&id)
+    }
+
+    /// Resident ids in ascending order.
+    pub fn resident_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.residents.keys().copied()
+    }
+
+    /// Exact payload bytes resident (excludes final-segment slack).
+    pub fn resident_bytes(&self) -> usize {
+        self.residents.values().map(|r| r.len).sum()
+    }
+
+    /// Pool bytes held by residents, counting final-segment slack.
+    pub fn reserved_bytes(&self) -> usize {
+        (self.segments.len() - self.free.len()) * self.seg_bytes
+    }
+
+    fn segs_for(&self, len: usize) -> usize {
+        ((len + self.seg_bytes - 1) / self.seg_bytes).max(1)
+    }
+
+    fn available_segs(&self) -> usize {
+        self.free.len() + (self.max_segs - self.segments.len())
+    }
+
+    /// Store `payload` for request `id` at priority-class level `class`
+    /// (0 = most important). Replaces any previous resident for `id`.
+    /// Returns false — leaving the tier unchanged apart from counters, any
+    /// previous resident for `id` included — when the payload exceeds the
+    /// whole pool or eviction cannot free enough room without destroying a
+    /// more-important resident.
+    pub fn insert(&mut self, id: u64, class: u8, payload: &[u8]) -> bool {
+        let need = self.segs_for(payload.len());
+        // Feasibility before any mutation: the segments a replacement would
+        // free plus everything evictable at this class must cover the need,
+        // otherwise refuse with the tier untouched.
+        let replaced_segs = self.residents.get(&id).map_or(0, |r| r.segs.len());
+        let evictable_segs: usize = self
+            .residents
+            .iter()
+            .filter(|(&rid, r)| rid != id && r.class >= class)
+            .map(|(_, r)| r.segs.len())
+            .sum();
+        if need > self.max_segs
+            || self.available_segs() + replaced_segs + evictable_segs < need
+        {
+            self.stats.insert_rejected += 1;
+            return false;
+        }
+        self.remove(id);
+        while self.available_segs() < need {
+            // Least-important class first, then least recently touched; the
+            // id tiebreak keeps the choice total (and so deterministic). The
+            // feasibility check above guarantees a victim exists.
+            let victim = self
+                .residents
+                .iter()
+                .filter(|(_, r)| r.class >= class)
+                .max_by_key(|(&vid, r)| (r.class, std::cmp::Reverse(r.stamp), std::cmp::Reverse(vid)))
+                .map(|(&vid, _)| vid);
+            match victim {
+                Some(vid) => self.evict(vid),
+                None => {
+                    debug_assert!(false, "insert feasibility check admitted an unfillable need");
+                    self.stats.insert_rejected += 1;
+                    return false;
+                }
+            }
+        }
+        let mut segs = Vec::with_capacity(need);
+        for chunk in 0..need {
+            let si = match self.free.pop() {
+                Some(si) => si,
+                None => {
+                    let si = self.segments.len() as u32;
+                    self.segments.push(vec![0u8; self.seg_bytes].into_boxed_slice());
+                    si
+                }
+            };
+            let lo = chunk * self.seg_bytes;
+            let hi = (lo + self.seg_bytes).min(payload.len());
+            self.segments[si as usize][..hi - lo].copy_from_slice(&payload[lo..hi]);
+            segs.push(si);
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        self.residents.insert(id, Resident { segs, len: payload.len(), class, stamp });
+        self.stats.inserts += 1;
+        true
+    }
+
+    fn evict(&mut self, id: u64) {
+        if let Some(r) = self.residents.remove(&id) {
+            self.stats.evictions += 1;
+            self.stats.evicted_bytes += r.len as u64;
+            self.free.extend(r.segs);
+        }
+    }
+
+    /// Drop a resident without reading it (deadline expiry, request
+    /// cancellation). Not counted as an eviction. Returns whether `id` was
+    /// resident.
+    pub fn remove(&mut self, id: u64) -> bool {
+        match self.residents.remove(&id) {
+            Some(r) => {
+                self.free.extend(r.segs);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn assemble(&self, r: &Resident) -> Vec<u8> {
+        let mut out = Vec::with_capacity(r.len);
+        let mut left = r.len;
+        for &si in &r.segs {
+            let take = left.min(self.seg_bytes);
+            out.extend_from_slice(&self.segments[si as usize][..take]);
+            left -= take;
+        }
+        debug_assert_eq!(left, 0);
+        out
+    }
+
+    /// Cheap pre-check for [`WarmTier::insert`]: false when the tier has no
+    /// capacity at all, or every pooled segment is held by strictly
+    /// more-important residents — an insert at `class` cannot possibly
+    /// succeed, so callers can skip building the payload (the scheduler
+    /// checks this before serializing a preemption victim).
+    pub fn may_accept(&self, class: u8) -> bool {
+        if self.max_segs == 0 {
+            return false;
+        }
+        self.available_segs() > 0 || self.residents.values().any(|r| r.class >= class)
+    }
+
+    /// Read a resident's payload and remove it, returning its segments to
+    /// the free list — the restore path.
+    pub fn take(&mut self, id: u64) -> Option<Vec<u8>> {
+        match self.residents.remove(&id) {
+            Some(r) => {
+                let out = self.assemble(&r);
+                self.free.extend(r.segs);
+                self.stats.hits += 1;
+                Some(out)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(len: usize, fill: u8) -> Vec<u8> {
+        (0..len).map(|i| fill.wrapping_add(i as u8)).collect()
+    }
+
+    fn tier(n_segs: usize) -> WarmTier {
+        WarmTier::new(n_segs * 1024, 1024)
+    }
+
+    #[test]
+    fn insert_take_round_trip_across_segment_boundaries() {
+        let mut t = tier(8);
+        for len in [0usize, 1, 1023, 1024, 1025, 3 * 1024 + 17] {
+            let p = payload(len, 7);
+            assert!(t.insert(42, 1, &p), "len {len}");
+            assert!(t.contains(42));
+            assert_eq!(t.take(42), Some(p), "len {len}");
+            assert!(!t.contains(42));
+        }
+        assert_eq!(t.stats.hits, 6);
+        assert_eq!(t.stats.misses, 0);
+    }
+
+    #[test]
+    fn free_list_reuses_segments_instead_of_growing() {
+        let mut t = tier(4);
+        for round in 0..10 {
+            let p = payload(3 * 1024, round);
+            assert!(t.insert(round as u64, 1, &p));
+            assert_eq!(t.take(round as u64), Some(p));
+        }
+        assert!(t.segments.len() <= 4, "pool grew past its budget: {}", t.segments.len());
+        assert_eq!(t.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_within_a_class() {
+        let mut t = tier(4); // 4 segments of 1 KiB
+        assert!(t.insert(1, 1, &payload(2 * 1024, 1))); // 2 segs
+        assert!(t.insert(2, 1, &payload(2 * 1024, 2))); // 2 segs, pool full
+        // Re-inserting 1 (replacement) refreshes its recency stamp.
+        assert!(t.insert(1, 1, &payload(2 * 1024, 1)));
+        assert!(t.insert(3, 1, &payload(1024, 3))); // must evict LRU = 2
+        assert!(t.contains(1) && !t.contains(2) && t.contains(3));
+        assert_eq!(t.stats.evictions, 1);
+        assert_eq!(t.stats.evicted_bytes, 2 * 1024);
+        assert_eq!(t.take(2), None);
+        assert_eq!(t.stats.misses, 1);
+    }
+
+    #[test]
+    fn may_accept_screens_doomed_inserts() {
+        assert!(!WarmTier::new(0, 1024).may_accept(0));
+        let mut t = tier(2);
+        assert!(t.may_accept(2), "empty tier accepts any class");
+        assert!(t.insert(1, 0, &payload(2 * 1024, 1))); // interactive fills it
+        assert!(!t.may_accept(2), "batch cannot displace interactive");
+        assert!(t.may_accept(0), "equal class can displace via LRU");
+        t.remove(1);
+        assert!(t.may_accept(2));
+    }
+
+    #[test]
+    fn lower_importance_residents_evict_first() {
+        let mut t = tier(4);
+        assert!(t.insert(10, 0, &payload(2 * 1024, 1))); // interactive
+        assert!(t.insert(20, 2, &payload(2 * 1024, 2))); // batch
+        // A standard-class insert evicts the batch resident, not interactive.
+        assert!(t.insert(30, 1, &payload(2 * 1024, 3)));
+        assert!(t.contains(10) && !t.contains(20) && t.contains(30));
+    }
+
+    #[test]
+    fn insert_never_destroys_more_important_residents() {
+        let mut t = tier(2);
+        assert!(t.insert(1, 0, &payload(2 * 1024, 1))); // fills the pool
+        // A batch-class snapshot cannot displace interactive state.
+        assert!(!t.insert(2, 2, &payload(1024, 2)));
+        assert!(t.contains(1) && !t.contains(2));
+        assert_eq!(t.stats.insert_rejected, 1);
+        assert_eq!(t.stats.evictions, 0);
+    }
+
+    #[test]
+    fn oversized_and_zero_budget_inserts_are_refused() {
+        let mut t = tier(2);
+        assert!(!t.insert(1, 0, &payload(3 * 1024, 1)));
+        let mut none = WarmTier::new(0, 1024);
+        assert!(!none.insert(1, 0, &payload(1, 1)));
+        assert_eq!(none.budget_bytes(), 0);
+    }
+
+    #[test]
+    fn failed_replacement_keeps_the_old_resident() {
+        let mut t = tier(2);
+        assert!(t.insert(7, 1, &payload(1024, 3)));
+        // Replacement too big for the whole pool: refused, original intact.
+        assert!(!t.insert(7, 1, &payload(3 * 1024, 4)));
+        assert_eq!(t.take(7), Some(payload(1024, 3)));
+        // Replacement blocked by a more-important resident: same guarantee.
+        let mut t = tier(2);
+        assert!(t.insert(1, 0, &payload(1024, 1))); // interactive, 1 seg
+        assert!(t.insert(7, 2, &payload(1024, 2))); // batch, 1 seg — pool full
+        assert!(!t.insert(7, 2, &payload(2 * 1024, 9)), "would need to evict id 1");
+        assert_eq!(t.take(7), Some(payload(1024, 2)), "old snapshot must survive");
+    }
+
+    #[test]
+    fn replacing_an_id_keeps_one_resident() {
+        let mut t = tier(4);
+        assert!(t.insert(5, 1, &payload(1024, 1)));
+        assert!(t.insert(5, 1, &payload(2048, 9)));
+        assert_eq!(t.n_residents(), 1);
+        assert_eq!(t.take(5), Some(payload(2048, 9)));
+        assert_eq!(t.reserved_bytes(), 0);
+    }
+}

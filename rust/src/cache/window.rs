@@ -12,7 +12,9 @@ pub struct SinkWindow {
     pub d_h: usize,
     /// Token-major f32 rows (oldest first).
     pub rows: Vec<f32>,
-    capacity: usize,
+    // Crate-visible so `cache::store::snapshot` can round-trip the window
+    // field-for-field (derived `PartialEq` compares capacity too).
+    pub(crate) capacity: usize,
 }
 
 impl SinkWindow {
@@ -48,9 +50,12 @@ impl SinkWindow {
 pub struct RecentWindow {
     /// Head dimension.
     pub d_h: usize,
-    data: Vec<f32>,
+    // Crate-visible (not pub) so `cache::store::snapshot` can serialize the
+    // buffer verbatim — including the dead prefix before `start`, which the
+    // derived `PartialEq` compares — without exposing the ring internals.
+    pub(crate) data: Vec<f32>,
     /// Index (in rows) of the logical front.
-    start: usize,
+    pub(crate) start: usize,
 }
 
 impl RecentWindow {

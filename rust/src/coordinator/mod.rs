@@ -10,4 +10,4 @@ pub mod scheduler;
 
 pub use engine::{Engine, Sequence};
 pub use request::{Completion, Phase, Priority, Request, SchedEvent, StepMetrics};
-pub use scheduler::{Policy, Scheduler};
+pub use scheduler::{Policy, Preemption, Scheduler};

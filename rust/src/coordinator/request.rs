@@ -179,6 +179,30 @@ pub enum SchedEvent {
         /// Request id.
         id: u64,
     },
+    /// Evicted from the decode batch under cache pressure with its full
+    /// cache snapshotted into the warm tier (offload-style: generated
+    /// tokens and quantized state survive; see `cache::store`).
+    Offloaded {
+        /// Request id.
+        id: u64,
+        /// Serialized snapshot size in bytes.
+        bytes: usize,
+    },
+    /// Readmitted from the warm tier: the snapshot was deserialized back
+    /// into a live sequence without re-running prefill.
+    Restored {
+        /// Request id.
+        id: u64,
+        /// Serialized snapshot size in bytes.
+        bytes: usize,
+    },
+    /// Readmission found the snapshot gone (evicted from the warm tier —
+    /// terminal for the snapshot); the request falls back to
+    /// recompute-style readmission and re-prefills.
+    OffloadLost {
+        /// Request id.
+        id: u64,
+    },
     /// Failed terminally before completing (rejected, unencodable,
     /// over-budget, or prefill failure).
     Rejected {
@@ -208,6 +232,9 @@ impl SchedEvent {
             SchedEvent::Submitted { id }
             | SchedEvent::Admitted { id, .. }
             | SchedEvent::Preempted { id }
+            | SchedEvent::Offloaded { id, .. }
+            | SchedEvent::Restored { id, .. }
+            | SchedEvent::OffloadLost { id }
             | SchedEvent::Rejected { id }
             | SchedEvent::Expired { id, .. }
             | SchedEvent::Finished { id, .. } => id,
@@ -237,4 +264,20 @@ pub struct StepMetrics {
     pub rejected: u64,
     /// Requests failed terminally because their deadline passed.
     pub expired: u64,
+    /// Preemption victims whose cache was snapshotted into the warm tier
+    /// instead of being discarded (a subset of `preemptions`).
+    pub offloads: u64,
+    /// Serialized snapshot bytes written to the warm tier.
+    pub offload_bytes: u64,
+    /// Offloaded sequences readmitted by deserializing their snapshot
+    /// (no re-prefill).
+    pub restores: u64,
+    /// Serialized snapshot bytes read back from the warm tier.
+    pub restore_bytes: u64,
+    /// Readmissions that found their snapshot evicted from the warm tier
+    /// and fell back to a recompute-style re-prefill.
+    pub offload_lost: u64,
+    /// Smaller lower-priority requests admitted past a parked queue head
+    /// under the SLO policy's bounded bypass.
+    pub bypass_admissions: u64,
 }

@@ -22,20 +22,46 @@
 //!   by (priority class, deadline, submission time); under pressure, preempt
 //!   live work of a *strictly lower* priority class (least important,
 //!   youngest first). Priority inversion cannot occur: a class never
-//!   preempts itself or anything more important.
+//!   preempts itself or anything more important. When the most urgent
+//!   candidate parks, a *bounded* number of strictly-smaller, strictly
+//!   lower-class requests may bypass it ([`Scheduler::set_bypass_limit`]),
+//!   so spare budget is not wasted but the head cannot starve.
 //!
 //! Both policies admit greedily — as many prefills per tick as the cache
 //! budget allows — so a burst or ramp of arrivals does not serialize
-//! admission one request per tick. Requests carrying a deadline are failed
-//! terminally (reservation released) once the virtual clock passes it.
+//! admission one request per tick, and both preempt only when evicting the
+//! policy's eligible victims can actually fit the candidate (a preemption
+//! that would leave the candidate parked anyway destroys work for
+//! nothing). Requests carrying a deadline are failed terminally
+//! (reservation released) once the virtual clock passes it.
+//!
+//! ## Preemption modes
+//!
+//! What happens to a preemption victim is orthogonal to who gets picked:
+//!
+//! * [`Preemption::Recompute`] (default) — the victim's cache is dropped
+//!   and its generated tokens discarded; it re-queues and will re-prefill
+//!   from scratch (vLLM-style recompute preemption).
+//! * [`Preemption::Offload`] — the victim's full sequence (token history,
+//!   last logits, every quantized `HeadCache`) is serialized bit-exactly
+//!   (`cache::store::snapshot`) into the segcache-style warm tier
+//!   ([`Scheduler::tier`]) and the victim keeps a warm-tier residency
+//!   instead of a cache-pool reservation. Readmission *restores* the
+//!   snapshot — cheap deserialization, no re-prefill — and resumes decoding
+//!   bit-identically to a never-offloaded run. If the tier refuses the
+//!   snapshot (budget, or only more-important residents in the way) the
+//!   victim falls back to recompute; if its snapshot is evicted while warm
+//!   (terminal "dropped" state), readmission falls back to a re-prefill and
+//!   emits [`SchedEvent::OffloadLost`].
 
+use crate::cache::store::{snapshot_sequence, restore_sequence, WarmTier, DEFAULT_SEG_BYTES};
 use crate::cache::{Admission, CachePool};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::{Engine, Sequence};
-use crate::coordinator::request::{Completion, Request, SchedEvent, StepMetrics};
+use crate::coordinator::request::{Completion, Priority, Request, SchedEvent, StepMetrics};
 use crate::util::rng::Rng;
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 /// Admission/preemption policy. See the module docs for the exact rules.
@@ -55,6 +81,37 @@ impl Policy {
             "fifo" => Some(Policy::Fifo),
             "slo" => Some(Policy::Slo),
             _ => None,
+        }
+    }
+}
+
+/// What happens to a preemption victim's cache (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Preemption {
+    /// Drop the cache and discard generated tokens; re-prefill on
+    /// readmission.
+    #[default]
+    Recompute,
+    /// Snapshot the full sequence into the warm tier; restore (no
+    /// re-prefill) on readmission.
+    Offload,
+}
+
+impl Preemption {
+    /// Parse a preemption mode from its CLI name (`recompute` / `offload`).
+    pub fn parse(s: &str) -> Option<Preemption> {
+        match s {
+            "recompute" => Some(Preemption::Recompute),
+            "offload" => Some(Preemption::Offload),
+            _ => None,
+        }
+    }
+
+    /// Stable CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Preemption::Recompute => "recompute",
+            Preemption::Offload => "offload",
         }
     }
 }
@@ -88,6 +145,30 @@ impl Live {
     }
 }
 
+/// An offload-preempted request: its decode progress stays here (small) and
+/// its serialized cache lives in the warm tier keyed by `req.id` (bulky).
+struct Warm {
+    req: Request,
+    submitted_us: u64,
+    generated: Vec<i32>,
+    next_token: i32,
+    ttft_us: Option<u64>,
+}
+
+impl Warm {
+    fn deadline_abs(&self) -> Option<u64> {
+        self.req.deadline_us.map(|d| self.submitted_us.saturating_add(d))
+    }
+}
+
+/// An admission candidate: a fresh (or recompute-preempted) queue entry, or
+/// an offloaded sequence awaiting restoration from the warm tier.
+#[derive(Debug, Clone, Copy)]
+enum Candidate {
+    Queued(usize),
+    Warm(usize),
+}
+
 /// Outcome of one admission attempt (see [`Scheduler::admit`]).
 enum AdmitStep {
     /// The candidate reached a terminal or live state, or pressure was
@@ -98,7 +179,7 @@ enum AdmitStep {
 }
 
 /// The serving scheduler: one instance owns the engine, the cache pool, the
-/// admission queue, and the live decode batch. Drive it with
+/// warm tier, the admission queue, and the live decode batch. Drive it with
 /// [`Scheduler::tick`] (one admission + decode round) or
 /// [`Scheduler::run_to_completion`].
 pub struct Scheduler {
@@ -106,8 +187,12 @@ pub struct Scheduler {
     pub engine: Engine,
     /// Cross-sequence cache byte accounting and admission control.
     pub pool: CachePool,
+    /// Warm tier holding offload-preempted sequence snapshots
+    /// ([`Preemption::Offload`]); unused under recompute preemption.
+    pub tier: WarmTier,
     queue: VecDeque<Queued>,
     live: Vec<Live>,
+    warm: Vec<Warm>,
     /// Terminal states accumulated since the last drain.
     pub done: Vec<Completion>,
     /// Monotonic counters across all ticks.
@@ -116,15 +201,32 @@ pub struct Scheduler {
     /// via [`Scheduler::record_events`].
     pub events: Vec<SchedEvent>,
     policy: Policy,
+    preemption: Preemption,
+    /// Bypass admissions granted past each parked head, keyed by head id so
+    /// an interleaved more-urgent head cannot reset another head's count.
+    /// Entries are pruned when the head leaves the pending pools.
+    bypass_used: BTreeMap<u64, u32>,
+    bypass_limit: u32,
     record: bool,
     now_us: u64,
     stop_token: i32,
     rng: Rng,
 }
 
+/// How much larger the default warm-tier budget is than the cache budget:
+/// snapshots live in host memory, which is roughly an order of magnitude
+/// more plentiful than the device-side cache budget they were evicted from.
+const DEFAULT_WARM_FACTOR: usize = 8;
+
+/// Default cap on how many smaller lower-class requests may bypass one
+/// parked head over that head's lifetime (SLO policy only).
+const DEFAULT_BYPASS_LIMIT: u32 = 4;
+
 impl Scheduler {
     /// A FIFO scheduler over `engine` with a cache budget of
-    /// `cache_budget_bytes` across all live sequences.
+    /// `cache_budget_bytes` across all live sequences. The warm tier
+    /// defaults to `8x` that budget (host-side memory; see
+    /// [`Scheduler::set_warm_budget`]).
     pub fn new(engine: Engine, cache_budget_bytes: usize) -> Scheduler {
         // '.' ends a document in the corpus grammar.
         let stop_token = engine
@@ -137,12 +239,20 @@ impl Scheduler {
         Scheduler {
             engine,
             pool: CachePool::new(cache_budget_bytes),
+            tier: WarmTier::new(
+                cache_budget_bytes.saturating_mul(DEFAULT_WARM_FACTOR),
+                DEFAULT_SEG_BYTES,
+            ),
             queue: VecDeque::new(),
             live: Vec::new(),
+            warm: Vec::new(),
             done: Vec::new(),
             metrics: StepMetrics::default(),
             events: Vec::new(),
             policy: Policy::Fifo,
+            preemption: Preemption::Recompute,
+            bypass_used: BTreeMap::new(),
+            bypass_limit: DEFAULT_BYPASS_LIMIT,
             record: false,
             now_us: 0,
             stop_token,
@@ -163,6 +273,32 @@ impl Scheduler {
     /// The active admission/preemption policy.
     pub fn policy(&self) -> Policy {
         self.policy
+    }
+
+    /// Switch the preemption mode (default [`Preemption::Recompute`]).
+    pub fn set_preemption(&mut self, mode: Preemption) {
+        self.preemption = mode;
+    }
+
+    /// The active preemption mode.
+    pub fn preemption(&self) -> Preemption {
+        self.preemption
+    }
+
+    /// Replace the warm tier with one of `budget_bytes` capacity. Call
+    /// before serving: any resident snapshots are discarded (their owners
+    /// fall back to re-prefill via the offload-lost path).
+    pub fn set_warm_budget(&mut self, budget_bytes: usize) {
+        self.tier = WarmTier::new(budget_bytes, DEFAULT_SEG_BYTES);
+    }
+
+    /// Cap on SLO small-request bypass admissions per parked head (0
+    /// disables bypass; default 4). The count is tracked per head id and
+    /// persists until the head itself is admitted or fails, so no request
+    /// can be bypassed more than this many times while it waits — the
+    /// starvation bound.
+    pub fn set_bypass_limit(&mut self, limit: u32) {
+        self.bypass_limit = limit;
     }
 
     /// Enable or disable [`SchedEvent`] recording into
@@ -215,9 +351,9 @@ impl Scheduler {
         self.queue.push_back(Queued { req, submitted_us });
     }
 
-    /// Requests not yet in a terminal state (queued + live).
+    /// Requests not yet in a terminal state (queued + live + offloaded).
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.live.len()
+        self.queue.len() + self.live.len() + self.warm.len()
     }
 
     /// Estimated steady-state cache bytes for a prompt plus its generation
@@ -246,9 +382,10 @@ impl Scheduler {
         (fp + codes + params) * d.n_kv_heads * d.n_layers
     }
 
-    /// Fail every queued or live request whose absolute deadline has passed.
-    /// Live casualties release their cache reservation, so an expired
-    /// stragglers' budget immediately becomes admissible headroom.
+    /// Fail every queued, live, or offloaded request whose absolute deadline
+    /// has passed. Live casualties release their cache reservation and warm
+    /// casualties their tier residency, so an expired straggler's budget
+    /// immediately becomes admissible headroom.
     fn expire_deadlines(&mut self) {
         let now = self.now_us;
         let mut expired: Vec<(Request, bool)> = Vec::new();
@@ -271,28 +408,77 @@ impl Scheduler {
                 j += 1;
             }
         }
+        let mut k = 0;
+        while k < self.warm.len() {
+            if self.warm[k].deadline_abs().map_or(false, |d| d <= now) {
+                let w = self.warm.remove(k);
+                self.tier.remove(w.req.id);
+                expired.push((w.req, false));
+            } else {
+                k += 1;
+            }
+        }
         for (req, queued) in expired {
+            self.bypass_used.remove(&req.id);
             self.metrics.expired += 1;
             self.event(SchedEvent::Expired { id: req.id, queued });
             self.done.push(Completion::failed(&req, "deadline exceeded"));
         }
     }
 
-    /// Index of the next admission candidate, or None when the queue is
-    /// empty. FIFO: the head. SLO: most urgent by (priority class, absolute
-    /// deadline, first-submission time, id).
-    fn next_candidate(&self) -> Option<usize> {
-        match self.policy {
-            Policy::Fifo => (!self.queue.is_empty()).then_some(0),
-            Policy::Slo => (0..self.queue.len()).min_by_key(|&i| {
+    fn candidate_req(&self, c: Candidate) -> &Request {
+        match c {
+            Candidate::Queued(i) => &self.queue[i].req,
+            Candidate::Warm(i) => &self.warm[i].req,
+        }
+    }
+
+    /// SLO urgency key: (priority class, absolute deadline, first-submission
+    /// time, id) — lower is more urgent.
+    fn candidate_key(&self, c: Candidate) -> (Priority, u64, u64, u64) {
+        match c {
+            Candidate::Queued(i) => {
                 let q = &self.queue[i];
-                (
-                    q.req.priority,
-                    q.deadline_abs().unwrap_or(u64::MAX),
-                    q.submitted_us,
-                    q.req.id,
-                )
-            }),
+                (q.req.priority, q.deadline_abs().unwrap_or(u64::MAX), q.submitted_us, q.req.id)
+            }
+            Candidate::Warm(i) => {
+                let w = &self.warm[i];
+                (w.req.priority, w.deadline_abs().unwrap_or(u64::MAX), w.submitted_us, w.req.id)
+            }
+        }
+    }
+
+    /// The next admission candidate, or None when both the queue and the
+    /// warm list are empty. FIFO: the oldest (lowest id) of the queue head
+    /// and the oldest warm entry — offloaded work predates the arrivals that
+    /// displaced it, so it readmits first. SLO: most urgent across both
+    /// pools by (priority class, absolute deadline, first-submission time,
+    /// id).
+    fn next_candidate(&self) -> Option<Candidate> {
+        match self.policy {
+            Policy::Fifo => {
+                let q = (!self.queue.is_empty()).then_some(Candidate::Queued(0));
+                let w = self
+                    .warm
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, w)| w.req.id)
+                    .map(|(i, _)| Candidate::Warm(i));
+                match (q, w) {
+                    (Some(Candidate::Queued(qi)), Some(Candidate::Warm(wi))) => {
+                        if self.warm[wi].req.id < self.queue[qi].req.id {
+                            Some(Candidate::Warm(wi))
+                        } else {
+                            Some(Candidate::Queued(qi))
+                        }
+                    }
+                    (q, w) => q.or(w),
+                }
+            }
+            Policy::Slo => (0..self.queue.len())
+                .map(Candidate::Queued)
+                .chain((0..self.warm.len()).map(Candidate::Warm))
+                .min_by_key(|&c| self.candidate_key(c)),
         }
     }
 
@@ -310,6 +496,23 @@ impl Scheduler {
         }
         self.metrics.stale_reservations += stale.len() as u64;
         stale.len()
+    }
+
+    /// Bytes the policy could free for `candidate` by preempting *every*
+    /// eligible victim (their current reservations). Preemption is only
+    /// worth its cost when `free + preemptible >= estimate` — otherwise the
+    /// candidate would still park afterwards and the victims' progress
+    /// (or snapshots) would have been destroyed for nothing.
+    fn preemptible_bytes(&self, candidate: &Request) -> usize {
+        let eligible = |l: &Live| match self.policy {
+            Policy::Fifo => l.req.id > candidate.id,
+            Policy::Slo => l.req.priority > candidate.priority,
+        };
+        self.live
+            .iter()
+            .filter(|l| eligible(l))
+            .filter_map(|l| self.pool.reserved(l.req.id))
+            .sum()
     }
 
     /// Pick a preemption victim for `candidate` under the active policy, or
@@ -335,52 +538,121 @@ impl Scheduler {
         }
     }
 
-    /// One admission attempt for the queue entry at `cidx`.
-    fn try_admit(&mut self, cidx: usize) -> Result<AdmitStep> {
-        let est = self.estimate_bytes(&self.queue[cidx].req);
-        let id = self.queue[cidx].req.id;
+    /// Evict the live sequence at `vidx` under the active preemption mode:
+    /// offload snapshots it into the warm tier (falling back to recompute if
+    /// the tier refuses); recompute discards its cache and re-queues it.
+    fn preempt_victim(&mut self, vidx: usize) {
+        let l = self.live.swap_remove(vidx);
+        self.pool.release(l.req.id);
+        self.metrics.preemptions += 1;
+        if self.preemption == Preemption::Offload && self.tier.may_accept(l.req.priority.level()) {
+            let payload = snapshot_sequence(&l.seq);
+            let bytes = payload.len();
+            if self.tier.insert(l.req.id, l.req.priority.level(), &payload) {
+                self.metrics.offloads += 1;
+                self.metrics.offload_bytes += bytes as u64;
+                self.event(SchedEvent::Offloaded { id: l.req.id, bytes });
+                self.warm.push(Warm {
+                    req: l.req,
+                    submitted_us: l.submitted_us,
+                    generated: l.generated,
+                    next_token: l.next_token,
+                    ttft_us: l.ttft_us,
+                });
+                return;
+            }
+            // The tier could not hold the snapshot (over its budget, or only
+            // more-important residents in the way): recompute-style fallback.
+        }
+        self.event(SchedEvent::Preempted { id: l.req.id });
+        self.queue.push_back(Queued { req: l.req, submitted_us: l.submitted_us });
+    }
+
+    /// Pull a candidate out of its pending pool, releasing any warm-tier
+    /// residency and its bypass-count entry. Used when the candidate moves
+    /// to live or to a terminal state.
+    fn remove_candidate(&mut self, c: Candidate) -> Request {
+        let req = match c {
+            Candidate::Queued(i) => self.queue.remove(i).unwrap().req,
+            Candidate::Warm(i) => {
+                let w = self.warm.remove(i);
+                self.tier.remove(w.req.id);
+                w.req
+            }
+        };
+        self.bypass_used.remove(&req.id);
+        req
+    }
+
+    /// Reject `c` terminally with `reason`.
+    fn reject_candidate(&mut self, c: Candidate, reason: &str) {
+        let req = self.remove_candidate(c);
+        self.metrics.rejected += 1;
+        self.event(SchedEvent::Rejected { id: req.id });
+        self.done.push(Completion::failed(&req, reason));
+    }
+
+    /// One admission attempt for `c`. The caller has picked `c` as the most
+    /// urgent candidate; this resolves it against the cache pool.
+    fn try_admit(&mut self, c: Candidate) -> Result<AdmitStep> {
+        let (id, est) = {
+            let r = self.candidate_req(c);
+            (r.id, self.estimate_bytes(r))
+        };
         match self.pool.admit(id, est) {
             Admission::Admitted => {
-                let q = self.queue.remove(cidx).unwrap();
-                self.prefill_into_live(q);
+                match c {
+                    Candidate::Queued(i) => {
+                        let q = self.queue.remove(i).unwrap();
+                        self.bypass_used.remove(&q.req.id);
+                        self.prefill_into_live(q);
+                    }
+                    Candidate::Warm(i) => {
+                        let w = self.warm.remove(i);
+                        self.bypass_used.remove(&w.req.id);
+                        self.restore_into_live(w);
+                    }
+                }
+                Ok(AdmitStep::Progress)
+            }
+            Admission::AlreadyReserved => {
+                if self.live.iter().any(|l| l.req.id == id) {
+                    // A caller submitted a duplicate of a live sequence's id.
+                    // Releasing here would destroy the live reservation, so
+                    // reject the duplicate instead.
+                    self.reject_candidate(c, "duplicate of a live request id");
+                } else {
+                    // No live owner: the reservation is stale. Drop it and
+                    // retry the candidate.
+                    self.pool.release(id);
+                    self.metrics.stale_reservations += 1;
+                }
                 Ok(AdmitStep::Progress)
             }
             Admission::TooLarge => {
-                let q = self.queue.remove(cidx).unwrap();
-                self.metrics.rejected += 1;
-                self.event(SchedEvent::Rejected { id: q.req.id });
-                self.done.push(Completion::failed(
-                    &q.req,
-                    "request exceeds the cache budget outright",
-                ));
+                self.reject_candidate(c, "request exceeds the cache budget outright");
                 Ok(AdmitStep::Progress)
             }
             Admission::Pressure => {
                 if self.release_stale_reservations() > 0 {
                     return Ok(AdmitStep::Progress);
                 }
-                if let Some(vidx) = self.pick_victim(&self.queue[cidx].req) {
-                    // Recompute-style preemption: the victim's cache is
-                    // dropped, its generated tokens are discarded, and it
-                    // goes back to the queue (keeping its original
-                    // submission time, so its deadline keeps counting).
-                    let l = self.live.swap_remove(vidx);
-                    self.pool.release(l.req.id);
-                    self.metrics.preemptions += 1;
-                    self.event(SchedEvent::Preempted { id: l.req.id });
-                    self.queue.push_back(Queued { req: l.req, submitted_us: l.submitted_us });
+                // Preempt only when evicting eligible victims can actually
+                // fit the candidate; a preemption that still leaves it
+                // parked would destroy the victims' work for nothing (and
+                // would evict bypass guests pointlessly the tick after they
+                // were admitted).
+                let would_fit =
+                    self.pool.free_bytes() + self.preemptible_bytes(self.candidate_req(c)) >= est;
+                let victim = would_fit.then(|| self.pick_victim(self.candidate_req(c))).flatten();
+                if let Some(vidx) = victim {
+                    self.preempt_victim(vidx);
                     return Ok(AdmitStep::Progress);
                 }
                 if self.live.is_empty() {
                     // Nothing to wait for and nothing to evict: the estimate
                     // cannot be satisfied — reject instead of spinning.
-                    let q = self.queue.remove(cidx).unwrap();
-                    self.metrics.rejected += 1;
-                    self.event(SchedEvent::Rejected { id: q.req.id });
-                    self.done.push(Completion::failed(
-                        &q.req,
-                        "cache pressure with nothing to preempt",
-                    ));
+                    self.reject_candidate(c, "cache pressure with nothing to preempt");
                     return Ok(AdmitStep::Progress);
                 }
                 Ok(AdmitStep::Parked)
@@ -428,16 +700,113 @@ impl Scheduler {
         });
     }
 
+    /// Readmit an offloaded request: deserialize its snapshot from the warm
+    /// tier back into a live sequence (no re-prefill, decode progress
+    /// preserved). A missing snapshot — evicted from the tier since the
+    /// preemption — falls back to a recompute-style re-prefill with the
+    /// generated tokens discarded. The caller has already reserved cache
+    /// budget under `w.req.id`.
+    fn restore_into_live(&mut self, w: Warm) {
+        match self.tier.take(w.req.id) {
+            Some(payload) => match restore_sequence(&payload) {
+                Ok(seq) => {
+                    self.metrics.restores += 1;
+                    self.metrics.restore_bytes += payload.len() as u64;
+                    self.event(SchedEvent::Restored { id: w.req.id, bytes: payload.len() });
+                    self.live.push(Live {
+                        req: w.req,
+                        submitted_us: w.submitted_us,
+                        seq,
+                        generated: w.generated,
+                        next_token: w.next_token,
+                        ttft_us: w.ttft_us,
+                    });
+                }
+                Err(e) => {
+                    // A snapshot that fails to deserialize is a bug, not a
+                    // capacity condition; fail the request, keep serving.
+                    self.pool.release(w.req.id);
+                    self.metrics.rejected += 1;
+                    self.event(SchedEvent::Rejected { id: w.req.id });
+                    self.done
+                        .push(Completion::failed(&w.req, format!("snapshot restore failed: {e}")));
+                }
+            },
+            None => {
+                // Dropped from the warm tier (terminal for the snapshot):
+                // recompute-style readmission under the reservation we hold.
+                self.metrics.offload_lost += 1;
+                self.event(SchedEvent::OffloadLost { id: w.req.id });
+                self.prefill_into_live(Queued { req: w.req, submitted_us: w.submitted_us });
+            }
+        }
+    }
+
+    /// SLO small-request bypass: when the most urgent candidate parks under
+    /// pressure, admit one strictly-smaller request of a *strictly lower*
+    /// priority class that fits the free budget as-is (no preemption), at
+    /// most [`Scheduler::set_bypass_limit`] times per head — so spare budget
+    /// is used without letting a stream of small requests starve the head.
+    /// Returns whether a bypass admission happened.
+    fn try_bypass(&mut self, head_id: u64, head_est: usize, head_pri: Priority) -> bool {
+        if self.policy != Policy::Slo || self.bypass_limit == 0 {
+            return false;
+        }
+        let used = self.bypass_used.get(&head_id).copied().unwrap_or(0);
+        if used >= self.bypass_limit {
+            return false;
+        }
+        let free = self.pool.free_bytes();
+        let mut best: Option<(usize, usize, u64)> = None; // (queue idx, est, id)
+        for i in 0..self.queue.len() {
+            let q = &self.queue[i];
+            if q.req.id == head_id || q.req.priority <= head_pri {
+                continue;
+            }
+            let est = self.estimate_bytes(&q.req);
+            if est >= head_est || est > free {
+                continue;
+            }
+            if best.map_or(true, |(_, be, bi)| (est, q.req.id) < (be, bi)) {
+                best = Some((i, est, q.req.id));
+            }
+        }
+        let Some((i, est, id)) = best else { return false };
+        match self.pool.admit(id, est) {
+            Admission::Admitted => {
+                let q = self.queue.remove(i).unwrap();
+                self.metrics.bypass_admissions += 1;
+                self.bypass_used.insert(head_id, used + 1);
+                self.prefill_into_live(q);
+                true
+            }
+            // est <= free makes anything else unreachable; refuse rather
+            // than loop if accounting ever drifts.
+            _ => false,
+        }
+    }
+
     /// Admit greedily: keep admitting the policy's next candidate until the
-    /// queue drains or a candidate parks under pressure. Every iteration
-    /// either retires a queue entry (admitted / rejected) or strictly
-    /// shrinks pool state (stale release, preemption), so this terminates.
+    /// pools drain or a candidate parks under pressure (after which the SLO
+    /// policy may still slip a bounded number of smaller lower-class
+    /// requests past the parked head). Every iteration either retires a
+    /// candidate (admitted / restored / rejected) or strictly shrinks pool
+    /// state (stale release, preemption), so this terminates.
     fn admit(&mut self) -> Result<()> {
         loop {
-            let Some(cidx) = self.next_candidate() else { return Ok(()) };
-            match self.try_admit(cidx)? {
+            let Some(c) = self.next_candidate() else { return Ok(()) };
+            let (head_id, head_est, head_pri) = {
+                let r = self.candidate_req(c);
+                (r.id, self.estimate_bytes(r), r.priority)
+            };
+            match self.try_admit(c)? {
                 AdmitStep::Progress => continue,
-                AdmitStep::Parked => return Ok(()),
+                AdmitStep::Parked => {
+                    if self.try_bypass(head_id, head_est, head_pri) {
+                        continue;
+                    }
+                    return Ok(());
+                }
             }
         }
     }
@@ -446,7 +815,7 @@ impl Scheduler {
     /// cache budget allows, then one decode step over the live batch.
     /// Returns false when idle.
     pub fn tick(&mut self) -> Result<bool> {
-        if self.queue.is_empty() && self.live.is_empty() {
+        if self.queue.is_empty() && self.live.is_empty() && self.warm.is_empty() {
             return Ok(false);
         }
         self.expire_deadlines();
@@ -490,7 +859,8 @@ impl Scheduler {
                 if !is_stop {
                     l.generated.push(l.next_token);
                 }
-                self.pool.update(l.req.id, l.seq.cache_bytes());
+                let resized = self.pool.resize(l.req.id, l.seq.cache_bytes());
+                debug_assert!(resized, "live sequence {} lost its pool reservation", l.req.id);
                 let done = is_stop || l.generated.len() >= l.req.max_new_tokens;
                 if done {
                     finished.push(i);
@@ -597,5 +967,14 @@ mod tests {
         assert_eq!(Policy::parse("slo"), Some(Policy::Slo));
         assert_eq!(Policy::parse("edf"), None);
         assert_eq!(Policy::default(), Policy::Fifo);
+    }
+
+    #[test]
+    fn preemption_parses_cli_names() {
+        assert_eq!(Preemption::parse("recompute"), Some(Preemption::Recompute));
+        assert_eq!(Preemption::parse("offload"), Some(Preemption::Offload));
+        assert_eq!(Preemption::parse("swap"), None);
+        assert_eq!(Preemption::default(), Preemption::Recompute);
+        assert_eq!(Preemption::Offload.name(), "offload");
     }
 }

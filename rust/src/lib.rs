@@ -31,7 +31,6 @@ pub mod coordinator;
 pub mod eval;
 #[allow(missing_docs)]
 pub mod exp;
-#[allow(missing_docs)]
 pub mod quant;
 #[allow(missing_docs)]
 pub mod runtime;

@@ -3,9 +3,11 @@
 //! ```text
 //! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
 //!                    [--budget BYTES] [--policy fifo|slo]
+//!                    [--preemption recompute|offload] [--warm-budget BYTES]
 //! innerq generate    --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
 //! innerq serve-trace [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
 //!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
+//!                    [--preemption recompute|offload] [--warm-budget BYTES]
 //!                    [--method M] [--interactive FRAC] [--deadline-ms D]
 //!                    [--json PATH] [--fake]
 //! innerq exp         table1|table2|table3|table7|fig5|msparsity|simulate|all
@@ -14,6 +16,11 @@
 //!
 //! `--workers N` sizes the decode-attention worker pool (default 1 = the
 //! serial baseline; the driver thread counts as one worker).
+//!
+//! `--preemption offload` parks preemption victims' quantized caches in the
+//! segcache-style warm tier (`cache::store`) and restores them on
+//! readmission instead of re-prefilling (default: recompute, which discards
+//! them); `--warm-budget` sizes that tier (default 8x the cache budget).
 //!
 //! `serve-trace` replays a timed synthetic trace through the scheduler on a
 //! virtual clock and prints p50/p90/p99 TTFT and end-to-end latency — the
@@ -24,7 +31,7 @@
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
 
 use anyhow::{anyhow, Result};
-use innerq::coordinator::{Policy, Request, Scheduler};
+use innerq::coordinator::{Policy, Preemption, Request, Scheduler};
 use innerq::runtime::Manifest;
 use innerq::workload::replay::{replay, CostModel};
 use innerq::workload::trace::{generate_timed, Arrival, TimedTraceConfig};
@@ -91,6 +98,23 @@ fn policy(args: &Args) -> Result<Policy> {
     Policy::parse(&name).ok_or_else(|| anyhow!("unknown policy '{name}'; one of: fifo, slo"))
 }
 
+fn preemption(args: &Args) -> Result<Preemption> {
+    let name = args.get("preemption", "recompute");
+    Preemption::parse(&name)
+        .ok_or_else(|| anyhow!("unknown preemption mode '{name}'; one of: recompute, offload"))
+}
+
+/// Apply the shared scheduling flags (`--policy`, `--preemption`,
+/// `--warm-budget`) to a freshly built scheduler.
+fn configure_sched(sched: &mut Scheduler, args: &Args) -> Result<()> {
+    sched.set_policy(policy(args)?);
+    sched.set_preemption(preemption(args)?);
+    if args.has("warm-budget") {
+        sched.set_warm_budget(args.get("warm-budget", "0").parse()?);
+    }
+    Ok(())
+}
+
 /// Build the replay scheduler for `serve-trace`: real artifacts when
 /// available, the synthetic fake model under `--fake` or as a fallback.
 fn trace_scheduler(args: &Args, budget: usize, workers: usize) -> Result<Scheduler> {
@@ -119,7 +143,7 @@ fn trace_scheduler(args: &Args, budget: usize, workers: usize) -> Result<Schedul
     let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
     engine.set_workers(workers);
     let mut sched = Scheduler::new(engine, budget);
-    sched.set_policy(policy(args)?);
+    configure_sched(&mut sched, args)?;
     Ok(sched)
 }
 
@@ -135,12 +159,13 @@ fn main() -> Result<()> {
             let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
             engine.set_workers(workers);
             let mut sched = Scheduler::new(engine, budget);
-            sched.set_policy(policy(&args)?);
+            configure_sched(&mut sched, &args)?;
             let addr = args.get("addr", "127.0.0.1:7071");
             eprintln!(
-                "[serve] method={} addr={addr} workers={workers} policy={:?}",
+                "[serve] method={} addr={addr} workers={workers} policy={:?} preemption={}",
                 m.name(),
-                sched.policy()
+                sched.policy(),
+                sched.preemption().name()
             );
             innerq::server::serve(
                 sched,
@@ -197,9 +222,10 @@ fn main() -> Result<()> {
             let mut sched = trace_scheduler(&args, budget, workers)?;
             eprintln!(
                 "[serve-trace] arrival={} rate={rate} requests={n_requests} budget={budget} \
-                 policy={:?} workers={workers} seed={seed}",
+                 policy={:?} preemption={} workers={workers} seed={seed}",
                 arrival.name(),
-                sched.policy()
+                sched.policy(),
+                sched.preemption().name()
             );
             let report = replay(&mut sched, &trace, &CostModel::default())?;
             println!("== serve-trace report ==");
@@ -256,9 +282,11 @@ fn main() -> Result<()> {
                 "usage: innerq <serve|generate|serve-trace|exp|info> [flags]\n\
                  \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
                  \n              --budget BYTES --policy fifo|slo\
+                 \n              --preemption recompute|offload --warm-budget BYTES\
                  \n  generate    --prompt S --method M --max-new N --workers N\
                  \n  serve-trace --arrival poisson|bursty|ramp|batch --rate R --requests N\
                  \n              --seed S --budget BYTES --policy fifo|slo --workers N\
+                 \n              --preemption recompute|offload --warm-budget BYTES\
                  \n              --interactive FRAC --deadline-ms D --json PATH --fake\
                  \n  exp         table1|table2|table3|table7|fig5|msparsity|simulate|all\
                  \n  info        --artifacts DIR\n\

@@ -11,13 +11,18 @@ use super::{MethodConfig, QuantMethod};
 /// Bit-width breakdown for one cache (key or value).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CacheBits {
+    /// Bits per number spent on the integer codes themselves.
     pub integer: f64,
+    /// Amortized per-number bits of the f16 group scales.
     pub scale_overhead: f64,
+    /// Amortized per-number bits of the f16 zero-points (0 if absent).
     pub zero_overhead: f64,
+    /// Amortized per-number bits of TurboQuant's f32 per-token norms.
     pub norm_overhead: f64,
 }
 
 impl CacheBits {
+    /// Effective bits per number: codes plus all amortized overheads.
     pub fn total(&self) -> f64 {
         self.integer + self.scale_overhead + self.zero_overhead + self.norm_overhead
     }
@@ -26,8 +31,11 @@ impl CacheBits {
 /// Full Table-3 row for a method.
 #[derive(Debug, Clone, Copy)]
 pub struct BitWidthRow {
+    /// The method this row describes.
     pub method: QuantMethod,
+    /// Key-cache breakdown.
     pub key: CacheBits,
+    /// Value-cache breakdown.
     pub val: CacheBits,
 }
 

@@ -12,13 +12,16 @@ use crate::util::fp16::{f16_bits_to_f32, f16_round, f32_to_f16_bits};
 /// Per-group quantization mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
+    /// Symmetric around zero: one scale per group, no zero-point (Eq. 13).
     Sym,
+    /// Asymmetric min/max range: scale plus zero-point (Eq. 10–12).
     Asym,
     /// Choose Sym or Asym per group by reconstruction error (§4.1.2).
     Hybrid,
 }
 
 impl Mode {
+    /// Parse a mode from its CLI name (`sym` / `asym` / `hybrid`).
     pub fn parse(s: &str) -> Option<Mode> {
         match s {
             "sym" => Some(Mode::Sym),
@@ -35,7 +38,9 @@ impl Mode {
 /// §4.1.2 / Table 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct GroupParams {
+    /// f16 bit pattern of the positive scale; sign bit is the asym flag M.
     pub scale: u16,
+    /// f16 bit pattern of the zero-point (0 for symmetric groups).
     pub zero: u16,
 }
 
@@ -50,6 +55,7 @@ impl GroupParams {
     pub fn scale_f32(self) -> f32 {
         f16_bits_to_f32(self.scale & 0x7fff)
     }
+    /// Zero-point as f32 (0.0 for symmetric groups).
     #[inline(always)]
     pub fn zero_f32(self) -> f32 {
         f16_bits_to_f32(self.zero)

@@ -19,23 +19,33 @@ pub use group::{GroupParams, Mode};
 /// per-channel groups for K, per-token groups for V).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Grouping {
+    /// Groups along the GEMV reduction axis (InnerQ).
     Inner,
+    /// Groups along the GEMV output axis (KIVI).
     Outer,
 }
 
 /// The methods evaluated in the paper (Tables 1–7).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum QuantMethod {
+    /// Unquantized FP16-storage baseline.
     BaselineFp16,
+    /// KIVI: 2-bit asymmetric, outer grouping, no sink window.
     Kivi,
+    /// KIVI plus the 32-token attention-sink window.
     KiviSink,
+    /// TurboQuant: random rotation + Lloyd–Max codebooks (4-bit K / 3-bit V).
     TurboQuant,
+    /// InnerQ: 3-bit symmetric, inner grouping, key norm (§4.4).
     InnerQBase,
+    /// InnerQ with 2-bit hybrid-mode values (§4.1.2).
     InnerQHybrid,
+    /// InnerQ with 2-bit symmetric values (smallest footprint).
     InnerQSmall,
 }
 
 impl QuantMethod {
+    /// Every method, in the paper's table order.
     pub const ALL: [QuantMethod; 7] = [
         QuantMethod::BaselineFp16,
         QuantMethod::Kivi,
@@ -46,6 +56,7 @@ impl QuantMethod {
         QuantMethod::InnerQSmall,
     ];
 
+    /// Stable CLI/report name of the method.
     pub fn name(self) -> &'static str {
         match self {
             QuantMethod::BaselineFp16 => "baseline_fp16",
@@ -58,6 +69,7 @@ impl QuantMethod {
         }
     }
 
+    /// Parse a method from its [`QuantMethod::name`].
     pub fn parse(s: &str) -> Option<QuantMethod> {
         QuantMethod::ALL.iter().copied().find(|m| m.name() == s)
     }
@@ -134,17 +146,25 @@ impl QuantMethod {
 /// (Table 7, Fig. 5) construct modified copies directly.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MethodConfig {
+    /// The named method this configuration was derived from.
     pub method: QuantMethod,
+    /// Quantization group size G (the paper evaluates G=32 throughout).
     pub group_size: usize,
     /// First `w_sink` tokens kept in high precision (attention sinks, §4.2).
     pub w_sink: usize,
     /// Most recent `w_recent` tokens kept in high precision.
     pub w_recent: usize,
+    /// Key-cache bit-width per code.
     pub key_bits: u8,
+    /// Value-cache bit-width per code.
     pub val_bits: u8,
+    /// Key group quantization mode (symmetric / asymmetric / hybrid).
     pub key_mode: Mode,
+    /// Value group quantization mode.
     pub val_mode: Mode,
+    /// Which axis key groups run along (see [`Grouping`]).
     pub key_grouping: Grouping,
+    /// Which axis value groups run along.
     pub val_grouping: Grouping,
     /// Per-channel normalization of K (§4.3) — InnerQ variants only.
     pub key_norm: bool,
@@ -153,6 +173,7 @@ pub struct MethodConfig {
 }
 
 impl MethodConfig {
+    /// False only for the FP16 baseline (no quantized segments at all).
     pub fn is_quantized(&self) -> bool {
         self.method != QuantMethod::BaselineFp16
     }
@@ -160,6 +181,7 @@ impl MethodConfig {
     pub fn key_has_zeros(&self) -> bool {
         !self.turbo && matches!(self.key_mode, Mode::Asym | Mode::Hybrid)
     }
+    /// Whether the stored value segment carries zero-points.
     pub fn val_has_zeros(&self) -> bool {
         !self.turbo && matches!(self.val_mode, Mode::Asym | Mode::Hybrid)
     }

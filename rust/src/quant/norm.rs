@@ -11,8 +11,10 @@
 /// Per-channel normalization vector for one KV head.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChannelNorm {
-    pub scale: Vec<f32>,     // norm_k, applied to q
-    pub inv_scale: Vec<f32>, // 1/norm_k, applied to k
+    /// `norm_k`, multiplied into the query on the score side.
+    pub scale: Vec<f32>,
+    /// `1/norm_k`, multiplied into keys as they enter the cache.
+    pub inv_scale: Vec<f32>,
 }
 
 impl ChannelNorm {

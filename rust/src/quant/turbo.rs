@@ -25,6 +25,7 @@ pub const GAUSS_CODEBOOK_4B: [f32; 16] = [
     0.1284, 0.3880, 0.6568, 0.9423, 1.2562, 1.6181, 2.0690, 2.7326,
 ];
 
+/// The Lloyd–Max codebook for `bits` ∈ {3, 4}; panics otherwise.
 pub fn codebook(bits: u8) -> &'static [f32] {
     match bits {
         3 => &GAUSS_CODEBOOK_3B,
@@ -64,6 +65,8 @@ pub struct Rotation {
 }
 
 impl Rotation {
+    /// Derive the ±1 diagonal for head dimension `d_h` (a power of two)
+    /// deterministically from `seed`.
     pub fn new(d_h: usize, seed: u64) -> Rotation {
         assert!(d_h.is_power_of_two());
         let mut rng = crate::util::rng::Rng::new(seed);
@@ -86,8 +89,10 @@ impl Rotation {
 /// per-token norm (the "channel norm" budget line in Table 3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TurboToken {
-    pub codes: Vec<u8>, // packed `bits`-bit codebook indices, d_h of them
-    pub norm: f32,      // per-token scale: rotated coords / norm ~ N(0,1)
+    /// Packed `bits`-bit codebook indices, `d_h` of them.
+    pub codes: Vec<u8>,
+    /// Per-token scale: rotated coordinates / norm ≈ N(0,1).
+    pub norm: f32,
 }
 
 /// Quantize one already-rotated vector.

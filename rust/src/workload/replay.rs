@@ -38,6 +38,17 @@ pub struct CostModel {
     pub decode_step_us: u64,
     /// Marginal decode cost per batched sequence (attention + sampling).
     pub decode_us_per_seq: u64,
+    /// Offload-preemption cost per KiB of snapshot serialized into the warm
+    /// tier. Hand-calibrated to ~1 GB/s of serialize-plus-copy (host memcpy
+    /// runs far faster, the byte-level encoder dominates); like the other
+    /// coefficients it awaits wall-clock calibration on real hardware. This
+    /// is the term that lets the harness answer offload-vs-recompute: a
+    /// restore pays `restore_us_per_kib x snapshot-KiB` while a recompute
+    /// pays `prefill_us_per_token x prompt-tokens` again — so harder
+    /// compression (smaller snapshots) tilts the trade toward offload.
+    pub offload_us_per_kib: u64,
+    /// Restore cost per KiB of snapshot deserialized from the warm tier.
+    pub restore_us_per_kib: u64,
 }
 
 impl Default for CostModel {
@@ -47,17 +58,28 @@ impl Default for CostModel {
             prefill_us_per_token: 10,
             decode_step_us: 100,
             decode_us_per_seq: 50,
+            offload_us_per_kib: 1,
+            restore_us_per_kib: 1,
         }
     }
 }
 
 impl CostModel {
     /// Virtual microseconds consumed by a tick with the given deltas.
-    fn tick_cost(&self, d_prefill_tokens: u64, d_decode_steps: u64, d_batched: u64) -> u64 {
+    fn tick_cost(
+        &self,
+        d_prefill_tokens: u64,
+        d_decode_steps: u64,
+        d_batched: u64,
+        d_offload_bytes: u64,
+        d_restore_bytes: u64,
+    ) -> u64 {
         self.tick_overhead_us
             + d_prefill_tokens * self.prefill_us_per_token
             + d_decode_steps * self.decode_step_us
             + d_batched * self.decode_us_per_seq
+            + d_offload_bytes * self.offload_us_per_kib / 1024
+            + d_restore_bytes * self.restore_us_per_kib / 1024
     }
 }
 
@@ -102,8 +124,13 @@ pub struct RequestRecord {
     pub finished_us: Option<u64>,
     /// Generated tokens (0 unless [`Outcome::Ok`]).
     pub n_generated: usize,
-    /// Times the request was preempted back to the queue.
+    /// Times the request was preempted out of the decode batch (recompute
+    /// re-queues and offload snapshots both count).
     pub preemptions: u32,
+    /// Preemptions whose cache was snapshotted into the warm tier.
+    pub offloads: u32,
+    /// Readmissions served by deserializing the snapshot (no re-prefill).
+    pub restores: u32,
     /// Terminal outcome (`None` only mid-replay).
     pub outcome: Option<Outcome>,
 }
@@ -256,6 +283,8 @@ impl ReplayReport {
                     ),
                     ("n_generated", Json::Num(r.n_generated as f64)),
                     ("preemptions", Json::Num(r.preemptions as f64)),
+                    ("offloads", Json::Num(r.offloads as f64)),
+                    ("restores", Json::Num(r.restores as f64)),
                     (
                         "outcome",
                         r.outcome.map_or(Json::Null, |o| Json::str(o.name())),
@@ -274,6 +303,12 @@ impl ReplayReport {
             ("rejected", Json::Num(self.count(Outcome::Rejected) as f64)),
             ("expired", Json::Num(self.count(Outcome::Expired) as f64)),
             ("preemptions", Json::Num(self.metrics.preemptions as f64)),
+            ("offloads", Json::Num(self.metrics.offloads as f64)),
+            ("offload_bytes", Json::Num(self.metrics.offload_bytes as f64)),
+            ("restores", Json::Num(self.metrics.restores as f64)),
+            ("restore_bytes", Json::Num(self.metrics.restore_bytes as f64)),
+            ("offload_lost", Json::Num(self.metrics.offload_lost as f64)),
+            ("bypass_admissions", Json::Num(self.metrics.bypass_admissions as f64)),
             ("ticks", Json::Num(self.ticks as f64)),
             ("virtual_us", Json::Num(self.end_us as f64)),
             ("throughput_rps", Json::Num(self.throughput_rps())),
@@ -289,12 +324,16 @@ impl ReplayReport {
     pub fn print_summary(&self) {
         let ms = |us: u64| us as f64 / 1e3;
         println!(
-            "requests {:>5}   completed {}   rejected {}   expired {}   preemptions {}",
+            "requests {:>5}   completed {}   rejected {}   expired {}   preemptions {} \
+             (offloaded {} / restored {} / lost {})",
             self.records.len(),
             self.count(Outcome::Ok),
             self.count(Outcome::Rejected),
             self.count(Outcome::Expired),
             self.metrics.preemptions,
+            self.metrics.offloads,
+            self.metrics.restores,
+            self.metrics.offload_lost,
         );
         println!(
             "virtual time {:.1} ms over {} ticks   throughput {:.1} req/s   {:.0} gen tok/s",
@@ -350,6 +389,8 @@ pub fn replay(
             finished_us: None,
             n_generated: 0,
             preemptions: 0,
+            offloads: 0,
+            restores: 0,
             outcome: None,
         })
         .collect();
@@ -377,6 +418,8 @@ pub fn replay(
                 m.prefill_tokens - prev.prefill_tokens,
                 m.decode_steps - prev.decode_steps,
                 m.batched_seqs - prev.batched_seqs,
+                m.offload_bytes - prev.offload_bytes,
+                m.restore_bytes - prev.restore_bytes,
             );
             prev = m;
             now = now.saturating_add(dt.max(1));
@@ -392,6 +435,13 @@ pub fn replay(
                     }
                 }
                 SchedEvent::Preempted { .. } => r.preemptions += 1,
+                SchedEvent::Offloaded { .. } => {
+                    r.preemptions += 1;
+                    r.offloads += 1;
+                }
+                SchedEvent::Restored { .. } => r.restores += 1,
+                // The fallback re-prefill shows up as a second Admitted.
+                SchedEvent::OffloadLost { .. } => {}
                 SchedEvent::Rejected { .. } => {
                     r.outcome = Some(Outcome::Rejected);
                     r.finished_us = Some(now);

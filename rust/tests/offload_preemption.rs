@@ -1,0 +1,266 @@
+//! Tiered-store and offload-preemption tests: the snapshot bit-identity
+//! matrix over every quantized segment variant, and the scheduler's
+//! offload/restore life-cycle over the fake-model artifacts (preempt →
+//! warm-tier residency → restore → identical completion; tier loss →
+//! recompute fallback; warm deadline expiry; replay byte-identity across
+//! worker counts with offloads in the stream).
+
+use innerq::cache::store::{restore_head, snapshot_head};
+use innerq::cache::HeadCache;
+use innerq::coordinator::{Engine, Policy, Preemption, Priority, Request, SchedEvent, Scheduler};
+use innerq::quant::group::Mode;
+use innerq::quant::Grouping;
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::ptest::normal_vec;
+use innerq::util::rng::Rng;
+use innerq::workload::replay::{replay, CostModel, ReplayReport};
+use innerq::workload::trace::{generate_timed, Arrival, TimedTraceConfig};
+use innerq::QuantMethod;
+
+// ---------------------------------------------------------------------------
+// snapshot round-trip matrix
+// ---------------------------------------------------------------------------
+
+/// bits x sym/asym/hybrid x inner/outer grouping x tail lengths: the
+/// restored cache must equal the original exactly (the `PartialEq` from the
+/// PR-2 determinism work compares codes, params, planar planes, windows, and
+/// norms), re-serialize to the identical bytes, and keep decoding
+/// bit-identically to a cache that was never snapshotted.
+#[test]
+fn snapshot_matrix_round_trips_every_quantized_variant() {
+    let d_h = 64;
+    // w_sink + w_recent = 128 for the InnerQ base config: lengths below span
+    // window-only caches, the eviction boundary, and ragged quantized tails.
+    let lengths = [40usize, 128, 131, 160, 223];
+    let mut seed = 0x0ff1_0ad5u64;
+    for bits in [2u8, 3, 4] {
+        for mode in [Mode::Sym, Mode::Asym, Mode::Hybrid] {
+            for grouping in [Grouping::Inner, Grouping::Outer] {
+                for &n in &lengths {
+                    seed += 1;
+                    let mut cfg = QuantMethod::InnerQBase.config();
+                    cfg.key_bits = bits;
+                    cfg.val_bits = bits;
+                    cfg.key_mode = mode;
+                    cfg.val_mode = mode;
+                    cfg.key_grouping = grouping;
+                    cfg.val_grouping = grouping;
+                    // Key norm is an InnerQ (inner-grouping) feature; leave
+                    // it on there so the norm vector rides the snapshot.
+                    cfg.key_norm = grouping == Grouping::Inner;
+                    let tag = format!("bits={bits} {mode:?} {grouping:?} n={n}");
+
+                    let mut rng = Rng::new(seed);
+                    let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                    let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                    let mut hc = HeadCache::from_prefill(cfg, d_h, &keys, &vals);
+
+                    let bytes = snapshot_head(&hc);
+                    let mut back = restore_head(&bytes).expect(&tag);
+                    assert_eq!(back, hc, "{tag}: restored != original");
+                    assert_eq!(snapshot_head(&back), bytes, "{tag}: re-serialize differs");
+
+                    // Restore-then-decode must match never-offloaded decode
+                    // bit for bit: push both caches across an eviction
+                    // boundary and compare the attention outputs exactly.
+                    for _ in 0..37 {
+                        let k = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                        let v = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                        hc.append(&k, &v);
+                        back.append(&k, &v);
+                    }
+                    assert_eq!(back, hc, "{tag}: post-restore appends diverged");
+                    let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                    let (mut o1, mut o2) = (vec![0f32; d_h], vec![0f32; d_h]);
+                    let mut scratch = Vec::new();
+                    hc.attend(&q, &mut o1, &mut scratch);
+                    back.attend(&q, &mut o2, &mut scratch);
+                    let b1: Vec<u32> = o1.iter().map(|x| x.to_bits()).collect();
+                    let b2: Vec<u32> = o2.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(b1, b2, "{tag}: restore-then-decode not bit-identical");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheduler life-cycle over the fake model
+// ---------------------------------------------------------------------------
+
+fn fake_scheduler(tag: &str, budget: usize, policy: Policy, mode: Preemption) -> Scheduler {
+    let dir = write_fake_artifacts(tag, '7');
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    let mut sched = Scheduler::new(engine, budget);
+    sched.set_policy(policy);
+    sched.set_preemption(mode);
+    sched.set_warm_budget(1 << 20);
+    sched
+}
+
+fn req_class(id: u64, prompt: &str, max_new_tokens: usize, p: Priority) -> Request {
+    let mut r = Request::new(id, prompt, max_new_tokens);
+    r.priority = p;
+    r
+}
+
+/// Budget 6000 fits exactly one est-4608 sequence (7-char prompt + 2 new
+/// tokens at the fake geometry): an arriving interactive request preempts
+/// the live batch sequence; under offload the victim must take a warm-tier
+/// residency, be restored without a second prefill, and complete exactly
+/// like its recompute twin.
+#[test]
+fn offload_preemption_restores_instead_of_reprefilling() {
+    let run = |tag: &str, mode: Preemption| {
+        let mut sched = fake_scheduler(tag, 6000, Policy::Slo, mode);
+        sched.record_events(true);
+        sched.submit(req_class(1, "a=1;?a=", 2, Priority::Batch));
+        sched.tick().unwrap(); // batch live
+        sched.submit(req_class(2, "b=2;?b=", 2, Priority::Interactive));
+        let done = sched.run_to_completion().unwrap();
+        let events = sched.take_events();
+        (done, events, sched)
+    };
+
+    let (off_done, off_events, off_sched) = run("offload_basic", Preemption::Offload);
+    assert_eq!(off_done.len(), 2);
+    for c in &off_done {
+        assert_eq!(c.text, "77", "req {}: '{}'", c.id, c.text);
+        assert!(c.error.is_none());
+    }
+    assert_eq!(off_done.first().unwrap().id, 2, "interactive completes first");
+    assert_eq!(off_sched.metrics.preemptions, 1);
+    assert_eq!(off_sched.metrics.offloads, 1, "victim must be offloaded, not discarded");
+    assert_eq!(off_sched.metrics.restores, 1, "victim must be restored, not re-prefilled");
+    assert_eq!(off_sched.metrics.offload_lost, 0);
+    assert!(off_sched.metrics.offload_bytes > 0);
+    assert_eq!(
+        off_sched.metrics.offload_bytes, off_sched.metrics.restore_bytes,
+        "restore must read back exactly what offload wrote"
+    );
+    assert_eq!(off_sched.tier.n_residents(), 0, "restore must clear the residency");
+    assert_eq!(off_sched.tier.stats.hits, 1);
+
+    // The events stream shows the offload life-cycle, and the victim is
+    // admitted (prefilled) exactly once.
+    assert!(off_events
+        .iter()
+        .any(|e| matches!(e, SchedEvent::Offloaded { id: 1, bytes } if *bytes > 0)));
+    assert!(off_events
+        .iter()
+        .any(|e| matches!(e, SchedEvent::Restored { id: 1, bytes } if *bytes > 0)));
+    let admits_of_1 = off_events
+        .iter()
+        .filter(|e| matches!(e, SchedEvent::Admitted { id: 1, .. }))
+        .count();
+    assert_eq!(admits_of_1, 1, "a restored sequence must not prefill again");
+
+    // Recompute twin: same trace, same completions — offload only changes
+    // the cost of getting there.
+    let (rec_done, rec_events, rec_sched) = run("offload_vs_recompute", Preemption::Recompute);
+    assert_eq!(rec_sched.metrics.offloads, 0);
+    assert!(rec_events.iter().any(|e| matches!(e, SchedEvent::Preempted { id: 1 })));
+    let key = |d: &[innerq::coordinator::Completion]| {
+        d.iter().map(|c| (c.id, c.text.clone(), c.n_generated)).collect::<Vec<_>>()
+    };
+    assert_eq!(key(&off_done), key(&rec_done));
+}
+
+/// A snapshot evicted from the warm tier while its owner waits is terminal:
+/// readmission must fall back to a recompute-style re-prefill (offload-lost)
+/// and still complete correctly.
+#[test]
+fn evicted_snapshot_falls_back_to_recompute() {
+    let mut sched = fake_scheduler("offload_lost", 6000, Policy::Slo, Preemption::Offload);
+    sched.record_events(true);
+    sched.submit(req_class(1, "a=1;?a=", 2, Priority::Batch));
+    sched.tick().unwrap();
+    sched.submit(req_class(2, "b=2;?b=", 2, Priority::Interactive));
+    sched.tick().unwrap(); // preempts + offloads id 1
+    assert_eq!(sched.metrics.offloads, 1);
+    assert!(sched.tier.contains(1));
+    // Simulate the tier dropping the resident (what LRU eviction does when
+    // a more recent snapshot needs the segments).
+    assert!(sched.tier.remove(1));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    for c in &done {
+        assert_eq!(c.text, "77");
+        assert!(c.error.is_none());
+    }
+    assert_eq!(sched.metrics.offload_lost, 1);
+    assert_eq!(sched.metrics.restores, 0);
+    let events = sched.take_events();
+    assert!(events.iter().any(|e| matches!(e, SchedEvent::OffloadLost { id: 1 })));
+    let admits_of_1 = events
+        .iter()
+        .filter(|e| matches!(e, SchedEvent::Admitted { id: 1, .. }))
+        .count();
+    assert_eq!(admits_of_1, 2, "lost snapshot forces a second prefill");
+}
+
+/// Deadlines keep counting while a request sits in the warm tier; expiry
+/// there must be terminal and must free the tier residency.
+#[test]
+fn warm_resident_deadline_expires_and_frees_the_tier() {
+    let mut sched = fake_scheduler("offload_expire", 6000, Policy::Slo, Preemption::Offload);
+    let mut victim = req_class(1, "a=1;?a=", 2, Priority::Batch);
+    victim.deadline_us = Some(50_000);
+    sched.submit(victim);
+    sched.tick().unwrap();
+    sched.submit(req_class(2, "b=2;?b=", 2, Priority::Interactive));
+    sched.tick().unwrap(); // offloads id 1
+    assert!(sched.tier.contains(1));
+    sched.set_now(100_000);
+    let done = sched.run_to_completion().unwrap();
+    let expired = done.iter().find(|c| c.id == 1).unwrap();
+    assert!(expired.error.as_deref().unwrap_or("").contains("deadline"));
+    assert_eq!(sched.metrics.expired, 1);
+    assert_eq!(sched.tier.n_residents(), 0, "expiry must free the residency");
+    let ok = done.iter().find(|c| c.id == 2).unwrap();
+    assert!(ok.error.is_none());
+}
+
+// ---------------------------------------------------------------------------
+// replay determinism with offloads in the stream
+// ---------------------------------------------------------------------------
+
+fn offload_replay(tag: &str, workers: usize) -> ReplayReport {
+    let trace = generate_timed(&TimedTraceConfig {
+        n_requests: 48,
+        arrival: Arrival::Poisson { rate_rps: 2000.0 },
+        priority_mix: [1.0, 2.0, 1.0],
+        seed: 42,
+        ..TimedTraceConfig::default()
+    });
+    let dir = write_fake_artifacts(tag, '7');
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, 64_000);
+    sched.set_policy(Policy::Slo);
+    sched.set_preemption(Preemption::Offload);
+    sched.set_warm_budget(1 << 20);
+    replay(&mut sched, &trace, &CostModel::default()).expect("replay")
+}
+
+#[test]
+fn offload_replay_is_byte_identical_across_worker_counts() {
+    let a = offload_replay("off_det_w1", 1);
+    assert!(
+        a.metrics.preemptions > 0 && a.metrics.offloads > 0,
+        "overloaded trace must exercise offload preemption \
+         (preemptions {}, offloads {})",
+        a.metrics.preemptions,
+        a.metrics.offloads
+    );
+    assert!(a.metrics.restores > 0, "at least one victim must be restored");
+    let b = offload_replay("off_det_w4", 4);
+    assert_eq!(
+        a.to_json().dump(),
+        b.to_json().dump(),
+        "offload-mode replay diverged between workers=1 and workers=4"
+    );
+}

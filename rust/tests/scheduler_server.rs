@@ -269,6 +269,52 @@ fn equal_priority_never_preempts_under_slo() {
 }
 
 #[test]
+fn slo_bypass_admits_smaller_requests_with_a_starvation_bound() {
+    // Budget 30000. A long interactive sequence (id 0, est 18944) is live; a
+    // big interactive head (id 1, est 29184) can never fit beside it, so it
+    // parks — it cannot preempt its own class. Four tiny batch requests
+    // (est 4608) are queued behind it. The bypass lets smaller *lower-class*
+    // requests use the spare budget, but only `bypass_limit` times per head:
+    // with limit 2, exactly ids 2 and 3 slip past; 4 and 5 must wait until
+    // the head itself has been admitted. With limit 0 nothing passes the
+    // parked head at all.
+    let run = |tag: &str, limit: u32| {
+        let mut sched = fake_scheduler(tag, '7', 30_000, 1);
+        sched.set_policy(Policy::Slo);
+        sched.set_bypass_limit(limit);
+        sched.submit(req_class(0, "a=1;?a=", 30, Priority::Interactive));
+        sched.tick().unwrap(); // id 0 live
+        sched.submit(req_class(1, "b=2;?b=", 50, Priority::Interactive));
+        for id in 2..6u64 {
+            sched.submit(req_class(id, "c=3;?c=", 2, Priority::Batch));
+        }
+        let done = sched.run_to_completion().unwrap();
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            assert!(c.error.is_none(), "req {}: {:?}", c.id, c.error);
+        }
+        let order: Vec<u64> = done.iter().map(|c| c.id).collect();
+        (order, sched.metrics.bypass_admissions)
+    };
+
+    let (order, bypasses) = run("bypass2", 2);
+    assert_eq!(bypasses, 2, "exactly the bypass limit may pass the parked head");
+    assert_eq!(
+        order,
+        vec![2, 3, 0, 1, 4, 5],
+        "two smalls bypass, then the head runs before the remaining smalls"
+    );
+
+    let (order0, bypasses0) = run("bypass0", 0);
+    assert_eq!(bypasses0, 0);
+    assert_eq!(
+        order0,
+        vec![0, 1, 2, 3, 4, 5],
+        "with bypass disabled nothing passes the parked head"
+    );
+}
+
+#[test]
 fn live_deadline_expires_to_terminal_state_and_releases_reservation() {
     let mut sched = fake_scheduler("deadline_live", '7', 1 << 30, 1);
     let mut r = req(1, "a=1;?a=", 50);
