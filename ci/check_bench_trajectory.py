@@ -3,8 +3,9 @@
 
 Compares a freshly emitted bench JSON (BENCH_kernels.json from
 `cargo bench --bench kernel_throughput`, BENCH_overload.json from
-`cargo bench --bench overload_tail`, or BENCH_offload.json from
-`cargo bench --bench offload_vs_recompute`) against a committed baseline
+`cargo bench --bench overload_tail`, BENCH_offload.json from
+`cargo bench --bench offload_vs_recompute`, or BENCH_decode.json from
+`cargo bench --bench decode_scaling`) against a committed baseline
 snapshot and fails when throughput regresses by more than the threshold —
 so CI catches "still bit-exact but 2x slower" changes, not just bit
 mismatches.
@@ -26,7 +27,9 @@ Cells are keyed per bench type:
   * overload_tail:        (method, rate_rps, budget_bytes), metric
     throughput_rps (virtual-clock — deterministic, so any drift is real);
   * offload_vs_recompute: (method, preemption, rate_rps, budget_bytes),
-    metric throughput_rps (virtual-clock, deterministic).
+    metric throughput_rps (virtual-clock, deterministic);
+  * decode_scaling:       (pipeline, batch, workers), metric tokens_per_s
+    (wall-clock; barrier-vs-overlap x worker-count x batch sweep).
 """
 
 import argparse
@@ -55,6 +58,9 @@ def cells(doc):
         elif bench == "offload_vs_recompute":
             key = (r["method"], r["preemption"], r["rate_rps"], r["budget_bytes"])
             metric = "throughput_rps"
+        elif bench == "decode_scaling":
+            key = (r["pipeline"], r["batch"], r["workers"])
+            metric = "tokens_per_s"
         else:
             continue
         out[key] = (metric, float(r[metric]))

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Seed ci/baselines/ from a downloaded CI bench-artifact set.
+
+The authoring environment has no Rust toolchain, so trajectory baselines
+cannot be produced locally — but every CI run uploads its BENCH_*.json
+outputs as a workflow artifact (see .github/workflows/ci.yml, step
+"upload bench artifacts"). This script turns one downloaded artifact set
+into committed baselines, which makes `ci/check_bench_trajectory.py`
+enforcing on the next run.
+
+Usage:
+    # 1. Download the artifact from a representative CI run:
+    #      gh run download <run-id> -n bench-json -D /tmp/bench-json
+    #    (or via the Actions UI: the "bench-json" artifact)
+    # 2. Seed the baselines and commit:
+    ci/seed_baselines.py /tmp/bench-json
+    git add ci/baselines && git commit -m "Seed bench trajectory baselines"
+
+Options:
+    --force     overwrite baselines that already exist (refreshing the
+                floor after an intentional slowdown); default is to skip
+                them so an accidental re-run cannot silently move floors.
+    --dry-run   report what would be copied without writing.
+
+Each BENCH_*.json found in the artifact directory is validated (parses as
+JSON, carries a recognized "bench" field and a non-empty "results" list)
+before being copied to ci/baselines/<name>.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+KNOWN_BENCHES = {
+    "kernel_throughput",
+    "overload_tail",
+    "offload_vs_recompute",
+    "decode_scaling",
+}
+
+
+def validate(path):
+    """Return an error string, or None if the file is a usable bench doc."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"unreadable JSON ({e})"
+    bench = doc.get("bench")
+    if bench not in KNOWN_BENCHES:
+        return f"unrecognized bench field {bench!r}"
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        return "empty or missing results list"
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("artifact_dir", help="directory holding downloaded BENCH_*.json files")
+    ap.add_argument("--baselines", default=os.path.join(os.path.dirname(__file__), "baselines"),
+                    help="destination directory (default: ci/baselines next to this script)")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite baselines that already exist")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="report without copying")
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.artifact_dir):
+        print(f"[seed] FAIL: {args.artifact_dir} is not a directory")
+        return 1
+    candidates = sorted(
+        f for f in os.listdir(args.artifact_dir)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not candidates:
+        print(f"[seed] FAIL: no BENCH_*.json in {args.artifact_dir} "
+              "(did the artifact download into a subdirectory?)")
+        return 1
+
+    os.makedirs(args.baselines, exist_ok=True)
+    seeded, skipped, bad = 0, 0, 0
+    for name in candidates:
+        src = os.path.join(args.artifact_dir, name)
+        dst = os.path.join(args.baselines, name)
+        err = validate(src)
+        if err:
+            print(f"[seed] SKIP {name}: {err}")
+            bad += 1
+            continue
+        if os.path.exists(dst) and not args.force:
+            print(f"[seed] keep {name}: baseline already committed (use --force to refresh)")
+            skipped += 1
+            continue
+        if args.dry_run:
+            print(f"[seed] would copy {name} -> {dst}")
+        else:
+            shutil.copyfile(src, dst)
+            print(f"[seed] seeded {name} -> {dst}")
+        seeded += 1
+
+    print(f"[seed] done: {seeded} seeded, {skipped} kept, {bad} invalid.")
+    if seeded and not args.dry_run:
+        print("[seed] commit ci/baselines/ to make the trajectory check enforcing.")
+    return 0 if seeded or skipped else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,116 +1,292 @@
-//! Decode attention scaling: batched (sequence x KV head) fan-out through
-//! the worker pool, sweeping batch size x worker count at one Llama-3.1-8B
-//! layer geometry (32 q heads over 8 KV heads, d_h 128, InnerQ_Base caches).
+//! Decode scaling with a pipeline axis: a multi-layer synthetic decode step
+//! (append + attend per (layer, sequence, KV head)) swept over
+//! `pipeline {barrier, overlap}` × worker count × batch size at one
+//! Llama-3.1-8B layer geometry (32 q heads over 8 KV heads, d_h 128,
+//! InnerQ_Base caches, 4 layers).
 //!
-//! This is the tentpole measurement for the parallel decode path: jobs are
-//! built exactly like `Engine::decode_step` builds them (one job per
-//! sequence x KV head, owning a contiguous rep*d_h slice of the context
-//! buffer), so the numbers are the engine's attention phase without PJRT
-//! stage noise. The harness also *checks* the determinism contract: every
-//! worker count must reproduce the workers=1 context buffer byte-for-byte.
+//! * `barrier` reproduces the engine's old per-layer phase barriers: every
+//!   head's K/V append runs serially on the driver, then the layer's
+//!   attention fans out behind a full pool barrier — layer after layer.
+//! * `overlap` emits the whole step as one `ThreadPool::run_graph` of fused
+//!   append+attend jobs (`cache::step_fanout`, the engine's pipelined job
+//!   shape). The bench's per-layer inputs are precomputed, so unlike the
+//!   engine (where qkv(l+1) depends on out(l)) the layers here may overlap
+//!   outright — this is the upper bound on what killing the barrier buys.
+//!
+//! The harness *checks* the determinism contract before timing: every
+//! (mode, workers) combination must reproduce the barrier/workers=1 context
+//! buffers byte-for-byte and leave bit-identical caches. It then emits a
+//! machine-readable `BENCH_decode.json` (step µs + attention tokens/s per
+//! cell) for the cross-PR trajectory check.
 //!
 //! ```bash
-//! cargo bench --bench decode_scaling              # full sweep
-//! cargo bench --bench decode_scaling 1024         # override tokens/seq
+//! cargo bench --bench decode_scaling              # full sweep (1024 tok)
+//! cargo bench --bench decode_scaling 256          # override tokens/seq
+//! cargo bench --bench decode_scaling quick        # fewer timing reps
 //! ```
 
-use innerq::cache::{attention_fanout, HeadCache};
+use innerq::cache::{attention_fanout, step_fanout, HeadCache, LayerCache};
+use innerq::util::json::Json;
 use innerq::util::rng::Rng;
 use innerq::util::stats::time_us;
-use innerq::util::threadpool::ThreadPool;
+use innerq::util::threadpool::{Stage, ThreadPool};
 use innerq::QuantMethod;
 
 const D_H: usize = 128;
 const N_KV: usize = 8;
 const N_Q: usize = 32;
 const REP: usize = N_Q / N_KV;
+const N_LAYERS: usize = 4;
 
-/// One decode step's attention fan-out over `caches[..batch]`, built by the
-/// same `attention_fanout` the engine uses so the bench cannot drift from
-/// the production job shape.
-fn step(pool: &ThreadPool, caches: &[Vec<HeadCache>], q: &[f32], ctx: &mut [f32]) {
-    let heads = caches.iter().flat_map(|s| s.iter());
-    pool.run(attention_fanout(heads, q, ctx, REP, D_H));
-}
-
-fn main() {
-    let n_tokens: usize = std::env::args()
-        .nth(1)
-        .and_then(|a| a.parse().ok())
-        .unwrap_or(1024);
-    let batches = [1usize, 2, 4, 8];
-    let worker_counts = [1usize, 2, 4, 8];
-    let max_batch = *batches.last().unwrap();
-
-    eprintln!(
-        "[decode_scaling] building {max_batch} x {N_KV} InnerQ caches @ {n_tokens} tokens ..."
-    );
+/// Per-sequence caches, `[seq][layer]`, built deterministically from `seed`
+/// so every (mode, workers) cell starts from bit-identical state.
+fn build_caches(batch: usize, n_tokens: usize, seed: u64) -> Vec<Vec<LayerCache>> {
     let cfg = QuantMethod::InnerQBase.config();
-    let mut rng = Rng::new(2026);
-    let caches: Vec<Vec<HeadCache>> = (0..max_batch)
+    let mut rng = Rng::new(seed);
+    (0..batch)
         .map(|_| {
-            (0..N_KV)
+            (0..N_LAYERS)
                 .map(|_| {
-                    let keys: Vec<f32> =
-                        (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
-                    let vals: Vec<f32> =
-                        (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
-                    HeadCache::from_prefill(cfg, D_H, &keys, &vals)
+                    LayerCache::from_heads(
+                        (0..N_KV)
+                            .map(|_| {
+                                let keys: Vec<f32> =
+                                    (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
+                                let vals: Vec<f32> =
+                                    (0..n_tokens * D_H).map(|_| rng.next_normal()).collect();
+                                HeadCache::from_prefill(cfg, D_H, &keys, &vals)
+                            })
+                            .collect(),
+                    )
                 })
                 .collect()
         })
+        .collect()
+}
+
+/// One decode step, old shape: per layer, serial driver appends then a
+/// barriered attention fan-out (the shared `attention_fanout` job shape).
+fn barrier_step(
+    pool: &ThreadPool,
+    caches: &mut [Vec<LayerCache>],
+    k: &[Vec<f32>],
+    v: &[Vec<f32>],
+    q: &[f32],
+    ctxs: &mut [Vec<f32>],
+) {
+    for l in 0..N_LAYERS {
+        for (i, s) in caches.iter_mut().enumerate() {
+            for (hk, head) in s[l].heads_mut().iter_mut().enumerate() {
+                let kb = (i * N_KV + hk) * D_H;
+                head.append(&k[l][kb..kb + D_H], &v[l][kb..kb + D_H]);
+            }
+        }
+        let heads = caches.iter().flat_map(|s| s[l].heads().iter());
+        pool.run(attention_fanout(heads, q, &mut ctxs[l], REP, D_H));
+    }
+}
+
+/// One decode step, pipelined shape: the whole multi-layer step as one
+/// graph of fused append+attend jobs — no barrier anywhere, layers overlap.
+fn overlap_step(
+    pool: &ThreadPool,
+    caches: &mut [Vec<LayerCache>],
+    k: &[Vec<f32>],
+    v: &[Vec<f32>],
+    q: &[f32],
+    ctxs: &mut [Vec<f32>],
+) {
+    let mut layer_heads: Vec<Vec<&mut HeadCache>> = (0..N_LAYERS).map(|_| Vec::new()).collect();
+    for s in caches.iter_mut() {
+        for (l, lc) in s.iter_mut().enumerate() {
+            layer_heads[l].extend(lc.heads_mut().iter_mut());
+        }
+    }
+    let mut stages: Vec<Stage> = Vec::with_capacity(N_LAYERS);
+    for ((heads, ctx), (kl, vl)) in layer_heads
+        .into_iter()
+        .zip(ctxs.iter_mut())
+        .zip(k.iter().zip(v.iter()))
+    {
+        stages.push(Stage::new(Vec::new(), step_fanout(heads, kl, vl, q, ctx, REP, D_H)));
+    }
+    pool.run_graph(stages);
+}
+
+fn run_step(
+    mode: &str,
+    pool: &ThreadPool,
+    caches: &mut [Vec<LayerCache>],
+    k: &[Vec<f32>],
+    v: &[Vec<f32>],
+    q: &[f32],
+    ctxs: &mut [Vec<f32>],
+) {
+    match mode {
+        "barrier" => barrier_step(pool, caches, k, v, q, ctxs),
+        _ => overlap_step(pool, caches, k, v, q, ctxs),
+    }
+}
+
+struct Record {
+    pipeline: &'static str,
+    batch: usize,
+    workers: usize,
+    step_us: f64,
+    tokens_per_s: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_tokens: usize = args.iter().filter_map(|a| a.parse().ok()).next().unwrap_or(1024);
+    let batches = [1usize, 2, 4, 8];
+    let worker_counts = [1usize, 2, 4, 8];
+    let modes = ["barrier", "overlap"];
+    let max_batch = *batches.last().unwrap();
+
+    eprintln!(
+        "[decode_scaling] {max_batch} seqs x {N_LAYERS} layers x {N_KV} InnerQ caches @ {n_tokens} tokens"
+    );
+
+    // Per-step inputs, fixed across the whole sweep.
+    let mut rng = Rng::new(2026);
+    let k_rows: Vec<Vec<f32>> = (0..N_LAYERS)
+        .map(|_| (0..max_batch * N_KV * D_H).map(|_| rng.next_normal()).collect())
+        .collect();
+    let v_rows: Vec<Vec<f32>> = (0..N_LAYERS)
+        .map(|_| (0..max_batch * N_KV * D_H).map(|_| rng.next_normal()).collect())
         .collect();
     let q: Vec<f32> = (0..max_batch * N_Q * D_H).map(|_| rng.next_normal()).collect();
 
+    // ---- determinism contract: every (mode, workers) cell must match the
+    // barrier/workers=1 reference byte-for-byte, contexts and caches ----
+    {
+        let det_tokens = n_tokens.min(256); // keep the check cheap
+        let det_batch = 2usize;
+        let steps = 6; // crosses an InnerQ value-eviction boundary cadence
+        let qd = &q[..det_batch * N_Q * D_H];
+        let reference = {
+            let pool = ThreadPool::new(1);
+            let mut caches = build_caches(det_batch, det_tokens, 7);
+            let mut ctxs: Vec<Vec<f32>> =
+                (0..N_LAYERS).map(|_| vec![0f32; det_batch * N_Q * D_H]).collect();
+            let mut all_ctx = Vec::new();
+            for _ in 0..steps {
+                barrier_step(&pool, &mut caches, &k_rows, &v_rows, qd, &mut ctxs);
+                all_ctx.push(ctxs.clone());
+            }
+            (caches, all_ctx)
+        };
+        for mode in modes {
+            for &workers in &worker_counts {
+                let pool = ThreadPool::new(workers);
+                let mut caches = build_caches(det_batch, det_tokens, 7);
+                let mut ctxs: Vec<Vec<f32>> =
+                    (0..N_LAYERS).map(|_| vec![0f32; det_batch * N_Q * D_H]).collect();
+                for step in 0..steps {
+                    run_step(mode, &pool, &mut caches, &k_rows, &v_rows, qd, &mut ctxs);
+                    assert_eq!(
+                        ctxs, reference.1[step],
+                        "{mode} workers={workers} step {step}: ctx diverged from barrier/1"
+                    );
+                }
+                assert_eq!(
+                    caches, reference.0,
+                    "{mode} workers={workers}: cache state diverged from barrier/1"
+                );
+            }
+        }
+        eprintln!("[decode_scaling] determinism contract holds (barrier == overlap, all worker counts)");
+    }
+
+    // ---- timing sweep ----
     println!(
-        "Decode attention scaling (InnerQ_Base, d_h {D_H}, {N_KV} KV heads x{REP} GQA, {n_tokens} tok/seq)"
+        "Decode step scaling (InnerQ_Base, {N_LAYERS} layers, d_h {D_H}, {N_KV} KV heads x{REP} GQA, {n_tokens} tok/seq)"
     );
     println!(
-        "{:<7} {:>9} {:>12} {:>12} {:>10} {:>12}",
-        "batch", "workers", "step µs", "speedup", "tok/s", "identical"
+        "{:<9} {:<7} {:>9} {:>12} {:>12} {:>10}",
+        "pipeline", "batch", "workers", "step µs", "speedup", "tok/s"
     );
 
+    let mut records: Vec<Record> = Vec::new();
     for &batch in &batches {
-        let caches = &caches[..batch];
         let q = &q[..batch * N_Q * D_H];
-        let mut serial_ctx: Option<Vec<f32>> = None;
-        let mut serial_us = 0.0f64;
-        for &workers in &worker_counts {
-            let pool = ThreadPool::new(workers);
-            let mut ctx = vec![0f32; batch * N_Q * D_H];
-            let (w, r) = if n_tokens <= 2048 { (3, 12) } else { (2, 6) };
-            let s = time_us(w, r, || {
-                step(&pool, caches, q, &mut ctx);
-                ctx[0]
-            });
-            // Determinism contract: byte-identical to the serial baseline.
-            let identical = match &serial_ctx {
-                None => {
-                    serial_ctx = Some(ctx.clone());
-                    serial_us = s.mean_us;
-                    true
+        let mut base_us = 0.0f64;
+        for mode in modes {
+            for &workers in &worker_counts {
+                let pool = ThreadPool::new(workers);
+                // Fresh caches per cell so growth from timed appends cannot
+                // leak across cells; every cell grows identically.
+                let mut caches = build_caches(batch, n_tokens, 11);
+                let mut ctxs: Vec<Vec<f32>> =
+                    (0..N_LAYERS).map(|_| vec![0f32; batch * N_Q * D_H]).collect();
+                let (w, r) = if quick {
+                    (1, 3)
+                } else if n_tokens <= 2048 {
+                    (3, 12)
+                } else {
+                    (2, 6)
+                };
+                let s = time_us(w, r, || {
+                    run_step(mode, &pool, &mut caches, &k_rows, &v_rows, q, &mut ctxs);
+                    ctxs[0][0]
+                });
+                if mode == "barrier" && workers == 1 {
+                    base_us = s.mean_us;
                 }
-                Some(base) => base == &ctx,
-            };
-            assert!(
-                identical,
-                "batch {batch} workers {workers}: context diverged from serial"
-            );
-            // Attention "token throughput": cache tokens scored+mixed per
-            // second across all query heads of the batch.
-            let toks = (batch * N_Q * n_tokens) as f64 / (s.mean_us * 1e-6);
-            println!(
-                "{:<7} {:>9} {:>12.0} {:>11.2}x {:>10.2e} {:>12}",
-                batch,
-                workers,
-                s.mean_us,
-                serial_us / s.mean_us,
-                toks,
-                identical
-            );
+                // Attention "token throughput": cache tokens scored+mixed
+                // per second across all query heads, layers, and sequences.
+                let toks = (batch * N_Q * n_tokens * N_LAYERS) as f64 / (s.mean_us * 1e-6);
+                println!(
+                    "{:<9} {:<7} {:>9} {:>12.0} {:>11.2}x {:>10.2e}",
+                    mode,
+                    batch,
+                    workers,
+                    s.mean_us,
+                    base_us / s.mean_us,
+                    toks
+                );
+                records.push(Record {
+                    pipeline: if mode == "barrier" { "barrier" } else { "overlap" },
+                    batch,
+                    workers,
+                    step_us: s.mean_us,
+                    tokens_per_s: toks,
+                });
+            }
         }
         if batch == 8 {
-            println!("(acceptance: expect >= 2x speedup at batch 8, workers 4, on >= 4 cores)");
+            println!(
+                "(acceptance: expect overlap >= barrier throughput at workers >= 2 on >= 4 cores)"
+            );
         }
     }
+
+    // Machine-readable trajectory record.
+    let results: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("pipeline", Json::str(r.pipeline)),
+                ("batch", Json::Num(r.batch as f64)),
+                ("workers", Json::Num(r.workers as f64)),
+                ("n_layers", Json::Num(N_LAYERS as f64)),
+                ("n_tokens", Json::Num(n_tokens as f64)),
+                ("d_h", Json::Num(D_H as f64)),
+                ("step_us", Json::Num(r.step_us)),
+                ("tokens_per_s", Json::Num(r.tokens_per_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("decode_scaling")),
+        ("quick", Json::Bool(quick)),
+        ("n_tokens", Json::Num(n_tokens as f64)),
+        ("n_layers", Json::Num(N_LAYERS as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_decode.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_decode.json");
+    eprintln!("[decode_scaling] wrote {path}");
 }

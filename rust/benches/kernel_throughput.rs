@@ -17,8 +17,9 @@
 //! cargo bench --bench kernel_throughput 16384    # override tokens
 //! ```
 
-use innerq::cache::segments::{InnerKeySegment, InnerValSegment};
+use innerq::cache::segments::{InnerKeySegment, InnerValSegment, OuterKeySegment};
 use innerq::kernels::gemv_inner::{pv_inner_chunk, pv_inner_chunk_ref, qk_inner, qk_inner_ref};
+use innerq::kernels::gemv_outer::{qk_outer_chunk, qk_outer_chunk_ref};
 use innerq::kernels::gemv_fp;
 use innerq::quant::group::Mode;
 use innerq::quant::packing::{packed_len, unpack32};
@@ -245,6 +246,46 @@ fn main() {
             ref_ctx[0]
         });
         record(&mut records, "pv_inner_ref", bits, s.mean_us, n_tokens);
+
+        // ---- outer (KIVI) key kernel: blocked vs scalar reference ----
+        // The reference doubles as the pre-blocking production shape, so
+        // the blocked-vs-ref delta is the honest baseline comparison.
+        let mut oseg = OuterKeySegment::new(D_H, bits, Mode::Asym);
+        for chunk in keys.chunks_exact(32 * D_H) {
+            oseg.append_chunk(chunk);
+        }
+        let mut oscr = vec![0f32; D_H];
+        let mut ofast = vec![0f32; n_tokens];
+        let mut orefr = vec![0f32; n_tokens];
+        // variant: 0 = blocked, 1 = scalar reference.
+        let run_qk_outer = |out: &mut [f32], scratch: &mut [f32], variant: usize| {
+            let row_bytes = (D_H / 32) * packed_len(32, bits);
+            let chunk_bytes = 32 * row_bytes;
+            for k in 0..n_tokens / 32 {
+                let ck = &oseg.codes[k * chunk_bytes..];
+                let sk = &oseg.scales[k * D_H..(k + 1) * D_H];
+                let zk = &oseg.zeffs[k * D_H..(k + 1) * D_H];
+                let ok = &mut out[k * 32..(k + 1) * 32];
+                match variant {
+                    0 => qk_outer_chunk(&q, ck, sk, zk, bits, D_H, scratch, ok),
+                    _ => qk_outer_chunk_ref(&q, ck, sk, zk, bits, D_H, scratch, ok),
+                }
+            }
+        };
+        run_qk_outer(&mut ofast, &mut oscr, 0);
+        run_qk_outer(&mut orefr, &mut oscr, 1);
+        assert_eq!(ofast, orefr, "qk_outer blocked/reference bit-identity violated at {bits} bits");
+
+        let s = time_us(warmup, reps, || {
+            run_qk_outer(&mut ofast, &mut oscr, 0);
+            ofast[0]
+        });
+        record(&mut records, "qk_outer", bits, s.mean_us, n_tokens);
+        let s = time_us(warmup, reps, || {
+            run_qk_outer(&mut orefr, &mut oscr, 1);
+            orefr[0]
+        });
+        record(&mut records, "qk_outer_ref", bits, s.mean_us, n_tokens);
     }
 
     // Machine-readable trajectory record.

@@ -1,0 +1,248 @@
+//! Per-layer cache ownership: one [`LayerCache`] owns one transformer
+//! layer's per-KV-head quantized caches.
+//!
+//! Before this refactor a `Sequence` held a monolithic
+//! `Vec<Vec<HeadCache>>`, which forced the decode loop into
+//! per-layer phase barriers (all appends on the driver, then all attends
+//! behind a pool barrier) and forced whole-sequence snapshot/offload
+//! granularity. Making the *layer* the unit of ownership gives:
+//!
+//! * **Split borrows for pipelined decode.** `Sequence::caches` is
+//!   `Vec<LayerCache>`; [`LayerCache::heads_mut`] exposes the layer's heads
+//!   as a slice, so the engine can collect disjoint `&mut HeadCache`
+//!   handles across every (sequence, layer, head) up front and hand each
+//!   one to its own fused append+attend job — layer *l*'s attention jobs
+//!   and any other layer's append/quantize jobs can be in flight
+//!   simultaneously with no aliasing, checked by the borrow checker rather
+//!   than by convention.
+//! * **Per-layer snapshot frames.** `cache::store::snapshot` serializes a
+//!   sequence as one frame per `LayerCache`, so the warm tier can hold — and
+//!   partially evict — individual layers of an offloaded sequence.
+//!
+//! [`step_fanout`] is the fused decode-step job shape: one job per
+//! (sequence, KV head) that appends the step's K/V row *and then* attends,
+//! replacing the old split (serial driver appends, then a barriered
+//! attention fan-out). Per head the operation order is unchanged, so results
+//! are bit-identical to the barriered path at any worker count.
+
+use crate::cache::manager::HeadCache;
+use crate::quant::MethodConfig;
+use crate::util::threadpool::Job;
+
+/// One layer's per-KV-head quantized caches plus its append/attend state.
+/// The owning [`crate::coordinator::engine::Sequence`] holds one per layer.
+#[derive(Debug, PartialEq)]
+pub struct LayerCache {
+    heads: Vec<HeadCache>,
+}
+
+impl LayerCache {
+    /// An empty layer cache with `n_heads` fresh per-head caches.
+    pub fn new(cfg: MethodConfig, d_h: usize, n_heads: usize) -> LayerCache {
+        LayerCache { heads: (0..n_heads).map(|_| HeadCache::new(cfg, d_h)).collect() }
+    }
+
+    /// Wrap already-built head caches (the prefill fan-out path).
+    pub fn from_heads(heads: Vec<HeadCache>) -> LayerCache {
+        LayerCache { heads }
+    }
+
+    /// Number of KV heads in this layer.
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Shared view of the layer's head caches (attention reads).
+    pub fn heads(&self) -> &[HeadCache] {
+        &self.heads
+    }
+
+    /// Split-borrow accessor: the layer's head caches as one mutable slice,
+    /// so callers can carve disjoint `&mut HeadCache` handles (via
+    /// `iter_mut` / `split_at_mut`) and keep several heads' append/attend
+    /// work in flight concurrently without aliasing.
+    pub fn heads_mut(&mut self) -> &mut [HeadCache] {
+        &mut self.heads
+    }
+
+    /// One head's cache.
+    pub fn head(&self, h: usize) -> &HeadCache {
+        &self.heads[h]
+    }
+
+    /// One head's cache, mutably.
+    pub fn head_mut(&mut self, h: usize) -> &mut HeadCache {
+        &mut self.heads[h]
+    }
+
+    /// Total cache bytes across the layer's heads.
+    pub fn bytes(&self) -> usize {
+        self.heads.iter().map(|h| h.bytes()).sum()
+    }
+
+    /// Tokens stored (all heads of a layer hold the same count).
+    pub fn len(&self) -> usize {
+        self.heads.first().map_or(0, |h| h.len())
+    }
+
+    /// True when the layer holds no tokens.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One head's fused decode-step body: append this step's K/V row into the
+/// head's cache (windows absorb it; evictions quantize at the method's
+/// cadence), then attend the head's `rep` query vectors into `out`
+/// (`rep * d_h` f32). This is the single definition of the per-head step —
+/// the engine's pipelined decode, [`step_fanout`], and the pipeline
+/// determinism tests all run heads through here so they cannot drift apart.
+pub fn head_step(
+    head: &mut HeadCache,
+    k_row: &[f32],
+    v_row: &[f32],
+    q_rows: &[f32],
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let d_h = head.d_h;
+    debug_assert_eq!(k_row.len(), d_h);
+    debug_assert_eq!(v_row.len(), d_h);
+    debug_assert_eq!(out.len() % d_h, 0);
+    debug_assert_eq!(q_rows.len(), out.len());
+    head.append(k_row, v_row);
+    let rep = out.len() / d_h;
+    for r in 0..rep {
+        head.attend(&q_rows[r * d_h..(r + 1) * d_h], &mut out[r * d_h..(r + 1) * d_h], scratch);
+    }
+}
+
+/// Build one layer's fused decode-step fan-out: one job per (sequence, KV
+/// head), in the same sequence-major order as `attention_fanout`. Job `c`
+/// appends K/V row `c` (`k`/`v` are `count * d_h`, row-major) into its own
+/// `&mut HeadCache` and then attends query heads `c*rep .. (c+1)*rep` of `q`
+/// into its disjoint `rep * d_h` slice of `ctx`.
+///
+/// Compared to the barriered path (serial appends on the driver, then an
+/// attention fan-out), the fused jobs let one head's quantize-on-evict work
+/// overlap every other head's attention — the decode-scaling bench and
+/// `tests/decode_pipeline.rs` assert the results stay bit-identical.
+pub fn step_fanout<'a>(
+    heads: Vec<&'a mut HeadCache>,
+    k: &'a [f32],
+    v: &'a [f32],
+    q: &'a [f32],
+    ctx: &'a mut [f32],
+    rep: usize,
+    d_h: usize,
+) -> Vec<Job<'a>> {
+    let count = heads.len();
+    debug_assert!(k.len() >= count * d_h);
+    debug_assert!(v.len() >= count * d_h);
+    debug_assert!(q.len() >= count * rep * d_h);
+    let mut jobs: Vec<Job<'a>> = Vec::with_capacity(count);
+    let mut chunks = ctx.chunks_mut(rep * d_h);
+    for (c, head) in heads.into_iter().enumerate() {
+        let out_chunk = chunks.next().expect("one rep*d_h ctx chunk per head");
+        jobs.push(Box::new(move |scratch: &mut Vec<f32>| {
+            head_step(
+                head,
+                &k[c * d_h..(c + 1) * d_h],
+                &v[c * d_h..(c + 1) * d_h],
+                &q[c * rep * d_h..(c + 1) * rep * d_h],
+                out_chunk,
+                scratch,
+            );
+        }));
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantMethod;
+    use crate::util::ptest::normal_vec;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::ThreadPool;
+
+    fn build_layer(cfg: MethodConfig, d_h: usize, n_heads: usize, n: usize, rng: &mut Rng) -> LayerCache {
+        LayerCache::from_heads(
+            (0..n_heads)
+                .map(|_| {
+                    let keys = normal_vec(rng, n * d_h, 1.0, 0.02);
+                    let vals = normal_vec(rng, n * d_h, 1.0, 0.02);
+                    HeadCache::from_prefill(cfg, d_h, &keys, &vals)
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn layer_cache_accessors_agree() {
+        let cfg = QuantMethod::InnerQBase.config();
+        let mut rng = Rng::new(3);
+        let lc = build_layer(cfg, 64, 3, 200, &mut rng);
+        assert_eq!(lc.n_heads(), 3);
+        assert_eq!(lc.len(), 200);
+        assert!(!lc.is_empty());
+        assert_eq!(lc.bytes(), lc.heads().iter().map(|h| h.bytes()).sum::<usize>());
+        assert_eq!(lc.head(1), &lc.heads()[1]);
+    }
+
+    /// The fused append+attend fan-out must be bit-identical to the split
+    /// path (all appends first, then all attends) at any worker count —
+    /// the core pipelined-decode determinism contract, at the unit level.
+    #[test]
+    fn fused_step_matches_split_path_bit_for_bit() {
+        let d_h = 64;
+        let rep = 2;
+        let n_heads = 4;
+        let n_seq = 3;
+        let n = 300; // past the high-precision windows: quantized appends
+        let cfg = QuantMethod::InnerQBase.config();
+
+        let build = |seed: u64| -> Vec<LayerCache> {
+            let mut rng = Rng::new(seed);
+            (0..n_seq).map(|_| build_layer(cfg, d_h, n_heads, n, &mut rng)).collect()
+        };
+        let mut rng = Rng::new(99);
+        let count = n_seq * n_heads;
+        let k = normal_vec(&mut rng, count * d_h, 1.0, 0.0);
+        let v = normal_vec(&mut rng, count * d_h, 1.0, 0.0);
+        let q = normal_vec(&mut rng, count * rep * d_h, 1.0, 0.0);
+
+        // Split reference: serial appends, then serial attends.
+        let mut split = build(7);
+        let mut want_ctx = vec![0f32; count * rep * d_h];
+        {
+            let mut scratch = Vec::new();
+            for (c, head) in split.iter_mut().flat_map(|l| l.heads_mut().iter_mut()).enumerate() {
+                head.append(&k[c * d_h..(c + 1) * d_h], &v[c * d_h..(c + 1) * d_h]);
+            }
+            for (c, head) in split.iter().flat_map(|l| l.heads().iter()).enumerate() {
+                for r in 0..rep {
+                    let qb = (c * rep + r) * d_h;
+                    head.attend(
+                        &q[qb..qb + d_h],
+                        &mut want_ctx[qb..qb + d_h],
+                        &mut scratch,
+                    );
+                }
+            }
+        }
+
+        for workers in [1usize, 2, 4, 8] {
+            let mut fused = build(7);
+            let mut ctx = vec![0f32; count * rep * d_h];
+            {
+                let pool = ThreadPool::new(workers);
+                let heads: Vec<&mut HeadCache> =
+                    fused.iter_mut().flat_map(|l| l.heads_mut().iter_mut()).collect();
+                pool.run(step_fanout(heads, &k, &v, &q, &mut ctx, rep, d_h));
+            }
+            assert_eq!(ctx, want_ctx, "workers={workers}: ctx diverged");
+            assert_eq!(fused, split, "workers={workers}: cache state diverged");
+        }
+    }
+}

@@ -337,6 +337,55 @@ impl HeadCache {
         self.n_tokens
     }
 
+    /// Rebuild the fp sink/recent windows from recomputed rows, leaving the
+    /// quantized segments untouched. `keys`/`vals` must be the *full*
+    /// token-major row history (`n_tokens x d_h`) — in practice a fresh
+    /// prefill pass over the same tokens, which is deterministic and so
+    /// reproduces the original rows bit-for-bit.
+    ///
+    /// This is the partial-eviction restore path: the warm tier may drop a
+    /// snapshot's fp-window frames (they dominate snapshot bytes at f32 vs
+    /// 2–4-bit codes) while keeping the quantized middle; restore then
+    /// replays the exact window push/evict sequence of the original appends
+    /// — same sink fill, same recent-window pops at the segments' eviction
+    /// cadence, same ring compaction — so the rebuilt windows are
+    /// bit-identical to the snapshotted ones, internal buffer state
+    /// included (asserted in `tests/decode_pipeline.rs`).
+    pub fn rebuild_windows(&mut self, keys: &[f32], vals: &[f32]) {
+        let d_h = self.d_h;
+        assert_eq!(keys.len(), vals.len());
+        assert_eq!(
+            keys.len(),
+            self.n_tokens * d_h,
+            "window rebuild needs every stored token's rows"
+        );
+        self.sink_k = SinkWindow::new(d_h, self.cfg.w_sink);
+        self.sink_v = SinkWindow::new(d_h, self.cfg.w_sink);
+        self.recent_k = RecentWindow::new(d_h);
+        self.recent_v = RecentWindow::new(d_h);
+        let kb = self.qk.evict_batch();
+        let vb = self.qv.evict_batch();
+        for (k, v) in keys.chunks_exact(d_h).zip(vals.chunks_exact(d_h)) {
+            if self.sink_k.try_push(k) {
+                let ok = self.sink_v.try_push(v);
+                debug_assert!(ok);
+                continue;
+            }
+            self.recent_k.push(k);
+            self.recent_v.push(v);
+            // Mirror `evict()`'s pop cadence exactly, discarding the popped
+            // rows (their quantized form is already in qk/qv).
+            while self.recent_k.len() >= self.cfg.w_recent + kb {
+                self.recent_k.pop_front(kb, |_| {});
+            }
+            while self.recent_v.len() >= self.cfg.w_recent + vb {
+                self.recent_v.pop_front(vb, |_| {});
+            }
+        }
+        debug_assert_eq!(self.sink_k.len() + self.qk.len() + self.recent_k.len(), self.n_tokens);
+        debug_assert_eq!(self.sink_v.len() + self.qv.len() + self.recent_v.len(), self.n_tokens);
+    }
+
     /// Total cache bytes (FP16-equivalent for the windows).
     pub fn bytes(&self) -> usize {
         self.sink_k.bytes()
@@ -739,6 +788,31 @@ mod tests {
             assert!(serial.iter().all(|hc| hc.len() == n_tokens));
             for workers in [2usize, 4, 8] {
                 assert_eq!(run(workers), serial, "{m:?} workers={workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn rebuilt_windows_are_bit_identical() {
+        // Replaying the window push/evict sequence from the same rows must
+        // reproduce the original windows exactly — internal ring state
+        // included (the snapshot layer compares `data`/`start` verbatim).
+        let d_h = 64;
+        for m in [QuantMethod::InnerQBase, QuantMethod::Kivi] {
+            for n in [40usize, 128, 131, 160, 223] {
+                let cfg = m.config();
+                let mut rng = Rng::new(0xFEED ^ n as u64);
+                let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                let want = HeadCache::from_prefill(cfg, d_h, &keys, &vals);
+                let mut got = HeadCache::from_prefill(cfg, d_h, &keys, &vals);
+                // Wreck the windows, then rebuild them from the rows.
+                got.sink_k = SinkWindow::new(d_h, cfg.w_sink);
+                got.sink_v = SinkWindow::new(d_h, cfg.w_sink);
+                got.recent_k = RecentWindow::new(d_h);
+                got.recent_v = RecentWindow::new(d_h);
+                got.rebuild_windows(&keys, &vals);
+                assert_eq!(got, want, "{m:?} n={n}: rebuilt windows diverged");
             }
         }
     }

@@ -1,14 +1,17 @@
 //! Quantized KV-cache subsystem: high-precision windows (§4.2), packed
 //! quantized segments (§4.4), the per-head manager with method-specific
-//! eviction, the cross-sequence memory pool, and the tiered snapshot store
-//! behind offload preemption ([`store`]).
+//! eviction, the per-layer ownership unit behind pipelined decode
+//! ([`layer`]), the cross-sequence memory pool, and the tiered snapshot
+//! store behind offload preemption ([`store`]).
 
+pub mod layer;
 pub mod manager;
 pub mod pool;
 pub mod segments;
 pub mod store;
 pub mod window;
 
+pub use layer::{head_step, step_fanout, LayerCache};
 pub use manager::{attention_fanout, prefill_fanout, HeadCache, KeySegment, ValSegment};
 pub use pool::{Admission, CachePool};
 pub use store::{TierStats, WarmTier};

@@ -7,19 +7,28 @@
 //! later) throws away exactly the work quantization paid for. This module
 //! gives the scheduler the alternative:
 //!
-//! * [`snapshot`] — bit-exact serialize/restore of a [`crate::cache::HeadCache`]
-//!   or a whole live [`crate::coordinator::Sequence`];
+//! * [`snapshot`] — bit-exact serialize/restore of a [`crate::cache::HeadCache`],
+//!   a whole live [`crate::coordinator::Sequence`], or a sequence split into
+//!   per-layer frames (meta + per-layer core/windows pairs) so the tier can
+//!   hold layers individually;
 //! * [`tier`] — a pooled fixed-segment warm store ([`WarmTier`]) with a
-//!   free list, its own byte budget, LRU-with-priority eviction, and
-//!   hit/miss/eviction counters, shaped after pelikan's segcache.
+//!   free list, its own byte budget, LRU-with-priority eviction — refined to
+//!   frame granularity: droppable (fp-window) frames of a victim go first,
+//!   whole residents only after — and hit/miss/eviction counters, shaped
+//!   after pelikan's segcache.
 //!
 //! The scheduler's `Preemption::Offload` mode parks victims here and
 //! restores them (cheap memcpy + deserialize) instead of re-prefilling them
-//! (expensive recompute); `workload::replay`'s cost model prices both so the
-//! overload harness can answer offload-vs-recompute per quant method.
+//! (expensive recompute); a partially-evicted resident restores its
+//! quantized middle from the tier and recomputes only the fp windows.
+//! `workload::replay`'s cost model prices both so the overload harness can
+//! answer offload-vs-recompute per quant method.
 
 pub mod snapshot;
 pub mod tier;
 
-pub use snapshot::{restore_head, restore_sequence, snapshot_head, snapshot_sequence};
-pub use tier::{TierStats, WarmTier, DEFAULT_SEG_BYTES};
+pub use snapshot::{
+    restore_head, restore_sequence, restore_sequence_frames, snapshot_head, snapshot_sequence,
+    snapshot_sequence_frames, snapshot_sequence_frames_on, LayerFrames, SequenceFrames,
+};
+pub use tier::{FrameKind, InsertReceipt, TakenFrames, TierStats, WarmTier, DEFAULT_SEG_BYTES};

@@ -16,7 +16,24 @@
 //! engine and the [`super::tier::WarmTier`], and could ferry them to disk or
 //! a remote host later); a magic/version header rejects foreign bytes
 //! instead of misinterpreting them.
+//!
+//! ## Per-layer frames
+//!
+//! Alongside the monolithic sequence image, [`snapshot_sequence_frames`]
+//! splits a sequence into independent byte frames: one *meta* frame (tokens,
+//! prefill boundary, last logits) and, per [`LayerCache`], a *core* frame
+//! (quantized segments + norms — the state that is expensive to recompute)
+//! and a *windows* frame (the fp sink/recent rows — cheap to recompute for a
+//! prefill-only sequence, and the bulk of the bytes at f32 vs 2–4-bit
+//! codes). The warm tier stores the frames individually, so it can evict a
+//! resident's window frames under pressure while keeping the cores;
+//! [`restore_sequence_frames`] reports which layers came back without
+//! windows so the engine can rebuild them
+//! (`Engine::rebuild_windows`). Frame serialization is embarrassingly
+//! parallel per layer; [`snapshot_sequence_frames_on`] fans it out over the
+//! worker pool with byte-identical output.
 
+use crate::cache::layer::LayerCache;
 use crate::cache::manager::{HeadCache, KeySegment, ValSegment};
 use crate::cache::segments::{
     FpSegment, InnerKeySegment, InnerValSegment, OuterKeySegment, OuterValSegment,
@@ -34,6 +51,12 @@ use anyhow::{anyhow, Result};
 const MAGIC_HEAD: u32 = 0x4951_4843;
 /// Header magic of a full-sequence snapshot ("IQSQ").
 const MAGIC_SEQ: u32 = 0x4951_5351;
+/// Header magic of a sequence meta frame ("IQSM").
+const MAGIC_META: u32 = 0x4951_534D;
+/// Header magic of a layer core frame ("IQLC").
+const MAGIC_LAYER_CORE: u32 = 0x4951_4C43;
+/// Header magic of a layer windows frame ("IQLW").
+const MAGIC_LAYER_WIN: u32 = 0x4951_4C57;
 /// Format version; bump on any layout change.
 const VERSION: u8 = 1;
 
@@ -520,7 +543,10 @@ pub fn restore_head(bytes: &[u8]) -> Result<HeadCache> {
 
 /// Serialize a whole live [`Sequence`] — token history, prefill boundary,
 /// last-step logits, and every per-(layer, head) cache — into one byte
-/// image. This is what offload preemption parks in the warm tier.
+/// image. This is the monolithic form used by benches and tests; the
+/// scheduler's offload path uses the framed form
+/// ([`snapshot_sequence_frames`]) so the warm tier can hold layers
+/// individually.
 pub fn snapshot_sequence(seq: &Sequence) -> Vec<u8> {
     let mut w = Writer::default();
     w.u32(MAGIC_SEQ);
@@ -531,8 +557,8 @@ pub fn snapshot_sequence(seq: &Sequence) -> Vec<u8> {
     w.f32s(&seq.last_logits);
     w.usz(seq.caches.len());
     for layer in &seq.caches {
-        w.usz(layer.len());
-        for hc in layer {
+        w.usz(layer.n_heads());
+        for hc in layer.heads() {
             write_head_body(&mut w, hc);
         }
     }
@@ -562,10 +588,253 @@ pub fn restore_sequence(bytes: &[u8]) -> Result<Sequence> {
         for _ in 0..n_heads {
             layer.push(read_head_body(&mut r)?);
         }
-        caches.push(layer);
+        caches.push(LayerCache::from_heads(layer));
     }
     r.done()?;
     Ok(Sequence { id, tokens, caches, n_prefill, last_logits })
+}
+
+// ---------------------------------------------------------------------------
+// per-layer frames
+// ---------------------------------------------------------------------------
+
+/// Everything in a [`HeadCache`] except the fp windows: config, quantized
+/// segments, norm, token count. The windows are serialized (and restorable)
+/// separately so the warm tier can drop them under pressure.
+fn write_head_core(w: &mut Writer, hc: &HeadCache) {
+    write_cfg(w, &hc.cfg);
+    w.usz(hc.d_h);
+    write_key_segment(w, &hc.qk);
+    write_val_segment(w, &hc.qv);
+    w.f32s(&hc.norm.scale);
+    w.f32s(&hc.norm.inv_scale);
+    w.usz(hc.n_tokens);
+}
+
+/// Core counterpart of [`read_head_body`]: the returned cache carries
+/// *empty* fp windows — the caller must install a windows frame
+/// ([`read_head_windows_into`]) or rebuild them
+/// (`HeadCache::rebuild_windows`) before the cache is usable.
+fn read_head_core(r: &mut Reader) -> Result<HeadCache> {
+    let cfg = read_cfg(r)?;
+    let d_h = r.usz()?;
+    let qk = read_key_segment(r)?;
+    let qv = read_val_segment(r)?;
+    let scale = r.f32s()?;
+    let inv_scale = r.f32s()?;
+    let n_tokens = r.usz()?;
+    Ok(HeadCache {
+        sink_k: SinkWindow::new(d_h, cfg.w_sink),
+        sink_v: SinkWindow::new(d_h, cfg.w_sink),
+        recent_k: RecentWindow::new(d_h),
+        recent_v: RecentWindow::new(d_h),
+        cfg,
+        d_h,
+        qk,
+        qv,
+        norm: ChannelNorm { scale, inv_scale },
+        n_tokens,
+    })
+}
+
+fn write_head_windows(w: &mut Writer, hc: &HeadCache) {
+    write_sink(w, &hc.sink_k);
+    write_sink(w, &hc.sink_v);
+    write_recent(w, &hc.recent_k);
+    write_recent(w, &hc.recent_v);
+}
+
+fn read_head_windows_into(r: &mut Reader, hc: &mut HeadCache) -> Result<()> {
+    hc.sink_k = read_sink(r)?;
+    hc.sink_v = read_sink(r)?;
+    hc.recent_k = read_recent(r)?;
+    hc.recent_v = read_recent(r)?;
+    Ok(())
+}
+
+/// One layer's pair of snapshot frames (see [`SequenceFrames`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerFrames {
+    /// Required frame: quantized segments, norms, config, token count.
+    pub core: Vec<u8>,
+    /// Droppable frame: the fp sink/recent windows.
+    pub windows: Vec<u8>,
+}
+
+/// A sequence snapshot split into independently storable frames: one meta
+/// frame plus a core/windows pair per layer. Byte-wise, `meta` + each
+/// layer's `core` and `windows` together carry exactly the state of the
+/// monolithic [`snapshot_sequence`] image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SequenceFrames {
+    /// Sequence metadata: id, token history, prefill boundary, last logits.
+    pub meta: Vec<u8>,
+    /// Per-layer frame pairs, in layer order.
+    pub layers: Vec<LayerFrames>,
+}
+
+impl SequenceFrames {
+    /// Total serialized bytes across every frame.
+    pub fn total_bytes(&self) -> usize {
+        self.meta.len()
+            + self.layers.iter().map(|l| l.core.len() + l.windows.len()).sum::<usize>()
+    }
+}
+
+fn write_meta_frame(seq: &Sequence) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_META);
+    w.u8(VERSION);
+    w.u64(seq.id);
+    w.i32s(&seq.tokens);
+    w.usz(seq.n_prefill);
+    w.f32s(&seq.last_logits);
+    w.usz(seq.caches.len());
+    w.buf
+}
+
+fn write_layer_core_frame(lc: &LayerCache) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_LAYER_CORE);
+    w.u8(VERSION);
+    w.usz(lc.n_heads());
+    for hc in lc.heads() {
+        write_head_core(&mut w, hc);
+    }
+    w.buf
+}
+
+fn write_layer_windows_frame(lc: &LayerCache) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_LAYER_WIN);
+    w.u8(VERSION);
+    w.usz(lc.n_heads());
+    for hc in lc.heads() {
+        write_head_windows(&mut w, hc);
+    }
+    w.buf
+}
+
+fn check_header(r: &mut Reader, magic: u32, what: &str) -> Result<()> {
+    if r.u32()? != magic {
+        return Err(anyhow!("not a {what} frame (bad magic)"));
+    }
+    let v = r.u8()?;
+    if v != VERSION {
+        return Err(anyhow!("unsupported {what} frame version {v}"));
+    }
+    Ok(())
+}
+
+/// Split a live [`Sequence`] into per-layer snapshot frames (serial form;
+/// see [`snapshot_sequence_frames_on`] for the pooled fan-out).
+pub fn snapshot_sequence_frames(seq: &Sequence) -> SequenceFrames {
+    SequenceFrames {
+        meta: write_meta_frame(seq),
+        layers: seq
+            .caches
+            .iter()
+            .map(|lc| LayerFrames {
+                core: write_layer_core_frame(lc),
+                windows: write_layer_windows_frame(lc),
+            })
+            .collect(),
+    }
+}
+
+/// [`snapshot_sequence_frames`], with the per-layer frame serialization
+/// fanned out over `pool` — each layer's core+windows pair is one job
+/// writing into its own slot, and the frames are read-only over the
+/// sequence, so the scheduler can serialize an offload victim without
+/// holding the driver thread for the whole image. Byte-identical to the
+/// serial form at any worker count (asserted in the tests).
+pub fn snapshot_sequence_frames_on(
+    seq: &Sequence,
+    pool: &crate::util::threadpool::ThreadPool,
+) -> SequenceFrames {
+    use crate::util::threadpool::Job;
+    let meta = write_meta_frame(seq);
+    let mut slots: Vec<Option<LayerFrames>> = (0..seq.caches.len()).map(|_| None).collect();
+    {
+        let jobs: Vec<Job> = seq
+            .caches
+            .iter()
+            .zip(slots.iter_mut())
+            .map(|(lc, slot)| {
+                let job: Job = Box::new(move |_scratch: &mut Vec<f32>| {
+                    *slot = Some(LayerFrames {
+                        core: write_layer_core_frame(lc),
+                        windows: write_layer_windows_frame(lc),
+                    });
+                });
+                job
+            })
+            .collect();
+        pool.run(jobs);
+    }
+    SequenceFrames {
+        meta,
+        layers: slots.into_iter().map(|s| s.expect("layer frame job filled its slot")).collect(),
+    }
+}
+
+/// Reassemble a [`Sequence`] from its meta frame and per-layer frames, as
+/// handed back by the warm tier. A layer's windows frame may be `None`
+/// (evicted under pressure): its heads come back with *empty* fp windows
+/// and the layer's index is reported in the second tuple element — the
+/// caller must rebuild those windows (`Engine::rebuild_windows`) before the
+/// sequence decodes. With every windows frame present the result is
+/// bit-identical to the snapshotted sequence.
+pub fn restore_sequence_frames(
+    meta: &[u8],
+    layers: &[(&[u8], Option<&[u8]>)],
+) -> Result<(Sequence, Vec<usize>)> {
+    let mut r = Reader::new(meta);
+    check_header(&mut r, MAGIC_META, "sequence meta")?;
+    let id = r.u64()?;
+    let tokens = r.i32s()?;
+    let n_prefill = r.usz()?;
+    let last_logits = r.f32s()?;
+    let n_layers = r.usz()?;
+    r.done()?;
+    if n_layers != layers.len() {
+        return Err(anyhow!(
+            "sequence meta expects {n_layers} layer frames, got {}",
+            layers.len()
+        ));
+    }
+
+    let mut caches = Vec::with_capacity(n_layers);
+    let mut missing_windows = Vec::new();
+    for (l, (core, windows)) in layers.iter().enumerate() {
+        let mut cr = Reader::new(core);
+        check_header(&mut cr, MAGIC_LAYER_CORE, "layer core")?;
+        let n_heads = cr.count(1)?;
+        let mut heads = Vec::with_capacity(n_heads);
+        for _ in 0..n_heads {
+            heads.push(read_head_core(&mut cr)?);
+        }
+        cr.done()?;
+        match windows {
+            Some(wb) => {
+                let mut wr = Reader::new(wb);
+                check_header(&mut wr, MAGIC_LAYER_WIN, "layer windows")?;
+                let wn = wr.count(1)?;
+                if wn != n_heads {
+                    return Err(anyhow!(
+                        "layer {l}: windows frame has {wn} heads, core has {n_heads}"
+                    ));
+                }
+                for hc in heads.iter_mut() {
+                    read_head_windows_into(&mut wr, hc)?;
+                }
+                wr.done()?;
+            }
+            None => missing_windows.push(l),
+        }
+        caches.push(LayerCache::from_heads(heads));
+    }
+    Ok((Sequence { id, tokens, caches, n_prefill, last_logits }, missing_windows))
 }
 
 #[cfg(test)]
@@ -616,6 +885,105 @@ mod tests {
         let b1: Vec<u32> = o1.iter().map(|v| v.to_bits()).collect();
         let b2: Vec<u32> = o2.iter().map(|v| v.to_bits()).collect();
         assert_eq!(b1, b2, "restore-then-attend must be bit-identical");
+    }
+
+    fn build_sequence(n_layers: usize, n_heads: usize, n: usize, seed: u64) -> Sequence {
+        let d_h = 64;
+        let mut rng = Rng::new(seed);
+        let caches = (0..n_layers)
+            .map(|_| {
+                LayerCache::from_heads(
+                    (0..n_heads)
+                        .map(|_| {
+                            let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                            let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                            HeadCache::from_prefill(
+                                QuantMethod::InnerQBase.config(),
+                                d_h,
+                                &keys,
+                                &vals,
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        Sequence {
+            id: 42,
+            tokens: (0..n as i32).collect(),
+            caches,
+            n_prefill: n,
+            last_logits: normal_vec(&mut rng, 25, 1.0, 0.0),
+        }
+    }
+
+    #[test]
+    fn sequence_frames_round_trip_bit_exact() {
+        let seq = build_sequence(3, 2, 220, 0xF4A3);
+        let mono = snapshot_sequence(&seq);
+        let frames = snapshot_sequence_frames(&seq);
+        let layer_refs: Vec<(&[u8], Option<&[u8]>)> = frames
+            .layers
+            .iter()
+            .map(|l| (l.core.as_slice(), Some(l.windows.as_slice())))
+            .collect();
+        let (back, missing) = restore_sequence_frames(&frames.meta, &layer_refs).expect("restore");
+        assert!(missing.is_empty());
+        assert_eq!(
+            snapshot_sequence(&back),
+            mono,
+            "framed round trip must carry exactly the monolithic state"
+        );
+        assert_eq!(
+            snapshot_sequence_frames(&back),
+            frames,
+            "re-serialized frames must be byte-identical"
+        );
+        assert!(frames.total_bytes() > 0);
+    }
+
+    #[test]
+    fn missing_window_frames_are_reported_not_fatal() {
+        let seq = build_sequence(3, 2, 200, 0xF4A4);
+        let frames = snapshot_sequence_frames(&seq);
+        let layer_refs: Vec<(&[u8], Option<&[u8]>)> = frames
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, f)| (f.core.as_slice(), (l != 1).then_some(f.windows.as_slice())))
+            .collect();
+        let (back, missing) = restore_sequence_frames(&frames.meta, &layer_refs).expect("restore");
+        assert_eq!(missing, vec![1]);
+        // Layer 1 came back with empty windows but its quantized state and
+        // token count intact; the other layers are bit-exact.
+        assert_eq!(back.caches[1].head(0).sink_k.len(), 0);
+        assert_eq!(back.caches[1].head(0).len(), seq.caches[1].head(0).len());
+        assert_eq!(back.caches[0], seq.caches[0]);
+        assert_eq!(back.caches[2], seq.caches[2]);
+    }
+
+    #[test]
+    fn pooled_frame_serialization_is_byte_identical() {
+        use crate::util::threadpool::ThreadPool;
+        let seq = build_sequence(4, 2, 180, 0xF4A5);
+        let serial = snapshot_sequence_frames(&seq);
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let pooled = snapshot_sequence_frames_on(&seq, &pool);
+            assert_eq!(pooled, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn frame_headers_reject_wrong_kinds() {
+        let seq = build_sequence(1, 1, 150, 0xF4A6);
+        let frames = snapshot_sequence_frames(&seq);
+        // Core bytes where windows are expected (and vice versa) must fail.
+        let swapped: Vec<(&[u8], Option<&[u8]>)> =
+            vec![(frames.layers[0].windows.as_slice(), Some(frames.layers[0].core.as_slice()))];
+        assert!(restore_sequence_frames(&frames.meta, &swapped).is_err());
+        // Meta frame with a mismatched layer count must fail.
+        assert!(restore_sequence_frames(&frames.meta, &[]).is_err());
     }
 
     #[test]

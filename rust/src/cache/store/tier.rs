@@ -5,55 +5,131 @@
 //! to the free list when a resident leaves — so long-running serving reuses
 //! the same allocations instead of fragmenting the heap with
 //! snapshot-sized `Vec`s. A resident (one preempted sequence's serialized
-//! snapshot, see [`super::snapshot`]) spans however many pooled segments its
-//! payload needs; the final segment is partially filled and the resident
-//! remembers its exact byte length.
+//! snapshot, see [`super::snapshot`]) is a list of *frames* — in practice
+//! the meta frame plus one core/windows pair per layer — each spanning
+//! however many pooled segments its payload needs; the final segment of a
+//! frame is partially filled and the frame remembers its exact byte length.
 //!
-//! Eviction is LRU-with-priority: when an insert needs segments the pool
-//! cannot supply, the tier evicts the least-important (highest priority
-//! class value), least-recently-touched resident — but never one *more*
-//! important than the inserting class, in which case the insert itself is
-//! refused and the caller falls back to recompute-style preemption. Eviction
-//! is terminal: the snapshot is gone, and the scheduler discovers that as a
-//! miss at restore time (its recompute fallback). All bookkeeping is
-//! deterministic (`BTreeMap` iteration, an internal logical clock), so
-//! replays that route through the tier stay byte-identical.
+//! Eviction is LRU-with-priority, refined to frame granularity: when an
+//! insert needs segments the pool cannot supply, the tier first drops
+//! *droppable* frames (the fp-window frames, which dominate snapshot bytes
+//! and are recomputable for prefill-only sequences) of the least-important,
+//! least-recently-touched eligible resident — leaving a *partial* resident
+//! whose quantized cores survive — and only evicts whole residents once no
+//! droppable frame is left. It never destroys state of a resident *more*
+//! important than the inserting class; in that case the insert itself is
+//! refused and the caller falls back to recompute-style preemption. An
+//! insert that cannot fit in full may itself degrade: its own droppable
+//! frames are skipped rather than refusing outright, so `--warm-budget`
+//! admission reserves only what actually fits instead of all-or-nothing.
+//! Whole-resident eviction is terminal; a dropped *frame* surfaces at
+//! restore time as a partial take (the scheduler rebuilds the windows). All
+//! bookkeeping is deterministic (`BTreeMap` iteration, an internal logical
+//! clock), so replays that route through the tier stay byte-identical.
 
 use std::collections::BTreeMap;
 
 /// Default pooled segment size. Snapshots of typical preempted sequences run
-/// tens of KiB, so 16 KiB keeps per-resident waste (< one segment) small
-/// while still amortizing allocation.
+/// tens of KiB, so 16 KiB keeps per-resident waste (< one segment per
+/// frame) small while still amortizing allocation.
 pub const DEFAULT_SEG_BYTES: usize = 16 * 1024;
+
+/// How a frame behaves under tier pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Must stay resident for the snapshot to restore at all (meta frame,
+    /// per-layer quantized cores). Only whole-resident eviction removes it.
+    Required,
+    /// May be dropped under pressure, leaving a partial resident (the
+    /// fp-window frames, recomputable by the engine).
+    Droppable,
+}
 
 /// Monotonic warm-tier counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TierStats {
-    /// Snapshots stored successfully.
+    /// Snapshots stored successfully (full or degraded).
     pub inserts: u64,
-    /// Inserts refused (payload over budget, or only more-important
+    /// Inserts refused (required frames over budget, or only more-important
     /// residents were in the way).
     pub insert_rejected: u64,
-    /// Successful takes (restores).
+    /// Droppable frames skipped at insert time because only the required
+    /// frames fit.
+    pub insert_dropped_frames: u64,
+    /// Successful takes (restores), partial takes included.
     pub hits: u64,
+    /// Takes that came back with at least one frame missing.
+    pub partial_hits: u64,
     /// Takes of ids not resident (never stored, or evicted).
     pub misses: u64,
-    /// Residents evicted to make room for an insert (terminal).
+    /// Residents evicted whole to make room for an insert (terminal).
     pub evictions: u64,
-    /// Payload bytes destroyed by those evictions.
+    /// Payload bytes destroyed by whole-resident evictions.
     pub evicted_bytes: u64,
+    /// Individual droppable frames evicted from surviving residents.
+    pub frame_evictions: u64,
+    /// Payload bytes destroyed by those frame evictions.
+    pub evicted_frame_bytes: u64,
+}
+
+/// One stored frame of a resident.
+#[derive(Debug)]
+struct FrameSlot {
+    /// Pool segment indices holding the payload, in order; empty once the
+    /// frame has been dropped.
+    segs: Vec<u32>,
+    /// Exact payload length (the last segment is partially filled).
+    len: usize,
+    /// Whether pressure may drop this frame individually.
+    droppable: bool,
+    /// False once dropped (at insert time or by frame eviction).
+    present: bool,
 }
 
 #[derive(Debug)]
 struct Resident {
-    /// Pool segment indices holding the payload, in order.
-    segs: Vec<u32>,
-    /// Exact payload length (the last segment is partially filled).
-    len: usize,
+    frames: Vec<FrameSlot>,
     /// Priority class level of the owning request (0 = most important).
     class: u8,
     /// Last-touched stamp from the tier's logical clock (LRU order).
     stamp: u64,
+}
+
+impl Resident {
+    fn present_segs(&self) -> usize {
+        self.frames.iter().filter(|f| f.present).map(|f| f.segs.len()).sum()
+    }
+    fn present_bytes(&self) -> usize {
+        self.frames.iter().filter(|f| f.present).map(|f| f.len).sum()
+    }
+    fn has_droppable(&self) -> bool {
+        self.frames.iter().any(|f| f.present && f.droppable)
+    }
+}
+
+/// Outcome of a successful [`WarmTier::insert_frames`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertReceipt {
+    /// Payload bytes actually stored (degraded inserts store less than was
+    /// offered).
+    pub stored_bytes: usize,
+    /// Droppable frames skipped because only the required set fit.
+    pub dropped_frames: usize,
+}
+
+/// Frames handed back by [`WarmTier::take_frames`], in insertion order.
+/// `None` entries were dropped under pressure while the resident waited.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TakenFrames {
+    /// One entry per inserted frame; `None` = dropped.
+    pub frames: Vec<Option<Vec<u8>>>,
+}
+
+impl TakenFrames {
+    /// True when every frame survived.
+    pub fn is_full(&self) -> bool {
+        self.frames.iter().all(|f| f.is_some())
+    }
 }
 
 /// Fixed-segment warm store for offloaded sequence snapshots.
@@ -99,14 +175,21 @@ impl WarmTier {
         self.max_segs * self.seg_bytes
     }
 
-    /// Number of snapshots currently resident.
+    /// Number of snapshots currently resident (partial residents included).
     pub fn n_residents(&self) -> usize {
         self.residents.len()
     }
 
-    /// True if `id` has a resident snapshot.
+    /// True if `id` has a resident snapshot (possibly partial).
     pub fn contains(&self, id: u64) -> bool {
         self.residents.contains_key(&id)
+    }
+
+    /// True if `id` is resident with at least one frame dropped.
+    pub fn is_partial(&self, id: u64) -> bool {
+        self.residents
+            .get(&id)
+            .map_or(false, |r| r.frames.iter().any(|f| !f.present))
     }
 
     /// Resident ids in ascending order.
@@ -114,9 +197,17 @@ impl WarmTier {
         self.residents.keys().copied()
     }
 
-    /// Exact payload bytes resident (excludes final-segment slack).
+    /// Exact payload bytes resident (excludes final-segment slack and
+    /// dropped frames) — the number `--warm-budget` accounting should use,
+    /// since partial residents really do hold fewer bytes.
     pub fn resident_bytes(&self) -> usize {
-        self.residents.values().map(|r| r.len).sum()
+        self.residents.values().map(|r| r.present_bytes()).sum()
+    }
+
+    /// Exact payload bytes one resident holds right now (`None` when not
+    /// resident). Partial residents report only their surviving frames.
+    pub fn resident_bytes_of(&self, id: u64) -> Option<usize> {
+        self.residents.get(&id).map(|r| r.present_bytes())
     }
 
     /// Pool bytes held by residents, counting final-segment slack.
@@ -132,35 +223,117 @@ impl WarmTier {
         self.free.len() + (self.max_segs - self.segments.len())
     }
 
-    /// Store `payload` for request `id` at priority-class level `class`
-    /// (0 = most important). Replaces any previous resident for `id`.
-    /// Returns false — leaving the tier unchanged apart from counters, any
-    /// previous resident for `id` included — when the payload exceeds the
-    /// whole pool or eviction cannot free enough room without destroying a
-    /// more-important resident.
+    /// Store `payload` for request `id` at priority-class level `class` as
+    /// one required frame. Compatibility form of [`WarmTier::insert_frames`].
     pub fn insert(&mut self, id: u64, class: u8, payload: &[u8]) -> bool {
-        let need = self.segs_for(payload.len());
+        self.insert_frames(id, class, &[(payload, FrameKind::Required)]).is_some()
+    }
+
+    /// Store a multi-frame snapshot for request `id` at priority-class
+    /// level `class` (0 = most important), replacing any previous resident
+    /// for `id`. Returns what was stored, or `None` — leaving the tier
+    /// unchanged apart from counters, any previous resident for `id`
+    /// included — when even the required frames exceed the pool or eviction
+    /// cannot free enough room without destroying a more-important
+    /// resident's state. When everything cannot fit but the required frames
+    /// can, the insert *degrades*: droppable frames are skipped and counted
+    /// in the receipt, so admission reserves only what actually fits.
+    pub fn insert_frames(
+        &mut self,
+        id: u64,
+        class: u8,
+        frames: &[(&[u8], FrameKind)],
+    ) -> Option<InsertReceipt> {
+        let segs_of = |p: &[u8]| self.segs_for(p.len());
+        let need_full: usize = frames.iter().map(|(p, _)| segs_of(p)).sum();
+        let need_required: usize = frames
+            .iter()
+            .filter(|(_, k)| *k == FrameKind::Required)
+            .map(|(p, _)| segs_of(p))
+            .sum();
         // Feasibility before any mutation: the segments a replacement would
-        // free plus everything evictable at this class must cover the need,
-        // otherwise refuse with the tier untouched.
-        let replaced_segs = self.residents.get(&id).map_or(0, |r| r.segs.len());
+        // free plus everything evictable at this class must cover at least
+        // the required frames, otherwise refuse with the tier untouched.
+        let replaced_segs = self.residents.get(&id).map_or(0, |r| r.present_segs());
         let evictable_segs: usize = self
             .residents
             .iter()
             .filter(|(&rid, r)| rid != id && r.class >= class)
-            .map(|(_, r)| r.segs.len())
+            .map(|(_, r)| r.present_segs())
             .sum();
-        if need > self.max_segs
-            || self.available_segs() + replaced_segs + evictable_segs < need
-        {
+        let headroom = self.available_segs() + replaced_segs + evictable_segs;
+        if need_required > self.max_segs || headroom < need_required {
             self.stats.insert_rejected += 1;
-            return false;
+            return None;
         }
+        let store_all = need_full <= self.max_segs && headroom >= need_full;
+        let need = if store_all { need_full } else { need_required };
         self.remove(id);
+        if !self.free_up(need, class) {
+            debug_assert!(false, "insert feasibility check admitted an unfillable need");
+            self.stats.insert_rejected += 1;
+            return None;
+        }
+        let mut slots = Vec::with_capacity(frames.len());
+        let mut stored_bytes = 0usize;
+        let mut dropped = 0usize;
+        for (payload, kind) in frames {
+            let droppable = *kind == FrameKind::Droppable;
+            if droppable && !store_all {
+                dropped += 1;
+                slots.push(FrameSlot { segs: Vec::new(), len: 0, droppable, present: false });
+                continue;
+            }
+            let n_segs = self.segs_for(payload.len());
+            let mut segs = Vec::with_capacity(n_segs);
+            for chunk in 0..n_segs {
+                let si = match self.free.pop() {
+                    Some(si) => si,
+                    None => {
+                        let si = self.segments.len() as u32;
+                        self.segments.push(vec![0u8; self.seg_bytes].into_boxed_slice());
+                        si
+                    }
+                };
+                let lo = chunk * self.seg_bytes;
+                let hi = (lo + self.seg_bytes).min(payload.len());
+                self.segments[si as usize][..hi - lo].copy_from_slice(&payload[lo..hi]);
+                segs.push(si);
+            }
+            stored_bytes += payload.len();
+            slots.push(FrameSlot { segs, len: payload.len(), droppable, present: true });
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        self.residents.insert(id, Resident { frames: slots, class, stamp });
+        self.stats.inserts += 1;
+        self.stats.insert_dropped_frames += dropped as u64;
+        Some(InsertReceipt { stored_bytes, dropped_frames: dropped })
+    }
+
+    /// Free pooled segments until at least `need` are available, destroying
+    /// only state of residents whose class is `>= class` (never anything
+    /// more important): droppable frames first — least-important,
+    /// least-recently-touched resident, last droppable frame first — then
+    /// whole residents in the same order. Returns false if the target
+    /// cannot be met (callers precheck, so this is a defensive rail).
+    fn free_up(&mut self, need: usize, class: u8) -> bool {
         while self.available_segs() < need {
-            // Least-important class first, then least recently touched; the
-            // id tiebreak keeps the choice total (and so deterministic). The
-            // feasibility check above guarantees a victim exists.
+            // Pass 1: drop one droppable frame. Ordering mirrors resident
+            // eviction: highest class value (least important) first, then
+            // least recently touched, then smallest id — total, so
+            // deterministic.
+            let frame_victim = self
+                .residents
+                .iter()
+                .filter(|(_, r)| r.class >= class && r.has_droppable())
+                .max_by_key(|(&vid, r)| (r.class, std::cmp::Reverse(r.stamp), std::cmp::Reverse(vid)))
+                .map(|(&vid, _)| vid);
+            if let Some(vid) = frame_victim {
+                self.drop_one_frame(vid);
+                continue;
+            }
+            // Pass 2: evict a whole resident.
             let victim = self
                 .residents
                 .iter()
@@ -169,40 +342,33 @@ impl WarmTier {
                 .map(|(&vid, _)| vid);
             match victim {
                 Some(vid) => self.evict(vid),
-                None => {
-                    debug_assert!(false, "insert feasibility check admitted an unfillable need");
-                    self.stats.insert_rejected += 1;
-                    return false;
-                }
+                None => return false,
             }
         }
-        let mut segs = Vec::with_capacity(need);
-        for chunk in 0..need {
-            let si = match self.free.pop() {
-                Some(si) => si,
-                None => {
-                    let si = self.segments.len() as u32;
-                    self.segments.push(vec![0u8; self.seg_bytes].into_boxed_slice());
-                    si
-                }
-            };
-            let lo = chunk * self.seg_bytes;
-            let hi = (lo + self.seg_bytes).min(payload.len());
-            self.segments[si as usize][..hi - lo].copy_from_slice(&payload[lo..hi]);
-            segs.push(si);
-        }
-        self.clock += 1;
-        let stamp = self.clock;
-        self.residents.insert(id, Resident { segs, len: payload.len(), class, stamp });
-        self.stats.inserts += 1;
         true
+    }
+
+    /// Drop the last present droppable frame of `id` (later layers' windows
+    /// go first), returning its segments to the free list.
+    fn drop_one_frame(&mut self, id: u64) {
+        if let Some(r) = self.residents.get_mut(&id) {
+            if let Some(f) = r.frames.iter_mut().rev().find(|f| f.present && f.droppable) {
+                f.present = false;
+                self.stats.frame_evictions += 1;
+                self.stats.evicted_frame_bytes += f.len as u64;
+                self.free.extend(std::mem::take(&mut f.segs));
+                f.len = 0;
+            }
+        }
     }
 
     fn evict(&mut self, id: u64) {
         if let Some(r) = self.residents.remove(&id) {
             self.stats.evictions += 1;
-            self.stats.evicted_bytes += r.len as u64;
-            self.free.extend(r.segs);
+            self.stats.evicted_bytes += r.present_bytes() as u64;
+            for f in r.frames {
+                self.free.extend(f.segs);
+            }
         }
     }
 
@@ -212,17 +378,19 @@ impl WarmTier {
     pub fn remove(&mut self, id: u64) -> bool {
         match self.residents.remove(&id) {
             Some(r) => {
-                self.free.extend(r.segs);
+                for f in r.frames {
+                    self.free.extend(f.segs);
+                }
                 true
             }
             None => false,
         }
     }
 
-    fn assemble(&self, r: &Resident) -> Vec<u8> {
-        let mut out = Vec::with_capacity(r.len);
-        let mut left = r.len;
-        for &si in &r.segs {
+    fn assemble(&self, f: &FrameSlot) -> Vec<u8> {
+        let mut out = Vec::with_capacity(f.len);
+        let mut left = f.len;
+        for &si in &f.segs {
             let take = left.min(self.seg_bytes);
             out.extend_from_slice(&self.segments[si as usize][..take]);
             left -= take;
@@ -231,8 +399,8 @@ impl WarmTier {
         out
     }
 
-    /// Cheap pre-check for [`WarmTier::insert`]: false when the tier has no
-    /// capacity at all, or every pooled segment is held by strictly
+    /// Cheap pre-check for [`WarmTier::insert_frames`]: false when the tier
+    /// has no capacity at all, or every pooled segment is held by strictly
     /// more-important residents — an insert at `class` cannot possibly
     /// succeed, so callers can skip building the payload (the scheduler
     /// checks this before serializing a preemption victim).
@@ -244,14 +412,51 @@ impl WarmTier {
     }
 
     /// Read a resident's payload and remove it, returning its segments to
-    /// the free list — the restore path.
+    /// the free list — the whole-payload restore path. Returns `None` (a
+    /// miss) when `id` is not resident *or* when any of its frames was
+    /// dropped (a concatenation with holes would be garbage); frame-aware
+    /// callers use [`WarmTier::take_frames`] instead, which can act on a
+    /// partial resident.
     pub fn take(&mut self, id: u64) -> Option<Vec<u8>> {
+        if self.is_partial(id) {
+            self.remove(id);
+            self.stats.misses += 1;
+            return None;
+        }
+        self.take_frames(id).map(|t| {
+            let mut out = Vec::new();
+            for f in t.frames.into_iter().flatten() {
+                out.extend_from_slice(&f);
+            }
+            out
+        })
+    }
+
+    /// Read a resident's frames and remove it, returning its segments to
+    /// the free list — the frame-aware restore path. Dropped frames come
+    /// back as `None`; the take still counts as a (partial) hit because the
+    /// surviving frames spare real recompute work.
+    pub fn take_frames(&mut self, id: u64) -> Option<TakenFrames> {
         match self.residents.remove(&id) {
             Some(r) => {
-                let out = self.assemble(&r);
-                self.free.extend(r.segs);
+                let mut frames = Vec::with_capacity(r.frames.len());
+                let mut partial = false;
+                for f in &r.frames {
+                    if f.present {
+                        frames.push(Some(self.assemble(f)));
+                    } else {
+                        frames.push(None);
+                        partial = true;
+                    }
+                }
+                for f in r.frames {
+                    self.free.extend(f.segs);
+                }
                 self.stats.hits += 1;
-                Some(out)
+                if partial {
+                    self.stats.partial_hits += 1;
+                }
+                Some(TakenFrames { frames })
             }
             None => {
                 self.stats.misses += 1;
@@ -379,5 +584,96 @@ mod tests {
         assert_eq!(t.n_residents(), 1);
         assert_eq!(t.take(5), Some(payload(2048, 9)));
         assert_eq!(t.reserved_bytes(), 0);
+    }
+
+    // -- frame-granular behavior ------------------------------------------
+
+    fn frames3(core: &[u8], win_a: &[u8], win_b: &[u8]) -> Vec<(Vec<u8>, FrameKind)> {
+        vec![
+            (core.to_vec(), FrameKind::Required),
+            (win_a.to_vec(), FrameKind::Droppable),
+            (win_b.to_vec(), FrameKind::Droppable),
+        ]
+    }
+
+    fn as_refs(fs: &[(Vec<u8>, FrameKind)]) -> Vec<(&[u8], FrameKind)> {
+        fs.iter().map(|(p, k)| (p.as_slice(), *k)).collect()
+    }
+
+    #[test]
+    fn framed_round_trip_preserves_every_frame() {
+        let mut t = tier(8);
+        let fs = frames3(&payload(1500, 1), &payload(800, 2), &payload(900, 3));
+        let receipt = t.insert_frames(9, 1, &as_refs(&fs)).expect("insert");
+        assert_eq!(receipt.stored_bytes, 1500 + 800 + 900);
+        assert_eq!(receipt.dropped_frames, 0);
+        assert_eq!(t.resident_bytes_of(9), Some(1500 + 800 + 900));
+        let got = t.take_frames(9).expect("take");
+        assert!(got.is_full());
+        for (want, have) in fs.iter().zip(&got.frames) {
+            assert_eq!(have.as_ref().unwrap(), &want.0);
+        }
+        assert_eq!(t.stats.partial_hits, 0);
+        assert_eq!(t.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn pressure_drops_droppable_frames_before_whole_residents() {
+        let mut t = tier(4);
+        // Resident 1: 1 required + 2 droppable segments — fills 3 of 4.
+        let fs = frames3(&payload(1024, 1), &payload(1024, 2), &payload(1024, 3));
+        assert!(t.insert_frames(1, 1, &as_refs(&fs)).is_some());
+        // A 3-segment insert must drop resident 1's window frames (last
+        // first), not evict it.
+        assert!(t.insert(2, 1, &payload(3 * 1024, 9)));
+        assert!(t.contains(1), "resident must survive as partial");
+        assert!(t.is_partial(1));
+        assert_eq!(t.stats.frame_evictions, 2);
+        assert_eq!(t.stats.evicted_frame_bytes, 2 * 1024);
+        assert_eq!(t.stats.evictions, 0);
+        assert_eq!(t.resident_bytes_of(1), Some(1024), "only the core remains");
+        let got = t.take_frames(1).expect("partial take");
+        assert!(!got.is_full());
+        assert_eq!(got.frames[0].as_deref(), Some(payload(1024, 1).as_slice()));
+        assert_eq!(got.frames[1], None);
+        assert_eq!(got.frames[2], None);
+        assert_eq!(t.stats.partial_hits, 1);
+    }
+
+    #[test]
+    fn degraded_insert_stores_required_frames_only() {
+        let mut t = tier(2);
+        // Required fits, the full set does not: degrade instead of refuse.
+        let fs = frames3(&payload(1024, 1), &payload(1024, 2), &payload(1024, 3));
+        let receipt = t.insert_frames(5, 1, &as_refs(&fs)).expect("degraded insert");
+        assert_eq!(receipt.dropped_frames, 2);
+        assert_eq!(receipt.stored_bytes, 1024);
+        assert!(t.is_partial(5));
+        assert_eq!(t.stats.insert_dropped_frames, 2);
+        let got = t.take_frames(5).expect("take");
+        assert_eq!(got.frames[0].as_deref(), Some(payload(1024, 1).as_slice()));
+        assert!(got.frames[1].is_none() && got.frames[2].is_none());
+    }
+
+    #[test]
+    fn whole_take_refuses_partial_residents() {
+        let mut t = tier(2);
+        let fs = frames3(&payload(1024, 1), &payload(1024, 2), &payload(512, 3));
+        assert!(t.insert_frames(6, 1, &as_refs(&fs)).is_some()); // degraded
+        assert!(t.is_partial(6));
+        assert_eq!(t.take(6), None, "monolithic take must not hand back holes");
+        assert!(!t.contains(6));
+        assert_eq!(t.stats.misses, 1);
+    }
+
+    #[test]
+    fn frame_drops_never_touch_more_important_residents() {
+        let mut t = tier(3);
+        let fs = frames3(&payload(1024, 1), &payload(1024, 2), &payload(1024, 3));
+        assert!(t.insert_frames(1, 0, &as_refs(&fs)).is_some()); // interactive
+        // Batch insert: cannot drop interactive windows, must refuse.
+        assert!(t.insert_frames(2, 2, &as_refs(&fs)).is_none());
+        assert!(!t.is_partial(1), "interactive frames must be untouched");
+        assert_eq!(t.stats.frame_evictions, 0);
     }
 }

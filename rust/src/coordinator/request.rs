@@ -246,7 +246,8 @@ impl SchedEvent {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepMetrics {
     /// Prompt tokens run through prefill executables (recomputation after a
-    /// preemption counts again).
+    /// preemption counts again, as does the prefill pass behind a
+    /// partial-restore window rebuild).
     pub prefill_tokens: u64,
     /// Decode steps executed (one per tick with live work).
     pub decode_steps: u64,
@@ -277,6 +278,13 @@ pub struct StepMetrics {
     /// Readmissions that found their snapshot evicted from the warm tier
     /// and fell back to a recompute-style re-prefill.
     pub offload_lost: u64,
+    /// Droppable fp-window frames skipped at offload time because only the
+    /// required frames fit the warm budget (partial residency from birth).
+    pub window_frames_dropped: u64,
+    /// Layers whose fp windows were recomputed at restore time because
+    /// their window frames had been evicted from (or never stored in) the
+    /// warm tier.
+    pub window_rebuilds: u64,
     /// Smaller lower-priority requests admitted past a parked queue head
     /// under the SLO policy's bounded bypass.
     pub bypass_admissions: u64,

@@ -54,13 +54,15 @@
 //!   (terminal "dropped" state), readmission falls back to a re-prefill and
 //!   emits [`SchedEvent::OffloadLost`].
 
-use crate::cache::store::{snapshot_sequence, restore_sequence, WarmTier, DEFAULT_SEG_BYTES};
+use crate::cache::store::{
+    restore_sequence_frames, snapshot_sequence_frames_on, FrameKind, WarmTier, DEFAULT_SEG_BYTES,
+};
 use crate::cache::{Admission, CachePool};
 use crate::coordinator::batcher;
-use crate::coordinator::engine::{Engine, Sequence};
+use crate::coordinator::engine::{Engine, PipelineMode, Sequence};
 use crate::coordinator::request::{Completion, Priority, Request, SchedEvent, StepMetrics};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
@@ -263,6 +265,13 @@ impl Scheduler {
     /// Resize the engine's attention worker pool (1 = serial baseline).
     pub fn set_workers(&mut self, workers: usize) {
         self.engine.set_workers(workers);
+    }
+
+    /// Switch the engine's decode-step execution mode (default
+    /// [`PipelineMode::Overlap`]; `barrier` retains the phase-barriered
+    /// oracle path).
+    pub fn set_pipeline(&mut self, mode: PipelineMode) {
+        self.engine.set_pipeline(mode);
     }
 
     /// Switch the admission/preemption policy (default [`Policy::Fifo`]).
@@ -541,17 +550,42 @@ impl Scheduler {
     /// Evict the live sequence at `vidx` under the active preemption mode:
     /// offload snapshots it into the warm tier (falling back to recompute if
     /// the tier refuses); recompute discards its cache and re-queues it.
+    ///
+    /// Offload serializes the victim as per-layer frames *on the engine's
+    /// worker pool* (serialization is read-only over the victim's caches),
+    /// so the driver no longer encodes the whole image inside the admission
+    /// loop. The fp-window frames are marked droppable when the victim has
+    /// no decoded appends (their rows are then recomputable from a prefill
+    /// pass), letting the tier hold a partial residency under pressure —
+    /// and letting a tight `--warm-budget` store just the quantized cores
+    /// instead of refusing. `offload_bytes` accounts only what the tier
+    /// actually stored, so warm accounting matches partial residencies.
     fn preempt_victim(&mut self, vidx: usize) {
         let l = self.live.swap_remove(vidx);
         self.pool.release(l.req.id);
         self.metrics.preemptions += 1;
         if self.preemption == Preemption::Offload && self.tier.may_accept(l.req.priority.level()) {
-            let payload = snapshot_sequence(&l.seq);
-            let bytes = payload.len();
-            if self.tier.insert(l.req.id, l.req.priority.level(), &payload) {
+            let frames = snapshot_sequence_frames_on(&l.seq, self.engine.pool());
+            let windows_droppable = l.seq.len() == l.seq.n_prefill;
+            let win_kind = if windows_droppable {
+                FrameKind::Droppable
+            } else {
+                FrameKind::Required
+            };
+            let mut parts: Vec<(&[u8], FrameKind)> =
+                Vec::with_capacity(1 + 2 * frames.layers.len());
+            parts.push((frames.meta.as_slice(), FrameKind::Required));
+            for lf in &frames.layers {
+                parts.push((lf.core.as_slice(), FrameKind::Required));
+                parts.push((lf.windows.as_slice(), win_kind));
+            }
+            if let Some(receipt) =
+                self.tier.insert_frames(l.req.id, l.req.priority.level(), &parts)
+            {
                 self.metrics.offloads += 1;
-                self.metrics.offload_bytes += bytes as u64;
-                self.event(SchedEvent::Offloaded { id: l.req.id, bytes });
+                self.metrics.offload_bytes += receipt.stored_bytes as u64;
+                self.metrics.window_frames_dropped += receipt.dropped_frames as u64;
+                self.event(SchedEvent::Offloaded { id: l.req.id, bytes: receipt.stored_bytes });
                 self.warm.push(Warm {
                     req: l.req,
                     submitted_us: l.submitted_us,
@@ -561,8 +595,9 @@ impl Scheduler {
                 });
                 return;
             }
-            // The tier could not hold the snapshot (over its budget, or only
-            // more-important residents in the way): recompute-style fallback.
+            // The tier could not hold even the required frames (over its
+            // budget, or only more-important residents in the way):
+            // recompute-style fallback.
         }
         self.event(SchedEvent::Preempted { id: l.req.id });
         self.queue.push_back(Queued { req: l.req, submitted_us: l.submitted_us });
@@ -700,44 +735,91 @@ impl Scheduler {
         });
     }
 
-    /// Readmit an offloaded request: deserialize its snapshot from the warm
-    /// tier back into a live sequence (no re-prefill, decode progress
-    /// preserved). A missing snapshot — evicted from the tier since the
-    /// preemption — falls back to a recompute-style re-prefill with the
+    /// Readmit an offloaded request: deserialize its per-layer snapshot
+    /// frames from the warm tier back into a live sequence (no re-prefill,
+    /// decode progress preserved). A *partial* residency — window frames
+    /// evicted under pressure while the request waited — restores the
+    /// quantized cores bit-exactly and recomputes only the fp windows
+    /// (`Engine::rebuild_windows`); decoding then continues bit-identically
+    /// to a never-offloaded run. A fully missing snapshot — the resident
+    /// evicted whole — falls back to a recompute-style re-prefill with the
     /// generated tokens discarded. The caller has already reserved cache
     /// budget under `w.req.id`.
     fn restore_into_live(&mut self, w: Warm) {
-        match self.tier.take(w.req.id) {
-            Some(payload) => match restore_sequence(&payload) {
-                Ok(seq) => {
-                    self.metrics.restores += 1;
-                    self.metrics.restore_bytes += payload.len() as u64;
-                    self.event(SchedEvent::Restored { id: w.req.id, bytes: payload.len() });
-                    self.live.push(Live {
-                        req: w.req,
-                        submitted_us: w.submitted_us,
-                        seq,
-                        generated: w.generated,
-                        next_token: w.next_token,
-                        ttft_us: w.ttft_us,
-                    });
+        let Some(taken) = self.tier.take_frames(w.req.id) else {
+            // Dropped from the warm tier (terminal for the snapshot):
+            // recompute-style readmission under the reservation we hold.
+            self.metrics.offload_lost += 1;
+            self.event(SchedEvent::OffloadLost { id: w.req.id });
+            self.prefill_into_live(Queued { req: w.req, submitted_us: w.submitted_us });
+            return;
+        };
+        // Frame layout written by `preempt_victim`:
+        // [meta, core_0, windows_0, core_1, windows_1, ...]. Required
+        // frames only vanish via whole-resident eviction (handled above),
+        // so a hole in them is corruption, not capacity.
+        let restored = (|| -> Result<(Sequence, Vec<usize>, usize)> {
+            let n = taken.frames.len();
+            if n == 0 || (n - 1) % 2 != 0 {
+                return Err(anyhow!("malformed snapshot frame set ({n} frames)"));
+            }
+            let meta = taken.frames[0]
+                .as_deref()
+                .ok_or_else(|| anyhow!("sequence meta frame missing"))?;
+            let mut bytes = meta.len();
+            let mut layers: Vec<(&[u8], Option<&[u8]>)> = Vec::with_capacity((n - 1) / 2);
+            for pair in taken.frames[1..].chunks(2) {
+                let core = pair[0]
+                    .as_deref()
+                    .ok_or_else(|| anyhow!("layer core frame missing"))?;
+                let win = pair[1].as_deref();
+                bytes += core.len() + win.map_or(0, |p| p.len());
+                layers.push((core, win));
+            }
+            let (seq, missing) = restore_sequence_frames(meta, &layers)?;
+            Ok((seq, missing, bytes))
+        })();
+        match restored {
+            Ok((mut seq, missing, bytes)) => {
+                if !missing.is_empty() {
+                    if let Err(e) = self.engine.rebuild_windows(&mut seq, &missing) {
+                        self.pool.release(w.req.id);
+                        self.metrics.rejected += 1;
+                        self.event(SchedEvent::Rejected { id: w.req.id });
+                        self.done.push(Completion::failed(
+                            &w.req,
+                            format!("window rebuild failed: {e}"),
+                        ));
+                        return;
+                    }
+                    self.metrics.window_rebuilds += missing.len() as u64;
+                    // The rebuild ran one real prefill pass over the
+                    // sequence's tokens; account it as prefill work so the
+                    // replay cost model prices a degraded restore honestly
+                    // (core restore + model pass) instead of treating it as
+                    // a free full restore.
+                    self.metrics.prefill_tokens += seq.n_prefill as u64;
                 }
-                Err(e) => {
-                    // A snapshot that fails to deserialize is a bug, not a
-                    // capacity condition; fail the request, keep serving.
-                    self.pool.release(w.req.id);
-                    self.metrics.rejected += 1;
-                    self.event(SchedEvent::Rejected { id: w.req.id });
-                    self.done
-                        .push(Completion::failed(&w.req, format!("snapshot restore failed: {e}")));
-                }
-            },
-            None => {
-                // Dropped from the warm tier (terminal for the snapshot):
-                // recompute-style readmission under the reservation we hold.
-                self.metrics.offload_lost += 1;
-                self.event(SchedEvent::OffloadLost { id: w.req.id });
-                self.prefill_into_live(Queued { req: w.req, submitted_us: w.submitted_us });
+                self.metrics.restores += 1;
+                self.metrics.restore_bytes += bytes as u64;
+                self.event(SchedEvent::Restored { id: w.req.id, bytes });
+                self.live.push(Live {
+                    req: w.req,
+                    submitted_us: w.submitted_us,
+                    seq,
+                    generated: w.generated,
+                    next_token: w.next_token,
+                    ttft_us: w.ttft_us,
+                });
+            }
+            Err(e) => {
+                // A snapshot that fails to deserialize is a bug, not a
+                // capacity condition; fail the request, keep serving.
+                self.pool.release(w.req.id);
+                self.metrics.rejected += 1;
+                self.event(SchedEvent::Rejected { id: w.req.id });
+                self.done
+                    .push(Completion::failed(&w.req, format!("snapshot restore failed: {e}")));
             }
         }
     }

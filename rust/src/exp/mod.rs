@@ -153,7 +153,7 @@ pub fn msparsity(manifest: &Manifest) -> Result<()> {
         let mut seq = engine.prefill(&tokens[..tokens.len() - 1])?;
         engine.decode_step(&mut [&mut seq], &[*tokens.last().unwrap()])?;
         for layer in &seq.caches {
-            for hc in layer {
+            for hc in layer.heads() {
                 if let ValSegment::Inner(s) = &hc.qv {
                     for p in &s.params {
                         total += 1;

@@ -9,8 +9,73 @@
 //! every chunk. On a GPU the same structure shows up as per-lane scale loads
 //! with no reuse across the warp (§4.4, Fig. 1a); on CPU it shows up as the
 //! extra `qs`/`zs` buffer traffic and per-chunk setup measured in Table 4.
+//!
+//! The key kernel is *blocked* like `gemv_inner::qk_inner`: 4 token rows per
+//! pass, with the hoisted `q_c·s_c` plane and the zero term loaded once per
+//! block and the four rows' accumulator chains interleaving in the OoO
+//! window. Per row the floating-point operation order is exactly the
+//! retained scalar reference's ([`qk_outer_chunk_ref`]), so the blocked
+//! kernel is bit-identical for any row count — asserted across the full
+//! bits × d_h × mode × tail-length matrix in `tests/kernel_parity.rs` and
+//! before every timing run in `benches/kernel_throughput.rs`. Layout and
+//! blocking rationale: `kernels/DESIGN.md`.
 
 use crate::quant::packing::{packed_len, unpack32_f32};
+
+/// Shared per-call guards for the blocked and reference key kernels.
+fn qk_outer_guards(
+    q: &[f32],
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    scratch: &[f32],
+    n_rows: usize,
+) {
+    debug_assert!(n_rows <= 32);
+    debug_assert_eq!(q.len(), d_h);
+    debug_assert_eq!(scales.len(), d_h);
+    debug_assert_eq!(zeffs.len(), d_h);
+    debug_assert!(scratch.len() >= d_h);
+    let row_bytes = (d_h / 32) * packed_len(32, bits);
+    debug_assert!(chunk_codes.len() >= n_rows * row_bytes);
+    let _ = (q, chunk_codes, scales, zeffs, scratch);
+}
+
+/// One block of `R` token rows against the hoisted `q_c·s_c` plane. Per row
+/// the operation order is exactly the scalar reference's (group-ascending,
+/// 16-lane split accumulation over the two halves, sequential lane sum at
+/// the end), so any `R` produces bit-identical scores.
+#[inline(always)]
+fn qk_outer_block<const R: usize>(
+    rows: [&[u8]; R],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    gbytes: usize,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let mut row_acc = [[0f32; 16]; R];
+    let mut buf = [0f32; 32];
+    for g in 0..d_h / 32 {
+        let qs = &qs_plane[g * 32..(g + 1) * 32];
+        for r in 0..R {
+            unpack32_f32(&rows[r][g * gbytes..], bits, &mut buf);
+            for half in 0..2 {
+                let (qh, bh) =
+                    (&qs[half * 16..(half + 1) * 16], &buf[half * 16..(half + 1) * 16]);
+                for i in 0..16 {
+                    row_acc[r][i] += qh[i] * bh[i];
+                }
+            }
+        }
+    }
+    for r in 0..R {
+        out[r] = row_acc[r].iter().sum::<f32>() + zacc;
+    }
+}
 
 /// Key-cache scores, KIVI layout. One chunk = 32 consecutive tokens:
 ///
@@ -21,6 +86,8 @@ use crate::quant::packing::{packed_len, unpack32_f32};
 ///   shorter only transiently during bulk prefill quantization).
 ///
 /// `scratch` must hold `d_h` f32; it carries the hoisted `q_c·s_c` products.
+/// Blocked 4 rows per pass; bit-identical to [`qk_outer_chunk_ref`] for any
+/// row count.
 #[allow(clippy::too_many_arguments)] // kernel ABI: planar planes are separate planes by design
 pub fn qk_outer_chunk(
     q: &[f32],
@@ -33,17 +100,63 @@ pub fn qk_outer_chunk(
     out: &mut [f32],
 ) {
     let n_rows = out.len();
-    debug_assert!(n_rows <= 32);
-    debug_assert_eq!(q.len(), d_h);
-    debug_assert_eq!(scales.len(), d_h);
-    debug_assert_eq!(zeffs.len(), d_h);
-    debug_assert!(scratch.len() >= d_h);
+    qk_outer_guards(q, chunk_codes, scales, zeffs, bits, d_h, scratch, n_rows);
     let gbytes = packed_len(32, bits);
     let row_bytes = (d_h / 32) * gbytes;
-    debug_assert!(chunk_codes.len() >= n_rows * row_bytes);
 
-    // Hoist per-channel scale/zero into query space: one pass over d_h,
-    // straight multiplies over contiguous planes (no pair deinterleave).
+    // Hoist per-channel scale/zero into query space once per chunk: one
+    // pass over d_h, straight multiplies over contiguous planes (no pair
+    // deinterleave). The plane is then loaded once per 4-row block.
+    let mut zacc = 0.0f32;
+    for c in 0..d_h {
+        scratch[c] = q[c] * scales[c];
+        zacc += q[c] * zeffs[c];
+    }
+
+    let mut j = 0usize;
+    while j + 4 <= n_rows {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &chunk_codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        qk_outer_block::<4>(rows, scratch, zacc, bits, gbytes, d_h, &mut out[j..j + 4]);
+        j += 4;
+    }
+    // Tail rows (n_rows % 4) go through the same block kernel one row at a
+    // time — identical per-row op order, so the tail is bit-identical too.
+    while j < n_rows {
+        qk_outer_block::<1>(
+            [&chunk_codes[j * row_bytes..(j + 1) * row_bytes]],
+            scratch,
+            zacc,
+            bits,
+            gbytes,
+            d_h,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}
+
+/// Scalar reference for [`qk_outer_chunk`]: one row at a time. Retained as
+/// the blocked kernel's bit-exactness oracle (the parity tests assert
+/// `qk_outer_chunk == qk_outer_chunk_ref` exactly) and as the pre-blocking
+/// production shape, so the kernel bench's baseline comparison stays
+/// honest.
+#[allow(clippy::too_many_arguments)] // kernel ABI mirrors the blocked entry point
+pub fn qk_outer_chunk_ref(
+    q: &[f32],
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let n_rows = out.len();
+    qk_outer_guards(q, chunk_codes, scales, zeffs, bits, d_h, scratch, n_rows);
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+
     let mut zacc = 0.0f32;
     for c in 0..d_h {
         scratch[c] = q[c] * scales[c];

@@ -16,12 +16,11 @@
 //! walkthrough, and `kernels/DESIGN.md` for the kernel layout/blocking
 //! rationale.
 
-// The public serving surface (coordinator, cache, workload) is fully
+// The public serving surface (coordinator, cache, workload, util) is fully
 // documented; modules still awaiting their rustdoc pass opt out explicitly
 // below — shrink that list as passes land, don't grow it.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod util;
 pub mod cache;
 #[allow(missing_docs)]

@@ -4,10 +4,13 @@
 //! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
 //!                    [--budget BYTES] [--policy fifo|slo]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
+//!                    [--pipeline barrier|overlap]
 //! innerq generate    --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
+//!                    [--pipeline barrier|overlap]
 //! innerq serve-trace [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
 //!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
+//!                    [--pipeline barrier|overlap]
 //!                    [--method M] [--interactive FRAC] [--deadline-ms D]
 //!                    [--json PATH] [--fake]
 //! innerq exp         table1|table2|table3|table7|fig5|msparsity|simulate|all
@@ -16,6 +19,11 @@
 //!
 //! `--workers N` sizes the decode-attention worker pool (default 1 = the
 //! serial baseline; the driver thread counts as one worker).
+//!
+//! `--pipeline overlap` (the default) runs each decode step as one task
+//! graph of fused append+attend jobs chained between driver-only PJRT
+//! stages; `barrier` retains the phase-barriered loop as the bit-exactness
+//! oracle — both produce byte-identical results at any worker count.
 //!
 //! `--preemption offload` parks preemption victims' quantized caches in the
 //! segcache-style warm tier (`cache::store`) and restores them on
@@ -31,7 +39,7 @@
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
 
 use anyhow::{anyhow, Result};
-use innerq::coordinator::{Policy, Preemption, Request, Scheduler};
+use innerq::coordinator::{PipelineMode, Policy, Preemption, Request, Scheduler};
 use innerq::runtime::Manifest;
 use innerq::workload::replay::{replay, CostModel};
 use innerq::workload::trace::{generate_timed, Arrival, TimedTraceConfig};
@@ -104,11 +112,18 @@ fn preemption(args: &Args) -> Result<Preemption> {
         .ok_or_else(|| anyhow!("unknown preemption mode '{name}'; one of: recompute, offload"))
 }
 
+fn pipeline(args: &Args) -> Result<PipelineMode> {
+    let name = args.get("pipeline", "overlap");
+    PipelineMode::parse(&name)
+        .ok_or_else(|| anyhow!("unknown pipeline mode '{name}'; one of: barrier, overlap"))
+}
+
 /// Apply the shared scheduling flags (`--policy`, `--preemption`,
-/// `--warm-budget`) to a freshly built scheduler.
+/// `--warm-budget`, `--pipeline`) to a freshly built scheduler.
 fn configure_sched(sched: &mut Scheduler, args: &Args) -> Result<()> {
     sched.set_policy(policy(args)?);
     sched.set_preemption(preemption(args)?);
+    sched.set_pipeline(pipeline(args)?);
     if args.has("warm-budget") {
         sched.set_warm_budget(args.get("warm-budget", "0").parse()?);
     }
@@ -162,10 +177,12 @@ fn main() -> Result<()> {
             configure_sched(&mut sched, &args)?;
             let addr = args.get("addr", "127.0.0.1:7071");
             eprintln!(
-                "[serve] method={} addr={addr} workers={workers} policy={:?} preemption={}",
+                "[serve] method={} addr={addr} workers={workers} policy={:?} preemption={} \
+                 pipeline={}",
                 m.name(),
                 sched.policy(),
-                sched.preemption().name()
+                sched.preemption().name(),
+                sched.engine.pipeline().name()
             );
             innerq::server::serve(
                 sched,
@@ -182,6 +199,7 @@ fn main() -> Result<()> {
             let workers: usize = args.get("workers", "1").parse()?;
             let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
             engine.set_workers(workers);
+            engine.set_pipeline(pipeline(&args)?);
             let mut sched = Scheduler::new(engine, 1 << 30);
             sched.submit(Request::new(0, &prompt, max_new));
             let done = sched.run_to_completion()?;
@@ -283,10 +301,13 @@ fn main() -> Result<()> {
                  \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
                  \n              --budget BYTES --policy fifo|slo\
                  \n              --preemption recompute|offload --warm-budget BYTES\
+                 \n              --pipeline barrier|overlap\
                  \n  generate    --prompt S --method M --max-new N --workers N\
+                 \n              --pipeline barrier|overlap\
                  \n  serve-trace --arrival poisson|bursty|ramp|batch --rate R --requests N\
                  \n              --seed S --budget BYTES --policy fifo|slo --workers N\
                  \n              --preemption recompute|offload --warm-budget BYTES\
+                 \n              --pipeline barrier|overlap\
                  \n              --interactive FRAC --deadline-ms D --json PATH --fake\
                  \n  exp         table1|table2|table3|table7|fig5|msparsity|simulate|all\
                  \n  info        --artifacts DIR\n\

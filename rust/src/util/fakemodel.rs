@@ -17,16 +17,25 @@
 use crate::workload::corpus::CHARSET;
 use std::path::PathBuf;
 
-/// Model geometry of the fake artifacts (small, but multi-layer / multi-head
-/// so the decode fan-out is exercised): vocab 25 (BOS + 24-char charset),
-/// d_model 8, 2 layers, 4 query heads over 2 KV heads, d_h 32.
+// Model geometry of the fake artifacts: small, but multi-layer / multi-head
+// so the decode fan-out is exercised, and d_h = 32 so quantized segments
+// (one 32-wide group per row) engage for real.
+
+/// Vocabulary size (BOS + the 24-character corpus charset).
 pub const VOCAB: usize = 25;
+/// Model (residual stream) width.
 pub const D_MODEL: usize = 8;
+/// Transformer layer count.
 pub const N_LAYERS: usize = 2;
+/// Query head count.
 pub const N_Q: usize = 4;
+/// KV head count (2 query heads share each KV head).
 pub const N_KV: usize = 2;
+/// Attention head dimension (exactly one 32-wide quantization group).
 pub const D_H: usize = 32;
+/// Decode batch buckets baked into the fake manifest.
 pub const DECODE_BATCHES: [usize; 3] = [1, 2, 4];
+/// Prefill length buckets baked into the fake manifest.
 pub const PREFILL_BUCKETS: [usize; 2] = [64, 128];
 
 /// Build a fake artifact directory under the system temp dir. `tag` keeps

@@ -9,44 +9,59 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// One JSON value. Objects use a `BTreeMap`, so emission order is sorted
+/// and deterministic — the replay/bench byte-identity contracts depend on
+/// that.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (parsed/emitted as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -67,6 +82,7 @@ impl Json {
             .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
     }
 
+    /// Parse a complete JSON document (trailing bytes are an error).
     pub fn parse(s: &str) -> Result<Json, String> {
         let b = s.as_bytes();
         let mut pos = 0usize;
@@ -78,21 +94,26 @@ impl Json {
         Ok(v)
     }
 
+    /// Emit compact JSON (sorted object keys; deterministic).
     pub fn dump(&self) -> String {
         let mut out = String::new();
         emit(self, &mut out);
         out
     }
 
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build a numeric array from f64 values.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
+    /// Build a numeric array from f32 values (widened to f64).
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
+    /// Build a string value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }

@@ -8,8 +8,13 @@
 
 use super::rng::Rng;
 
+/// Property-check configuration: the base seed and how many random cases
+/// to run.
 pub struct PropCfg {
+    /// Base seed; each case derives its own RNG from it, so any failure
+    /// reproduces from (seed, case index).
     pub seed: u64,
+    /// Number of random cases to generate.
     pub cases: usize,
 }
 

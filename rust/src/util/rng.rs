@@ -1,6 +1,17 @@
+//! Deterministic pseudo-randomness for tests, benches, and synthetic
+//! workloads (no `rand` crate in the offline vendor set).
+//!
+//! Everything downstream that must be reproducible — property tests, trace
+//! generation, the replay harness's byte-identity contract — seeds one of
+//! these explicitly, so a failure always comes with a replayable seed.
+
 /// Deterministic xoshiro256** PRNG (no rand crate offline).
-pub struct Rng(pub [u64; 4]);
+pub struct Rng(
+    /// The four xoshiro256** state words.
+    pub [u64; 4],
+);
 impl Rng {
+    /// Seed the generator (state expanded from `seed` via splitmix64).
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion
         let mut s = seed;
@@ -13,6 +24,7 @@ impl Rng {
         };
         Rng([next(), next(), next(), next()])
     }
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.0;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -41,6 +53,8 @@ impl Rng {
         let u2 = self.next_f32();
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
     }
+    /// Uniform integer in `[0, n)` (modulo bias is irrelevant at the
+    /// `n` values used here).
     pub fn next_range(&mut self, n: usize) -> usize {
         (self.next_u64() % n as u64) as usize
     }

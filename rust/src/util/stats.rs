@@ -7,16 +7,24 @@
 
 use std::time::Instant;
 
+/// Wall-clock timing summary over the measured repetitions of one bench
+/// cell (all values in microseconds).
 #[derive(Debug, Clone, Copy)]
 pub struct Summary {
+    /// Arithmetic mean.
     pub mean_us: f64,
+    /// Median (50th percentile).
     pub median_us: f64,
+    /// 95th percentile.
     pub p95_us: f64,
+    /// Fastest repetition.
     pub min_us: f64,
+    /// Number of measured repetitions.
     pub reps: usize,
 }
 
 impl Summary {
+    /// Summarize raw per-repetition microsecond samples.
     pub fn from_us(mut samples: Vec<f64>) -> Summary {
         assert!(!samples.is_empty());
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -1,40 +1,127 @@
-//! Persistent scoped worker pool for the decode attention fan-out.
+//! Persistent scoped worker pool with dependency-aware graph execution.
 //!
-//! `Engine::decode_step` turns every (sequence, KV head) pair into one job;
-//! jobs only *read* their head's cache and write a disjoint slice of the
-//! context buffer, so they parallelize without synchronization beyond the
-//! queue. The pool is std-only (no rayon/crossbeam offline) and built for
-//! exactly that shape of work:
+//! The pool runs the engine's per-(sequence, KV head) cache work. It grew up
+//! in two steps:
 //!
-//! * **Scoped jobs.** [`ThreadPool::run`] accepts non-`'static` closures and
-//!   blocks until every submitted job has finished, so borrows of the
-//!   engine's per-step buffers are sound (see the safety comment in `run`).
-//! * **Driver participation.** `workers = N` means N threads total: the pool
-//!   spawns `N - 1` helpers and the *calling* thread drains the queue too.
-//!   With `workers = 1` no threads exist and `run` degenerates to an inline
-//!   `for` loop — bit-identical to the old serial path, zero overhead.
+//! * PR 1 added flat [`ThreadPool::run`]: submit a batch of independent
+//!   jobs, block until all finish. That shape fits the prefill
+//!   bulk-quantization fan-out and the barrier-mode attention fan-out.
+//! * This PR adds [`ThreadPool::run_graph`]: jobs are grouped into *stages*
+//!   with explicit predecessor edges, and a stage's jobs become runnable the
+//!   moment every predecessor stage has fully completed — no global barrier
+//!   between stages. `Engine::decode_step` uses it to emit one whole decode
+//!   step as a task graph (PJRT driver stages chained between per-layer
+//!   cache-work fan-outs), and the decode-scaling bench uses it to overlap
+//!   layers outright. [`ThreadPool::run`] is now a thin wrapper over a
+//!   single-stage graph, so `prefill_fanout` callers are untouched.
+//!
+//! Design points, in the order they matter:
+//!
+//! * **Scoped jobs.** Both entry points accept non-`'static` closures and
+//!   block until every submitted job has finished, so borrows of the
+//!   caller's per-step buffers are sound (see the safety comment in
+//!   `submit_erased`).
+//! * **Driver participation.** `workers = N` means N executing threads
+//!   total: the pool spawns `N - 1` helpers and the *calling* thread drains
+//!   work too. With `workers = 1` nothing is spawned and both entry points
+//!   degenerate to an inline loop in stage order — bit-identical to the
+//!   serial path with zero pool overhead.
+//! * **Driver-only stages.** A [`Stage`] marked `driver_only` runs its jobs
+//!   exclusively on the calling thread. The engine needs this because PJRT
+//!   clients are thread-local: the qkv/out/head model stages may sit *in*
+//!   the decode graph, but must still execute on the driver.
+//! * **Per-worker deques.** Runnable jobs are distributed round-robin over
+//!   one deque per executing thread; a thread pops its own deque from the
+//!   front and steals from the back of others when it runs dry. All deques
+//!   live under the pool's single state mutex (jobs here are coarse —
+//!   microseconds of attention math — so queue transfer cost is noise; the
+//!   deques exist to keep a stage's jobs spread across workers instead of
+//!   contending on one queue head).
 //! * **Per-worker scratch.** Each executing thread owns one scratch arena
-//!   (the `Vec<f32>` passed to every job), replacing the old per-`Sequence`
-//!   scratch so concurrent jobs never share growable buffers.
+//!   (the `Vec<f32>` passed to every job), so concurrent jobs never share
+//!   growable buffers.
 //!
-//! Determinism: the pool adds no reductions of its own. Each job's output
-//! slice is disjoint and its internal FP reduction order is unchanged, so
-//! results are byte-identical across worker counts.
+//! Determinism: the pool adds no reductions of its own, and stage edges only
+//! *constrain* order. Each job's output is disjoint from its siblings' and
+//! its internal FP order is fixed, so results are byte-identical across
+//! worker counts and across graph vs. flat submission of the same work.
+//!
+//! Panics: a panicking job is contained; the rest of the batch still drains
+//! (successor stages included) and the panic is re-raised on the driver once
+//! everything has settled, leaving the pool reusable.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-/// One unit of attention work. Receives the executing thread's scratch
-/// arena; must not panic across `run` calls it wants to survive (a panicking
-/// job is contained and re-raised on the driver once the batch drains).
+/// One unit of work. Receives the executing thread's scratch arena; must not
+/// panic across `run` calls it wants to survive (a panicking job is
+/// contained and re-raised on the driver once the batch drains).
 pub type Job<'a> = Box<dyn FnOnce(&mut Vec<f32>) + Send + 'a>;
 
 type StaticJob = Box<dyn FnOnce(&mut Vec<f32>) + Send + 'static>;
 
+/// One node of a [`ThreadPool::run_graph`] dependency graph: a set of jobs
+/// that become runnable when every predecessor stage has fully completed.
+/// Stages must be listed in topological order — each `deps` entry must index
+/// an *earlier* stage — which makes cycles unrepresentable.
+pub struct Stage<'a> {
+    /// Indices of stages that must fully complete before any job of this
+    /// stage may run. Every entry must be smaller than this stage's own
+    /// index (checked at submission).
+    pub deps: Vec<usize>,
+    /// The stage's jobs. A stage may be empty; it completes as soon as its
+    /// predecessors do (useful as a join point).
+    pub jobs: Vec<Job<'a>>,
+    /// Run this stage's jobs only on the calling (driver) thread. Used for
+    /// work bound to thread-local state, e.g. PJRT model stages.
+    pub driver_only: bool,
+}
+
+impl<'a> Stage<'a> {
+    /// A worker-eligible stage.
+    pub fn new(deps: Vec<usize>, jobs: Vec<Job<'a>>) -> Stage<'a> {
+        Stage { deps, jobs, driver_only: false }
+    }
+
+    /// A stage whose jobs run only on the calling thread.
+    pub fn driver_only(deps: Vec<usize>, jobs: Vec<Job<'a>>) -> Stage<'a> {
+        Stage { deps, jobs, driver_only: true }
+    }
+}
+
+/// A queued job together with the graph stage it belongs to.
+struct Tagged {
+    stage: usize,
+    job: StaticJob,
+}
+
+/// Bookkeeping for the graph currently in flight (one at a time).
+struct GraphState {
+    /// Uncompleted jobs per stage (runnable or running).
+    jobs_left: Vec<usize>,
+    /// Predecessor stages not yet completed, per stage.
+    preds_left: Vec<usize>,
+    /// Dependent stages per stage (reverse edges).
+    succs: Vec<Vec<usize>>,
+    /// Jobs of stages whose predecessors have not all completed yet.
+    parked: Vec<Vec<Tagged>>,
+    /// Stages whose jobs are driver-only.
+    driver_only: Vec<bool>,
+}
+
 struct State {
-    queue: VecDeque<StaticJob>,
+    /// One runnable-job deque per executing thread (slot 0 = driver).
+    /// Threads pop their own slot from the front and steal from the back of
+    /// the others.
+    queues: Vec<VecDeque<Tagged>>,
+    /// Runnable jobs of driver-only stages; workers never touch this.
+    driver_queue: VecDeque<Tagged>,
+    /// Round-robin cursor for distributing newly runnable jobs.
+    rr: usize,
+    /// Graph bookkeeping for the batch in flight, if any.
+    graph: Option<GraphState>,
     /// Jobs submitted but not yet finished (queued + currently running).
     pending: usize,
     /// A job panicked since the last completed batch.
@@ -44,10 +131,9 @@ struct State {
 
 struct Shared {
     state: Mutex<State>,
-    /// Wakes workers when work arrives or shutdown is requested.
+    /// Wakes executing threads when work arrives, a stage unlocks, the
+    /// batch drains, or shutdown is requested.
     work: Condvar,
-    /// Wakes the driver when `pending` may have reached zero.
-    done: Condvar,
 }
 
 impl Shared {
@@ -59,6 +145,7 @@ impl Shared {
     }
 }
 
+/// The pool itself; see the module docs for semantics.
 pub struct ThreadPool {
     shared: Arc<Shared>,
     threads: Vec<JoinHandle<()>>,
@@ -73,20 +160,22 @@ impl ThreadPool {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
-                queue: VecDeque::new(),
+                queues: (0..workers).map(|_| VecDeque::new()).collect(),
+                driver_queue: VecDeque::new(),
+                rr: 0,
+                graph: None,
                 pending: 0,
                 panicked: false,
                 shutdown: false,
             }),
             work: Condvar::new(),
-            done: Condvar::new(),
         });
         let threads = (1..workers)
             .map(|i| {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("innerq-attn-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn attention worker")
             })
             .collect();
@@ -98,70 +187,146 @@ impl ThreadPool {
         self.threads.len() + 1
     }
 
-    /// Execute every job, blocking until all are done. Jobs may borrow
-    /// caller-local data (`'a` need not be `'static`). Panics if any job
-    /// panicked, after the whole batch has drained.
+    /// Execute every job of a flat batch, blocking until all are done —
+    /// a single-stage graph. Jobs may borrow caller-local data (`'a` need
+    /// not be `'static`). Panics if any job panicked, after the whole batch
+    /// has drained.
     ///
-    /// One driver at a time: concurrent `run` calls from different threads
-    /// would interleave batches (jobs all still run exactly once, but each
-    /// caller waits for the union to finish).
+    /// One driver at a time: `run` / `run_graph` must not be called
+    /// concurrently from different threads (the pool tracks one batch).
     pub fn run<'a>(&self, jobs: Vec<Job<'a>>) {
         if jobs.is_empty() {
             return;
+        }
+        self.run_graph(vec![Stage::new(Vec::new(), jobs)]);
+    }
+
+    /// Execute a stage graph, blocking until every job of every stage has
+    /// finished. Stage `deps` must point at earlier stages (topological
+    /// order; asserted), so the graph is acyclic by construction. A stage's
+    /// jobs become runnable the moment the last job of its last unfinished
+    /// predecessor completes — there is no global barrier, so independent
+    /// stages overlap freely. `driver_only` stages execute exclusively on
+    /// the calling thread.
+    ///
+    /// Determinism: edges only constrain order; with disjoint job outputs
+    /// the result is byte-identical to any serialization of the same jobs.
+    pub fn run_graph<'a>(&self, stages: Vec<Stage<'a>>) {
+        for (s, stage) in stages.iter().enumerate() {
+            for &d in &stage.deps {
+                assert!(d < s, "stage {s} depends on stage {d}: deps must point backwards");
+            }
+        }
+        if stages.iter().all(|s| s.jobs.is_empty()) {
+            return; // nothing to execute; empty stages carry no effects
         }
         let mut scratch = self
             .driver_scratch
             .lock()
             .unwrap_or_else(|e| e.into_inner());
 
-        // Serial fast path: no helper threads, no queue, no atomics.
+        // Serial fast path: no helper threads, no queue, no graph state.
+        // Topological (index) order satisfies every dependency.
         if self.threads.is_empty() {
-            for job in jobs {
-                job(&mut scratch);
+            for stage in stages {
+                for job in stage.jobs {
+                    job(&mut scratch);
+                }
             }
             return;
         }
 
-        // SAFETY: the lifetime of every job is erased to 'static so it can
-        // sit in the shared queue, but no job outlives this call: the wait
-        // loop below does not return until `pending` — which counts every
-        // job submitted here — is back to zero, and jobs are consumed
-        // exactly once (popped then invoked). Borrows captured by the jobs
-        // therefore remain live for as long as any job can run.
-        let jobs: Vec<StaticJob> = jobs
-            .into_iter()
-            .map(|j| unsafe { std::mem::transmute::<Job<'a>, StaticJob>(j) })
-            .collect();
-        {
-            let mut st = self.shared.lock();
-            st.pending += jobs.len();
-            st.queue.extend(jobs);
-        }
-        self.shared.work.notify_all();
+        self.submit_erased(stages);
 
-        // The driver drains the queue alongside the workers...
+        // The driver executes driver-only jobs (only it may), drains its own
+        // deque, steals from workers, and sleeps when the graph is waiting
+        // on in-flight jobs to unlock the next stage.
         loop {
-            let job = self.shared.lock().queue.pop_front();
+            let job = {
+                let mut st = self.shared.lock();
+                loop {
+                    if let Some(t) = pop_job(&mut st, 0, true) {
+                        break Some(t);
+                    }
+                    if st.pending == 0 {
+                        break None;
+                    }
+                    st = match self.shared.work.wait(st) {
+                        Ok(g) => g,
+                        Err(e) => e.into_inner(),
+                    };
+                }
+            };
             match job {
-                Some(job) => execute(&self.shared, job, &mut scratch),
+                Some(t) => execute(&self.shared, t, &mut scratch),
                 None => break,
             }
         }
-        // ...then waits for in-flight stragglers.
         let mut st = self.shared.lock();
-        while st.pending > 0 {
-            st = match self.shared.done.wait(st) {
-                Ok(g) => g,
-                Err(e) => e.into_inner(),
-            };
-        }
+        debug_assert_eq!(st.pending, 0);
+        debug_assert!(st.graph.is_none(), "graph state must clear when the batch drains");
         let panicked = st.panicked;
         st.panicked = false;
         drop(st);
         drop(scratch);
         if panicked {
-            panic!("threadpool: an attention job panicked (see worker stderr)");
+            panic!("threadpool: a job panicked (see worker stderr)");
         }
+    }
+
+    /// Erase job lifetimes and install the graph into the shared state,
+    /// enqueueing every initially runnable stage.
+    fn submit_erased<'a>(&self, stages: Vec<Stage<'a>>) {
+        let n = stages.len();
+        let mut jobs_left = Vec::with_capacity(n);
+        let mut preds_left = Vec::with_capacity(n);
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut parked: Vec<Vec<Tagged>> = Vec::with_capacity(n);
+        let mut driver_only = Vec::with_capacity(n);
+        let mut total = 0usize;
+        for (s, stage) in stages.into_iter().enumerate() {
+            jobs_left.push(stage.jobs.len());
+            preds_left.push(stage.deps.len());
+            for &d in &stage.deps {
+                succs[d].push(s);
+            }
+            driver_only.push(stage.driver_only);
+            total += stage.jobs.len();
+            // SAFETY: every job's lifetime is erased to 'static so it can
+            // sit in the shared queues, but no job outlives the enclosing
+            // `run_graph` call: its wait loop does not return until
+            // `pending` — which counts every job submitted here — is back
+            // to zero, and jobs are consumed exactly once (popped then
+            // invoked). Borrows captured by the jobs therefore remain live
+            // for as long as any job can run.
+            parked.push(
+                stage
+                    .jobs
+                    .into_iter()
+                    .map(|j| Tagged {
+                        stage: s,
+                        job: unsafe { std::mem::transmute::<Job<'a>, StaticJob>(j) },
+                    })
+                    .collect(),
+            );
+        }
+        let mut st = self.shared.lock();
+        assert!(
+            st.graph.is_none() && st.pending == 0,
+            "one batch at a time: a previous run/run_graph is still in flight"
+        );
+        st.pending = total;
+        st.graph = Some(GraphState { jobs_left, preds_left, succs, parked, driver_only });
+        // Release (and cascade through) every stage with no predecessors.
+        let roots: Vec<usize> = {
+            let g = st.graph.as_ref().unwrap();
+            (0..n).filter(|&s| g.preds_left[s] == 0).collect()
+        };
+        for s in roots {
+            release_stage(&mut st, s);
+        }
+        drop(st);
+        self.shared.work.notify_all();
     }
 }
 
@@ -175,27 +340,106 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Run one job outside any lock, then account for its completion.
-fn execute(shared: &Shared, job: StaticJob, scratch: &mut Vec<f32>) {
+/// Move a now-unlocked stage's jobs into the run queues; if the stage is
+/// empty it completes immediately, cascading into its successors.
+fn release_stage(st: &mut State, stage: usize) {
+    let mut ready: Vec<usize> = vec![stage];
+    while let Some(s) = ready.pop() {
+        let (jobs, driver) = {
+            let g = st.graph.as_mut().expect("graph in flight");
+            (std::mem::take(&mut g.parked[s]), g.driver_only[s])
+        };
+        if jobs.is_empty() {
+            // Empty stage: completes the moment it unlocks.
+            let g = st.graph.as_mut().expect("graph in flight");
+            let succs = g.succs[s].clone();
+            for t in succs {
+                g.preds_left[t] -= 1;
+                if g.preds_left[t] == 0 {
+                    ready.push(t);
+                }
+            }
+            continue;
+        }
+        if driver {
+            st.driver_queue.extend(jobs);
+        } else {
+            let n = st.queues.len();
+            for t in jobs {
+                let slot = st.rr % n;
+                st.rr = st.rr.wrapping_add(1);
+                st.queues[slot].push_back(t);
+            }
+        }
+    }
+}
+
+/// Take the next runnable job for executing-thread `slot`: the driver queue
+/// first (driver only), then the thread's own deque front, then steal from
+/// the back of the other deques.
+fn pop_job(st: &mut State, slot: usize, is_driver: bool) -> Option<Tagged> {
+    if is_driver {
+        if let Some(t) = st.driver_queue.pop_front() {
+            return Some(t);
+        }
+    }
+    if let Some(t) = st.queues[slot].pop_front() {
+        return Some(t);
+    }
+    let n = st.queues.len();
+    for d in 1..n {
+        let s = (slot + d) % n;
+        if let Some(t) = st.queues[s].pop_back() {
+            return Some(t);
+        }
+    }
+    None
+}
+
+/// Run one job outside any lock, then account for its completion: stage
+/// bookkeeping (possibly unlocking successors) and the pending count.
+fn execute(shared: &Shared, t: Tagged, scratch: &mut Vec<f32>) {
+    let Tagged { stage, job } = t;
     let result = catch_unwind(AssertUnwindSafe(|| job(scratch)));
     let mut st = shared.lock();
     if result.is_err() {
         st.panicked = true;
     }
+    let mut unlocked: Vec<usize> = Vec::new();
+    if let Some(g) = st.graph.as_mut() {
+        g.jobs_left[stage] -= 1;
+        if g.jobs_left[stage] == 0 {
+            let succs = g.succs[stage].clone();
+            for t in succs {
+                g.preds_left[t] -= 1;
+                if g.preds_left[t] == 0 {
+                    unlocked.push(t);
+                }
+            }
+        }
+    }
+    for s in unlocked {
+        release_stage(&mut st, s);
+    }
     st.pending -= 1;
     if st.pending == 0 {
-        shared.done.notify_all();
+        st.graph = None;
     }
+    drop(st);
+    // Wake peers for newly runnable jobs and the driver for batch drain.
+    // Notifying unconditionally is cheap relative to job granularity and
+    // keeps the wake-up logic unmissable.
+    shared.work.notify_all();
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, slot: usize) {
     let mut scratch: Vec<f32> = Vec::new();
     loop {
         let job = {
             let mut st = shared.lock();
             loop {
-                if let Some(j) = st.queue.pop_front() {
-                    break Some(j);
+                if let Some(t) = pop_job(&mut st, slot, false) {
+                    break Some(t);
                 }
                 if st.shutdown {
                     break None;
@@ -207,7 +451,7 @@ fn worker_loop(shared: &Shared) {
             }
         };
         match job {
-            Some(j) => execute(shared, j, &mut scratch),
+            Some(t) => execute(shared, t, &mut scratch),
             None => return,
         }
     }
@@ -216,6 +460,7 @@ fn worker_loop(shared: &Shared) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn fill_disjoint(pool: &ThreadPool, n_jobs: usize, chunk: usize) -> Vec<f32> {
         let mut data = vec![0f32; n_jobs * chunk];
@@ -262,6 +507,7 @@ mod tests {
     fn empty_batch_is_a_noop() {
         let pool = ThreadPool::new(4);
         pool.run(Vec::new());
+        pool.run_graph(Vec::new());
     }
 
     #[test]
@@ -298,5 +544,163 @@ mod tests {
             pool.run(jobs);
         }
         assert_eq!(seen, Some(caller), "workers=1 must execute on the driver");
+    }
+
+    /// Build a chain graph `append -> attend` per lane, the decode shape:
+    /// stage 2i writes lane i, stage 2i+1 (dep on 2i) reads it and derives.
+    /// Any execution respecting the edges yields the same buffer. The lanes
+    /// communicate through raw pointers because the producer and consumer
+    /// are separate closures; the graph edge (synchronized through the pool
+    /// mutex) provides the happens-before that makes this sound.
+    fn run_chain(pool: &ThreadPool, lanes: usize) -> Vec<f32> {
+        let mut data = vec![0f32; lanes * 2];
+        let base = SendMut(data.as_mut_ptr());
+        {
+            let mut stages: Vec<Stage> = Vec::with_capacity(lanes * 2);
+            for i in 0..lanes {
+                stages.push(Stage::new(
+                    Vec::new(),
+                    vec![Box::new(move |_s: &mut Vec<f32>| unsafe {
+                        *base.0.add(i * 2) = (i + 1) as f32;
+                    })],
+                ));
+                let dep = stages.len() - 1;
+                stages.push(Stage::new(
+                    vec![dep],
+                    vec![Box::new(move |_s: &mut Vec<f32>| unsafe {
+                        let a = *base.0.add(i * 2);
+                        *base.0.add(i * 2 + 1) = a * 10.0;
+                    })],
+                ));
+            }
+            pool.run_graph(stages);
+        }
+        data
+    }
+
+    #[derive(Clone, Copy)]
+    struct SendMut(*mut f32);
+    unsafe impl Send for SendMut {}
+
+    #[test]
+    fn graph_edges_order_dependent_stages() {
+        let want = run_chain(&ThreadPool::new(1), 32);
+        for lane in 0..32 {
+            assert_eq!(want[lane * 2], (lane + 1) as f32);
+            assert_eq!(want[lane * 2 + 1], (lane + 1) as f32 * 10.0);
+        }
+        for workers in [2usize, 4, 8] {
+            let got = run_chain(&ThreadPool::new(workers), 32);
+            assert_eq!(got, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn driver_only_stages_run_on_the_caller() {
+        let pool = ThreadPool::new(4);
+        let caller = std::thread::current().id();
+        let hits = AtomicUsize::new(0);
+        {
+            let hits = &hits;
+            let mut stages: Vec<Stage> = Vec::new();
+            // A fan-out feeding a driver-only join, three times over.
+            for round in 0..3 {
+                let dep = if round == 0 { Vec::new() } else { vec![round * 2 - 1] };
+                let fan: Vec<Job> = (0..16)
+                    .map(|_| {
+                        let j: Job = Box::new(move |_s: &mut Vec<f32>| {
+                            std::hint::black_box(0u64);
+                        });
+                        j
+                    })
+                    .collect();
+                stages.push(Stage::new(dep, fan));
+                let fan_idx = stages.len() - 1;
+                stages.push(Stage::driver_only(
+                    vec![fan_idx],
+                    vec![Box::new(move |_s: &mut Vec<f32>| {
+                        assert_eq!(
+                            std::thread::current().id(),
+                            caller,
+                            "driver-only stage ran on a worker"
+                        );
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    })],
+                ));
+            }
+            pool.run_graph(stages);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn empty_stages_cascade_as_join_points() {
+        let pool = ThreadPool::new(3);
+        let flag = AtomicUsize::new(0);
+        {
+            let flag = &flag;
+            let stages: Vec<Stage> = vec![
+                Stage::new(
+                    Vec::new(),
+                    vec![Box::new(move |_s: &mut Vec<f32>| {
+                        flag.fetch_add(1, Ordering::SeqCst);
+                    })],
+                ),
+                // Empty join stage.
+                Stage::new(vec![0], Vec::new()),
+                // Depends on the empty stage.
+                Stage::new(
+                    vec![1],
+                    vec![Box::new(move |_s: &mut Vec<f32>| {
+                        assert_eq!(flag.load(Ordering::SeqCst), 1);
+                        flag.fetch_add(10, Ordering::SeqCst);
+                    })],
+                ),
+            ];
+            pool.run_graph(stages);
+        }
+        assert_eq!(flag.load(Ordering::SeqCst), 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "deps must point backwards")]
+    fn forward_deps_are_rejected() {
+        let pool = ThreadPool::new(1);
+        let stages: Vec<Stage> = vec![
+            Stage::new(vec![1], Vec::new()),
+            Stage::new(Vec::new(), Vec::new()),
+        ];
+        pool.run_graph(stages);
+    }
+
+    #[test]
+    fn graph_matches_flat_run_bit_for_bit() {
+        // The same disjoint-write workload submitted flat and as a
+        // many-stage graph must produce identical buffers.
+        let pool = ThreadPool::new(4);
+        let flat = fill_disjoint(&pool, 24, 5);
+        let mut data = vec![0f32; 24 * 5];
+        {
+            let mut stages: Vec<Stage> = Vec::new();
+            for (j, out) in data.chunks_mut(5).enumerate() {
+                let deps = if j % 3 == 0 || stages.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![stages.len() - 1]
+                };
+                stages.push(Stage::new(
+                    deps,
+                    vec![Box::new(move |scratch: &mut Vec<f32>| {
+                        scratch.clear();
+                        scratch.resize(5, j as f32);
+                        for (o, s) in out.iter_mut().zip(scratch.iter()) {
+                            *o = *s + 1.0;
+                        }
+                    })],
+                ));
+            }
+            pool.run_graph(stages);
+        }
+        assert_eq!(data, flat);
     }
 }

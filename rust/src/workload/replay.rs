@@ -308,6 +308,11 @@ impl ReplayReport {
             ("restores", Json::Num(self.metrics.restores as f64)),
             ("restore_bytes", Json::Num(self.metrics.restore_bytes as f64)),
             ("offload_lost", Json::Num(self.metrics.offload_lost as f64)),
+            (
+                "window_frames_dropped",
+                Json::Num(self.metrics.window_frames_dropped as f64),
+            ),
+            ("window_rebuilds", Json::Num(self.metrics.window_rebuilds as f64)),
             ("bypass_admissions", Json::Num(self.metrics.bypass_admissions as f64)),
             ("ticks", Json::Num(self.ticks as f64)),
             ("virtual_us", Json::Num(self.end_us as f64)),

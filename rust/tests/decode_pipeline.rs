@@ -1,0 +1,216 @@
+//! Pipelined-decode determinism and partial-eviction restore (ISSUE 5
+//! acceptance):
+//!
+//! * `overlap` decode (the full task graph of fused append+attend jobs)
+//!   must be **byte-identical** to the retained `barrier` oracle — logits
+//!   and serialized cache bytes — across worker counts {1, 2, 4, 8},
+//!   quantization layouts (inner/outer grouping × sym/asym/hybrid modes),
+//!   and multi-sequence batches, with windows small enough that the
+//!   quantized segments (and their eviction cadences) are genuinely
+//!   exercised on the fake model.
+//! * A sequence restored from per-layer frames whose fp-window frames were
+//!   evicted (quantized middle from the tier, windows recomputed from a
+//!   prefill pass) must be bit-identical to a never-offloaded twin, and
+//!   keep decoding bit-identically.
+
+use innerq::cache::store::{
+    restore_sequence_frames, snapshot_sequence, snapshot_sequence_frames, FrameKind, WarmTier,
+};
+use innerq::coordinator::{Engine, PipelineMode};
+use innerq::quant::group::Mode;
+use innerq::quant::{Grouping, MethodConfig};
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::QuantMethod;
+
+/// A quantization config with windows small enough that the fake model's
+/// short sequences cross both the key and value eviction cadences (sink 4 +
+/// recent 8; the outer key layout still needs 32 more tokens per chunk).
+fn small_window_cfg(grouping: Grouping, mode: Mode) -> MethodConfig {
+    let mut cfg = QuantMethod::InnerQBase.config();
+    cfg.w_sink = 4;
+    cfg.w_recent = 8;
+    cfg.key_bits = 3;
+    cfg.val_bits = 3;
+    cfg.key_mode = mode;
+    cfg.val_mode = mode;
+    cfg.key_grouping = grouping;
+    cfg.val_grouping = grouping;
+    // Key norm is an inner-grouping (InnerQ) feature.
+    cfg.key_norm = grouping == Grouping::Inner;
+    cfg
+}
+
+/// Long enough that the quantized middle holds real mass: 48 prefill tokens
+/// plus the decode steps below push outer-grouped keys past a 32-token
+/// chunk boundary and inner-grouped values past a value-eviction chunk.
+const PROMPTS: [&str; 3] = [
+    "a=13;b=88;c=07;d=55;e=21;f=99;g=42;h=10;?a=",
+    "i=64;j=27;a=83;b=19;c=70;?c=",
+    "d=01;e=02;f=03;?d=",
+];
+const DECODE_STEPS: usize = 44;
+
+fn engine_for(tag: &str, cfg: MethodConfig, mode: PipelineMode, workers: usize) -> Engine {
+    let dir = write_fake_artifacts(tag, '7');
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, cfg).expect("engine");
+    engine.set_workers(workers);
+    engine.set_pipeline(mode);
+    engine
+}
+
+/// Prefill the three prompts and decode `DECODE_STEPS` greedy steps as one
+/// batch, returning every step's logits bit patterns plus the final
+/// serialized caches.
+fn run_session(engine: &Engine) -> (Vec<Vec<u32>>, Vec<Vec<u8>>) {
+    let mut seqs: Vec<_> = PROMPTS
+        .iter()
+        .map(|p| {
+            let tokens = engine.manifest.encode(p).expect("prompt encodes");
+            engine.prefill(&tokens).expect("prefill")
+        })
+        .collect();
+    let mut logit_bits: Vec<Vec<u32>> = Vec::with_capacity(DECODE_STEPS);
+    for _ in 0..DECODE_STEPS {
+        let next: Vec<i32> = seqs.iter().map(|s| Engine::argmax(&s.last_logits)).collect();
+        {
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.decode_step(&mut refs, &next).expect("decode step");
+        }
+        let step_bits: Vec<u32> = seqs
+            .iter()
+            .flat_map(|s| s.last_logits.iter().map(|v| v.to_bits()))
+            .collect();
+        logit_bits.push(step_bits);
+    }
+    let cache_bytes = seqs.iter().map(snapshot_sequence).collect();
+    (logit_bits, cache_bytes)
+}
+
+#[test]
+fn overlap_decode_is_byte_identical_to_barrier_across_the_matrix() {
+    let mut case = 0usize;
+    for grouping in [Grouping::Inner, Grouping::Outer] {
+        for mode in [Mode::Sym, Mode::Asym, Mode::Hybrid] {
+            case += 1;
+            let cfg = small_window_cfg(grouping, mode);
+            let tag = format!("pipe_ref_{case}");
+            let reference = run_session(&engine_for(&tag, cfg, PipelineMode::Barrier, 1));
+            for pipeline in [PipelineMode::Barrier, PipelineMode::Overlap] {
+                for workers in [1usize, 2, 4, 8] {
+                    if pipeline == PipelineMode::Barrier && workers == 1 {
+                        continue; // that is the reference itself
+                    }
+                    let tag = format!("pipe_{case}_{}_{workers}", pipeline.name());
+                    let engine = engine_for(&tag, cfg, pipeline, workers);
+                    let got = run_session(&engine);
+                    assert_eq!(
+                        got.0,
+                        reference.0,
+                        "{grouping:?}/{mode:?} {} workers={workers}: logits diverged",
+                        pipeline.name()
+                    );
+                    assert_eq!(
+                        got.1,
+                        reference.1,
+                        "{grouping:?}/{mode:?} {} workers={workers}: cache bytes diverged",
+                        pipeline.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Restore with every window frame missing: the quantized middle comes from
+/// the frames, the windows from a recompute pass — and the result must be
+/// bit-identical to a never-offloaded sequence, before and during decode.
+#[test]
+fn partial_restore_rebuilds_windows_bit_identically() {
+    for grouping in [Grouping::Inner, Grouping::Outer] {
+        let cfg = small_window_cfg(grouping, Mode::Hybrid);
+        let tag = format!("pipe_partial_{grouping:?}");
+        let engine = engine_for(&tag, cfg, PipelineMode::Overlap, 2);
+        let tokens = engine.manifest.encode(PROMPTS[0]).expect("encode");
+        let twin = engine.prefill(&tokens).expect("twin prefill");
+        let victim = engine.prefill(&tokens).expect("victim prefill");
+
+        let frames = snapshot_sequence_frames(&victim);
+        let layers: Vec<(&[u8], Option<&[u8]>)> =
+            frames.layers.iter().map(|l| (l.core.as_slice(), None)).collect();
+        let (mut restored, missing) =
+            restore_sequence_frames(&frames.meta, &layers).expect("partial restore");
+        assert_eq!(missing.len(), frames.layers.len(), "every window frame was withheld");
+        engine.rebuild_windows(&mut restored, &missing).expect("window rebuild");
+        assert_eq!(
+            snapshot_sequence(&restored),
+            snapshot_sequence(&twin),
+            "{grouping:?}: rebuilt sequence must be bit-identical to the never-offloaded twin"
+        );
+
+        // And it must *stay* identical through real decode traffic.
+        let mut a = restored;
+        let mut b = twin;
+        for _ in 0..DECODE_STEPS {
+            let ta = Engine::argmax(&a.last_logits);
+            let tb = Engine::argmax(&b.last_logits);
+            assert_eq!(ta, tb);
+            engine.decode_step(&mut [&mut a], &[ta]).expect("decode a");
+            engine.decode_step(&mut [&mut b], &[tb]).expect("decode b");
+            let ba: Vec<u32> = a.last_logits.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.last_logits.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb, "{grouping:?}: post-restore decode diverged");
+        }
+        assert_eq!(snapshot_sequence(&a), snapshot_sequence(&b));
+    }
+}
+
+/// The same contract end-to-end through the warm tier: a resident whose
+/// window frames are evicted under pressure restores partial, and the
+/// rebuilt sequence matches the original bit-for-bit.
+#[test]
+fn tier_pressure_evicts_windows_and_restore_recomputes_them() {
+    let cfg = small_window_cfg(Grouping::Inner, Mode::Sym);
+    let engine = engine_for("pipe_tier", cfg, PipelineMode::Overlap, 1);
+    let tokens = engine.manifest.encode(PROMPTS[0]).expect("encode");
+    let seq = engine.prefill(&tokens).expect("prefill");
+    let frames = snapshot_sequence_frames(&seq);
+
+    // Size the tier so the full frame set fits but a subsequent insert
+    // forces the window frames out (1 KiB segments).
+    let mut parts: Vec<(&[u8], FrameKind)> = vec![(frames.meta.as_slice(), FrameKind::Required)];
+    for lf in &frames.layers {
+        parts.push((lf.core.as_slice(), FrameKind::Required));
+        parts.push((lf.windows.as_slice(), FrameKind::Droppable));
+    }
+    let seg = 1024usize;
+    let segs_for = |len: usize| (len + seg - 1) / seg + usize::from(len == 0);
+    let full_segs: usize = parts.iter().map(|(p, _)| segs_for(p.len()).max(1)).sum();
+    let mut tier = WarmTier::new(full_segs * seg, seg);
+    let receipt = tier.insert_frames(1, 1, &parts).expect("insert");
+    assert_eq!(receipt.dropped_frames, 0);
+
+    // A second required-only insert the size of the window frames squeezes
+    // resident 1 down to its cores.
+    let win_bytes: usize = frames.layers.iter().map(|l| l.windows.len()).sum();
+    let filler = vec![0xAAu8; win_bytes.max(seg)];
+    assert!(tier.insert(2, 1, &filler), "filler insert must fit by dropping windows");
+    assert!(tier.contains(1) && tier.is_partial(1), "resident 1 must survive as partial");
+
+    let taken = tier.take_frames(1).expect("partial take");
+    assert!(!taken.is_full());
+    let meta = taken.frames[0].as_deref().expect("meta survives");
+    let layers: Vec<(&[u8], Option<&[u8]>)> = taken.frames[1..]
+        .chunks(2)
+        .map(|pair| (pair[0].as_deref().expect("core survives"), pair[1].as_deref()))
+        .collect();
+    let (mut restored, missing) = restore_sequence_frames(meta, &layers).expect("restore");
+    assert!(!missing.is_empty(), "at least one window frame must have been evicted");
+    engine.rebuild_windows(&mut restored, &missing).expect("rebuild");
+    assert_eq!(
+        snapshot_sequence(&restored),
+        snapshot_sequence(&seq),
+        "tier-evicted windows must rebuild bit-identically"
+    );
+}

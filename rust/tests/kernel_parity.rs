@@ -2,10 +2,13 @@
 //! unpackers (ISSUE 2 acceptance): the blocked `qk_inner` / `pv_inner_chunk`
 //! must be **bit-identical** to the retained scalar references across
 //! bits ∈ {2,3,4}, d_h ∈ {32, 64, 128, 2176 (heap-qsum path)}, all group
-//! modes (sym/asym/hybrid), and non-multiple-of-4 row counts; the f32 fast
+//! modes (sym/asym/hybrid), and non-multiple-of-4 row counts; the blocked
+//! outer (KIVI) key kernel `qk_outer_chunk` must match its retained scalar
+//! reference the same way, including partial-chunk tails; the f32 fast
 //! unpackers must agree exactly with the generic bit-loop unpacker.
 
 use innerq::kernels::gemv_inner::{pv_inner_chunk, pv_inner_chunk_ref, qk_inner, qk_inner_ref};
+use innerq::kernels::gemv_outer::{qk_outer_chunk, qk_outer_chunk_ref};
 use innerq::kernels::zeff_planes;
 use innerq::quant::group::{quantize, Mode};
 use innerq::quant::packing::{pack, packed_len, unpack, unpack32, unpack32_f32};
@@ -110,6 +113,68 @@ fn pv_blocked_bit_identical_across_full_matrix() {
                         b.to_bits(),
                         "d_h={d_h} bits={bits} {mode:?} channel {c}: {a} vs {b}"
                     );
+                }
+            }
+        }
+    }
+}
+
+/// Quantize 32 tokens x d_h (token-major) into one KIVI key chunk:
+/// per-channel groups along the token axis, codes stored token-major.
+fn build_outer_key_chunk(
+    vals: &[f32],
+    d_h: usize,
+    bits: u8,
+    mode: Mode,
+) -> (Vec<u8>, Vec<GroupParams>) {
+    assert_eq!(vals.len(), 32 * d_h);
+    let mut params = vec![GroupParams::default(); d_h];
+    let mut raw = vec![0u8; 32 * d_h];
+    let mut col = [0f32; 32];
+    let mut ccodes = [0u8; 32];
+    for c in 0..d_h {
+        for (t, v) in col.iter_mut().enumerate() {
+            *v = vals[t * d_h + c];
+        }
+        params[c] = quantize(mode, &col, bits, &mut ccodes);
+        for (t, &cc) in ccodes.iter().enumerate() {
+            raw[t * d_h + c] = cc;
+        }
+    }
+    let mut codes = Vec::new();
+    for t in 0..32 {
+        pack(&raw[t * d_h..(t + 1) * d_h], bits, &mut codes);
+    }
+    (codes, params)
+}
+
+#[test]
+fn qk_outer_blocked_bit_identical_across_full_matrix() {
+    let mut rng = Rng::new(0xB110);
+    // Row counts cover every tail length mod 4, the single-row case, and
+    // the full chunk (tails < 32 arise transiently during bulk prefill).
+    let row_counts = [1usize, 2, 3, 4, 5, 7, 8, 13, 31, 32];
+    for d_h in [32usize, 64, 128] {
+        for bits in [2u8, 3, 4] {
+            for mode in MODES {
+                let keys = normal_vec(&mut rng, 32 * d_h, 1.0, 0.1);
+                let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                let (codes, params) = build_outer_key_chunk(&keys, d_h, bits, mode);
+                let (sc, ze) = zeff_planes(&params, bits);
+                for &n in &row_counts {
+                    let mut scratch_a = vec![0f32; d_h];
+                    let mut scratch_b = vec![0f32; d_h];
+                    let mut fast = vec![0f32; n];
+                    let mut refr = vec![0f32; n];
+                    qk_outer_chunk(&q, &codes, &sc, &ze, bits, d_h, &mut scratch_a, &mut fast);
+                    qk_outer_chunk_ref(&q, &codes, &sc, &ze, bits, d_h, &mut scratch_b, &mut refr);
+                    for (j, (a, b)) in fast.iter().zip(&refr).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "d_h={d_h} bits={bits} {mode:?} n={n} row {j}: {a} vs {b}"
+                        );
+                    }
                 }
             }
         }
