@@ -4,8 +4,9 @@
 Compares a freshly emitted bench JSON (BENCH_kernels.json from
 `cargo bench --bench kernel_throughput`, BENCH_overload.json from
 `cargo bench --bench overload_tail`, BENCH_offload.json from
-`cargo bench --bench offload_vs_recompute`, or BENCH_decode.json from
-`cargo bench --bench decode_scaling`) against a committed baseline
+`cargo bench --bench offload_vs_recompute`, BENCH_decode.json from
+`cargo bench --bench decode_scaling`, or BENCH_prefix.json from
+`cargo bench --bench prefix_sharing`) against a committed baseline
 snapshot and fails when throughput regresses by more than the threshold —
 so CI catches "still bit-exact but 2x slower" changes, not just bit
 mismatches.
@@ -29,7 +30,10 @@ Cells are keyed per bench type:
   * offload_vs_recompute: (method, preemption, rate_rps, budget_bytes),
     metric throughput_rps (virtual-clock, deterministic);
   * decode_scaling:       (pipeline, batch, workers), metric tokens_per_s
-    (wall-clock; barrier-vs-overlap x worker-count x batch sweep).
+    (wall-clock; barrier-vs-overlap x worker-count x batch sweep);
+  * prefix_sharing:       (family, method, prefix_share, budget_bytes),
+    metric throughput_rps (virtual-clock, deterministic — multi-turn vs
+    single-turn trace families with the CoW prefix store on/off).
 """
 
 import argparse
@@ -61,6 +65,9 @@ def cells(doc):
         elif bench == "decode_scaling":
             key = (r["pipeline"], r["batch"], r["workers"])
             metric = "tokens_per_s"
+        elif bench == "prefix_sharing":
+            key = (r["family"], r["method"], r["prefix_share"], r["budget_bytes"])
+            metric = "throughput_rps"
         else:
             continue
         out[key] = (metric, float(r[metric]))

@@ -1,0 +1,337 @@
+//! Prefix sharing under the multi-turn overload sweep: replay the same
+//! chat-style trace (requests round-robined over sessions that reuse one
+//! context prefix) with the content-addressed prefix store on and off, per
+//! quantization method, and record throughput, tail latency, admitted
+//! concurrency, and the hit/shared-byte traffic — the harness that answers
+//! "does CoW sharing of quantized prefixes buy real concurrency at a fixed
+//! cache budget?". A single-turn control family (no shared prefixes) rides
+//! along so the store's overhead on unshareable traffic is visible.
+//!
+//! The methods run with their paper bit-widths but *small* high-precision
+//! windows (sink 4 + recent 8): with the default 128-token window the fake
+//! model's bucket-sized prompts never quantize their prefix, and there
+//! would be nothing to share.
+//!
+//! Before timing anything the run asserts three contracts (any panic fails
+//! CI):
+//!   * bit-identity — decoding against a borrowed quantized prefix is
+//!     byte-identical (logits bits and serialized caches) to the private
+//!     split-norm path, per method, workers 1 and 2;
+//!   * replay byte-identity — the share-on multi-turn replay report is
+//!     identical between workers=1 and workers=2;
+//!   * concurrency — sharing strictly increases the maximum number of
+//!     simultaneously admitted requests on the multi-turn trace.
+//!
+//! ```bash
+//! cargo bench --bench prefix_sharing           # full sweep
+//! cargo bench --bench prefix_sharing quick     # CI smoke
+//! ```
+
+use innerq::cache::store::PrefixStore;
+use innerq::coordinator::{Engine, Policy, PrefixOutcome, Scheduler};
+use innerq::quant::MethodConfig;
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::json::Json;
+use innerq::workload::replay::{replay, CostModel, Outcome, ReplayReport};
+use innerq::workload::trace::{
+    generate_multi_turn, generate_timed, Arrival, MultiTurnTraceConfig, TimedRequest,
+    TimedTraceConfig,
+};
+use innerq::QuantMethod;
+
+/// Tight budget (a handful of concurrent sequences at the fake geometry) so
+/// admission control is the binding constraint sharing relaxes.
+const BUDGET: usize = 64_000;
+const SEED: u64 = 2026;
+
+/// Paper bit-widths, serving-sized windows (see module docs).
+fn serving_cfg(method: QuantMethod) -> MethodConfig {
+    let mut cfg = method.config();
+    cfg.w_sink = cfg.w_sink.min(4);
+    cfg.w_recent = cfg.w_recent.min(8).max(4);
+    cfg
+}
+
+fn scheduler(dir: &std::path::Path, cfg: MethodConfig, workers: usize, share: bool) -> Scheduler {
+    let manifest = Manifest::load(dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, cfg).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, BUDGET);
+    sched.set_policy(Policy::Slo);
+    sched.set_prefix_share(share);
+    sched
+}
+
+/// Chat-style family: long shared session prefixes, short per-turn suffixes.
+fn multi_turn_trace(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_multi_turn(&MultiTurnTraceConfig {
+        base: TimedTraceConfig {
+            n_requests,
+            arrival: Arrival::Poisson { rate_rps },
+            vars_range: (2, 4),
+            seed: SEED,
+            ..TimedTraceConfig::default()
+        },
+        n_sessions: 4,
+        prefix_vars: 20,
+    })
+}
+
+/// Control family: independent prompts, nothing shareable.
+fn single_turn_trace(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests,
+        arrival: Arrival::Poisson { rate_rps },
+        seed: SEED,
+        ..TimedTraceConfig::default()
+    })
+}
+
+/// Maximum number of requests simultaneously resident in the decode batch:
+/// the peak overlap of the completed records' [admitted, finished] spans.
+fn max_admitted_concurrency(report: &ReplayReport) -> usize {
+    let mut deltas: Vec<(u64, i64)> = Vec::new();
+    for r in &report.records {
+        if r.outcome != Some(Outcome::Ok) {
+            continue;
+        }
+        let (Some(a), Some(f)) = (r.admitted_us, r.finished_us) else { continue };
+        deltas.push((a, 1));
+        deltas.push((f.max(a) + 1, -1));
+    }
+    deltas.sort_unstable();
+    let mut cur = 0i64;
+    let mut best = 0i64;
+    for (_, d) in deltas {
+        cur += d;
+        best = best.max(cur);
+    }
+    best.max(0) as usize
+}
+
+/// Bit-identity contract: per method, decode three shared-prefix prompts
+/// through the store (publish + borrow) and privately, workers 1 and 2 —
+/// logits bit patterns and serialized caches must match exactly.
+fn assert_bit_identity_contract(dir: &std::path::Path, methods: &[QuantMethod]) {
+    const PREFIX: &str = "a=13;b=88;c=07;d=55;e=21;f=99;";
+    const SUFFIXES: [&str; 3] = ["g=42;h=10;?a=", "i=64;j=27;?c=", "?e="];
+    const STEPS: usize = 24;
+
+    fn run(
+        dir: &std::path::Path,
+        cfg: MethodConfig,
+        workers: usize,
+        mut store: Option<&mut PrefixStore>,
+    ) -> (Vec<u32>, Vec<Vec<u8>>) {
+        use innerq::cache::store::snapshot_sequence;
+        let manifest = Manifest::load(dir).expect("fake manifest");
+        let mut engine = Engine::new(manifest, cfg).expect("engine");
+        engine.set_workers(workers);
+        let mut seqs: Vec<_> = SUFFIXES
+            .iter()
+            .map(|s| {
+                let prompt = format!("{PREFIX}{s}");
+                let tokens = engine.manifest.encode(&prompt).expect("encode");
+                engine
+                    .prefill_shared(&tokens, PREFIX.len(), store.as_deref_mut())
+                    .expect("prefill")
+                    .0
+            })
+            .collect();
+        let mut bits: Vec<u32> = Vec::new();
+        for _ in 0..STEPS {
+            let next: Vec<i32> = seqs.iter().map(|s| Engine::argmax(&s.last_logits)).collect();
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.decode_step(&mut refs, &next).expect("decode");
+            for s in refs.iter() {
+                bits.extend(s.last_logits.iter().map(|v| v.to_bits()));
+            }
+        }
+        let caches: Vec<Vec<u8>> = seqs.iter().map(snapshot_sequence).collect();
+        (bits, caches)
+    }
+
+    for &method in methods {
+        let cfg = serving_cfg(method);
+        let reference = run(dir, cfg, 1, None);
+        for workers in [1usize, 2] {
+            let mut store = PrefixStore::new(1 << 20);
+            let shared = run(dir, cfg, workers, Some(&mut store));
+            assert_eq!(
+                shared, reference,
+                "{}: shared-prefix decode diverged from private (workers={workers})",
+                method.name()
+            );
+            let private = run(dir, cfg, workers, None);
+            assert_eq!(
+                private, reference,
+                "{}: private decode diverged across workers={workers}",
+                method.name()
+            );
+        }
+        // And the store actually dedups: a second engine-level borrow hits.
+        let mut store = PrefixStore::new(1 << 20);
+        let manifest = Manifest::load(dir).expect("fake manifest");
+        let engine = Engine::new(manifest, cfg).expect("engine");
+        let prompt = format!("{PREFIX}{}", SUFFIXES[0]);
+        let tokens = engine.manifest.encode(&prompt).expect("encode");
+        let (_, first) = engine
+            .prefill_shared(&tokens, PREFIX.len(), Some(&mut store))
+            .expect("publish");
+        let (_, second) = engine
+            .prefill_shared(&tokens, PREFIX.len(), Some(&mut store))
+            .expect("borrow");
+        assert!(matches!(first, PrefixOutcome::Published { .. }), "{}: {first:?}", method.name());
+        assert!(matches!(second, PrefixOutcome::Hit { .. }), "{}: {second:?}", method.name());
+    }
+    eprintln!("[prefix_sharing] bit-identity contract holds ({} methods)", methods.len());
+}
+
+struct Cell {
+    family: &'static str,
+    method: QuantMethod,
+    share: bool,
+    rate_rps: f64,
+    concurrency: usize,
+    report: ReplayReport,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_requests: usize = args
+        .iter()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(if quick { 48 } else { 96 });
+    let rate = 2000.0; // far past capacity: admission control binds
+    let methods: &[QuantMethod] = if quick {
+        &[QuantMethod::InnerQBase]
+    } else {
+        &[QuantMethod::InnerQBase, QuantMethod::InnerQHybrid, QuantMethod::Kivi]
+    };
+    let cost = CostModel::default();
+    let dir = write_fake_artifacts("prefix_sharing", '7');
+
+    eprintln!(
+        "[prefix_sharing] {n_requests} requests/cell, {} methods x 2 families x share on/off, \
+         budget={BUDGET}, quick={quick}",
+        methods.len()
+    );
+
+    assert_bit_identity_contract(&dir, methods);
+
+    // Replay byte-identity with the store in the loop.
+    {
+        let trace = multi_turn_trace(rate, n_requests);
+        let mut s1 = scheduler(&dir, serving_cfg(QuantMethod::InnerQBase), 1, true);
+        let mut s2 = scheduler(&dir, serving_cfg(QuantMethod::InnerQBase), 2, true);
+        let a = replay(&mut s1, &trace, &cost).expect("replay w1");
+        let b = replay(&mut s2, &trace, &cost).expect("replay w2");
+        assert_eq!(
+            a.to_json().dump(),
+            b.to_json().dump(),
+            "share-on replay byte-identity violated between workers=1 and workers=2"
+        );
+        eprintln!(
+            "[prefix_sharing] determinism contract holds (workers 1 vs 2, {} prefix hits)",
+            a.metrics.prefix_hits
+        );
+    }
+
+    // Concurrency contract: sharing must strictly raise peak admitted
+    // concurrency on the multi-turn trace, per method — asserted before any
+    // cell is recorded.
+    let families: [(&'static str, fn(f64, usize) -> Vec<TimedRequest>); 2] =
+        [("multi_turn", multi_turn_trace), ("single_turn", single_turn_trace)];
+    let mut cells: Vec<Cell> = Vec::new();
+    for &method in methods {
+        let cfg = serving_cfg(method);
+        for (family, gen) in families {
+            let trace = gen(rate, n_requests);
+            let mut by_share = [0usize; 2];
+            for share in [false, true] {
+                let mut sched = scheduler(&dir, cfg, 1, share);
+                let report = replay(&mut sched, &trace, &cost).expect("replay");
+                let concurrency = max_admitted_concurrency(&report);
+                by_share[usize::from(share)] = concurrency;
+                cells.push(Cell { family, method, share, rate_rps: rate, concurrency, report });
+            }
+            if family == "multi_turn" {
+                assert!(
+                    by_share[1] > by_share[0],
+                    "{}: sharing must strictly increase admitted concurrency \
+                     (on={} vs off={})",
+                    method.name(),
+                    by_share[1],
+                    by_share[0]
+                );
+            }
+        }
+    }
+
+    println!(
+        "{:<14} {:<12} {:>6} {:>5} {:>5} {:>7} {:>10} {:>8} {:>10} {:>10}",
+        "method", "family", "share", "ok", "conc", "hits", "shared_kb", "req/s", "e2e p50",
+        "e2e p99"
+    );
+    for c in &cells {
+        let e = c.report.overall().e2e.summary();
+        println!(
+            "{:<14} {:<12} {:>6} {:>5} {:>5} {:>7} {:>10.1} {:>8.1} {:>9}µ {:>9}µ",
+            c.method.name(),
+            c.family,
+            if c.share { "on" } else { "off" },
+            c.report.count(Outcome::Ok),
+            c.concurrency,
+            c.report.metrics.prefix_hits,
+            c.report.metrics.prefix_bytes_shared as f64 / 1024.0,
+            c.report.throughput_rps(),
+            e.p50_us,
+            e.p99_us,
+        );
+    }
+
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let o = c.report.overall();
+            let (t, e) = (o.ttft.summary(), o.e2e.summary());
+            Json::obj(vec![
+                ("family", Json::str(c.family)),
+                ("method", Json::str(c.method.name())),
+                ("prefix_share", Json::Bool(c.share)),
+                ("rate_rps", Json::Num(c.rate_rps)),
+                ("budget_bytes", Json::Num(BUDGET as f64)),
+                ("n_requests", Json::Num(c.report.records.len() as f64)),
+                ("completed", Json::Num(c.report.count(Outcome::Ok) as f64)),
+                ("rejected", Json::Num(c.report.count(Outcome::Rejected) as f64)),
+                ("max_concurrency", Json::Num(c.concurrency as f64)),
+                ("prefix_hits", Json::Num(c.report.metrics.prefix_hits as f64)),
+                (
+                    "prefix_bytes_shared",
+                    Json::Num(c.report.metrics.prefix_bytes_shared as f64),
+                ),
+                ("throughput_rps", Json::Num(c.report.throughput_rps())),
+                ("gen_tokens_per_s", Json::Num(c.report.gen_tokens_per_s())),
+                ("ttft_p50_us", Json::Num(t.p50_us as f64)),
+                ("ttft_p99_us", Json::Num(t.p99_us as f64)),
+                ("e2e_p50_us", Json::Num(e.p50_us as f64)),
+                ("e2e_p99_us", Json::Num(e.p99_us as f64)),
+                ("virtual_us", Json::Num(c.report.end_us as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("prefix_sharing")),
+        ("quick", Json::Bool(quick)),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("policy", Json::str("slo")),
+        ("budget_bytes", Json::Num(BUDGET as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_prefix.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_prefix.json");
+    eprintln!("[prefix_sharing] wrote {path}");
+}

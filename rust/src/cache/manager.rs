@@ -20,6 +20,7 @@ use crate::kernels::softmax::softmax_scaled;
 use crate::quant::norm::ChannelNorm;
 use crate::quant::{Grouping, MethodConfig};
 use crate::util::threadpool::Job;
+use std::sync::Arc;
 
 /// Build one decode step's attention fan-out: `caches` yields one
 /// `&HeadCache` per (sequence, KV head) in sequence-major order, and job
@@ -88,7 +89,7 @@ where
 }
 
 /// Unified key-segment dispatch.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum KeySegment {
     /// Unquantized f32 rows (BaselineFp16).
     Fp(FpSegment),
@@ -162,10 +163,25 @@ impl KeySegment {
             KeySegment::Turbo(s) => s.scores(q, out),
         }
     }
+    /// An owned segment holding this segment's tokens followed by `own`'s.
+    /// Because every layout appends position-independently, the result is
+    /// byte-identical to a single segment built over the concatenated
+    /// history — the materialization step behind shared-prefix snapshots.
+    pub fn merged_with(&self, own: &KeySegment) -> KeySegment {
+        let mut out = self.clone();
+        match (&mut out, own) {
+            (KeySegment::Fp(a), KeySegment::Fp(b)) => a.extend_from(b),
+            (KeySegment::Inner(a), KeySegment::Inner(b)) => a.extend_from(b),
+            (KeySegment::Outer(a), KeySegment::Outer(b)) => a.extend_from(b),
+            (KeySegment::Turbo(a), KeySegment::Turbo(b)) => a.extend_from(b),
+            _ => panic!("mismatched key segment layouts in shared-prefix merge"),
+        }
+        out
+    }
 }
 
 /// Unified value-segment dispatch.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ValSegment {
     /// Unquantized f32 rows (BaselineFp16).
     Fp(FpSegment),
@@ -242,12 +258,36 @@ impl ValSegment {
             }
         }
     }
+    /// An owned segment holding this segment's tokens followed by `own`'s
+    /// (see [`KeySegment::merged_with`]).
+    pub fn merged_with(&self, own: &ValSegment) -> ValSegment {
+        let mut out = self.clone();
+        match (&mut out, own) {
+            (ValSegment::Fp(a), ValSegment::Fp(b)) => a.extend_from(b),
+            (ValSegment::Inner(a), ValSegment::Inner(b)) => a.extend_from(b),
+            (ValSegment::Outer(a), ValSegment::Outer(b)) => a.extend_from(b),
+            (ValSegment::Turbo(a), ValSegment::Turbo(b)) => a.extend_from(b),
+            _ => panic!("mismatched value segment layouts in shared-prefix merge"),
+        }
+        out
+    }
 }
 
 /// KV cache for one attention (KV) head of one sequence. `PartialEq`
 /// compares the full quantized state (codes, params, planar planes,
 /// windows) — the prefill-determinism tests use it to assert byte-identical
 /// construction across worker counts.
+///
+/// Ownership is split in two tiers. The *borrowed* tier (`shared_k` /
+/// `shared_v`) is an immutable, refcounted image of the quantized middle of
+/// a shared prompt prefix, handed out by the content-addressed prefix store
+/// — many sequences point at the same bytes and none may mutate them. The
+/// *owned* tier is everything private to this sequence: the fp sink/recent
+/// windows and the post-fork quantized groups in `qk`/`qv`, which grow as
+/// the recent window evicts. Attention iterates shared-then-private block
+/// runs without copying; [`HeadCache::merged`] materializes the unified
+/// view (used by snapshots so shared and private paths serialize
+/// byte-identically).
 #[derive(Debug, PartialEq)]
 pub struct HeadCache {
     /// Quantization method configuration.
@@ -262,9 +302,14 @@ pub struct HeadCache {
     pub recent_k: RecentWindow,
     /// Full-precision recent values awaiting eviction.
     pub recent_v: RecentWindow,
-    /// Quantized middle of the key partition.
+    /// Borrowed quantized key run of the shared prompt prefix, attended
+    /// *before* `qk`. Immutable: eviction never appends here.
+    pub shared_k: Option<Arc<KeySegment>>,
+    /// Borrowed quantized value run of the shared prompt prefix.
+    pub shared_v: Option<Arc<ValSegment>>,
+    /// Quantized middle of the key partition (private / post-fork groups).
     pub qk: KeySegment,
-    /// Quantized middle of the value partition.
+    /// Quantized middle of the value partition (private / post-fork groups).
     pub qv: ValSegment,
     /// Per-channel key normalization folded into quantized scores.
     pub norm: ChannelNorm,
@@ -307,6 +352,8 @@ impl HeadCache {
             sink_v: SinkWindow::new(d_h, cfg.w_sink),
             recent_k: RecentWindow::new(d_h),
             recent_v: RecentWindow::new(d_h),
+            shared_k: None,
+            shared_v: None,
             qk: make_key_segment(&cfg, d_h, 0x5eed_0001),
             qv: make_val_segment(&cfg, d_h, 0x5eed_0002),
             norm: ChannelNorm::identity(d_h),
@@ -335,6 +382,135 @@ impl HeadCache {
     /// Tokens stored in this segment.
     pub fn len(&self) -> usize {
         self.n_tokens
+    }
+
+    /// Initialize like [`HeadCache::from_prefill`], but compute the
+    /// per-channel key norm over only the first `norm_tokens` rows (the
+    /// shared-prefix boundary) instead of the whole prompt. This is the
+    /// *numerics* contract of prefix sharing: the prefix state becomes a
+    /// deterministic function of the prefix tokens alone, so the same rows
+    /// produce the same quantized bytes in every sequence regardless of
+    /// what follows the boundary — and regardless of whether the bytes end
+    /// up shared (store hit/miss) or privately owned (sharing disabled).
+    pub fn from_prefill_split_norm(
+        cfg: MethodConfig,
+        d_h: usize,
+        keys: &[f32],
+        vals: &[f32],
+        norm_tokens: usize,
+    ) -> HeadCache {
+        assert_eq!(keys.len(), vals.len());
+        assert_eq!(keys.len() % d_h, 0);
+        assert!(norm_tokens * d_h <= keys.len());
+        let mut hc = HeadCache::new(cfg, d_h);
+        if cfg.key_norm {
+            let nb = if norm_tokens > 0 { norm_tokens * d_h } else { keys.len() };
+            hc.norm = ChannelNorm::from_prefill_keys(&keys[..nb], d_h);
+        }
+        for (k, v) in keys.chunks_exact(d_h).zip(vals.chunks_exact(d_h)) {
+            hc.append(k, v);
+        }
+        hc
+    }
+
+    /// Move the quantized middle into immutable shared images, leaving this
+    /// cache referencing them as its borrowed tier with fresh (empty)
+    /// private segments on top. Called at the shared-prefix fork point —
+    /// after the prefix rows were appended, before any tail rows — so the
+    /// returned images are exactly the prefix's quantized bytes. Must not
+    /// be called on a cache that already borrows a prefix.
+    pub fn split_off_prefix(&mut self) -> (Arc<KeySegment>, Arc<ValSegment>) {
+        assert!(
+            self.shared_k.is_none() && self.shared_v.is_none(),
+            "cache already borrows a shared prefix"
+        );
+        let qk = std::mem::replace(&mut self.qk, make_key_segment(&self.cfg, self.d_h, 0x5eed_0001));
+        let qv = std::mem::replace(&mut self.qv, make_val_segment(&self.cfg, self.d_h, 0x5eed_0002));
+        let sk = Arc::new(qk);
+        let sv = Arc::new(qv);
+        self.shared_k = Some(sk.clone());
+        self.shared_v = Some(sv.clone());
+        (sk, sv)
+    }
+
+    /// Initialize from a shared-prefix store hit: install the borrowed
+    /// quantized images and the prefix-derived norm, rebuild the fp windows
+    /// by replaying the prefix rows' push/evict cadence (bit-identical to
+    /// the miss path's windows — see [`HeadCache::rebuild_windows`]), then
+    /// append the unshared tail rows through the normal eviction policy.
+    /// `keys`/`vals` are the full prompt rows; `prefix_len` marks the fork.
+    pub fn from_shared_prefix(
+        cfg: MethodConfig,
+        d_h: usize,
+        keys: &[f32],
+        vals: &[f32],
+        prefix_len: usize,
+        shared_k: Arc<KeySegment>,
+        shared_v: Arc<ValSegment>,
+        norm: ChannelNorm,
+    ) -> HeadCache {
+        assert_eq!(keys.len(), vals.len());
+        assert!(prefix_len * d_h <= keys.len());
+        let mut hc = HeadCache::new(cfg, d_h);
+        hc.norm = norm;
+        hc.shared_k = Some(shared_k);
+        hc.shared_v = Some(shared_v);
+        hc.n_tokens = prefix_len;
+        hc.rebuild_windows(&keys[..prefix_len * d_h], &vals[..prefix_len * d_h]);
+        for (k, v) in keys[prefix_len * d_h..]
+            .chunks_exact(d_h)
+            .zip(vals[prefix_len * d_h..].chunks_exact(d_h))
+        {
+            hc.append(k, v);
+        }
+        hc
+    }
+
+    /// Tokens held in the borrowed (shared-prefix) key run.
+    pub fn shared_key_len(&self) -> usize {
+        self.shared_k.as_ref().map_or(0, |s| s.len())
+    }
+
+    /// Tokens held in the borrowed (shared-prefix) value run.
+    pub fn shared_val_len(&self) -> usize {
+        self.shared_v.as_ref().map_or(0, |s| s.len())
+    }
+
+    /// Bytes of the borrowed shared images (charged once, store-side, no
+    /// matter how many sequences reference them).
+    pub fn shared_bytes(&self) -> usize {
+        self.shared_k.as_ref().map_or(0, |s| s.bytes())
+            + self.shared_v.as_ref().map_or(0, |s| s.bytes())
+    }
+
+    /// An owned, unshared copy with the borrowed and private quantized runs
+    /// materialized into single segments — byte-identical state to a cache
+    /// that never shared (the snapshot layer serializes through this, so a
+    /// shared-prefix sequence and its private-copy twin produce identical
+    /// snapshot bytes).
+    pub fn merged(&self) -> HeadCache {
+        let qk = match &self.shared_k {
+            Some(sk) => sk.merged_with(&self.qk),
+            None => self.qk.clone(),
+        };
+        let qv = match &self.shared_v {
+            Some(sv) => sv.merged_with(&self.qv),
+            None => self.qv.clone(),
+        };
+        HeadCache {
+            cfg: self.cfg,
+            d_h: self.d_h,
+            sink_k: self.sink_k.clone(),
+            sink_v: self.sink_v.clone(),
+            recent_k: self.recent_k.clone(),
+            recent_v: self.recent_v.clone(),
+            shared_k: None,
+            shared_v: None,
+            qk,
+            qv,
+            norm: self.norm.clone(),
+            n_tokens: self.n_tokens,
+        }
     }
 
     /// Rebuild the fp sink/recent windows from recomputed rows, leaving the
@@ -382,11 +558,20 @@ impl HeadCache {
                 self.recent_v.pop_front(vb, |_| {});
             }
         }
-        debug_assert_eq!(self.sink_k.len() + self.qk.len() + self.recent_k.len(), self.n_tokens);
-        debug_assert_eq!(self.sink_v.len() + self.qv.len() + self.recent_v.len(), self.n_tokens);
+        debug_assert_eq!(
+            self.sink_k.len() + self.shared_key_len() + self.qk.len() + self.recent_k.len(),
+            self.n_tokens
+        );
+        debug_assert_eq!(
+            self.sink_v.len() + self.shared_val_len() + self.qv.len() + self.recent_v.len(),
+            self.n_tokens
+        );
     }
 
-    /// Total cache bytes (FP16-equivalent for the windows).
+    /// Bytes owned by this sequence (FP16-equivalent for the windows).
+    /// Borrowed shared-prefix images are excluded — they are charged once
+    /// by the prefix store, not per referencing sequence (see
+    /// [`HeadCache::shared_bytes`]).
     pub fn bytes(&self) -> usize {
         self.sink_k.bytes()
             + self.sink_v.bytes()
@@ -455,39 +640,80 @@ impl HeadCache {
         let (scores, kscratch) = scratch.split_at_mut(n);
 
         // ---- scores over the K partition ----
+        // The quantized middle is a shared-then-private run: the borrowed
+        // prefix image first (if any), then this sequence's own groups.
+        // Every token scores independently, so the split run is
+        // bit-identical to one unified segment.
         let ws = self.sink_k.len();
+        let nsk = self.shared_key_len();
         let nqk = self.qk.len();
         let nrk = self.recent_k.len();
-        debug_assert_eq!(ws + nqk + nrk, n);
+        debug_assert_eq!(ws + nsk + nqk + nrk, n);
         gemv_fp::qk_fp(q, &self.sink_k.rows, d_h, &mut scores[..ws]);
-        if nqk > 0 {
-            if self.cfg.key_norm {
-                // Fold the per-channel norm into the query for the quantized
-                // span (keys were normalized at insertion).
+        if nsk + nqk > 0 {
+            // Fold the per-channel norm into the query for the quantized
+            // span (keys were normalized at insertion).
+            let qn: Option<Vec<f32>> = if self.cfg.key_norm {
                 let mut qn = q.to_vec();
                 self.norm.apply_query(&mut qn);
-                self.qk.scores(&qn, d_h, kscratch, &mut scores[ws..ws + nqk]);
+                Some(qn)
             } else {
-                self.qk.scores(q, d_h, kscratch, &mut scores[ws..ws + nqk]);
+                None
+            };
+            let qq: &[f32] = qn.as_deref().unwrap_or(q);
+            if let Some(sk) = &self.shared_k {
+                if nsk > 0 {
+                    sk.scores(qq, d_h, kscratch, &mut scores[ws..ws + nsk]);
+                }
+            }
+            if nqk > 0 {
+                self.qk.scores(qq, d_h, kscratch, &mut scores[ws + nsk..ws + nsk + nqk]);
             }
         }
-        gemv_fp::qk_fp(q, self.recent_k.rows(), d_h, &mut scores[ws + nqk..]);
+        gemv_fp::qk_fp(q, self.recent_k.rows(), d_h, &mut scores[ws + nsk + nqk..]);
 
         // ---- softmax over all tokens ----
         softmax_scaled(scores, 1.0 / (d_h as f32).sqrt());
 
         // ---- context over the V partition (independent boundaries) ----
+        let nsv = self.shared_val_len();
         let nqv = self.qv.len();
         let nrv = self.recent_v.len();
-        debug_assert_eq!(ws + nqv + nrv, n);
+        debug_assert_eq!(ws + nsv + nqv + nrv, n);
         for o in out.iter_mut() {
             *o = 0.0;
         }
         gemv_fp::pv_fp(&scores[..ws], &self.sink_v.rows, d_h, out);
-        if nqv > 0 {
-            self.qv.accumulate(&scores[ws..ws + nqv], d_h, out);
+        match (&self.shared_v, &self.qv) {
+            // Turbo accumulates in the rotated basis and un-rotates once;
+            // splitting that across two independent `accumulate` calls would
+            // run the (linear but floating-point) FWHT twice and diverge
+            // from the unified segment. Share one rotated accumulator
+            // across both runs and finalize once instead.
+            (Some(sv), ValSegment::Turbo(own)) if nsv > 0 => {
+                let shared = match &**sv {
+                    ValSegment::Turbo(s) => s,
+                    _ => panic!("mismatched value segment layouts in shared-prefix attend"),
+                };
+                let mut acc = vec![0f32; d_h];
+                shared.accumulate_rotated(&scores[ws..ws + nsv], &mut acc);
+                if nqv > 0 {
+                    own.accumulate_rotated(&scores[ws + nsv..ws + nsv + nqv], &mut acc);
+                }
+                own.finalize_into(acc, out);
+            }
+            _ => {
+                if let Some(sv) = &self.shared_v {
+                    if nsv > 0 {
+                        sv.accumulate(&scores[ws..ws + nsv], d_h, out);
+                    }
+                }
+                if nqv > 0 {
+                    self.qv.accumulate(&scores[ws + nsv..ws + nsv + nqv], d_h, out);
+                }
+            }
         }
-        gemv_fp::pv_fp(&scores[ws + nqv..], self.recent_v.rows(), d_h, out);
+        gemv_fp::pv_fp(&scores[ws + nsv + nqv..], self.recent_v.rows(), d_h, out);
     }
 }
 
@@ -788,6 +1014,102 @@ mod tests {
             assert!(serial.iter().all(|hc| hc.len() == n_tokens));
             for workers in [2usize, 4, 8] {
                 assert_eq!(run(workers), serial, "{m:?} workers={workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_split_is_bit_identical_to_private_copy() {
+        // The three construction paths of a prefix-boundary prefill —
+        // private copy (sharing off), store miss (build + split), and store
+        // hit (borrow + window rebuild) — must agree bit-for-bit: same
+        // materialized state, same attention output. This is the per-head
+        // core of the PR's bit-exactness contract.
+        let d_h = 64;
+        for m in QuantMethod::ALL {
+            if m == QuantMethod::BaselineFp16 {
+                continue; // nothing quantized to share
+            }
+            let cfg = m.config();
+            for (n, prefix) in [(200usize, 160usize), (300, 192), (260, 224)] {
+                let mut rng = Rng::new(0x9e1f ^ (n * 7 + prefix) as u64);
+                let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+
+                // Sharing off: one owned cache, prefix-derived norm.
+                let private = HeadCache::from_prefill_split_norm(cfg, d_h, &keys, &vals, prefix);
+
+                // Store miss: build the prefix, split it into shared
+                // images, then append the tail on top.
+                let mut miss =
+                    HeadCache::from_prefill_split_norm(
+                        cfg,
+                        d_h,
+                        &keys[..prefix * d_h],
+                        &vals[..prefix * d_h],
+                        prefix,
+                    );
+                let (sk, sv) = miss.split_off_prefix();
+                for (k, v) in keys[prefix * d_h..]
+                    .chunks_exact(d_h)
+                    .zip(vals[prefix * d_h..].chunks_exact(d_h))
+                {
+                    miss.append(k, v);
+                }
+
+                // Store hit: borrow the miss path's images.
+                let hit = HeadCache::from_shared_prefix(
+                    cfg,
+                    d_h,
+                    &keys,
+                    &vals,
+                    prefix,
+                    sk,
+                    sv,
+                    miss.norm.clone(),
+                );
+
+                assert_eq!(miss, hit, "{m:?} n={n} p={prefix}: hit/miss state diverged");
+                assert_eq!(
+                    miss.merged(),
+                    private,
+                    "{m:?} n={n} p={prefix}: materialized shared state diverged"
+                );
+                assert_eq!(hit.len(), private.len());
+
+                let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+                let mut scratch = Vec::new();
+                let mut out_private = vec![0f32; d_h];
+                let mut out_miss = vec![0f32; d_h];
+                let mut out_hit = vec![0f32; d_h];
+                private.attend(&q, &mut out_private, &mut scratch);
+                miss.attend(&q, &mut out_miss, &mut scratch);
+                hit.attend(&q, &mut out_hit, &mut scratch);
+                let bits = |o: &[f32]| o.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(
+                    bits(&out_miss),
+                    bits(&out_private),
+                    "{m:?} n={n} p={prefix}: shared attend diverged from private"
+                );
+                assert_eq!(bits(&out_hit), bits(&out_private));
+
+                // And the split must keep agreeing through further decode.
+                let mut a = private;
+                let mut b = hit;
+                for t in 0..40 {
+                    let k = normal_vec(&mut rng, d_h, 1.0, 0.02);
+                    let v = normal_vec(&mut rng, d_h, 1.0, 0.02);
+                    a.append(&k, &v);
+                    b.append(&k, &v);
+                    a.attend(&q, &mut out_private, &mut scratch);
+                    b.attend(&q, &mut out_hit, &mut scratch);
+                    assert_eq!(
+                        bits(&out_hit),
+                        bits(&out_private),
+                        "{m:?} n={n} p={prefix}: decode step {t} diverged"
+                    );
+                }
+                assert_eq!(b.merged(), a);
             }
         }
     }

@@ -14,4 +14,4 @@ pub mod window;
 pub use layer::{head_step, step_fanout, LayerCache};
 pub use manager::{attention_fanout, prefill_fanout, HeadCache, KeySegment, ValSegment};
 pub use pool::{Admission, CachePool};
-pub use store::{TierStats, WarmTier};
+pub use store::{PrefixImage, PrefixStore, PrefixStoreStats, TierStats, WarmTier};

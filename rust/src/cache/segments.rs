@@ -13,7 +13,7 @@ use crate::quant::turbo::{codebook, quantize_token, Rotation, TurboToken};
 use crate::quant::GroupParams;
 
 /// Plain f32 rows — the BaselineFp16 "segment" (no quantization).
-#[derive(Debug, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FpSegment {
     /// Head dimension.
     pub d_h: usize,
@@ -44,10 +44,18 @@ impl FpSegment {
         // FP16 storage equivalent: 2 bytes per number (DESIGN.md).
         self.rows.len() * 2
     }
+    /// Append every token of `other` after this segment's tokens. Because
+    /// each token row is stored independently, the result is byte-identical
+    /// to having appended `other`'s rows directly (the shared-prefix
+    /// materialization path relies on this).
+    pub fn extend_from(&mut self, other: &FpSegment) {
+        debug_assert_eq!(self.d_h, other.d_h);
+        self.rows.extend_from_slice(&other.rows);
+    }
 }
 
 /// InnerQ key segment: per-token groups along `d_h` (§4.4).
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InnerKeySegment {
     /// Head dimension.
     pub d_h: usize,
@@ -111,11 +119,23 @@ impl InnerKeySegment {
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
+    /// Append every token of `other` after this segment's tokens. Each
+    /// token quantizes independently under inner grouping, so the merged
+    /// planes are byte-identical to a single segment built from the
+    /// concatenated row history.
+    pub fn extend_from(&mut self, other: &InnerKeySegment) {
+        debug_assert_eq!((self.d_h, self.bits, self.mode), (other.d_h, other.bits, other.mode));
+        self.codes.extend_from_slice(&other.codes);
+        self.params.extend_from_slice(&other.params);
+        self.scales.extend_from_slice(&other.scales);
+        self.zeffs.extend_from_slice(&other.zeffs);
+        self.n_tokens += other.n_tokens;
+    }
 }
 
 /// InnerQ value segment: per-channel groups along the token axis, stored as
 /// channel-major chunks of 32 tokens (§4.4).
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InnerValSegment {
     /// Head dimension.
     pub d_h: usize,
@@ -199,11 +219,22 @@ impl InnerValSegment {
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
+    /// Append every chunk of `other` after this segment's chunks. Chunks
+    /// quantize independently, so the merge is byte-identical to a single
+    /// segment built from the concatenated chunk history.
+    pub fn extend_from(&mut self, other: &InnerValSegment) {
+        debug_assert_eq!((self.d_h, self.bits, self.mode), (other.d_h, other.bits, other.mode));
+        self.codes.extend_from_slice(&other.codes);
+        self.params.extend_from_slice(&other.params);
+        self.scales.extend_from_slice(&other.scales);
+        self.zeffs.extend_from_slice(&other.zeffs);
+        self.n_chunks += other.n_chunks;
+    }
 }
 
 /// KIVI key segment: per-channel groups along the token axis, stored as
 /// token-major chunks of 32 tokens.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OuterKeySegment {
     /// Head dimension.
     pub d_h: usize,
@@ -287,10 +318,20 @@ impl OuterKeySegment {
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
+    /// Append every chunk of `other` after this segment's chunks (see
+    /// [`InnerValSegment::extend_from`]).
+    pub fn extend_from(&mut self, other: &OuterKeySegment) {
+        debug_assert_eq!((self.d_h, self.bits, self.mode), (other.d_h, other.bits, other.mode));
+        self.codes.extend_from_slice(&other.codes);
+        self.params.extend_from_slice(&other.params);
+        self.scales.extend_from_slice(&other.scales);
+        self.zeffs.extend_from_slice(&other.zeffs);
+        self.n_chunks += other.n_chunks;
+    }
 }
 
 /// KIVI value segment: per-token groups along channels, one row per token.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OuterValSegment {
     /// Head dimension.
     pub d_h: usize,
@@ -363,10 +404,20 @@ impl OuterValSegment {
     pub fn bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 4
     }
+    /// Append every token of `other` after this segment's tokens (see
+    /// [`InnerKeySegment::extend_from`]).
+    pub fn extend_from(&mut self, other: &OuterValSegment) {
+        debug_assert_eq!((self.d_h, self.bits, self.mode), (other.d_h, other.bits, other.mode));
+        self.codes.extend_from_slice(&other.codes);
+        self.params.extend_from_slice(&other.params);
+        self.scales.extend_from_slice(&other.scales);
+        self.zeffs.extend_from_slice(&other.zeffs);
+        self.n_tokens += other.n_tokens;
+    }
 }
 
 /// TurboQuant key segment: rotated codebook-coded tokens.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TurboKeySegment {
     /// Head dimension.
     pub d_h: usize,
@@ -401,11 +452,19 @@ impl TurboKeySegment {
     pub fn bytes(&self) -> usize {
         self.tokens.iter().map(|t| t.codes.len() + 4).sum()
     }
+    /// Append every token of `other` after this segment's tokens. The
+    /// rotation is data-oblivious and seed-fixed, so both segments share it
+    /// and per-token codes concatenate byte-identically.
+    pub fn extend_from(&mut self, other: &TurboKeySegment) {
+        debug_assert_eq!((self.d_h, self.bits), (other.d_h, other.bits));
+        debug_assert_eq!(self.rotation, other.rotation);
+        self.tokens.extend_from_slice(&other.tokens);
+    }
 }
 
 /// TurboQuant value segment: accumulates in the rotated basis; `finalize`
 /// un-rotates the context contribution once per decode step.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TurboValSegment {
     /// Head dimension.
     pub d_h: usize,
@@ -444,6 +503,13 @@ impl TurboValSegment {
     /// Packed payload bytes (codes + 4-byte group parameters).
     pub fn bytes(&self) -> usize {
         self.tokens.iter().map(|t| t.codes.len() + 4).sum()
+    }
+    /// Append every token of `other` after this segment's tokens (see
+    /// [`TurboKeySegment::extend_from`]).
+    pub fn extend_from(&mut self, other: &TurboValSegment) {
+        debug_assert_eq!((self.d_h, self.bits), (other.d_h, other.bits));
+        debug_assert_eq!(self.rotation, other.rotation);
+        self.tokens.extend_from_slice(&other.tokens);
     }
 }
 
@@ -552,6 +618,86 @@ mod tests {
         let mut exact_ctx = vec![0f32; d_h];
         crate::kernels::gemv_fp::pv_fp(&p, &vals, d_h, &mut exact_ctx);
         assert!(rel_l2(&ctx, &exact_ctx) < 0.25, "turbo val rel {}", rel_l2(&ctx, &exact_ctx));
+    }
+
+    #[test]
+    fn split_then_extend_matches_unified_build() {
+        // The shared-prefix split relies on appends being position
+        // independent: building a segment in two halves and merging must be
+        // byte-identical to one pass over the concatenated history.
+        let d_h = 64;
+        let mut rng = Rng::new(77);
+        let rows = normal_vec(&mut rng, 128 * d_h, 1.0, 0.02);
+        let half = 64 * d_h;
+
+        let mut unified = InnerKeySegment::new(d_h, 3, Mode::Hybrid);
+        let mut a = InnerKeySegment::new(d_h, 3, Mode::Hybrid);
+        let mut b = InnerKeySegment::new(d_h, 3, Mode::Hybrid);
+        for r in rows.chunks_exact(d_h) {
+            unified.append_token(r);
+        }
+        for r in rows[..half].chunks_exact(d_h) {
+            a.append_token(r);
+        }
+        for r in rows[half..].chunks_exact(d_h) {
+            b.append_token(r);
+        }
+        a.extend_from(&b);
+        assert_eq!(a, unified, "inner key split/merge diverged");
+
+        let mut unified = InnerValSegment::new(d_h, 2, Mode::Asym);
+        let mut a = InnerValSegment::new(d_h, 2, Mode::Asym);
+        for chunk in rows.chunks_exact(32 * d_h) {
+            unified.append_chunk(chunk);
+        }
+        a.append_chunk(&rows[..32 * d_h]);
+        a.append_chunk(&rows[32 * d_h..64 * d_h]);
+        let mut b = InnerValSegment::new(d_h, 2, Mode::Asym);
+        b.append_chunk(&rows[64 * d_h..96 * d_h]);
+        b.append_chunk(&rows[96 * d_h..]);
+        a.extend_from(&b);
+        assert_eq!(a, unified, "inner val split/merge diverged");
+
+        let mut unified = OuterKeySegment::new(d_h, 2, Mode::Asym);
+        let mut a = OuterKeySegment::new(d_h, 2, Mode::Asym);
+        let mut b = OuterKeySegment::new(d_h, 2, Mode::Asym);
+        for chunk in rows.chunks_exact(32 * d_h) {
+            unified.append_chunk(chunk);
+        }
+        a.append_chunk(&rows[..32 * d_h]);
+        b.append_chunk(&rows[32 * d_h..64 * d_h]);
+        b.append_chunk(&rows[64 * d_h..96 * d_h]);
+        b.append_chunk(&rows[96 * d_h..]);
+        a.extend_from(&b);
+        assert_eq!(a, unified, "outer key split/merge diverged");
+
+        let mut unified = OuterValSegment::new(d_h, 3, Mode::Sym);
+        let mut a = OuterValSegment::new(d_h, 3, Mode::Sym);
+        let mut b = OuterValSegment::new(d_h, 3, Mode::Sym);
+        for (t, r) in rows.chunks_exact(d_h).enumerate() {
+            unified.append_token(r);
+            if t < 50 {
+                a.append_token(r);
+            } else {
+                b.append_token(r);
+            }
+        }
+        a.extend_from(&b);
+        assert_eq!(a, unified, "outer val split/merge diverged");
+
+        let mut unified = TurboKeySegment::new(d_h, 4, 42);
+        let mut a = TurboKeySegment::new(d_h, 4, 42);
+        let mut b = TurboKeySegment::new(d_h, 4, 42);
+        for (t, r) in rows.chunks_exact(d_h).enumerate() {
+            unified.append_token(r);
+            if t < 13 {
+                a.append_token(r);
+            } else {
+                b.append_token(r);
+            }
+        }
+        a.extend_from(&b);
+        assert_eq!(a, unified, "turbo key split/merge diverged");
     }
 
     #[test]

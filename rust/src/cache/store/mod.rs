@@ -23,12 +23,25 @@
 //! quantized middle from the tier and recomputes only the fp windows.
 //! `workload::replay`'s cost model prices both so the overload harness can
 //! answer offload-vs-recompute per quant method.
+//!
+//! * [`prefix`] — the content-addressed, refcounted, copy-on-write store of
+//!   shared quantized prefix images ([`PrefixStore`]): the same
+//!   `(prefix tokens, MethodConfig)` quantizes to the same bytes, so many
+//!   sequences borrow one immutable image per (layer, head) and own only
+//!   their private suffix. Its byte budget and refcount-aware (evict-last)
+//!   LRU ride on the same [`WarmTier`] machinery.
 
+pub mod prefix;
 pub mod snapshot;
 pub mod tier;
 
+pub use prefix::{
+    entry_hash, extend_hash, prefix_base_hash, PrefixImage, PrefixStore, PrefixStoreStats,
+};
 pub use snapshot::{
-    restore_head, restore_sequence, restore_sequence_frames, snapshot_head, snapshot_sequence,
-    snapshot_sequence_frames, snapshot_sequence_frames_on, LayerFrames, SequenceFrames,
+    restore_head, restore_prefix_image, restore_sequence, restore_sequence_frames,
+    restore_sequence_frames_with, snapshot_head, snapshot_prefix_image, snapshot_sequence,
+    snapshot_sequence_frames, snapshot_sequence_frames_by_ref, snapshot_sequence_frames_on,
+    LayerFrames, SequenceFrames,
 };
 pub use tier::{FrameKind, InsertReceipt, TakenFrames, TierStats, WarmTier, DEFAULT_SEG_BYTES};

@@ -1,0 +1,488 @@
+//! Content-addressed, refcounted, copy-on-write store of shared prefix
+//! images.
+//!
+//! Production chat/agent traffic repeats the same system prompt and
+//! few-shot prefix across requests; today each sequence quantizes and
+//! budgets a private copy of those tokens. InnerQ makes the prefix state a
+//! pure function of the prefix tokens: the per-channel key norm is computed
+//! over the prefix rows alone (`HeadCache::from_prefill_split_norm`), the
+//! quantizers consume rows in a fixed position-independent cadence, and the
+//! resulting quantized middle segments are immutable once written. So two
+//! requests with the same `(prefix tokens, MethodConfig)` produce *the same
+//! bytes* per `(layer, head)` — and those bytes can be stored once and
+//! borrowed by every sequence.
+//!
+//! [`PrefixStore`] keys each per-(layer, head) [`PrefixImage`] by a rolling
+//! FNV-1a hash chained over the method configuration and the prefix token
+//! ids ([`prefix_base_hash`] / [`extend_hash`]), mixed with the layer and
+//! head indices ([`entry_hash`]). Inserts dedup on the hash; lookups hand
+//! out `Arc` clones of the immutable image (copy-on-write: a borrowing
+//! sequence appends only to its own private segments, never to the image).
+//!
+//! Byte budgeting and eviction reuse the segcache machinery: every image is
+//! also serialized into an internal [`WarmTier`] resident (one required
+//! frame, entry hash as resident id), and the tier's pooled-segment budget
+//! is the store's budget. While a sequence borrows an image the resident is
+//! pinned ([`WarmTier::retain`]) and exempt from eviction; once every
+//! borrower releases, the resident rejoins LRU order — shared prefixes are
+//! evict-last, destroyed only when unreferenced and the budget needs the
+//! room. The live `Arc` map is swept against the tier after every insert so
+//! both views always agree on what is resident.
+
+use crate::cache::manager::{KeySegment, ValSegment};
+use crate::cache::store::snapshot::{cfg_bytes, snapshot_prefix_image};
+use crate::cache::store::tier::WarmTier;
+use crate::quant::norm::ChannelNorm;
+use crate::quant::MethodConfig;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Pooled segment size of the store's internal tier. Prefix images are a
+/// few KiB per (layer, head) at 2–4-bit codes, so 1 KiB segments keep the
+/// final-segment slack per image small.
+pub const PREFIX_SEG_BYTES: usize = 1024;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content address of a prefix: FNV-1a over the serialized method
+/// configuration, then chained over the prefix token ids. The same tokens
+/// under a different configuration hash differently — a different method,
+/// bit width, or window size produces different bytes, so they must never
+/// alias.
+pub fn prefix_base_hash(cfg: &MethodConfig, tokens: &[i32]) -> u64 {
+    let mut h = fnv(FNV_OFFSET, &cfg_bytes(cfg));
+    for &t in tokens {
+        h = extend_hash(h, t);
+    }
+    h
+}
+
+/// Extend a rolling prefix hash by one token — `prefix_base_hash` of
+/// `tokens + [t]` equals `extend_hash(prefix_base_hash(tokens), t)`, so a
+/// multi-turn conversation can grow its address incrementally.
+pub fn extend_hash(h: u64, token: i32) -> u64 {
+    fnv(h, &(token as u32).to_le_bytes())
+}
+
+/// Per-(layer, head) store key derived from a prefix base hash. Every
+/// entry of one prefix shares the base; the layer/head mix keeps the
+/// per-head images individually addressable in the tier.
+pub fn entry_hash(base: u64, layer: usize, head: usize) -> u64 {
+    let h = fnv(base, &(layer as u32).to_le_bytes());
+    fnv(h, &(head as u32).to_le_bytes())
+}
+
+/// One immutable quantized prefix image for one (layer, head): the
+/// middle-segment bytes produced by quantizing the prefix rows, plus the
+/// prefix-derived per-channel key norm. Sequences borrow it via `Arc`
+/// (`HeadCache::shared_k` / `shared_v`) and never mutate it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixImage {
+    /// Head dimension.
+    pub d_h: usize,
+    /// Prefix length in tokens (the fork boundary; more than the segment
+    /// lengths, which exclude the sink/recent windows).
+    pub prefix_len: usize,
+    /// Quantized key run of the prefix middle.
+    pub qk: Arc<KeySegment>,
+    /// Quantized value run of the prefix middle.
+    pub qv: Arc<ValSegment>,
+    /// Per-channel key norm computed over the prefix rows.
+    pub norm: ChannelNorm,
+}
+
+impl PrefixImage {
+    /// Heap bytes of the quantized runs — what one borrowing sequence
+    /// *avoids* owning (matches `HeadCache::shared_bytes`).
+    pub fn bytes(&self) -> usize {
+        self.qk.bytes() + self.qv.bytes()
+    }
+}
+
+/// Monotonic prefix-store counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStoreStats {
+    /// Entry lookups that found a resident image and pinned it.
+    pub hits: u64,
+    /// Entry lookups that found nothing.
+    pub misses: u64,
+    /// New images stored (dedup hits excluded).
+    pub inserts: u64,
+    /// Inserts that hit an already-resident image (content dedup).
+    pub dedup_hits: u64,
+    /// Inserts refused by the budget (only pinned residents in the way, or
+    /// the image exceeds the whole pool).
+    pub insert_rejected: u64,
+    /// Unreferenced residents evicted to make room.
+    pub evictions: u64,
+    /// Pins released by retiring sequences.
+    pub released: u64,
+}
+
+/// Content-addressed store of [`PrefixImage`]s with refcount-aware LRU
+/// eviction (see the module docs for the design).
+#[derive(Debug)]
+pub struct PrefixStore {
+    /// Resident images by entry hash, kept in lockstep with `tier`.
+    live: BTreeMap<u64, Arc<PrefixImage>>,
+    /// Serialized twins of `live`: budget accounting, LRU order, pins.
+    tier: WarmTier,
+    /// Hit/miss/eviction counters.
+    pub stats: PrefixStoreStats,
+}
+
+impl PrefixStore {
+    /// A store holding at most `budget_bytes` of pooled image bytes. A zero
+    /// budget yields a store that refuses every insert — sharing degrades
+    /// to the private-copy path with no numerics change.
+    pub fn new(budget_bytes: usize) -> PrefixStore {
+        PrefixStore {
+            live: BTreeMap::new(),
+            tier: WarmTier::new(budget_bytes, PREFIX_SEG_BYTES),
+            stats: PrefixStoreStats::default(),
+        }
+    }
+
+    /// Total pooled budget in bytes.
+    pub fn budget_bytes(&self) -> usize {
+        self.tier.budget_bytes()
+    }
+
+    /// Exact serialized bytes of every resident image.
+    pub fn resident_bytes(&self) -> usize {
+        self.tier.resident_bytes()
+    }
+
+    /// Number of resident images (entries, not prefixes).
+    pub fn n_images(&self) -> usize {
+        self.live.len()
+    }
+
+    /// True if an image is resident under `entry` (pinned or not).
+    pub fn contains(&self, entry: u64) -> bool {
+        self.live.contains_key(&entry)
+    }
+
+    /// Heap bytes a borrower of `entry` would avoid owning, without
+    /// touching refcounts or recency — the admission-estimate probe.
+    pub fn probe(&self, entry: u64) -> Option<usize> {
+        self.live.get(&entry).map(|img| img.bytes())
+    }
+
+    /// Borrow the image under `entry`, pinning its resident against
+    /// eviction. Every `acquire` must be paired with a [`PrefixStore::release`].
+    pub fn acquire(&mut self, entry: u64) -> Option<Arc<PrefixImage>> {
+        match self.live.get(&entry) {
+            Some(img) => {
+                let pinned = self.tier.retain(entry);
+                debug_assert!(pinned, "live map and tier out of sync on {entry:#x}");
+                self.stats.hits += 1;
+                Some(img.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store `img` under `entry` and borrow it (pinned, like
+    /// [`PrefixStore::acquire`]). Content-addressed dedup: when `entry` is
+    /// already resident the existing image is borrowed instead and `img` is
+    /// dropped. Returns `None` when the budget refuses the insert — only
+    /// pinned residents stood in the way, or the image exceeds the pool —
+    /// in which case the caller keeps a private copy.
+    pub fn insert(&mut self, entry: u64, img: PrefixImage) -> Option<Arc<PrefixImage>> {
+        if self.live.contains_key(&entry) {
+            self.stats.dedup_hits += 1;
+            return self.acquire(entry);
+        }
+        let bytes = snapshot_prefix_image(&img);
+        if self.tier.insert(entry, 0, &bytes).is_none() {
+            self.stats.insert_rejected += 1;
+            return None;
+        }
+        // The insert may have evicted unpinned residents; drop their Arcs
+        // so the live map never outlives the budget accounting.
+        let before = self.live.len();
+        let tier = &self.tier;
+        self.live.retain(|h, _| tier.contains(*h));
+        self.stats.evictions += (before - self.live.len()) as u64;
+        let pinned = self.tier.retain(entry);
+        debug_assert!(pinned);
+        let arc = Arc::new(img);
+        self.live.insert(entry, arc.clone());
+        self.stats.inserts += 1;
+        Some(arc)
+    }
+
+    /// Drop one pin on `entry` (a borrowing sequence retired). The image
+    /// stays resident for future hits until LRU pressure evicts it.
+    pub fn release(&mut self, entry: u64) {
+        if self.tier.release(entry) {
+            self.stats.released += 1;
+        }
+    }
+
+    /// Resolve `entry` to its image without pinning — the snapshot-restore
+    /// resolver for by-reference frames, whose borrower already holds a pin
+    /// from before it was offloaded.
+    pub fn image(&self, entry: u64) -> Option<Arc<PrefixImage>> {
+        self.live.get(&entry).cloned()
+    }
+
+    /// Round-trip check used by tests: deserialize the tier's serialized
+    /// twin of `entry` (`None` when not resident).
+    #[cfg(test)]
+    fn image_from_bytes(&self, entry: u64) -> Option<PrefixImage> {
+        let bytes = self.tier.peek(entry)?;
+        crate::cache::store::snapshot::restore_prefix_image(&bytes).ok()
+    }
+
+    // -- grouped operations over one prefix's (layer, head) grid ----------
+
+    /// True when every entry of `base`'s `n_layers x n_heads` grid is
+    /// resident; the per-sequence shared byte total in that case.
+    pub fn probe_set(&self, base: u64, n_layers: usize, n_heads: usize) -> Option<usize> {
+        let mut total = 0usize;
+        for l in 0..n_layers {
+            for h in 0..n_heads {
+                total += self.probe(entry_hash(base, l, h))?;
+            }
+        }
+        Some(total)
+    }
+
+    /// Borrow the full grid of `base`, pinning every entry — the prefill
+    /// hit path. All-or-nothing: `None` (and no pins taken) unless every
+    /// entry is resident. Outer Vec is layers, inner is heads.
+    pub fn acquire_set(
+        &mut self,
+        base: u64,
+        n_layers: usize,
+        n_heads: usize,
+    ) -> Option<Vec<Vec<Arc<PrefixImage>>>> {
+        if self.probe_set(base, n_layers, n_heads).is_none() {
+            self.stats.misses += 1;
+            return None;
+        }
+        let grid = (0..n_layers)
+            .map(|l| {
+                (0..n_heads)
+                    .map(|h| self.acquire(entry_hash(base, l, h)).expect("probed resident"))
+                    .collect()
+            })
+            .collect();
+        Some(grid)
+    }
+
+    /// Store the full grid of `base` and borrow it — the prefill miss path.
+    /// All-or-nothing: when any insert is refused, every pin this call took
+    /// is released again and `None` is returned (already-stored images stay
+    /// resident for future attempts); the caller falls back to a private
+    /// copy. Outer Vec is layers, inner is heads.
+    pub fn insert_set(
+        &mut self,
+        base: u64,
+        images: Vec<Vec<PrefixImage>>,
+    ) -> Option<Vec<Vec<Arc<PrefixImage>>>> {
+        let mut grid: Vec<Vec<Arc<PrefixImage>>> = Vec::with_capacity(images.len());
+        for (l, layer) in images.into_iter().enumerate() {
+            let mut row = Vec::with_capacity(layer.len());
+            for (h, img) in layer.into_iter().enumerate() {
+                match self.insert(entry_hash(base, l, h), img) {
+                    Some(arc) => row.push(arc),
+                    None => {
+                        for (rl, done) in grid.iter().enumerate() {
+                            for rh in 0..done.len() {
+                                self.release(entry_hash(base, rl, rh));
+                            }
+                        }
+                        for rh in 0..row.len() {
+                            self.release(entry_hash(base, l, rh));
+                        }
+                        return None;
+                    }
+                }
+            }
+            grid.push(row);
+        }
+        Some(grid)
+    }
+
+    /// Release every pin of `base`'s grid — sequence retirement.
+    pub fn release_set(&mut self, base: u64, n_layers: usize, n_heads: usize) {
+        for l in 0..n_layers {
+            for h in 0..n_heads {
+                self.release(entry_hash(base, l, h));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::manager::HeadCache;
+    use crate::util::ptest::normal_vec;
+    use crate::util::rng::Rng;
+    use crate::QuantMethod;
+
+    fn image(m: QuantMethod, n: usize, seed: u64) -> PrefixImage {
+        let d_h = 32;
+        let mut rng = Rng::new(seed);
+        let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+        let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+        let mut hc = HeadCache::from_prefill_split_norm(m.config(), d_h, &keys, &vals, n);
+        let (qk, qv) = hc.split_off_prefix();
+        PrefixImage { d_h, prefix_len: n, qk, qv, norm: hc.norm.clone() }
+    }
+
+    #[test]
+    fn hashes_are_deterministic_and_sensitive() {
+        let cfg = QuantMethod::InnerQBase.config();
+        let toks: Vec<i32> = (1..40).collect();
+        let a = prefix_base_hash(&cfg, &toks);
+        assert_eq!(a, prefix_base_hash(&cfg, &toks), "same inputs, same hash");
+        let mut other = toks.clone();
+        other[7] += 1;
+        assert_ne!(a, prefix_base_hash(&cfg, &other), "token change must rekey");
+        assert_ne!(
+            a,
+            prefix_base_hash(&QuantMethod::InnerQTurbo.config(), &toks),
+            "config change must rekey"
+        );
+        // Rolling extension matches the from-scratch hash.
+        let grown = extend_hash(a, 99);
+        let mut full = toks.clone();
+        full.push(99);
+        assert_eq!(grown, prefix_base_hash(&cfg, &full));
+        // Layer/head mixing separates entries of one prefix.
+        assert_ne!(entry_hash(a, 0, 0), entry_hash(a, 0, 1));
+        assert_ne!(entry_hash(a, 0, 0), entry_hash(a, 1, 0));
+    }
+
+    #[test]
+    fn insert_dedup_acquire_release_lifecycle() {
+        let mut s = PrefixStore::new(64 * 1024);
+        let img = image(QuantMethod::InnerQBase, 160, 3);
+        let e = entry_hash(0xAB, 0, 0);
+        let a1 = s.insert(e, img.clone()).expect("insert");
+        assert_eq!(s.stats.inserts, 1);
+        assert_eq!(s.probe(e), Some(img.bytes()));
+        // Re-inserting the same content dedups onto the same allocation.
+        let a2 = s.insert(e, img.clone()).expect("dedup insert");
+        assert!(Arc::ptr_eq(&a1, &a2));
+        assert_eq!(s.stats.dedup_hits, 1);
+        assert_eq!(s.n_images(), 1);
+        // A third borrower via acquire.
+        let a3 = s.acquire(e).expect("acquire");
+        assert!(Arc::ptr_eq(&a1, &a3));
+        s.release(e);
+        s.release(e);
+        s.release(e);
+        assert_eq!(s.stats.released, 3);
+        assert!(s.contains(e), "released images stay warm for future hits");
+        assert!(s.acquire(entry_hash(0xCD, 0, 0)).is_none());
+        assert_eq!(s.stats.misses, 1);
+    }
+
+    #[test]
+    fn serialized_twin_round_trips_bit_exact() {
+        let mut s = PrefixStore::new(64 * 1024);
+        for (i, m) in [QuantMethod::InnerQBase, QuantMethod::InnerQTurbo].iter().enumerate() {
+            let img = image(*m, 200, 7 + i as u64);
+            let e = entry_hash(0x11, i, 0);
+            s.insert(e, img.clone()).expect("insert");
+            let back = s.image_from_bytes(e).expect("tier twin");
+            assert_eq!(back, img, "{m:?} image must round-trip bit-exact");
+            s.release(e);
+        }
+    }
+
+    #[test]
+    fn unpinned_lru_residents_evict_under_budget_pressure() {
+        // Budget fits roughly one image at a time.
+        let a = image(QuantMethod::InnerQBase, 160, 1);
+        let mut s = PrefixStore::new(2 * a.bytes());
+        let ea = entry_hash(1, 0, 0);
+        let eb = entry_hash(2, 0, 0);
+        s.insert(ea, a).expect("insert a");
+        s.release(ea); // refs -> 0: evictable
+        s.insert(eb, image(QuantMethod::InnerQBase, 160, 2)).expect("insert b");
+        assert!(!s.contains(ea), "LRU unpinned image must give way");
+        assert!(s.contains(eb));
+        assert_eq!(s.stats.evictions, 1);
+        assert!(s.probe(ea).is_none());
+    }
+
+    #[test]
+    fn pinned_residents_refuse_inserts_instead_of_evicting() {
+        let a = image(QuantMethod::InnerQBase, 160, 1);
+        let mut s = PrefixStore::new(2 * a.bytes());
+        let ea = entry_hash(1, 0, 0);
+        let eb = entry_hash(2, 0, 0);
+        s.insert(ea, a).expect("insert a"); // pinned by the insert
+        assert!(s.insert(eb, image(QuantMethod::InnerQBase, 160, 2)).is_none());
+        assert_eq!(s.stats.insert_rejected, 1);
+        assert!(s.contains(ea), "pinned image must survive");
+        assert!(!s.contains(eb));
+        // Releasing the pin makes the next attempt succeed.
+        s.release(ea);
+        assert!(s.insert(eb, image(QuantMethod::InnerQBase, 160, 2)).is_some());
+    }
+
+    #[test]
+    fn grouped_set_operations_cover_the_grid() {
+        let mut s = PrefixStore::new(256 * 1024);
+        let (n_layers, n_heads) = (2usize, 2usize);
+        let base = 0xBEEF;
+        let images: Vec<Vec<PrefixImage>> = (0..n_layers)
+            .map(|l| {
+                (0..n_heads)
+                    .map(|h| image(QuantMethod::InnerQBase, 160, (l * n_heads + h) as u64))
+                    .collect()
+            })
+            .collect();
+        let per_seq: usize =
+            images.iter().flatten().map(|i| i.bytes()).sum();
+        assert!(s.acquire_set(base, n_layers, n_heads).is_none(), "miss before insert");
+        let grid = s.insert_set(base, images).expect("insert grid");
+        assert_eq!(grid.len(), n_layers);
+        assert_eq!(s.n_images(), n_layers * n_heads);
+        assert_eq!(s.probe_set(base, n_layers, n_heads), Some(per_seq));
+        // A second request borrows the same grid.
+        let again = s.acquire_set(base, n_layers, n_heads).expect("hit");
+        assert!(Arc::ptr_eq(&grid[1][1], &again[1][1]));
+        s.release_set(base, n_layers, n_heads);
+        s.release_set(base, n_layers, n_heads);
+        assert!(s.probe_set(base, n_layers, n_heads).is_some(), "stay warm after release");
+        // A partial grid is not a hit.
+        assert!(s.probe_set(0xDEAD, n_layers, n_heads).is_none());
+    }
+
+    #[test]
+    fn failed_grid_insert_rolls_back_its_pins() {
+        let one = image(QuantMethod::InnerQBase, 160, 9);
+        let bytes = one.bytes();
+        // Room for about two entries; a 2x2 grid cannot fit.
+        let mut s = PrefixStore::new(2 * bytes + bytes / 2);
+        let images: Vec<Vec<PrefixImage>> = (0..2)
+            .map(|l| (0..2).map(|h| image(QuantMethod::InnerQBase, 160, (l * 2 + h) as u64)).collect())
+            .collect();
+        assert!(s.insert_set(0x77, images).is_none());
+        // Whatever was stored before the failure is unpinned again, so a
+        // small follow-up insert can evict it rather than being refused.
+        let e = entry_hash(0x88, 0, 0);
+        assert!(s.insert(e, one).is_some(), "rolled-back pins must not wedge the store");
+    }
+}

@@ -32,9 +32,25 @@
 //! (`Engine::rebuild_windows`). Frame serialization is embarrassingly
 //! parallel per layer; [`snapshot_sequence_frames_on`] fans it out over the
 //! worker pool with byte-identical output.
+//!
+//! ## Shared prefixes (format v2)
+//!
+//! A sequence borrowing a shared prefix image (`HeadCache::shared_k` /
+//! `shared_v`, see [`super::prefix`]) serializes through
+//! `HeadCache::merged` on the monolithic and default framed paths, so its
+//! snapshot bytes are *identical* to a sequence that quantized the same
+//! tokens privately — sharing is invisible to the wire format. The offload
+//! path can instead use [`snapshot_sequence_frames_by_ref`], whose core
+//! frames carry a per-head kind byte: inline heads embed the full core as
+//! before, by-reference heads embed the 64-bit prefix-store entry hash plus
+//! only their private state. Restoring those frames
+//! ([`restore_sequence_frames_with`]) resolves each hash back to its
+//! pinned [`PrefixImage`] — the borrower kept its pin across the offload,
+//! so the image cannot have been evicted underneath it.
 
 use crate::cache::layer::LayerCache;
 use crate::cache::manager::{HeadCache, KeySegment, ValSegment};
+use crate::cache::store::prefix::{entry_hash, PrefixImage};
 use crate::cache::segments::{
     FpSegment, InnerKeySegment, InnerValSegment, OuterKeySegment, OuterValSegment,
     TurboKeySegment, TurboValSegment,
@@ -46,6 +62,7 @@ use crate::quant::norm::ChannelNorm;
 use crate::quant::turbo::{Rotation, TurboToken};
 use crate::quant::{GroupParams, Grouping, MethodConfig, QuantMethod};
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Header magic of a single-head snapshot ("IQHC").
 const MAGIC_HEAD: u32 = 0x4951_4843;
@@ -57,8 +74,18 @@ const MAGIC_META: u32 = 0x4951_534D;
 const MAGIC_LAYER_CORE: u32 = 0x4951_4C43;
 /// Header magic of a layer windows frame ("IQLW").
 const MAGIC_LAYER_WIN: u32 = 0x4951_4C57;
-/// Format version; bump on any layout change.
-const VERSION: u8 = 1;
+/// Header magic of a shared prefix image ("IQPX").
+const MAGIC_PREFIX: u32 = 0x4951_5058;
+/// Format version; bump on any layout change. v2: layer-core frames carry a
+/// per-head kind byte (inline vs. prefix-store reference) and the prefix
+/// image format exists.
+const VERSION: u8 = 2;
+
+/// Layer-core head kind: the full core is embedded in the frame.
+const CORE_INLINE: u8 = 0;
+/// Layer-core head kind: the head borrows a shared prefix image — the frame
+/// carries its entry hash plus only the private state.
+const CORE_BY_REF: u8 = 1;
 
 // ---------------------------------------------------------------------------
 // primitive writer / reader
@@ -476,6 +503,11 @@ fn read_val_segment(r: &mut Reader) -> Result<ValSegment> {
 // ---------------------------------------------------------------------------
 
 fn write_head_body(w: &mut Writer, hc: &HeadCache) {
+    // Shared-prefix borrowers serialize their merged view: the snapshot of
+    // a sharing sequence is byte-identical to its private-copy twin.
+    if hc.shared_k.is_some() || hc.shared_v.is_some() {
+        return write_head_body(w, &hc.merged());
+    }
     write_cfg(w, &hc.cfg);
     w.usz(hc.d_h);
     write_sink(w, &hc.sink_k);
@@ -508,6 +540,8 @@ fn read_head_body(r: &mut Reader) -> Result<HeadCache> {
         sink_v,
         recent_k,
         recent_v,
+        shared_k: None,
+        shared_v: None,
         qk,
         qv,
         norm: ChannelNorm { scale, inv_scale },
@@ -600,8 +634,10 @@ pub fn restore_sequence(bytes: &[u8]) -> Result<Sequence> {
 
 /// Everything in a [`HeadCache`] except the fp windows: config, quantized
 /// segments, norm, token count. The windows are serialized (and restorable)
-/// separately so the warm tier can drop them under pressure.
-fn write_head_core(w: &mut Writer, hc: &HeadCache) {
+/// separately so the warm tier can drop them under pressure. Writes exactly
+/// the head's *own* segments — shared-aware callers pick between this
+/// (by-reference, private state only) and the merged view.
+fn write_head_core_raw(w: &mut Writer, hc: &HeadCache) {
     write_cfg(w, &hc.cfg);
     w.usz(hc.d_h);
     write_key_segment(w, &hc.qk);
@@ -609,6 +645,16 @@ fn write_head_core(w: &mut Writer, hc: &HeadCache) {
     w.f32s(&hc.norm.scale);
     w.f32s(&hc.norm.inv_scale);
     w.usz(hc.n_tokens);
+}
+
+/// [`write_head_core_raw`] through the merged view for shared-prefix
+/// borrowers, so inline cores are byte-identical to the private-copy path.
+fn write_head_core(w: &mut Writer, hc: &HeadCache) {
+    if hc.shared_k.is_some() || hc.shared_v.is_some() {
+        write_head_core_raw(w, &hc.merged());
+    } else {
+        write_head_core_raw(w, hc);
+    }
 }
 
 /// Core counterpart of [`read_head_body`]: the returned cache carries
@@ -628,6 +674,8 @@ fn read_head_core(r: &mut Reader) -> Result<HeadCache> {
         sink_v: SinkWindow::new(d_h, cfg.w_sink),
         recent_k: RecentWindow::new(d_h),
         recent_v: RecentWindow::new(d_h),
+        shared_k: None,
+        shared_v: None,
         cfg,
         d_h,
         qk,
@@ -635,6 +683,29 @@ fn read_head_core(r: &mut Reader) -> Result<HeadCache> {
         norm: ChannelNorm { scale, inv_scale },
         n_tokens,
     })
+}
+
+/// Read one head of a layer-core frame: the kind byte, then either an
+/// inline core or an entry hash plus private core resolved against the
+/// prefix store ([`restore_sequence_frames_with`]).
+fn read_head_core_entry(
+    r: &mut Reader,
+    resolver: &dyn Fn(u64) -> Option<Arc<PrefixImage>>,
+) -> Result<HeadCache> {
+    match r.u8()? {
+        CORE_INLINE => read_head_core(r),
+        CORE_BY_REF => {
+            let entry = r.u64()?;
+            let mut hc = read_head_core(r)?;
+            let img = resolver(entry).ok_or_else(|| {
+                anyhow!("snapshot references prefix image {entry:#018x} not resident in the store")
+            })?;
+            hc.shared_k = Some(img.qk.clone());
+            hc.shared_v = Some(img.qv.clone());
+            Ok(hc)
+        }
+        t => Err(anyhow!("bad layer-core head kind {t}")),
+    }
 }
 
 fn write_head_windows(w: &mut Writer, hc: &HeadCache) {
@@ -699,7 +770,31 @@ fn write_layer_core_frame(lc: &LayerCache) -> Vec<u8> {
     w.u8(VERSION);
     w.usz(lc.n_heads());
     for hc in lc.heads() {
+        w.u8(CORE_INLINE);
         write_head_core(&mut w, hc);
+    }
+    w.buf
+}
+
+/// Core frame variant whose shared-prefix heads are serialized *by
+/// reference*: the prefix-store entry hash plus only the private state,
+/// instead of the merged image. Heads without a borrowed prefix are inline
+/// as usual. `base` is the prefix base hash the borrowing sequence was
+/// admitted under; `layer` its index.
+fn write_layer_core_frame_by_ref(lc: &LayerCache, base: u64, layer: usize) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_LAYER_CORE);
+    w.u8(VERSION);
+    w.usz(lc.n_heads());
+    for (h, hc) in lc.heads().iter().enumerate() {
+        if hc.shared_k.is_some() || hc.shared_v.is_some() {
+            w.u8(CORE_BY_REF);
+            w.u64(entry_hash(base, layer, h));
+            write_head_core_raw(&mut w, hc);
+        } else {
+            w.u8(CORE_INLINE);
+            write_head_core(&mut w, hc);
+        }
     }
     w.buf
 }
@@ -736,6 +831,26 @@ pub fn snapshot_sequence_frames(seq: &Sequence) -> SequenceFrames {
             .iter()
             .map(|lc| LayerFrames {
                 core: write_layer_core_frame(lc),
+                windows: write_layer_windows_frame(lc),
+            })
+            .collect(),
+    }
+}
+
+/// [`snapshot_sequence_frames`] for a sequence borrowing the shared prefix
+/// stored under `base`: shared heads are framed by reference (entry hash +
+/// private state), so an offloaded borrower's warm-tier resident holds only
+/// its incremental bytes. Restore with [`restore_sequence_frames_with`] and
+/// the store's resolver; the borrower's pins must outlive the offload.
+pub fn snapshot_sequence_frames_by_ref(seq: &Sequence, base: u64) -> SequenceFrames {
+    SequenceFrames {
+        meta: write_meta_frame(seq),
+        layers: seq
+            .caches
+            .iter()
+            .enumerate()
+            .map(|(l, lc)| LayerFrames {
+                core: write_layer_core_frame_by_ref(lc, base, l),
                 windows: write_layer_windows_frame(lc),
             })
             .collect(),
@@ -789,6 +904,21 @@ pub fn restore_sequence_frames(
     meta: &[u8],
     layers: &[(&[u8], Option<&[u8]>)],
 ) -> Result<(Sequence, Vec<usize>)> {
+    restore_sequence_frames_with(meta, layers, &|_| None)
+}
+
+/// [`restore_sequence_frames`] with a prefix-store resolver for frames
+/// written by [`snapshot_sequence_frames_by_ref`]: each by-reference head's
+/// entry hash is resolved to its pinned [`PrefixImage`] and re-borrowed.
+/// Fails if any referenced image cannot be resolved (which the scheduler
+/// rules out by holding the borrower's pins across the offload). Inline
+/// frames never invoke the resolver, so `restore_sequence_frames` is this
+/// with a resolver that always misses.
+pub fn restore_sequence_frames_with(
+    meta: &[u8],
+    layers: &[(&[u8], Option<&[u8]>)],
+    resolver: &dyn Fn(u64) -> Option<Arc<PrefixImage>>,
+) -> Result<(Sequence, Vec<usize>)> {
     let mut r = Reader::new(meta);
     check_header(&mut r, MAGIC_META, "sequence meta")?;
     let id = r.u64()?;
@@ -812,7 +942,7 @@ pub fn restore_sequence_frames(
         let n_heads = cr.count(1)?;
         let mut heads = Vec::with_capacity(n_heads);
         for _ in 0..n_heads {
-            heads.push(read_head_core(&mut cr)?);
+            heads.push(read_head_core_entry(&mut cr, resolver)?);
         }
         cr.done()?;
         match windows {
@@ -835,6 +965,55 @@ pub fn restore_sequence_frames(
         caches.push(LayerCache::from_heads(heads));
     }
     Ok((Sequence { id, tokens, caches, n_prefill, last_logits }, missing_windows))
+}
+
+// ---------------------------------------------------------------------------
+// prefix images
+// ---------------------------------------------------------------------------
+
+/// Serialized configuration identity (crate-internal): the prefix store
+/// hashes these bytes into its content address, so any configuration field
+/// that changes quantized bytes also rekeys the prefix.
+pub(crate) fn cfg_bytes(cfg: &MethodConfig) -> Vec<u8> {
+    let mut w = Writer::default();
+    write_cfg(&mut w, cfg);
+    w.buf
+}
+
+/// Serialize one shared [`PrefixImage`] into a self-contained byte image —
+/// the prefix store's budget-accounting twin of the live `Arc`.
+pub fn snapshot_prefix_image(img: &PrefixImage) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u32(MAGIC_PREFIX);
+    w.u8(VERSION);
+    w.usz(img.d_h);
+    w.usz(img.prefix_len);
+    write_key_segment(&mut w, &img.qk);
+    write_val_segment(&mut w, &img.qv);
+    w.f32s(&img.norm.scale);
+    w.f32s(&img.norm.inv_scale);
+    w.buf
+}
+
+/// Reconstruct a [`PrefixImage`] from [`snapshot_prefix_image`] bytes,
+/// bit-identical to the serialized image.
+pub fn restore_prefix_image(bytes: &[u8]) -> Result<PrefixImage> {
+    let mut r = Reader::new(bytes);
+    if r.u32()? != MAGIC_PREFIX {
+        return Err(anyhow!("not a prefix image (bad magic)"));
+    }
+    let v = r.u8()?;
+    if v != VERSION {
+        return Err(anyhow!("unsupported prefix image version {v}"));
+    }
+    let d_h = r.usz()?;
+    let prefix_len = r.usz()?;
+    let qk = Arc::new(read_key_segment(&mut r)?);
+    let qv = Arc::new(read_val_segment(&mut r)?);
+    let scale = r.f32s()?;
+    let inv_scale = r.f32s()?;
+    r.done()?;
+    Ok(PrefixImage { d_h, prefix_len, qk, qv, norm: ChannelNorm { scale, inv_scale } })
 }
 
 #[cfg(test)]
@@ -996,5 +1175,148 @@ mod tests {
         extra.push(0);
         assert!(restore_head(&extra).is_err(), "trailing bytes");
         assert!(restore_sequence(&bytes).is_err(), "head bytes are not a sequence");
+    }
+
+    // -- shared prefixes ---------------------------------------------------
+
+    #[test]
+    fn prefix_image_round_trip_is_bit_exact() {
+        let d_h = 64;
+        for (i, m) in QuantMethod::ALL.iter().enumerate() {
+            let mut rng = Rng::new(0x9A0 + i as u64);
+            let keys = normal_vec(&mut rng, 180 * d_h, 1.0, 0.02);
+            let vals = normal_vec(&mut rng, 180 * d_h, 1.0, 0.02);
+            let mut donor = HeadCache::from_prefill_split_norm(m.config(), d_h, &keys, &vals, 180);
+            let (qk, qv) = donor.split_off_prefix();
+            let img = PrefixImage { d_h, prefix_len: 180, qk, qv, norm: donor.norm.clone() };
+            let bytes = snapshot_prefix_image(&img);
+            let back = restore_prefix_image(&bytes).expect("restore");
+            assert_eq!(back, img, "{m:?} prefix image round trip diverged");
+            assert_eq!(snapshot_prefix_image(&back), bytes, "{m:?} re-serialization diverged");
+        }
+        assert!(restore_prefix_image(&[1, 2, 3]).is_err(), "garbage must be rejected");
+    }
+
+    /// A 2-layer, 2-head sequence borrowing shared prefix images, plus the
+    /// resolver map a prefix store would provide for it.
+    fn build_shared_sequence(
+        base: u64,
+        n: usize,
+        prefix: usize,
+        seed: u64,
+    ) -> (Sequence, std::collections::BTreeMap<u64, Arc<PrefixImage>>) {
+        let d_h = 64;
+        let cfg = QuantMethod::InnerQBase.config();
+        let mut rng = Rng::new(seed);
+        let mut resolver = std::collections::BTreeMap::new();
+        let caches: Vec<LayerCache> = (0..2usize)
+            .map(|l| {
+                LayerCache::from_heads(
+                    (0..2usize)
+                        .map(|h| {
+                            let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                            let vals = normal_vec(&mut rng, n * d_h, 1.0, 0.02);
+                            let mut donor = HeadCache::from_prefill_split_norm(
+                                cfg,
+                                d_h,
+                                &keys[..prefix * d_h],
+                                &vals[..prefix * d_h],
+                                prefix,
+                            );
+                            let (qk, qv) = donor.split_off_prefix();
+                            resolver.insert(
+                                super::entry_hash(base, l, h),
+                                Arc::new(PrefixImage {
+                                    d_h,
+                                    prefix_len: prefix,
+                                    qk: qk.clone(),
+                                    qv: qv.clone(),
+                                    norm: donor.norm.clone(),
+                                }),
+                            );
+                            HeadCache::from_shared_prefix(
+                                cfg,
+                                d_h,
+                                &keys,
+                                &vals,
+                                prefix,
+                                qk,
+                                qv,
+                                donor.norm.clone(),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let seq = Sequence {
+            id: 77,
+            tokens: (0..n as i32).collect(),
+            caches,
+            n_prefill: n,
+            last_logits: normal_vec(&mut rng, 25, 1.0, 0.0),
+        };
+        (seq, resolver)
+    }
+
+    #[test]
+    fn shared_sequences_serialize_identically_to_merged_state_by_default() {
+        let base = 0xF00D;
+        let (seq, _) = build_shared_sequence(base, 260, 192, 0xF4A7);
+        // Materialize the private-copy twin through merged().
+        let twin = Sequence {
+            id: seq.id,
+            tokens: seq.tokens.clone(),
+            caches: seq
+                .caches
+                .iter()
+                .map(|lc| LayerCache::from_heads(lc.heads().iter().map(|h| h.merged()).collect()))
+                .collect(),
+            n_prefill: seq.n_prefill,
+            last_logits: seq.last_logits.clone(),
+        };
+        assert_eq!(
+            snapshot_sequence(&seq),
+            snapshot_sequence(&twin),
+            "monolithic snapshot must hide sharing"
+        );
+        assert_eq!(
+            snapshot_sequence_frames(&seq),
+            snapshot_sequence_frames(&twin),
+            "default frames must hide sharing"
+        );
+    }
+
+    #[test]
+    fn by_ref_frames_resolve_back_to_shared_state() {
+        let base = 0xBA5E;
+        let (seq, resolver) = build_shared_sequence(base, 260, 192, 0xF4A8);
+        let by_ref = snapshot_sequence_frames_by_ref(&seq, base);
+        let inline = snapshot_sequence_frames(&seq);
+        for (l, (b, i)) in by_ref.layers.iter().zip(&inline.layers).enumerate() {
+            assert!(
+                b.core.len() < i.core.len(),
+                "layer {l}: by-ref core ({}) should be smaller than inline ({})",
+                b.core.len(),
+                i.core.len()
+            );
+        }
+        let layer_refs: Vec<(&[u8], Option<&[u8]>)> = by_ref
+            .layers
+            .iter()
+            .map(|l| (l.core.as_slice(), Some(l.windows.as_slice())))
+            .collect();
+        // Without a resolver the reference cannot be satisfied.
+        assert!(restore_sequence_frames(&by_ref.meta, &layer_refs).is_err());
+        let (back, missing) =
+            restore_sequence_frames_with(&by_ref.meta, &layer_refs, &|e| resolver.get(&e).cloned())
+                .expect("resolved restore");
+        assert!(missing.is_empty());
+        assert_eq!(back.caches, seq.caches, "restored borrower must match bit-for-bit");
+        assert_eq!(
+            snapshot_sequence(&back),
+            snapshot_sequence(&seq),
+            "restored borrower serializes like the original"
+        );
     }
 }

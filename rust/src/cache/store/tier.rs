@@ -26,6 +26,15 @@
 //! restore time as a partial take (the scheduler rebuilds the windows). All
 //! bookkeeping is deterministic (`BTreeMap` iteration, an internal logical
 //! clock), so replays that route through the tier stay byte-identical.
+//!
+//! Residents may additionally be *pinned* by a reference count
+//! ([`WarmTier::retain`] / [`WarmTier::release`]): while `refs > 0` the
+//! resident is invisible to eviction — neither its droppable frames nor the
+//! resident itself may be destroyed to make room, regardless of class. The
+//! prefix store ([`super::prefix`]) uses this to keep shared prefix images
+//! alive exactly as long as any live sequence borrows them; once released
+//! back to zero they rejoin the ordinary LRU order (evict-last, since a
+//! release refreshes nothing — their last `retain` stamp decides).
 
 use std::collections::BTreeMap;
 
@@ -93,6 +102,9 @@ struct Resident {
     class: u8,
     /// Last-touched stamp from the tier's logical clock (LRU order).
     stamp: u64,
+    /// Pin count: while non-zero the resident is exempt from eviction and
+    /// frame drops (see [`WarmTier::retain`]).
+    refs: u32,
 }
 
 impl Resident {
@@ -224,9 +236,12 @@ impl WarmTier {
     }
 
     /// Store `payload` for request `id` at priority-class level `class` as
-    /// one required frame. Compatibility form of [`WarmTier::insert_frames`].
-    pub fn insert(&mut self, id: u64, class: u8, payload: &[u8]) -> bool {
-        self.insert_frames(id, class, &[(payload, FrameKind::Required)]).is_some()
+    /// one required frame. Single-frame form of [`WarmTier::insert_frames`]
+    /// with the same contract: `Some(receipt)` reporting the bytes actually
+    /// stored, `None` when the insert was refused with the tier unchanged —
+    /// so callers account stored bytes identically on both paths.
+    pub fn insert(&mut self, id: u64, class: u8, payload: &[u8]) -> Option<InsertReceipt> {
+        self.insert_frames(id, class, &[(payload, FrameKind::Required)])
     }
 
     /// Store a multi-frame snapshot for request `id` at priority-class
@@ -258,7 +273,7 @@ impl WarmTier {
         let evictable_segs: usize = self
             .residents
             .iter()
-            .filter(|(&rid, r)| rid != id && r.class >= class)
+            .filter(|(&rid, r)| rid != id && r.class >= class && r.refs == 0)
             .map(|(_, r)| r.present_segs())
             .sum();
         let headroom = self.available_segs() + replaced_segs + evictable_segs;
@@ -305,7 +320,7 @@ impl WarmTier {
         }
         self.clock += 1;
         let stamp = self.clock;
-        self.residents.insert(id, Resident { frames: slots, class, stamp });
+        self.residents.insert(id, Resident { frames: slots, class, stamp, refs: 0 });
         self.stats.inserts += 1;
         self.stats.insert_dropped_frames += dropped as u64;
         Some(InsertReceipt { stored_bytes, dropped_frames: dropped })
@@ -326,7 +341,7 @@ impl WarmTier {
             let frame_victim = self
                 .residents
                 .iter()
-                .filter(|(_, r)| r.class >= class && r.has_droppable())
+                .filter(|(_, r)| r.class >= class && r.refs == 0 && r.has_droppable())
                 .max_by_key(|(&vid, r)| (r.class, std::cmp::Reverse(r.stamp), std::cmp::Reverse(vid)))
                 .map(|(&vid, _)| vid);
             if let Some(vid) = frame_victim {
@@ -337,7 +352,7 @@ impl WarmTier {
             let victim = self
                 .residents
                 .iter()
-                .filter(|(_, r)| r.class >= class)
+                .filter(|(_, r)| r.class >= class && r.refs == 0)
                 .max_by_key(|(&vid, r)| (r.class, std::cmp::Reverse(r.stamp), std::cmp::Reverse(vid)))
                 .map(|(&vid, _)| vid);
             match victim {
@@ -401,14 +416,65 @@ impl WarmTier {
 
     /// Cheap pre-check for [`WarmTier::insert_frames`]: false when the tier
     /// has no capacity at all, or every pooled segment is held by strictly
-    /// more-important residents — an insert at `class` cannot possibly
-    /// succeed, so callers can skip building the payload (the scheduler
-    /// checks this before serializing a preemption victim).
+    /// more-important (or pinned) residents — an insert at `class` cannot
+    /// possibly succeed, so callers can skip building the payload (the
+    /// scheduler checks this before serializing a preemption victim).
     pub fn may_accept(&self, class: u8) -> bool {
         if self.max_segs == 0 {
             return false;
         }
-        self.available_segs() > 0 || self.residents.values().any(|r| r.class >= class)
+        self.available_segs() > 0
+            || self.residents.values().any(|r| r.class >= class && r.refs == 0)
+    }
+
+    /// Pin `id` against eviction, incrementing its reference count and
+    /// refreshing its LRU stamp. Returns false when `id` is not resident.
+    pub fn retain(&mut self, id: u64) -> bool {
+        self.clock += 1;
+        let stamp = self.clock;
+        match self.residents.get_mut(&id) {
+            Some(r) => {
+                r.refs += 1;
+                r.stamp = stamp;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one pin on `id` (saturating at zero). A resident back at zero
+    /// refs rejoins ordinary LRU eviction order with the stamp of its last
+    /// retain. Returns false when `id` is not resident.
+    pub fn release(&mut self, id: u64) -> bool {
+        match self.residents.get_mut(&id) {
+            Some(r) => {
+                r.refs = r.refs.saturating_sub(1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Current pin count of `id` (0 when not resident).
+    pub fn refs(&self, id: u64) -> u32 {
+        self.residents.get(&id).map_or(0, |r| r.refs)
+    }
+
+    /// Copy out a resident's whole payload without removing it — the
+    /// shared-read path (prefix images are borrowed, not consumed). Returns
+    /// `None` when `id` is not resident or any frame was dropped. Does not
+    /// count as a hit or refresh recency; pair with [`WarmTier::retain`]
+    /// when the caller keeps the bytes live.
+    pub fn peek(&self, id: u64) -> Option<Vec<u8>> {
+        let r = self.residents.get(&id)?;
+        if r.frames.iter().any(|f| !f.present) {
+            return None;
+        }
+        let mut out = Vec::with_capacity(r.present_bytes());
+        for f in &r.frames {
+            out.extend_from_slice(&self.assemble(f));
+        }
+        Some(out)
     }
 
     /// Read a resident's payload and remove it, returning its segments to
@@ -483,7 +549,7 @@ mod tests {
         let mut t = tier(8);
         for len in [0usize, 1, 1023, 1024, 1025, 3 * 1024 + 17] {
             let p = payload(len, 7);
-            assert!(t.insert(42, 1, &p), "len {len}");
+            assert!(t.insert(42, 1, &p).is_some(), "len {len}");
             assert!(t.contains(42));
             assert_eq!(t.take(42), Some(p), "len {len}");
             assert!(!t.contains(42));
@@ -497,7 +563,7 @@ mod tests {
         let mut t = tier(4);
         for round in 0..10 {
             let p = payload(3 * 1024, round);
-            assert!(t.insert(round as u64, 1, &p));
+            assert!(t.insert(round as u64, 1, &p).is_some());
             assert_eq!(t.take(round as u64), Some(p));
         }
         assert!(t.segments.len() <= 4, "pool grew past its budget: {}", t.segments.len());
@@ -507,11 +573,11 @@ mod tests {
     #[test]
     fn lru_eviction_within_a_class() {
         let mut t = tier(4); // 4 segments of 1 KiB
-        assert!(t.insert(1, 1, &payload(2 * 1024, 1))); // 2 segs
-        assert!(t.insert(2, 1, &payload(2 * 1024, 2))); // 2 segs, pool full
+        assert!(t.insert(1, 1, &payload(2 * 1024, 1)).is_some()); // 2 segs
+        assert!(t.insert(2, 1, &payload(2 * 1024, 2)).is_some()); // 2 segs, pool full
         // Re-inserting 1 (replacement) refreshes its recency stamp.
-        assert!(t.insert(1, 1, &payload(2 * 1024, 1)));
-        assert!(t.insert(3, 1, &payload(1024, 3))); // must evict LRU = 2
+        assert!(t.insert(1, 1, &payload(2 * 1024, 1)).is_some());
+        assert!(t.insert(3, 1, &payload(1024, 3)).is_some()); // must evict LRU = 2
         assert!(t.contains(1) && !t.contains(2) && t.contains(3));
         assert_eq!(t.stats.evictions, 1);
         assert_eq!(t.stats.evicted_bytes, 2 * 1024);
@@ -524,7 +590,7 @@ mod tests {
         assert!(!WarmTier::new(0, 1024).may_accept(0));
         let mut t = tier(2);
         assert!(t.may_accept(2), "empty tier accepts any class");
-        assert!(t.insert(1, 0, &payload(2 * 1024, 1))); // interactive fills it
+        assert!(t.insert(1, 0, &payload(2 * 1024, 1)).is_some()); // interactive fills it
         assert!(!t.may_accept(2), "batch cannot displace interactive");
         assert!(t.may_accept(0), "equal class can displace via LRU");
         t.remove(1);
@@ -534,19 +600,19 @@ mod tests {
     #[test]
     fn lower_importance_residents_evict_first() {
         let mut t = tier(4);
-        assert!(t.insert(10, 0, &payload(2 * 1024, 1))); // interactive
-        assert!(t.insert(20, 2, &payload(2 * 1024, 2))); // batch
+        assert!(t.insert(10, 0, &payload(2 * 1024, 1)).is_some()); // interactive
+        assert!(t.insert(20, 2, &payload(2 * 1024, 2)).is_some()); // batch
         // A standard-class insert evicts the batch resident, not interactive.
-        assert!(t.insert(30, 1, &payload(2 * 1024, 3)));
+        assert!(t.insert(30, 1, &payload(2 * 1024, 3)).is_some());
         assert!(t.contains(10) && !t.contains(20) && t.contains(30));
     }
 
     #[test]
     fn insert_never_destroys_more_important_residents() {
         let mut t = tier(2);
-        assert!(t.insert(1, 0, &payload(2 * 1024, 1))); // fills the pool
+        assert!(t.insert(1, 0, &payload(2 * 1024, 1)).is_some()); // fills the pool
         // A batch-class snapshot cannot displace interactive state.
-        assert!(!t.insert(2, 2, &payload(1024, 2)));
+        assert!(t.insert(2, 2, &payload(1024, 2)).is_none());
         assert!(t.contains(1) && !t.contains(2));
         assert_eq!(t.stats.insert_rejected, 1);
         assert_eq!(t.stats.evictions, 0);
@@ -555,32 +621,32 @@ mod tests {
     #[test]
     fn oversized_and_zero_budget_inserts_are_refused() {
         let mut t = tier(2);
-        assert!(!t.insert(1, 0, &payload(3 * 1024, 1)));
+        assert!(t.insert(1, 0, &payload(3 * 1024, 1)).is_none());
         let mut none = WarmTier::new(0, 1024);
-        assert!(!none.insert(1, 0, &payload(1, 1)));
+        assert!(none.insert(1, 0, &payload(1, 1)).is_none());
         assert_eq!(none.budget_bytes(), 0);
     }
 
     #[test]
     fn failed_replacement_keeps_the_old_resident() {
         let mut t = tier(2);
-        assert!(t.insert(7, 1, &payload(1024, 3)));
+        assert!(t.insert(7, 1, &payload(1024, 3)).is_some());
         // Replacement too big for the whole pool: refused, original intact.
-        assert!(!t.insert(7, 1, &payload(3 * 1024, 4)));
+        assert!(t.insert(7, 1, &payload(3 * 1024, 4)).is_none());
         assert_eq!(t.take(7), Some(payload(1024, 3)));
         // Replacement blocked by a more-important resident: same guarantee.
         let mut t = tier(2);
-        assert!(t.insert(1, 0, &payload(1024, 1))); // interactive, 1 seg
-        assert!(t.insert(7, 2, &payload(1024, 2))); // batch, 1 seg — pool full
-        assert!(!t.insert(7, 2, &payload(2 * 1024, 9)), "would need to evict id 1");
+        assert!(t.insert(1, 0, &payload(1024, 1)).is_some()); // interactive, 1 seg
+        assert!(t.insert(7, 2, &payload(1024, 2)).is_some()); // batch, 1 seg — pool full
+        assert!(t.insert(7, 2, &payload(2 * 1024, 9)).is_none(), "would need to evict id 1");
         assert_eq!(t.take(7), Some(payload(1024, 2)), "old snapshot must survive");
     }
 
     #[test]
     fn replacing_an_id_keeps_one_resident() {
         let mut t = tier(4);
-        assert!(t.insert(5, 1, &payload(1024, 1)));
-        assert!(t.insert(5, 1, &payload(2048, 9)));
+        assert!(t.insert(5, 1, &payload(1024, 1)).is_some());
+        assert!(t.insert(5, 1, &payload(2048, 9)).is_some());
         assert_eq!(t.n_residents(), 1);
         assert_eq!(t.take(5), Some(payload(2048, 9)));
         assert_eq!(t.reserved_bytes(), 0);
@@ -625,7 +691,7 @@ mod tests {
         assert!(t.insert_frames(1, 1, &as_refs(&fs)).is_some());
         // A 3-segment insert must drop resident 1's window frames (last
         // first), not evict it.
-        assert!(t.insert(2, 1, &payload(3 * 1024, 9)));
+        assert!(t.insert(2, 1, &payload(3 * 1024, 9)).is_some());
         assert!(t.contains(1), "resident must survive as partial");
         assert!(t.is_partial(1));
         assert_eq!(t.stats.frame_evictions, 2);
@@ -675,5 +741,74 @@ mod tests {
         assert!(t.insert_frames(2, 2, &as_refs(&fs)).is_none());
         assert!(!t.is_partial(1), "interactive frames must be untouched");
         assert_eq!(t.stats.frame_evictions, 0);
+    }
+
+    // -- refcount pinning and shared reads --------------------------------
+
+    #[test]
+    fn insert_receipt_reports_stored_bytes() {
+        let mut t = tier(4);
+        let r = t.insert(11, 1, &payload(1500, 2)).expect("insert");
+        assert_eq!(r.stored_bytes, 1500);
+        assert_eq!(r.dropped_frames, 0);
+    }
+
+    #[test]
+    fn pinned_residents_are_exempt_from_eviction() {
+        let mut t = tier(2);
+        assert!(t.insert(1, 2, &payload(2 * 1024, 1)).is_some()); // batch fills pool
+        assert!(t.retain(1));
+        assert_eq!(t.refs(1), 1);
+        // Even interactive work cannot displace a pinned resident —
+        // not whole, not frame by frame.
+        assert!(t.insert(2, 0, &payload(1024, 2)).is_none());
+        assert!(!t.may_accept(0), "only pinned bytes left: nothing evictable");
+        assert!(t.release(1));
+        assert_eq!(t.refs(1), 0);
+        // Released back to zero refs, it rejoins ordinary LRU eviction.
+        assert!(t.insert(2, 0, &payload(1024, 2)).is_some());
+        assert!(!t.contains(1) && t.contains(2));
+    }
+
+    #[test]
+    fn pinned_droppable_frames_survive_pressure() {
+        let mut t = tier(4);
+        let fs = frames3(&payload(1024, 1), &payload(1024, 2), &payload(1024, 3));
+        assert!(t.insert_frames(1, 2, &as_refs(&fs)).is_some()); // 3 of 4 segs
+        assert!(t.retain(1));
+        // Needs 2 segments; only 1 is free and the rest are pinned.
+        assert!(t.insert(2, 0, &payload(2 * 1024, 9)).is_none());
+        assert!(!t.is_partial(1), "pinned windows must not be dropped");
+        assert_eq!(t.stats.frame_evictions, 0);
+    }
+
+    #[test]
+    fn retain_and_release_report_missing_residents() {
+        let mut t = tier(2);
+        assert!(!t.retain(9));
+        assert!(!t.release(9));
+        assert_eq!(t.refs(9), 0);
+    }
+
+    #[test]
+    fn peek_reads_without_consuming() {
+        let mut t = tier(4);
+        let p = payload(1500, 5);
+        assert!(t.insert(3, 1, &p).is_some());
+        assert_eq!(t.peek(3), Some(p.clone()));
+        assert_eq!(t.peek(3), Some(p.clone()), "peek must not consume");
+        assert!(t.contains(3));
+        assert_eq!(t.take(3), Some(p));
+        assert_eq!(t.peek(3), None, "taken residents are gone");
+    }
+
+    #[test]
+    fn peek_refuses_partial_residents() {
+        let mut t = tier(2);
+        let fs = frames3(&payload(1024, 1), &payload(1024, 2), &payload(512, 3));
+        assert!(t.insert_frames(6, 1, &as_refs(&fs)).is_some()); // degraded
+        assert!(t.is_partial(6));
+        assert_eq!(t.peek(6), None, "peek must not hand back holes");
+        assert!(t.contains(6), "peek never removes");
     }
 }

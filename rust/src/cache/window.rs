@@ -6,7 +6,7 @@
 //! consume. Both store f32 rows (the FP16-storage stand-in).
 
 /// Fixed window over the first tokens of the sequence.
-#[derive(Debug, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SinkWindow {
     /// Head dimension.
     pub d_h: usize,
@@ -46,7 +46,7 @@ impl SinkWindow {
 }
 
 /// FIFO window over the most recent tokens, with amortized O(1) front pops.
-#[derive(Debug, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RecentWindow {
     /// Head dimension.
     pub d_h: usize,

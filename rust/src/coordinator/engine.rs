@@ -35,6 +35,7 @@
 //! Python never runs here; the executables were compiled from
 //! `artifacts/*.hlo.txt` at engine start.
 
+use crate::cache::store::{prefix_base_hash, PrefixImage, PrefixStore};
 use crate::cache::{attention_fanout, head_step, HeadCache, LayerCache};
 use crate::quant::MethodConfig;
 use crate::runtime::executable::{In, Stage as PjrtStage};
@@ -42,7 +43,7 @@ use crate::runtime::Manifest;
 use crate::util::threadpool::{Job, Stage, ThreadPool};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::sync::{Mutex, MutexGuard, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 /// Decode-step execution mode; see the module docs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -74,6 +75,58 @@ impl PipelineMode {
             PipelineMode::Overlap => "overlap",
         }
     }
+}
+
+/// How [`Engine::prefill_shared`] resolved a request's shareable prefix.
+/// `Published` and `Hit` leave the sequence *borrowing* refcount-pinned
+/// images out of the [`PrefixStore`]; the caller owns their release when the
+/// sequence retires (finishes, expires, or is recompute-preempted).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixOutcome {
+    /// No sharing happened: the request declared no prefix, no store was
+    /// supplied, or the store refused the insert under budget pressure (in
+    /// which case the prefix was materialized into private copies — the
+    /// sequence owns every byte and nothing needs releasing).
+    Private,
+    /// Store miss: the prefix was quantized here and its images published;
+    /// the sequence borrows them so later requests can hit.
+    Published {
+        /// Content hash of `(MethodConfig, prefix tokens)`.
+        base: u64,
+        /// Total quantized bytes of the published image set.
+        bytes: usize,
+    },
+    /// Store hit: every `(layer, head)` image was already resident; the
+    /// sequence borrows them and only the unshared tail was quantized.
+    Hit {
+        /// Content hash of `(MethodConfig, prefix tokens)`.
+        base: u64,
+        /// Total quantized bytes borrowed instead of owned — the incremental
+        /// savings the scheduler's admission accounting credits.
+        bytes: usize,
+    },
+}
+
+/// Gather one `(layer, head)`'s token-major K/V rows out of the bucketed
+/// prefill tensors (layout `(n_layers, bucket, n_kv, d_h)` per tensor).
+fn gather_rows(
+    ks: &[f32],
+    vs: &[f32],
+    bucket: usize,
+    n_kv: usize,
+    d_h: usize,
+    n: usize,
+    l: usize,
+    h: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut k_rows = Vec::with_capacity(n * d_h);
+    let mut v_rows = Vec::with_capacity(n * d_h);
+    for t in 0..n {
+        let base = ((l * bucket + t) * n_kv + h) * d_h;
+        k_rows.extend_from_slice(&ks[base..base + d_h]);
+        v_rows.extend_from_slice(&vs[base..base + d_h]);
+    }
+    (k_rows, v_rows)
 }
 
 /// One live sequence: token history + one [`LayerCache`] per layer.
@@ -221,20 +274,24 @@ impl Engine {
         let gathers: Vec<_> = (0..n_l * n_kv)
             .map(|idx| {
                 let (l, h) = (idx / n_kv, idx % n_kv);
-                move || {
-                    let mut k_rows = Vec::with_capacity(n * d_h);
-                    let mut v_rows = Vec::with_capacity(n * d_h);
-                    for t in 0..n {
-                        let base = ((l * bucket + t) * n_kv + h) * d_h;
-                        k_rows.extend_from_slice(&ks_ref[base..base + d_h]);
-                        v_rows.extend_from_slice(&vs_ref[base..base + d_h]);
-                    }
-                    (k_rows, v_rows)
-                }
+                move || gather_rows(ks_ref, vs_ref, bucket, n_kv, d_h, n, l, h)
             })
             .collect();
         let mut slots: Vec<Option<HeadCache>> = (0..n_l * n_kv).map(|_| None).collect();
         self.pool.run(crate::cache::prefill_fanout(self.cfg, d_h, gathers, &mut slots));
+        Ok(self.assemble_sequence(prompt, slots, &logits))
+    }
+
+    /// Collect filled per-(layer, head) slots into a [`Sequence`] (the shared
+    /// tail of every prefill flavor).
+    fn assemble_sequence(
+        &self,
+        prompt: &[i32],
+        slots: Vec<Option<HeadCache>>,
+        logits: &[f32],
+    ) -> Sequence {
+        let dims = &self.manifest.model;
+        let (n_l, n_kv) = (dims.n_layers, dims.n_kv_heads);
         let mut caches = Vec::with_capacity(n_l);
         let mut slot_iter = slots.into_iter();
         for _ in 0..n_l {
@@ -245,14 +302,177 @@ impl Engine {
                 .collect();
             caches.push(LayerCache::from_heads(heads));
         }
-        let vstart = (n - 1) * dims.vocab;
-        Ok(Sequence {
+        let vstart = (prompt.len() - 1) * dims.vocab;
+        Sequence {
             id: self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             tokens: prompt.to_vec(),
             caches,
-            n_prefill: n,
+            n_prefill: prompt.len(),
             last_logits: logits[vstart..vstart + dims.vocab].to_vec(),
-        })
+        }
+    }
+
+    /// Prefill with shared-prefix resolution: the first `prefix_len` tokens
+    /// are a shareable prefix whose quantized images may already live in
+    /// `store`.
+    ///
+    /// Three paths, all byte-identical in logits and (merged) cache state:
+    ///
+    /// * **no store / no prefix** — private quantization. With a non-zero
+    ///   `prefix_len` the per-channel key norm is still computed over the
+    ///   prefix rows only ([`HeadCache::from_prefill_split_norm`]): the
+    ///   numerics contract is a function of the *request*, never of whether
+    ///   sharing is enabled, so toggling `--prefix-share` cannot change a
+    ///   single output byte.
+    /// * **store hit** — every `(layer, head)` image is borrowed
+    ///   (refcount-pinned) and only the unshared tail is quantized
+    ///   ([`HeadCache::from_shared_prefix`]).
+    /// * **store miss** — the prefix is quantized once, split off as
+    ///   immutable images ([`HeadCache::split_off_prefix`]) and published;
+    ///   if the store refuses (budget pressure) the images are merged back
+    ///   into private copies so a sequence holds shared state iff the store
+    ///   tracks it.
+    pub fn prefill_shared(
+        &self,
+        prompt: &[i32],
+        prefix_len: usize,
+        store: Option<&mut PrefixStore>,
+    ) -> Result<(Sequence, PrefixOutcome)> {
+        let n = prompt.len();
+        if prefix_len == 0 || prefix_len > n {
+            return Ok((self.prefill(prompt)?, PrefixOutcome::Private));
+        }
+        let dims = &self.manifest.model;
+        let (logits, ks, vs, bucket) = self.run_prefill_stage(prompt)?;
+        let (n_l, n_kv, d_h) = (dims.n_layers, dims.n_kv_heads, dims.d_h);
+        let cfg = self.cfg;
+        let (ks_ref, vs_ref): (&[f32], &[f32]) = (&ks, &vs);
+
+        let mut slots: Vec<Option<HeadCache>> = (0..n_l * n_kv).map(|_| None).collect();
+        let mut outcome = PrefixOutcome::Private;
+
+        match store {
+            None => {
+                // Sharing disabled but a prefix declared: split-norm private
+                // quantization (see the method docs on why the norm split
+                // must not depend on the sharing toggle).
+                let jobs: Vec<Job> = slots
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(idx, slot)| {
+                        let job: Job = Box::new(move |_scratch: &mut Vec<f32>| {
+                            let (l, h) = (idx / n_kv, idx % n_kv);
+                            let (k_rows, v_rows) =
+                                gather_rows(ks_ref, vs_ref, bucket, n_kv, d_h, n, l, h);
+                            *slot = Some(HeadCache::from_prefill_split_norm(
+                                cfg, d_h, &k_rows, &v_rows, prefix_len,
+                            ));
+                        });
+                        job
+                    })
+                    .collect();
+                self.pool.run(jobs);
+            }
+            Some(st) => {
+                let base = prefix_base_hash(&cfg, &prompt[..prefix_len]);
+                if let Some(images) = st.acquire_set(base, n_l, n_kv) {
+                    // Hit: borrow every image; quantize only the tail.
+                    let bytes: usize = images.iter().flatten().map(|i| i.bytes()).sum();
+                    let flat: Vec<Arc<PrefixImage>> = images.into_iter().flatten().collect();
+                    let jobs: Vec<Job> = flat
+                        .into_iter()
+                        .zip(slots.iter_mut())
+                        .enumerate()
+                        .map(|(idx, (img, slot))| {
+                            let job: Job = Box::new(move |_scratch: &mut Vec<f32>| {
+                                let (l, h) = (idx / n_kv, idx % n_kv);
+                                let (k_rows, v_rows) =
+                                    gather_rows(ks_ref, vs_ref, bucket, n_kv, d_h, n, l, h);
+                                debug_assert_eq!(img.prefix_len, prefix_len);
+                                *slot = Some(HeadCache::from_shared_prefix(
+                                    cfg,
+                                    d_h,
+                                    &k_rows,
+                                    &v_rows,
+                                    prefix_len,
+                                    img.qk.clone(),
+                                    img.qv.clone(),
+                                    img.norm.clone(),
+                                ));
+                            });
+                            job
+                        })
+                        .collect();
+                    self.pool.run(jobs);
+                    outcome = PrefixOutcome::Hit { base, bytes };
+                } else {
+                    // Miss: quantize the prefix once per (layer, head), fork
+                    // it off as an immutable image, then continue with the
+                    // tail — the exact append cadence of the unified build,
+                    // so the merged state is byte-identical to it.
+                    let mut pairs: Vec<Option<(HeadCache, PrefixImage)>> =
+                        (0..n_l * n_kv).map(|_| None).collect();
+                    let jobs: Vec<Job> = pairs
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(idx, slot)| {
+                            let job: Job = Box::new(move |_scratch: &mut Vec<f32>| {
+                                let (l, h) = (idx / n_kv, idx % n_kv);
+                                let (k_rows, v_rows) =
+                                    gather_rows(ks_ref, vs_ref, bucket, n_kv, d_h, n, l, h);
+                                let pb = prefix_len * d_h;
+                                let mut hc = HeadCache::from_prefill_split_norm(
+                                    cfg,
+                                    d_h,
+                                    &k_rows[..pb],
+                                    &v_rows[..pb],
+                                    prefix_len,
+                                );
+                                let (qk, qv) = hc.split_off_prefix();
+                                let img = PrefixImage {
+                                    d_h,
+                                    prefix_len,
+                                    qk,
+                                    qv,
+                                    norm: hc.norm.clone(),
+                                };
+                                for (k, v) in k_rows[pb..]
+                                    .chunks_exact(d_h)
+                                    .zip(v_rows[pb..].chunks_exact(d_h))
+                                {
+                                    hc.append(k, v);
+                                }
+                                *slot = Some((hc, img));
+                            });
+                            job
+                        })
+                        .collect();
+                    self.pool.run(jobs);
+                    let mut images: Vec<Vec<PrefixImage>> =
+                        (0..n_l).map(|_| Vec::with_capacity(n_kv)).collect();
+                    for (idx, pair) in pairs.into_iter().enumerate() {
+                        let (hc, img) = pair.expect("prefill job filled its slot");
+                        slots[idx] = Some(hc);
+                        images[idx / n_kv].push(img);
+                    }
+                    let bytes: usize = images.iter().flatten().map(|i| i.bytes()).sum();
+                    if st.insert_set(base, images).is_some() {
+                        outcome = PrefixOutcome::Published { base, bytes };
+                    } else {
+                        // The store refused (budget pressure / pinned
+                        // residents): materialize private copies so the
+                        // invariant holds — a sequence holds shared Arcs
+                        // iff the store tracks and pins them.
+                        for slot in slots.iter_mut() {
+                            if let Some(hc) = slot {
+                                *hc = hc.merged();
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok((self.assemble_sequence(prompt, slots, &logits), outcome))
     }
 
     /// Rebuild the fp sink/recent windows of the given `layers` of a

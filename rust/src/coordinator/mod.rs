@@ -8,6 +8,6 @@ pub mod engine;
 pub mod request;
 pub mod scheduler;
 
-pub use engine::{Engine, PipelineMode, Sequence};
+pub use engine::{Engine, PipelineMode, PrefixOutcome, Sequence};
 pub use request::{Completion, Phase, Priority, Request, SchedEvent, StepMetrics};
 pub use scheduler::{Policy, Preemption, Scheduler};

@@ -83,6 +83,15 @@ pub struct Request {
     /// submission*. The scheduler fails the request (releasing its cache
     /// reservation) once its absolute deadline passes; `None` never expires.
     pub deadline_us: Option<u64>,
+    /// Length in tokens of the prompt's shareable prefix (a system prompt
+    /// or earlier conversation turns repeated across requests). 0 disables
+    /// sharing for this request. When prefix sharing is enabled, the
+    /// scheduler probes the prefix store for these tokens' quantized images
+    /// and charges only the incremental bytes on a hit; numerics are
+    /// unchanged either way (the per-channel key norm is computed over the
+    /// prefix rows whenever this is non-zero — see
+    /// `HeadCache::from_prefill_split_norm`).
+    pub prefix_len: usize,
 }
 
 impl Request {
@@ -97,6 +106,7 @@ impl Request {
             arrived: Instant::now(),
             priority: Priority::Standard,
             deadline_us: None,
+            prefix_len: 0,
         }
     }
 }
@@ -203,6 +213,15 @@ pub enum SchedEvent {
         /// Request id.
         id: u64,
     },
+    /// Admission found every quantized prefix image for the request's
+    /// shareable prefix resident in the prefix store: the sequence borrows
+    /// them and its cache reservation covers only the incremental bytes.
+    PrefixHit {
+        /// Request id.
+        id: u64,
+        /// Shared bytes the sequence borrows instead of owning.
+        bytes: usize,
+    },
     /// Failed terminally before completing (rejected, unencodable,
     /// over-budget, or prefill failure).
     Rejected {
@@ -235,6 +254,7 @@ impl SchedEvent {
             | SchedEvent::Offloaded { id, .. }
             | SchedEvent::Restored { id, .. }
             | SchedEvent::OffloadLost { id }
+            | SchedEvent::PrefixHit { id, .. }
             | SchedEvent::Rejected { id }
             | SchedEvent::Expired { id, .. }
             | SchedEvent::Finished { id, .. } => id,
@@ -288,4 +308,10 @@ pub struct StepMetrics {
     /// Smaller lower-priority requests admitted past a parked queue head
     /// under the SLO policy's bounded bypass.
     pub bypass_admissions: u64,
+    /// Admissions that borrowed every prefix image from the prefix store
+    /// instead of quantizing the prefix privately.
+    pub prefix_hits: u64,
+    /// Quantized bytes borrowed from the prefix store at admission, summed
+    /// over prefix hits — bytes the cache pool did *not* have to reserve.
+    pub prefix_bytes_shared: u64,
 }

@@ -55,11 +55,12 @@
 //!   emits [`SchedEvent::OffloadLost`].
 
 use crate::cache::store::{
-    restore_sequence_frames, snapshot_sequence_frames_on, FrameKind, WarmTier, DEFAULT_SEG_BYTES,
+    prefix_base_hash, restore_sequence_frames_with, snapshot_sequence_frames_by_ref,
+    snapshot_sequence_frames_on, FrameKind, PrefixStore, WarmTier, DEFAULT_SEG_BYTES,
 };
 use crate::cache::{Admission, CachePool};
 use crate::coordinator::batcher;
-use crate::coordinator::engine::{Engine, PipelineMode, Sequence};
+use crate::coordinator::engine::{Engine, PipelineMode, PrefixOutcome, Sequence};
 use crate::coordinator::request::{Completion, Priority, Request, SchedEvent, StepMetrics};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -180,10 +181,21 @@ enum AdmitStep {
     Parked,
 }
 
+/// The prefix-store pins one live or warm sequence holds: enough to
+/// release the whole `(layer, head)` image grid when the sequence retires,
+/// and to write snapshot frames by reference while it is offloaded.
+struct PrefixHandle {
+    /// Content hash of `(MethodConfig, prefix tokens)`.
+    base: u64,
+    /// Grid dimensions of the pinned image set.
+    n_layers: usize,
+    n_heads: usize,
+}
+
 /// The serving scheduler: one instance owns the engine, the cache pool, the
-/// warm tier, the admission queue, and the live decode batch. Drive it with
-/// [`Scheduler::tick`] (one admission + decode round) or
-/// [`Scheduler::run_to_completion`].
+/// warm tier, the prefix store, the admission queue, and the live decode
+/// batch. Drive it with [`Scheduler::tick`] (one admission + decode round)
+/// or [`Scheduler::run_to_completion`].
 pub struct Scheduler {
     /// The decode engine (PJRT stages + quantized-cache attention).
     pub engine: Engine,
@@ -192,6 +204,13 @@ pub struct Scheduler {
     /// Warm tier holding offload-preempted sequence snapshots
     /// ([`Preemption::Offload`]); unused under recompute preemption.
     pub tier: WarmTier,
+    /// Content-addressed store of shared quantized prefix images. Consulted
+    /// at admission (incremental byte accounting) and prefill (borrow
+    /// instead of quantize) when [`Scheduler::set_prefix_share`] is on.
+    pub prefix_store: PrefixStore,
+    prefix_share: bool,
+    /// Pins held per live/warm request id; see [`PrefixHandle`].
+    prefix_refs: BTreeMap<u64, PrefixHandle>,
     queue: VecDeque<Queued>,
     live: Vec<Live>,
     warm: Vec<Warm>,
@@ -224,6 +243,11 @@ const DEFAULT_WARM_FACTOR: usize = 8;
 /// parked head over that head's lifetime (SLO policy only).
 const DEFAULT_BYPASS_LIMIT: u32 = 4;
 
+/// Default prefix-store budget as a multiple of the cache budget. Images
+/// are quantized middles only (no fp windows), so one cache budget's worth
+/// of store holds many distinct prefixes.
+const DEFAULT_PREFIX_FACTOR: usize = 1;
+
 impl Scheduler {
     /// A FIFO scheduler over `engine` with a cache budget of
     /// `cache_budget_bytes` across all live sequences. The warm tier
@@ -245,6 +269,11 @@ impl Scheduler {
                 cache_budget_bytes.saturating_mul(DEFAULT_WARM_FACTOR),
                 DEFAULT_SEG_BYTES,
             ),
+            prefix_store: PrefixStore::new(
+                cache_budget_bytes.saturating_mul(DEFAULT_PREFIX_FACTOR),
+            ),
+            prefix_share: true,
+            prefix_refs: BTreeMap::new(),
             queue: VecDeque::new(),
             live: Vec::new(),
             warm: Vec::new(),
@@ -299,6 +328,27 @@ impl Scheduler {
     /// fall back to re-prefill via the offload-lost path).
     pub fn set_warm_budget(&mut self, budget_bytes: usize) {
         self.tier = WarmTier::new(budget_bytes, DEFAULT_SEG_BYTES);
+    }
+
+    /// Enable or disable prefix sharing (default on). Off, requests with a
+    /// declared prefix still quantize under the split-norm numerics contract
+    /// (so outputs are byte-identical either way) but never touch the store:
+    /// every sequence owns private copies and admission charges full bytes.
+    pub fn set_prefix_share(&mut self, on: bool) {
+        self.prefix_share = on;
+    }
+
+    /// Whether prefix sharing is enabled.
+    pub fn prefix_share(&self) -> bool {
+        self.prefix_share
+    }
+
+    /// Replace the prefix store with one of `budget_bytes` capacity. Call
+    /// before serving: resident images (and any pins) are discarded, so live
+    /// borrowers would leak pins if swapped mid-flight.
+    pub fn set_prefix_budget(&mut self, budget_bytes: usize) {
+        self.prefix_store = PrefixStore::new(budget_bytes);
+        self.prefix_refs.clear();
     }
 
     /// Cap on SLO small-request bypass admissions per parked head (0
@@ -388,7 +438,40 @@ impl Scheduler {
         let fp = 4 * n_fp * d.d_h;
         let codes = n_q * d.d_h * (cfg.key_bits as usize + cfg.val_bits as usize) / 8;
         let params = n_q * (d.d_h / 32).max(1) * 16;
-        (fp + codes + params) * d.n_kv_heads * d.n_layers
+        let full = (fp + codes + params) * d.n_kv_heads * d.n_layers;
+        // When sharing is on and the request's whole prefix image set is
+        // already resident, those quantized bytes will be borrowed, not
+        // owned — admission charges only the incremental bytes, which is
+        // where prefix sharing buys concurrency.
+        full.saturating_sub(self.probed_shared_bytes(req))
+    }
+
+    /// Bytes a prospective admission would borrow from the prefix store
+    /// instead of owning: the request's full `(layer, head)` image set if
+    /// (and only if) every image is resident. 0 when sharing is off, no
+    /// prefix is declared, the prompt does not encode, or any image is
+    /// missing (partial sets quantize privately and publish).
+    fn probed_shared_bytes(&self, req: &Request) -> usize {
+        if !self.prefix_share || req.prefix_len == 0 {
+            return 0;
+        }
+        let Ok(tokens) = self.engine.manifest.encode(&req.prompt) else {
+            return 0;
+        };
+        if req.prefix_len > tokens.len() {
+            return 0;
+        }
+        let base = prefix_base_hash(&self.engine.cfg, &tokens[..req.prefix_len]);
+        let d = &self.engine.manifest.model;
+        self.prefix_store.probe_set(base, d.n_layers, d.n_kv_heads).unwrap_or(0)
+    }
+
+    /// Release the prefix-store pins a retiring request holds (no-op for
+    /// requests that never borrowed — or no longer borrow — shared images).
+    fn release_prefix(&mut self, id: u64) {
+        if let Some(h) = self.prefix_refs.remove(&id) {
+            self.prefix_store.release_set(h.base, h.n_layers, h.n_heads);
+        }
     }
 
     /// Fail every queued, live, or offloaded request whose absolute deadline
@@ -429,6 +512,7 @@ impl Scheduler {
         }
         for (req, queued) in expired {
             self.bypass_used.remove(&req.id);
+            self.release_prefix(req.id);
             self.metrics.expired += 1;
             self.event(SchedEvent::Expired { id: req.id, queued });
             self.done.push(Completion::failed(&req, "deadline exceeded"));
@@ -565,7 +649,15 @@ impl Scheduler {
         self.pool.release(l.req.id);
         self.metrics.preemptions += 1;
         if self.preemption == Preemption::Offload && self.tier.may_accept(l.req.priority.level()) {
-            let frames = snapshot_sequence_frames_on(&l.seq, self.engine.pool());
+            // A sequence borrowing shared prefix images snapshots *by
+            // reference*: its core frames carry the images' content hashes
+            // instead of their bytes (the pins stay held across the warm
+            // residency, so restore always resolves). Private sequences use
+            // the parallel inline serializer.
+            let frames = match self.prefix_refs.get(&l.req.id) {
+                Some(h) => snapshot_sequence_frames_by_ref(&l.seq, h.base),
+                None => snapshot_sequence_frames_on(&l.seq, self.engine.pool()),
+            };
             let windows_droppable = l.seq.len() == l.seq.n_prefill;
             let win_kind = if windows_droppable {
                 FrameKind::Droppable
@@ -599,6 +691,8 @@ impl Scheduler {
             // budget, or only more-important residents in the way):
             // recompute-style fallback.
         }
+        // Recompute drops the cache, shared borrows included.
+        self.release_prefix(l.req.id);
         self.event(SchedEvent::Preempted { id: l.req.id });
         self.queue.push_back(Queued { req: l.req, submitted_us: l.submitted_us });
     }
@@ -612,6 +706,9 @@ impl Scheduler {
             Candidate::Warm(i) => {
                 let w = self.warm.remove(i);
                 self.tier.remove(w.req.id);
+                // The warm residency dies with its snapshot, so its
+                // prefix pins go too.
+                self.release_prefix(w.req.id);
                 w.req
             }
         };
@@ -712,8 +809,9 @@ impl Scheduler {
             }
         };
         let t0 = Instant::now();
-        let seq = match self.engine.prefill(&prompt) {
-            Ok(s) => s,
+        let store = self.prefix_share.then_some(&mut self.prefix_store);
+        let (seq, outcome) = match self.engine.prefill_shared(&prompt, req.prefix_len, store) {
+            Ok(r) => r,
             Err(e) => {
                 self.pool.release(req.id);
                 self.metrics.rejected += 1;
@@ -722,6 +820,20 @@ impl Scheduler {
                 return;
             }
         };
+        let d = &self.engine.manifest.model;
+        let (n_layers, n_heads) = (d.n_layers, d.n_kv_heads);
+        match outcome {
+            PrefixOutcome::Private => {}
+            PrefixOutcome::Published { base, .. } => {
+                self.prefix_refs.insert(req.id, PrefixHandle { base, n_layers, n_heads });
+            }
+            PrefixOutcome::Hit { base, bytes } => {
+                self.prefix_refs.insert(req.id, PrefixHandle { base, n_layers, n_heads });
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_bytes_shared += bytes as u64;
+                self.event(SchedEvent::PrefixHit { id: req.id, bytes });
+            }
+        }
         self.metrics.prefill_tokens += prompt.len() as u64;
         self.event(SchedEvent::Admitted { id: req.id, prefill_tokens: prompt.len() });
         let next = self.sample(&seq.last_logits, req.temperature);
@@ -749,6 +861,9 @@ impl Scheduler {
         let Some(taken) = self.tier.take_frames(w.req.id) else {
             // Dropped from the warm tier (terminal for the snapshot):
             // recompute-style readmission under the reservation we hold.
+            // Any prefix pins die with the snapshot *before* the re-prefill,
+            // which may acquire fresh ones under the same id.
+            self.release_prefix(w.req.id);
             self.metrics.offload_lost += 1;
             self.event(SchedEvent::OffloadLost { id: w.req.id });
             self.prefill_into_live(Queued { req: w.req, submitted_us: w.submitted_us });
@@ -776,7 +891,12 @@ impl Scheduler {
                 bytes += core.len() + win.map_or(0, |p| p.len());
                 layers.push((core, win));
             }
-            let (seq, missing) = restore_sequence_frames(meta, &layers)?;
+            // By-ref core frames (shared-prefix sequences) resolve their
+            // image hashes against the store; the pins held across the warm
+            // residency guarantee the images are still there.
+            let store = &self.prefix_store;
+            let (seq, missing) =
+                restore_sequence_frames_with(meta, &layers, &|e| store.image(e))?;
             Ok((seq, missing, bytes))
         })();
         match restored {
@@ -784,6 +904,7 @@ impl Scheduler {
                 if !missing.is_empty() {
                     if let Err(e) = self.engine.rebuild_windows(&mut seq, &missing) {
                         self.pool.release(w.req.id);
+                        self.release_prefix(w.req.id);
                         self.metrics.rejected += 1;
                         self.event(SchedEvent::Rejected { id: w.req.id });
                         self.done.push(Completion::failed(
@@ -816,6 +937,7 @@ impl Scheduler {
                 // A snapshot that fails to deserialize is a bug, not a
                 // capacity condition; fail the request, keep serving.
                 self.pool.release(w.req.id);
+                self.release_prefix(w.req.id);
                 self.metrics.rejected += 1;
                 self.event(SchedEvent::Rejected { id: w.req.id });
                 self.done
@@ -977,6 +1099,7 @@ impl Scheduler {
             for &i in finished.iter().rev() {
                 let l = self.live.swap_remove(i);
                 self.pool.release(l.req.id);
+                self.release_prefix(l.req.id);
             }
         }
         Ok(true)

@@ -6,11 +6,18 @@ use crate::runtime::Manifest;
 use crate::workload::corpus::{query_positions, CorpusGen};
 use anyhow::Result;
 
+/// Shape of one evaluation run: how many documents, how long each is, and
+/// how many recall queries are scored per document.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalConfig {
+    /// Documents evaluated (each scored independently, metrics pooled).
     pub n_docs: usize,
+    /// Assignments (`a=07;`) per document — controls context length.
     pub n_assign: usize,
+    /// Recall queries (`?a=07`) teacher-forced at the end of each document.
     pub n_queries: usize,
+    /// Corpus RNG seed; equal seeds generate identical documents, which is
+    /// what lets a method run reuse the baseline run's logits.
     pub seed: u64,
 }
 
@@ -22,8 +29,11 @@ impl Default for EvalConfig {
     }
 }
 
+/// Pooled metrics for one method over an evaluation run (the rows of the
+/// paper-substitute quality tables).
 #[derive(Debug, Clone, Default)]
 pub struct EvalResult {
+    /// [`crate::QuantMethod::name`] of the evaluated configuration.
     pub method: String,
     /// Mean NLL of ground-truth value digits.
     pub nll: f64,
@@ -33,6 +43,7 @@ pub struct EvalResult {
     pub agreement: f64,
     /// Mean KL(baseline || method) over value-digit logits.
     pub kl: f64,
+    /// Scored value-digit positions pooled across all documents.
     pub n_positions: usize,
     /// Mean sparsity of the hybrid mask M (fraction symmetric), if any.
     pub m_sparsity: Option<f64>,

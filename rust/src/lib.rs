@@ -26,14 +26,12 @@ pub mod cache;
 #[allow(missing_docs)]
 pub mod kernels;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod eval;
 #[allow(missing_docs)]
 pub mod exp;
 pub mod quant;
 #[allow(missing_docs)]
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod server;
 #[allow(missing_docs)]
 pub mod simulator;

@@ -5,12 +5,15 @@
 //!                    [--budget BYTES] [--policy fifo|slo]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
 //!                    [--pipeline barrier|overlap]
+//!                    [--prefix-share on|off] [--prefix-budget BYTES]
 //! innerq generate    --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
 //!                    [--pipeline barrier|overlap]
-//! innerq serve-trace [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
+//! innerq serve-trace [--trace timed|multi-turn] [--sessions N]
+//!                    [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
 //!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
 //!                    [--pipeline barrier|overlap]
+//!                    [--prefix-share on|off] [--prefix-budget BYTES]
 //!                    [--method M] [--interactive FRAC] [--deadline-ms D]
 //!                    [--json PATH] [--fake]
 //! innerq exp         table1|table2|table3|table7|fig5|msparsity|simulate|all
@@ -30,6 +33,15 @@
 //! readmission instead of re-prefilling (default: recompute, which discards
 //! them); `--warm-budget` sizes that tier (default 8x the cache budget).
 //!
+//! `--prefix-share off` disables the content-addressed copy-on-write prefix
+//! store (default: on), under which requests that declare a shared prompt
+//! prefix borrow one immutable quantized image per (layer, head) instead of
+//! requantizing it — admission then charges only the private suffix, which
+//! is what raises concurrency at a fixed `--budget`. `--prefix-budget`
+//! sizes the store (default: the cache budget); sharing never changes
+//! output bytes, only accounting. The `--trace multi-turn` family (with
+//! `--sessions N`) generates the chat-style workload this pays off on.
+//!
 //! `serve-trace` replays a timed synthetic trace through the scheduler on a
 //! virtual clock and prints p50/p90/p99 TTFT and end-to-end latency — the
 //! overload harness (see `workload::replay`). With `--fake` (or when the
@@ -42,7 +54,9 @@ use anyhow::{anyhow, Result};
 use innerq::coordinator::{PipelineMode, Policy, Preemption, Request, Scheduler};
 use innerq::runtime::Manifest;
 use innerq::workload::replay::{replay, CostModel};
-use innerq::workload::trace::{generate_timed, Arrival, TimedTraceConfig};
+use innerq::workload::trace::{
+    generate_multi_turn, generate_timed, Arrival, MultiTurnTraceConfig, TimedTraceConfig,
+};
 use innerq::{exp, QuantMethod};
 
 struct Args {
@@ -119,13 +133,26 @@ fn pipeline(args: &Args) -> Result<PipelineMode> {
 }
 
 /// Apply the shared scheduling flags (`--policy`, `--preemption`,
-/// `--warm-budget`, `--pipeline`) to a freshly built scheduler.
+/// `--warm-budget`, `--pipeline`, `--prefix-share`, `--prefix-budget`) to a
+/// freshly built scheduler.
 fn configure_sched(sched: &mut Scheduler, args: &Args) -> Result<()> {
     sched.set_policy(policy(args)?);
     sched.set_preemption(preemption(args)?);
     sched.set_pipeline(pipeline(args)?);
     if args.has("warm-budget") {
         sched.set_warm_budget(args.get("warm-budget", "0").parse()?);
+    }
+    if args.has("prefix-share") {
+        match args.get("prefix-share", "on").as_str() {
+            "on" | "" | "true" => sched.set_prefix_share(true),
+            "off" | "false" => sched.set_prefix_share(false),
+            other => return Err(anyhow!("--prefix-share takes on|off, got '{other}'")),
+        }
+    }
+    // Must come after any share toggle: replacing the store drops whatever
+    // images (there are none before serving) the old one held.
+    if args.has("prefix-budget") {
+        sched.set_prefix_budget(args.get("prefix-budget", "0").parse()?);
     }
     Ok(())
 }
@@ -236,16 +263,41 @@ fn main() -> Result<()> {
                 seed,
                 ..TimedTraceConfig::default()
             };
-            let trace = generate_timed(&cfg);
+            // Trace family: the default independent-prompt stream, or the
+            // chat-style multi-turn family whose sessions share a prefix
+            // (the workload the prefix store exists for).
+            let family = args.get("trace", "timed");
+            let trace = match family.as_str() {
+                "timed" => generate_timed(&cfg),
+                "multi-turn" => generate_multi_turn(&MultiTurnTraceConfig {
+                    base: cfg,
+                    n_sessions: args.get("sessions", "4").parse()?,
+                    ..MultiTurnTraceConfig::default()
+                }),
+                other => {
+                    return Err(anyhow!(
+                        "unknown trace family '{other}'; one of: timed, multi-turn"
+                    ))
+                }
+            };
             let mut sched = trace_scheduler(&args, budget, workers)?;
             eprintln!(
-                "[serve-trace] arrival={} rate={rate} requests={n_requests} budget={budget} \
-                 policy={:?} preemption={} workers={workers} seed={seed}",
+                "[serve-trace] trace={family} arrival={} rate={rate} requests={n_requests} \
+                 budget={budget} policy={:?} preemption={} workers={workers} seed={seed} \
+                 prefix-share={}",
                 arrival.name(),
                 sched.policy(),
-                sched.preemption().name()
+                sched.preemption().name(),
+                if sched.prefix_share() { "on" } else { "off" }
             );
             let report = replay(&mut sched, &trace, &CostModel::default())?;
+            if report.metrics.prefix_hits > 0 {
+                eprintln!(
+                    "[serve-trace] prefix store: {} hits, {} KiB borrowed instead of requantized",
+                    report.metrics.prefix_hits,
+                    report.metrics.prefix_bytes_shared / 1024
+                );
+            }
             println!("== serve-trace report ==");
             report.print_summary();
             let json_path = args.get("json", "");
@@ -302,12 +354,15 @@ fn main() -> Result<()> {
                  \n              --budget BYTES --policy fifo|slo\
                  \n              --preemption recompute|offload --warm-budget BYTES\
                  \n              --pipeline barrier|overlap\
+                 \n              --prefix-share on|off --prefix-budget BYTES\
                  \n  generate    --prompt S --method M --max-new N --workers N\
                  \n              --pipeline barrier|overlap\
-                 \n  serve-trace --arrival poisson|bursty|ramp|batch --rate R --requests N\
+                 \n  serve-trace --trace timed|multi-turn --sessions N\
+                 \n              --arrival poisson|bursty|ramp|batch --rate R --requests N\
                  \n              --seed S --budget BYTES --policy fifo|slo --workers N\
                  \n              --preemption recompute|offload --warm-budget BYTES\
                  \n              --pipeline barrier|overlap\
+                 \n              --prefix-share on|off --prefix-budget BYTES\
                  \n              --interactive FRAC --deadline-ms D --json PATH --fake\
                  \n  exp         table1|table2|table3|table7|fig5|msparsity|simulate|all\
                  \n  info        --artifacts DIR\n\

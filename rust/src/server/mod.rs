@@ -15,4 +15,4 @@
 
 pub mod tcp;
 
-pub use tcp::{serve, Client};
+pub use tcp::{serve, Client, MAX_LINE_BYTES};

@@ -1,8 +1,13 @@
 //! Thread-based TCP serving front-end over the scheduler.
 //!
-//! Failure handling rules (clients must never hang on a silent drop):
-//! * malformed request lines get an `{"error": ...}` response line instead
-//!   of being discarded;
+//! Failure handling rules (clients must never hang on a silent drop, and a
+//! hostile line must never poison scheduler state — every rejection happens
+//! before anything is submitted):
+//! * malformed request lines — truncated JSON, non-UTF8 bytes, nesting
+//!   bombs (see [`crate::util::json::MAX_DEPTH`]) — get an `{"error": ...}`
+//!   response line instead of being discarded;
+//! * request lines longer than [`MAX_LINE_BYTES`] are answered in-band and
+//!   drained without buffering, so an unbounded line cannot exhaust memory;
 //! * stream-clone failures are answered (best effort) and close the reader
 //!   instead of panicking the thread;
 //! * failed completions (rejected / unencodable prompts) carry an `error`
@@ -38,6 +43,53 @@ fn error_line(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).dump()
 }
 
+/// Hard cap on one request line. Far above any legitimate request at the
+/// supported prompt sizes; far below anything that could pressure memory.
+pub const MAX_LINE_BYTES: usize = 256 * 1024;
+
+/// One read from the capped line reader.
+enum LineRead {
+    /// A complete newline-terminated (or EOF-terminated) line within the cap.
+    Line(Vec<u8>),
+    /// The line exceeded [`MAX_LINE_BYTES`]; its remainder was drained
+    /// (without buffering) so the connection is resynchronized at the next
+    /// newline.
+    TooLong,
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Read one `\n`-terminated line, holding at most [`MAX_LINE_BYTES`] + one
+/// buffer of it in memory. Unlike [`BufRead::read_until`], an over-long line
+/// is discarded as it streams past instead of being accumulated.
+fn read_line_capped(r: &mut impl BufRead) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut over = false;
+    loop {
+        let available = r.fill_buf()?;
+        if available.is_empty() {
+            return Ok(match (over, buf.is_empty()) {
+                (true, _) => LineRead::TooLong,
+                (false, true) => LineRead::Eof,
+                (false, false) => LineRead::Line(buf),
+            });
+        }
+        let nl = available.iter().position(|&b| b == b'\n');
+        let take = nl.unwrap_or(available.len());
+        if !over {
+            buf.extend_from_slice(&available[..take]);
+            if buf.len() > MAX_LINE_BYTES {
+                over = true;
+                buf.clear();
+            }
+        }
+        r.consume(take + usize::from(nl.is_some()));
+        if nl.is_some() {
+            return Ok(if over { LineRead::TooLong } else { LineRead::Line(buf) });
+        }
+    }
+}
+
 /// Write one response line while holding the connection's write lock, so
 /// concurrent writers cannot interleave bytes within a line.
 fn write_line(conn: &SharedConn, line: &str) {
@@ -48,7 +100,7 @@ fn write_line(conn: &SharedConn, line: &str) {
 /// Per-connection reader: parse newline-delimited JSON requests and feed
 /// them to the scheduler channel. Every rejected line is answered in-band.
 fn reader_loop(conn: TcpStream, tx: mpsc::Sender<Inbound>, next_id: Arc<AtomicU64>) {
-    let reader = match conn.try_clone() {
+    let mut reader = match conn.try_clone() {
         Ok(c) => BufReader::new(c),
         Err(e) => {
             // Can't read without a second handle; tell the client and bail
@@ -59,7 +111,27 @@ fn reader_loop(conn: TcpStream, tx: mpsc::Sender<Inbound>, next_id: Arc<AtomicU6
         }
     };
     let writer: SharedConn = Arc::new(Mutex::new(conn));
-    for line in reader.lines().map_while(|l| l.ok()) {
+    loop {
+        let bytes = match read_line_capped(&mut reader) {
+            Ok(LineRead::Line(b)) => b,
+            Ok(LineRead::TooLong) => {
+                write_line(
+                    &writer,
+                    &error_line(&format!("request line exceeds {MAX_LINE_BYTES} bytes")),
+                );
+                continue;
+            }
+            Ok(LineRead::Eof) | Err(_) => return,
+        };
+        // Reject non-UTF8 in-band; `BufRead::lines` would have dropped the
+        // line silently and left the client hanging.
+        let line = match String::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => {
+                write_line(&writer, &error_line("request line is not valid UTF-8"));
+                continue;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -220,6 +292,8 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving endpoint (as reported by [`serve`]'s `on_bound`
+    /// callback).
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         let conn = TcpStream::connect(addr)?;
         let reader = BufReader::new(conn.try_clone()?);

@@ -83,10 +83,14 @@ impl Json {
     }
 
     /// Parse a complete JSON document (trailing bytes are an error).
+    /// Nesting deeper than [`MAX_DEPTH`] is rejected with an error rather
+    /// than recursing — network-facing callers (the TCP server) parse
+    /// attacker-controlled lines, and a `[[[[…` bomb must not overflow the
+    /// reader thread's stack.
     pub fn parse(s: &str) -> Result<Json, String> {
         let b = s.as_bytes();
         let mut pos = 0usize;
-        let v = parse_value(b, &mut pos)?;
+        let v = parse_value(b, &mut pos, 0)?;
         skip_ws(b, &mut pos);
         if pos != b.len() {
             return Err(format!("trailing data at byte {pos}"));
@@ -125,14 +129,22 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+/// Maximum container nesting depth [`Json::parse`] accepts. Deep enough for
+/// any document this codebase emits, shallow enough that parsing stays well
+/// inside a default thread stack.
+pub const MAX_DEPTH: usize = 128;
+
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
     skip_ws(b, pos);
     if *pos >= b.len() {
         return Err("unexpected end of input".into());
     }
+    if depth > MAX_DEPTH {
+        return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+    }
     match b[*pos] {
-        b'{' => parse_obj(b, pos),
-        b'[' => parse_arr(b, pos),
+        b'{' => parse_obj(b, pos, depth),
+        b'[' => parse_arr(b, pos, depth),
         b'"' => Ok(Json::Str(parse_string(b, pos)?)),
         b't' => lit(b, pos, "true", Json::Bool(true)),
         b'f' => lit(b, pos, "false", Json::Bool(false)),
@@ -225,7 +237,7 @@ fn utf8_len(b0: u8) -> usize {
     }
 }
 
-fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_arr(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
     *pos += 1; // '['
     let mut out = Vec::new();
     skip_ws(b, pos);
@@ -234,7 +246,7 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
         return Ok(Json::Arr(out));
     }
     loop {
-        out.push(parse_value(b, pos)?);
+        out.push(parse_value(b, pos, depth + 1)?);
         skip_ws(b, pos);
         match b.get(*pos) {
             Some(b',') => *pos += 1,
@@ -247,7 +259,7 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
     }
 }
 
-fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_obj(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
     *pos += 1; // '{'
     let mut out = BTreeMap::new();
     skip_ws(b, pos);
@@ -266,7 +278,7 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
             return Err(format!("expected ':' at byte {}", *pos));
         }
         *pos += 1;
-        let val = parse_value(b, pos)?;
+        let val = parse_value(b, pos, depth + 1)?;
         out.insert(key, val);
         skip_ws(b, pos);
         match b.get(*pos) {
@@ -365,6 +377,20 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("nope").is_err());
         assert!(Json::parse("[1] x").is_err());
+    }
+
+    #[test]
+    fn depth_guard_rejects_nesting_bombs_without_overflow() {
+        // Well under the limit: fine.
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+        // A pathological bomb errors instead of blowing the stack.
+        for open in ["[", "{\"k\":"] {
+            let close = if open == "[" { "]" } else { "}" };
+            let bomb = format!("{}1{}", open.repeat(50_000), close.repeat(50_000));
+            let err = Json::parse(&bomb).unwrap_err();
+            assert!(err.contains("nesting"), "unexpected error: {err}");
+        }
     }
 
     #[test]

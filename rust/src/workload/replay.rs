@@ -49,6 +49,12 @@ pub struct CostModel {
     pub offload_us_per_kib: u64,
     /// Restore cost per KiB of snapshot deserialized from the warm tier.
     pub restore_us_per_kib: u64,
+    /// Virtual time credited back per KiB of quantized prefix bytes a tick
+    /// *borrowed* from the prefix store instead of quantizing privately
+    /// (`prefill_us_per_token` prices the full prefill including bulk
+    /// quantization; a prefix hit skips that work for the shared rows).
+    /// The credit never drives a tick below its fixed overhead.
+    pub prefix_saving_us_per_kib: u64,
 }
 
 impl Default for CostModel {
@@ -60,6 +66,7 @@ impl Default for CostModel {
             decode_us_per_seq: 50,
             offload_us_per_kib: 1,
             restore_us_per_kib: 1,
+            prefix_saving_us_per_kib: 2,
         }
     }
 }
@@ -73,13 +80,16 @@ impl CostModel {
         d_batched: u64,
         d_offload_bytes: u64,
         d_restore_bytes: u64,
+        d_prefix_shared_bytes: u64,
     ) -> u64 {
-        self.tick_overhead_us
+        let cost = self.tick_overhead_us
             + d_prefill_tokens * self.prefill_us_per_token
             + d_decode_steps * self.decode_step_us
             + d_batched * self.decode_us_per_seq
             + d_offload_bytes * self.offload_us_per_kib / 1024
-            + d_restore_bytes * self.restore_us_per_kib / 1024
+            + d_restore_bytes * self.restore_us_per_kib / 1024;
+        let credit = d_prefix_shared_bytes * self.prefix_saving_us_per_kib / 1024;
+        cost.saturating_sub(credit).max(self.tick_overhead_us)
     }
 }
 
@@ -131,6 +141,10 @@ pub struct RequestRecord {
     pub offloads: u32,
     /// Readmissions served by deserializing the snapshot (no re-prefill).
     pub restores: u32,
+    /// Admissions that borrowed the request's whole prefix image set from
+    /// the prefix store (can exceed 1 if the request was recompute-preempted
+    /// and hit again on re-prefill).
+    pub prefix_hits: u32,
     /// Terminal outcome (`None` only mid-replay).
     pub outcome: Option<Outcome>,
 }
@@ -285,6 +299,7 @@ impl ReplayReport {
                     ("preemptions", Json::Num(r.preemptions as f64)),
                     ("offloads", Json::Num(r.offloads as f64)),
                     ("restores", Json::Num(r.restores as f64)),
+                    ("prefix_hits", Json::Num(r.prefix_hits as f64)),
                     (
                         "outcome",
                         r.outcome.map_or(Json::Null, |o| Json::str(o.name())),
@@ -314,6 +329,11 @@ impl ReplayReport {
             ),
             ("window_rebuilds", Json::Num(self.metrics.window_rebuilds as f64)),
             ("bypass_admissions", Json::Num(self.metrics.bypass_admissions as f64)),
+            ("prefix_hits", Json::Num(self.metrics.prefix_hits as f64)),
+            (
+                "prefix_bytes_shared",
+                Json::Num(self.metrics.prefix_bytes_shared as f64),
+            ),
             ("ticks", Json::Num(self.ticks as f64)),
             ("virtual_us", Json::Num(self.end_us as f64)),
             ("throughput_rps", Json::Num(self.throughput_rps())),
@@ -396,6 +416,7 @@ pub fn replay(
             preemptions: 0,
             offloads: 0,
             restores: 0,
+            prefix_hits: 0,
             outcome: None,
         })
         .collect();
@@ -425,6 +446,7 @@ pub fn replay(
                 m.batched_seqs - prev.batched_seqs,
                 m.offload_bytes - prev.offload_bytes,
                 m.restore_bytes - prev.restore_bytes,
+                m.prefix_bytes_shared - prev.prefix_bytes_shared,
             );
             prev = m;
             now = now.saturating_add(dt.max(1));
@@ -445,6 +467,7 @@ pub fn replay(
                     r.offloads += 1;
                 }
                 SchedEvent::Restored { .. } => r.restores += 1,
+                SchedEvent::PrefixHit { .. } => r.prefix_hits += 1,
                 // The fallback re-prefill shows up as a second Admitted.
                 SchedEvent::OffloadLost { .. } => {}
                 SchedEvent::Rejected { .. } => {

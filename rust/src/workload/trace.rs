@@ -168,6 +168,27 @@ impl Default for TimedTraceConfig {
     }
 }
 
+/// Inter-arrival gap before request `i` of `n` under `arrival`, in virtual
+/// microseconds (shared by every timed trace family).
+fn arrival_gap_us(rng: &mut Rng, arrival: Arrival, i: usize, n: usize) -> u64 {
+    match arrival {
+        Arrival::Batch => 0,
+        Arrival::Poisson { rate_rps } => exp_gap_us(rng, rate_rps),
+        Arrival::Bursty { rate_rps, burst } => {
+            let burst = burst.max(1);
+            if i % burst == 0 {
+                exp_gap_us(rng, rate_rps / burst as f64)
+            } else {
+                0
+            }
+        }
+        Arrival::Ramp { start_rps, end_rps } => {
+            let f = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+            exp_gap_us(rng, start_rps + (end_rps - start_rps) * f)
+        }
+    }
+}
+
 /// Exponential inter-arrival gap at `rate_rps`, in virtual microseconds.
 fn exp_gap_us(rng: &mut Rng, rate_rps: f64) -> u64 {
     if rate_rps <= 0.0 {
@@ -216,22 +237,7 @@ pub fn generate_timed(cfg: &TimedTraceConfig) -> Vec<TimedRequest> {
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
         // --- arrival ---
-        let gap = match cfg.arrival {
-            Arrival::Batch => 0,
-            Arrival::Poisson { rate_rps } => exp_gap_us(&mut arrive_rng, rate_rps),
-            Arrival::Bursty { rate_rps, burst } => {
-                let burst = burst.max(1);
-                if i % burst == 0 {
-                    exp_gap_us(&mut arrive_rng, rate_rps / burst as f64)
-                } else {
-                    0
-                }
-            }
-            Arrival::Ramp { start_rps, end_rps } => {
-                let f = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
-                exp_gap_us(&mut arrive_rng, start_rps + (end_rps - start_rps) * f)
-            }
-        };
+        let gap = arrival_gap_us(&mut arrive_rng, cfg.arrival, i, n);
         now_us = now_us.saturating_add(gap);
 
         // --- shape: lengths, class, deadline ---
@@ -249,6 +255,95 @@ pub fn generate_timed(cfg: &TimedTraceConfig) -> Vec<TimedRequest> {
         let doc = gen.document(vars.max(1), cfg.n_queries.max(1));
         let cut = doc.text.find('?').map(|p| p + 3).unwrap_or(doc.text.len());
         let mut req = Request::new(i as u64, &doc.text[..cut], max_new.max(1));
+        req.priority = priority;
+        req.deadline_us = deadline_us;
+        out.push(TimedRequest { arrival_us: now_us, req });
+    }
+    out
+}
+
+/// Configuration of the multi-turn / shared-prefix trace family
+/// ([`generate_multi_turn`]): `n_sessions` conversations, each with a fixed
+/// session prefix (system prompt + earlier turns) repeated *verbatim* by
+/// every one of its requests, followed by a fresh per-turn suffix ending in
+/// a recall query. Requests round-robin across sessions, so each session's
+/// prefix recurs `~n_requests / n_sessions` times — the workload where a
+/// content-addressed prefix store turns duplicated quantization work and
+/// duplicated cache bytes into shared ones.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiTurnTraceConfig {
+    /// Base timed-trace shape: arrivals, per-turn suffix length
+    /// (`vars_range`), generation budgets, priorities, deadlines, seed.
+    pub base: TimedTraceConfig,
+    /// Number of distinct sessions (≥ 1).
+    pub n_sessions: usize,
+    /// Variables in each session's shared prefix (~5 characters each;
+    /// controls `Request::prefix_len`).
+    pub prefix_vars: usize,
+}
+
+impl Default for MultiTurnTraceConfig {
+    fn default() -> Self {
+        MultiTurnTraceConfig {
+            // Short per-turn suffixes: the shared prefix dominates the
+            // prompt, as in a chat session with a long system prompt.
+            base: TimedTraceConfig { vars_range: (2, 6), ..TimedTraceConfig::default() },
+            n_sessions: 4,
+            prefix_vars: 10,
+        }
+    }
+}
+
+/// Generate a multi-turn trace. Deterministic per seed; arrivals, shapes,
+/// and corpus text use the same independent streams as [`generate_timed`],
+/// plus a fourth stream for the session prefixes, so e.g. changing
+/// `n_sessions` does not reshuffle arrival times. Every prompt fits the
+/// 128-token fake-model prefill bucket; `Request::prefix_len` is set to the
+/// session prefix length (tokens == characters under the corpus charset).
+pub fn generate_multi_turn(cfg: &MultiTurnTraceConfig) -> Vec<TimedRequest> {
+    let base = &cfg.base;
+    let mut arrive_rng = Rng::new(base.seed ^ 0x00a1_17ee);
+    let mut shape_rng = Rng::new(base.seed ^ 0x5a5a_0001);
+    let mut gen = CorpusGen::new(base.seed ^ 0xabcd);
+    let mut session_gen = CorpusGen::new(base.seed ^ 0x5e55_10f5);
+    let n_sessions = cfg.n_sessions.max(1);
+    // A session prefix is assignments only (cut *before* the query stem):
+    // the per-turn suffix carries the query, so the prefix is a pure
+    // context block every turn extends.
+    let prefixes: Vec<String> = (0..n_sessions)
+        .map(|_| {
+            let doc = session_gen.document(cfg.prefix_vars.max(1), 1);
+            let cut = doc.text.find('?').unwrap_or(doc.text.len());
+            doc.text[..cut].to_string()
+        })
+        .collect();
+    let n = base.n_requests;
+    let mut now_us = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let gap = arrival_gap_us(&mut arrive_rng, base.arrival, i, n);
+        now_us = now_us.saturating_add(gap);
+
+        let prefix = &prefixes[i % n_sessions];
+        let mut vars = uniform_in(&mut shape_rng, base.vars_range);
+        let mut max_new = uniform_in(&mut shape_rng, base.max_new_range);
+        if shape_rng.next_f64() < base.tail_prob {
+            vars = (vars * 2).min(base.vars_cap.max(1));
+            max_new = (max_new * 4).min(base.max_new_cap.max(1));
+        }
+        // Keep the whole prompt inside the 128-token prefill bucket: one
+        // assignment is ~6 characters worst-case, plus the 3-char query
+        // stem the cut keeps.
+        let budget = 128usize.saturating_sub(prefix.len() + 4);
+        vars = vars.clamp(1, (budget / 6).max(1));
+        let priority = sample_priority(&mut shape_rng, &base.priority_mix);
+        let deadline_us = base.deadlines_us[priority.level() as usize];
+
+        let doc = gen.document(vars, base.n_queries.max(1));
+        let cut = doc.text.find('?').map(|p| p + 3).unwrap_or(doc.text.len());
+        let prompt = format!("{}{}", prefix, &doc.text[..cut]);
+        let mut req = Request::new(i as u64, prompt, max_new.max(1));
+        req.prefix_len = prefix.len();
         req.priority = priority;
         req.deadline_us = deadline_us;
         out.push(TimedRequest { arrival_us: now_us, req });
@@ -377,6 +472,51 @@ mod tests {
         for (lvl, &count) in seen.iter().enumerate() {
             assert!(count > 50, "class {lvl} undersampled: {count}/300");
         }
+    }
+
+    #[test]
+    fn multi_turn_trace_shares_session_prefixes() {
+        let cfg = MultiTurnTraceConfig::default();
+        let trace = generate_multi_turn(&cfg);
+        assert_eq!(trace.len(), cfg.base.n_requests);
+        let again = generate_multi_turn(&cfg);
+        assert_eq!(
+            trace.iter().map(timed_key).collect::<Vec<_>>(),
+            again.iter().map(timed_key).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            trace.iter().map(|t| t.req.prefix_len).collect::<Vec<_>>(),
+            again.iter().map(|t| t.req.prefix_len).collect::<Vec<_>>()
+        );
+        for t in &trace {
+            assert!(t.req.prefix_len > 0, "every request declares a prefix");
+            assert!(t.req.prefix_len < t.req.prompt.len(), "suffix is never empty");
+            assert!(
+                t.req.prompt.len() <= 128,
+                "prompt of {} chars overflows the 128-token bucket",
+                t.req.prompt.len()
+            );
+            let tail: Vec<char> = t.req.prompt.chars().rev().take(3).collect();
+            assert_eq!(tail[0], '=', "prompt should end at '?x=': {}", t.req.prompt);
+            assert_eq!(tail[2], '?');
+        }
+        // Round-robin sessions: same session index, same shared prefix —
+        // and the sessions are pairwise distinct.
+        let n_s = cfg.n_sessions;
+        for (i, t) in trace.iter().enumerate() {
+            let first = &trace[i % n_s];
+            assert_eq!(
+                &t.req.prompt[..t.req.prefix_len],
+                &first.req.prompt[..first.req.prefix_len],
+                "request {i} must repeat its session's prefix"
+            );
+        }
+        let distinct: std::collections::BTreeSet<&str> = trace
+            .iter()
+            .take(n_s)
+            .map(|t| &t.req.prompt[..t.req.prefix_len])
+            .collect();
+        assert_eq!(distinct.len(), n_s, "session prefixes must be distinct");
     }
 
     #[test]

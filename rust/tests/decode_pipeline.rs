@@ -14,9 +14,10 @@
 //!   keep decoding bit-identically.
 
 use innerq::cache::store::{
-    restore_sequence_frames, snapshot_sequence, snapshot_sequence_frames, FrameKind, WarmTier,
+    prefix_base_hash, restore_sequence_frames, restore_sequence_frames_with, snapshot_sequence,
+    snapshot_sequence_frames, snapshot_sequence_frames_by_ref, FrameKind, PrefixStore, WarmTier,
 };
-use innerq::coordinator::{Engine, PipelineMode};
+use innerq::coordinator::{Engine, PipelineMode, PrefixOutcome};
 use innerq::quant::group::Mode;
 use innerq::quant::{Grouping, MethodConfig};
 use innerq::runtime::Manifest;
@@ -195,7 +196,7 @@ fn tier_pressure_evicts_windows_and_restore_recomputes_them() {
     // resident 1 down to its cores.
     let win_bytes: usize = frames.layers.iter().map(|l| l.windows.len()).sum();
     let filler = vec![0xAAu8; win_bytes.max(seg)];
-    assert!(tier.insert(2, 1, &filler), "filler insert must fit by dropping windows");
+    assert!(tier.insert(2, 1, &filler).is_some(), "filler insert must fit by dropping windows");
     assert!(tier.contains(1) && tier.is_partial(1), "resident 1 must survive as partial");
 
     let taken = tier.take_frames(1).expect("partial take");
@@ -213,4 +214,201 @@ fn tier_pressure_evicts_windows_and_restore_recomputes_them() {
         snapshot_sequence(&seq),
         "tier-evicted windows must rebuild bit-identically"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Shared-prefix (CoW prefix store) bit-exactness contract.
+// ---------------------------------------------------------------------------
+
+/// All three prompts open with the same session context, so under the prefix
+/// store the first prefill publishes one image set and the other two borrow
+/// it. 30 chars = 30 tokens (the fake tokenizer is 1:1, no BOS).
+const SHARED_PREFIX: &str = "a=13;b=88;c=07;d=55;e=21;f=99;";
+const SHARED_SUFFIXES: [&str; 3] = ["g=42;h=10;?a=", "i=64;j=27;?c=", "?e="];
+
+/// Prefill the three shared-prefix prompts (through the store when one is
+/// given, else the private split-norm path) and decode `DECODE_STEPS` greedy
+/// steps as one batch. Returns the prefill outcomes, every step's logits bit
+/// patterns, and the final serialized caches.
+fn run_shared_session(
+    engine: &Engine,
+    mut store: Option<&mut PrefixStore>,
+) -> (Vec<PrefixOutcome>, Vec<Vec<u32>>, Vec<Vec<u8>>) {
+    let mut outcomes = Vec::with_capacity(SHARED_SUFFIXES.len());
+    let mut seqs: Vec<_> = SHARED_SUFFIXES
+        .iter()
+        .map(|s| {
+            let prompt = format!("{SHARED_PREFIX}{s}");
+            let tokens = engine.manifest.encode(&prompt).expect("prompt encodes");
+            let (seq, outcome) = engine
+                .prefill_shared(&tokens, SHARED_PREFIX.len(), store.as_deref_mut())
+                .expect("shared prefill");
+            outcomes.push(outcome);
+            seq
+        })
+        .collect();
+    let mut logit_bits: Vec<Vec<u32>> = Vec::with_capacity(DECODE_STEPS);
+    for _ in 0..DECODE_STEPS {
+        let next: Vec<i32> = seqs.iter().map(|s| Engine::argmax(&s.last_logits)).collect();
+        {
+            let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+            engine.decode_step(&mut refs, &next).expect("decode step");
+        }
+        let step_bits: Vec<u32> = seqs
+            .iter()
+            .flat_map(|s| s.last_logits.iter().map(|v| v.to_bits()))
+            .collect();
+        logit_bits.push(step_bits);
+    }
+    let cache_bytes = seqs.iter().map(snapshot_sequence).collect();
+    (outcomes, logit_bits, cache_bytes)
+}
+
+/// The tentpole's core contract: decoding against a *borrowed* quantized
+/// prefix must be byte-identical — logits bit patterns and serialized cache
+/// bytes — to decoding against a privately-owned copy, across quantization
+/// layouts (inner/outer × sym/asym/hybrid) and worker counts {1, 2, 4, 8}.
+/// Sharing may only change accounting, never output bytes.
+#[test]
+fn shared_prefix_decode_matches_private_across_the_matrix() {
+    let mut case = 0usize;
+    for grouping in [Grouping::Inner, Grouping::Outer] {
+        for mode in [Mode::Sym, Mode::Asym, Mode::Hybrid] {
+            case += 1;
+            let cfg = small_window_cfg(grouping, mode);
+            let tag = format!("share_ref_{case}");
+            let engine = engine_for(&tag, cfg, PipelineMode::Overlap, 1);
+            let (ref_outcomes, ref_logits, ref_bytes) = run_shared_session(&engine, None);
+            assert!(
+                ref_outcomes.iter().all(|o| *o == PrefixOutcome::Private),
+                "no store given: every prefill must stay private"
+            );
+            for workers in [1usize, 2, 4, 8] {
+                // Share off: private split-norm path, varying workers.
+                let tag = format!("share_{case}_off_{workers}");
+                let engine = engine_for(&tag, cfg, PipelineMode::Overlap, workers);
+                let (_, logits, bytes) = run_shared_session(&engine, None);
+                assert_eq!(
+                    logits, ref_logits,
+                    "{grouping:?}/{mode:?} share=off workers={workers}: logits diverged"
+                );
+                assert_eq!(
+                    bytes, ref_bytes,
+                    "{grouping:?}/{mode:?} share=off workers={workers}: cache bytes diverged"
+                );
+
+                // Share on: first prefill publishes, the rest borrow.
+                let tag = format!("share_{case}_on_{workers}");
+                let engine = engine_for(&tag, cfg, PipelineMode::Overlap, workers);
+                let mut store = PrefixStore::new(64 << 20);
+                let (outcomes, logits, bytes) = run_shared_session(&engine, Some(&mut store));
+                assert!(
+                    matches!(outcomes[0], PrefixOutcome::Published { .. }),
+                    "{grouping:?}/{mode:?} workers={workers}: first prefill must publish, got {:?}",
+                    outcomes[0]
+                );
+                for (i, o) in outcomes.iter().enumerate().skip(1) {
+                    assert!(
+                        matches!(o, PrefixOutcome::Hit { .. }),
+                        "{grouping:?}/{mode:?} workers={workers}: prefill {i} must hit, got {o:?}"
+                    );
+                }
+                let dims = &engine.manifest.model;
+                assert_eq!(
+                    store.n_images(),
+                    dims.n_layers * dims.n_kv_heads,
+                    "dedup: exactly one image per (layer, head) regardless of request count"
+                );
+                assert_eq!(
+                    logits, ref_logits,
+                    "{grouping:?}/{mode:?} share=on workers={workers}: logits diverged"
+                );
+                assert_eq!(
+                    bytes, ref_bytes,
+                    "{grouping:?}/{mode:?} share=on workers={workers}: cache bytes diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The restore leg of the contract: a shared-prefix sequence offloaded with
+/// *by-reference* frames (prefix hashes instead of prefix bytes), squeezed
+/// through warm-tier pressure that evicts its window frames, must restore —
+/// resolving the prefix through the store, recomputing the windows — to a
+/// sequence bit-identical to its never-offloaded twin, and keep decoding
+/// bit-identically.
+#[test]
+fn shared_prefix_restore_through_tier_pressure_is_bit_identical() {
+    for grouping in [Grouping::Inner, Grouping::Outer] {
+        let cfg = small_window_cfg(grouping, Mode::Hybrid);
+        let tag = format!("share_tier_{grouping:?}");
+        let engine = engine_for(&tag, cfg, PipelineMode::Overlap, 2);
+        let mut store = PrefixStore::new(64 << 20);
+        let prompt = format!("{SHARED_PREFIX}{}", SHARED_SUFFIXES[0]);
+        let tokens = engine.manifest.encode(&prompt).expect("encode");
+        let base = prefix_base_hash(&cfg, &tokens[..SHARED_PREFIX.len()]);
+
+        let (twin, first) = engine
+            .prefill_shared(&tokens, SHARED_PREFIX.len(), Some(&mut store))
+            .expect("twin prefill");
+        assert!(matches!(first, PrefixOutcome::Published { .. }));
+        let (victim, second) = engine
+            .prefill_shared(&tokens, SHARED_PREFIX.len(), Some(&mut store))
+            .expect("victim prefill");
+        assert!(matches!(second, PrefixOutcome::Hit { .. }));
+
+        // By-ref frames: the prefix travels as hashes, not bytes.
+        let frames = snapshot_sequence_frames_by_ref(&victim, base);
+
+        // Same pressure mechanics as the private tier test: size the tier so
+        // the full frame set fits, then squeeze the windows out.
+        let mut parts: Vec<(&[u8], FrameKind)> =
+            vec![(frames.meta.as_slice(), FrameKind::Required)];
+        for lf in &frames.layers {
+            parts.push((lf.core.as_slice(), FrameKind::Required));
+            parts.push((lf.windows.as_slice(), FrameKind::Droppable));
+        }
+        let seg = 1024usize;
+        let segs_for = |len: usize| (len + seg - 1) / seg + usize::from(len == 0);
+        let full_segs: usize = parts.iter().map(|(p, _)| segs_for(p.len()).max(1)).sum();
+        let mut tier = WarmTier::new(full_segs * seg, seg);
+        let receipt = tier.insert_frames(1, 1, &parts).expect("insert");
+        assert_eq!(receipt.dropped_frames, 0);
+        let win_bytes: usize = frames.layers.iter().map(|l| l.windows.len()).sum();
+        let filler = vec![0xAAu8; win_bytes.max(seg)];
+        assert!(tier.insert(2, 1, &filler).is_some(), "filler must fit by dropping windows");
+        assert!(tier.contains(1) && tier.is_partial(1), "resident must survive as partial");
+
+        let taken = tier.take_frames(1).expect("partial take");
+        let meta = taken.frames[0].as_deref().expect("meta survives");
+        let layers: Vec<(&[u8], Option<&[u8]>)> = taken.frames[1..]
+            .chunks(2)
+            .map(|pair| (pair[0].as_deref().expect("core survives"), pair[1].as_deref()))
+            .collect();
+        let (mut restored, missing) =
+            restore_sequence_frames_with(meta, &layers, &|e| store.image(e))
+                .expect("by-ref restore resolves through the store");
+        assert!(!missing.is_empty(), "window frames must have been evicted");
+        engine.rebuild_windows(&mut restored, &missing).expect("rebuild");
+        assert_eq!(
+            snapshot_sequence(&restored),
+            snapshot_sequence(&twin),
+            "{grouping:?}: by-ref restored sequence must match the never-offloaded twin"
+        );
+
+        let mut a = restored;
+        let mut b = twin;
+        for _ in 0..DECODE_STEPS {
+            let ta = Engine::argmax(&a.last_logits);
+            let tb = Engine::argmax(&b.last_logits);
+            assert_eq!(ta, tb, "{grouping:?}: post-restore argmax diverged");
+            engine.decode_step(&mut [&mut a], &[ta]).expect("decode a");
+            engine.decode_step(&mut [&mut b], &[tb]).expect("decode b");
+            let ba: Vec<u32> = a.last_logits.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.last_logits.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ba, bb, "{grouping:?}: post-restore decode diverged");
+        }
+        assert_eq!(snapshot_sequence(&a), snapshot_sequence(&b));
+    }
 }

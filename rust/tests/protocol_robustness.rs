@@ -1,0 +1,150 @@
+//! Adversarial protocol matrix for the TCP JSON server: every hostile line
+//! — truncated JSON, over-long lines, non-UTF8 bytes, deeply-nested garbage
+//! — must be answered in-band with an `{"error": ...}` line, and none of it
+//! may poison scheduler state: valid requests interleaved with (and
+//! following) the garbage must still complete with the exact expected text,
+//! on the same connection and on fresh ones.
+
+use innerq::coordinator::{Engine, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::server::{serve, Client, MAX_LINE_BYTES};
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::QuantMethod;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+struct TestServer {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TestServer {
+    fn start(tag: &str) -> TestServer {
+        let dir = write_fake_artifacts(tag, '7');
+        let stop = Arc::new(AtomicBool::new(false));
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let stop_srv = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let manifest = Manifest::load(&dir).expect("fake manifest");
+            let mut engine =
+                Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+            engine.set_workers(2);
+            let sched = Scheduler::new(engine, 1 << 30);
+            serve(sched, "127.0.0.1:0", stop_srv, move |a| {
+                let _ = addr_tx.send(a);
+            })
+        });
+        let addr = addr_rx.recv().expect("server bound");
+        TestServer { stop, addr, handle: Some(handle) }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr); // poke the acceptor awake
+        if let Some(h) = self.handle.take() {
+            h.join().expect("server thread").expect("serve result");
+        }
+    }
+}
+
+/// A raw-byte connection (the [`Client`] API only speaks `&str`, which can
+/// never produce invalid UTF-8 on the wire).
+struct RawConn {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: SocketAddr) -> RawConn {
+        let conn = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(conn.try_clone().expect("clone"));
+        RawConn { conn, reader }
+    }
+
+    /// Send raw bytes (the newline is the caller's job) and read one
+    /// response line.
+    fn send_raw(&mut self, bytes: &[u8]) -> innerq::util::json::Json {
+        self.conn.write_all(bytes).expect("write");
+        self.conn.flush().expect("flush");
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).expect("read response");
+        innerq::util::json::Json::parse(&resp).expect("response parses")
+    }
+
+    fn error_of(&mut self, bytes: &[u8]) -> String {
+        let resp = self.send_raw(bytes);
+        resp.get("error")
+            .as_str()
+            .unwrap_or_else(|| panic!("expected an error line, got {}", resp.dump()))
+            .to_string()
+    }
+}
+
+#[test]
+fn hostile_lines_are_answered_in_band_and_never_poison_the_scheduler() {
+    let server = TestServer::start("proto_matrix");
+    let mut raw = RawConn::connect(server.addr);
+
+    // -- truncated JSON: a request cut mid-object (newline still present).
+    let err = raw.error_of(b"{\"prompt\": \"a=1\n");
+    assert!(err.contains("JSON"), "truncated JSON must fail parse: {err}");
+    // Truncated mid-string-escape as well.
+    let err = raw.error_of(b"{\"prompt\": \"ab\\\n");
+    assert!(err.contains("JSON"), "truncated escape must fail parse: {err}");
+
+    // -- non-UTF8 bytes.
+    let err = raw.error_of(b"\xff\xfe{\"prompt\": \"a=1;?a=\"}\n");
+    assert!(err.contains("UTF-8"), "non-UTF8 must be named in-band: {err}");
+
+    // -- deeply-nested garbage: the parser's depth guard answers instead of
+    // the reader thread blowing its stack.
+    let mut bomb = Vec::new();
+    bomb.extend_from_slice(&b"[".repeat(100_000));
+    bomb.push(b'1');
+    bomb.extend_from_slice(&b"]".repeat(100_000));
+    bomb.push(b'\n');
+    let err = raw.error_of(&bomb);
+    assert!(err.contains("nesting"), "nesting bomb must be rejected: {err}");
+
+    // -- oversized line: streamed past the cap, answered, and the
+    // connection resynchronizes at the newline.
+    let mut huge = Vec::with_capacity(MAX_LINE_BYTES + 64);
+    huge.extend_from_slice(b"{\"prompt\": \"");
+    huge.extend_from_slice(&b"a".repeat(MAX_LINE_BYTES + 1));
+    huge.extend_from_slice(b"\"}\n");
+    let err = raw.error_of(&huge);
+    assert!(err.contains("exceeds"), "over-long line must be capped: {err}");
+
+    // -- the same connection still serves real work after all of the above.
+    let resp = raw.send_raw(b"{\"prompt\": \"a=15;?a=\", \"max_new_tokens\": 3}\n");
+    assert_eq!(resp.get("text").as_str(), Some("777"));
+    assert_eq!(resp.get("error").as_str(), None);
+
+    // -- and a fresh connection sees a healthy scheduler too.
+    let mut client = Client::connect(server.addr).expect("connect");
+    let resp = client.generate("b=22;?b=", 2).expect("completion");
+    assert_eq!(resp.get("text").as_str(), Some("77"));
+    assert_eq!(resp.get("error").as_str(), None);
+}
+
+#[test]
+fn garbage_interleaved_with_valid_requests_keeps_results_exact() {
+    let server = TestServer::start("proto_interleave");
+    let mut raw = RawConn::connect(server.addr);
+    // Alternate hostile and valid lines; every valid one must come back
+    // exact, every hostile one as an error, in order, with nothing dropped.
+    for round in 0..3 {
+        let err = raw.error_of(b"]]]]}}}{{{[[[\n");
+        assert!(err.contains("JSON"), "round {round}: {err}");
+        let err = raw.error_of(b"\x80\x81\x82\n");
+        assert!(err.contains("UTF-8"), "round {round}: {err}");
+        let resp = raw.send_raw(b"{\"prompt\": \"c=33;?c=\", \"max_new_tokens\": 2}\n");
+        assert_eq!(resp.get("text").as_str(), Some("77"), "round {round}");
+        assert_eq!(resp.get("error").as_str(), None, "round {round}");
+    }
+}

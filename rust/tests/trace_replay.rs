@@ -7,17 +7,42 @@ use innerq::coordinator::{Engine, Policy, Scheduler};
 use innerq::runtime::Manifest;
 use innerq::util::fakemodel::write_fake_artifacts;
 use innerq::workload::replay::{replay, CostModel, Outcome, ReplayReport};
-use innerq::workload::trace::{generate_timed, Arrival, TimedTraceConfig};
+use innerq::workload::trace::{
+    generate_multi_turn, generate_timed, Arrival, MultiTurnTraceConfig, TimedRequest,
+    TimedTraceConfig,
+};
 use innerq::QuantMethod;
+use std::collections::BTreeMap;
 
 fn fake_scheduler(tag: &str, budget: usize, workers: usize, policy: Policy) -> Scheduler {
+    fake_scheduler_cfg(tag, QuantMethod::InnerQBase.config(), budget, workers, policy)
+}
+
+fn fake_scheduler_cfg(
+    tag: &str,
+    cfg: innerq::quant::MethodConfig,
+    budget: usize,
+    workers: usize,
+    policy: Policy,
+) -> Scheduler {
     let dir = write_fake_artifacts(tag, '7');
     let manifest = Manifest::load(&dir).expect("fake manifest");
-    let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    let mut engine = Engine::new(manifest, cfg).expect("engine");
     engine.set_workers(workers);
     let mut sched = Scheduler::new(engine, budget);
     sched.set_policy(policy);
     sched
+}
+
+/// InnerQBase with serving-scale windows shrunk to fit the 128-token
+/// fake-model bucket: under the default 32-sink + 96-recent windows a
+/// whole fake prompt lives in the fp windows, so a session prefix would
+/// hold no quantized middle and the store would have nothing to share.
+fn small_window_cfg() -> innerq::quant::MethodConfig {
+    let mut cfg = QuantMethod::InnerQBase.config();
+    cfg.w_sink = 4;
+    cfg.w_recent = 8;
+    cfg
 }
 
 fn stress_trace(rate_rps: f64, n: usize) -> Vec<innerq::workload::trace::TimedRequest> {
@@ -109,4 +134,92 @@ fn slo_policy_protects_interactive_tail_under_overload() {
         slo_ttft.p50_us,
         fifo_ttft.p50_us
     );
+}
+
+// ---------------------------------------------------------------------------
+// Multi-turn (shared-session-prefix) trace family.
+// ---------------------------------------------------------------------------
+
+/// A chat-style trace: `n` requests round-robined over a handful of sessions,
+/// each session's requests opening with the same context prefix. No deadlines
+/// so every request reaches `Ok` and text comparison is total.
+fn multi_turn_trace(n: usize, rate_rps: f64) -> Vec<TimedRequest> {
+    generate_multi_turn(&MultiTurnTraceConfig {
+        base: TimedTraceConfig {
+            n_requests: n,
+            arrival: Arrival::Poisson { rate_rps },
+            seed: 7,
+            ..TimedTraceConfig::default()
+        },
+        ..MultiTurnTraceConfig::default()
+    })
+}
+
+fn run_multi_turn(tag: &str, workers: usize, share: bool) -> ReplayReport {
+    let trace = multi_turn_trace(48, 400.0);
+    let mut sched = fake_scheduler_cfg(tag, small_window_cfg(), 64_000, workers, Policy::Slo);
+    sched.set_prefix_share(share);
+    replay(&mut sched, &trace, &CostModel::default()).expect("replay")
+}
+
+/// Within one prefix-share setting, the multi-turn replay report must be
+/// byte-identical across worker counts {1, 2, 4, 8} — the store's dedup and
+/// refcount decisions may not depend on intra-tick parallelism.
+#[test]
+fn multi_turn_replay_is_byte_identical_across_worker_counts() {
+    for share in [true, false] {
+        let reference = run_multi_turn(&format!("mt_{share}_w1"), 1, share).to_json().dump();
+        assert!(!reference.is_empty());
+        for workers in [2usize, 4, 8] {
+            let got =
+                run_multi_turn(&format!("mt_{share}_w{workers}"), workers, share).to_json().dump();
+            assert_eq!(
+                got, reference,
+                "share={share}: workers={workers} replay diverged from workers=1"
+            );
+        }
+    }
+}
+
+/// Sharing is an accounting optimization, never a numerics change: with the
+/// prefix store on vs off, every request must generate the identical text.
+/// (The *reports* may legitimately differ — sharing changes admission byte
+/// charges and tick costs — so this compares completions, not JSON.)
+#[test]
+fn multi_turn_outputs_identical_across_prefix_share_settings() {
+    let texts = |tag: &str, share: bool| -> BTreeMap<u64, String> {
+        let trace = multi_turn_trace(32, 400.0);
+        let mut sched = fake_scheduler_cfg(tag, small_window_cfg(), 64_000, 2, Policy::Slo);
+        sched.set_prefix_share(share);
+        for t in &trace {
+            sched.submit_at(t.req.clone(), t.arrival_us);
+        }
+        sched
+            .run_to_completion()
+            .expect("run")
+            .into_iter()
+            .map(|c| {
+                assert!(c.error.is_none(), "request {} failed: {:?}", c.id, c.error);
+                (c.id, c.text)
+            })
+            .collect()
+    };
+    let on = texts("mt_text_on", true);
+    let off = texts("mt_text_off", false);
+    assert_eq!(on.len(), 32);
+    assert_eq!(on, off, "prefix sharing changed generated text");
+}
+
+/// The multi-turn family actually exercises the store: with sharing on the
+/// replay must record prefix hits and shared bytes; with it off, none.
+#[test]
+fn multi_turn_replay_records_prefix_hits_only_when_sharing() {
+    let on = run_multi_turn("mt_hits_on", 1, true);
+    let off = run_multi_turn("mt_hits_off", 1, false);
+    assert!(on.metrics.prefix_hits > 0, "multi-turn trace must produce prefix hits");
+    assert!(on.metrics.prefix_bytes_shared > 0);
+    assert!(on.records.iter().any(|r| r.prefix_hits > 0));
+    assert_eq!(off.metrics.prefix_hits, 0, "sharing disabled must never hit");
+    assert_eq!(off.metrics.prefix_bytes_shared, 0);
+    assert!(off.records.iter().all(|r| r.prefix_hits == 0));
 }
