@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Calibrate replay CostModel coefficients from real CI bench numbers.
+
+The virtual-clock replay harness (rust/src/workload/replay.rs) prices each
+scheduler tick with a linear CostModel whose default coefficients are
+hand-calibrated guesses. This script derives the coefficients that *can* be
+measured from the wall-clock benches in a downloaded CI `bench-json`
+artifact set and emits a partial-override JSON file that
+`innerq serve-trace --cost-model PATH` loads (missing keys keep their
+built-in defaults — the file only overrides what was actually measured).
+
+Derivable today:
+  * decode_step_us / decode_us_per_seq — from BENCH_decode.json
+    (decode_scaling): for each batch size, the best tokens/s across
+    pipeline x workers gives a per-step wall time
+    `step_us = batch / tokens_per_s * 1e6`; a least-squares line over
+    (batch, step_us) yields the fixed dispatch cost (intercept) and the
+    marginal per-sequence cost (slope).
+
+Not derivable yet (kept at defaults): tick_overhead_us,
+prefill_us_per_token, offload/restore/prefix per-KiB costs — the benches
+that exercise those paths run on the virtual clock, so they carry no
+wall-clock signal. Extending a wall-clock bench over those paths is the
+way to grow this file's coverage.
+
+Usage:
+    # After downloading a CI artifact set (see ci/seed_baselines.py):
+    ci/calibrate_cost_model.py /tmp/bench-json -o ci/baselines/cost_model.json
+    git add ci/baselines/cost_model.json && git commit -m "Calibrate replay cost model"
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def fit_line(points):
+    """Least-squares (intercept, slope) for [(x, y), ...]; None if degenerate."""
+    n = len(points)
+    if n < 2:
+        return None
+    sx = sum(p[0] for p in points)
+    sy = sum(p[1] for p in points)
+    sxx = sum(p[0] * p[0] for p in points)
+    sxy = sum(p[0] * p[1] for p in points)
+    denom = n * sxx - sx * sx
+    if denom == 0:
+        return None
+    slope = (n * sxy - sx * sy) / denom
+    intercept = (sy - slope * sx) / n
+    return intercept, slope
+
+
+def decode_coefficients(path):
+    """(decode_step_us, decode_us_per_seq) from a BENCH_decode.json, or None."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("bench") != "decode_scaling":
+        print(f"[calibrate] SKIP {path}: not a decode_scaling document")
+        return None
+    # Best (max) tokens/s per batch across pipeline x workers: the cost
+    # model prices the *engine's* decode step, so the fastest configuration
+    # is the one whose wall time reflects the work rather than the overhead
+    # of a deliberately handicapped configuration.
+    best = {}
+    for r in doc.get("results", []):
+        batch, tps = int(r["batch"]), float(r["tokens_per_s"])
+        if tps > 0 and tps > best.get(batch, 0.0):
+            best[batch] = tps
+    points = [(b, b / tps * 1e6) for b, tps in sorted(best.items())]
+    fit = fit_line(points)
+    if fit is None:
+        print(f"[calibrate] SKIP {path}: need >=2 batch sizes to fit a line "
+              f"(got {len(points)})")
+        return None
+    intercept, slope = fit
+    # Coefficients are u64 microseconds on the Rust side; clamp at 1 so a
+    # noisy fit can never zero out a cost term entirely.
+    step_us = max(1, round(intercept))
+    per_seq_us = max(1, round(slope))
+    for b, us in points:
+        print(f"[calibrate]   batch {b:>3}: measured {us:10.1f} us/step, "
+              f"model {step_us + per_seq_us * b:>8} us/step")
+    return step_us, per_seq_us
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("artifact_dir", help="directory holding downloaded BENCH_*.json files")
+    ap.add_argument("-o", "--out", default="ci/baselines/cost_model.json",
+                    help="output path (default: ci/baselines/cost_model.json)")
+    args = ap.parse_args()
+
+    decode_path = os.path.join(args.artifact_dir, "BENCH_decode.json")
+    if not os.path.exists(decode_path):
+        print(f"[calibrate] FAIL: {decode_path} missing — run the decode_scaling "
+              "bench (CI does, in the smoke step) and re-download the artifact.")
+        return 1
+
+    model = {}
+    coeffs = decode_coefficients(decode_path)
+    if coeffs:
+        model["decode_step_us"], model["decode_us_per_seq"] = coeffs
+
+    if not model:
+        print("[calibrate] FAIL: no coefficients could be derived.")
+        return 1
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(model, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[calibrate] wrote {args.out}: {model}")
+    print("[calibrate] remaining coefficients keep the built-in defaults; "
+          "pass the file via `innerq serve-trace --cost-model`.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,8 +23,10 @@ Behavior:
   * regression > threshold in any cell shared by both files -> exit 1.
 
 Cells are keyed per bench type:
-  * kernel_throughput:    (kernel, bits), metric tokens_per_s  (wall-clock —
-    the generous default threshold absorbs shared-runner noise);
+  * kernel_throughput:    (kernel, isa, bits), metric tokens_per_s
+    (wall-clock — the generous default threshold absorbs shared-runner
+    noise; rows without an "isa" field predate the dispatch axis and are
+    keyed as "scalar");
   * overload_tail:        (method, rate_rps, budget_bytes), metric
     throughput_rps (virtual-clock — deterministic, so any drift is real);
   * offload_vs_recompute: (method, preemption, rate_rps, budget_bytes),
@@ -54,7 +56,10 @@ def cells(doc):
     out = {}
     for r in doc.get("results", []):
         if bench == "kernel_throughput":
-            key = (r["kernel"], r["bits"])
+            # The isa axis landed after the first baselines could have been
+            # seeded; default old rows to "scalar" so pre-axis baselines
+            # still share cells with current runs.
+            key = (r["kernel"], r.get("isa", "scalar"), r["bits"])
             metric = "tokens_per_s"
         elif bench == "overload_tail":
             key = (r["method"], r["rate_rps"], r["budget_bytes"])

@@ -38,6 +38,7 @@ KNOWN_BENCHES = {
     "overload_tail",
     "offload_vs_recompute",
     "decode_scaling",
+    "prefix_sharing",
 }
 
 

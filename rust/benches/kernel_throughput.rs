@@ -1,15 +1,18 @@
-//! Kernel-level throughput for the fused dequant-GEMV hot path: blocked
-//! SIMD-friendly kernels vs (a) the pre-PR production shape (`*_prev`:
-//! row-at-a-time, u8 fast unpack, AoS params — the honest baseline for the
-//! blocking/planar win) and (b) the retained generic scalar references
-//! (`*_ref`: the bit-exactness oracle), per bit-width, at the Table-4 head
-//! geometry (d_h = 128).
+//! Kernel-level throughput for the fused dequant-GEMV hot path: every
+//! dispatch arm the host supports (scalar plus AVX2/AVX-512/NEON where
+//! detected) vs (a) the pre-PR production shape (`*_prev`: row-at-a-time,
+//! u8 fast unpack, AoS params — the honest baseline for the blocking/planar
+//! win) and (b) the retained generic scalar references (`*_ref`: the
+//! bit-exactness oracle), per bit-width, at the Table-4 head geometry
+//! (d_h = 128).
 //!
-//! Every run *asserts* the blocked/reference bit-identity contract before
-//! timing (CI runs this in quick mode as a smoke test: any panic or bit
-//! mismatch fails the build), then emits both a human-readable table and a
-//! machine-readable `BENCH_kernels.json` (tokens/s and ns/row per kernel
-//! variant) so the perf trajectory is tracked across PRs.
+//! Every run *asserts* the cross-arm bit-identity contract before timing —
+//! each supported ISA arm and the dispatched entry point must match the
+//! scalar reference exactly (CI runs this in quick mode as a smoke test:
+//! any panic or bit mismatch fails the build) — then emits both a
+//! human-readable table and a machine-readable `BENCH_kernels.json`
+//! (tokens/s and ns/row per kernel variant *and ISA arm*) so the perf
+//! trajectory is tracked across PRs, plus a SIMD-vs-scalar speedup summary.
 //!
 //! ```bash
 //! cargo bench --bench kernel_throughput          # full run (4096 tokens)
@@ -18,8 +21,12 @@
 //! ```
 
 use innerq::cache::segments::{InnerKeySegment, InnerValSegment, OuterKeySegment};
-use innerq::kernels::gemv_inner::{pv_inner_chunk, pv_inner_chunk_ref, qk_inner, qk_inner_ref};
-use innerq::kernels::gemv_outer::{qk_outer_chunk, qk_outer_chunk_ref};
+use innerq::kernels::dispatch::{self, Isa};
+use innerq::kernels::gemv_inner::{
+    pv_inner_chunk, pv_inner_chunk_ref, pv_inner_chunk_with_isa, qk_inner, qk_inner_ref,
+    qk_inner_with_isa,
+};
+use innerq::kernels::gemv_outer::{qk_outer_chunk, qk_outer_chunk_ref, qk_outer_chunk_with_isa};
 use innerq::kernels::gemv_fp;
 use innerq::quant::group::Mode;
 use innerq::quant::packing::{packed_len, unpack32};
@@ -111,16 +118,24 @@ fn pv_inner_chunk_prev(
 
 struct Record {
     kernel: &'static str,
+    isa: &'static str,
     bits: u8,
     ns_per_row: f64,
     tokens_per_s: f64,
 }
 
-fn record(records: &mut Vec<Record>, kernel: &'static str, bits: u8, mean_us: f64, rows: usize) {
+fn record(
+    records: &mut Vec<Record>,
+    kernel: &'static str,
+    isa: &'static str,
+    bits: u8,
+    mean_us: f64,
+    rows: usize,
+) {
     let ns_per_row = mean_us * 1e3 / rows as f64;
     let tokens_per_s = rows as f64 / (mean_us * 1e-6);
-    println!("{kernel:<16} {bits:>4} {ns_per_row:>12.1} {tokens_per_s:>14.3e}");
-    records.push(Record { kernel, bits, ns_per_row, tokens_per_s });
+    println!("{kernel:<16} {isa:<7} {bits:>4} {ns_per_row:>12.1} {tokens_per_s:>14.3e}");
+    records.push(Record { kernel, isa, bits, ns_per_row, tokens_per_s });
 }
 
 fn main() {
@@ -146,23 +161,37 @@ fn main() {
         w
     };
 
-    println!("{:<16} {:>4} {:>12} {:>14}", "kernel", "bits", "ns/row", "tokens/s");
+    // The ISA axis: every arm this host can run, scalar first. SIMD arms
+    // are timed through the `*_with_isa` entry points, so one bench run
+    // covers the whole dispatch matrix regardless of INNERQ_ISA.
+    let arms = dispatch::supported();
+    eprintln!(
+        "[kernel_throughput] isa arms: {} (detected: {})",
+        arms.iter().map(|a| a.name()).collect::<Vec<_>>().join(","),
+        dispatch::detected().name(),
+    );
+
+    println!(
+        "{:<16} {:<7} {:>4} {:>12} {:>14}",
+        "kernel", "isa", "bits", "ns/row", "tokens/s"
+    );
     let mut records: Vec<Record> = Vec::new();
 
-    // FP32 baselines for context (one entry each, bits recorded as 32).
+    // FP32 baselines for context (one entry each, bits recorded as 32; the
+    // f32 path has no dispatch arms, so it is recorded as scalar).
     let mut scores = vec![0f32; n_tokens];
     let s = time_us(warmup, reps, || {
         gemv_fp::qk_fp(&q, &keys, D_H, &mut scores);
         scores[0]
     });
-    record(&mut records, "qk_fp", 32, s.mean_us, n_tokens);
+    record(&mut records, "qk_fp", "scalar", 32, s.mean_us, n_tokens);
     let mut ctx = vec![0f32; D_H];
     let s = time_us(warmup, reps, || {
         ctx.iter_mut().for_each(|v| *v = 0.0);
         gemv_fp::pv_fp(&p, &vals, D_H, &mut ctx);
         ctx[0]
     });
-    record(&mut records, "pv_fp", 32, s.mean_us, n_tokens);
+    record(&mut records, "pv_fp", "scalar", 32, s.mean_us, n_tokens);
 
     for bits in [2u8, 3, 4] {
         // ---- key kernel: blocked vs scalar reference ----
@@ -179,24 +208,34 @@ fn main() {
         qk_inner(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut fast);
         qk_inner_ref(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut refr);
         qk_inner_prev(&q, &kseg.codes, &aos, bits, D_H, &mut prev);
-        assert_eq!(fast, refr, "qk blocked/reference bit-identity violated at {bits} bits");
-        assert_eq!(fast, prev, "qk blocked/pre-PR bit-identity violated at {bits} bits");
+        assert_eq!(fast, refr, "qk dispatched/reference bit-identity violated at {bits} bits");
+        assert_eq!(fast, prev, "qk dispatched/pre-PR bit-identity violated at {bits} bits");
 
-        let s = time_us(warmup, reps, || {
-            qk_inner(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut fast);
-            fast[0]
-        });
-        record(&mut records, "qk_inner", bits, s.mean_us, n_tokens);
+        for &isa in &arms {
+            let mut out = vec![0f32; n_tokens];
+            qk_inner_with_isa(isa, &q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut out);
+            assert_eq!(
+                out, refr,
+                "qk {isa} arm/reference bit-identity violated at {bits} bits"
+            );
+            let s = time_us(warmup, reps, || {
+                qk_inner_with_isa(
+                    isa, &q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut out,
+                );
+                out[0]
+            });
+            record(&mut records, "qk_inner", isa.name(), bits, s.mean_us, n_tokens);
+        }
         let s = time_us(warmup, reps, || {
             qk_inner_prev(&q, &kseg.codes, &aos, bits, D_H, &mut prev);
             prev[0]
         });
-        record(&mut records, "qk_inner_prev", bits, s.mean_us, n_tokens);
+        record(&mut records, "qk_inner_prev", "scalar", bits, s.mean_us, n_tokens);
         let s = time_us(warmup, reps, || {
             qk_inner_ref(&q, &kseg.codes, &kseg.scales, &kseg.zeffs, bits, D_H, &mut refr);
             refr[0]
         });
-        record(&mut records, "qk_inner_ref", bits, s.mean_us, n_tokens);
+        record(&mut records, "qk_inner_ref", "scalar", bits, s.mean_us, n_tokens);
 
         // ---- value kernel: blocked vs scalar reference, over all chunks ----
         let mut vseg = InnerValSegment::new(D_H, bits, Mode::Sym);
@@ -207,8 +246,9 @@ fn main() {
         let n_chunks = n_tokens / 32;
         let vaos: Vec<(f32, f32)> =
             vseg.scales.iter().copied().zip(vseg.zeffs.iter().copied()).collect();
-        // variant: 0 = blocked, 1 = pre-PR production shape, 2 = scalar ref.
-        let run_pv = |out: &mut [f32], variant: usize| {
+        // variant: 0 = dispatched entry point, 1 = pre-PR production shape,
+        // 2 = scalar ref, 3 = explicit ISA arm (`isa` is only read here).
+        let run_pv = |out: &mut [f32], variant: usize, isa: Isa| {
             out.iter_mut().for_each(|v| *v = 0.0);
             for k in 0..n_chunks {
                 let pk = &p[k * 32..(k + 1) * 32];
@@ -218,34 +258,43 @@ fn main() {
                 match variant {
                     0 => pv_inner_chunk(pk, ck, sk, zk, bits, D_H, out),
                     1 => pv_inner_chunk_prev(pk, ck, &vaos[k * D_H..(k + 1) * D_H], bits, D_H, out),
-                    _ => pv_inner_chunk_ref(pk, ck, sk, zk, bits, D_H, out),
+                    2 => pv_inner_chunk_ref(pk, ck, sk, zk, bits, D_H, out),
+                    _ => pv_inner_chunk_with_isa(isa, pk, ck, sk, zk, bits, D_H, out),
                 }
             }
         };
         let mut fast_ctx = vec![0f32; D_H];
         let mut prev_ctx = vec![0f32; D_H];
         let mut ref_ctx = vec![0f32; D_H];
-        run_pv(&mut fast_ctx, 0);
-        run_pv(&mut prev_ctx, 1);
-        run_pv(&mut ref_ctx, 2);
-        assert_eq!(fast_ctx, ref_ctx, "pv blocked/reference bit-identity violated at {bits} bits");
-        assert_eq!(fast_ctx, prev_ctx, "pv blocked/pre-PR bit-identity violated at {bits} bits");
+        run_pv(&mut fast_ctx, 0, Isa::Scalar);
+        run_pv(&mut prev_ctx, 1, Isa::Scalar);
+        run_pv(&mut ref_ctx, 2, Isa::Scalar);
+        assert_eq!(fast_ctx, ref_ctx, "pv dispatched/reference bit-identity violated at {bits} bits");
+        assert_eq!(fast_ctx, prev_ctx, "pv dispatched/pre-PR bit-identity violated at {bits} bits");
 
+        for &isa in &arms {
+            let mut arm_ctx = vec![0f32; D_H];
+            run_pv(&mut arm_ctx, 3, isa);
+            assert_eq!(
+                arm_ctx, ref_ctx,
+                "pv {isa} arm/reference bit-identity violated at {bits} bits"
+            );
+            let s = time_us(warmup, reps, || {
+                run_pv(&mut arm_ctx, 3, isa);
+                arm_ctx[0]
+            });
+            record(&mut records, "pv_inner", isa.name(), bits, s.mean_us, n_tokens);
+        }
         let s = time_us(warmup, reps, || {
-            run_pv(&mut fast_ctx, 0);
-            fast_ctx[0]
-        });
-        record(&mut records, "pv_inner", bits, s.mean_us, n_tokens);
-        let s = time_us(warmup, reps, || {
-            run_pv(&mut prev_ctx, 1);
+            run_pv(&mut prev_ctx, 1, Isa::Scalar);
             prev_ctx[0]
         });
-        record(&mut records, "pv_inner_prev", bits, s.mean_us, n_tokens);
+        record(&mut records, "pv_inner_prev", "scalar", bits, s.mean_us, n_tokens);
         let s = time_us(warmup, reps, || {
-            run_pv(&mut ref_ctx, 2);
+            run_pv(&mut ref_ctx, 2, Isa::Scalar);
             ref_ctx[0]
         });
-        record(&mut records, "pv_inner_ref", bits, s.mean_us, n_tokens);
+        record(&mut records, "pv_inner_ref", "scalar", bits, s.mean_us, n_tokens);
 
         // ---- outer (KIVI) key kernel: blocked vs scalar reference ----
         // The reference doubles as the pre-blocking production shape, so
@@ -257,8 +306,9 @@ fn main() {
         let mut oscr = vec![0f32; D_H];
         let mut ofast = vec![0f32; n_tokens];
         let mut orefr = vec![0f32; n_tokens];
-        // variant: 0 = blocked, 1 = scalar reference.
-        let run_qk_outer = |out: &mut [f32], scratch: &mut [f32], variant: usize| {
+        // variant: 0 = dispatched entry point, 1 = scalar reference,
+        // 2 = explicit ISA arm (`isa` is only read here).
+        let run_qk_outer = |out: &mut [f32], scratch: &mut [f32], variant: usize, isa: Isa| {
             let row_bytes = (D_H / 32) * packed_len(32, bits);
             let chunk_bytes = 32 * row_bytes;
             for k in 0..n_tokens / 32 {
@@ -268,24 +318,58 @@ fn main() {
                 let ok = &mut out[k * 32..(k + 1) * 32];
                 match variant {
                     0 => qk_outer_chunk(&q, ck, sk, zk, bits, D_H, scratch, ok),
-                    _ => qk_outer_chunk_ref(&q, ck, sk, zk, bits, D_H, scratch, ok),
+                    1 => qk_outer_chunk_ref(&q, ck, sk, zk, bits, D_H, scratch, ok),
+                    _ => qk_outer_chunk_with_isa(isa, &q, ck, sk, zk, bits, D_H, scratch, ok),
                 }
             }
         };
-        run_qk_outer(&mut ofast, &mut oscr, 0);
-        run_qk_outer(&mut orefr, &mut oscr, 1);
-        assert_eq!(ofast, orefr, "qk_outer blocked/reference bit-identity violated at {bits} bits");
+        run_qk_outer(&mut ofast, &mut oscr, 0, Isa::Scalar);
+        run_qk_outer(&mut orefr, &mut oscr, 1, Isa::Scalar);
+        assert_eq!(
+            ofast, orefr,
+            "qk_outer dispatched/reference bit-identity violated at {bits} bits"
+        );
 
+        for &isa in &arms {
+            let mut arm_out = vec![0f32; n_tokens];
+            run_qk_outer(&mut arm_out, &mut oscr, 2, isa);
+            assert_eq!(
+                arm_out, orefr,
+                "qk_outer {isa} arm/reference bit-identity violated at {bits} bits"
+            );
+            let s = time_us(warmup, reps, || {
+                run_qk_outer(&mut arm_out, &mut oscr, 2, isa);
+                arm_out[0]
+            });
+            record(&mut records, "qk_outer", isa.name(), bits, s.mean_us, n_tokens);
+        }
         let s = time_us(warmup, reps, || {
-            run_qk_outer(&mut ofast, &mut oscr, 0);
-            ofast[0]
-        });
-        record(&mut records, "qk_outer", bits, s.mean_us, n_tokens);
-        let s = time_us(warmup, reps, || {
-            run_qk_outer(&mut orefr, &mut oscr, 1);
+            run_qk_outer(&mut orefr, &mut oscr, 1, Isa::Scalar);
             orefr[0]
         });
-        record(&mut records, "qk_outer_ref", bits, s.mean_us, n_tokens);
+        record(&mut records, "qk_outer_ref", "scalar", bits, s.mean_us, n_tokens);
+    }
+
+    // SIMD-vs-scalar speedup summary per (kernel, bits) cell. Informational
+    // (wall-clock on shared runners is too noisy for a hard gate here); the
+    // trajectory check reads the per-arm cells from BENCH_kernels.json.
+    for kernel in ["qk_inner", "pv_inner", "qk_outer"] {
+        for bits in [2u8, 3, 4] {
+            let scalar = records
+                .iter()
+                .find(|r| r.kernel == kernel && r.isa == "scalar" && r.bits == bits);
+            let Some(scalar) = scalar else { continue };
+            for r in records
+                .iter()
+                .filter(|r| r.kernel == kernel && r.bits == bits && r.isa != "scalar")
+            {
+                println!(
+                    "[speedup] {kernel:<10} b{bits} {:<7} {:.2}x vs scalar",
+                    r.isa,
+                    scalar.ns_per_row / r.ns_per_row
+                );
+            }
+        }
     }
 
     // Machine-readable trajectory record.
@@ -294,6 +378,7 @@ fn main() {
         .map(|r| {
             Json::obj(vec![
                 ("kernel", Json::str(r.kernel)),
+                ("isa", Json::str(r.isa)),
                 ("bits", Json::Num(r.bits as f64)),
                 ("d_h", Json::Num(D_H as f64)),
                 ("n_tokens", Json::Num(n_tokens as f64)),

@@ -1,0 +1,36 @@
+//! Build-time ISA gate for the SIMD kernel arms.
+//!
+//! The AVX-512 intrinsics used by `kernels/simd_x86.rs` stabilized in Rust
+//! 1.89; older toolchains must still build the crate (scalar + AVX2 + NEON
+//! arms only). Cargo cannot express "cfg if rustc >= X", so this script
+//! probes the compiler version and emits the `innerq_avx512` cfg when the
+//! AVX-512 arm can compile. Runtime availability is a separate question —
+//! `kernels::dispatch` still feature-detects `avx512f` before selecting the
+//! arm.
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (abc 2025-08-01)" -> minor = 89
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    if major > 1 {
+        return Some(u32::MAX);
+    }
+    Some(minor)
+}
+
+fn main() {
+    // Declare the cfg so --check-cfg builds accept it (ignored by old cargo).
+    println!("cargo:rustc-check-cfg=cfg(innerq_avx512)");
+    let avx512_ok = rustc_minor().map_or(false, |minor| minor >= 89);
+    if avx512_ok {
+        println!("cargo:rustc-cfg=innerq_avx512");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+}

@@ -1,0 +1,274 @@
+//! Runtime ISA dispatch for the fused dequantize-GEMV kernels.
+//!
+//! The blocked kernels in [`super::gemv_inner`] / [`super::gemv_outer`] exist
+//! in several instruction-set arms: the portable scalar form (the
+//! autovectorizer-shaped code from PRs 2/5) plus explicit `std::arch`
+//! variants — AVX2 and AVX-512 on x86_64, NEON on aarch64. This module picks
+//! the arm:
+//!
+//! 1. **Explicit override** — [`set_active`] (wired to the `--isa` CLI flag)
+//!    pins an arm process-wide. Passing `None` returns to automatic mode.
+//! 2. **Environment** — `INNERQ_ISA={auto,scalar,avx2,avx512,neon}` selects
+//!    an arm when no explicit override is set; CI uses this to run the test
+//!    suites once per arm without recompiling. An unsupported value warns on
+//!    stderr and falls back to auto-detection.
+//! 3. **Auto-detection** — the widest arm the host supports, probed once via
+//!    `is_x86_feature_detected!` / `is_aarch64_feature_detected!` and cached.
+//!
+//! Every arm is **bit-identical** to the scalar reference (the SIMD kernels
+//! use separate multiply + add, never FMA — see `kernels/DESIGN.md`), so arm
+//! selection is purely a throughput choice: switching arms mid-process is
+//! safe and cannot change any result, which is what lets the decode-pipeline
+//! tests assert byte-identical logits/snapshots across arms in-process.
+//!
+//! The AVX-512 arm additionally requires a toolchain with stable AVX-512
+//! intrinsics (rustc >= 1.89); `build.rs` probes this and gates the arm
+//! behind the `innerq_avx512` cfg, so older compilers silently lack it (it
+//! then reports as unsupported, exactly like missing hardware).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// One dispatchable instruction-set arm of the blocked kernels.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Portable scalar/autovectorized arm — always available, the baseline
+    /// the SIMD arms are bit-compared against.
+    Scalar,
+    /// x86_64 AVX2: 8-lane f32 vectors, `vpsrlvd`-based group unpack.
+    Avx2,
+    /// x86_64 AVX-512F: 16-lane f32 vectors. Needs rustc >= 1.89 at build
+    /// time (`innerq_avx512` cfg) and `avx512f` at run time.
+    Avx512,
+    /// aarch64 NEON: 4-lane f32 vectors (mandatory on aarch64, so this is
+    /// the auto-detected arm there).
+    Neon,
+}
+
+impl Isa {
+    /// Every arm the dispatcher knows about, widest last.
+    pub const ALL: [Isa; 4] = [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon];
+
+    /// Stable lower-case name, matching the `--isa` / `INNERQ_ISA` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--isa` / `INNERQ_ISA` value. `Ok(None)` means `auto`
+    /// (detect); `Err` carries a message listing the accepted spellings.
+    pub fn parse(s: &str) -> Result<Option<Isa>, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(Isa::Scalar)),
+            "avx2" => Ok(Some(Isa::Avx2)),
+            "avx512" => Ok(Some(Isa::Avx512)),
+            "neon" => Ok(Some(Isa::Neon)),
+            other => Err(format!(
+                "unknown ISA '{other}' (expected auto, scalar, avx2, avx512, or neon)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Sentinel for "no explicit override" in [`ACTIVE`].
+const UNSET: u8 = u8::MAX;
+
+/// Process-wide explicit override (from `--isa` / [`set_active`]). An
+/// `AtomicU8` rather than a `OnceLock` so tests can switch arms in-process;
+/// relaxed ordering is enough because every arm computes identical bytes —
+/// a racing reader merely runs a different-speed kernel.
+static ACTIVE: AtomicU8 = AtomicU8::new(UNSET);
+
+fn isa_from_u8(v: u8) -> Option<Isa> {
+    match v {
+        0 => Some(Isa::Scalar),
+        1 => Some(Isa::Avx2),
+        2 => Some(Isa::Avx512),
+        3 => Some(Isa::Neon),
+        _ => None,
+    }
+}
+
+fn isa_to_u8(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 0,
+        Isa::Avx2 => 1,
+        Isa::Avx512 => 2,
+        Isa::Neon => 3,
+    }
+}
+
+/// Is `isa` usable on this host *and* this build? (Hardware support probed
+/// via the std feature-detection macros; build support via the
+/// `innerq_avx512` cfg for the AVX-512 arm.)
+pub fn is_supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(all(target_arch = "x86_64", innerq_avx512))]
+        Isa::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// All arms usable on this host, widest last. Always contains
+/// [`Isa::Scalar`]; the parity tests and the kernel bench enumerate this to
+/// cover every arm the CI machine can actually execute.
+pub fn supported() -> Vec<Isa> {
+    Isa::ALL.iter().copied().filter(|&i| is_supported(i)).collect()
+}
+
+/// The widest arm this host supports, probed once and cached.
+pub fn detected() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(all(target_arch = "x86_64", innerq_avx512))]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                return Isa::Avx512;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
+        Isa::Scalar
+    })
+}
+
+/// The `INNERQ_ISA` environment override, read once. Unsupported or
+/// malformed values warn on stderr and yield `None` (auto-detect) so a test
+/// run never silently executes a different arm than it printed.
+fn env_override() -> Option<Isa> {
+    static ENV: OnceLock<Option<Isa>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let raw = std::env::var("INNERQ_ISA").ok()?;
+        match Isa::parse(&raw) {
+            Ok(None) => None,
+            Ok(Some(isa)) => {
+                if is_supported(isa) {
+                    Some(isa)
+                } else {
+                    eprintln!(
+                        "INNERQ_ISA={raw}: arm not supported on this host (supported: {}); using auto-detection",
+                        supported().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+                    );
+                    None
+                }
+            }
+            Err(e) => {
+                eprintln!("INNERQ_ISA: {e}; using auto-detection");
+                None
+            }
+        }
+    })
+}
+
+/// The arm the dispatching kernel wrappers run right now: explicit override
+/// if set, else `INNERQ_ISA`, else [`detected`]. One relaxed atomic load on
+/// the fast path.
+pub fn active() -> Isa {
+    match isa_from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => env_override().unwrap_or_else(detected),
+    }
+}
+
+/// Pin the active arm process-wide (`Some`) or return to automatic selection
+/// (`None`, the `--isa auto` spelling). Errs without changing state when the
+/// requested arm is not supported on this host/build.
+pub fn set_active(sel: Option<Isa>) -> Result<(), String> {
+    match sel {
+        None => {
+            ACTIVE.store(UNSET, Ordering::Relaxed);
+            Ok(())
+        }
+        Some(isa) => {
+            if is_supported(isa) {
+                ACTIVE.store(isa_to_u8(isa), Ordering::Relaxed);
+                Ok(())
+            } else {
+                Err(format!(
+                    "ISA '{isa}' not supported on this host/build (supported: {})",
+                    supported().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that mutate or observe the process-wide ACTIVE
+    /// override — the test harness runs them on parallel threads.
+    static ACTIVE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn parse_round_trips_every_name() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Ok(Some(isa)));
+        }
+        assert_eq!(Isa::parse("auto"), Ok(None));
+        assert_eq!(Isa::parse("AVX2"), Ok(Some(Isa::Avx2)));
+        assert!(Isa::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_detection_is_supported() {
+        assert!(is_supported(Isa::Scalar));
+        let sup = supported();
+        assert!(sup.contains(&Isa::Scalar));
+        assert!(sup.contains(&detected()), "detected arm must be in supported()");
+    }
+
+    #[test]
+    fn set_active_pins_and_clears() {
+        let _g = ACTIVE_LOCK.lock().unwrap();
+        set_active(Some(Isa::Scalar)).unwrap();
+        assert_eq!(active(), Isa::Scalar);
+        set_active(None).unwrap();
+        // Back to env/auto — whatever that is, it must be a supported arm.
+        assert!(is_supported(active()));
+    }
+
+    #[test]
+    fn set_active_rejects_unsupported_arms() {
+        // At most one of avx2/neon is supportable per target_arch, so at
+        // least one of the two must be rejected (and leave state untouched).
+        let _g = ACTIVE_LOCK.lock().unwrap();
+        let before = active();
+        let rejected = [Isa::Avx2, Isa::Avx512, Isa::Neon]
+            .into_iter()
+            .filter(|&i| !is_supported(i))
+            .collect::<Vec<_>>();
+        for isa in &rejected {
+            assert!(set_active(Some(*isa)).is_err());
+        }
+        assert_eq!(active(), before);
+    }
+}

@@ -135,8 +135,10 @@ fn qk_inner_block<const R: usize>(
 /// * `scales` / `zeffs`: planar per-group parameter planes, `n_tokens *
 ///   d_h/32` f32 each, row-major (see [`crate::kernels::zeff_planes`]).
 ///
-/// Writes `out[j] = q · dequant(K_j)` for each quantized token row. Blocked
-/// 4 rows per pass; bit-identical to [`qk_inner_ref`] for any row count.
+/// Writes `out[j] = q · dequant(K_j)` for each quantized token row.
+/// Dispatches to the widest bit-identical ISA arm the host supports (see
+/// [`crate::kernels::dispatch`]); every arm — scalar blocked, AVX2,
+/// AVX-512, NEON — is bit-identical to [`qk_inner_ref`] for any row count.
 pub fn qk_inner(
     q: &[f32],
     codes: &[u8],
@@ -146,15 +148,77 @@ pub fn qk_inner(
     d_h: usize,
     out: &mut [f32],
 ) {
+    qk_inner_with_isa(crate::kernels::dispatch::active(), q, codes, scales, zeffs, bits, d_h, out)
+}
+
+/// [`qk_inner`] pinned to a specific dispatch arm. The parity tests and the
+/// kernel bench enumerate [`crate::kernels::dispatch::supported`] through
+/// this entry point; production code goes through the dispatching wrapper.
+///
+/// # Panics
+/// Panics (before any unsafe code runs) if `isa` names an arm this
+/// host/build cannot execute, and on the same short-slice conditions as the
+/// scalar kernel.
+#[allow(clippy::too_many_arguments)] // kernel ABI plus the arm selector
+pub fn qk_inner_with_isa(
+    isa: crate::kernels::dispatch::Isa,
+    q: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    use crate::kernels::dispatch::{is_supported, Isa};
     let n = out.len();
     qk_guards(q, codes, scales, zeffs, bits, d_h, n);
+    assert!(is_supported(isa), "ISA '{isa}' not supported on this host/build");
     let groups = d_h / 32;
-    let gbytes = packed_len(32, bits);
-    let row_bytes = groups * gbytes;
 
+    // Shared scalar preamble: the per-group query prefix sums are computed
+    // once, identically, for every arm.
     let mut qsum_stack = [0f32; 64];
     let mut qsum_heap = Vec::new();
     let qsum = fill_qsum(q, groups, &mut qsum_stack, &mut qsum_heap);
+
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked AVX2.
+            crate::kernels::simd_x86::qk_inner_avx2(q, qsum, codes, scales, zeffs, bits, d_h, out)
+        },
+        #[cfg(all(target_arch = "x86_64", innerq_avx512))]
+        Isa::Avx512 => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked AVX-512F.
+            crate::kernels::simd_x86::qk_inner_avx512(q, qsum, codes, scales, zeffs, bits, d_h, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked NEON.
+            crate::kernels::simd_neon::qk_inner_neon(q, qsum, codes, scales, zeffs, bits, d_h, out)
+        },
+        _ => qk_inner_scalar_body(q, qsum, codes, scales, zeffs, bits, d_h, out),
+    }
+}
+
+/// The scalar (autovectorized) dispatch arm: the original blocked kernel
+/// from PRs 2/5, minus the guards/qsum preamble hoisted into the wrapper.
+#[allow(clippy::too_many_arguments)] // internal: kernel ABI plus the hoisted qsum plane
+fn qk_inner_scalar_body(
+    q: &[f32],
+    qsum: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
 
     let mut j = 0usize;
     while j + 4 <= n {
@@ -232,9 +296,12 @@ pub fn qk_inner_ref(
     }
 }
 
-/// Pairwise horizontal sum of 16 lanes (vectorizer-friendly).
+/// Pairwise horizontal sum of 16 lanes (vectorizer-friendly). Shared with
+/// the SIMD arms, which spill their accumulator lanes to a stack array and
+/// reduce through this exact function so the reduction tree is identical by
+/// construction.
 #[inline(always)]
-fn hsum16(a: &[f32; 16]) -> f32 {
+pub(crate) fn hsum16(a: &[f32; 16]) -> f32 {
     let mut s8 = [0f32; 8];
     for i in 0..8 {
         s8[i] = a[i] + a[i + 8];
@@ -279,7 +346,9 @@ fn pv_guards(p: &[f32], chunk_codes: &[u8], scales: &[f32], zeffs: &[f32], bits:
 ///   channel group);
 /// * `p`: the 32 softmax weights for this chunk's tokens.
 ///
-/// Accumulates `out[c] += Σ_t p[t] · dequant(V[t][c])`.
+/// Accumulates `out[c] += Σ_t p[t] · dequant(V[t][c])`. Dispatches to the
+/// widest bit-identical ISA arm the host supports; every arm is
+/// bit-identical to [`pv_inner_chunk_ref`].
 pub fn pv_inner_chunk(
     p: &[f32],
     chunk_codes: &[u8],
@@ -289,10 +358,81 @@ pub fn pv_inner_chunk(
     d_h: usize,
     out: &mut [f32],
 ) {
+    pv_inner_chunk_with_isa(
+        crate::kernels::dispatch::active(),
+        p,
+        chunk_codes,
+        scales,
+        zeffs,
+        bits,
+        d_h,
+        out,
+    )
+}
+
+/// [`pv_inner_chunk`] pinned to a specific dispatch arm (see
+/// [`qk_inner_with_isa`] for the contract).
+///
+/// # Panics
+/// Panics if `isa` is not supported on this host/build, and on the same
+/// short-slice conditions as the scalar kernel.
+#[allow(clippy::too_many_arguments)] // kernel ABI plus the arm selector
+pub fn pv_inner_chunk_with_isa(
+    isa: crate::kernels::dispatch::Isa,
+    p: &[f32],
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    use crate::kernels::dispatch::{is_supported, Isa};
     pv_guards(p, chunk_codes, scales, zeffs, bits, d_h, out);
+    assert!(is_supported(isa), "ISA '{isa}' not supported on this host/build");
+    // Shared scalar preamble: the weight prefix sum for the zeff term,
+    // computed once, identically, for every arm.
+    let psum: f32 = p.iter().sum();
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked AVX2.
+            crate::kernels::simd_x86::pv_inner_chunk_avx2(
+                p, psum, chunk_codes, scales, zeffs, bits, d_h, out,
+            )
+        },
+        #[cfg(all(target_arch = "x86_64", innerq_avx512))]
+        Isa::Avx512 => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked AVX-512F.
+            crate::kernels::simd_x86::pv_inner_chunk_avx512(
+                p, psum, chunk_codes, scales, zeffs, bits, d_h, out,
+            )
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked NEON.
+            crate::kernels::simd_neon::pv_inner_chunk_neon(
+                p, psum, chunk_codes, scales, zeffs, bits, d_h, out,
+            )
+        },
+        _ => pv_inner_chunk_scalar_body(p, psum, chunk_codes, scales, zeffs, bits, d_h, out),
+    }
+}
+
+/// The scalar (autovectorized) dispatch arm of [`pv_inner_chunk`].
+#[allow(clippy::too_many_arguments)] // internal: kernel ABI plus the hoisted psum
+fn pv_inner_chunk_scalar_body(
+    p: &[f32],
+    psum: f32,
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
     let gbytes = packed_len(32, bits);
     let row_bytes = (d_h / 32) * gbytes;
-    let psum: f32 = p.iter().sum();
 
     let mut buf = [[0f32; 32]; 4];
     for g in 0..d_h / 32 {

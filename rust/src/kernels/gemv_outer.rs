@@ -86,8 +86,9 @@ fn qk_outer_block<const R: usize>(
 ///   shorter only transiently during bulk prefill quantization).
 ///
 /// `scratch` must hold `d_h` f32; it carries the hoisted `q_c·s_c` products.
-/// Blocked 4 rows per pass; bit-identical to [`qk_outer_chunk_ref`] for any
-/// row count.
+/// Dispatches to the widest bit-identical ISA arm the host supports (see
+/// [`crate::kernels::dispatch`]); every arm is blocked 4 rows per pass and
+/// bit-identical to [`qk_outer_chunk_ref`] for any row count.
 #[allow(clippy::too_many_arguments)] // kernel ABI: planar planes are separate planes by design
 pub fn qk_outer_chunk(
     q: &[f32],
@@ -99,25 +100,91 @@ pub fn qk_outer_chunk(
     scratch: &mut [f32],
     out: &mut [f32],
 ) {
+    qk_outer_chunk_with_isa(
+        crate::kernels::dispatch::active(),
+        q,
+        chunk_codes,
+        scales,
+        zeffs,
+        bits,
+        d_h,
+        scratch,
+        out,
+    )
+}
+
+/// [`qk_outer_chunk`] pinned to a specific dispatch arm. The parity tests
+/// and the kernel bench enumerate [`crate::kernels::dispatch::supported`]
+/// through this entry point; production code uses the dispatching wrapper.
+///
+/// # Panics
+/// Panics if `isa` is not supported on this host/build.
+#[allow(clippy::too_many_arguments)] // kernel ABI plus the arm selector
+pub fn qk_outer_chunk_with_isa(
+    isa: crate::kernels::dispatch::Isa,
+    q: &[f32],
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    use crate::kernels::dispatch::{is_supported, Isa};
     let n_rows = out.len();
     qk_outer_guards(q, chunk_codes, scales, zeffs, bits, d_h, scratch, n_rows);
-    let gbytes = packed_len(32, bits);
-    let row_bytes = (d_h / 32) * gbytes;
+    assert!(is_supported(isa), "ISA '{isa}' not supported on this host/build");
 
-    // Hoist per-channel scale/zero into query space once per chunk: one
-    // pass over d_h, straight multiplies over contiguous planes (no pair
-    // deinterleave). The plane is then loaded once per 4-row block.
+    // Shared scalar preamble for every arm: hoist per-channel scale/zero
+    // into query space once per chunk — one pass over d_h, straight
+    // multiplies over contiguous planes (no pair deinterleave). The plane
+    // is then loaded once per 4-row block.
     let mut zacc = 0.0f32;
     for c in 0..d_h {
         scratch[c] = q[c] * scales[c];
         zacc += q[c] * zeffs[c];
     }
 
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked AVX2.
+            crate::kernels::simd_x86::qk_outer_chunk_avx2(chunk_codes, scratch, zacc, bits, d_h, out)
+        },
+        #[cfg(all(target_arch = "x86_64", innerq_avx512))]
+        Isa::Avx512 => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked AVX-512F.
+            crate::kernels::simd_x86::qk_outer_chunk_avx512(chunk_codes, scratch, zacc, bits, d_h, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            // SAFETY: guards validated the slices; is_supported checked NEON.
+            crate::kernels::simd_neon::qk_outer_chunk_neon(chunk_codes, scratch, zacc, bits, d_h, out)
+        },
+        _ => qk_outer_chunk_scalar_body(chunk_codes, scratch, zacc, bits, d_h, out),
+    }
+}
+
+/// The scalar (autovectorized) dispatch arm: the original blocked kernel,
+/// minus the guards/hoist preamble lifted into the wrapper.
+fn qk_outer_chunk_scalar_body(
+    chunk_codes: &[u8],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n_rows = out.len();
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+
     let mut j = 0usize;
     while j + 4 <= n_rows {
         let rows: [&[u8]; 4] =
             std::array::from_fn(|r| &chunk_codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
-        qk_outer_block::<4>(rows, scratch, zacc, bits, gbytes, d_h, &mut out[j..j + 4]);
+        qk_outer_block::<4>(rows, qs_plane, zacc, bits, gbytes, d_h, &mut out[j..j + 4]);
         j += 4;
     }
     // Tail rows (n_rows % 4) go through the same block kernel one row at a
@@ -125,7 +192,7 @@ pub fn qk_outer_chunk(
     while j < n_rows {
         qk_outer_block::<1>(
             [&chunk_codes[j * row_bytes..(j + 1) * row_bytes]],
-            scratch,
+            qs_plane,
             zacc,
             bits,
             gbytes,

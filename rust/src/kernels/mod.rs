@@ -16,12 +16,28 @@
 //! * [`quant_step`] — per-decode-step quantization kernels following each
 //!   method's eviction pattern (Table 5);
 //! * [`softmax`] / merge helpers used by the attention layer.
+//!
+//! The hot blocked kernels (`qk_inner`, `pv_inner_chunk`, `qk_outer_chunk`)
+//! exist in several instruction-set arms — scalar/autovectorized plus
+//! explicit AVX2, AVX-512 (x86_64) and NEON (aarch64) variants in
+//! [`simd_x86`] / [`simd_neon`] — selected at runtime by [`dispatch`]
+//! (overridable via `--isa` / `INNERQ_ISA`). Every arm is bit-identical to
+//! the retained `*_ref` scalar oracles: the SIMD code uses separate
+//! multiply + add (no FMA contraction) and reuses the scalar reduction
+//! trees, so ISA selection is purely a throughput choice and the
+//! decode-pipeline/prefix-sharing byte-identity contracts hold under every
+//! arm. Rationale and lane layouts: `kernels/DESIGN.md`.
 
+pub mod dispatch;
 pub mod gemv_fp;
 pub mod gemv_inner;
 pub mod gemv_outer;
 pub mod gemv_turbo;
 pub mod quant_step;
+#[cfg(target_arch = "aarch64")]
+pub mod simd_neon;
+#[cfg(target_arch = "x86_64")]
+pub mod simd_x86;
 pub mod softmax;
 
 /// Effective zero term for a group: dequant is

@@ -37,6 +37,7 @@ pub fn step_turbo_key(seg: &mut TurboKeySegment, k: &[f32]) {
     seg.append_token(k);
 }
 
+/// TurboQuant per-step value work: rotate + codebook-quantize 1 token.
 pub fn step_turbo_val(seg: &mut TurboValSegment, v: &[f32]) {
     seg.append_token(v);
 }

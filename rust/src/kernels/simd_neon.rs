@@ -1,0 +1,233 @@
+//! Explicit NEON (aarch64) arms of the blocked fused dequant-GEMV kernels.
+//!
+//! Same contract as `simd_x86`: every function performs its scalar
+//! counterpart's floating-point operations in the exact reference order —
+//! separate `vmulq_f32` + `vaddq_f32`, never a fused `vfmaq` — so results
+//! are bit-identical to the scalar arm on every input. The scalar kernels'
+//! 16-lane split accumulators become four `float32x4_t` registers;
+//! horizontal reductions spill lanes to a stack array and reuse the scalar
+//! reduction. See `kernels/DESIGN.md` §SIMD.
+//!
+//! Callers (the `*_with_isa` wrappers) run the kernel guards and the shared
+//! scalar preambles before dispatching here. NEON is mandatory on aarch64,
+//! so this arm is the auto-detected default there; CI cross-checks it with
+//! an `aarch64-unknown-linux-gnu` `cargo check`.
+
+use super::gemv_inner::hsum16;
+use crate::quant::packing::neon::unpack32_ps_neon;
+use crate::quant::packing::packed_len;
+use std::arch::aarch64::*;
+
+/// One block of `rows.len() <= 4` key rows, NEON. Lane chunk `c` (lanes
+/// `4c..4c+4` of the scalar `[f32; 16]` accumulator) computes
+/// `a_c = q_c*b_c + q_{c+4}*b_{c+4}` (two muls + add, the reference split
+/// accumulation), then `acc_c += scale * a_c`.
+#[target_feature(enable = "neon")]
+unsafe fn qk_inner_rows_neon(
+    q: &[f32],
+    qsum: &[f32],
+    rows: &[&[u8]],
+    srows: &[&[f32]],
+    zrows: &[&[f32]],
+    bits: u8,
+    gbytes: usize,
+    out: &mut [f32],
+) {
+    let groups = qsum.len();
+    let nr = rows.len();
+    debug_assert!(nr <= 4 && out.len() == nr);
+    let mut acc = [[vdupq_n_f32(0.0); 4]; 4];
+    let mut zterm = [0f32; 4];
+    for g in 0..groups {
+        let qp = q.as_ptr().add(g * 32);
+        let mut qv = [vdupq_n_f32(0.0); 8];
+        for (c, v) in qv.iter_mut().enumerate() {
+            *v = vld1q_f32(qp.add(4 * c));
+        }
+        let qs = qsum[g];
+        for r in 0..nr {
+            let b = unpack32_ps_neon(&rows[r][g * gbytes..], bits);
+            let s = vdupq_n_f32(srows[r][g]);
+            for c in 0..4 {
+                let a = vaddq_f32(vmulq_f32(qv[c], b[c]), vmulq_f32(qv[c + 4], b[c + 4]));
+                acc[r][c] = vaddq_f32(acc[r][c], vmulq_f32(s, a));
+            }
+            zterm[r] += zrows[r][g] * qs;
+        }
+    }
+    for r in 0..nr {
+        let mut lanes = [0f32; 16];
+        for c in 0..4 {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * c), acc[r][c]);
+        }
+        out[r] = hsum16(&lanes) + zterm[r];
+    }
+}
+
+/// NEON arm of [`super::gemv_inner::qk_inner`]. `qsum` is the per-group
+/// query prefix-sum plane computed by the dispatching wrapper.
+///
+/// # Safety
+/// Requires NEON; the caller must have run `qk_guards` on these arguments.
+#[target_feature(enable = "neon")]
+pub unsafe fn qk_inner_neon(
+    q: &[f32],
+    qsum: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        let srows: [&[f32]; 4] =
+            std::array::from_fn(|r| &scales[(j + r) * groups..(j + r + 1) * groups]);
+        let zrows: [&[f32]; 4] =
+            std::array::from_fn(|r| &zeffs[(j + r) * groups..(j + r + 1) * groups]);
+        qk_inner_rows_neon(q, qsum, &rows, &srows, &zrows, bits, gbytes, &mut out[j..j + 4]);
+        j += 4;
+    }
+    while j < n {
+        qk_inner_rows_neon(
+            q,
+            qsum,
+            &[&codes[j * row_bytes..(j + 1) * row_bytes]],
+            &[&scales[j * groups..(j + 1) * groups]],
+            &[&zeffs[j * groups..(j + 1) * groups]],
+            bits,
+            gbytes,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}
+
+/// NEON arm of [`super::gemv_inner::pv_inner_chunk`]. `psum` is the chunk's
+/// softmax-weight sum, computed scalar by the wrapper.
+///
+/// # Safety
+/// Requires NEON; the caller must have run `pv_guards` on these arguments.
+#[target_feature(enable = "neon")]
+pub unsafe fn pv_inner_chunk_neon(
+    p: &[f32],
+    psum: f32,
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let vpsum = vdupq_n_f32(psum);
+    for g in 0..d_h / 32 {
+        let mut acc = [vdupq_n_f32(0.0); 8];
+        for (t, &w) in p.iter().enumerate() {
+            let b = unpack32_ps_neon(&chunk_codes[t * row_bytes + g * gbytes..], bits);
+            let vw = vdupq_n_f32(w);
+            for (a, bj) in acc.iter_mut().zip(b) {
+                *a = vaddq_f32(*a, vmulq_f32(vw, bj));
+            }
+        }
+        let sp = scales.as_ptr().add(g * 32);
+        let zp = zeffs.as_ptr().add(g * 32);
+        let op = out.as_mut_ptr().add(g * 32);
+        for (j, aj) in acc.into_iter().enumerate() {
+            let s = vld1q_f32(sp.add(4 * j));
+            let z = vld1q_f32(zp.add(4 * j));
+            let o = vld1q_f32(op.add(4 * j));
+            let r = vaddq_f32(o, vaddq_f32(vmulq_f32(s, aj), vmulq_f32(z, vpsum)));
+            vst1q_f32(op.add(4 * j), r);
+        }
+    }
+}
+
+/// One block of `rows.len() <= 4` KIVI key rows, NEON. The two group halves
+/// accumulate sequentially per the outer reference.
+#[target_feature(enable = "neon")]
+unsafe fn qk_outer_rows_neon(
+    rows: &[&[u8]],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    gbytes: usize,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let nr = rows.len();
+    debug_assert!(nr <= 4 && out.len() == nr);
+    let mut acc = [[vdupq_n_f32(0.0); 4]; 4];
+    for g in 0..d_h / 32 {
+        let qp = qs_plane.as_ptr().add(g * 32);
+        let mut qv = [vdupq_n_f32(0.0); 8];
+        for (c, v) in qv.iter_mut().enumerate() {
+            *v = vld1q_f32(qp.add(4 * c));
+        }
+        for r in 0..nr {
+            let b = unpack32_ps_neon(&rows[r][g * gbytes..], bits);
+            // Half 0 (lanes 0..16), then half 1 — chained adds as in the
+            // scalar reference.
+            for c in 0..4 {
+                acc[r][c] = vaddq_f32(acc[r][c], vmulq_f32(qv[c], b[c]));
+            }
+            for c in 0..4 {
+                acc[r][c] = vaddq_f32(acc[r][c], vmulq_f32(qv[c + 4], b[c + 4]));
+            }
+        }
+    }
+    for r in 0..nr {
+        let mut lanes = [0f32; 16];
+        for c in 0..4 {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * c), acc[r][c]);
+        }
+        out[r] = lanes.iter().sum::<f32>() + zacc;
+    }
+}
+
+/// NEON arm of [`super::gemv_outer::qk_outer_chunk`]. `qs_plane`/`zacc` are
+/// the hoisted `q_c*s_c` plane and zero term computed by the wrapper.
+///
+/// # Safety
+/// Requires NEON; the caller must have run `qk_outer_guards` and filled
+/// `qs_plane` for these arguments.
+#[target_feature(enable = "neon")]
+pub unsafe fn qk_outer_chunk_neon(
+    chunk_codes: &[u8],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n_rows = out.len();
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let mut j = 0usize;
+    while j + 4 <= n_rows {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &chunk_codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        qk_outer_rows_neon(&rows, qs_plane, zacc, bits, gbytes, d_h, &mut out[j..j + 4]);
+        j += 4;
+    }
+    while j < n_rows {
+        qk_outer_rows_neon(
+            &[&chunk_codes[j * row_bytes..(j + 1) * row_bytes]],
+            qs_plane,
+            zacc,
+            bits,
+            gbytes,
+            d_h,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}

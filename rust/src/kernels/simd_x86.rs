@@ -1,0 +1,454 @@
+//! Explicit AVX2 / AVX-512 arms of the blocked fused dequant-GEMV kernels.
+//!
+//! Every function here recomputes its scalar counterpart's floating-point
+//! operations **in the exact reference order** — separate vector multiply +
+//! add, never an FMA — so the results are bit-identical to the scalar arm
+//! (and therefore to the `*_ref` oracles) on every input. The lane mapping
+//! is mechanical: the scalar kernels' 16-lane split accumulators become two
+//! `__m256` (AVX2) or one `__m512` (AVX-512) register(s); horizontal
+//! reductions spill the lanes to a stack array and reuse the *scalar*
+//! reduction (`hsum16` or sequential `iter().sum()`), which keeps the
+//! reduction tree identical by construction. See `kernels/DESIGN.md` §SIMD.
+//!
+//! Functions take pre-validated inputs: the safe `*_with_isa` wrappers in
+//! [`super::gemv_inner`] / [`super::gemv_outer`] run the kernel guards and
+//! the shared scalar preambles (query prefix sums, the hoisted `q·s` plane)
+//! before dispatching here. The AVX-512 arm compiles only with rustc >= 1.89
+//! (`innerq_avx512` cfg emitted by `build.rs`).
+
+use super::gemv_inner::hsum16;
+use crate::quant::packing::packed_len;
+use crate::quant::packing::x86::unpack32_ps_avx2;
+#[cfg(innerq_avx512)]
+use crate::quant::packing::x86::unpack32_ps_avx512;
+use std::arch::x86_64::*;
+
+// ---------------------------------------------------------------------------
+// AVX2
+// ---------------------------------------------------------------------------
+
+/// One block of `rows.len() <= 4` key rows, AVX2. The scalar block's
+/// `[f32; 16]` accumulator is lanes `acc_lo` (0..8) + `acc_hi` (8..16);
+/// per group: `a = q[0..16]*b[0..16] + q[16..32]*b[16..32]` elementwise
+/// (two muls + one add, the reference's split accumulation), then
+/// `acc += scale * a` (mul + add, no FMA).
+#[target_feature(enable = "avx2")]
+unsafe fn qk_inner_rows_avx2(
+    q: &[f32],
+    qsum: &[f32],
+    rows: &[&[u8]],
+    srows: &[&[f32]],
+    zrows: &[&[f32]],
+    bits: u8,
+    gbytes: usize,
+    out: &mut [f32],
+) {
+    let groups = qsum.len();
+    let nr = rows.len();
+    debug_assert!(nr <= 4 && out.len() == nr);
+    let mut acc_lo = [_mm256_setzero_ps(); 4];
+    let mut acc_hi = [_mm256_setzero_ps(); 4];
+    let mut zterm = [0f32; 4];
+    for g in 0..groups {
+        let qp = q.as_ptr().add(g * 32);
+        let q0 = _mm256_loadu_ps(qp);
+        let q1 = _mm256_loadu_ps(qp.add(8));
+        let q2 = _mm256_loadu_ps(qp.add(16));
+        let q3 = _mm256_loadu_ps(qp.add(24));
+        let qs = qsum[g];
+        for r in 0..nr {
+            let [b0, b1, b2, b3] = unpack32_ps_avx2(&rows[r][g * gbytes..], bits);
+            let a_lo = _mm256_add_ps(_mm256_mul_ps(q0, b0), _mm256_mul_ps(q2, b2));
+            let a_hi = _mm256_add_ps(_mm256_mul_ps(q1, b1), _mm256_mul_ps(q3, b3));
+            let s = _mm256_set1_ps(srows[r][g]);
+            acc_lo[r] = _mm256_add_ps(acc_lo[r], _mm256_mul_ps(s, a_lo));
+            acc_hi[r] = _mm256_add_ps(acc_hi[r], _mm256_mul_ps(s, a_hi));
+            zterm[r] += zrows[r][g] * qs;
+        }
+    }
+    for r in 0..nr {
+        let mut lanes = [0f32; 16];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc_lo[r]);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc_hi[r]);
+        out[r] = hsum16(&lanes) + zterm[r];
+    }
+}
+
+/// AVX2 arm of [`super::gemv_inner::qk_inner`]. `qsum` is the per-group
+/// query prefix-sum plane computed by the dispatching wrapper.
+///
+/// # Safety
+/// Requires AVX2; the caller must have run `qk_guards` (slice lengths) on
+/// these exact arguments.
+#[target_feature(enable = "avx2")]
+pub unsafe fn qk_inner_avx2(
+    q: &[f32],
+    qsum: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        let srows: [&[f32]; 4] =
+            std::array::from_fn(|r| &scales[(j + r) * groups..(j + r + 1) * groups]);
+        let zrows: [&[f32]; 4] =
+            std::array::from_fn(|r| &zeffs[(j + r) * groups..(j + r + 1) * groups]);
+        qk_inner_rows_avx2(q, qsum, &rows, &srows, &zrows, bits, gbytes, &mut out[j..j + 4]);
+        j += 4;
+    }
+    while j < n {
+        qk_inner_rows_avx2(
+            q,
+            qsum,
+            &[&codes[j * row_bytes..(j + 1) * row_bytes]],
+            &[&scales[j * groups..(j + 1) * groups]],
+            &[&zeffs[j * groups..(j + 1) * groups]],
+            bits,
+            gbytes,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}
+
+/// AVX2 arm of [`super::gemv_inner::pv_inner_chunk`]. `psum` is the chunk's
+/// softmax-weight sum, computed scalar by the wrapper (identical for every
+/// arm).
+///
+/// # Safety
+/// Requires AVX2; the caller must have run `pv_guards` on these arguments.
+#[target_feature(enable = "avx2")]
+pub unsafe fn pv_inner_chunk_avx2(
+    p: &[f32],
+    psum: f32,
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let vpsum = _mm256_set1_ps(psum);
+    for g in 0..d_h / 32 {
+        // Register-resident unscaled accumulator for this channel group;
+        // tokens accumulate in ascending order (the reference order).
+        let mut acc = [_mm256_setzero_ps(); 4];
+        for (t, &w) in p.iter().enumerate() {
+            let b = unpack32_ps_avx2(&chunk_codes[t * row_bytes + g * gbytes..], bits);
+            let vw = _mm256_set1_ps(w);
+            for (a, bj) in acc.iter_mut().zip(b) {
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(vw, bj));
+            }
+        }
+        // Epilogue matches `og[i] += sg[i]*accg[i] + zg[i]*psum` exactly:
+        // two muls, inner add, outer add.
+        let sp = scales.as_ptr().add(g * 32);
+        let zp = zeffs.as_ptr().add(g * 32);
+        let op = out.as_mut_ptr().add(g * 32);
+        for (j, aj) in acc.into_iter().enumerate() {
+            let s = _mm256_loadu_ps(sp.add(8 * j));
+            let z = _mm256_loadu_ps(zp.add(8 * j));
+            let o = _mm256_loadu_ps(op.add(8 * j));
+            let r =
+                _mm256_add_ps(o, _mm256_add_ps(_mm256_mul_ps(s, aj), _mm256_mul_ps(z, vpsum)));
+            _mm256_storeu_ps(op.add(8 * j), r);
+        }
+    }
+}
+
+/// One block of `rows.len() <= 4` KIVI key rows, AVX2. The two halves of
+/// each group accumulate **sequentially** (half 0's add retires before half
+/// 1's), mirroring the scalar reference's chained adds.
+#[target_feature(enable = "avx2")]
+unsafe fn qk_outer_rows_avx2(
+    rows: &[&[u8]],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    gbytes: usize,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let nr = rows.len();
+    debug_assert!(nr <= 4 && out.len() == nr);
+    let mut acc_lo = [_mm256_setzero_ps(); 4];
+    let mut acc_hi = [_mm256_setzero_ps(); 4];
+    for g in 0..d_h / 32 {
+        let qp = qs_plane.as_ptr().add(g * 32);
+        let q0 = _mm256_loadu_ps(qp);
+        let q1 = _mm256_loadu_ps(qp.add(8));
+        let q2 = _mm256_loadu_ps(qp.add(16));
+        let q3 = _mm256_loadu_ps(qp.add(24));
+        for r in 0..nr {
+            let [b0, b1, b2, b3] = unpack32_ps_avx2(&rows[r][g * gbytes..], bits);
+            acc_lo[r] = _mm256_add_ps(acc_lo[r], _mm256_mul_ps(q0, b0));
+            acc_hi[r] = _mm256_add_ps(acc_hi[r], _mm256_mul_ps(q1, b1));
+            acc_lo[r] = _mm256_add_ps(acc_lo[r], _mm256_mul_ps(q2, b2));
+            acc_hi[r] = _mm256_add_ps(acc_hi[r], _mm256_mul_ps(q3, b3));
+        }
+    }
+    for r in 0..nr {
+        let mut lanes = [0f32; 16];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc_lo[r]);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc_hi[r]);
+        // The outer reference reduces sequentially (`iter().sum()`), not
+        // pairwise — reuse exactly that.
+        out[r] = lanes.iter().sum::<f32>() + zacc;
+    }
+}
+
+/// AVX2 arm of [`super::gemv_outer::qk_outer_chunk`]. `qs_plane`/`zacc` are
+/// the hoisted `q_c*s_c` plane and zero term computed by the wrapper.
+///
+/// # Safety
+/// Requires AVX2; the caller must have run `qk_outer_guards` and filled
+/// `qs_plane` for these arguments.
+#[target_feature(enable = "avx2")]
+pub unsafe fn qk_outer_chunk_avx2(
+    chunk_codes: &[u8],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n_rows = out.len();
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let mut j = 0usize;
+    while j + 4 <= n_rows {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &chunk_codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        qk_outer_rows_avx2(&rows, qs_plane, zacc, bits, gbytes, d_h, &mut out[j..j + 4]);
+        j += 4;
+    }
+    while j < n_rows {
+        qk_outer_rows_avx2(
+            &[&chunk_codes[j * row_bytes..(j + 1) * row_bytes]],
+            qs_plane,
+            zacc,
+            bits,
+            gbytes,
+            d_h,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 (rustc >= 1.89 only; see build.rs)
+// ---------------------------------------------------------------------------
+
+/// One block of `rows.len() <= 4` key rows, AVX-512: the full 16-lane
+/// accumulator is one `__m512` per row.
+#[cfg(innerq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn qk_inner_rows_avx512(
+    q: &[f32],
+    qsum: &[f32],
+    rows: &[&[u8]],
+    srows: &[&[f32]],
+    zrows: &[&[f32]],
+    bits: u8,
+    gbytes: usize,
+    out: &mut [f32],
+) {
+    let groups = qsum.len();
+    let nr = rows.len();
+    debug_assert!(nr <= 4 && out.len() == nr);
+    let mut acc = [_mm512_setzero_ps(); 4];
+    let mut zterm = [0f32; 4];
+    for g in 0..groups {
+        let qp = q.as_ptr().add(g * 32);
+        let q_lo = _mm512_loadu_ps(qp);
+        let q_hi = _mm512_loadu_ps(qp.add(16));
+        let qs = qsum[g];
+        for r in 0..nr {
+            let [b_lo, b_hi] = unpack32_ps_avx512(&rows[r][g * gbytes..], bits);
+            let a = _mm512_add_ps(_mm512_mul_ps(q_lo, b_lo), _mm512_mul_ps(q_hi, b_hi));
+            let s = _mm512_set1_ps(srows[r][g]);
+            acc[r] = _mm512_add_ps(acc[r], _mm512_mul_ps(s, a));
+            zterm[r] += zrows[r][g] * qs;
+        }
+    }
+    for r in 0..nr {
+        let mut lanes = [0f32; 16];
+        _mm512_storeu_ps(lanes.as_mut_ptr(), acc[r]);
+        out[r] = hsum16(&lanes) + zterm[r];
+    }
+}
+
+/// AVX-512 arm of [`super::gemv_inner::qk_inner`].
+///
+/// # Safety
+/// Requires AVX-512F; the caller must have run `qk_guards` on these
+/// arguments.
+#[cfg(innerq_avx512)]
+#[target_feature(enable = "avx512f")]
+pub unsafe fn qk_inner_avx512(
+    q: &[f32],
+    qsum: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let groups = d_h / 32;
+    let gbytes = packed_len(32, bits);
+    let row_bytes = groups * gbytes;
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        let srows: [&[f32]; 4] =
+            std::array::from_fn(|r| &scales[(j + r) * groups..(j + r + 1) * groups]);
+        let zrows: [&[f32]; 4] =
+            std::array::from_fn(|r| &zeffs[(j + r) * groups..(j + r + 1) * groups]);
+        qk_inner_rows_avx512(q, qsum, &rows, &srows, &zrows, bits, gbytes, &mut out[j..j + 4]);
+        j += 4;
+    }
+    while j < n {
+        qk_inner_rows_avx512(
+            q,
+            qsum,
+            &[&codes[j * row_bytes..(j + 1) * row_bytes]],
+            &[&scales[j * groups..(j + 1) * groups]],
+            &[&zeffs[j * groups..(j + 1) * groups]],
+            bits,
+            gbytes,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}
+
+/// AVX-512 arm of [`super::gemv_inner::pv_inner_chunk`].
+///
+/// # Safety
+/// Requires AVX-512F; the caller must have run `pv_guards` on these
+/// arguments.
+#[cfg(innerq_avx512)]
+#[target_feature(enable = "avx512f")]
+pub unsafe fn pv_inner_chunk_avx512(
+    p: &[f32],
+    psum: f32,
+    chunk_codes: &[u8],
+    scales: &[f32],
+    zeffs: &[f32],
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let vpsum = _mm512_set1_ps(psum);
+    for g in 0..d_h / 32 {
+        let mut acc = [_mm512_setzero_ps(); 2];
+        for (t, &w) in p.iter().enumerate() {
+            let b = unpack32_ps_avx512(&chunk_codes[t * row_bytes + g * gbytes..], bits);
+            let vw = _mm512_set1_ps(w);
+            for (a, bj) in acc.iter_mut().zip(b) {
+                *a = _mm512_add_ps(*a, _mm512_mul_ps(vw, bj));
+            }
+        }
+        let sp = scales.as_ptr().add(g * 32);
+        let zp = zeffs.as_ptr().add(g * 32);
+        let op = out.as_mut_ptr().add(g * 32);
+        for (j, aj) in acc.into_iter().enumerate() {
+            let s = _mm512_loadu_ps(sp.add(16 * j));
+            let z = _mm512_loadu_ps(zp.add(16 * j));
+            let o = _mm512_loadu_ps(op.add(16 * j));
+            let r =
+                _mm512_add_ps(o, _mm512_add_ps(_mm512_mul_ps(s, aj), _mm512_mul_ps(z, vpsum)));
+            _mm512_storeu_ps(op.add(16 * j), r);
+        }
+    }
+}
+
+/// One block of `rows.len() <= 4` KIVI key rows, AVX-512. Halves accumulate
+/// sequentially per the outer reference.
+#[cfg(innerq_avx512)]
+#[target_feature(enable = "avx512f")]
+unsafe fn qk_outer_rows_avx512(
+    rows: &[&[u8]],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    gbytes: usize,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let nr = rows.len();
+    debug_assert!(nr <= 4 && out.len() == nr);
+    let mut acc = [_mm512_setzero_ps(); 4];
+    for g in 0..d_h / 32 {
+        let qp = qs_plane.as_ptr().add(g * 32);
+        let q_lo = _mm512_loadu_ps(qp);
+        let q_hi = _mm512_loadu_ps(qp.add(16));
+        for r in 0..nr {
+            let [b_lo, b_hi] = unpack32_ps_avx512(&rows[r][g * gbytes..], bits);
+            acc[r] = _mm512_add_ps(acc[r], _mm512_mul_ps(q_lo, b_lo));
+            acc[r] = _mm512_add_ps(acc[r], _mm512_mul_ps(q_hi, b_hi));
+        }
+    }
+    for r in 0..nr {
+        let mut lanes = [0f32; 16];
+        _mm512_storeu_ps(lanes.as_mut_ptr(), acc[r]);
+        out[r] = lanes.iter().sum::<f32>() + zacc;
+    }
+}
+
+/// AVX-512 arm of [`super::gemv_outer::qk_outer_chunk`].
+///
+/// # Safety
+/// Requires AVX-512F; the caller must have run `qk_outer_guards` and filled
+/// `qs_plane` for these arguments.
+#[cfg(innerq_avx512)]
+#[target_feature(enable = "avx512f")]
+pub unsafe fn qk_outer_chunk_avx512(
+    chunk_codes: &[u8],
+    qs_plane: &[f32],
+    zacc: f32,
+    bits: u8,
+    d_h: usize,
+    out: &mut [f32],
+) {
+    let n_rows = out.len();
+    let gbytes = packed_len(32, bits);
+    let row_bytes = (d_h / 32) * gbytes;
+    let mut j = 0usize;
+    while j + 4 <= n_rows {
+        let rows: [&[u8]; 4] =
+            std::array::from_fn(|r| &chunk_codes[(j + r) * row_bytes..(j + r + 1) * row_bytes]);
+        qk_outer_rows_avx512(&rows, qs_plane, zacc, bits, gbytes, d_h, &mut out[j..j + 4]);
+        j += 4;
+    }
+    while j < n_rows {
+        qk_outer_rows_avx512(
+            &[&chunk_codes[j * row_bytes..(j + 1) * row_bytes]],
+            qs_plane,
+            zacc,
+            bits,
+            gbytes,
+            d_h,
+            &mut out[j..j + 1],
+        );
+        j += 1;
+    }
+}

@@ -23,7 +23,6 @@
 
 pub mod util;
 pub mod cache;
-#[allow(missing_docs)]
 pub mod kernels;
 pub mod coordinator;
 pub mod eval;

@@ -4,21 +4,27 @@
 //! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
 //!                    [--budget BYTES] [--policy fifo|slo]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
-//!                    [--pipeline barrier|overlap]
+//!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
 //!                    [--prefix-share on|off] [--prefix-budget BYTES]
 //! innerq generate    --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
-//!                    [--pipeline barrier|overlap]
+//!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
 //! innerq serve-trace [--trace timed|multi-turn] [--sessions N]
 //!                    [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
 //!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
-//!                    [--pipeline barrier|overlap]
+//!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
 //!                    [--prefix-share on|off] [--prefix-budget BYTES]
 //!                    [--method M] [--interactive FRAC] [--deadline-ms D]
-//!                    [--json PATH] [--fake]
+//!                    [--cost-model PATH] [--json PATH] [--fake]
 //! innerq exp         table1|table2|table3|table7|fig5|msparsity|simulate|all
 //! innerq info        [--artifacts DIR]
 //! ```
+//!
+//! `--isa` pins the dispatch arm of the fused dequant-GEMV kernels (default
+//! `auto`: the widest arm the host supports — AVX-512/AVX2 on x86_64, NEON
+//! on aarch64). Every arm is bit-identical, so this only changes throughput;
+//! the `INNERQ_ISA` env var does the same for test binaries. An unsupported
+//! arm is an error listing what the host does support.
 //!
 //! `--workers N` sizes the decode-attention worker pool (default 1 = the
 //! serial baseline; the driver thread counts as one worker).
@@ -132,6 +138,18 @@ fn pipeline(args: &Args) -> Result<PipelineMode> {
         .ok_or_else(|| anyhow!("unknown pipeline mode '{name}'; one of: barrier, overlap"))
 }
 
+/// Apply `--isa` (kernel dispatch-arm override) and return the arm that is
+/// now active, for the startup banner. `--isa auto` (or no flag) keeps
+/// runtime detection / `INNERQ_ISA`.
+fn apply_isa(args: &Args) -> Result<innerq::kernels::dispatch::Isa> {
+    use innerq::kernels::dispatch;
+    if args.has("isa") {
+        let sel = dispatch::Isa::parse(&args.get("isa", "auto")).map_err(|e| anyhow!(e))?;
+        dispatch::set_active(sel).map_err(|e| anyhow!(e))?;
+    }
+    Ok(dispatch::active())
+}
+
 /// Apply the shared scheduling flags (`--policy`, `--preemption`,
 /// `--warm-budget`, `--pipeline`, `--prefix-share`, `--prefix-budget`) to a
 /// freshly built scheduler.
@@ -193,6 +211,7 @@ fn main() -> Result<()> {
     let args = parse_args();
     match args.cmd.as_str() {
         "serve" => {
+            let isa = apply_isa(&args)?;
             let manifest = load_manifest(&args)?;
             let m = method(&args)?;
             let workers: usize = args.get("workers", "1").parse()?;
@@ -205,7 +224,7 @@ fn main() -> Result<()> {
             let addr = args.get("addr", "127.0.0.1:7071");
             eprintln!(
                 "[serve] method={} addr={addr} workers={workers} policy={:?} preemption={} \
-                 pipeline={}",
+                 pipeline={} isa={isa}",
                 m.name(),
                 sched.policy(),
                 sched.preemption().name(),
@@ -219,6 +238,7 @@ fn main() -> Result<()> {
             )
         }
         "generate" => {
+            let isa = apply_isa(&args)?;
             let manifest = load_manifest(&args)?;
             let m = method(&args)?;
             let prompt = args.get("prompt", "a=13;b=88;?a=");
@@ -233,7 +253,7 @@ fn main() -> Result<()> {
             let c = &done[0];
             println!("{prompt}{}", c.text);
             eprintln!(
-                "[generate] method={} ttft={}us total={}us tokens={}",
+                "[generate] method={} isa={isa} ttft={}us total={}us tokens={}",
                 m.name(),
                 c.ttft_us,
                 c.total_us,
@@ -242,6 +262,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve-trace" => {
+            let isa = apply_isa(&args)?;
             let rate: f64 = args.get("rate", "200").parse()?;
             let arrival_name = args.get("arrival", "poisson");
             let arrival = Arrival::parse(&arrival_name, rate)
@@ -284,13 +305,20 @@ fn main() -> Result<()> {
             eprintln!(
                 "[serve-trace] trace={family} arrival={} rate={rate} requests={n_requests} \
                  budget={budget} policy={:?} preemption={} workers={workers} seed={seed} \
-                 prefix-share={}",
+                 prefix-share={} isa={isa}",
                 arrival.name(),
                 sched.policy(),
                 sched.preemption().name(),
                 if sched.prefix_share() { "on" } else { "off" }
             );
-            let report = replay(&mut sched, &trace, &CostModel::default())?;
+            // Replay cost coefficients: the built-in defaults, or a
+            // calibration file produced by ci/calibrate_cost_model.py from
+            // real bench numbers.
+            let cost = match args.get("cost-model", "").as_str() {
+                "" => CostModel::default(),
+                path => CostModel::load(path).map_err(|e| anyhow!("--cost-model {path}: {e}"))?,
+            };
+            let report = replay(&mut sched, &trace, &cost)?;
             if report.metrics.prefix_hits > 0 {
                 eprintln!(
                     "[serve-trace] prefix store: {} hits, {} KiB borrowed instead of requantized",
@@ -353,17 +381,18 @@ fn main() -> Result<()> {
                  \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
                  \n              --budget BYTES --policy fifo|slo\
                  \n              --preemption recompute|offload --warm-budget BYTES\
-                 \n              --pipeline barrier|overlap\
+                 \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
                  \n              --prefix-share on|off --prefix-budget BYTES\
                  \n  generate    --prompt S --method M --max-new N --workers N\
-                 \n              --pipeline barrier|overlap\
+                 \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
                  \n  serve-trace --trace timed|multi-turn --sessions N\
                  \n              --arrival poisson|bursty|ramp|batch --rate R --requests N\
                  \n              --seed S --budget BYTES --policy fifo|slo --workers N\
                  \n              --preemption recompute|offload --warm-budget BYTES\
-                 \n              --pipeline barrier|overlap\
+                 \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
                  \n              --prefix-share on|off --prefix-budget BYTES\
-                 \n              --interactive FRAC --deadline-ms D --json PATH --fake\
+                 \n              --interactive FRAC --deadline-ms D --cost-model PATH\
+                 \n              --json PATH --fake\
                  \n  exp         table1|table2|table3|table7|fig5|msparsity|simulate|all\
                  \n  info        --artifacts DIR\n\
                  \nmethods: {}",

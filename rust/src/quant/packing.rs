@@ -180,6 +180,412 @@ pub fn unpack32_f32(bytes: &[u8], bits: u8, out: &mut [f32; 32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Explicit SIMD variants of the 32-wide f32 unpackers.
+//
+// These are the per-ISA arms behind `kernels::dispatch`: same bitstream, same
+// output values, different extraction machinery. All of them are exact — the
+// integer extraction is identical to the scalar path and the int→f32 convert
+// is exact for codes < 16 — so kernels built on them stay bit-identical to
+// the scalar reference. The register-returning `unpack32_ps_*` forms are what
+// the SIMD GEMV kernels consume (codes go straight from packed bytes to
+// vector registers, no [f32; 32] bounce); the store forms mirror
+// `unpack32_b{2,3,4}_f32` for the parity tests and the unpacker benches.
+//
+// The 3-bit group (12 bytes) has no lane-aligned container: code `i` lives at
+// bit `3*i`, straddling byte boundaries. The SIMD arms load, per lane, the
+// u32 container at byte offset `B3_GOFF[i] = min(3*i/8, 8)` and shift right
+// by `B3_GSH[i] = 3*i - 8*B3_GOFF[i]`. Clamping the offset to 8 keeps every
+// 4-byte load inside the group's exact 12 bytes (the kernels hand out
+// exact-length trailing slices — asserted by
+// `unpackers_handle_exact_length_group_slices`), at the cost of shifts up to
+// 29 for the last eight codes (29 + 3 = 32, still within the container).
+// ---------------------------------------------------------------------------
+
+/// Per-code u32-container byte offsets for the SIMD 3-bit unpack (see the
+/// section comment above): `min(3*i/8, 8)`, so offset+4 never exceeds 12.
+#[allow(dead_code)] // only read by the cfg(target_arch)-gated SIMD modules
+pub(crate) const B3_GOFF: [i32; 32] = [
+    0, 0, 0, 1, 1, 1, 2, 2, 3, 3, 3, 4, 4, 4, 5, 5, 6, 6, 6, 7, 7, 7, 8, 8, 8, 8, 8, 8, 8, 8, 8,
+    8,
+];
+/// Right-shift of code `i` within its clamped container: `3*i - 8*B3_GOFF[i]`
+/// (max 29, so the 3 payload bits always fit the u32).
+#[allow(dead_code)]
+pub(crate) const B3_GSH: [i32; 32] = [
+    0, 3, 6, 1, 4, 7, 2, 5, 0, 3, 6, 1, 4, 7, 2, 5, 0, 3, 6, 1, 4, 7, 2, 5, 8, 11, 14, 17, 20,
+    23, 26, 29,
+];
+
+/// x86_64 SIMD unpacker arms (AVX2 always compiled on x86_64; AVX-512 only
+/// when the toolchain has stable AVX-512 intrinsics — `innerq_avx512` cfg
+/// from `build.rs`). Callers must have verified the CPU feature (see
+/// [`crate::kernels::dispatch`]) and that `bytes` covers the packed group.
+#[cfg(target_arch = "x86_64")]
+pub mod x86 {
+    use super::{unpack32_f32, B3_GOFF, B3_GSH};
+    use std::arch::x86_64::*;
+
+    /// Unpack one 32-code group straight into four 8-lane f32 vectors
+    /// (lanes `8k..8k+8` in `out[k]`), AVX2.
+    ///
+    /// * b2 (8 bytes): the two u32 words each hold 16 codes; broadcast +
+    ///   per-lane `vpsrlvd` + mask, one word per two output vectors.
+    /// * b3 (12 bytes): per-lane u32 gather at the clamped [`B3_GOFF`]
+    ///   offsets, then `vpsrlvd` by [`B3_GSH`].
+    /// * b4 (16 bytes): four u32 words of 8 codes each; broadcast + shift.
+    /// * other widths: scalar fallback through [`unpack32_f32`].
+    ///
+    /// # Safety
+    /// Requires AVX2 and `bytes.len() >= packed_len(32, bits)`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack32_ps_avx2(bytes: &[u8], bits: u8) -> [__m256; 4] {
+        match bits {
+            2 => {
+                debug_assert!(bytes.len() >= 8);
+                let w0 = _mm256_set1_epi32(u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as i32);
+                let w1 = _mm256_set1_epi32(u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as i32);
+                let sh_lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                let sh_hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+                let m = _mm256_set1_epi32(0x3);
+                [
+                    _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(w0, sh_lo), m)),
+                    _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(w0, sh_hi), m)),
+                    _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(w1, sh_lo), m)),
+                    _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(w1, sh_hi), m)),
+                ]
+            }
+            3 => {
+                debug_assert!(bytes.len() >= 12);
+                let base = bytes.as_ptr() as *const i32;
+                let m = _mm256_set1_epi32(0x7);
+                let mut out = [_mm256_setzero_ps(); 4];
+                for (k, o) in out.iter_mut().enumerate() {
+                    let off =
+                        _mm256_loadu_si256(B3_GOFF.as_ptr().add(8 * k) as *const __m256i);
+                    let sh = _mm256_loadu_si256(B3_GSH.as_ptr().add(8 * k) as *const __m256i);
+                    let g = _mm256_i32gather_epi32::<1>(base, off);
+                    *o = _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(g, sh), m));
+                }
+                out
+            }
+            4 => {
+                debug_assert!(bytes.len() >= 16);
+                let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                let m = _mm256_set1_epi32(0xf);
+                let mut out = [_mm256_setzero_ps(); 4];
+                for (k, o) in out.iter_mut().enumerate() {
+                    let w = _mm256_set1_epi32(
+                        u32::from_le_bytes(bytes[4 * k..4 * k + 4].try_into().unwrap()) as i32,
+                    );
+                    *o = _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(w, sh), m));
+                }
+                out
+            }
+            _ => {
+                let mut buf = [0f32; 32];
+                unpack32_f32(bytes, bits, &mut buf);
+                [
+                    _mm256_loadu_ps(buf.as_ptr()),
+                    _mm256_loadu_ps(buf.as_ptr().add(8)),
+                    _mm256_loadu_ps(buf.as_ptr().add(16)),
+                    _mm256_loadu_ps(buf.as_ptr().add(24)),
+                ]
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn store4(v: [__m256; 4], out: &mut [f32; 32]) {
+        for (k, vk) in v.into_iter().enumerate() {
+            _mm256_storeu_ps(out.as_mut_ptr().add(8 * k), vk);
+        }
+    }
+
+    /// AVX2 arm of [`super::unpack32_b2_f32`] (store form, for parity tests
+    /// and benches).
+    ///
+    /// # Safety
+    /// Requires AVX2 and `bytes.len() >= 8`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack32_b2_f32_avx2(bytes: &[u8], out: &mut [f32; 32]) {
+        store4(unpack32_ps_avx2(bytes, 2), out);
+    }
+
+    /// AVX2 arm of [`super::unpack32_b3_f32`].
+    ///
+    /// # Safety
+    /// Requires AVX2 and `bytes.len() >= 12`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack32_b3_f32_avx2(bytes: &[u8], out: &mut [f32; 32]) {
+        store4(unpack32_ps_avx2(bytes, 3), out);
+    }
+
+    /// AVX2 arm of [`super::unpack32_b4_f32`].
+    ///
+    /// # Safety
+    /// Requires AVX2 and `bytes.len() >= 16`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack32_b4_f32_avx2(bytes: &[u8], out: &mut [f32; 32]) {
+        store4(unpack32_ps_avx2(bytes, 4), out);
+    }
+
+    /// Unpack one 32-code group into two 16-lane f32 vectors (lanes
+    /// `16k..16k+16` in `out[k]`), AVX-512F. Same extraction schemes as the
+    /// AVX2 arm at twice the width; b4 selects its per-lane u32 word with
+    /// `vpermd` over the broadcast 16-byte group instead of two broadcasts.
+    ///
+    /// # Safety
+    /// Requires AVX-512F and `bytes.len() >= packed_len(32, bits)`.
+    #[cfg(innerq_avx512)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn unpack32_ps_avx512(bytes: &[u8], bits: u8) -> [__m512; 2] {
+        match bits {
+            2 => {
+                debug_assert!(bytes.len() >= 8);
+                let w0 = _mm512_set1_epi32(u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as i32);
+                let w1 = _mm512_set1_epi32(u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as i32);
+                let sh = _mm512_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14, 16, 18, 20, 22, 24, 26, 28, 30);
+                let m = _mm512_set1_epi32(0x3);
+                [
+                    _mm512_cvtepi32_ps(_mm512_and_epi32(_mm512_srlv_epi32(w0, sh), m)),
+                    _mm512_cvtepi32_ps(_mm512_and_epi32(_mm512_srlv_epi32(w1, sh), m)),
+                ]
+            }
+            3 => {
+                debug_assert!(bytes.len() >= 12);
+                let m = _mm512_set1_epi32(0x7);
+                let mut out = [_mm512_setzero_ps(); 2];
+                for (k, o) in out.iter_mut().enumerate() {
+                    let off = _mm512_loadu_epi32(B3_GOFF.as_ptr().add(16 * k));
+                    let sh = _mm512_loadu_epi32(B3_GSH.as_ptr().add(16 * k));
+                    let g = _mm512_i32gather_epi32::<1>(off, bytes.as_ptr());
+                    *o = _mm512_cvtepi32_ps(_mm512_and_epi32(_mm512_srlv_epi32(g, sh), m));
+                }
+                out
+            }
+            4 => {
+                debug_assert!(bytes.len() >= 16);
+                let grp = _mm512_broadcast_i32x4(_mm_loadu_si128(bytes.as_ptr() as *const __m128i));
+                let idx_lo = _mm512_setr_epi32(0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1, 1, 1);
+                let idx_hi = _mm512_setr_epi32(2, 2, 2, 2, 2, 2, 2, 2, 3, 3, 3, 3, 3, 3, 3, 3);
+                let sh = _mm512_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28, 0, 4, 8, 12, 16, 20, 24, 28);
+                let m = _mm512_set1_epi32(0xf);
+                [
+                    _mm512_cvtepi32_ps(_mm512_and_epi32(
+                        _mm512_srlv_epi32(_mm512_permutexvar_epi32(idx_lo, grp), sh),
+                        m,
+                    )),
+                    _mm512_cvtepi32_ps(_mm512_and_epi32(
+                        _mm512_srlv_epi32(_mm512_permutexvar_epi32(idx_hi, grp), sh),
+                        m,
+                    )),
+                ]
+            }
+            _ => {
+                let mut buf = [0f32; 32];
+                unpack32_f32(bytes, bits, &mut buf);
+                [_mm512_loadu_ps(buf.as_ptr()), _mm512_loadu_ps(buf.as_ptr().add(16))]
+            }
+        }
+    }
+
+    #[cfg(innerq_avx512)]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn store2(v: [__m512; 2], out: &mut [f32; 32]) {
+        _mm512_storeu_ps(out.as_mut_ptr(), v[0]);
+        _mm512_storeu_ps(out.as_mut_ptr().add(16), v[1]);
+    }
+
+    /// AVX-512 arm of [`super::unpack32_b2_f32`].
+    ///
+    /// # Safety
+    /// Requires AVX-512F and `bytes.len() >= 8`.
+    #[cfg(innerq_avx512)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn unpack32_b2_f32_avx512(bytes: &[u8], out: &mut [f32; 32]) {
+        store2(unpack32_ps_avx512(bytes, 2), out);
+    }
+
+    /// AVX-512 arm of [`super::unpack32_b3_f32`].
+    ///
+    /// # Safety
+    /// Requires AVX-512F and `bytes.len() >= 12`.
+    #[cfg(innerq_avx512)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn unpack32_b3_f32_avx512(bytes: &[u8], out: &mut [f32; 32]) {
+        store2(unpack32_ps_avx512(bytes, 3), out);
+    }
+
+    /// AVX-512 arm of [`super::unpack32_b4_f32`].
+    ///
+    /// # Safety
+    /// Requires AVX-512F and `bytes.len() >= 16`.
+    #[cfg(innerq_avx512)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn unpack32_b4_f32_avx512(bytes: &[u8], out: &mut [f32; 32]) {
+        store2(unpack32_ps_avx512(bytes, 4), out);
+    }
+}
+
+/// aarch64 NEON unpacker arms. NEON has no per-lane gather, so the 3-bit arm
+/// extracts its clamped u32 containers with scalar loads and vectorizes only
+/// the mask + convert; the 2/4-bit arms are full-width `vshl`-by-negative
+/// (i.e. per-lane right shift) on broadcast words.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use super::{unpack32_f32, B3_GOFF, B3_GSH};
+    use std::arch::aarch64::*;
+
+    /// Per-4-lane negative shift vectors (vshl by a negative count is a
+    /// right shift) for the 2-bit arm: lane `4k+j` shifts by `8k + 2j`
+    /// within its 16-code u32 word.
+    const NSH2: [[i32; 4]; 4] = [
+        [0, -2, -4, -6],
+        [-8, -10, -12, -14],
+        [-16, -18, -20, -22],
+        [-24, -26, -28, -30],
+    ];
+    /// Negative shifts for the 4-bit arm: lane `4k+j` shifts by
+    /// `16*(k%2) + 4j` within its 8-code u32 word.
+    const NSH4: [[i32; 4]; 2] = [[0, -4, -8, -12], [-16, -20, -24, -28]];
+
+    /// Unpack one 32-code group into eight 4-lane f32 vectors (lanes
+    /// `4k..4k+4` in `out[k]`), NEON.
+    ///
+    /// # Safety
+    /// Requires NEON and `bytes.len() >= packed_len(32, bits)`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack32_ps_neon(bytes: &[u8], bits: u8) -> [float32x4_t; 8] {
+        let mut out = [vdupq_n_f32(0.0); 8];
+        match bits {
+            2 => {
+                debug_assert!(bytes.len() >= 8);
+                let w = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+                let lo = vdupq_n_u32(w as u32);
+                let hi = vdupq_n_u32((w >> 32) as u32);
+                let m = vdupq_n_u32(0x3);
+                for k in 0..4 {
+                    let sh = vld1q_s32(NSH2[k].as_ptr());
+                    out[k] = vcvtq_f32_u32(vandq_u32(vshlq_u32(lo, sh), m));
+                    out[k + 4] = vcvtq_f32_u32(vandq_u32(vshlq_u32(hi, sh), m));
+                }
+            }
+            3 => {
+                debug_assert!(bytes.len() >= 12);
+                for (k, o) in out.iter_mut().enumerate() {
+                    let mut lanes = [0u32; 4];
+                    for (j, l) in lanes.iter_mut().enumerate() {
+                        let i = 4 * k + j;
+                        let c = B3_GOFF[i] as usize;
+                        let w = u32::from_le_bytes(bytes[c..c + 4].try_into().unwrap());
+                        *l = (w >> B3_GSH[i]) & 0x7;
+                    }
+                    *o = vcvtq_f32_u32(vld1q_u32(lanes.as_ptr()));
+                }
+            }
+            4 => {
+                debug_assert!(bytes.len() >= 16);
+                let m = vdupq_n_u32(0xf);
+                for (k, o) in out.iter_mut().enumerate() {
+                    let w = u32::from_le_bytes(bytes[4 * (k / 2)..4 * (k / 2) + 4].try_into().unwrap());
+                    let sh = vld1q_s32(NSH4[k % 2].as_ptr());
+                    *o = vcvtq_f32_u32(vandq_u32(vshlq_u32(vdupq_n_u32(w), sh), m));
+                }
+            }
+            _ => {
+                let mut buf = [0f32; 32];
+                unpack32_f32(bytes, bits, &mut buf);
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = vld1q_f32(buf.as_ptr().add(4 * k));
+                }
+            }
+        }
+        out
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn store8(v: [float32x4_t; 8], out: &mut [f32; 32]) {
+        for (k, vk) in v.into_iter().enumerate() {
+            vst1q_f32(out.as_mut_ptr().add(4 * k), vk);
+        }
+    }
+
+    /// NEON arm of [`super::unpack32_b2_f32`].
+    ///
+    /// # Safety
+    /// Requires NEON and `bytes.len() >= 8`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack32_b2_f32_neon(bytes: &[u8], out: &mut [f32; 32]) {
+        store8(unpack32_ps_neon(bytes, 2), out);
+    }
+
+    /// NEON arm of [`super::unpack32_b3_f32`].
+    ///
+    /// # Safety
+    /// Requires NEON and `bytes.len() >= 12`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack32_b3_f32_neon(bytes: &[u8], out: &mut [f32; 32]) {
+        store8(unpack32_ps_neon(bytes, 3), out);
+    }
+
+    /// NEON arm of [`super::unpack32_b4_f32`].
+    ///
+    /// # Safety
+    /// Requires NEON and `bytes.len() >= 16`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack32_b4_f32_neon(bytes: &[u8], out: &mut [f32; 32]) {
+        store8(unpack32_ps_neon(bytes, 4), out);
+    }
+}
+
+/// Dispatch-arm store-form f32 unpack: the `isa`-selected variant of
+/// [`unpack32_f32`]. This is the enumeration surface the parity tests and
+/// the unpacker bench walk; the SIMD GEMV kernels call the
+/// register-returning forms directly.
+///
+/// Falls back to the scalar path when the requested arm is not compiled for
+/// this target (the dispatch layer never *selects* such an arm; this keeps
+/// the function total for test harnesses that enumerate `Isa::ALL`).
+///
+/// # Panics
+/// Panics if `isa` names an arm the host CPU cannot execute (same contract
+/// as the kernel `*_with_isa` entry points).
+pub fn unpack32_f32_isa(isa: crate::kernels::dispatch::Isa, bytes: &[u8], bits: u8, out: &mut [f32; 32]) {
+    use crate::kernels::dispatch::{is_supported, Isa};
+    assert!(is_supported(isa), "ISA '{isa}' not supported on this host/build");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            match bits {
+                2 => x86::unpack32_b2_f32_avx2(bytes, out),
+                3 => x86::unpack32_b3_f32_avx2(bytes, out),
+                4 => x86::unpack32_b4_f32_avx2(bytes, out),
+                _ => unpack32_f32(bytes, bits, out),
+            }
+        },
+        #[cfg(all(target_arch = "x86_64", innerq_avx512))]
+        Isa::Avx512 => unsafe {
+            match bits {
+                2 => x86::unpack32_b2_f32_avx512(bytes, out),
+                3 => x86::unpack32_b3_f32_avx512(bytes, out),
+                4 => x86::unpack32_b4_f32_avx512(bytes, out),
+                _ => unpack32_f32(bytes, bits, out),
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            match bits {
+                2 => neon::unpack32_b2_f32_neon(bytes, out),
+                3 => neon::unpack32_b3_f32_neon(bytes, out),
+                4 => neon::unpack32_b4_f32_neon(bytes, out),
+                _ => unpack32_f32(bytes, bits, out),
+            }
+        },
+        _ => unpack32_f32(bytes, bits, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

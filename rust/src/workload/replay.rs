@@ -72,6 +72,46 @@ impl Default for CostModel {
 }
 
 impl CostModel {
+    /// Build a cost model from a JSON object whose keys are the coefficient
+    /// field names (`tick_overhead_us`, `prefill_us_per_token`,
+    /// `decode_step_us`, `decode_us_per_seq`, `offload_us_per_kib`,
+    /// `restore_us_per_kib`, `prefix_saving_us_per_kib`). Missing keys keep
+    /// their [`Default`] value, so a calibration file may override only the
+    /// coefficients it actually measured; unknown keys are rejected so a
+    /// typo'd coefficient name fails loudly instead of silently keeping the
+    /// default.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let obj = v.as_obj().ok_or("cost model must be a JSON object")?;
+        let mut m = CostModel::default();
+        for (k, val) in obj {
+            let n = val
+                .as_f64()
+                .ok_or_else(|| format!("coefficient '{k}' must be a number"))?;
+            if !(n.is_finite() && n >= 0.0) {
+                return Err(format!("coefficient '{k}' must be a non-negative number"));
+            }
+            let n = n as u64;
+            match k.as_str() {
+                "tick_overhead_us" => m.tick_overhead_us = n,
+                "prefill_us_per_token" => m.prefill_us_per_token = n,
+                "decode_step_us" => m.decode_step_us = n,
+                "decode_us_per_seq" => m.decode_us_per_seq = n,
+                "offload_us_per_kib" => m.offload_us_per_kib = n,
+                "restore_us_per_kib" => m.restore_us_per_kib = n,
+                "prefix_saving_us_per_kib" => m.prefix_saving_us_per_kib = n,
+                other => return Err(format!("unknown cost-model coefficient '{other}'")),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Load a cost model from a JSON file (e.g. one produced by
+    /// `ci/calibrate_cost_model.py` from real bench numbers).
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
     /// Virtual microseconds consumed by a tick with the given deltas.
     fn tick_cost(
         &self,
@@ -499,4 +539,33 @@ pub fn replay(
     }
     sched.record_events(false);
     Ok(ReplayReport { records, ticks, end_us: last_terminal_us, metrics: sched.metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_from_json_overrides_only_named_coefficients() {
+        let v = Json::parse(r#"{"decode_step_us": 250, "tick_overhead_us": 7}"#).unwrap();
+        let m = CostModel::from_json(&v).unwrap();
+        let d = CostModel::default();
+        assert_eq!(m.decode_step_us, 250);
+        assert_eq!(m.tick_overhead_us, 7);
+        assert_eq!(m.prefill_us_per_token, d.prefill_us_per_token);
+        assert_eq!(m.prefix_saving_us_per_kib, d.prefix_saving_us_per_kib);
+    }
+
+    #[test]
+    fn cost_model_from_json_rejects_bad_input() {
+        for src in [
+            r#"{"decode_step_usx": 1}"#, // typo'd key
+            r#"{"decode_step_us": "fast"}"#,
+            r#"{"decode_step_us": -1}"#,
+            r#"[1,2,3]"#,
+        ] {
+            let v = Json::parse(src).unwrap();
+            assert!(CostModel::from_json(&v).is_err(), "accepted: {src}");
+        }
+    }
 }

@@ -12,6 +12,9 @@
 //!   evicted (quantized middle from the tier, windows recomputed from a
 //!   prefill pass) must be bit-identical to a never-offloaded twin, and
 //!   keep decoding bit-identically.
+//! * The whole session must be byte-identical under every kernel dispatch
+//!   arm the host supports (scalar vs AVX2/AVX-512/NEON) — ISA selection
+//!   is a throughput choice, never an output change.
 
 use innerq::cache::store::{
     prefix_base_hash, restore_sequence_frames, restore_sequence_frames_with, snapshot_sequence,
@@ -120,6 +123,49 @@ fn overlap_decode_is_byte_identical_to_barrier_across_the_matrix() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Cross-ISA leg of the byte-identity contract: the same pipeline session —
+/// logits bit patterns and serialized cache bytes — must be byte-identical
+/// under every kernel dispatch arm the host supports. This is the in-process
+/// equivalent of CI's `INNERQ_ISA=scalar` second test pass, pinning each arm
+/// via `dispatch::set_active` instead of the environment.
+#[test]
+fn decode_pipeline_is_byte_identical_across_dispatch_arms() {
+    use innerq::kernels::dispatch::{self, Isa};
+
+    // Restore auto-detection even if an assert below panics, so a failure
+    // here cannot leave the whole test process pinned to one arm.
+    struct Unpin;
+    impl Drop for Unpin {
+        fn drop(&mut self) {
+            let _ = dispatch::set_active(None);
+        }
+    }
+    let _unpin = Unpin;
+
+    for grouping in [Grouping::Inner, Grouping::Outer] {
+        let cfg = small_window_cfg(grouping, Mode::Hybrid);
+        dispatch::set_active(Some(Isa::Scalar)).expect("scalar always pins");
+        let tag = format!("pipe_isa_{grouping:?}_scalar");
+        let reference = run_session(&engine_for(&tag, cfg, PipelineMode::Overlap, 2));
+        for isa in dispatch::supported() {
+            if isa == Isa::Scalar {
+                continue;
+            }
+            dispatch::set_active(Some(isa)).expect("supported arm pins");
+            let tag = format!("pipe_isa_{grouping:?}_{isa}");
+            let got = run_session(&engine_for(&tag, cfg, PipelineMode::Overlap, 2));
+            assert_eq!(
+                got.0, reference.0,
+                "{grouping:?} {isa}: logits diverged from the scalar arm"
+            );
+            assert_eq!(
+                got.1, reference.1,
+                "{grouping:?} {isa}: cache bytes diverged from the scalar arm"
+            );
         }
     }
 }

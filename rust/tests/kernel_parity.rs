@@ -1,17 +1,25 @@
 //! Parity matrix for the blocked SIMD-friendly kernels and the specialized
-//! unpackers (ISSUE 2 acceptance): the blocked `qk_inner` / `pv_inner_chunk`
-//! must be **bit-identical** to the retained scalar references across
-//! bits ∈ {2,3,4}, d_h ∈ {32, 64, 128, 2176 (heap-qsum path)}, all group
-//! modes (sym/asym/hybrid), and non-multiple-of-4 row counts; the blocked
-//! outer (KIVI) key kernel `qk_outer_chunk` must match its retained scalar
-//! reference the same way, including partial-chunk tails; the f32 fast
-//! unpackers must agree exactly with the generic bit-loop unpacker.
+//! unpackers: **every supported dispatch arm** (scalar plus AVX2/AVX-512/
+//! NEON where the host has them) of `qk_inner` / `pv_inner_chunk` /
+//! `qk_outer_chunk` must be **bit-identical** to the retained scalar
+//! references across bits ∈ {2,3,4}, d_h ∈ {32, 64, 128, 2176 (heap-qsum
+//! path)}, all group modes (sym/asym/hybrid), and non-multiple-of-4 row
+//! counts / partial-chunk tails — including misaligned code-slice starts
+//! (SIMD loads must not assume alignment). The dispatched entry points
+//! (whatever `--isa`/`INNERQ_ISA`/detection picked — CI runs this suite
+//! under both the native and the forced-scalar arm) are covered by the
+//! same matrix, and the per-arm f32 unpackers must agree exactly with the
+//! generic bit-loop unpacker.
 
-use innerq::kernels::gemv_inner::{pv_inner_chunk, pv_inner_chunk_ref, qk_inner, qk_inner_ref};
-use innerq::kernels::gemv_outer::{qk_outer_chunk, qk_outer_chunk_ref};
+use innerq::kernels::dispatch;
+use innerq::kernels::gemv_inner::{
+    pv_inner_chunk, pv_inner_chunk_ref, pv_inner_chunk_with_isa, qk_inner, qk_inner_ref,
+    qk_inner_with_isa,
+};
+use innerq::kernels::gemv_outer::{qk_outer_chunk, qk_outer_chunk_ref, qk_outer_chunk_with_isa};
 use innerq::kernels::zeff_planes;
 use innerq::quant::group::{quantize, Mode};
-use innerq::quant::packing::{pack, packed_len, unpack, unpack32, unpack32_f32};
+use innerq::quant::packing::{pack, packed_len, unpack, unpack32, unpack32_f32, unpack32_f32_isa};
 use innerq::quant::GroupParams;
 use innerq::util::ptest::normal_vec;
 use innerq::util::rng::Rng;
@@ -56,6 +64,16 @@ fn build_val_chunk(vals: &[f32], d_h: usize, bits: u8, mode: Mode) -> (Vec<u8>, 
 
 const MODES: [Mode; 3] = [Mode::Sym, Mode::Asym, Mode::Hybrid];
 
+/// Copy `codes` behind `pad` junk bytes so the returned offset slice starts
+/// at a deliberately misaligned address — the SIMD arms use unaligned loads
+/// and must not care. (An odd offset into any allocation is misaligned for
+/// every vector width.)
+fn misaligned(codes: &[u8], pad: usize) -> Vec<u8> {
+    let mut padded = vec![0xA5u8; pad];
+    padded.extend_from_slice(codes);
+    padded
+}
+
 #[test]
 fn qk_blocked_bit_identical_across_full_matrix() {
     let mut rng = Rng::new(0xB10C);
@@ -85,6 +103,44 @@ fn qk_blocked_bit_identical_across_full_matrix() {
                             "d_h={d_h} bits={bits} {mode:?} n={n} row {j}: {a} vs {b}"
                         );
                     }
+                    // Every dispatch arm the host supports, against the same
+                    // reference — and, at the common geometry, from
+                    // misaligned code-slice starts.
+                    for isa in dispatch::supported() {
+                        let mut arm = vec![0f32; n];
+                        qk_inner_with_isa(isa, &q, &codes, &sc, &ze, bits, d_h, &mut arm);
+                        for (j, (a, b)) in arm.iter().zip(&refr).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{isa} d_h={d_h} bits={bits} {mode:?} n={n} row {j}: {a} vs {b}"
+                            );
+                        }
+                        if d_h == 128 {
+                            for pad in [1usize, 3] {
+                                let padded = misaligned(&codes, pad);
+                                let mut arm = vec![0f32; n];
+                                qk_inner_with_isa(
+                                    isa,
+                                    &q,
+                                    &padded[pad..],
+                                    &sc,
+                                    &ze,
+                                    bits,
+                                    d_h,
+                                    &mut arm,
+                                );
+                                for (j, (a, b)) in arm.iter().zip(&refr).enumerate() {
+                                    assert_eq!(
+                                        a.to_bits(),
+                                        b.to_bits(),
+                                        "{isa} misaligned(+{pad}) d_h={d_h} bits={bits} \
+                                         {mode:?} n={n} row {j}: {a} vs {b}"
+                                    );
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -104,7 +160,7 @@ fn pv_blocked_bit_identical_across_full_matrix() {
                 // Accumulate on top of a non-zero context, like attend does.
                 let init = normal_vec(&mut rng, d_h, 0.5, 0.0);
                 let mut fast = init.clone();
-                let mut refr = init;
+                let mut refr = init.clone();
                 pv_inner_chunk(&p, &codes, &sc, &ze, bits, d_h, &mut fast);
                 pv_inner_chunk_ref(&p, &codes, &sc, &ze, bits, d_h, &mut refr);
                 for (c, (a, b)) in fast.iter().zip(&refr).enumerate() {
@@ -113,6 +169,41 @@ fn pv_blocked_bit_identical_across_full_matrix() {
                         b.to_bits(),
                         "d_h={d_h} bits={bits} {mode:?} channel {c}: {a} vs {b}"
                     );
+                }
+                for isa in dispatch::supported() {
+                    let mut arm = init.clone();
+                    pv_inner_chunk_with_isa(isa, &p, &codes, &sc, &ze, bits, d_h, &mut arm);
+                    for (c, (a, b)) in arm.iter().zip(&refr).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{isa} d_h={d_h} bits={bits} {mode:?} channel {c}: {a} vs {b}"
+                        );
+                    }
+                    if d_h == 128 {
+                        for pad in [1usize, 3] {
+                            let padded = misaligned(&codes, pad);
+                            let mut arm = init.clone();
+                            pv_inner_chunk_with_isa(
+                                isa,
+                                &p,
+                                &padded[pad..],
+                                &sc,
+                                &ze,
+                                bits,
+                                d_h,
+                                &mut arm,
+                            );
+                            for (c, (a, b)) in arm.iter().zip(&refr).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{isa} misaligned(+{pad}) d_h={d_h} bits={bits} \
+                                     {mode:?} channel {c}: {a} vs {b}"
+                                );
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -175,6 +266,54 @@ fn qk_outer_blocked_bit_identical_across_full_matrix() {
                             "d_h={d_h} bits={bits} {mode:?} n={n} row {j}: {a} vs {b}"
                         );
                     }
+                    for isa in dispatch::supported() {
+                        let mut arm = vec![0f32; n];
+                        qk_outer_chunk_with_isa(
+                            isa,
+                            &q,
+                            &codes,
+                            &sc,
+                            &ze,
+                            bits,
+                            d_h,
+                            &mut scratch_a,
+                            &mut arm,
+                        );
+                        for (j, (a, b)) in arm.iter().zip(&refr).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{isa} d_h={d_h} bits={bits} {mode:?} n={n} row {j}: {a} vs {b}"
+                            );
+                        }
+                        if d_h == 128 && n == 13 {
+                            // One misaligned pass per arm at the partial-tail
+                            // geometry (odd n exercises the 1-row tail too).
+                            for pad in [1usize, 3] {
+                                let padded = misaligned(&codes, pad);
+                                let mut arm = vec![0f32; n];
+                                qk_outer_chunk_with_isa(
+                                    isa,
+                                    &q,
+                                    &padded[pad..],
+                                    &sc,
+                                    &ze,
+                                    bits,
+                                    d_h,
+                                    &mut scratch_a,
+                                    &mut arm,
+                                );
+                                for (j, (a, b)) in arm.iter().zip(&refr).enumerate() {
+                                    assert_eq!(
+                                        a.to_bits(),
+                                        b.to_bits(),
+                                        "{isa} misaligned(+{pad}) d_h={d_h} bits={bits} \
+                                         {mode:?} n={n} row {j}: {a} vs {b}"
+                                    );
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -224,6 +363,79 @@ fn unpackers_handle_exact_length_group_slices() {
         unpack32_f32(exact, bits, &mut out);
         for i in 0..32 {
             assert_eq!(out[i], codes[i] as f32, "bits={bits} i={i}");
+        }
+    }
+}
+
+#[test]
+fn isa_unpackers_match_scalar_across_arms() {
+    // The per-arm unpackers (AVX2/AVX-512 srlv+gather, NEON vshl) must agree
+    // exactly with the scalar fast path — from exact-length group slices
+    // (no slack bytes after the group: the b3 clamped-container scheme
+    // exists precisely so the 4-byte loads never read past them) and from
+    // misaligned slice starts.
+    let mut rng = Rng::new(0xB111);
+    for isa in dispatch::supported() {
+        for bits in [2u8, 3, 4] {
+            for _ in 0..200 {
+                let codes: Vec<u8> =
+                    (0..32).map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u8).collect();
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                let exact = &packed[..packed_len(32, bits)];
+                let mut out = [0f32; 32];
+                unpack32_f32_isa(isa, exact, bits, &mut out);
+                for i in 0..32 {
+                    assert_eq!(out[i], codes[i] as f32, "{isa} bits={bits} i={i}");
+                }
+                for pad in [1usize, 3] {
+                    let padded = misaligned(exact, pad);
+                    let mut out = [0f32; 32];
+                    unpack32_f32_isa(isa, &padded[pad..], bits, &mut out);
+                    for i in 0..32 {
+                        assert_eq!(
+                            out[i], codes[i] as f32,
+                            "{isa} misaligned(+{pad}) bits={bits} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_arm_switching_is_consistent_with_explicit_dispatch() {
+    // Pinning an arm via dispatch::set_active must make the public
+    // dispatched entry points behave exactly like the explicit `*_with_isa`
+    // calls — this is the in-process equivalent of the INNERQ_ISA override
+    // CI uses for the forced-scalar test pass. Serialized against nothing:
+    // this is the only test in the binary that mutates the global arm, and
+    // it restores auto-detection before returning (even on panic the
+    // process dies anyway).
+    let mut rng = Rng::new(0xB112);
+    let d_h = 128;
+    let n = 7;
+    let q = normal_vec(&mut rng, d_h, 1.0, 0.0);
+    let keys = normal_vec(&mut rng, n * d_h, 1.0, 0.1);
+    for isa in dispatch::supported() {
+        for bits in [2u8, 3, 4] {
+            let (codes, params) = build_key_rows(&keys, d_h, bits, Mode::Hybrid);
+            let (sc, ze) = zeff_planes(&params, bits);
+            let mut explicit = vec![0f32; n];
+            qk_inner_with_isa(isa, &q, &codes, &sc, &ze, bits, d_h, &mut explicit);
+            dispatch::set_active(Some(isa)).expect("supported arm must pin");
+            assert_eq!(dispatch::active(), isa);
+            let mut dispatched = vec![0f32; n];
+            qk_inner(&q, &codes, &sc, &ze, bits, d_h, &mut dispatched);
+            dispatch::set_active(None).expect("clearing the pin never fails");
+            for (j, (a, b)) in dispatched.iter().zip(&explicit).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "pinned {isa} bits={bits} row {j}: {a} vs {b}"
+                );
+            }
         }
     }
 }
