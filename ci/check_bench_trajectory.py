@@ -5,8 +5,9 @@ Compares a freshly emitted bench JSON (BENCH_kernels.json from
 `cargo bench --bench kernel_throughput`, BENCH_overload.json from
 `cargo bench --bench overload_tail`, BENCH_offload.json from
 `cargo bench --bench offload_vs_recompute`, BENCH_decode.json from
-`cargo bench --bench decode_scaling`, or BENCH_prefix.json from
-`cargo bench --bench prefix_sharing`) against a committed baseline
+`cargo bench --bench decode_scaling`, BENCH_prefix.json from
+`cargo bench --bench prefix_sharing`, or BENCH_server.json from
+`cargo bench --bench server_loadgen`) against a committed baseline
 snapshot and fails when throughput regresses by more than the threshold —
 so CI catches "still bit-exact but 2x slower" changes, not just bit
 mismatches.
@@ -35,7 +36,12 @@ Cells are keyed per bench type:
     (wall-clock; barrier-vs-overlap x worker-count x batch sweep);
   * prefix_sharing:       (family, method, prefix_share, budget_bytes),
     metric throughput_rps (virtual-clock, deterministic — multi-turn vs
-    single-turn trace families with the CoW prefix store on/off).
+    single-turn trace families with the CoW prefix store on/off);
+  * server_loadgen:       (method, io_workers, rate_rps), metric
+    throughput_rps (wall-clock over real sockets through the staged server
+    front end — arrival-paced, so the generous threshold absorbs runner
+    noise; byte-identity vs the replay oracle is asserted in the bench
+    itself before any timing is emitted).
 """
 
 import argparse
@@ -72,6 +78,9 @@ def cells(doc):
             metric = "tokens_per_s"
         elif bench == "prefix_sharing":
             key = (r["family"], r["method"], r["prefix_share"], r["budget_bytes"])
+            metric = "throughput_rps"
+        elif bench == "server_loadgen":
+            key = (r["method"], r["io_workers"], r["rate_rps"])
             metric = "throughput_rps"
         else:
             continue

@@ -39,6 +39,7 @@ KNOWN_BENCHES = {
     "offload_vs_recompute",
     "decode_scaling",
     "prefix_sharing",
+    "server_loadgen",
 }
 
 

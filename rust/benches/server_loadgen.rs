@@ -1,0 +1,260 @@
+//! Socket-path load generator over the staged server front end.
+//!
+//! Every other bench in the tree drives the scheduler directly; this one
+//! drives the *real* staged pipeline — listener, IO workers, SPSC queues,
+//! driver — over real sockets with a timed trace, and uses the virtual-clock
+//! replay harness as its determinism oracle: before any timing is recorded,
+//! the per-request completion text coming back over the wire must be
+//! byte-identical to `workload::replay`'s text for the same trace, at every
+//! `--io-workers` count in the sweep. The trace is greedy (no temperature)
+//! and deadline-free with an ample cache budget, so completion text is a
+//! pure function of each prompt — any difference between socket and replay
+//! (or between io-worker counts) is a server bug, not scheduling noise.
+//!
+//! Clients pipeline requests over a few connections, paced to the trace's
+//! arrival times, and match completions by the echoed `tag` field (the
+//! server assigns its own ids).
+//!
+//! ```bash
+//! cargo bench --bench server_loadgen           # full sweep
+//! cargo bench --bench server_loadgen quick     # CI smoke
+//! ```
+
+use innerq::coordinator::{Engine, Scheduler};
+use innerq::runtime::Manifest;
+use innerq::server::{serve_with, ServerConfig};
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::json::Json;
+use innerq::util::stats::LatencyHistogram;
+use innerq::workload::replay::{replay, CostModel, Outcome};
+use innerq::workload::trace::{generate_timed, Arrival, TimedRequest, TimedTraceConfig};
+use innerq::QuantMethod;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Ample budget: every request admits and completes, so the oracle contract
+/// is pure text determinism (overload behavior is `overload_tail`'s job).
+const BUDGET: usize = 1 << 30;
+const SEED: u64 = 2026;
+const METHOD: QuantMethod = QuantMethod::InnerQBase;
+/// Client connections the trace is dealt over (round-robin).
+const N_CONNS: usize = 4;
+
+fn trace(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests,
+        arrival: Arrival::Poisson { rate_rps },
+        seed: SEED,
+        ..TimedTraceConfig::default()
+    })
+}
+
+fn scheduler(dir: &std::path::Path) -> Scheduler {
+    let manifest = Manifest::load(dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, METHOD.config()).expect("engine");
+    engine.set_workers(2);
+    Scheduler::new(engine, BUDGET)
+}
+
+/// The replay oracle: per-request completion text keyed by trace id. The
+/// whole trace must complete `Ok` — anything else means the bench is
+/// misconfigured and the identity contract would be vacuous.
+fn oracle_texts(dir: &std::path::Path, trace: &[TimedRequest]) -> HashMap<u64, String> {
+    let mut sched = scheduler(dir);
+    let report = replay(&mut sched, trace, &CostModel::default()).expect("oracle replay");
+    assert_eq!(
+        report.count(Outcome::Ok),
+        trace.len(),
+        "oracle replay must complete every request (got {} of {})",
+        report.count(Outcome::Ok),
+        trace.len()
+    );
+    report.records.iter().map(|r| (r.id, r.text.clone())).collect()
+}
+
+struct CellResult {
+    wall_ms: f64,
+    throughput_rps: f64,
+    e2e: LatencyHistogram,
+    ttft: LatencyHistogram,
+}
+
+/// Run the trace through a live staged server at `io_workers`, assert the
+/// socket completions match the oracle byte-for-byte, and return the wire
+/// timings.
+fn run_cell(
+    dir: &std::path::Path,
+    trace: &[TimedRequest],
+    io_workers: usize,
+    oracle: &HashMap<u64, String>,
+) -> CellResult {
+    let sched = scheduler(dir);
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve_with(
+            sched,
+            "127.0.0.1:0",
+            ServerConfig { io_workers, admin_addr: None },
+            stop_srv,
+            move |b| {
+                let _ = addr_tx.send(b.data);
+            },
+        )
+        .expect("serve_with")
+    });
+    let addr = addr_rx.recv().expect("server bound");
+
+    // Deal the trace over the client connections round-robin, keeping each
+    // request's absolute send time.
+    let n_conns = N_CONNS.min(trace.len()).max(1);
+    let mut batches: Vec<Vec<(u64, String)>> = vec![Vec::new(); n_conns];
+    for (i, t) in trace.iter().enumerate() {
+        let line = Json::obj(vec![
+            ("prompt", Json::str(&t.req.prompt)),
+            ("max_new_tokens", Json::Num(t.req.max_new_tokens as f64)),
+            ("tag", Json::str(&t.req.id.to_string())),
+        ])
+        .dump();
+        batches[i % n_conns].push((t.arrival_us, line));
+    }
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = batches
+        .into_iter()
+        .map(|batch| {
+            std::thread::spawn(move || {
+                let mut conn = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+                for (at_us, line) in &batch {
+                    let target = Duration::from_micros(*at_us);
+                    let since = t0.elapsed();
+                    if target > since {
+                        std::thread::sleep(target - since);
+                    }
+                    writeln!(conn, "{line}").expect("send");
+                }
+                let mut lines = Vec::with_capacity(batch.len());
+                for _ in 0..batch.len() {
+                    let mut s = String::new();
+                    let n = reader.read_line(&mut s).expect("read");
+                    assert!(n > 0, "server closed mid-trace");
+                    lines.push(s);
+                }
+                lines
+            })
+        })
+        .collect();
+    let mut responses: Vec<String> = Vec::new();
+    for c in clients {
+        responses.extend(c.join().expect("client thread"));
+    }
+    let wall = t0.elapsed();
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread");
+
+    // Identity contract FIRST: socket text == oracle text, per request,
+    // before this cell contributes any timing.
+    let mut got: HashMap<u64, String> = HashMap::new();
+    let mut e2e = LatencyHistogram::new();
+    let mut ttft = LatencyHistogram::new();
+    for line in &responses {
+        let j = Json::parse(line).expect("response line parses");
+        assert!(
+            matches!(j.get("error"), Json::Null),
+            "unexpected in-band error: {line}"
+        );
+        let tag: u64 = j.get("tag").as_str().expect("tag echoed").parse().expect("tag");
+        got.insert(tag, j.get("text").as_str().unwrap_or("").to_string());
+        e2e.record(j.get("total_us").as_f64().unwrap_or(0.0) as u64);
+        ttft.record(j.get("ttft_us").as_f64().unwrap_or(0.0) as u64);
+    }
+    assert_eq!(got.len(), trace.len(), "every request must complete exactly once");
+    for t in trace {
+        let want = &oracle[&t.req.id];
+        let have = got.get(&t.req.id).expect("completion for trace id");
+        assert_eq!(
+            have, want,
+            "io_workers={io_workers}: socket completion for request {} diverged from the \
+             replay oracle",
+            t.req.id
+        );
+    }
+
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    CellResult {
+        wall_ms: wall_s * 1e3,
+        throughput_rps: trace.len() as f64 / wall_s,
+        e2e,
+        ttft,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_requests: usize = args
+        .iter()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(if quick { 24 } else { 64 });
+    let rates: &[f64] = if quick { &[300.0] } else { &[100.0, 400.0] };
+    // Every io-worker count must pass the oracle contract, quick mode
+    // included — this is the acceptance gate, not a timing nicety.
+    let io_worker_counts: &[usize] = &[1, 2, 4];
+    let dir = write_fake_artifacts("server_loadgen", '7');
+
+    eprintln!(
+        "[server_loadgen] {n_requests} requests/cell over {N_CONNS} conns, rates {rates:?}, \
+         io-workers {io_worker_counts:?}, method={}, quick={quick}",
+        METHOD.name()
+    );
+
+    let mut results: Vec<Json> = Vec::new();
+    for &rate in rates {
+        let tr = trace(rate, n_requests);
+        let oracle = oracle_texts(&dir, &tr);
+        eprintln!(
+            "[server_loadgen] rate={rate}: oracle replay complete ({} requests)",
+            oracle.len()
+        );
+        for &io_workers in io_worker_counts {
+            let cell = run_cell(&dir, &tr, io_workers, &oracle);
+            eprintln!(
+                "[server_loadgen] rate={rate} io_workers={io_workers}: oracle identity holds; \
+                 {:.1} req/s wall={:.0}ms",
+                cell.throughput_rps, cell.wall_ms
+            );
+            let (t, e) = (cell.ttft.summary(), cell.e2e.summary());
+            results.push(Json::obj(vec![
+                ("method", Json::str(METHOD.name())),
+                ("io_workers", Json::Num(io_workers as f64)),
+                ("rate_rps", Json::Num(rate)),
+                ("n_requests", Json::Num(n_requests as f64)),
+                ("n_conns", Json::Num(N_CONNS as f64)),
+                ("wall_ms", Json::Num(cell.wall_ms)),
+                ("throughput_rps", Json::Num(cell.throughput_rps)),
+                ("ttft_p50_us", Json::Num(t.p50_us as f64)),
+                ("ttft_p99_us", Json::Num(t.p99_us as f64)),
+                ("e2e_p50_us", Json::Num(e.p50_us as f64)),
+                ("e2e_p99_us", Json::Num(e.p99_us as f64)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("server_loadgen")),
+        ("quick", Json::Bool(quick)),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("budget_bytes", Json::Num(BUDGET as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_server.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_server.json");
+    eprintln!("[server_loadgen] wrote {path}");
+}

@@ -167,6 +167,15 @@ impl PrefixStore {
         self.live.len()
     }
 
+    /// Number of resident images currently pinned by at least one borrower.
+    /// Exposed for the admin stats plane and the cancellation tests: when no
+    /// sequence is live or offloaded this must be 0 (residency may persist
+    /// for future hits, pins must not).
+    pub fn pinned_images(&self) -> usize {
+        let tier = &self.tier;
+        tier.resident_ids().filter(|&id| tier.refs(id) > 0).count()
+    }
+
     /// True if an image is resident under `entry` (pinned or not).
     pub fn contains(&self, entry: u64) -> bool {
         self.live.contains_key(&entry)

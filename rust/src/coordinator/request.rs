@@ -242,6 +242,14 @@ pub enum SchedEvent {
         /// Tokens generated (stop token excluded).
         n_generated: usize,
     },
+    /// Cancelled by the submitter (client disconnect in the TCP server)
+    /// before completing. Terminal: the cache reservation, any warm-tier
+    /// residency, and any prefix-store pins were all released, and no
+    /// [`Completion`] is pushed.
+    Cancelled {
+        /// Request id.
+        id: u64,
+    },
 }
 
 impl SchedEvent {
@@ -257,7 +265,8 @@ impl SchedEvent {
             | SchedEvent::PrefixHit { id, .. }
             | SchedEvent::Rejected { id }
             | SchedEvent::Expired { id, .. }
-            | SchedEvent::Finished { id, .. } => id,
+            | SchedEvent::Finished { id, .. }
+            | SchedEvent::Cancelled { id } => id,
         }
     }
 }
@@ -285,6 +294,9 @@ pub struct StepMetrics {
     pub rejected: u64,
     /// Requests failed terminally because their deadline passed.
     pub expired: u64,
+    /// Requests cancelled by the submitter (client disconnect) — terminal,
+    /// with every cache/tier/prefix hold released and no completion pushed.
+    pub cancelled: u64,
     /// Preemption victims whose cache was snapshotted into the warm tier
     /// instead of being discarded (a subset of `preemptions`).
     pub offloads: u64,

@@ -229,6 +229,10 @@ pub struct Scheduler {
     bypass_used: BTreeMap<u64, u32>,
     bypass_limit: u32,
     record: bool,
+    /// Per-tick token progress `(request id, token)` for streaming
+    /// consumers; empty unless enabled via [`Scheduler::record_progress`].
+    progress: Vec<(u64, i32)>,
+    progress_on: bool,
     now_us: u64,
     stop_token: i32,
     rng: Rng,
@@ -285,6 +289,8 @@ impl Scheduler {
             bypass_used: BTreeMap::new(),
             bypass_limit: DEFAULT_BYPASS_LIMIT,
             record: false,
+            progress: Vec::new(),
+            progress_on: false,
             now_us: 0,
             stop_token,
             rng: Rng::new(0xd1ce),
@@ -374,6 +380,61 @@ impl Scheduler {
     /// Drain and return the recorded events.
     pub fn take_events(&mut self) -> Vec<SchedEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    /// Enable or disable per-token progress recording (off by default). On,
+    /// every decode tick appends `(request id, token)` for each token a live
+    /// sequence just committed; the TCP server drains this with
+    /// [`Scheduler::take_progress`] to stream tokens to clients as they are
+    /// produced. Tokens are recorded in live-batch order, so the stream per
+    /// request is exactly its completion text's token sequence.
+    pub fn record_progress(&mut self, on: bool) {
+        self.progress_on = on;
+        if !on {
+            self.progress.clear();
+        }
+    }
+
+    /// Drain and return the recorded per-token progress.
+    pub fn take_progress(&mut self) -> Vec<(u64, i32)> {
+        std::mem::take(&mut self.progress)
+    }
+
+    /// Number of requests currently holding prefix-store pins (live or
+    /// offloaded borrowers). Exposed for the admin stats plane and the
+    /// cancellation tests: after every borrower retires this must be 0.
+    pub fn prefix_pins(&self) -> usize {
+        self.prefix_refs.len()
+    }
+
+    /// Cancel a pending request (client disconnected): remove it from
+    /// whichever pool holds it — admission queue, live decode batch, or warm
+    /// tier — and release every hold it owns: its [`CachePool`] reservation,
+    /// its warm-tier residency, its prefix-store pins, and its bypass
+    /// bookkeeping. Terminal; no [`Completion`] is pushed (there is no one
+    /// left to read it). Returns false when `id` is not pending (already
+    /// finished, failed, or never submitted) — the normal race between a
+    /// disconnect and a completion, harmless on either side.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(i) = self.queue.iter().position(|q| q.req.id == id) {
+            self.queue.remove(i);
+        } else if let Some(i) = self.live.iter().position(|l| l.req.id == id) {
+            // `remove`, not `swap_remove`: the live batch's order is the
+            // admission order completions are emitted in, and a cancellation
+            // must not reshuffle the surviving sequences.
+            self.live.remove(i);
+            self.pool.release(id);
+        } else if let Some(i) = self.warm.iter().position(|w| w.req.id == id) {
+            self.warm.remove(i);
+            self.tier.remove(id);
+        } else {
+            return false;
+        }
+        self.bypass_used.remove(&id);
+        self.release_prefix(id);
+        self.metrics.cancelled += 1;
+        self.event(SchedEvent::Cancelled { id });
+        true
     }
 
     fn event(&mut self, ev: SchedEvent) {
@@ -1062,6 +1123,9 @@ impl Scheduler {
                 let is_stop = l.next_token == self.stop_token;
                 if !is_stop {
                     l.generated.push(l.next_token);
+                    if self.progress_on {
+                        self.progress.push((l.req.id, l.next_token));
+                    }
                 }
                 let resized = self.pool.resize(l.req.id, l.seq.cache_bytes());
                 debug_assert!(resized, "live sequence {} lost its pool reservation", l.req.id);

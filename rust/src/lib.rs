@@ -29,7 +29,6 @@ pub mod eval;
 #[allow(missing_docs)]
 pub mod exp;
 pub mod quant;
-#[allow(missing_docs)]
 pub mod runtime;
 pub mod server;
 #[allow(missing_docs)]

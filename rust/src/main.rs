@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
+//!                    [--io-workers N] [--admin-port PORT]
 //!                    [--budget BYTES] [--policy fifo|slo]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
 //!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
@@ -222,19 +223,36 @@ fn main() -> Result<()> {
             let mut sched = Scheduler::new(engine, budget);
             configure_sched(&mut sched, &args)?;
             let addr = args.get("addr", "127.0.0.1:7071");
+            // Staged front-end shape: N IO workers polling non-blocking
+            // sockets, plus an optional admin/metrics listener on its own
+            // port (same host as --addr).
+            let io_workers: usize = args.get("io-workers", "2").parse()?;
+            let admin_port = args.get("admin-port", "");
+            let admin_addr = if admin_port.is_empty() {
+                None
+            } else {
+                let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+                Some(format!("{host}:{admin_port}"))
+            };
             eprintln!(
-                "[serve] method={} addr={addr} workers={workers} policy={:?} preemption={} \
-                 pipeline={} isa={isa}",
+                "[serve] method={} addr={addr} workers={workers} io-workers={io_workers} \
+                 policy={:?} preemption={} pipeline={} isa={isa}",
                 m.name(),
                 sched.policy(),
                 sched.preemption().name(),
                 sched.engine.pipeline().name()
             );
-            innerq::server::serve(
+            innerq::server::serve_with(
                 sched,
                 &addr,
+                innerq::server::ServerConfig { io_workers, admin_addr },
                 std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
-                |a| eprintln!("[serve] listening on {a}"),
+                |b| {
+                    eprintln!("[serve] listening on {}", b.data);
+                    if let Some(a) = b.admin {
+                        eprintln!("[serve] admin stats on {a}");
+                    }
+                },
             )
         }
         "generate" => {
@@ -379,6 +397,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: innerq <serve|generate|serve-trace|exp|info> [flags]\n\
                  \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
+                 \n              --io-workers N --admin-port PORT\
                  \n              --budget BYTES --policy fifo|slo\
                  \n              --preemption recompute|offload --warm-budget BYTES\
                  \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\

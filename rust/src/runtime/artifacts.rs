@@ -7,19 +7,29 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Model geometry as exported by the compile step.
 #[derive(Debug, Clone)]
 pub struct ModelDims {
+    /// Vocabulary size (charset length + BOS/PAD).
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Query head count.
     pub n_q_heads: usize,
+    /// KV head count (GQA: divides `n_q_heads`).
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub d_h: usize,
+    /// Feed-forward hidden width.
     pub d_ff: usize,
+    /// RoPE base frequency.
     pub rope_theta: f64,
 }
 
 impl ModelDims {
+    /// Total query projection width (`n_q_heads * d_h`).
     pub fn q_dim(&self) -> usize {
         self.n_q_heads * self.d_h
     }
@@ -29,20 +39,32 @@ impl ModelDims {
     }
 }
 
+/// Parsed `manifest.json`: everything the runtime needs to load and drive
+/// the exported stages.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact directory (resolves the relative names in `artifacts`).
     pub dir: PathBuf,
+    /// Model geometry.
     pub model: ModelDims,
+    /// Tokenizer charset; char `i` maps to token `i + 1` (0 is BOS/PAD).
     pub charset: String,
+    /// BOS/PAD token id.
     pub bos: i32,
+    /// Exported decode batch sizes, ascending.
     pub decode_batches: Vec<usize>,
+    /// Exported prefill sequence buckets, ascending.
     pub prefill_buckets: Vec<usize>,
+    /// Context length the quantized-attention stages were lowered for.
     pub quant_attn_tokens: usize,
+    /// Stage key → artifact file name, relative to `dir`.
     pub artifacts: std::collections::BTreeMap<String, String>,
+    /// Final training loss recorded by the compile step (NaN if absent).
     pub final_train_loss: f64,
 }
 
 impl Manifest {
+    /// Read and validate `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -128,6 +150,7 @@ impl Manifest {
             .collect()
     }
 
+    /// Detokenize, skipping BOS/PAD and out-of-charset ids.
     pub fn decode_text(&self, tokens: &[i32]) -> String {
         let chars: Vec<char> = self.charset.chars().collect();
         tokens

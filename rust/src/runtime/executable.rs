@@ -13,9 +13,11 @@ macro_rules! xerr {
     };
 }
 
-/// Typed input tensor for a stage call.
+/// Typed input tensor for a stage call: flat data plus its dimensions.
 pub enum In<'a> {
+    /// f32 tensor (data, dims).
     F32(&'a [f32], &'a [i64]),
+    /// i32 tensor (data, dims).
     I32(&'a [i32], &'a [i64]),
 }
 
@@ -34,6 +36,7 @@ impl In<'_> {
 
 /// One compiled decode/prefill stage.
 pub struct Stage {
+    /// Stage name, used in error messages.
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -64,16 +67,20 @@ impl Stage {
 
 /// Decomposed stage outputs.
 pub struct StageOutput {
+    /// The output tuple's elements, in lowering order.
     pub parts: Vec<xla::Literal>,
 }
 
 impl StageOutput {
+    /// Output `i` flattened to f32.
     pub fn f32(&self, i: usize) -> Result<Vec<f32>> {
         xerr!(self.parts[i].to_vec::<f32>(), format!("output {i} as f32"))
     }
+    /// Number of outputs in the tuple.
     pub fn len(&self) -> usize {
         self.parts.len()
     }
+    /// Whether the stage returned an empty tuple.
     pub fn is_empty(&self) -> bool {
         self.parts.is_empty()
     }

@@ -1,0 +1,123 @@
+//! Admin/metrics plane: a second listener on its own port speaking a small
+//! line-oriented text protocol, memcached-stats style.
+//!
+//! Commands (one per line, case-sensitive):
+//! * `stats`   → one `STAT <name> <value>` line per counter, then `END`.
+//! * `version` → `VERSION <crate version>`.
+//! * `quit`    → closes this admin connection.
+//! * anything else → `ERROR unknown command '<cmd>'` (blank lines ignored).
+//!
+//! The plane is strictly read-only over the data path: the scheduler driver
+//! refreshes a snapshot ([`AdminSnapshot`]) behind a mutex once per loop,
+//! and admin connections only ever format that snapshot. A malformed admin
+//! command — or a thousand of them — cannot touch the scheduler, the cache,
+//! or any data-plane connection.
+
+use std::io::{ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The driver-refreshed stats snapshot: ordered `(name, value)` pairs,
+/// formatted on demand by admin connections.
+pub(crate) type AdminSnapshot = Vec<(String, u64)>;
+
+/// Shared handle to the latest snapshot.
+pub(crate) type SharedSnapshot = Arc<Mutex<AdminSnapshot>>;
+
+/// Write `buf` fully over a non-blocking socket, sleeping through
+/// `WouldBlock` (admin responses are small; this cannot livelock a data
+/// connection because the admin plane runs on its own threads).
+fn write_all_nb(stream: &mut TcpStream, mut buf: &[u8], stop: &AtomicBool) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        if stop.load(Ordering::Relaxed) {
+            return Err(std::io::Error::from(ErrorKind::Interrupted));
+        }
+        match stream.write(buf) {
+            Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+            Ok(n) => buf = &buf[n..],
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Serve one admin connection until `quit`, EOF, error, or server stop.
+fn admin_conn_loop(mut stream: TcpStream, snapshot: SharedSnapshot, stop: Arc<AtomicBool>) {
+    use crate::server::conn::{LineAssembler, LineEvent};
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut asm = LineAssembler::new();
+    let mut events = Vec::new();
+    let mut buf = [0u8; 1024];
+    while !stop.load(Ordering::Relaxed) {
+        match std::io::Read::read(&mut stream, &mut buf) {
+            Ok(0) => return,
+            Ok(n) => asm.feed(&buf[..n], &mut events),
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+        for ev in events.drain(..) {
+            let reply = match ev {
+                LineEvent::TooLong => "ERROR line too long\r\n".to_string(),
+                LineEvent::Line(bytes) => {
+                    let cmd = String::from_utf8_lossy(&bytes).trim().to_string();
+                    match cmd.as_str() {
+                        "" => continue,
+                        "quit" => return,
+                        "version" => format!("VERSION {}\r\n", env!("CARGO_PKG_VERSION")),
+                        "stats" => {
+                            let snap = snapshot.lock().unwrap_or_else(|e| e.into_inner());
+                            let mut out = String::new();
+                            for (name, value) in snap.iter() {
+                                out.push_str(&format!("STAT {name} {value}\r\n"));
+                            }
+                            out.push_str("END\r\n");
+                            out
+                        }
+                        other => format!("ERROR unknown command '{other}'\r\n"),
+                    }
+                }
+            };
+            if write_all_nb(&mut stream, reply.as_bytes(), &stop).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// The admin listener thread body: accept connections (non-blocking, like
+/// the data-plane listener) and serve each on its own thread. All
+/// connection threads are joined before this returns, so a stopped server
+/// leaves nothing running.
+pub(crate) fn admin_loop(listener: TcpListener, snapshot: SharedSnapshot, stop: Arc<AtomicBool>) {
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let snapshot = snapshot.clone();
+                let stop = stop.clone();
+                handles.push(std::thread::spawn(move || {
+                    admin_conn_loop(stream, snapshot, stop)
+                }));
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}

@@ -1,0 +1,392 @@
+//! Pure per-connection protocol layer: incremental line assembly and
+//! request-line validation.
+//!
+//! This module owns everything about the wire protocol that does not touch a
+//! socket, so the IO workers ([`crate::server`]'s staged pipeline) and the
+//! fuzz harness exercise *the same* code: [`LineAssembler`] turns arbitrary
+//! read chunks into complete protocol lines under the [`MAX_LINE_BYTES`]
+//! cap (over-long lines are drained, never buffered), and
+//! [`parse_request_line`] validates one line into a [`RequestSpec`] or the
+//! exact in-band error message the client gets back.
+//!
+//! Failure handling rules (clients must never hang on a silent drop, and a
+//! hostile line must never poison scheduler state — every rejection happens
+//! before anything is submitted):
+//! * malformed request lines — truncated JSON, non-UTF8 bytes, nesting
+//!   bombs (see [`crate::util::json::MAX_DEPTH`]) — get an `{"error": ...}`
+//!   response line instead of being discarded;
+//! * request lines longer than [`MAX_LINE_BYTES`] are answered in-band and
+//!   drained without buffering, so an unbounded line cannot exhaust memory;
+//! * failed completions (rejected / unencodable prompts) carry an `error`
+//!   field in their response line.
+//!
+//! [`fuzz_protocol_bytes`] is the `cargo fuzz`-compatible entry point over
+//! this whole layer (see `tests/protocol_robustness.rs`).
+
+use crate::coordinator::request::Priority;
+use crate::util::json::Json;
+use std::io::BufRead;
+
+/// Hard cap on one request line. Far above any legitimate request at the
+/// supported prompt sizes; far below anything that could pressure memory.
+pub const MAX_LINE_BYTES: usize = 256 * 1024;
+
+/// One `{"error": ...}` protocol line.
+pub(crate) fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).dump()
+}
+
+/// One complete protocol line recovered from the byte stream.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// A complete newline-terminated line within the cap (newline excluded).
+    Line(Vec<u8>),
+    /// The line exceeded [`MAX_LINE_BYTES`]; its bytes were discarded as
+    /// they streamed past and the connection is resynchronized at the
+    /// newline that ended it.
+    TooLong,
+}
+
+/// Incremental newline-delimited framing over arbitrary read chunks.
+///
+/// Non-blocking sockets hand the IO workers whatever bytes are available —
+/// half a line, three lines and a fragment, one byte. `feed` consumes each
+/// chunk and emits a [`LineEvent`] per completed line; partial lines carry
+/// over to the next chunk. Memory is bounded: at most [`MAX_LINE_BYTES`] of
+/// partial line is ever buffered, and an over-long line switches to drain
+/// mode (count, don't store) until its terminating newline.
+#[derive(Debug, Default)]
+pub struct LineAssembler {
+    buf: Vec<u8>,
+    over: bool,
+}
+
+impl LineAssembler {
+    /// A fresh assembler (no partial line).
+    pub fn new() -> LineAssembler {
+        LineAssembler::default()
+    }
+
+    /// Consume one read chunk, appending one event per completed line to
+    /// `out`.
+    pub fn feed(&mut self, chunk: &[u8], out: &mut Vec<LineEvent>) {
+        let mut rest = chunk;
+        while let Some(nl) = rest.iter().position(|&b| b == b'\n') {
+            let (head, tail) = rest.split_at(nl);
+            rest = &tail[1..];
+            if self.over || self.buf.len() + head.len() > MAX_LINE_BYTES {
+                self.buf.clear();
+                self.over = false;
+                out.push(LineEvent::TooLong);
+            } else if self.buf.is_empty() {
+                out.push(LineEvent::Line(head.to_vec()));
+            } else {
+                self.buf.extend_from_slice(head);
+                out.push(LineEvent::Line(std::mem::take(&mut self.buf)));
+            }
+        }
+        if !self.over {
+            if self.buf.len() + rest.len() > MAX_LINE_BYTES {
+                self.buf.clear();
+                self.over = true;
+            } else {
+                self.buf.extend_from_slice(rest);
+            }
+        }
+    }
+
+    /// Bytes of partial line currently buffered (bounded by
+    /// [`MAX_LINE_BYTES`] by construction).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// One validated generation request, as parsed off the wire. The driver
+/// turns this into a [`crate::coordinator::request::Request`] when it
+/// assigns the server-side id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestSpec {
+    /// The prompt text (non-empty).
+    pub prompt: String,
+    /// Generation budget (default 32).
+    pub max_new_tokens: usize,
+    /// Sampling temperature; `None` (the default) is greedy argmax.
+    pub temperature: Option<f32>,
+    /// Priority class (default [`Priority::Standard`]).
+    pub priority: Priority,
+    /// Relative deadline in virtual microseconds, if any.
+    pub deadline_us: Option<u64>,
+    /// Declared shareable prompt prefix in tokens (0 = none).
+    pub prefix_len: usize,
+    /// Stream tokens as they are produced (`{"id":…,"token":…}` lines
+    /// before the final completion line). Off by default so the one
+    /// request line → one response line contract holds for plain clients.
+    pub stream: bool,
+    /// Opaque client tag echoed on every response line for this request,
+    /// so pipelining clients can match completions to requests without
+    /// depending on server-assigned ids.
+    pub tag: Option<String>,
+}
+
+/// Outcome of validating one complete protocol line.
+#[derive(Debug, PartialEq)]
+pub enum LineOutcome {
+    /// Blank line: ignored, no response.
+    Ignore,
+    /// Rejected; the string is the in-band error message.
+    Error(String),
+    /// A valid request, ready to submit.
+    Request(Box<RequestSpec>),
+}
+
+/// Validate one raw protocol line (as framed by [`LineAssembler`]) into a
+/// request, a blank-line ignore, or the exact in-band error message.
+pub fn parse_request_line(bytes: &[u8]) -> LineOutcome {
+    // Reject non-UTF8 in-band; `BufRead::lines` would have dropped the
+    // line silently and left the client hanging.
+    let Ok(line) = std::str::from_utf8(bytes) else {
+        return LineOutcome::Error("request line is not valid UTF-8".into());
+    };
+    if line.trim().is_empty() {
+        return LineOutcome::Ignore;
+    }
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return LineOutcome::Error(format!("bad request JSON: {e}")),
+    };
+    let prompt = j.get("prompt").as_str().unwrap_or("").to_string();
+    if prompt.is_empty() {
+        return LineOutcome::Error("request needs a non-empty string field 'prompt'".into());
+    }
+    // Optional SLO fields: "priority" (name or numeric level; unknown
+    // values get an in-band error so a typo'd class cannot silently run
+    // at the wrong priority) and "deadline_ms" (relative, must be > 0).
+    let priority = match j.get("priority") {
+        Json::Null => Priority::Standard,
+        Json::Str(s) => match Priority::parse(s) {
+            Some(p) => p,
+            None => {
+                return LineOutcome::Error(format!(
+                    "unknown priority '{s}' (one of: interactive, standard, batch)"
+                ))
+            }
+        },
+        Json::Num(n) => {
+            let parsed = (n.fract() == 0.0)
+                .then(|| format!("{}", *n as i64))
+                .and_then(|s| Priority::parse(&s));
+            match parsed {
+                Some(p) => p,
+                None => return LineOutcome::Error("numeric priority must be 0, 1, or 2".into()),
+            }
+        }
+        _ => return LineOutcome::Error("priority must be a string or number".into()),
+    };
+    let deadline_us = match j.get("deadline_ms") {
+        Json::Null => None,
+        Json::Num(ms) if ms.is_finite() && *ms > 0.0 => Some((*ms * 1e3) as u64),
+        _ => {
+            // Same contract as priority: a bad SLO field gets an in-band
+            // error instead of silently running unenforced.
+            return LineOutcome::Error(
+                "deadline_ms must be a positive number of milliseconds".into(),
+            );
+        }
+    };
+    let prefix_len = match j.get("prefix_len") {
+        Json::Null => 0,
+        Json::Num(n) if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 => *n as usize,
+        _ => return LineOutcome::Error("prefix_len must be a non-negative integer".into()),
+    };
+    let stream = match j.get("stream") {
+        Json::Null => false,
+        Json::Bool(b) => *b,
+        _ => return LineOutcome::Error("stream must be a boolean".into()),
+    };
+    let tag = match j.get("tag") {
+        Json::Null => None,
+        Json::Str(s) => Some(s.clone()),
+        _ => return LineOutcome::Error("tag must be a string".into()),
+    };
+    LineOutcome::Request(Box::new(RequestSpec {
+        prompt,
+        max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(32),
+        temperature: j.get("temperature").as_f64().map(|t| t as f32),
+        priority,
+        deadline_us,
+        prefix_len,
+        stream,
+        tag,
+    }))
+}
+
+/// `cargo fuzz`-compatible entry over the whole pure protocol layer: frame
+/// `data` through a [`LineAssembler`] (in several chunkings, including
+/// byte-at-a-time for short inputs, to hit split-across-read-boundary
+/// paths) and validate every framed line. Must never panic, and buffered
+/// partial-line memory must stay under the cap. Wire it up as
+/// `fuzz_target!(|data: &[u8]| innerq::server::fuzz_protocol_bytes(data));`.
+pub fn fuzz_protocol_bytes(data: &[u8]) {
+    let chunk_sizes: &[usize] = if data.len() <= 4096 { &[1, 7, 4096] } else { &[4096] };
+    for &sz in chunk_sizes {
+        let mut asm = LineAssembler::new();
+        let mut events = Vec::new();
+        for chunk in data.chunks(sz.max(1)) {
+            asm.feed(chunk, &mut events);
+            assert!(asm.buffered() <= MAX_LINE_BYTES, "assembler buffer over cap");
+        }
+        for ev in events.drain(..) {
+            if let LineEvent::Line(bytes) = ev {
+                assert!(bytes.len() <= MAX_LINE_BYTES, "framed line over cap");
+                // Must classify without panicking, whatever the bytes.
+                let _ = parse_request_line(&bytes);
+            }
+        }
+    }
+}
+
+/// One read from the capped blocking line reader (admin plane and tests).
+pub(crate) enum LineRead {
+    /// A complete newline-terminated (or EOF-terminated) line within the cap.
+    Line(Vec<u8>),
+    /// The line exceeded [`MAX_LINE_BYTES`]; its remainder was drained
+    /// (without buffering) so the connection is resynchronized at the next
+    /// newline.
+    TooLong,
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Read one `\n`-terminated line from a blocking reader, holding at most
+/// [`MAX_LINE_BYTES`] + one buffer of it in memory. Unlike
+/// [`BufRead::read_until`], an over-long line is discarded as it streams
+/// past instead of being accumulated. (The data plane uses the non-blocking
+/// [`LineAssembler`] instead; this serves the blocking admin plane.)
+pub(crate) fn read_line_capped(r: &mut impl BufRead) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut over = false;
+    loop {
+        let available = r.fill_buf()?;
+        if available.is_empty() {
+            return Ok(match (over, buf.is_empty()) {
+                (true, _) => LineRead::TooLong,
+                (false, true) => LineRead::Eof,
+                (false, false) => LineRead::Line(buf),
+            });
+        }
+        let nl = available.iter().position(|&b| b == b'\n');
+        let take = nl.unwrap_or(available.len());
+        if !over {
+            buf.extend_from_slice(&available[..take]);
+            if buf.len() > MAX_LINE_BYTES {
+                over = true;
+                buf.clear();
+            }
+        }
+        r.consume(take + usize::from(nl.is_some()));
+        if nl.is_some() {
+            return Ok(if over { LineRead::TooLong } else { LineRead::Line(buf) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_all(asm: &mut LineAssembler, chunks: &[&[u8]]) -> Vec<LineEvent> {
+        let mut out = Vec::new();
+        for c in chunks {
+            asm.feed(c, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn assembler_reframes_lines_split_across_chunks() {
+        let mut asm = LineAssembler::new();
+        let evs = feed_all(&mut asm, &[b"hel", b"lo\nwo", b"rld\n"]);
+        assert_eq!(
+            evs,
+            vec![LineEvent::Line(b"hello".to_vec()), LineEvent::Line(b"world".to_vec())]
+        );
+        assert_eq!(asm.buffered(), 0);
+    }
+
+    #[test]
+    fn assembler_drains_overlong_lines_without_buffering() {
+        let mut asm = LineAssembler::new();
+        let big = vec![b'x'; MAX_LINE_BYTES + 10];
+        let mut evs = Vec::new();
+        for chunk in big.chunks(4096) {
+            asm.feed(chunk, &mut evs);
+            assert!(asm.buffered() <= MAX_LINE_BYTES);
+        }
+        assert!(evs.is_empty());
+        asm.feed(b"\nok\n", &mut evs);
+        assert_eq!(evs, vec![LineEvent::TooLong, LineEvent::Line(b"ok".to_vec())]);
+    }
+
+    #[test]
+    fn assembler_handles_many_lines_in_one_chunk() {
+        let mut asm = LineAssembler::new();
+        let mut evs = Vec::new();
+        asm.feed(b"a\n\nb\n", &mut evs);
+        assert_eq!(
+            evs,
+            vec![
+                LineEvent::Line(b"a".to_vec()),
+                LineEvent::Line(b"".to_vec()),
+                LineEvent::Line(b"b".to_vec())
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_hostile_lines_with_stable_messages() {
+        let err = |b: &[u8]| match parse_request_line(b) {
+            LineOutcome::Error(m) => m,
+            other => panic!("expected error, got {other:?}"),
+        };
+        assert!(err(b"\xff\xfe").contains("UTF-8"));
+        assert!(err(b"{\"prompt\": \"a=1").contains("bad request JSON"));
+        assert!(err(b"{}").contains("'prompt'"));
+        assert!(err(br#"{"prompt": "x", "priority": "urgent"}"#).contains("unknown priority"));
+        assert!(err(br#"{"prompt": "x", "priority": 1.5}"#).contains("0, 1, or 2"));
+        assert!(err(br#"{"prompt": "x", "deadline_ms": -1}"#).contains("deadline_ms"));
+        assert!(err(br#"{"prompt": "x", "prefix_len": -3}"#).contains("prefix_len"));
+        assert!(err(br#"{"prompt": "x", "stream": 1}"#).contains("stream"));
+        assert!(err(br#"{"prompt": "x", "tag": 7}"#).contains("tag"));
+        assert_eq!(parse_request_line(b"   "), LineOutcome::Ignore);
+    }
+
+    #[test]
+    fn parse_accepts_a_full_request() {
+        let line = br#"{"prompt": "a=1;?a=", "max_new_tokens": 4, "priority": "interactive",
+                        "deadline_ms": 250, "stream": true, "tag": "t1", "prefix_len": 2}"#;
+        match parse_request_line(line) {
+            LineOutcome::Request(spec) => {
+                assert_eq!(spec.prompt, "a=1;?a=");
+                assert_eq!(spec.max_new_tokens, 4);
+                assert_eq!(spec.priority, Priority::Interactive);
+                assert_eq!(spec.deadline_us, Some(250_000));
+                assert!(spec.stream);
+                assert_eq!(spec.tag.as_deref(), Some("t1"));
+                assert_eq!(spec.prefix_len, 2);
+            }
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fuzz_entry_is_panic_free_on_hostile_corpus() {
+        fuzz_protocol_bytes(b"");
+        fuzz_protocol_bytes(b"\n\n\n");
+        fuzz_protocol_bytes(b"\xff\xfe\x00\n{\"prompt\"");
+        fuzz_protocol_bytes(&[b'['; 4096]);
+        let mut long = vec![b'z'; MAX_LINE_BYTES + 100];
+        long.push(b'\n');
+        fuzz_protocol_bytes(&long);
+    }
+}

@@ -1,0 +1,212 @@
+//! IO-worker stage of the staged server: non-blocking socket polling,
+//! incremental protocol parsing, and buffered writes.
+//!
+//! Each worker owns a disjoint set of connections (the listener deals them
+//! out round-robin) and exchanges work with the scheduler driver over one
+//! SPSC queue pair: parsed requests and disconnect notices go up
+//! ([`ToDriver`]), response lines come down ([`Outbound`]). Protocol errors
+//! never reach the driver — the worker answers them in-band itself, so a
+//! garbage flood is absorbed entirely in this stage and cannot poison (or
+//! even wake) the scheduler.
+//!
+//! A client disconnect — EOF, reset, or a failed write — retires the
+//! connection and sends [`ToDriver::Disconnect`]; the driver cancels every
+//! request the connection still has pending, releasing its cache
+//! reservation, warm-tier residency, and prefix pins mid-decode.
+
+use crate::server::conn::{error_line, parse_request_line, LineAssembler, LineEvent, LineOutcome, RequestSpec};
+use crate::util::spsc::{Consumer, Producer};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Work flowing from an IO worker up to the scheduler driver.
+pub(crate) enum ToDriver {
+    /// A validated request from `conn_id`, ready for id assignment and
+    /// submission.
+    Submit {
+        /// Worker-scoped connection id.
+        conn_id: u64,
+        /// The parsed request.
+        spec: Box<RequestSpec>,
+    },
+    /// `conn_id` is gone (EOF, reset, or write failure): cancel everything
+    /// it still has pending.
+    Disconnect {
+        /// Worker-scoped connection id.
+        conn_id: u64,
+    },
+}
+
+/// One response line flowing from the driver down to an IO worker.
+pub(crate) struct Outbound {
+    /// Destination connection.
+    pub conn_id: u64,
+    /// The response line (newline appended by the worker).
+    pub line: String,
+}
+
+/// Per-connection state owned by one worker.
+struct Conn {
+    stream: TcpStream,
+    asm: LineAssembler,
+    /// Bytes queued for write; drained as the socket accepts them.
+    out: Vec<u8>,
+}
+
+impl Conn {
+    fn queue_line(&mut self, line: &str) {
+        self.out.extend_from_slice(line.as_bytes());
+        self.out.push(b'\n');
+    }
+}
+
+/// Cap on bytes read from one connection per poll round, so one firehose
+/// client cannot starve its siblings on the same worker.
+const READ_QUANTUM: usize = 64 * 1024;
+
+/// Push to the driver, spinning until there is room. The driver drains its
+/// inbound queues every loop iteration, so this terminates unless the
+/// server is shutting down — in which case the stop flag breaks the spin.
+fn push_to_driver(tx: &mut Producer<ToDriver>, stop: &AtomicBool, msg: ToDriver) -> bool {
+    let mut msg = msg;
+    loop {
+        match tx.try_push(msg) {
+            Ok(()) => return true,
+            Err(back) => {
+                if stop.load(Ordering::Relaxed) {
+                    return false;
+                }
+                msg = back;
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// The worker thread body. Runs until `stop` flips true.
+pub(crate) fn io_worker_loop(
+    mut intake: Consumer<(u64, TcpStream)>,
+    mut to_driver: Producer<ToDriver>,
+    mut from_driver: Consumer<Outbound>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut dead: Vec<u64> = Vec::new();
+    let mut events: Vec<LineEvent> = Vec::new();
+    let mut buf = [0u8; 4096];
+    while !stop.load(Ordering::Relaxed) {
+        let mut busy = false;
+
+        // New connections from the listener.
+        while let Some((conn_id, stream)) = intake.try_pop() {
+            busy = true;
+            if stream.set_nonblocking(true).is_err() {
+                continue; // already closed; nothing was submitted for it
+            }
+            let _ = stream.set_nodelay(true);
+            conns.insert(conn_id, Conn { stream, asm: LineAssembler::new(), out: Vec::new() });
+        }
+
+        // Response lines from the driver.
+        while let Some(ob) = from_driver.try_pop() {
+            busy = true;
+            if let Some(c) = conns.get_mut(&ob.conn_id) {
+                c.queue_line(&ob.line);
+            }
+            // A line for a connection that already disconnected is dropped:
+            // the driver races its completion against our Disconnect notice,
+            // and there is no one left to read it.
+        }
+
+        // Poll every connection: read available bytes, parse incrementally,
+        // flush buffered writes.
+        for (&conn_id, c) in conns.iter_mut() {
+            // -- reads --
+            let mut taken = 0usize;
+            loop {
+                match c.stream.read(&mut buf) {
+                    Ok(0) => {
+                        dead.push(conn_id);
+                        break;
+                    }
+                    Ok(n) => {
+                        busy = true;
+                        c.asm.feed(&buf[..n], &mut events);
+                        for ev in events.drain(..) {
+                            match ev {
+                                LineEvent::TooLong => c.queue_line(&error_line(&format!(
+                                    "request line exceeds {} bytes",
+                                    super::conn::MAX_LINE_BYTES
+                                ))),
+                                LineEvent::Line(bytes) => match parse_request_line(&bytes) {
+                                    LineOutcome::Ignore => {}
+                                    LineOutcome::Error(msg) => c.queue_line(&error_line(&msg)),
+                                    LineOutcome::Request(spec) => {
+                                        if !push_to_driver(
+                                            &mut to_driver,
+                                            &stop,
+                                            ToDriver::Submit { conn_id, spec },
+                                        ) {
+                                            c.queue_line(&error_line("server is shutting down"));
+                                        }
+                                    }
+                                },
+                            }
+                        }
+                        taken += n;
+                        if taken >= READ_QUANTUM {
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        dead.push(conn_id);
+                        break;
+                    }
+                }
+            }
+            // -- writes --
+            let mut written = 0usize;
+            while written < c.out.len() {
+                match c.stream.write(&c.out[written..]) {
+                    Ok(0) => {
+                        dead.push(conn_id);
+                        break;
+                    }
+                    Ok(n) => {
+                        busy = true;
+                        written += n;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        dead.push(conn_id);
+                        break;
+                    }
+                }
+            }
+            if written > 0 {
+                c.out.drain(..written);
+            }
+        }
+
+        // Retire dead connections and tell the driver to cancel their work.
+        if !dead.is_empty() {
+            dead.sort_unstable();
+            dead.dedup();
+            for conn_id in dead.drain(..) {
+                conns.remove(&conn_id);
+                push_to_driver(&mut to_driver, &stop, ToDriver::Disconnect { conn_id });
+            }
+        }
+
+        if !busy {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}

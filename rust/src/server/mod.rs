@@ -1,18 +1,34 @@
-//! TCP line-protocol server: newline-delimited JSON requests/responses.
+//! Staged TCP line-protocol server: newline-delimited JSON over
+//! non-blocking sockets, plus an admin/metrics plane.
 //!
-//! tokio is not in the offline vendor set, so the server is thread-based:
-//! one acceptor, one scheduler thread owning the engine (the testbed is a
-//! single core; the scheduler loop *is* the worker), per-connection reader
-//! threads feeding an mpsc channel.
+//! tokio is not in the offline vendor set, so the stages are plain threads
+//! in the pelikan mold: one listener dealing sockets round-robin to N IO
+//! workers ([`io_worker`]) that poll non-blocking sockets and parse the
+//! protocol incrementally ([`conn`]), bounded SPSC queue pairs
+//! ([`crate::util::spsc`]) into the scheduler driver ([`tcp::serve_with`]),
+//! and a separate admin listener ([`admin`]) exporting live counters.
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"prompt": "a=13;?a=", "max_new_tokens": 8}
 //!   <- {"id": 3, "text": "13;", "n_generated": 3, "ttft_us": ..., "total_us": ...}
 //!
+//! Optional request fields: "priority", "deadline_ms", "temperature",
+//! "prefix_len", "tag" (echoed on every response line for the request), and
+//! "stream" — true streams {"id": ..., "token": ...} lines as tokens are
+//! produced, before the final completion line.
+//!
 //! Failures are answered in-band, never silently dropped: malformed lines
 //! get {"error": ...} immediately, and failed completions (rejected or
-//! unencodable requests) carry an "error" field on the completion line.
+//! unencodable requests) carry an "error" field on the completion line. A
+//! client disconnect cancels everything the connection still had pending,
+//! releasing its cache reservation, warm-tier residency, and prefix pins
+//! mid-decode ([`crate::coordinator::Scheduler::cancel`]).
 
+pub mod conn;
 pub mod tcp;
 
-pub use tcp::{serve, Client, MAX_LINE_BYTES};
+mod admin;
+mod io_worker;
+
+pub use conn::{fuzz_protocol_bytes, MAX_LINE_BYTES};
+pub use tcp::{serve, serve_with, AdminClient, Bound, Client, ServerConfig};

@@ -1,243 +1,169 @@
-//! Thread-based TCP serving front-end over the scheduler.
+//! Staged TCP serving front end over the scheduler.
 //!
-//! Failure handling rules (clients must never hang on a silent drop, and a
-//! hostile line must never poison scheduler state — every rejection happens
-//! before anything is submitted):
-//! * malformed request lines — truncated JSON, non-UTF8 bytes, nesting
-//!   bombs (see [`crate::util::json::MAX_DEPTH`]) — get an `{"error": ...}`
-//!   response line instead of being discarded;
-//! * request lines longer than [`MAX_LINE_BYTES`] are answered in-band and
-//!   drained without buffering, so an unbounded line cannot exhaust memory;
-//! * stream-clone failures are answered (best effort) and close the reader
-//!   instead of panicking the thread;
-//! * failed completions (rejected / unencodable prompts) carry an `error`
-//!   field in their response line.
+//! Dataflow (see `ARCHITECTURE.md` for the full diagram):
 //!
-//! Each connection has ONE writer handle, shared behind a mutex between the
-//! per-connection reader thread (error replies) and the scheduler loop
-//! (completion lines), so a pipelining client can never observe two
-//! response lines interleaved mid-line.
+//! ```text
+//! listener ──round-robin──▶ IO worker 0..N ──SPSC──▶ driver (scheduler)
+//!                              ▲                        │
+//!                              └───────SPSC─────────────┘
+//! admin listener ──▶ admin conns (read-only stats snapshot)
+//! ```
+//!
+//! One listener thread accepts data-plane sockets and deals them
+//! round-robin to N IO workers ([`super::io_worker`]) that poll
+//! non-blocking sockets and parse the protocol incrementally
+//! ([`super::conn`]); each worker exchanges work with the driver over a
+//! bounded SPSC queue pair ([`crate::util::spsc`]). The driver — this
+//! module — owns the [`Scheduler`]: it assigns request ids, advances the
+//! virtual clock from wall time, ticks, streams per-token output for
+//! `"stream": true` requests, routes completion lines back to the owning
+//! worker, and cancels everything a disconnected client still had pending
+//! ([`Scheduler::cancel`] — reservation, warm-tier residency, and prefix
+//! pins all release mid-decode). A second admin listener
+//! ([`super::admin`]) exports live counters without ever touching the data
+//! plane.
 
 use crate::coordinator::request::{Priority, Request};
 use crate::coordinator::Scheduler;
+use crate::server::admin::{admin_loop, SharedSnapshot};
+use crate::server::conn::read_line_capped;
+use crate::server::io_worker::{io_worker_loop, Outbound, ToDriver};
 use crate::util::json::Json;
+use crate::util::spsc::{self, Consumer, Producer};
+use crate::util::stats::LatencyHistogram;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// The per-connection write half, shared by the reader thread and the
-/// scheduler loop.
-type SharedConn = Arc<Mutex<TcpStream>>;
-
-struct Inbound {
-    req: Request,
-    conn: SharedConn,
+/// Staged front-end shape knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Number of IO-worker threads polling data-plane sockets (≥ 1).
+    pub io_workers: usize,
+    /// Bind address for the admin/metrics listener; `None` disables the
+    /// admin plane.
+    pub admin_addr: Option<String>,
 }
 
-/// One `{"error": ...}` protocol line.
-fn error_line(msg: &str) -> String {
-    Json::obj(vec![("error", Json::str(msg))]).dump()
-}
-
-/// Hard cap on one request line. Far above any legitimate request at the
-/// supported prompt sizes; far below anything that could pressure memory.
-pub const MAX_LINE_BYTES: usize = 256 * 1024;
-
-/// One read from the capped line reader.
-enum LineRead {
-    /// A complete newline-terminated (or EOF-terminated) line within the cap.
-    Line(Vec<u8>),
-    /// The line exceeded [`MAX_LINE_BYTES`]; its remainder was drained
-    /// (without buffering) so the connection is resynchronized at the next
-    /// newline.
-    TooLong,
-    /// Clean end of stream.
-    Eof,
-}
-
-/// Read one `\n`-terminated line, holding at most [`MAX_LINE_BYTES`] + one
-/// buffer of it in memory. Unlike [`BufRead::read_until`], an over-long line
-/// is discarded as it streams past instead of being accumulated.
-fn read_line_capped(r: &mut impl BufRead) -> std::io::Result<LineRead> {
-    let mut buf: Vec<u8> = Vec::new();
-    let mut over = false;
-    loop {
-        let available = r.fill_buf()?;
-        if available.is_empty() {
-            return Ok(match (over, buf.is_empty()) {
-                (true, _) => LineRead::TooLong,
-                (false, true) => LineRead::Eof,
-                (false, false) => LineRead::Line(buf),
-            });
-        }
-        let nl = available.iter().position(|&b| b == b'\n');
-        let take = nl.unwrap_or(available.len());
-        if !over {
-            buf.extend_from_slice(&available[..take]);
-            if buf.len() > MAX_LINE_BYTES {
-                over = true;
-                buf.clear();
-            }
-        }
-        r.consume(take + usize::from(nl.is_some()));
-        if nl.is_some() {
-            return Ok(if over { LineRead::TooLong } else { LineRead::Line(buf) });
-        }
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { io_workers: 2, admin_addr: None }
     }
 }
 
-/// Write one response line while holding the connection's write lock, so
-/// concurrent writers cannot interleave bytes within a line.
-fn write_line(conn: &SharedConn, line: &str) {
-    let mut guard = conn.lock().unwrap_or_else(|e| e.into_inner());
-    let _ = writeln!(guard, "{line}");
+/// Addresses the server actually bound, reported through `serve_with`'s
+/// callback before the driver loop starts.
+#[derive(Debug, Clone, Copy)]
+pub struct Bound {
+    /// The data-plane address.
+    pub data: SocketAddr,
+    /// The admin-plane address, when configured.
+    pub admin: Option<SocketAddr>,
 }
 
-/// Per-connection reader: parse newline-delimited JSON requests and feed
-/// them to the scheduler channel. Every rejected line is answered in-band.
-fn reader_loop(conn: TcpStream, tx: mpsc::Sender<Inbound>, next_id: Arc<AtomicU64>) {
-    let mut reader = match conn.try_clone() {
-        Ok(c) => BufReader::new(c),
-        Err(e) => {
-            // Can't read without a second handle; tell the client and bail
-            // rather than leaving it waiting on a dead connection.
-            let writer: SharedConn = Arc::new(Mutex::new(conn));
-            write_line(&writer, &error_line(&format!("connection setup failed: {e}")));
-            return;
-        }
-    };
-    let writer: SharedConn = Arc::new(Mutex::new(conn));
-    loop {
-        let bytes = match read_line_capped(&mut reader) {
-            Ok(LineRead::Line(b)) => b,
-            Ok(LineRead::TooLong) => {
-                write_line(
-                    &writer,
-                    &error_line(&format!("request line exceeds {MAX_LINE_BYTES} bytes")),
-                );
-                continue;
-            }
-            Ok(LineRead::Eof) | Err(_) => return,
-        };
-        // Reject non-UTF8 in-band; `BufRead::lines` would have dropped the
-        // line silently and left the client hanging.
-        let line = match String::from_utf8(bytes) {
-            Ok(s) => s,
-            Err(_) => {
-                write_line(&writer, &error_line("request line is not valid UTF-8"));
-                continue;
-            }
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let j = match Json::parse(&line) {
-            Ok(j) => j,
-            Err(e) => {
-                write_line(&writer, &error_line(&format!("bad request JSON: {e}")));
-                continue;
-            }
-        };
-        let prompt = j.get("prompt").as_str().unwrap_or("").to_string();
-        if prompt.is_empty() {
-            write_line(
-                &writer,
-                &error_line("request needs a non-empty string field 'prompt'"),
-            );
-            continue;
-        }
-        // Optional SLO fields: "priority" (name or numeric level; unknown
-        // values get an in-band error so a typo'd class cannot silently run
-        // at the wrong priority) and "deadline_ms" (relative, must be > 0).
-        let priority = match j.get("priority") {
-            Json::Null => Priority::Standard,
-            Json::Str(s) => match Priority::parse(s) {
-                Some(p) => p,
-                None => {
-                    write_line(
-                        &writer,
-                        &error_line(&format!(
-                            "unknown priority '{s}' (one of: interactive, standard, batch)"
-                        )),
-                    );
-                    continue;
-                }
-            },
-            Json::Num(n) => {
-                let parsed = (n.fract() == 0.0)
-                    .then(|| format!("{}", *n as i64))
-                    .and_then(|s| Priority::parse(&s));
-                match parsed {
-                    Some(p) => p,
-                    None => {
-                        write_line(
-                            &writer,
-                            &error_line("numeric priority must be 0, 1, or 2"),
-                        );
-                        continue;
-                    }
-                }
-            }
-            _ => {
-                write_line(&writer, &error_line("priority must be a string or number"));
-                continue;
-            }
-        };
-        let deadline_us = match j.get("deadline_ms") {
-            Json::Null => None,
-            Json::Num(ms) if ms.is_finite() && *ms > 0.0 => Some((*ms * 1e3) as u64),
-            _ => {
-                // Same contract as priority: a bad SLO field gets an
-                // in-band error instead of silently running unenforced.
-                write_line(
-                    &writer,
-                    &error_line("deadline_ms must be a positive number of milliseconds"),
-                );
-                continue;
-            }
-        };
-        let mut req = Request::new(
-            next_id.fetch_add(1, Ordering::Relaxed),
-            prompt,
-            j.get("max_new_tokens").as_usize().unwrap_or(32),
-        );
-        req.temperature = j.get("temperature").as_f64().map(|t| t as f32);
-        req.priority = priority;
-        req.deadline_us = deadline_us;
-        if tx.send(Inbound { req, conn: writer.clone() }).is_err() {
-            write_line(&writer, &error_line("server is shutting down"));
-            return;
-        }
-    }
+/// Per-request routing state held by the driver while the request is
+/// pending.
+struct Route {
+    worker: usize,
+    conn_id: u64,
+    stream: bool,
+    tag: Option<String>,
 }
 
-/// Serve until `stop` flips true (tests) or forever (CLI). Binds `addr`,
-/// returns the bound address via the callback before blocking.
+/// Queue capacities. Small enough to bound memory per stage, large enough
+/// that a tick's worth of completions never blocks the driver in practice.
+const INTAKE_CAP: usize = 64;
+const DRIVER_CAP: usize = 512;
+
+/// Serve until `stop` flips true (tests) or forever (CLI), with the default
+/// front-end shape (2 IO workers, no admin plane). Binds `addr`, reports
+/// the bound address via the callback before blocking. Kept as the
+/// compatibility entry point; [`serve_with`] exposes the staged knobs.
 pub fn serve(
-    mut sched: Scheduler,
+    sched: Scheduler,
     addr: &str,
     stop: Arc<AtomicBool>,
-    on_bound: impl FnOnce(std::net::SocketAddr),
+    on_bound: impl FnOnce(SocketAddr),
 ) -> Result<()> {
+    serve_with(sched, addr, ServerConfig::default(), stop, |b| on_bound(b.data))
+}
+
+/// Serve with an explicit front-end shape. Binds the data listener at
+/// `addr` (and the admin listener at `cfg.admin_addr`, if set), reports the
+/// bound addresses via `on_bound`, then runs the driver loop on the calling
+/// thread until `stop` flips true. Every stage thread is joined before
+/// returning.
+pub fn serve_with(
+    mut sched: Scheduler,
+    addr: &str,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(Bound),
+) -> Result<()> {
+    let n_workers = cfg.io_workers.max(1);
     let listener = TcpListener::bind(addr).context("bind")?;
     listener.set_nonblocking(true)?;
-    on_bound(listener.local_addr()?);
-    let (tx, rx) = mpsc::channel::<Inbound>();
-    let next_id = Arc::new(AtomicU64::new(1));
+    let admin_listener = match &cfg.admin_addr {
+        Some(a) => {
+            let l = TcpListener::bind(a).context("bind admin")?;
+            l.set_nonblocking(true)?;
+            Some(l)
+        }
+        None => None,
+    };
+    on_bound(Bound {
+        data: listener.local_addr()?,
+        admin: match &admin_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        },
+    });
 
-    // Acceptor + reader threads.
+    // One SPSC pair per worker (worker→driver, driver→worker) plus a
+    // listener→worker intake queue. Each queue has exactly one producer
+    // thread and one consumer thread, which is what makes SPSC legal here.
+    let mut intake_tx: Vec<Producer<(u64, TcpStream)>> = Vec::new();
+    let mut from_workers: Vec<Consumer<ToDriver>> = Vec::new();
+    let mut to_workers: Vec<Producer<Outbound>> = Vec::new();
+    let mut worker_handles = Vec::new();
+    for _ in 0..n_workers {
+        let (itx, irx) = spsc::channel::<(u64, TcpStream)>(INTAKE_CAP);
+        let (dtx, drx) = spsc::channel::<ToDriver>(DRIVER_CAP);
+        let (wtx, wrx) = spsc::channel::<Outbound>(DRIVER_CAP);
+        intake_tx.push(itx);
+        from_workers.push(drx);
+        to_workers.push(wtx);
+        let stop_w = stop.clone();
+        worker_handles.push(std::thread::spawn(move || io_worker_loop(irx, dtx, wrx, stop_w)));
+    }
+
+    // Listener thread: accept and deal out connections round-robin.
     let stop_acc = stop.clone();
     let acceptor = std::thread::spawn(move || {
+        let mut next_conn = 1u64;
+        let mut turn = 0usize;
         while !stop_acc.load(Ordering::Relaxed) {
             match listener.accept() {
                 Ok((conn, _)) => {
-                    let tx = tx.clone();
-                    let next_id = next_id.clone();
-                    std::thread::spawn(move || reader_loop(conn, tx, next_id));
+                    let mut msg = (next_conn, conn);
+                    next_conn += 1;
+                    loop {
+                        match intake_tx[turn].try_push(msg) {
+                            Ok(()) => break,
+                            Err(back) => {
+                                if stop_acc.load(Ordering::Relaxed) {
+                                    return;
+                                }
+                                msg = back;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    turn = (turn + 1) % intake_tx.len();
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -247,42 +173,261 @@ pub fn serve(
         }
     });
 
-    // Scheduler loop (owns the engine; decode attention fans out over the
+    // Admin plane: its connections only read the driver-refreshed snapshot.
+    let snapshot: SharedSnapshot = Arc::new(Mutex::new(Vec::new()));
+    let admin_handle = admin_listener.map(|l| {
+        let snap = snapshot.clone();
+        let stop_a = stop.clone();
+        std::thread::spawn(move || admin_loop(l, snap, stop_a))
+    });
+
+    // Driver loop (owns the engine; decode attention fans out over the
     // engine's worker pool). The scheduler's virtual clock is advanced from
     // wall-clock elapsed time so request deadlines expire in live serving
     // exactly as they would in a replay.
+    sched.record_progress(true);
     let started = Instant::now();
-    let mut conns: std::collections::HashMap<u64, SharedConn> = Default::default();
+    let mut routes: HashMap<u64, Route> = HashMap::new();
+    let mut next_req = 1u64;
+    let mut ttft_hist = LatencyHistogram::new();
+    let mut e2e_hist = LatencyHistogram::new();
+    let mut pending: Vec<(usize, ToDriver)> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         sched.set_now(started.elapsed().as_micros() as u64);
-        // ingest
-        while let Ok(inb) = rx.try_recv() {
-            conns.insert(inb.req.id, inb.conn);
-            sched.submit(inb.req);
+        let mut busy = false;
+
+        // Ingest: messages parked by a full outbound queue first, then the
+        // live worker queues, in worker order (deterministic for one
+        // worker; arrival-interleaved for several, like any real server).
+        for (w, msg) in std::mem::take(&mut pending) {
+            busy = true;
+            handle_msg(&mut sched, &mut routes, &mut next_req, w, msg);
         }
-        let worked = sched.tick()?;
-        // flush completions (including failed ones, which carry `error`)
-        for c in sched.done.drain(..) {
-            if let Some(conn) = conns.remove(&c.id) {
-                let mut fields = vec![
-                    ("id", Json::Num(c.id as f64)),
-                    ("text", Json::str(&c.text)),
-                    ("n_generated", Json::Num(c.n_generated as f64)),
-                    ("ttft_us", Json::Num(c.ttft_us as f64)),
-                    ("total_us", Json::Num(c.total_us as f64)),
-                ];
-                if let Some(err) = &c.error {
-                    fields.push(("error", Json::str(err)));
-                }
-                write_line(&conn, &Json::obj(fields).dump());
+        for w in 0..n_workers {
+            while let Some(msg) = from_workers[w].try_pop() {
+                busy = true;
+                handle_msg(&mut sched, &mut routes, &mut next_req, w, msg);
             }
         }
-        if !worked {
+
+        busy |= sched.tick()?;
+
+        // Stream per-token lines for requests that opted in.
+        for (id, tok) in sched.take_progress() {
+            let Some(r) = routes.get(&id) else { continue };
+            if !r.stream {
+                continue;
+            }
+            let mut fields = vec![
+                ("id", Json::Num(id as f64)),
+                ("token", Json::str(&sched.engine.manifest.decode_text(&[tok]))),
+            ];
+            if let Some(tag) = &r.tag {
+                fields.push(("tag", Json::str(tag)));
+            }
+            let (worker, conn_id) = (r.worker, r.conn_id);
+            send_to_worker(
+                &mut to_workers,
+                &mut from_workers,
+                &mut pending,
+                &stop,
+                worker,
+                Outbound { conn_id, line: Json::obj(fields).dump() },
+            );
+        }
+
+        // Flush completions (including failed ones, which carry `error`).
+        let done: Vec<_> = sched.done.drain(..).collect();
+        for c in done {
+            let Some(r) = routes.remove(&c.id) else { continue };
+            if c.error.is_none() {
+                ttft_hist.record(c.ttft_us);
+                e2e_hist.record(c.total_us);
+            }
+            let mut fields = vec![
+                ("id", Json::Num(c.id as f64)),
+                ("text", Json::str(&c.text)),
+                ("n_generated", Json::Num(c.n_generated as f64)),
+                ("ttft_us", Json::Num(c.ttft_us as f64)),
+                ("total_us", Json::Num(c.total_us as f64)),
+            ];
+            if let Some(tag) = &r.tag {
+                fields.push(("tag", Json::str(tag)));
+            }
+            if let Some(err) = &c.error {
+                fields.push(("error", Json::str(err)));
+            }
+            send_to_worker(
+                &mut to_workers,
+                &mut from_workers,
+                &mut pending,
+                &stop,
+                r.worker,
+                Outbound { conn_id: r.conn_id, line: Json::obj(fields).dump() },
+            );
+        }
+
+        // Refresh the admin snapshot (cheap: a few dozen counters).
+        {
+            let mut snap = snapshot.lock().unwrap_or_else(|e| e.into_inner());
+            *snap = build_snapshot(&sched, &ttft_hist, &e2e_hist, started);
+        }
+
+        if !busy {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
     }
+
     let _ = acceptor.join();
+    for h in worker_handles {
+        let _ = h.join();
+    }
+    if let Some(h) = admin_handle {
+        let _ = h.join();
+    }
     Ok(())
+}
+
+/// Apply one worker message to the scheduler: assign an id and submit, or
+/// cancel everything a vanished connection still had pending.
+fn handle_msg(
+    sched: &mut Scheduler,
+    routes: &mut HashMap<u64, Route>,
+    next_req: &mut u64,
+    worker: usize,
+    msg: ToDriver,
+) {
+    match msg {
+        ToDriver::Submit { conn_id, spec } => {
+            let id = *next_req;
+            *next_req += 1;
+            let mut req = Request::new(id, spec.prompt, spec.max_new_tokens);
+            req.temperature = spec.temperature;
+            req.priority = spec.priority;
+            req.deadline_us = spec.deadline_us;
+            req.prefix_len = spec.prefix_len;
+            routes.insert(id, Route { worker, conn_id, stream: spec.stream, tag: spec.tag });
+            sched.submit(req);
+        }
+        ToDriver::Disconnect { conn_id } => {
+            let ids: Vec<u64> = routes
+                .iter()
+                .filter(|(_, r)| r.worker == worker && r.conn_id == conn_id)
+                .map(|(&id, _)| id)
+                .collect();
+            for id in ids {
+                sched.cancel(id);
+                routes.remove(&id);
+            }
+        }
+    }
+}
+
+/// Push a response line to a worker, spinning on a full queue. While
+/// spinning, keep draining the worker→driver queues into `pending` — the
+/// workers spin-push toward us the same way, and someone has to keep
+/// consuming for either side to make progress. Parked messages are replayed
+/// at the top of the next driver iteration.
+fn send_to_worker(
+    to_workers: &mut [Producer<Outbound>],
+    from_workers: &mut [Consumer<ToDriver>],
+    pending: &mut Vec<(usize, ToDriver)>,
+    stop: &AtomicBool,
+    worker: usize,
+    msg: Outbound,
+) {
+    let mut msg = msg;
+    loop {
+        match to_workers[worker].try_push(msg) {
+            Ok(()) => return,
+            Err(back) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                msg = back;
+                for (w, rx) in from_workers.iter_mut().enumerate() {
+                    while let Some(m) = rx.try_pop() {
+                        pending.push((w, m));
+                    }
+                }
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// Assemble the admin `stats` snapshot: scheduler step counters, cache-pool
+/// occupancy, warm-tier and prefix-store counters, and live latency
+/// percentiles. Every value is a u64; counters are monotonic, gauges (pool
+/// bytes, residents, pins) are instantaneous.
+fn build_snapshot(
+    sched: &Scheduler,
+    ttft: &LatencyHistogram,
+    e2e: &LatencyHistogram,
+    started: Instant,
+) -> Vec<(String, u64)> {
+    let m = &sched.metrics;
+    let ts = &sched.tier.stats;
+    let ps = &sched.prefix_store.stats;
+    let mut out: Vec<(String, u64)> = Vec::with_capacity(64);
+    let mut push = |name: &str, v: u64| out.push((name.to_string(), v));
+    push("uptime_us", started.elapsed().as_micros() as u64);
+    push("pending", sched.pending() as u64);
+    // StepMetrics (monotonic).
+    push("prefill_tokens", m.prefill_tokens);
+    push("decode_steps", m.decode_steps);
+    push("batched_seqs", m.batched_seqs);
+    push("preemptions", m.preemptions);
+    push("attn_jobs", m.attn_jobs);
+    push("stale_reservations", m.stale_reservations);
+    push("rejected", m.rejected);
+    push("expired", m.expired);
+    push("cancelled", m.cancelled);
+    push("offloads", m.offloads);
+    push("offload_bytes", m.offload_bytes);
+    push("restores", m.restores);
+    push("restore_bytes", m.restore_bytes);
+    push("offload_lost", m.offload_lost);
+    push("window_frames_dropped", m.window_frames_dropped);
+    push("window_rebuilds", m.window_rebuilds);
+    push("bypass_admissions", m.bypass_admissions);
+    push("prefix_hits", m.prefix_hits);
+    push("prefix_bytes_shared", m.prefix_bytes_shared);
+    // Cache pool (gauges).
+    push("pool_used_bytes", sched.pool.used_bytes() as u64);
+    push("pool_free_bytes", sched.pool.free_bytes() as u64);
+    push("pool_reserved", sched.pool.n_reserved() as u64);
+    // Warm tier.
+    push("tier_residents", sched.tier.n_residents() as u64);
+    push("tier_resident_bytes", sched.tier.resident_bytes() as u64);
+    push("tier_inserts", ts.inserts);
+    push("tier_hits", ts.hits);
+    push("tier_evictions", ts.evictions);
+    push("tier_evicted_bytes", ts.evicted_bytes);
+    // Prefix store.
+    push("prefix_images", sched.prefix_store.n_images() as u64);
+    push("prefix_resident_bytes", sched.prefix_store.resident_bytes() as u64);
+    push("prefix_pinned_images", sched.prefix_store.pinned_images() as u64);
+    push("prefix_pins", sched.prefix_pins() as u64);
+    push("prefix_store_hits", ps.hits);
+    push("prefix_store_inserts", ps.inserts);
+    push("prefix_store_released", ps.released);
+    // Latency percentiles over completed requests (live histograms).
+    let t = ttft.summary();
+    push("ttft_count", t.count as u64);
+    push("ttft_mean_us", t.mean_us);
+    push("ttft_p50_us", t.p50_us);
+    push("ttft_p90_us", t.p90_us);
+    push("ttft_p99_us", t.p99_us);
+    push("ttft_max_us", t.max_us);
+    let e = e2e.summary();
+    push("e2e_count", e.count as u64);
+    push("e2e_mean_us", e.mean_us);
+    push("e2e_p50_us", e.p50_us);
+    push("e2e_p90_us", e.p90_us);
+    push("e2e_p99_us", e.p99_us);
+    push("e2e_max_us", e.max_us);
+    out
 }
 
 /// Minimal blocking client for examples and tests.
@@ -337,5 +482,63 @@ impl Client {
         let mut resp = String::new();
         self.reader.read_line(&mut resp)?;
         Json::parse(&resp).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+}
+
+/// Minimal blocking admin-plane client for tests: send one command line,
+/// read the reply (multi-line for `stats`, terminated by `END`).
+pub struct AdminClient {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl AdminClient {
+    /// Connect to an admin endpoint (as reported by [`serve_with`]'s
+    /// `on_bound` callback).
+    pub fn connect(addr: std::net::SocketAddr) -> Result<AdminClient> {
+        let conn = TcpStream::connect(addr)?;
+        let reader = BufReader::new(conn.try_clone()?);
+        Ok(AdminClient { conn, reader })
+    }
+
+    /// Send one command line and read exactly one reply line.
+    pub fn command(&mut self, cmd: &str) -> Result<String> {
+        writeln!(self.conn, "{cmd}")?;
+        self.read_reply_line()
+    }
+
+    /// Send `stats` and parse the `STAT name value` lines up to `END` into
+    /// an ordered list.
+    pub fn stats(&mut self) -> Result<Vec<(String, u64)>> {
+        writeln!(self.conn, "stats")?;
+        let mut out = Vec::new();
+        loop {
+            let line = self.read_reply_line()?;
+            if line == "END" {
+                return Ok(out);
+            }
+            let mut parts = line.splitn(3, ' ');
+            let (kw, name, value) =
+                (parts.next().unwrap_or(""), parts.next(), parts.next());
+            let (Some(name), Some(value)) = (name, value) else {
+                anyhow::bail!("malformed stats line: {line:?}");
+            };
+            if kw != "STAT" {
+                anyhow::bail!("expected STAT, got: {line:?}");
+            }
+            out.push((name.to_string(), value.parse::<u64>().context("stat value")?));
+        }
+    }
+
+    /// Read one reply line (CRLF or LF terminated, terminator stripped).
+    fn read_reply_line(&mut self) -> Result<String> {
+        match read_line_capped(&mut self.reader)? {
+            super::conn::LineRead::Line(bytes) => {
+                let s = String::from_utf8_lossy(&bytes);
+                Ok(s.trim_end_matches('\r').to_string())
+            }
+            super::conn::LineRead::TooLong => anyhow::bail!("admin reply line too long"),
+            super::conn::LineRead::Eof => anyhow::bail!("admin connection closed"),
+        }
     }
 }

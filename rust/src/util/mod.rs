@@ -4,5 +4,6 @@ pub mod fp16;
 pub mod json;
 pub mod ptest;
 pub mod rng;
+pub mod spsc;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,243 @@
+//! Bounded lock-free single-producer single-consumer queues.
+//!
+//! The staged server front end (`server/`) moves work between its IO-worker
+//! threads and the scheduler driver exclusively over pairs of these queues —
+//! one direction per queue, one producer and one consumer per side, in the
+//! style of pelikan's `queues/spsc`. Restricting each queue to exactly one
+//! producer thread and one consumer thread is what makes a mutex-free ring
+//! correct with only two atomics:
+//!
+//! * `head` (next write slot) is written only by the producer and read with
+//!   `Acquire` by the consumer;
+//! * `tail` (next read slot) is written only by the consumer and read with
+//!   `Acquire` by the producer.
+//!
+//! Both indices increase monotonically and are masked into the power-of-two
+//! ring on access, so full (`head - tail == capacity`) and empty
+//! (`head == tail`) are unambiguous without a wasted slot.
+//!
+//! The queue is *bounded*: `try_push` refuses (returning the item) when the
+//! ring is full, which is the backpressure signal the server stages rely on —
+//! a slow consumer stalls its producer instead of growing an unbounded
+//! buffer. Blocking helpers are deliberately not provided here; callers spin
+//! with their own stop-flag checks so shutdown can never deadlock on a queue.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared ring state. Owned jointly by one [`Producer`] and one [`Consumer`]
+/// through an `Arc`; dropped (including any items still queued) when the
+/// second half goes away.
+struct Inner<T> {
+    buf: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    mask: usize,
+    /// Next slot the producer will write. Producer-owned; consumer reads.
+    head: AtomicUsize,
+    /// Next slot the consumer will read. Consumer-owned; producer reads.
+    tail: AtomicUsize,
+}
+
+// The UnsafeCell slots are only ever touched by the single producer (writes
+// at `head`) and the single consumer (reads at `tail`), never concurrently
+// for the same slot: a slot becomes consumer-visible only via the Release
+// store of `head`, and reusable only via the Release store of `tail`.
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Only one thread can be here (last Arc owner); plain loads suffice.
+        let head = *self.head.get_mut();
+        let mut tail = *self.tail.get_mut();
+        while tail != head {
+            let slot = &self.buf[tail & self.mask];
+            unsafe { (*slot.get()).assume_init_drop() };
+            tail = tail.wrapping_add(1);
+        }
+    }
+}
+
+/// The sending half of an SPSC queue. `Send` but not `Clone`: exactly one
+/// thread may push.
+pub struct Producer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// The receiving half of an SPSC queue. `Send` but not `Clone`: exactly one
+/// thread may pop.
+pub struct Consumer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a bounded SPSC queue holding at least `capacity` items (rounded up
+/// to the next power of two, minimum 2) and split it into its two halves.
+pub fn channel<T: Send>(capacity: usize) -> (Producer<T>, Consumer<T>) {
+    let cap = capacity.max(2).next_power_of_two();
+    let buf: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let inner = Arc::new(Inner {
+        buf,
+        mask: cap - 1,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+    });
+    (Producer { inner: inner.clone() }, Consumer { inner })
+}
+
+impl<T> Producer<T> {
+    /// Push `item`, or return it in `Err` if the ring is full.
+    pub fn try_push(&mut self, item: T) -> Result<(), T> {
+        let inner = &*self.inner;
+        let head = inner.head.load(Ordering::Relaxed);
+        let tail = inner.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) > inner.mask {
+            return Err(item);
+        }
+        let slot = &inner.buf[head & inner.mask];
+        unsafe { (*slot.get()).write(item) };
+        inner.head.store(head.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Number of items currently queued (racy by nature; exact only when the
+    /// consumer is quiescent).
+    pub fn len(&self) -> usize {
+        let head = self.inner.head.load(Ordering::Relaxed);
+        let tail = self.inner.tail.load(Ordering::Acquire);
+        head.wrapping_sub(tail)
+    }
+
+    /// True when no items are queued (same caveat as [`Producer::len`]).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity in items.
+    pub fn capacity(&self) -> usize {
+        self.inner.mask + 1
+    }
+}
+
+impl<T> Consumer<T> {
+    /// Pop the oldest item, or `None` if the ring is empty.
+    pub fn try_pop(&mut self) -> Option<T> {
+        let inner = &*self.inner;
+        let tail = inner.tail.load(Ordering::Relaxed);
+        let head = inner.head.load(Ordering::Acquire);
+        if tail == head {
+            return None;
+        }
+        let slot = &inner.buf[tail & inner.mask];
+        let item = unsafe { (*slot.get()).assume_init_read() };
+        inner.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Some(item)
+    }
+
+    /// Number of items currently queued (racy by nature; exact only when the
+    /// producer is quiescent).
+    pub fn len(&self) -> usize {
+        let tail = self.inner.tail.load(Ordering::Relaxed);
+        let head = self.inner.head.load(Ordering::Acquire);
+        head.wrapping_sub(tail)
+    }
+
+    /// True when no items are queued (same caveat as [`Consumer::len`]).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity in items.
+    pub fn capacity(&self) -> usize {
+        self.inner.mask + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let (mut tx, mut rx) = channel::<u32>(4);
+        assert_eq!(tx.capacity(), 4);
+        for i in 0..4 {
+            tx.try_push(i).unwrap();
+        }
+        // Full: the rejected item comes back.
+        assert_eq!(tx.try_push(99), Err(99));
+        for i in 0..4 {
+            assert_eq!(rx.try_pop(), Some(i));
+        }
+        assert_eq!(rx.try_pop(), None);
+        // Wrap-around keeps FIFO order.
+        for round in 0..10u32 {
+            tx.try_push(round).unwrap();
+            tx.try_push(round + 100).unwrap();
+            assert_eq!(rx.try_pop(), Some(round));
+            assert_eq!(rx.try_pop(), Some(round + 100));
+        }
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        let (tx, _rx) = channel::<u8>(5);
+        assert_eq!(tx.capacity(), 8);
+        let (tx, _rx) = channel::<u8>(0);
+        assert_eq!(tx.capacity(), 2);
+    }
+
+    #[test]
+    fn cross_thread_transfer_preserves_order() {
+        let (mut tx, mut rx) = channel::<usize>(8);
+        const N: usize = 10_000;
+        let producer = thread::spawn(move || {
+            for i in 0..N {
+                let mut item = i;
+                loop {
+                    match tx.try_push(item) {
+                        Ok(()) => break,
+                        Err(back) => {
+                            item = back;
+                            thread::yield_now();
+                        }
+                    }
+                }
+            }
+        });
+        let mut next = 0usize;
+        while next < N {
+            match rx.try_pop() {
+                Some(v) => {
+                    assert_eq!(v, next);
+                    next += 1;
+                }
+                None => thread::yield_now(),
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(rx.try_pop(), None);
+    }
+
+    #[test]
+    fn queued_items_drop_with_the_ring() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Counted;
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let (mut tx, mut rx) = channel::<Counted>(4);
+        tx.try_push(Counted).unwrap();
+        tx.try_push(Counted).unwrap();
+        tx.try_push(Counted).unwrap();
+        drop(rx.try_pop()); // one dropped by consumption
+        drop(tx);
+        drop(rx); // two dropped with the ring
+        assert_eq!(DROPS.load(Ordering::SeqCst), 3);
+    }
+}

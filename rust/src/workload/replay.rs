@@ -174,6 +174,11 @@ pub struct RequestRecord {
     pub finished_us: Option<u64>,
     /// Generated tokens (0 unless [`Outcome::Ok`]).
     pub n_generated: usize,
+    /// Completion text (empty unless [`Outcome::Ok`]). Deterministic for a
+    /// fixed trace, like everything else here — this is the oracle the
+    /// socket-vs-replay tests and `benches/server_loadgen.rs` compare the
+    /// real staged server's per-request output bytes against.
+    pub text: String,
     /// Times the request was preempted out of the decode batch (recompute
     /// re-queues and offload snapshots both count).
     pub preemptions: u32,
@@ -336,6 +341,7 @@ impl ReplayReport {
                         r.finished_us.map_or(Json::Null, |v| Json::Num(v as f64)),
                     ),
                     ("n_generated", Json::Num(r.n_generated as f64)),
+                    ("text", Json::str(&r.text)),
                     ("preemptions", Json::Num(r.preemptions as f64)),
                     ("offloads", Json::Num(r.offloads as f64)),
                     ("restores", Json::Num(r.restores as f64)),
@@ -453,6 +459,7 @@ pub fn replay(
             admitted_us: None,
             finished_us: None,
             n_generated: 0,
+            text: String::new(),
             preemptions: 0,
             offloads: 0,
             restores: 0,
@@ -526,9 +533,19 @@ pub fn replay(
                     r.n_generated = n_generated;
                     last_terminal_us = now;
                 }
+                // Cancellation is a live-server concept (client disconnect);
+                // a replayed trace has no client to hang up, so this never
+                // fires here.
+                SchedEvent::Cancelled { .. } => {}
             }
         }
-        sched.done.clear();
+        for c in sched.done.drain(..) {
+            if c.error.is_none() {
+                if let Some(&ri) = idx_of.get(&c.id) {
+                    records[ri].text = c.text;
+                }
+            }
+        }
         if !worked {
             if next < trace.len() {
                 now = now.max(trace[next].arrival_us);

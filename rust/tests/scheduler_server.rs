@@ -7,7 +7,7 @@
 
 use innerq::coordinator::{Engine, Policy, Priority, Request, SchedEvent, Scheduler};
 use innerq::runtime::Manifest;
-use innerq::server::{serve, Client};
+use innerq::server::{serve, serve_with, AdminClient, Client, ServerConfig};
 use innerq::util::fakemodel::write_fake_artifacts;
 use innerq::QuantMethod;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -423,5 +423,143 @@ fn server_answers_malformed_requests_and_serves_valid_ones() {
 
     stop.store(true, Ordering::Relaxed);
     let _ = std::net::TcpStream::connect(addr); // poke the acceptor awake
+    server.join().expect("server thread").expect("serve result");
+}
+
+// ---------------------------------------------------------------------------
+// Admin/metrics plane: the second listener must expose live counters in the
+// documented text format, move them monotonically under load, and stay
+// strictly read-only — no admin command, valid or garbage, may perturb the
+// data plane.
+// ---------------------------------------------------------------------------
+
+fn start_admin_server(
+    tag: &str,
+) -> (
+    Arc<AtomicBool>,
+    innerq::server::Bound,
+    std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let dir = write_fake_artifacts(tag, '7');
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let (bound_tx, bound_rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let manifest = Manifest::load(&dir).expect("fake manifest");
+        let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+        engine.set_workers(2);
+        let sched = Scheduler::new(engine, 1 << 30);
+        let cfg = ServerConfig { io_workers: 2, admin_addr: Some("127.0.0.1:0".into()) };
+        serve_with(sched, "127.0.0.1:0", cfg, stop_srv, move |b| {
+            let _ = bound_tx.send(b);
+        })
+    });
+    let bound = bound_rx.recv().expect("server bound");
+    (stop, bound, server)
+}
+
+fn stat(stats: &[(String, u64)], name: &str) -> u64 {
+    stats
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("stat '{name}' missing from admin snapshot"))
+        .1
+}
+
+#[test]
+fn admin_stats_parse_and_counters_move_monotonically_under_load() {
+    let (stop, bound, server) = start_admin_server("admin_stats");
+    let admin_addr = bound.admin.expect("admin plane enabled");
+    let mut admin = AdminClient::connect(admin_addr).expect("admin connect");
+
+    // Golden format: `version` names the crate version, `stats` parses into
+    // ordered (name, value) pairs carrying the documented counter set.
+    let version = admin.command("version").expect("version");
+    assert_eq!(version, format!("VERSION {}", env!("CARGO_PKG_VERSION")));
+    let before = admin.stats().expect("stats");
+    for name in [
+        "uptime_us",
+        "pending",
+        "decode_steps",
+        "cancelled",
+        "pool_used_bytes",
+        "tier_residents",
+        "prefix_pins",
+        "ttft_count",
+        "e2e_p99_us",
+    ] {
+        let _ = stat(&before, name); // panics if missing
+    }
+    assert_eq!(stat(&before, "e2e_count"), 0, "no completions yet");
+
+    // Load: a few completed requests must move the monotonic counters and
+    // leave the gauges drained.
+    let mut client = Client::connect(bound.data).expect("connect");
+    for _ in 0..3 {
+        let resp = client.generate("a=15;?a=", 2).expect("completion");
+        assert_eq!(resp.get("text").as_str(), Some("77"));
+    }
+    // The driver refreshes the snapshot once per loop; give it a beat.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    let after = loop {
+        let s = admin.stats().expect("stats");
+        if stat(&s, "e2e_count") >= 3 {
+            break s;
+        }
+        assert!(std::time::Instant::now() < deadline, "snapshot never caught up: {s:?}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    };
+    assert!(stat(&after, "decode_steps") > stat(&before, "decode_steps"));
+    assert!(stat(&after, "prefill_tokens") > stat(&before, "prefill_tokens"));
+    assert!(stat(&after, "uptime_us") > stat(&before, "uptime_us"));
+    assert_eq!(stat(&after, "ttft_count"), 3);
+    assert_eq!(stat(&after, "pool_used_bytes"), 0, "nothing live after completion");
+    assert_eq!(stat(&after, "pending"), 0);
+
+    // Monotonic counters never move backwards between snapshots.
+    let again = admin.stats().expect("stats");
+    for name in ["decode_steps", "prefill_tokens", "e2e_count", "cancelled", "rejected"] {
+        assert!(
+            stat(&again, name) >= stat(&after, name),
+            "{name} moved backwards"
+        );
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread").expect("serve result");
+}
+
+#[test]
+fn admin_garbage_and_quit_never_touch_the_data_plane() {
+    let (stop, bound, server) = start_admin_server("admin_garbage");
+    let admin_addr = bound.admin.expect("admin plane enabled");
+
+    // Garbage commands are answered with ERROR lines, in order, and the
+    // connection stays usable.
+    let mut admin = AdminClient::connect(admin_addr).expect("admin connect");
+    let resp = admin.command("bogus").expect("error reply");
+    assert_eq!(resp, "ERROR unknown command 'bogus'");
+    let resp = admin.command("stats extra-arg").expect("error reply");
+    assert!(resp.starts_with("ERROR unknown command"));
+    let resp = admin.command("version").expect("still serving");
+    assert!(resp.starts_with("VERSION "));
+
+    // `quit` closes only this admin connection; a fresh one still serves.
+    assert!(admin.command("quit").is_err(), "quit must close the connection");
+    let mut admin2 = AdminClient::connect(admin_addr).expect("admin reconnect");
+    let stats = admin2.stats().expect("stats after quit");
+    assert!(stat(&stats, "uptime_us") > 0);
+
+    // Through all of the above the data plane never noticed: a request
+    // completes exactly, and the abuse left no counters behind.
+    let mut client = Client::connect(bound.data).expect("connect");
+    let resp = client.generate("b=22;?b=", 3).expect("completion");
+    assert_eq!(resp.get("text").as_str(), Some("777"));
+    assert_eq!(resp.get("error").as_str(), None);
+    let stats = admin2.stats().expect("stats");
+    assert_eq!(stat(&stats, "rejected"), 0);
+    assert_eq!(stat(&stats, "cancelled"), 0);
+
+    stop.store(true, Ordering::Relaxed);
     server.join().expect("server thread").expect("serve result");
 }

@@ -1,0 +1,256 @@
+//! Disconnect-cancellation matrix: cancelling a request at every point in
+//! its lifecycle — queued, live mid-decode, offloaded to the warm tier,
+//! borrowing a shared prefix — must release every hold it has (cache-pool
+//! reservation, warm-tier residency, prefix-store pin), emit a terminal
+//! `Cancelled` event instead of a completion, and leave the freed budget
+//! admissible to the next request. The socket-level test proves the full
+//! wire path: a client that hangs up mid-stream is cancelled by the driver,
+//! observed live through the admin plane.
+
+use innerq::coordinator::{
+    Engine, Policy, Preemption, Priority, Request, SchedEvent, Scheduler,
+};
+use innerq::runtime::Manifest;
+use innerq::server::{serve_with, AdminClient, Client, ServerConfig};
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::QuantMethod;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn fake_scheduler(tag: &str, budget: usize) -> Scheduler {
+    let dir = write_fake_artifacts(tag, '7');
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    engine.set_workers(1);
+    Scheduler::new(engine, budget)
+}
+
+fn req(id: u64, prompt: &str, max_new_tokens: usize) -> Request {
+    Request::new(id, prompt, max_new_tokens)
+}
+
+fn cancelled_ids(sched: &mut Scheduler) -> Vec<u64> {
+    sched
+        .take_events()
+        .into_iter()
+        .filter_map(|e| match e {
+            SchedEvent::Cancelled { id } => Some(id),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn cancel_while_queued_removes_the_request_without_touching_the_pool() {
+    // Budget fits one sequence: id 2 parks in the queue behind live id 1.
+    let mut sched = fake_scheduler("cancel_queued", 6000);
+    sched.record_events(true);
+    sched.submit(req(1, "a=1;?a=", 2));
+    sched.tick().unwrap(); // id 1 live
+    sched.submit(req(2, "b=2;?b=", 2));
+    let used_before = sched.pool.used_bytes();
+    assert!(sched.cancel(2), "queued request must be cancellable");
+    assert_eq!(
+        sched.pool.used_bytes(),
+        used_before,
+        "a queued request holds no reservation to release"
+    );
+    assert_eq!(sched.metrics.cancelled, 1);
+    assert_eq!(cancelled_ids(&mut sched), vec![2]);
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1, "no completion may be emitted for a cancelled request");
+    assert_eq!(done[0].id, 1);
+    assert_eq!(done[0].text, "77");
+    assert_eq!(sched.pool.used_bytes(), 0);
+}
+
+#[test]
+fn cancel_mid_decode_releases_the_reservation_and_frees_the_budget() {
+    // Budget fits exactly one sequence; id 1 decodes a long completion
+    // (max_new 4 keeps it alive across the two ticks before the cancel).
+    let mut sched = fake_scheduler("cancel_live", 6000);
+    sched.record_events(true);
+    sched.submit(req(1, "a=1;?a=", 4));
+    sched.tick().unwrap(); // prefill
+    sched.tick().unwrap(); // mid-decode
+    assert!(sched.pool.used_bytes() > 0, "live sequence must hold a reservation");
+
+    assert!(sched.cancel(1), "live request must be cancellable");
+    assert_eq!(sched.pool.used_bytes(), 0, "cancel must release the reservation");
+    assert_eq!(sched.metrics.cancelled, 1);
+    assert_eq!(cancelled_ids(&mut sched), vec![1]);
+
+    // The freed budget admits the next request immediately.
+    sched.submit(req(2, "b=2;?b=", 2));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 2);
+    assert_eq!(done[0].text, "77");
+    assert!(done[0].error.is_none());
+    assert_eq!(sched.metrics.cancelled, 1, "only the explicit cancel counts");
+}
+
+#[test]
+fn cancel_while_offloaded_drops_the_warm_residency() {
+    // SLO + offload preemption: a live batch sequence is displaced into the
+    // warm tier by an interactive arrival, then cancelled while resident.
+    let mut sched = fake_scheduler("cancel_warm", 6000);
+    sched.record_events(true);
+    sched.set_policy(Policy::Slo);
+    sched.set_preemption(Preemption::Offload);
+    let mut victim = req(1, "a=1;?a=", 2);
+    victim.priority = Priority::Batch;
+    sched.submit(victim);
+    sched.tick().unwrap(); // batch live
+    let mut urgent = req(2, "b=2;?b=", 2);
+    urgent.priority = Priority::Interactive;
+    sched.submit(urgent);
+    sched.tick().unwrap(); // interactive preempts; batch offloads
+    assert_eq!(sched.metrics.preemptions, 1);
+    assert_eq!(sched.tier.n_residents(), 1, "the victim must be warm-resident");
+
+    assert!(sched.cancel(1), "offloaded request must be cancellable");
+    assert_eq!(sched.tier.n_residents(), 0, "cancel must drop the warm residency");
+    assert_eq!(sched.metrics.cancelled, 1);
+    assert_eq!(cancelled_ids(&mut sched), vec![1]);
+
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1, "the cancelled victim never completes or restores");
+    assert_eq!(done[0].id, 2);
+    assert!(done[0].error.is_none());
+    assert_eq!(sched.pool.used_bytes(), 0);
+    assert_eq!(sched.metrics.restores, 0);
+}
+
+#[test]
+fn cancel_while_borrowing_a_shared_prefix_releases_the_pin() {
+    let mut sched = fake_scheduler("cancel_prefix", 1 << 30);
+    // Request 1 establishes the shared prefix image ("a=11;") and finishes.
+    let mut first = req(1, "a=11;b=22;?b=", 2);
+    first.prefix_len = 5;
+    sched.submit(first);
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert!(done[0].error.is_none());
+    assert_eq!(sched.prefix_pins(), 0, "a finished request holds no pin");
+
+    // Request 2 borrows it and is cancelled mid-decode while pinning.
+    let mut borrower = req(2, "a=11;c=33;?c=", 40);
+    borrower.prefix_len = 5;
+    sched.submit(borrower);
+    sched.tick().unwrap(); // prefill (acquires the image)
+    sched.tick().unwrap(); // mid-decode
+    assert_eq!(sched.prefix_pins(), 1, "the borrower must pin the prefix image");
+    assert_eq!(sched.prefix_store.pinned_images(), 1);
+    assert!(sched.pool.used_bytes() > 0);
+
+    assert!(sched.cancel(2));
+    assert_eq!(sched.prefix_pins(), 0, "cancel must release the prefix pin");
+    assert_eq!(sched.prefix_store.pinned_images(), 0);
+    assert_eq!(sched.pool.used_bytes(), 0);
+    assert_eq!(sched.metrics.cancelled, 1);
+
+    // The unpinned image is still reusable by a healthy successor.
+    let mut again = req(3, "a=11;d=44;?d=", 2);
+    again.prefix_len = 5;
+    sched.submit(again);
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].id, 3);
+    assert!(done[0].error.is_none());
+    assert_eq!(sched.prefix_pins(), 0);
+    assert_eq!(sched.pool.used_bytes(), 0);
+}
+
+#[test]
+fn cancel_of_an_unknown_id_is_a_no_op() {
+    let mut sched = fake_scheduler("cancel_unknown", 1 << 30);
+    sched.record_events(true);
+    assert!(!sched.cancel(42), "nothing to cancel");
+    assert_eq!(sched.metrics.cancelled, 0);
+    assert!(cancelled_ids(&mut sched).is_empty());
+    // A finished request is equally uncancellable.
+    sched.submit(req(1, "a=1;?a=", 2));
+    let done = sched.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert!(!sched.cancel(1));
+    assert_eq!(sched.metrics.cancelled, 0);
+}
+
+/// Read one admin counter out of a `stats` snapshot.
+fn stat(stats: &[(String, u64)], name: &str) -> u64 {
+    stats
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("stat '{name}' missing from admin snapshot"))
+        .1
+}
+
+#[test]
+fn client_disconnect_mid_stream_cancels_and_releases_everything() {
+    let dir = write_fake_artifacts("cancel_socket", '7');
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let (bound_tx, bound_rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let manifest = Manifest::load(&dir).expect("fake manifest");
+        let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+        engine.set_workers(2);
+        let sched = Scheduler::new(engine, 1 << 30);
+        let cfg = ServerConfig { io_workers: 2, admin_addr: Some("127.0.0.1:0".into()) };
+        serve_with(sched, "127.0.0.1:0", cfg, stop_srv, move |b| {
+            let _ = bound_tx.send(b);
+        })
+    });
+    let bound = bound_rx.recv().expect("server bound");
+    let admin_addr = bound.admin.expect("admin plane enabled");
+
+    // Start a long streaming request and read ONE token line: the request
+    // is provably mid-decode, holding a live reservation.
+    let conn = TcpStream::connect(bound.data).expect("connect");
+    let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+    {
+        let mut w = &conn;
+        w.write_all(b"{\"prompt\": \"a=15;?a=\", \"max_new_tokens\": 300, \"stream\": true}\n")
+            .expect("send");
+        w.flush().expect("flush");
+    }
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("first token line");
+    let j = innerq::util::json::Json::parse(&line).expect("token line parses");
+    assert_eq!(j.get("token").as_str(), Some("7"), "streamed token expected: {line}");
+
+    // Hang up mid-stream. The IO worker reports the disconnect; the driver
+    // cancels the request and releases its reservation mid-decode.
+    drop(reader);
+    conn.shutdown(std::net::Shutdown::Both).expect("shutdown");
+    drop(conn);
+
+    let mut admin = AdminClient::connect(admin_addr).expect("admin connect");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = admin.stats().expect("admin stats");
+        if stat(&stats, "cancelled") >= 1 && stat(&stats, "pool_used_bytes") == 0 {
+            assert_eq!(stat(&stats, "prefix_pins"), 0);
+            assert_eq!(stat(&stats, "tier_residents"), 0);
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect was not cancelled within 10s: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The freed budget serves the next client normally.
+    let mut client = Client::connect(bound.data).expect("connect");
+    let resp = client.generate("b=22;?b=", 2).expect("completion");
+    assert_eq!(resp.get("text").as_str(), Some("77"));
+    assert_eq!(resp.get("error").as_str(), None);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread").expect("serve result");
+}

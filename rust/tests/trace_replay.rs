@@ -223,3 +223,119 @@ fn multi_turn_replay_records_prefix_hits_only_when_sharing() {
     assert_eq!(off.metrics.prefix_bytes_shared, 0);
     assert!(off.records.iter().all(|r| r.prefix_hits == 0));
 }
+
+// ---------------------------------------------------------------------------
+// Socket-vs-replay oracle: the staged server front end is just transport.
+// Driving the same greedy, deadline-free trace through real sockets must
+// produce byte-identical completion text to the virtual-clock replay, at
+// every IO-worker count.
+// ---------------------------------------------------------------------------
+
+/// Greedy, deadline-free, ample-budget trace: completion text is a pure
+/// function of each prompt, so socket timing and IO-worker interleaving
+/// cannot legitimately change it.
+fn oracle_trace(n: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests: n,
+        arrival: Arrival::Poisson { rate_rps: 400.0 },
+        seed: 19,
+        ..TimedTraceConfig::default()
+    })
+}
+
+/// Replay side of the oracle: id → completion text, all requests `Ok`.
+fn replay_texts(trace: &[TimedRequest]) -> BTreeMap<u64, String> {
+    let mut sched = fake_scheduler("sock_oracle", 1 << 30, 2, Policy::Fifo);
+    let report = replay(&mut sched, trace, &CostModel::default()).expect("replay");
+    assert_eq!(report.count(Outcome::Ok), trace.len(), "oracle must complete everything");
+    report.records.iter().map(|r| (r.id, r.text.clone())).collect()
+}
+
+/// Socket side: run a live staged server and push the whole trace through
+/// real connections (pipelined, tagged with the trace ids), collecting
+/// id → completion text off the wire.
+fn socket_texts(tag: &str, trace: &[TimedRequest], io_workers: usize) -> BTreeMap<u64, String> {
+    use innerq::server::{serve_with, ServerConfig};
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{mpsc, Arc};
+
+    let dir = write_fake_artifacts(tag, '7');
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let (bound_tx, bound_rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let manifest = Manifest::load(&dir).expect("fake manifest");
+        let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+        engine.set_workers(2);
+        let sched = Scheduler::new(engine, 1 << 30);
+        let cfg = ServerConfig { io_workers, admin_addr: None };
+        serve_with(sched, "127.0.0.1:0", cfg, stop_srv, move |b| {
+            let _ = bound_tx.send(b.data);
+        })
+    });
+    let addr = bound_rx.recv().expect("server bound");
+
+    // Deal the trace over a few connections; each pipelines its share in
+    // one burst and then drains its completions, matched by tag.
+    let n_conns = 3usize.min(trace.len()).max(1);
+    let mut batches: Vec<Vec<String>> = vec![Vec::new(); n_conns];
+    for (i, t) in trace.iter().enumerate() {
+        batches[i % n_conns].push(
+            innerq::util::json::Json::obj(vec![
+                ("prompt", innerq::util::json::Json::str(&t.req.prompt)),
+                ("max_new_tokens", innerq::util::json::Json::Num(t.req.max_new_tokens as f64)),
+                ("tag", innerq::util::json::Json::str(&t.req.id.to_string())),
+            ])
+            .dump(),
+        );
+    }
+    let clients: Vec<_> = batches
+        .into_iter()
+        .map(|batch| {
+            std::thread::spawn(move || {
+                let mut conn = std::net::TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(conn.try_clone().expect("clone"));
+                let mut payload = String::new();
+                for line in &batch {
+                    payload.push_str(line);
+                    payload.push('\n');
+                }
+                conn.write_all(payload.as_bytes()).expect("send");
+                conn.flush().expect("flush");
+                let mut out = BTreeMap::new();
+                for _ in 0..batch.len() {
+                    let mut s = String::new();
+                    let n = reader.read_line(&mut s).expect("read");
+                    assert!(n > 0, "server closed mid-trace");
+                    let j = innerq::util::json::Json::parse(&s).expect("response parses");
+                    assert_eq!(j.get("error").as_str(), None, "unexpected error: {s}");
+                    let id: u64 = j.get("tag").as_str().expect("tag").parse().expect("tag id");
+                    out.insert(id, j.get("text").as_str().unwrap_or("").to_string());
+                }
+                out
+            })
+        })
+        .collect();
+    let mut texts = BTreeMap::new();
+    for c in clients {
+        texts.extend(c.join().expect("client thread"));
+    }
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread").expect("serve result");
+    texts
+}
+
+#[test]
+fn socket_completions_match_the_replay_oracle_at_every_io_worker_count() {
+    let trace = oracle_trace(24);
+    let oracle = replay_texts(&trace);
+    for io_workers in [1usize, 2, 4] {
+        let got = socket_texts(&format!("sock_w{io_workers}"), &trace, io_workers);
+        assert_eq!(got.len(), trace.len(), "io_workers={io_workers}: request lost or duplicated");
+        assert_eq!(
+            got, oracle,
+            "io_workers={io_workers}: socket completions diverged from the replay oracle"
+        );
+    }
+}
