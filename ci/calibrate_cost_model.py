@@ -17,15 +17,26 @@ Derivable today:
     (batch, step_us) yields the fixed dispatch cost (intercept) and the
     marginal per-sequence cost (slope).
 
-Not derivable yet (kept at defaults): tick_overhead_us,
-prefill_us_per_token, offload/restore/prefix per-KiB costs — the benches
-that exercise those paths run on the virtual clock, so they carry no
-wall-clock signal. Extending a wall-clock bench over those paths is the
-way to grow this file's coverage.
+Derivable from a Chrome trace (--from-trace TRACE.json, produced by
+`innerq serve --trace-out` or the admin `trace <secs>` command):
+  * prefill_us_per_token — least-squares slope over the private-prefill
+    spans' (tokens, dur) points (shared-hit prefills skip the bulk work,
+    so they are excluded from the fit);
+  * offload_us_per_kib / restore_us_per_kib — slope over the snapshot /
+    restore spans' (KiB, dur) points.
+When both an artifact dir and --from-trace are given, the two sources
+override disjoint coefficient sets and compose into one file.
+
+Not derivable yet (kept at defaults): tick_overhead_us (buried inside
+every span) and prefix_saving_us_per_kib (a *counterfactual* saving — the
+trace records the hit's cost, not the private prefill it avoided).
 
 Usage:
     # After downloading a CI artifact set (see ci/seed_baselines.py):
     ci/calibrate_cost_model.py /tmp/bench-json -o ci/baselines/cost_model.json
+    # Or from a recorded serve trace (optionally alongside the artifacts):
+    ci/calibrate_cost_model.py /tmp/bench-json --from-trace trace.json \
+        -o ci/baselines/cost_model.json
     git add ci/baselines/cost_model.json && git commit -m "Calibrate replay cost model"
 """
 
@@ -85,24 +96,97 @@ def decode_coefficients(path):
     return step_us, per_seq_us
 
 
+def slope_us(points, label):
+    """Per-unit cost from (units, dur_us) points: least-squares slope, or
+    the aggregate-ratio fallback when the fit is degenerate (a single span,
+    or all spans the same size). Returns a clamped u64-safe int, or None."""
+    points = [(x, y) for x, y in points if x > 0]
+    if not points:
+        return None
+    fit = fit_line(points)
+    if fit is not None and fit[1] > 0:
+        slope = fit[1]
+        how = f"fit over {len(points)} spans"
+    else:
+        slope = sum(y for _, y in points) / sum(x for x, _ in points)
+        how = f"aggregate ratio over {len(points)} spans"
+    us = max(1, round(slope))
+    print(f"[calibrate]   {label}: {us} us/unit ({how})")
+    return us
+
+
+def trace_coefficients(path):
+    """Partial CostModel override dict from a Chrome trace JSON, or {}.
+
+    Spans are matched by name (see rust/src/obs/mod.rs SpanKind::name):
+    `prefill` spans with args.shared_bytes == 0 give prefill_us_per_token,
+    `snapshot` / `restore` spans give offload/restore_us_per_kib.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        print(f"[calibrate] SKIP {path}: no traceEvents array (not a Chrome trace?)")
+        return {}
+
+    prefill, snapshot, restore = [], [], []
+    for e in events:
+        args = e.get("args", {})
+        dur = float(e.get("dur", 0))
+        name = e.get("name")
+        if name == "prefill" and float(args.get("shared_bytes", 0)) == 0:
+            prefill.append((float(args.get("tokens", 0)), dur))
+        elif name == "snapshot":
+            snapshot.append((float(args.get("bytes", 0)) / 1024.0, dur))
+        elif name == "restore":
+            restore.append((float(args.get("bytes", 0)) / 1024.0, dur))
+
+    model = {}
+    for key, label, points in [
+        ("prefill_us_per_token", "prefill us/token (private spans)", prefill),
+        ("offload_us_per_kib", "snapshot us/KiB", snapshot),
+        ("restore_us_per_kib", "restore us/KiB", restore),
+    ]:
+        us = slope_us(points, label)
+        if us is not None:
+            model[key] = us
+        else:
+            print(f"[calibrate]   no usable spans for {key}; keeping the default")
+    return model
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("artifact_dir", help="directory holding downloaded BENCH_*.json files")
+    ap.add_argument("artifact_dir", nargs="?",
+                    help="directory holding downloaded BENCH_*.json files "
+                         "(optional when --from-trace is given)")
+    ap.add_argument("--from-trace", metavar="TRACE.json",
+                    help="Chrome trace from --trace-out or the admin trace command; "
+                         "adds prefill/offload/restore coefficients")
     ap.add_argument("-o", "--out", default="ci/baselines/cost_model.json",
                     help="output path (default: ci/baselines/cost_model.json)")
     args = ap.parse_args()
 
-    decode_path = os.path.join(args.artifact_dir, "BENCH_decode.json")
-    if not os.path.exists(decode_path):
-        print(f"[calibrate] FAIL: {decode_path} missing — run the decode_scaling "
-              "bench (CI does, in the smoke step) and re-download the artifact.")
-        return 1
+    if args.artifact_dir is None and args.from_trace is None:
+        ap.error("need an artifact_dir, --from-trace, or both")
 
     model = {}
-    coeffs = decode_coefficients(decode_path)
-    if coeffs:
-        model["decode_step_us"], model["decode_us_per_seq"] = coeffs
+    if args.artifact_dir is not None:
+        decode_path = os.path.join(args.artifact_dir, "BENCH_decode.json")
+        if not os.path.exists(decode_path):
+            print(f"[calibrate] FAIL: {decode_path} missing — run the decode_scaling "
+                  "bench (CI does, in the smoke step) and re-download the artifact.")
+            return 1
+        coeffs = decode_coefficients(decode_path)
+        if coeffs:
+            model["decode_step_us"], model["decode_us_per_seq"] = coeffs
+
+    if args.from_trace is not None:
+        if not os.path.exists(args.from_trace):
+            print(f"[calibrate] FAIL: trace file {args.from_trace} missing.")
+            return 1
+        model.update(trace_coefficients(args.from_trace))
 
     if not model:
         print("[calibrate] FAIL: no coefficients could be derived.")

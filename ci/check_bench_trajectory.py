@@ -37,11 +37,13 @@ Cells are keyed per bench type:
   * prefix_sharing:       (family, method, prefix_share, budget_bytes),
     metric throughput_rps (virtual-clock, deterministic — multi-turn vs
     single-turn trace families with the CoW prefix store on/off);
-  * server_loadgen:       (method, io_workers, rate_rps), metric
+  * server_loadgen:       (method, io_workers, rate_rps, traced), metric
     throughput_rps (wall-clock over real sockets through the staged server
     front end — arrival-paced, so the generous threshold absorbs runner
     noise; byte-identity vs the replay oracle is asserted in the bench
-    itself before any timing is emitted).
+    itself before any timing is emitted). Rows without a "traced" field
+    predate the tracing-overhead cells and key as untraced; the traced=True
+    cells are the tracing-overhead guard.
 """
 
 import argparse
@@ -80,7 +82,10 @@ def cells(doc):
             key = (r["family"], r["method"], r["prefix_share"], r["budget_bytes"])
             metric = "throughput_rps"
         elif bench == "server_loadgen":
-            key = (r["method"], r["io_workers"], r["rate_rps"])
+            # The traced axis landed with the tracing plane; older rows have
+            # no "traced" field and key as untraced cells.
+            key = (r["method"], r["io_workers"], r["rate_rps"],
+                   bool(r.get("traced", False)))
             metric = "throughput_rps"
         else:
             continue

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Lint a Prometheus text-exposition page scraped from the admin plane.
+
+The server_loadgen bench's traced cells scrape the admin `metrics` command
+and write the raw page to rust/METRICS.prom; CI runs this linter over it so
+a malformed exposition (a scrape a real Prometheus server would reject or
+silently misparse) fails the build rather than surfacing months later on
+someone's dashboard.
+
+Checks (the subset of the text-format spec our exporter can violate):
+  * every non-comment line is `name[{labels}] value` with a valid metric
+    name, parseable float value, and well-formed label syntax;
+  * every sample's base family (quantile samples and _sum/_count strip back
+    to the family name) is declared by a preceding # TYPE line;
+  * # TYPE lines name a known type and appear at most once per family;
+  * # HELP appears at most once per family;
+  * every series carries the innerq_ namespace prefix;
+  * required families for a serving scrape are present (--require).
+
+Usage:
+    ci/check_prometheus.py rust/METRICS.prom \
+        --require innerq_decode_steps --require innerq_stage_duration_us
+"""
+
+import argparse
+import re
+import sys
+
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABELS_RE = re.compile(
+    r'^\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"'
+    r'(?:,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*")*\}$'
+)
+TYPES = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def base_family(name, typed):
+    """Strip summary/histogram suffixes back to a declared family name."""
+    for suffix in ("_sum", "_count", "_bucket"):
+        if name.endswith(suffix) and name[: -len(suffix)] in typed:
+            return name[: -len(suffix)]
+    return name
+
+
+def lint(text, require):
+    errors = []
+    typed = {}   # family -> type
+    helped = set()
+    samples = []  # (lineno, name)
+
+    for i, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            errors.append(f"line {i}: blank line (exporter never emits one)")
+            continue
+        if line.startswith("#"):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or parts[1] not in ("HELP", "TYPE"):
+                errors.append(f"line {i}: malformed comment {line!r}")
+                continue
+            _, kw, family, rest = parts
+            if not NAME_RE.match(family):
+                errors.append(f"line {i}: bad metric name {family!r}")
+                continue
+            if kw == "TYPE":
+                if rest not in TYPES:
+                    errors.append(f"line {i}: unknown type {rest!r} for {family}")
+                if family in typed:
+                    errors.append(f"line {i}: duplicate # TYPE for {family}")
+                typed[family] = rest
+            else:
+                if family in helped:
+                    errors.append(f"line {i}: duplicate # HELP for {family}")
+                helped.add(family)
+            continue
+        # Sample line: name[{labels}] value
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$", line)
+        if not m:
+            errors.append(f"line {i}: unparseable sample {line!r}")
+            continue
+        name, labels, value = m.groups()
+        if labels and not LABELS_RE.match(labels):
+            errors.append(f"line {i}: malformed labels {labels!r}")
+        try:
+            float(value)
+        except ValueError:
+            errors.append(f"line {i}: non-numeric value {value!r}")
+        if not name.startswith("innerq_"):
+            errors.append(f"line {i}: series {name} outside the innerq_ namespace")
+        samples.append((i, name))
+
+    for i, name in samples:
+        if base_family(name, typed) not in typed:
+            errors.append(f"line {i}: sample {name} has no # TYPE declaration")
+
+    seen = {base_family(n, typed) for _, n in samples} | set(typed)
+    for family in require:
+        if family not in seen:
+            errors.append(f"required family {family} missing from the page")
+
+    return errors, len(samples), len(typed)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("page", help="scraped exposition page (e.g. rust/METRICS.prom)")
+    ap.add_argument("--require", action="append", default=[],
+                    help="family that must be present (repeatable)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.page) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"[prom-lint] FAIL: cannot read {args.page}: {e}")
+        return 1
+    if not text.strip():
+        print(f"[prom-lint] FAIL: {args.page} is empty — did the scrape run?")
+        return 1
+
+    errors, n_samples, n_families = lint(text, args.require)
+    if errors:
+        print(f"[prom-lint] FAIL: {len(errors)} problem(s) in {args.page}:")
+        for e in errors:
+            print(f"[prom-lint]   {e}")
+        return 1
+    print(f"[prom-lint] OK: {n_samples} samples across {n_families} typed "
+          f"families in {args.page}.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

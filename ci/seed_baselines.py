@@ -17,10 +17,17 @@ Usage:
     git add ci/baselines && git commit -m "Seed bench trajectory baselines"
 
 Options:
-    --force     overwrite baselines that already exist (refreshing the
-                floor after an intentional slowdown); default is to skip
-                them so an accidental re-run cannot silently move floors.
-    --dry-run   report what would be copied without writing.
+    --force       overwrite baselines that already exist (refreshing the
+                  floor after an intentional slowdown); default is to skip
+                  them so an accidental re-run cannot silently move floors.
+    --dry-run     report what would be copied without writing.
+    --self-check  no artifact directory needed: prove the validator accepts
+                  a minimal document for every bench family it knows about,
+                  rejects malformed ones, and that the bench-baselines
+                  workflow actually runs every family in KNOWN_BENCHES.
+                  Guards against list drift — server_loadgen once existed
+                  as a bench and a validator entry but was missing from the
+                  workflow's bench list, so its floor never got seeded.
 
 Each BENCH_*.json found in the artifact directory is validated (parses as
 JSON, carries a recognized "bench" field and a non-empty "results" list)
@@ -32,6 +39,7 @@ import json
 import os
 import shutil
 import sys
+import tempfile
 
 KNOWN_BENCHES = {
     "kernel_throughput",
@@ -59,17 +67,104 @@ def validate(path):
     return None
 
 
+def _validate_doc(doc):
+    """Run validate() on an in-memory document via a temp file."""
+    fd, path = tempfile.mkstemp(suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            if isinstance(doc, str):
+                f.write(doc)  # deliberately malformed payloads arrive raw
+            else:
+                json.dump(doc, f)
+        return validate(path)
+    finally:
+        os.unlink(path)
+
+
+def self_check():
+    """Exit-code-style check that the seeding machinery is self-consistent.
+
+    Three properties, each of which has historically been able to drift
+    independently of the others:
+      1. validate() accepts a minimal well-formed doc for every family in
+         KNOWN_BENCHES (so a real artifact of that family cannot be
+         rejected on shape alone);
+      2. validate() rejects malformed docs (unknown family, empty results,
+         non-JSON) — the validator is actually validating;
+      3. every KNOWN_BENCHES family appears as a `--bench <name>`
+         invocation in .github/workflows/bench-baselines.yml, so the seed
+         run produces an artifact for it. This is the check that would
+         have caught server_loadgen never getting a committed floor.
+    """
+    failures = []
+
+    for bench in sorted(KNOWN_BENCHES):
+        err = _validate_doc({"bench": bench, "results": [{"throughput_rps": 1.0}]})
+        status = "PASS" if err is None else f"FAIL ({err})"
+        print(f"[self-check] validator accepts {bench}: {status}")
+        if err is not None:
+            failures.append(f"validator rejected well-formed {bench} doc: {err}")
+
+    rejects = [
+        ("unknown bench family", {"bench": "not_a_bench", "results": [{"x": 1}]}),
+        ("empty results", {"bench": "kernel_throughput", "results": []}),
+        ("missing results", {"bench": "kernel_throughput"}),
+        ("non-JSON payload", "{not json"),
+    ]
+    for label, doc in rejects:
+        err = _validate_doc(doc)
+        status = "PASS" if err is not None else "FAIL (accepted)"
+        print(f"[self-check] validator rejects {label}: {status}")
+        if err is None:
+            failures.append(f"validator accepted malformed doc ({label})")
+
+    workflow = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", ".github", "workflows", "bench-baselines.yml")
+    try:
+        with open(workflow) as f:
+            text = f.read()
+    except OSError as e:
+        failures.append(f"cannot read bench-baselines workflow: {e}")
+        print(f"[self-check] workflow coverage: FAIL ({e})")
+    else:
+        for bench in sorted(KNOWN_BENCHES):
+            present = f"--bench {bench}" in text
+            status = "PASS" if present else "FAIL (not run by the seed workflow)"
+            print(f"[self-check] workflow runs {bench}: {status}")
+            if not present:
+                failures.append(
+                    f"{bench} is in KNOWN_BENCHES but bench-baselines.yml "
+                    "never runs it — its floor can never be seeded")
+
+    if failures:
+        print(f"[self-check] FAIL: {len(failures)} problem(s):")
+        for f in failures:
+            print(f"[self-check]   - {f}")
+        return 1
+    print("[self-check] OK: validator and seed workflow cover every bench family.")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("artifact_dir", help="directory holding downloaded BENCH_*.json files")
+    ap.add_argument("artifact_dir", nargs="?",
+                    help="directory holding downloaded BENCH_*.json files "
+                         "(omit with --self-check)")
     ap.add_argument("--baselines", default=os.path.join(os.path.dirname(__file__), "baselines"),
                     help="destination directory (default: ci/baselines next to this script)")
     ap.add_argument("--force", action="store_true",
                     help="overwrite baselines that already exist")
     ap.add_argument("--dry-run", action="store_true",
                     help="report without copying")
+    ap.add_argument("--self-check", action="store_true",
+                    help="validate the validator + workflow bench list; no copying")
     args = ap.parse_args()
+
+    if args.self_check:
+        return self_check()
+    if args.artifact_dir is None:
+        ap.error("artifact_dir is required unless --self-check is given")
 
     if not os.path.isdir(args.artifact_dir):
         print(f"[seed] FAIL: {args.artifact_dir} is not a directory")
@@ -84,7 +179,7 @@ def main():
         return 1
 
     os.makedirs(args.baselines, exist_ok=True)
-    seeded, skipped, bad = 0, 0, 0
+    seeded, would, skipped, bad = 0, 0, 0, 0
     for name in candidates:
         src = os.path.join(args.artifact_dir, name)
         dst = os.path.join(args.baselines, name)
@@ -99,15 +194,22 @@ def main():
             continue
         if args.dry_run:
             print(f"[seed] would copy {name} -> {dst}")
+            would += 1
         else:
             shutil.copyfile(src, dst)
             print(f"[seed] seeded {name} -> {dst}")
-        seeded += 1
+            seeded += 1
 
-    print(f"[seed] done: {seeded} seeded, {skipped} kept, {bad} invalid.")
-    if seeded and not args.dry_run:
+    # "would seed" and "seeded" are reported separately: a dry run must not
+    # claim files were written (the old summary lumped them together).
+    if args.dry_run:
+        print(f"[seed] done (dry run): {would} would be seeded, "
+              f"{skipped} kept, {bad} invalid.")
+    else:
+        print(f"[seed] done: {seeded} seeded, {skipped} kept, {bad} invalid.")
+    if seeded:
         print("[seed] commit ci/baselines/ to make the trajectory check enforcing.")
-    return 0 if seeded or skipped else 1
+    return 0 if seeded or would or skipped else 1
 
 
 if __name__ == "__main__":

@@ -15,6 +15,13 @@
 //! arrival times, and match completions by the echoed `tag` field (the
 //! server assigns its own ids).
 //!
+//! One cell per rate additionally runs with the tracing plane armed
+//! ([`innerq::obs`]) and the admin listener up: it must pass the *same*
+//! byte-identity oracle (tracing cannot perturb output), its wall-clock
+//! delta against the matching untraced cell lands in `BENCH_server.json`
+//! as the tracing-overhead guard, and the admin `metrics` page it scrapes
+//! is written to `METRICS.prom` for `ci/check_prometheus.py`.
+//!
 //! ```bash
 //! cargo bench --bench server_loadgen           # full sweep
 //! cargo bench --bench server_loadgen quick     # CI smoke
@@ -22,7 +29,7 @@
 
 use innerq::coordinator::{Engine, Scheduler};
 use innerq::runtime::Manifest;
-use innerq::server::{serve_with, ServerConfig};
+use innerq::server::{serve_with, AdminClient, ServerConfig};
 use innerq::util::fakemodel::write_fake_artifacts;
 use innerq::util::json::Json;
 use innerq::util::stats::LatencyHistogram;
@@ -83,32 +90,71 @@ struct CellResult {
     ttft: LatencyHistogram,
 }
 
+/// The io-worker count the per-rate traced cell runs at (the middle of the
+/// sweep: tracing overhead should be measured on a representative shape).
+const TRACED_IO_WORKERS: usize = 2;
+
+fn cell_row(
+    cell: &CellResult,
+    io_workers: usize,
+    rate: f64,
+    n_requests: usize,
+    traced: bool,
+    overhead_pct: Option<f64>,
+) -> Json {
+    let (t, e) = (cell.ttft.summary(), cell.e2e.summary());
+    let mut fields = vec![
+        ("method", Json::str(METHOD.name())),
+        ("io_workers", Json::Num(io_workers as f64)),
+        ("rate_rps", Json::Num(rate)),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("n_conns", Json::Num(N_CONNS as f64)),
+        ("traced", Json::Bool(traced)),
+        ("wall_ms", Json::Num(cell.wall_ms)),
+        ("throughput_rps", Json::Num(cell.throughput_rps)),
+        ("ttft_p50_us", Json::Num(t.p50_us as f64)),
+        ("ttft_p99_us", Json::Num(t.p99_us as f64)),
+        ("e2e_p50_us", Json::Num(e.p50_us as f64)),
+        ("e2e_p99_us", Json::Num(e.p99_us as f64)),
+    ];
+    if let Some(pct) = overhead_pct {
+        fields.push(("trace_overhead_pct", Json::Num(pct)));
+    }
+    Json::obj(fields)
+}
+
 /// Run the trace through a live staged server at `io_workers`, assert the
 /// socket completions match the oracle byte-for-byte, and return the wire
-/// timings.
+/// timings. With `traced`, the whole cell runs with the tracing plane armed
+/// and the admin plane up, and the admin `metrics` page is scraped into
+/// `METRICS.prom` while the server is still live — same oracle contract, so
+/// this is the bench-level proof that tracing never changes output bytes.
 fn run_cell(
     dir: &std::path::Path,
     trace: &[TimedRequest],
     io_workers: usize,
     oracle: &HashMap<u64, String>,
+    traced: bool,
 ) -> CellResult {
+    let _guard = traced.then(innerq::obs::TraceGuard::arm);
     let sched = scheduler(dir);
     let stop = Arc::new(AtomicBool::new(false));
     let stop_srv = stop.clone();
     let (addr_tx, addr_rx) = mpsc::channel();
+    let admin_addr = traced.then(|| "127.0.0.1:0".to_string());
     let server = std::thread::spawn(move || {
         serve_with(
             sched,
             "127.0.0.1:0",
-            ServerConfig { io_workers, admin_addr: None },
+            ServerConfig { io_workers, admin_addr },
             stop_srv,
             move |b| {
-                let _ = addr_tx.send(b.data);
+                let _ = addr_tx.send((b.data, b.admin));
             },
         )
         .expect("serve_with")
     });
-    let addr = addr_rx.recv().expect("server bound");
+    let (addr, admin) = addr_rx.recv().expect("server bound");
 
     // Deal the trace over the client connections round-robin, keeping each
     // request's absolute send time.
@@ -155,6 +201,19 @@ fn run_cell(
         responses.extend(c.join().expect("client thread"));
     }
     let wall = t0.elapsed();
+    if traced {
+        // Scrape the Prometheus page from the live server so CI can lint
+        // the exposition format (ci/check_prometheus.py).
+        let admin = admin.expect("traced cell has an admin plane");
+        let mut ac = AdminClient::connect(admin).expect("admin connect");
+        let page = ac.metrics().expect("metrics scrape");
+        assert!(
+            page.contains("# TYPE innerq_decode_steps gauge"),
+            "metrics page missing expected series:\n{page}"
+        );
+        std::fs::write("METRICS.prom", &page).expect("write METRICS.prom");
+        eprintln!("[server_loadgen] scraped {} metric lines to METRICS.prom", page.lines().count());
+    }
     stop.store(true, Ordering::Relaxed);
     server.join().expect("server thread");
 
@@ -223,28 +282,33 @@ fn main() {
             "[server_loadgen] rate={rate}: oracle replay complete ({} requests)",
             oracle.len()
         );
+        let mut untraced_wall_2w = None;
         for &io_workers in io_worker_counts {
-            let cell = run_cell(&dir, &tr, io_workers, &oracle);
+            let cell = run_cell(&dir, &tr, io_workers, &oracle, false);
             eprintln!(
                 "[server_loadgen] rate={rate} io_workers={io_workers}: oracle identity holds; \
                  {:.1} req/s wall={:.0}ms",
                 cell.throughput_rps, cell.wall_ms
             );
-            let (t, e) = (cell.ttft.summary(), cell.e2e.summary());
-            results.push(Json::obj(vec![
-                ("method", Json::str(METHOD.name())),
-                ("io_workers", Json::Num(io_workers as f64)),
-                ("rate_rps", Json::Num(rate)),
-                ("n_requests", Json::Num(n_requests as f64)),
-                ("n_conns", Json::Num(N_CONNS as f64)),
-                ("wall_ms", Json::Num(cell.wall_ms)),
-                ("throughput_rps", Json::Num(cell.throughput_rps)),
-                ("ttft_p50_us", Json::Num(t.p50_us as f64)),
-                ("ttft_p99_us", Json::Num(t.p99_us as f64)),
-                ("e2e_p50_us", Json::Num(e.p50_us as f64)),
-                ("e2e_p99_us", Json::Num(e.p99_us as f64)),
-            ]));
+            if io_workers == TRACED_IO_WORKERS {
+                untraced_wall_2w = Some(cell.wall_ms);
+            }
+            results.push(cell_row(&cell, io_workers, rate, n_requests, false, None));
         }
+        // Tracing-overhead guard: the same trace with the plane armed must
+        // still pass the byte-identity oracle, and its wall-clock delta is
+        // recorded for the trajectory check.
+        let traced = run_cell(&dir, &tr, TRACED_IO_WORKERS, &oracle, true);
+        let overhead_pct = untraced_wall_2w
+            .map(|base| (traced.wall_ms - base) / base.max(1e-9) * 100.0);
+        eprintln!(
+            "[server_loadgen] rate={rate} io_workers={TRACED_IO_WORKERS} traced: oracle \
+             identity holds; {:.1} req/s wall={:.0}ms overhead={:+.1}%",
+            traced.throughput_rps,
+            traced.wall_ms,
+            overhead_pct.unwrap_or(0.0)
+        );
+        results.push(cell_row(&traced, TRACED_IO_WORKERS, rate, n_requests, true, overhead_pct));
     }
 
     let doc = Json::obj(vec![

@@ -17,6 +17,7 @@ use crate::cache::segments::*;
 use crate::cache::window::{RecentWindow, SinkWindow};
 use crate::kernels::gemv_fp;
 use crate::kernels::softmax::softmax_scaled;
+use crate::obs;
 use crate::quant::norm::ChannelNorm;
 use crate::quant::{Grouping, MethodConfig};
 use crate::util::threadpool::Job;
@@ -596,10 +597,13 @@ impl HeadCache {
 
     fn evict(&mut self) {
         let d_h = self.d_h;
+        let t_evict = obs::start();
+        let mut rows_quantized = 0usize;
         // Keys: pop evict_batch rows whenever the window exceeds w_recent by
         // at least one batch.
         let kb = self.qk.evict_batch();
         while self.recent_k.len() >= self.cfg.w_recent + kb {
+            rows_quantized += kb;
             let qk = &mut self.qk;
             let norm = &self.norm;
             let use_norm = self.cfg.key_norm;
@@ -617,8 +621,18 @@ impl HeadCache {
         }
         let vb = self.qv.evict_batch();
         while self.recent_v.len() >= self.cfg.w_recent + vb {
+            rows_quantized += vb;
             let qv = &mut self.qv;
             self.recent_v.pop_front(vb, |rows| qv.append(rows, d_h));
+        }
+        if rows_quantized > 0 {
+            obs::span(
+                obs::SpanKind::QuantEvict,
+                rows_quantized as u64,
+                t_evict,
+                rows_quantized as u64,
+                0,
+            );
         }
     }
 

@@ -36,6 +36,7 @@
 //! back to zero they rejoin the ordinary LRU order (evict-last, since a
 //! release refreshes nothing — their last `retain` stamp decides).
 
+use crate::obs;
 use std::collections::BTreeMap;
 
 /// Default pooled segment size. Snapshots of typical preempted sequences run
@@ -259,6 +260,7 @@ impl WarmTier {
         class: u8,
         frames: &[(&[u8], FrameKind)],
     ) -> Option<InsertReceipt> {
+        let t_insert = obs::start();
         let segs_of = |p: &[u8]| self.segs_for(p.len());
         let need_full: usize = frames.iter().map(|(p, _)| segs_of(p)).sum();
         let need_required: usize = frames
@@ -323,6 +325,7 @@ impl WarmTier {
         self.residents.insert(id, Resident { frames: slots, class, stamp, refs: 0 });
         self.stats.inserts += 1;
         self.stats.insert_dropped_frames += dropped as u64;
+        obs::span(obs::SpanKind::TierInsert, id, t_insert, stored_bytes as u64, dropped as u64);
         Some(InsertReceipt { stored_bytes, dropped_frames: dropped })
     }
 
@@ -503,8 +506,10 @@ impl WarmTier {
     /// back as `None`; the take still counts as a (partial) hit because the
     /// surviving frames spare real recompute work.
     pub fn take_frames(&mut self, id: u64) -> Option<TakenFrames> {
+        let t_take = obs::start();
         match self.residents.remove(&id) {
             Some(r) => {
+                let bytes = r.present_bytes();
                 let mut frames = Vec::with_capacity(r.frames.len());
                 let mut partial = false;
                 for f in &r.frames {
@@ -522,6 +527,7 @@ impl WarmTier {
                 if partial {
                     self.stats.partial_hits += 1;
                 }
+                obs::span(obs::SpanKind::TierTake, id, t_take, bytes as u64, partial as u64);
                 Some(TakenFrames { frames })
             }
             None => {

@@ -37,6 +37,8 @@
 
 use crate::cache::store::{prefix_base_hash, PrefixImage, PrefixStore};
 use crate::cache::{attention_fanout, head_step, HeadCache, LayerCache};
+use crate::kernels::dispatch;
+use crate::obs;
 use crate::quant::MethodConfig;
 use crate::runtime::executable::{In, Stage as PjrtStage};
 use crate::runtime::Manifest;
@@ -375,9 +377,11 @@ impl Engine {
             }
             Some(st) => {
                 let base = prefix_base_hash(&cfg, &prompt[..prefix_len]);
+                let t_probe = obs::start();
                 if let Some(images) = st.acquire_set(base, n_l, n_kv) {
                     // Hit: borrow every image; quantize only the tail.
                     let bytes: usize = images.iter().flatten().map(|i| i.bytes()).sum();
+                    obs::span(obs::SpanKind::PrefixProbe, base, t_probe, bytes as u64, 1);
                     let flat: Vec<Arc<PrefixImage>> = images.into_iter().flatten().collect();
                     let jobs: Vec<Job> = flat
                         .into_iter()
@@ -456,9 +460,12 @@ impl Engine {
                         images[idx / n_kv].push(img);
                     }
                     let bytes: usize = images.iter().flatten().map(|i| i.bytes()).sum();
+                    let t_pub = obs::start();
                     if st.insert_set(base, images).is_some() {
+                        obs::span(obs::SpanKind::PrefixProbe, base, t_pub, bytes as u64, 2);
                         outcome = PrefixOutcome::Published { base, bytes };
                     } else {
+                        obs::span(obs::SpanKind::PrefixProbe, base, t_pub, 0, 0);
                         // The store refused (budget pressure / pinned
                         // residents): materialize private copies so the
                         // invariant holds — a sequence holds shared Arcs
@@ -570,6 +577,7 @@ impl Engine {
         let (d_h, q_dim) = (dims.d_h, dims.q_dim());
         let n_kv = dims.n_kv_heads;
         for l in 0..dims.n_layers {
+            let t_qkv = obs::start();
             let out = self.stage(&format!("qkv_l{l}_b{bb}"))?.run(&[
                 In::F32(&h, &[bb as i64, dims.d_model as i64]),
                 In::I32(positions, &[bb as i64]),
@@ -577,6 +585,7 @@ impl Engine {
             let q = out.f32(0)?; // (bb, n_q, d_h)
             let k = out.f32(1)?; // (bb, n_kv, d_h)
             let v = out.f32(2)?;
+            obs::span(obs::SpanKind::StageQkv, l as u64, t_qkv, l as u64, bb as u64);
 
             // Append this step's K/V on the driver — the only cache mutation.
             for (i, s) in seqs.iter_mut().enumerate() {
@@ -598,6 +607,7 @@ impl Engine {
                 self.pool.run(attention_fanout(heads, &q, &mut ctx, rep, d_h));
             }
 
+            let t_out = obs::start();
             h = self
                 .stage(&format!("out_l{l}_b{bb}"))?
                 .run(&[
@@ -605,11 +615,16 @@ impl Engine {
                     In::F32(&ctx, &[bb as i64, q_dim as i64]),
                 ])?
                 .f32(0)?;
+            obs::span(obs::SpanKind::StageOut, l as u64, t_out, l as u64, bb as u64);
         }
 
-        self.stage(&format!("head_b{bb}"))?
+        let t_head = obs::start();
+        let logits = self
+            .stage(&format!("head_b{bb}"))?
             .run(&[In::F32(&h, &[bb as i64, dims.d_model as i64])])?
-            .f32(0) // (bb, vocab)
+            .f32(0)?; // (bb, vocab)
+        obs::span(obs::SpanKind::StageHead, 0, t_head, dims.n_layers as u64, bb as u64);
+        Ok(logits)
     }
 
     /// Pipelined decode: emit the whole step as one dependency graph —
@@ -679,6 +694,7 @@ impl Engine {
                     if lockm(err_ref).is_some() {
                         return;
                     }
+                    let t_qkv = obs::start();
                     // Driver stages run strictly sequentially, so holding
                     // the h guard across the PJRT call is uncontended and
                     // avoids cloning the hidden state every stage.
@@ -700,6 +716,7 @@ impl Engine {
                         }
                         Err(e) => *lockm(err_ref) = Some(e),
                     }
+                    obs::span(obs::SpanKind::StageQkv, l as u64, t_qkv, l as u64, bb as u64);
                 });
             stages.push(Stage::driver_only(deps, vec![qkv_job]));
 
@@ -712,6 +729,7 @@ impl Engine {
                     if inp.q.is_empty() {
                         return; // upstream stage failed; drain as a no-op
                     }
+                    let t_job = obs::start();
                     let mut out = vec![0f32; rep * d_h];
                     head_step(
                         head,
@@ -726,6 +744,15 @@ impl Engine {
                     // across heads is irrelevant to the final bytes.
                     let mut cx = lockm(&ctx_ref[l]);
                     cx[c * rep * d_h..(c + 1) * rep * d_h].copy_from_slice(&out);
+                    drop(cx);
+                    obs::span_tag(
+                        obs::SpanKind::AttnJob,
+                        (c / n_kv) as u64,
+                        t_job,
+                        l as u64,
+                        (c % n_kv) as u64,
+                        dispatch::active().name(),
+                    );
                 }));
             }
             stages.push(Stage::new(vec![3 * l], jobs));
@@ -736,6 +763,7 @@ impl Engine {
                     if lockm(err_ref).is_some() {
                         return;
                     }
+                    let t_out = obs::start();
                     let cx = std::mem::take(&mut *lockm(&ctx_ref[l]));
                     let mut hv = lockm(hbuf_ref);
                     let res = (|| -> Result<Vec<f32>> {
@@ -753,6 +781,7 @@ impl Engine {
                             *lockm(err_ref) = Some(e);
                         }
                     }
+                    obs::span(obs::SpanKind::StageOut, l as u64, t_out, l as u64, bb as u64);
                 });
             stages.push(Stage::driver_only(vec![3 * l + 1], vec![out_job]));
         }
@@ -764,6 +793,7 @@ impl Engine {
                     if lockm(err_ref).is_some() {
                         return;
                     }
+                    let t_head = obs::start();
                     let hv = lockm(hbuf_ref);
                     let res = (|| -> Result<Vec<f32>> {
                         self.stage(&format!("head_b{bb}"))?
@@ -775,6 +805,7 @@ impl Engine {
                         Ok(lg) => *lockm(logits_ref) = lg,
                         Err(e) => *lockm(err_ref) = Some(e),
                     }
+                    obs::span(obs::SpanKind::StageHead, 0, t_head, n_l as u64, bb as u64);
                 });
             stages.push(Stage::driver_only(vec![3 * n_l - 1], vec![head_job]));
         }

@@ -62,9 +62,11 @@ use crate::cache::{Admission, CachePool};
 use crate::coordinator::batcher;
 use crate::coordinator::engine::{Engine, PipelineMode, PrefixOutcome, Sequence};
 use crate::coordinator::request::{Completion, Priority, Request, SchedEvent, StepMetrics};
+use crate::obs;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Admission/preemption policy. See the module docs for the exact rules.
@@ -221,6 +223,11 @@ pub struct Scheduler {
     /// State-transition stream for the replay harness; empty unless enabled
     /// via [`Scheduler::record_events`].
     pub events: Vec<SchedEvent>,
+    /// Tracing flight recorder ([`crate::obs`]): every tick drains the
+    /// per-thread span rings into it (no-op while tracing is off). Shared
+    /// so the admin plane can lock it for `metrics`/`trace` replies without
+    /// touching the data path.
+    pub obs: Arc<Mutex<obs::recorder::Recorder>>,
     policy: Policy,
     preemption: Preemption,
     /// Bypass admissions granted past each parked head, keyed by head id so
@@ -284,6 +291,7 @@ impl Scheduler {
             done: Vec::new(),
             metrics: StepMetrics::default(),
             events: Vec::new(),
+            obs: Arc::new(Mutex::new(obs::recorder::Recorder::new())),
             policy: Policy::Fifo,
             preemption: Preemption::Recompute,
             bypass_used: BTreeMap::new(),
@@ -416,25 +424,48 @@ impl Scheduler {
     /// finished, failed, or never submitted) — the normal race between a
     /// disconnect and a completion, harmless on either side.
     pub fn cancel(&mut self, id: u64) -> bool {
-        if let Some(i) = self.queue.iter().position(|q| q.req.id == id) {
-            self.queue.remove(i);
+        let (req, generated) = if let Some(i) = self.queue.iter().position(|q| q.req.id == id) {
+            (self.queue.remove(i).unwrap().req, 0)
         } else if let Some(i) = self.live.iter().position(|l| l.req.id == id) {
             // `remove`, not `swap_remove`: the live batch's order is the
             // admission order completions are emitted in, and a cancellation
             // must not reshuffle the surviving sequences.
-            self.live.remove(i);
+            let l = self.live.remove(i);
             self.pool.release(id);
+            (l.req, l.generated.len())
         } else if let Some(i) = self.warm.iter().position(|w| w.req.id == id) {
-            self.warm.remove(i);
+            let w = self.warm.remove(i);
             self.tier.remove(id);
+            (w.req, w.generated.len())
         } else {
             return false;
-        }
+        };
         self.bypass_used.remove(&id);
         self.release_prefix(id);
         self.metrics.cancelled += 1;
         self.event(SchedEvent::Cancelled { id });
+        self.request_span(&req, generated, "cancelled");
         true
+    }
+
+    /// Emit the whole-request lifecycle span — arrival instant to now,
+    /// tagged with the terminal outcome (matching the replay harness's
+    /// outcome names, plus `cancelled`). One per request, at its single
+    /// terminal transition; no-op while tracing is off.
+    fn request_span(&self, req: &Request, generated: usize, outcome: &'static str) {
+        if !obs::enabled() {
+            return;
+        }
+        let start = obs::epoch_us_of(req.arrived);
+        obs::mark(
+            obs::SpanKind::Request,
+            req.id,
+            start,
+            obs::now_us().max(start),
+            req.priority.level() as u64,
+            generated as u64,
+            Some(outcome),
+        );
     }
 
     fn event(&mut self, ev: SchedEvent) {
@@ -576,6 +607,7 @@ impl Scheduler {
             self.release_prefix(req.id);
             self.metrics.expired += 1;
             self.event(SchedEvent::Expired { id: req.id, queued });
+            self.request_span(&req, 0, "expired");
             self.done.push(Completion::failed(&req, "deadline exceeded"));
         }
     }
@@ -715,6 +747,7 @@ impl Scheduler {
             // instead of their bytes (the pins stay held across the warm
             // residency, so restore always resolves). Private sequences use
             // the parallel inline serializer.
+            let t_snap = obs::start();
             let frames = match self.prefix_refs.get(&l.req.id) {
                 Some(h) => snapshot_sequence_frames_by_ref(&l.seq, h.base),
                 None => snapshot_sequence_frames_on(&l.seq, self.engine.pool()),
@@ -739,6 +772,13 @@ impl Scheduler {
                 self.metrics.offload_bytes += receipt.stored_bytes as u64;
                 self.metrics.window_frames_dropped += receipt.dropped_frames as u64;
                 self.event(SchedEvent::Offloaded { id: l.req.id, bytes: receipt.stored_bytes });
+                obs::span(
+                    obs::SpanKind::Snapshot,
+                    l.req.id,
+                    t_snap,
+                    receipt.stored_bytes as u64,
+                    0,
+                );
                 self.warm.push(Warm {
                     req: l.req,
                     submitted_us: l.submitted_us,
@@ -782,6 +822,7 @@ impl Scheduler {
         let req = self.remove_candidate(c);
         self.metrics.rejected += 1;
         self.event(SchedEvent::Rejected { id: req.id });
+        self.request_span(&req, 0, "rejected");
         self.done.push(Completion::failed(&req, reason));
     }
 
@@ -865,11 +906,26 @@ impl Scheduler {
                 self.pool.release(req.id);
                 self.metrics.rejected += 1;
                 self.event(SchedEvent::Rejected { id: req.id });
+                self.request_span(&req, 0, "rejected");
                 self.done.push(Completion::failed(&req, e.to_string()));
                 return;
             }
         };
+        // Queue-residency span: arrival to the start of this prefill.
+        if obs::enabled() {
+            let arr = obs::epoch_us_of(req.arrived);
+            obs::mark(
+                obs::SpanKind::Queued,
+                req.id,
+                arr,
+                obs::now_us().max(arr),
+                req.priority.level() as u64,
+                0,
+                None,
+            );
+        }
         let t0 = Instant::now();
+        let t_prefill = obs::start();
         let store = self.prefix_share.then_some(&mut self.prefix_store);
         let (seq, outcome) = match self.engine.prefill_shared(&prompt, req.prefix_len, store) {
             Ok(r) => r,
@@ -877,12 +933,14 @@ impl Scheduler {
                 self.pool.release(req.id);
                 self.metrics.rejected += 1;
                 self.event(SchedEvent::Rejected { id: req.id });
+                self.request_span(&req, 0, "rejected");
                 self.done.push(Completion::failed(&req, e.to_string()));
                 return;
             }
         };
         let d = &self.engine.manifest.model;
         let (n_layers, n_heads) = (d.n_layers, d.n_kv_heads);
+        let mut shared_bytes = 0u64;
         match outcome {
             PrefixOutcome::Private => {}
             PrefixOutcome::Published { base, .. } => {
@@ -893,8 +951,10 @@ impl Scheduler {
                 self.metrics.prefix_hits += 1;
                 self.metrics.prefix_bytes_shared += bytes as u64;
                 self.event(SchedEvent::PrefixHit { id: req.id, bytes });
+                shared_bytes = bytes as u64;
             }
         }
+        obs::span(obs::SpanKind::Prefill, req.id, t_prefill, prompt.len() as u64, shared_bytes);
         self.metrics.prefill_tokens += prompt.len() as u64;
         self.event(SchedEvent::Admitted { id: req.id, prefill_tokens: prompt.len() });
         let next = self.sample(&seq.last_logits, req.temperature);
@@ -919,6 +979,7 @@ impl Scheduler {
     /// generated tokens discarded. The caller has already reserved cache
     /// budget under `w.req.id`.
     fn restore_into_live(&mut self, w: Warm) {
+        let t_restore = obs::start();
         let Some(taken) = self.tier.take_frames(w.req.id) else {
             // Dropped from the warm tier (terminal for the snapshot):
             // recompute-style readmission under the reservation we hold.
@@ -968,6 +1029,7 @@ impl Scheduler {
                         self.release_prefix(w.req.id);
                         self.metrics.rejected += 1;
                         self.event(SchedEvent::Rejected { id: w.req.id });
+                        self.request_span(&w.req, 0, "rejected");
                         self.done.push(Completion::failed(
                             &w.req,
                             format!("window rebuild failed: {e}"),
@@ -985,6 +1047,7 @@ impl Scheduler {
                 self.metrics.restores += 1;
                 self.metrics.restore_bytes += bytes as u64;
                 self.event(SchedEvent::Restored { id: w.req.id, bytes });
+                obs::span(obs::SpanKind::Restore, w.req.id, t_restore, bytes as u64, 0);
                 self.live.push(Live {
                     req: w.req,
                     submitted_us: w.submitted_us,
@@ -1001,6 +1064,7 @@ impl Scheduler {
                 self.release_prefix(w.req.id);
                 self.metrics.rejected += 1;
                 self.event(SchedEvent::Rejected { id: w.req.id });
+                self.request_span(&w.req, 0, "rejected");
                 self.done
                     .push(Completion::failed(&w.req, format!("snapshot restore failed: {e}")));
             }
@@ -1080,6 +1144,14 @@ impl Scheduler {
     /// cache budget allows, then one decode step over the live batch.
     /// Returns false when idle.
     pub fn tick(&mut self) -> Result<bool> {
+        // Drain the tracing rings into the flight recorder once per tick
+        // (the tracing plane's drain cadence). `try_lock`: an admin `trace`
+        // reply holding the recorder must never stall the driver.
+        if obs::enabled() {
+            if let Ok(mut rec) = self.obs.try_lock() {
+                rec.drain();
+            }
+        }
         if self.queue.is_empty() && self.live.is_empty() && self.warm.is_empty() {
             return Ok(false);
         }
@@ -1107,12 +1179,20 @@ impl Scheduler {
                 rest = tail2;
                 consumed = i + 1;
             }
+            let t_step = obs::start();
             self.engine.decode_step(&mut seqs, &tokens)?;
             drop(seqs);
             let d = &self.engine.manifest.model;
             self.metrics.decode_steps += 1;
             self.metrics.batched_seqs += idxs.len() as u64;
             self.metrics.attn_jobs += (idxs.len() * d.n_kv_heads * d.n_layers) as u64;
+            obs::span(
+                obs::SpanKind::DecodeStep,
+                self.metrics.decode_steps,
+                t_step,
+                idxs.len() as u64,
+                0,
+            );
 
             // post-step: record generated tokens, sample next, finish. The
             // stop token terminates the sequence but is *excluded* from the
@@ -1158,6 +1238,7 @@ impl Scheduler {
                     }
                 };
                 self.event(SchedEvent::Finished { id: c.id, n_generated: c.n_generated });
+                self.request_span(&self.live[i].req, c.n_generated, "ok");
                 self.done.push(c);
             }
             for &i in finished.iter().rev() {

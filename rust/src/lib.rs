@@ -28,10 +28,10 @@ pub mod coordinator;
 pub mod eval;
 #[allow(missing_docs)]
 pub mod exp;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod server;
-#[allow(missing_docs)]
 pub mod simulator;
 pub mod workload;
 

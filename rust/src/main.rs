@@ -2,13 +2,14 @@
 //!
 //! ```text
 //! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
-//!                    [--io-workers N] [--admin-port PORT]
+//!                    [--io-workers N] [--admin-port PORT] [--trace-out PATH]
 //!                    [--budget BYTES] [--policy fifo|slo]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
 //!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
 //!                    [--prefix-share on|off] [--prefix-budget BYTES]
 //! innerq generate    --prompt "a=13;?a=" [--method M] [--max-new N] [--workers N]
 //!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
+//!                    [--trace-out PATH]
 //! innerq serve-trace [--trace timed|multi-turn] [--sessions N]
 //!                    [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
 //!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
@@ -16,10 +17,16 @@
 //!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
 //!                    [--prefix-share on|off] [--prefix-budget BYTES]
 //!                    [--method M] [--interactive FRAC] [--deadline-ms D]
-//!                    [--cost-model PATH] [--json PATH] [--fake]
+//!                    [--cost-model PATH] [--json PATH] [--trace-out PATH] [--fake]
 //! innerq exp         table1|table2|table3|table7|fig5|msparsity|simulate|all
 //! innerq info        [--artifacts DIR]
 //! ```
+//!
+//! `--trace-out PATH` arms the wall-clock tracing plane (`innerq::obs`) for
+//! the whole run and writes a Chrome trace-event JSON file (loadable in
+//! `chrome://tracing` / Perfetto) on exit. Tracing never changes output
+//! bytes; a live server can also be traced ad hoc via the admin `trace
+//! <secs>` command without this flag.
 //!
 //! `--isa` pins the dispatch arm of the fused dequant-GEMV kernels (default
 //! `auto`: the widest arm the host supports — AVX-512/AVX2 on x86_64, NEON
@@ -176,6 +183,33 @@ fn configure_sched(sched: &mut Scheduler, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Arm process-lifetime tracing when `--trace-out PATH` is present. The
+/// returned guard must stay alive until [`write_trace_out`] has drained the
+/// recorder, so ring events cannot race a disabled plane.
+fn trace_out_guard(args: &Args) -> Result<Option<(innerq::obs::TraceGuard, String)>> {
+    if !args.has("trace-out") {
+        return Ok(None);
+    }
+    let path = args.get("trace-out", "");
+    if path.is_empty() {
+        return Err(anyhow!("--trace-out needs a file path"));
+    }
+    Ok(Some((innerq::obs::TraceGuard::arm(), path)))
+}
+
+/// Drain everything the run recorded and write it as Chrome trace JSON.
+fn write_trace_out(
+    recorder: &std::sync::Mutex<innerq::obs::recorder::Recorder>,
+    path: &str,
+) -> Result<()> {
+    let mut rec = recorder.lock().unwrap_or_else(|e| e.into_inner());
+    rec.drain();
+    let n = rec.len();
+    std::fs::write(path, rec.chrome_trace(None).dump())?;
+    eprintln!("[trace] wrote {n} spans to {path}");
+    Ok(())
+}
+
 /// Build the replay scheduler for `serve-trace`: real artifacts when
 /// available, the synthetic fake model under `--fake` or as a fallback.
 fn trace_scheduler(args: &Args, budget: usize, workers: usize) -> Result<Scheduler> {
@@ -213,6 +247,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "serve" => {
             let isa = apply_isa(&args)?;
+            let traced = trace_out_guard(&args)?;
             let manifest = load_manifest(&args)?;
             let m = method(&args)?;
             let workers: usize = args.get("workers", "1").parse()?;
@@ -242,6 +277,7 @@ fn main() -> Result<()> {
                 sched.preemption().name(),
                 sched.engine.pipeline().name()
             );
+            let recorder = sched.obs.clone();
             innerq::server::serve_with(
                 sched,
                 &addr,
@@ -253,10 +289,16 @@ fn main() -> Result<()> {
                         eprintln!("[serve] admin stats on {a}");
                     }
                 },
-            )
+            )?;
+            if let Some((guard, path)) = traced {
+                write_trace_out(&recorder, &path)?;
+                drop(guard);
+            }
+            Ok(())
         }
         "generate" => {
             let isa = apply_isa(&args)?;
+            let traced = trace_out_guard(&args)?;
             let manifest = load_manifest(&args)?;
             let m = method(&args)?;
             let prompt = args.get("prompt", "a=13;b=88;?a=");
@@ -277,10 +319,15 @@ fn main() -> Result<()> {
                 c.total_us,
                 c.n_generated
             );
+            if let Some((guard, path)) = traced {
+                write_trace_out(&sched.obs, &path)?;
+                drop(guard);
+            }
             Ok(())
         }
         "serve-trace" => {
             let isa = apply_isa(&args)?;
+            let traced = trace_out_guard(&args)?;
             let rate: f64 = args.get("rate", "200").parse()?;
             let arrival_name = args.get("arrival", "poisson");
             let arrival = Arrival::parse(&arrival_name, rate)
@@ -351,6 +398,10 @@ fn main() -> Result<()> {
                 std::fs::write(&json_path, report.to_json().dump())?;
                 eprintln!("[serve-trace] wrote {json_path}");
             }
+            if let Some((guard, path)) = traced {
+                write_trace_out(&sched.obs, &path)?;
+                drop(guard);
+            }
             Ok(())
         }
         "exp" => {
@@ -397,13 +448,14 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: innerq <serve|generate|serve-trace|exp|info> [flags]\n\
                  \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
-                 \n              --io-workers N --admin-port PORT\
+                 \n              --io-workers N --admin-port PORT --trace-out PATH\
                  \n              --budget BYTES --policy fifo|slo\
                  \n              --preemption recompute|offload --warm-budget BYTES\
                  \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
                  \n              --prefix-share on|off --prefix-budget BYTES\
                  \n  generate    --prompt S --method M --max-new N --workers N\
                  \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
+                 \n              --trace-out PATH\
                  \n  serve-trace --trace timed|multi-turn --sessions N\
                  \n              --arrival poisson|bursty|ramp|batch --rate R --requests N\
                  \n              --seed S --budget BYTES --policy fifo|slo --workers N\
@@ -411,7 +463,7 @@ fn main() -> Result<()> {
                  \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
                  \n              --prefix-share on|off --prefix-budget BYTES\
                  \n              --interactive FRAC --deadline-ms D --cost-model PATH\
-                 \n              --json PATH --fake\
+                 \n              --json PATH --trace-out PATH --fake\
                  \n  exp         table1|table2|table3|table7|fig5|msparsity|simulate|all\
                  \n  info        --artifacts DIR\n\
                  \nmethods: {}",

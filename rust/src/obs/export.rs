@@ -1,0 +1,182 @@
+//! Trace exporters: Chrome trace-event JSON and Prometheus text exposition.
+//!
+//! Both formats are produced from the same [`Recorder`] state — the Chrome
+//! trace from the buffered span events (one complete `ph: "X"` event per
+//! span, lanes as `tid`s), the Prometheus page from the admin stats
+//! snapshot (every counter/gauge the `stats` command already exposes) plus
+//! the per-stage duration histograms as summaries.
+
+use crate::obs::recorder::Recorder;
+use crate::obs::SpanEvent;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Build a Chrome trace-event JSON document (the "JSON object format":
+/// `{"traceEvents": [...]}`, loadable in `chrome://tracing` and Perfetto)
+/// from complete span events. Timestamps are already microseconds, the
+/// unit the format specifies for `ts`/`dur`.
+pub fn chrome_trace<'a>(events: impl IntoIterator<Item = &'a SpanEvent>) -> Json {
+    let trace_events: Vec<Json> = events
+        .into_iter()
+        .map(|e| {
+            let (a_name, b_name) = e.kind.arg_names();
+            let mut args = vec![
+                ("id", Json::Num(e.id as f64)),
+                (a_name, Json::Num(e.a as f64)),
+                (b_name, Json::Num(e.b as f64)),
+            ];
+            if let Some(tag) = e.tag {
+                args.push(("tag", Json::str(tag)));
+            }
+            Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.lane as f64)),
+                ("ts", Json::Num(e.start_us as f64)),
+                ("dur", Json::Num(e.dur_us as f64)),
+                ("name", Json::str(e.kind.name())),
+                ("cat", Json::str(e.kind.cat())),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(trace_events)),
+    ])
+}
+
+/// Render one Prometheus metric line set (`# HELP`, `# TYPE`, sample) for a
+/// plain gauge.
+fn gauge(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Build the Prometheus text-exposition page: every `(name, value)` pair of
+/// the admin stats snapshot as `innerq_<name>`, the per-stage span-duration
+/// histograms as summaries, and the tracing plane's own meta-series.
+///
+/// All snapshot series are typed `gauge` — the scrape-side distinction
+/// between the monotonic counters and the instantaneous gauges in the
+/// snapshot is documented per series name in `ARCHITECTURE.md`, and `gauge`
+/// is the type that is never wrong for a value that can be reset by a
+/// server restart.
+pub fn prometheus(rec: &Recorder, snapshot: &[(String, u64)]) -> String {
+    let mut out = String::new();
+    for (name, value) in snapshot {
+        gauge(
+            &mut out,
+            &format!("innerq_{name}"),
+            &format!("Admin stats field {name}."),
+            *value,
+        );
+    }
+    if !rec.stages().is_empty() {
+        let _ = writeln!(
+            out,
+            "# HELP innerq_stage_duration_us Span duration in microseconds by stage."
+        );
+        let _ = writeln!(out, "# TYPE innerq_stage_duration_us summary");
+        for (stage, hist) in rec.stages() {
+            let s = hist.summary();
+            for (q, v) in
+                [("0.5", s.p50_us), ("0.9", s.p90_us), ("0.99", s.p99_us)]
+            {
+                let _ = writeln!(
+                    out,
+                    "innerq_stage_duration_us{{stage=\"{stage}\",quantile=\"{q}\"}} {v}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "innerq_stage_duration_us_sum{{stage=\"{stage}\"}} {}",
+                hist.sum_us()
+            );
+            let _ = writeln!(
+                out,
+                "innerq_stage_duration_us_count{{stage=\"{stage}\"}} {}",
+                hist.count()
+            );
+        }
+    }
+    gauge(
+        &mut out,
+        "innerq_trace_enabled",
+        "1 while a tracer (admin trace window or --trace-out) is live.",
+        crate::obs::enabled() as u64,
+    );
+    gauge(
+        &mut out,
+        "innerq_trace_buffered_events",
+        "Span events currently held by the flight recorder.",
+        rec.len() as u64,
+    );
+    gauge(
+        &mut out,
+        "innerq_trace_events_lost",
+        "Span events lost end to end (ring overwrites plus recorder eviction).",
+        rec.lost(),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+
+    fn ev(kind: SpanKind, id: u64, start: u64, dur: u64) -> SpanEvent {
+        SpanEvent { kind, id, start_us: start, dur_us: dur, lane: 3, a: 1, b: 2, tag: None }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let events = [
+            ev(SpanKind::Prefill, 1, 100, 50),
+            SpanEvent { tag: Some("ok"), ..ev(SpanKind::Request, 1, 90, 400) },
+        ];
+        let doc = chrome_trace(events.iter());
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        let tes = parsed.get("traceEvents").as_arr().unwrap();
+        assert_eq!(tes.len(), 2);
+        for te in tes {
+            assert_eq!(te.get("ph").as_str(), Some("X"));
+            assert_eq!(te.get("pid").as_f64(), Some(1.0));
+            assert!(te.get("ts").as_f64().is_some());
+            assert!(te.get("dur").as_f64().is_some());
+            assert!(te.get("name").as_str().is_some());
+            assert!(te.get("cat").as_str().is_some());
+            assert!(te.get("args").as_obj().is_some());
+        }
+        let req = tes.iter().find(|t| t.get("name").as_str() == Some("request")).unwrap();
+        assert_eq!(req.get("args").get("tag").as_str(), Some("ok"));
+        assert_eq!(req.get("args").get("id").as_f64(), Some(1.0));
+        // Single line: the admin `trace` command replies with one line.
+        assert!(!doc.dump().contains('\n'));
+    }
+
+    #[test]
+    fn prometheus_page_is_well_formed() {
+        let rec = Recorder::new();
+        let snap = vec![("decode_steps".to_string(), 42u64), ("pending".to_string(), 0u64)];
+        let page = prometheus(&rec, &snap);
+        assert!(page.contains("# TYPE innerq_decode_steps gauge\n"));
+        assert!(page.contains("\ninnerq_decode_steps 42\n"));
+        assert!(page.contains("innerq_trace_enabled 0\n"));
+        for line in page.lines() {
+            assert!(!line.trim().is_empty());
+            if line.starts_with('#') {
+                let mut parts = line.splitn(4, ' ');
+                assert_eq!(parts.next(), Some("#"));
+                assert!(matches!(parts.next(), Some("HELP") | Some("TYPE")));
+                assert!(parts.next().unwrap().starts_with("innerq_"));
+            } else {
+                let (series, value) = line.rsplit_once(' ').unwrap();
+                assert!(series.starts_with("innerq_"));
+                assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            }
+        }
+    }
+}

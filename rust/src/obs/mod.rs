@@ -1,0 +1,481 @@
+//! Wall-clock tracing and profiling plane.
+//!
+//! Always compiled in, off by default, and built so that the act of
+//! observing the system cannot perturb it:
+//!
+//! * **Disabled cost**: one relaxed atomic load per emission site
+//!   ([`enabled`]). Every emission helper checks it first and returns.
+//! * **Enabled cost**: a timestamp read plus a handful of atomic ops to
+//!   push a fixed-size [`SpanEvent`] into the emitting thread's private
+//!   [`EventRing`] lane. Rings are drop-oldest and never block
+//!   ([`crate::util::ring`]), so a slow (or absent) drainer loses events —
+//!   counted, never waited for.
+//! * **Byte identity**: tracing reads clocks and writes rings; it takes no
+//!   locks on the data path and never feeds back into scheduling, so
+//!   decode output with tracing on is byte-identical to tracing off
+//!   (asserted in `tests/observability.rs`).
+//!
+//! ## Lanes
+//!
+//! Each emitting thread lazily claims a private ring lane the first time it
+//! emits while tracing is enabled (a thread-local holds the lane index;
+//! lanes are recycled through a free list when threads exit). One producer
+//! per ring keeps the producer path contention-free; the drainer — the
+//! scheduler driver, via [`recorder::Recorder::drain`] once per loop — pops
+//! every lane behind the recorder's own mutex.
+//!
+//! ## Clock
+//!
+//! All timestamps are microseconds since a process-wide epoch (the first
+//! instant the plane is touched), so spans from every thread share one
+//! timeline and export directly as Chrome trace-event `ts` values.
+//!
+//! ## Enabling
+//!
+//! Tracing turns on while at least one [`TraceGuard`] is live: the admin
+//! `trace <secs>` command holds one for its window, `--trace-out` holds one
+//! for the process lifetime, and tests arm their own.
+
+pub mod export;
+pub mod recorder;
+
+use crate::util::ring::EventRing;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Maximum concurrent emitting threads with private lanes; later threads
+/// emit nothing (drivers, IO workers and pool workers together stay far
+/// below this).
+const MAX_LANES: usize = 64;
+
+/// Per-lane ring capacity in events. Lanes are allocated lazily on first
+/// use, so an untraced process never pays for them.
+const RING_CAP: usize = 2048;
+
+/// Count of live [`TraceGuard`]s. Tracing is on while > 0.
+static TRACERS: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide trace epoch; all span timestamps are relative to it.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The lane rings, allocated together on first emission or drain.
+static LANES: OnceLock<Vec<EventRing<SpanEvent>>> = OnceLock::new();
+
+/// Next never-used lane index (monotonic; bounded use by [`MAX_LANES`]).
+static NEXT_LANE: AtomicU32 = AtomicU32::new(0);
+
+/// Lanes returned by exited threads, reused before minting new ones.
+static FREE_LANES: Mutex<Vec<u32>> = Mutex::new(Vec::new());
+
+/// Thread-local lane sentinel: not yet assigned.
+const LANE_UNSET: u32 = u32::MAX;
+/// Thread-local lane sentinel: lanes exhausted, this thread emits nothing.
+const LANE_NONE: u32 = u32::MAX - 1;
+
+/// Thread-local lane slot whose drop returns the lane for reuse.
+struct LaneCell(Cell<u32>);
+
+impl Drop for LaneCell {
+    fn drop(&mut self) {
+        let v = self.0.get();
+        if v < MAX_LANES as u32 {
+            let mut free = FREE_LANES.lock().unwrap_or_else(|e| e.into_inner());
+            free.push(v);
+        }
+    }
+}
+
+thread_local! {
+    static LANE: LaneCell = const { LaneCell(Cell::new(LANE_UNSET)) };
+}
+
+/// Whether any tracer is live. One relaxed load — the entire disabled-path
+/// cost of every emission site.
+#[inline]
+pub fn enabled() -> bool {
+    TRACERS.load(Ordering::Relaxed) > 0
+}
+
+/// RAII handle that keeps tracing enabled while it lives.
+pub struct TraceGuard(());
+
+impl TraceGuard {
+    /// Enable tracing until the guard drops. Guards nest: tracing stays on
+    /// while any guard is live.
+    pub fn arm() -> TraceGuard {
+        // Pin the epoch before the first event so no span predates it.
+        let _ = epoch();
+        TRACERS.fetch_add(1, Ordering::Relaxed);
+        TraceGuard(())
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        TRACERS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the trace epoch.
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Convert an [`Instant`] captured elsewhere (e.g. a request's arrival
+/// time) to microseconds since the trace epoch; instants before the epoch
+/// clamp to 0.
+pub fn epoch_us_of(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+/// What a span measured. Every kind carries the same fixed payload
+/// (`id`, two `u64` args, an optional static tag); [`SpanKind::arg_names`]
+/// documents what the args mean per kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Queue residency: submission to admission (or terminal failure).
+    /// `id` = request id.
+    Queued,
+    /// One prefill (private, shared-hit, or publishing). `id` = request id.
+    Prefill,
+    /// One scheduler decode step over the live batch. `id` = step ordinal.
+    DecodeStep,
+    /// Whole-request lifecycle span, arrival to terminal state; the tag is
+    /// the terminal outcome (`ok`/`rejected`/`expired`/`cancelled`).
+    /// `id` = request id.
+    Request,
+    /// Driver-side QKV PJRT stage for one decode step and layer.
+    StageQkv,
+    /// Driver-side output-projection PJRT stage for one layer.
+    StageOut,
+    /// Driver-side LM-head stage ending a decode step.
+    StageHead,
+    /// One fused append+attend job for one (sequence, KV head); the tag is
+    /// the active kernel ISA arm. `id` = batch sequence index.
+    AttnJob,
+    /// Quantize-on-evict of one fp-window block into the packed middle.
+    /// `id` = rows quantized (no request identity at this depth).
+    QuantEvict,
+    /// Offload-preemption snapshot serialization. `id` = request id.
+    Snapshot,
+    /// Warm-tier restore deserialization. `id` = request id.
+    Restore,
+    /// Prefix-store probe at prefill. `id` = prefix content hash (the
+    /// engine has no request identity); `b` encodes the outcome
+    /// (0 private/refused, 1 hit, 2 published).
+    PrefixProbe,
+    /// Warm-tier segment insertion. `id` = request id.
+    TierInsert,
+    /// Warm-tier frame retrieval. `id` = request id.
+    TierTake,
+    /// IO-worker ingress: bytes parsed into one submitted request.
+    /// `id` = connection id (driver request ids are not assigned yet).
+    Ingress,
+    /// IO-worker egress: one flush of a connection's buffered response
+    /// bytes. `id` = conn id; `b` = bytes written.
+    Egress,
+}
+
+impl SpanKind {
+    /// Every kind, for exporters and tests.
+    pub const ALL: [SpanKind; 16] = [
+        SpanKind::Queued,
+        SpanKind::Prefill,
+        SpanKind::DecodeStep,
+        SpanKind::Request,
+        SpanKind::StageQkv,
+        SpanKind::StageOut,
+        SpanKind::StageHead,
+        SpanKind::AttnJob,
+        SpanKind::QuantEvict,
+        SpanKind::Snapshot,
+        SpanKind::Restore,
+        SpanKind::PrefixProbe,
+        SpanKind::TierInsert,
+        SpanKind::TierTake,
+        SpanKind::Ingress,
+        SpanKind::Egress,
+    ];
+
+    /// Stable span name (Chrome trace `name`, Prometheus `stage` label).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Queued => "queued",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::Request => "request",
+            SpanKind::StageQkv => "stage_qkv",
+            SpanKind::StageOut => "stage_out",
+            SpanKind::StageHead => "stage_head",
+            SpanKind::AttnJob => "attn_job",
+            SpanKind::QuantEvict => "quant_evict",
+            SpanKind::Snapshot => "snapshot",
+            SpanKind::Restore => "restore",
+            SpanKind::PrefixProbe => "prefix_probe",
+            SpanKind::TierInsert => "tier_insert",
+            SpanKind::TierTake => "tier_take",
+            SpanKind::Ingress => "ingress",
+            SpanKind::Egress => "egress",
+        }
+    }
+
+    /// Chrome trace category.
+    pub fn cat(self) -> &'static str {
+        match self {
+            SpanKind::Queued | SpanKind::Prefill | SpanKind::Request => "request",
+            SpanKind::DecodeStep => "driver",
+            SpanKind::StageQkv | SpanKind::StageOut | SpanKind::StageHead => "stage",
+            SpanKind::AttnJob => "job",
+            SpanKind::QuantEvict
+            | SpanKind::Snapshot
+            | SpanKind::Restore
+            | SpanKind::PrefixProbe => "cache",
+            SpanKind::TierInsert | SpanKind::TierTake => "store",
+            SpanKind::Ingress | SpanKind::Egress => "io",
+        }
+    }
+
+    /// Names of the two `u64` args (`a`, `b`) for trace-export labeling.
+    pub fn arg_names(self) -> (&'static str, &'static str) {
+        match self {
+            SpanKind::Queued => ("priority", "aux"),
+            SpanKind::Prefill => ("tokens", "shared_bytes"),
+            SpanKind::DecodeStep => ("batch", "aux"),
+            SpanKind::Request => ("priority", "generated"),
+            SpanKind::StageQkv | SpanKind::StageOut | SpanKind::StageHead => ("layer", "batch"),
+            SpanKind::AttnJob => ("layer", "head"),
+            SpanKind::QuantEvict => ("rows", "aux"),
+            SpanKind::Snapshot | SpanKind::Restore => ("bytes", "aux"),
+            SpanKind::PrefixProbe => ("bytes", "outcome"),
+            SpanKind::TierInsert | SpanKind::TierTake => ("bytes", "aux"),
+            SpanKind::Ingress => ("conn", "bytes"),
+            SpanKind::Egress => ("conn", "bytes"),
+        }
+    }
+}
+
+/// One completed span, as pushed into a lane ring. Fixed-size and `Copy`
+/// so rings never allocate or drop.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Kind-specific identity (usually the request id).
+    pub id: u64,
+    /// Start, microseconds since the trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// The emitting thread's lane (Chrome trace `tid`).
+    pub lane: u32,
+    /// First kind-specific arg (see [`SpanKind::arg_names`]).
+    pub a: u64,
+    /// Second kind-specific arg.
+    pub b: u64,
+    /// Optional static annotation (terminal outcome, ISA arm, ...).
+    pub tag: Option<&'static str>,
+}
+
+fn rings() -> &'static Vec<EventRing<SpanEvent>> {
+    LANES.get_or_init(|| (0..MAX_LANES).map(|_| EventRing::new(RING_CAP)).collect())
+}
+
+/// This thread's lane index, claiming one on first use.
+fn lane() -> u32 {
+    LANE.with(|cell| {
+        let v = cell.0.get();
+        if v != LANE_UNSET {
+            return v;
+        }
+        let l = alloc_lane();
+        cell.0.set(l);
+        l
+    })
+}
+
+fn alloc_lane() -> u32 {
+    {
+        let mut free = FREE_LANES.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(l) = free.pop() {
+            return l;
+        }
+    }
+    let n = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+    if (n as usize) < MAX_LANES {
+        n
+    } else {
+        LANE_NONE
+    }
+}
+
+fn emit(mut ev: SpanEvent) {
+    let lane = lane();
+    if lane == LANE_NONE {
+        return;
+    }
+    ev.lane = lane;
+    rings()[lane as usize].push(ev);
+}
+
+/// Begin timing a span: returns the start timestamp, or 0 when tracing is
+/// disabled (the matching [`span`] call is then a no-op). The timestamp is
+/// clamped to ≥ 1 so 0 stays unambiguous.
+#[inline]
+pub fn start() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    now_us().max(1)
+}
+
+/// Close a span opened by [`start`] and emit it. No-op when `t0 == 0`
+/// (tracing was off at the start) or tracing has turned off since.
+#[inline]
+pub fn span(kind: SpanKind, id: u64, t0: u64, a: u64, b: u64) {
+    if t0 == 0 || !enabled() {
+        return;
+    }
+    emit(SpanEvent {
+        kind,
+        id,
+        start_us: t0,
+        dur_us: now_us().saturating_sub(t0),
+        lane: 0,
+        a,
+        b,
+        tag: None,
+    });
+}
+
+/// [`span`] with a static tag (terminal outcome, ISA arm, ...).
+#[inline]
+pub fn span_tag(kind: SpanKind, id: u64, t0: u64, a: u64, b: u64, tag: &'static str) {
+    if t0 == 0 || !enabled() {
+        return;
+    }
+    emit(SpanEvent {
+        kind,
+        id,
+        start_us: t0,
+        dur_us: now_us().saturating_sub(t0),
+        lane: 0,
+        a,
+        b,
+        tag: Some(tag),
+    });
+}
+
+/// Emit a span with explicit endpoints (epoch-relative microseconds) — for
+/// lifecycle spans whose start predates the emission site, e.g. a request
+/// span stamped from its arrival instant at terminal time.
+#[inline]
+pub fn mark(
+    kind: SpanKind,
+    id: u64,
+    start_us: u64,
+    end_us: u64,
+    a: u64,
+    b: u64,
+    tag: Option<&'static str>,
+) {
+    if !enabled() {
+        return;
+    }
+    emit(SpanEvent {
+        kind,
+        id,
+        start_us,
+        dur_us: end_us.saturating_sub(start_us),
+        lane: 0,
+        a,
+        b,
+        tag,
+    });
+}
+
+/// Drain every lane ring into `out`; returns events lost since the last
+/// drain. Callers serialize through the recorder's mutex.
+pub(crate) fn drain_events(out: &mut Vec<SpanEvent>) -> u64 {
+    let Some(rings) = LANES.get() else {
+        return 0; // Nothing was ever emitted; don't allocate the lanes.
+    };
+    let n = (NEXT_LANE.load(Ordering::Relaxed) as usize).min(MAX_LANES);
+    let mut lost = 0;
+    for ring in &rings[..n] {
+        while let Some(ev) = ring.pop() {
+            out.push(ev);
+        }
+        lost += ring.take_lost();
+    }
+    lost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These unit tests share the process-global tracing state with nothing
+    // else in the lib test binary (no other lib test arms tracing), but
+    // serialize against each other anyway.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn drain_all() -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        drain_events(&mut out);
+        out
+    }
+
+    #[test]
+    fn disabled_emission_is_a_no_op() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        drain_all();
+        assert!(!enabled());
+        assert_eq!(start(), 0);
+        span(SpanKind::DecodeStep, 1, 0, 0, 0);
+        span(SpanKind::DecodeStep, 1, 123, 0, 0); // stale t0, tracing off
+        mark(SpanKind::Request, 1, 10, 20, 0, 0, None);
+        assert!(drain_all().is_empty());
+    }
+
+    #[test]
+    fn armed_spans_round_trip() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        drain_all();
+        let guard = TraceGuard::arm();
+        assert!(enabled());
+        let t0 = start();
+        assert!(t0 > 0);
+        span_tag(SpanKind::AttnJob, 7, t0, 3, 5, "scalar");
+        mark(SpanKind::Request, 9, 100, 250, 1, 4, Some("ok"));
+        drop(guard);
+        assert!(!enabled());
+        let evs = drain_all();
+        assert_eq!(evs.len(), 2);
+        let attn = evs.iter().find(|e| e.kind == SpanKind::AttnJob).unwrap();
+        assert_eq!((attn.id, attn.a, attn.b, attn.tag), (7, 3, 5, Some("scalar")));
+        let req = evs.iter().find(|e| e.kind == SpanKind::Request).unwrap();
+        assert_eq!((req.start_us, req.dur_us, req.tag), (100, 150, Some("ok")));
+    }
+
+    #[test]
+    fn kind_tables_are_total() {
+        for k in SpanKind::ALL {
+            assert!(!k.name().is_empty());
+            assert!(!k.cat().is_empty());
+            let (a, b) = k.arg_names();
+            assert!(!a.is_empty() && !b.is_empty());
+        }
+        // Names are unique (they key the per-stage histograms).
+        let mut names: Vec<_> = SpanKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SpanKind::ALL.len());
+    }
+}

@@ -3,6 +3,10 @@
 //!
 //! Commands (one per line, case-sensitive):
 //! * `stats`   → one `STAT <name> <value>` line per counter, then `END`.
+//! * `metrics` → the same snapshot plus live stage-latency summaries as a
+//!   Prometheus text-exposition page, then `END`.
+//! * `trace <secs>` → arm tracing ([`crate::obs`]) for a 1–60 s window,
+//!   then reply with one line of Chrome trace-event JSON covering it.
 //! * `version` → `VERSION <crate version>`.
 //! * `quit`    → closes this admin connection.
 //! * anything else → `ERROR unknown command '<cmd>'` (blank lines ignored).
@@ -11,8 +15,13 @@
 //! refreshes a snapshot ([`AdminSnapshot`]) behind a mutex once per loop,
 //! and admin connections only ever format that snapshot. A malformed admin
 //! command — or a thousand of them — cannot touch the scheduler, the cache,
-//! or any data-plane connection.
+//! or any data-plane connection. `trace` is the one deliberate exception:
+//! it flips the process-wide tracing flag for its window, which makes the
+//! driver drain span rings into the flight recorder — observational state
+//! only, never scheduling state (decode output stays byte-identical).
 
+use crate::obs;
+use crate::obs::recorder::Recorder;
 use std::io::{ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -47,8 +56,33 @@ fn write_all_nb(stream: &mut TcpStream, mut buf: &[u8], stop: &AtomicBool) -> st
     Ok(())
 }
 
+/// Run the `trace <secs>` window: arm tracing, wait it out (checking
+/// `stop` so shutdown is never delayed), then drain everything the window
+/// produced and export it as one line of Chrome trace JSON.
+fn run_trace_window(secs: u64, recorder: &Mutex<Recorder>, stop: &AtomicBool) -> String {
+    let guard = obs::TraceGuard::arm();
+    let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+    while std::time::Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    // Keep the guard alive through the final drain so the driver cannot
+    // observe a disabled plane while ring events from the window are still
+    // in flight.
+    let mut rec = recorder.lock().unwrap_or_else(|e| e.into_inner());
+    rec.drain();
+    let json = rec.chrome_trace(Some(secs.saturating_mul(1_000_000))).dump();
+    drop(rec);
+    drop(guard);
+    format!("{json}\r\n")
+}
+
 /// Serve one admin connection until `quit`, EOF, error, or server stop.
-fn admin_conn_loop(mut stream: TcpStream, snapshot: SharedSnapshot, stop: Arc<AtomicBool>) {
+fn admin_conn_loop(
+    mut stream: TcpStream,
+    snapshot: SharedSnapshot,
+    recorder: Arc<Mutex<Recorder>>,
+    stop: Arc<AtomicBool>,
+) {
     use crate::server::conn::{LineAssembler, LineEvent};
     if stream.set_nonblocking(true).is_err() {
         return;
@@ -85,7 +119,24 @@ fn admin_conn_loop(mut stream: TcpStream, snapshot: SharedSnapshot, stop: Arc<At
                             out.push_str("END\r\n");
                             out
                         }
-                        other => format!("ERROR unknown command '{other}'\r\n"),
+                        "metrics" => {
+                            let snap =
+                                snapshot.lock().unwrap_or_else(|e| e.into_inner()).clone();
+                            let rec = recorder.lock().unwrap_or_else(|e| e.into_inner());
+                            let mut out = crate::obs::export::prometheus(&rec, &snap);
+                            drop(rec);
+                            out.push_str("END\r\n");
+                            out
+                        }
+                        other => match other.strip_prefix("trace ") {
+                            Some(arg) => match arg.trim().parse::<u64>() {
+                                Ok(secs @ 1..=60) => run_trace_window(secs, &recorder, &stop),
+                                _ => {
+                                    "ERROR trace window must be 1..=60 seconds\r\n".to_string()
+                                }
+                            },
+                            None => format!("ERROR unknown command '{other}'\r\n"),
+                        },
                     }
                 }
             };
@@ -100,15 +151,21 @@ fn admin_conn_loop(mut stream: TcpStream, snapshot: SharedSnapshot, stop: Arc<At
 /// the data-plane listener) and serve each on its own thread. All
 /// connection threads are joined before this returns, so a stopped server
 /// leaves nothing running.
-pub(crate) fn admin_loop(listener: TcpListener, snapshot: SharedSnapshot, stop: Arc<AtomicBool>) {
+pub(crate) fn admin_loop(
+    listener: TcpListener,
+    snapshot: SharedSnapshot,
+    recorder: Arc<Mutex<Recorder>>,
+    stop: Arc<AtomicBool>,
+) {
     let mut handles = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let snapshot = snapshot.clone();
+                let recorder = recorder.clone();
                 let stop = stop.clone();
                 handles.push(std::thread::spawn(move || {
-                    admin_conn_loop(stream, snapshot, stop)
+                    admin_conn_loop(stream, snapshot, recorder, stop)
                 }));
             }
             Err(ref e) if e.kind() == ErrorKind::WouldBlock => {

@@ -14,12 +14,13 @@
 //! request the connection still has pending, releasing its cache
 //! reservation, warm-tier residency, and prefix pins mid-decode.
 
+use crate::obs;
 use crate::server::conn::{error_line, parse_request_line, LineAssembler, LineEvent, LineOutcome, RequestSpec};
 use crate::util::spsc::{Consumer, Producer};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -87,12 +88,16 @@ fn push_to_driver(tx: &mut Producer<ToDriver>, stop: &AtomicBool, msg: ToDriver)
     }
 }
 
-/// The worker thread body. Runs until `stop` flips true.
+/// The worker thread body. Runs until `stop` flips true. `conn_gauge`
+/// mirrors the worker's live-connection count for the admin `stats` plane
+/// (written with relaxed ordering — it is a monitoring gauge, not a
+/// synchronization point).
 pub(crate) fn io_worker_loop(
     mut intake: Consumer<(u64, TcpStream)>,
     mut to_driver: Producer<ToDriver>,
     mut from_driver: Consumer<Outbound>,
     stop: Arc<AtomicBool>,
+    conn_gauge: Arc<AtomicUsize>,
 ) {
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut dead: Vec<u64> = Vec::new();
@@ -109,6 +114,7 @@ pub(crate) fn io_worker_loop(
             }
             let _ = stream.set_nodelay(true);
             conns.insert(conn_id, Conn { stream, asm: LineAssembler::new(), out: Vec::new() });
+            conn_gauge.store(conns.len(), Ordering::Relaxed);
         }
 
         // Response lines from the driver.
@@ -142,19 +148,30 @@ pub(crate) fn io_worker_loop(
                                     "request line exceeds {} bytes",
                                     super::conn::MAX_LINE_BYTES
                                 ))),
-                                LineEvent::Line(bytes) => match parse_request_line(&bytes) {
-                                    LineOutcome::Ignore => {}
-                                    LineOutcome::Error(msg) => c.queue_line(&error_line(&msg)),
-                                    LineOutcome::Request(spec) => {
-                                        if !push_to_driver(
-                                            &mut to_driver,
-                                            &stop,
-                                            ToDriver::Submit { conn_id, spec },
-                                        ) {
-                                            c.queue_line(&error_line("server is shutting down"));
+                                LineEvent::Line(bytes) => {
+                                    let t_in = obs::start();
+                                    let n_bytes = bytes.len() as u64;
+                                    match parse_request_line(&bytes) {
+                                        LineOutcome::Ignore => {}
+                                        LineOutcome::Error(msg) => c.queue_line(&error_line(&msg)),
+                                        LineOutcome::Request(spec) => {
+                                            if !push_to_driver(
+                                                &mut to_driver,
+                                                &stop,
+                                                ToDriver::Submit { conn_id, spec },
+                                            ) {
+                                                c.queue_line(&error_line("server is shutting down"));
+                                            }
+                                            obs::span(
+                                                obs::SpanKind::Ingress,
+                                                conn_id,
+                                                t_in,
+                                                conn_id,
+                                                n_bytes,
+                                            );
                                         }
                                     }
-                                },
+                                }
                             }
                         }
                         taken += n;
@@ -171,6 +188,7 @@ pub(crate) fn io_worker_loop(
                 }
             }
             // -- writes --
+            let t_out = if c.out.is_empty() { 0 } else { obs::start() };
             let mut written = 0usize;
             while written < c.out.len() {
                 match c.stream.write(&c.out[written..]) {
@@ -192,6 +210,7 @@ pub(crate) fn io_worker_loop(
             }
             if written > 0 {
                 c.out.drain(..written);
+                obs::span(obs::SpanKind::Egress, conn_id, t_out, conn_id, written as u64);
             }
         }
 
@@ -203,6 +222,7 @@ pub(crate) fn io_worker_loop(
                 conns.remove(&conn_id);
                 push_to_driver(&mut to_driver, &stop, ToDriver::Disconnect { conn_id });
             }
+            conn_gauge.store(conns.len(), Ordering::Relaxed);
         }
 
         if !busy {

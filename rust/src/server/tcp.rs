@@ -35,7 +35,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -129,6 +129,7 @@ pub fn serve_with(
     let mut intake_tx: Vec<Producer<(u64, TcpStream)>> = Vec::new();
     let mut from_workers: Vec<Consumer<ToDriver>> = Vec::new();
     let mut to_workers: Vec<Producer<Outbound>> = Vec::new();
+    let mut conn_gauges: Vec<Arc<AtomicUsize>> = Vec::new();
     let mut worker_handles = Vec::new();
     for _ in 0..n_workers {
         let (itx, irx) = spsc::channel::<(u64, TcpStream)>(INTAKE_CAP);
@@ -137,8 +138,11 @@ pub fn serve_with(
         intake_tx.push(itx);
         from_workers.push(drx);
         to_workers.push(wtx);
+        let gauge = Arc::new(AtomicUsize::new(0));
+        conn_gauges.push(gauge.clone());
         let stop_w = stop.clone();
-        worker_handles.push(std::thread::spawn(move || io_worker_loop(irx, dtx, wrx, stop_w)));
+        worker_handles
+            .push(std::thread::spawn(move || io_worker_loop(irx, dtx, wrx, stop_w, gauge)));
     }
 
     // Listener thread: accept and deal out connections round-robin.
@@ -173,12 +177,16 @@ pub fn serve_with(
         }
     });
 
-    // Admin plane: its connections only read the driver-refreshed snapshot.
+    // Admin plane: its connections read the driver-refreshed snapshot, and
+    // `metrics`/`trace` additionally read the scheduler's flight recorder
+    // (shared by Arc; the driver only ever try-locks it, so a slow admin
+    // read delays observability, never decoding).
     let snapshot: SharedSnapshot = Arc::new(Mutex::new(Vec::new()));
     let admin_handle = admin_listener.map(|l| {
         let snap = snapshot.clone();
+        let recorder = sched.obs.clone();
         let stop_a = stop.clone();
-        std::thread::spawn(move || admin_loop(l, snap, stop_a))
+        std::thread::spawn(move || admin_loop(l, snap, recorder, stop_a))
     });
 
     // Driver loop (owns the engine; decode attention fans out over the
@@ -192,6 +200,7 @@ pub fn serve_with(
     let mut ttft_hist = LatencyHistogram::new();
     let mut e2e_hist = LatencyHistogram::new();
     let mut pending: Vec<(usize, ToDriver)> = Vec::new();
+    let mut stats_generation = 0u64;
     while !stop.load(Ordering::Relaxed) {
         sched.set_now(started.elapsed().as_micros() as u64);
         let mut busy = false;
@@ -269,8 +278,16 @@ pub fn serve_with(
 
         // Refresh the admin snapshot (cheap: a few dozen counters).
         {
+            stats_generation += 1;
             let mut snap = snapshot.lock().unwrap_or_else(|e| e.into_inner());
-            *snap = build_snapshot(&sched, &ttft_hist, &e2e_hist, started);
+            *snap = build_snapshot(
+                &sched,
+                &ttft_hist,
+                &e2e_hist,
+                started,
+                &conn_gauges,
+                stats_generation,
+            );
         }
 
         if !busy {
@@ -359,12 +376,16 @@ fn send_to_worker(
 /// Assemble the admin `stats` snapshot: scheduler step counters, cache-pool
 /// occupancy, warm-tier and prefix-store counters, and live latency
 /// percentiles. Every value is a u64; counters are monotonic, gauges (pool
-/// bytes, residents, pins) are instantaneous.
+/// bytes, residents, pins) are instantaneous. The layout is append-only:
+/// existing names never change meaning or order, new fields only go on the
+/// end (scrapers index by name, goldens diff by prefix).
 fn build_snapshot(
     sched: &Scheduler,
     ttft: &LatencyHistogram,
     e2e: &LatencyHistogram,
     started: Instant,
+    conn_gauges: &[Arc<AtomicUsize>],
+    generation: u64,
 ) -> Vec<(String, u64)> {
     let m = &sched.metrics;
     let ts = &sched.tier.stats;
@@ -427,6 +448,12 @@ fn build_snapshot(
     push("e2e_p90_us", e.p90_us);
     push("e2e_p99_us", e.p99_us);
     push("e2e_max_us", e.max_us);
+    // Appended fields only below this line (see the doc comment).
+    push("uptime_secs", started.elapsed().as_secs());
+    for (w, gauge) in conn_gauges.iter().enumerate() {
+        push(&format!("io_conns_{w}"), gauge.load(Ordering::Relaxed) as u64);
+    }
+    push("stats_generation", generation);
     out
 }
 
@@ -527,6 +554,21 @@ impl AdminClient {
                 anyhow::bail!("expected STAT, got: {line:?}");
             }
             out.push((name.to_string(), value.parse::<u64>().context("stat value")?));
+        }
+    }
+
+    /// Send `metrics` and read the Prometheus text-exposition page up to
+    /// (excluding) the `END` terminator.
+    pub fn metrics(&mut self) -> Result<String> {
+        writeln!(self.conn, "metrics")?;
+        let mut page = String::new();
+        loop {
+            let line = self.read_reply_line()?;
+            if line == "END" {
+                return Ok(page);
+            }
+            page.push_str(&line);
+            page.push('\n');
         }
     }
 

@@ -54,13 +54,18 @@ impl Default for GpuModel {
 /// Attention-GEMV geometry for one layer (Llama-3.1-8B in Table 4).
 #[derive(Debug, Clone, Copy)]
 pub struct Geometry {
+    /// Cache length in tokens.
     pub n_tokens: usize,
+    /// Head dimension.
     pub d_h: usize,
+    /// Number of KV heads (the cache side of GQA).
     pub n_kv_heads: usize,
+    /// Number of query heads (flops scale with these, bytes do not).
     pub n_q_heads: usize,
 }
 
 impl Geometry {
+    /// The Llama-3.1-8B attention geometry used throughout Table 4.
     pub fn llama31_8b(n_tokens: usize) -> Geometry {
         Geometry { n_tokens, d_h: 128, n_kv_heads: 8, n_q_heads: 32 }
     }

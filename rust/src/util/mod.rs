@@ -3,6 +3,7 @@ pub mod fakemodel;
 pub mod fp16;
 pub mod json;
 pub mod ptest;
+pub mod ring;
 pub mod rng;
 pub mod spsc;
 pub mod stats;

@@ -1,0 +1,283 @@
+//! Bounded drop-oldest event rings for the tracing plane (`crate::obs`).
+//!
+//! Same family as [`crate::util::spsc`] — a fixed-capacity power-of-two
+//! ring, no allocation after construction, no locks — but tuned for
+//! telemetry rather than work handoff, which flips two contracts:
+//!
+//! * **The producer never waits and never fails.** A full ring overwrites
+//!   the oldest event (drop-oldest), and any contention on a slot (the
+//!   consumer is mid-copy) drops the *new* event instead of spinning. A
+//!   traced worker thread therefore pays a bounded handful of atomic ops
+//!   per event and can never block on the observer — the tracing plane's
+//!   "never perturbs the data path" contract.
+//! * **Losing events is legal and counted.** Every event that was pushed
+//!   but will never be popped (overwritten before the consumer got there,
+//!   or dropped on slot contention) increments a lost counter the consumer
+//!   drains with [`EventRing::take_lost`], so the flight recorder can
+//!   report exactly how much it missed instead of silently lying.
+//!
+//! Unlike `spsc`, producer and consumer may race on the *same* slot (the
+//! producer laps the consumer), so slot handoff cannot ride on the head and
+//! tail indices alone. Each slot carries its own sequence word:
+//!
+//! * an idle slot holds the sequence of the event it contains
+//!   (`2 * index + 2` for global event index `index` — strictly increasing
+//!   per slot across generations, never 0 and never `LOCKED`, so there is
+//!   no ABA);
+//! * either side claims a slot by CASing that word to [`LOCKED`]; whoever
+//!   loses the race walks away (the producer drops the event, the consumer
+//!   skips the slot), so no thread ever spins on a slot;
+//! * the producer publishes a written event by storing the new sequence
+//!   with `Release`; the consumer's claiming CAS is `Acquire`, so the copy
+//!   it takes is fully ordered after the write.
+//!
+//! The consumer side is *externally serialized* (the flight recorder drains
+//! behind a mutex); the implementation stays memory-safe under concurrent
+//! pops — the CAS claim still excludes — but two concurrent drainers would
+//! steal events from each other.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Slot-claim marker. Sequence values are `2 * index + 2`, which can never
+/// reach `u64::MAX`, so the marker is unambiguous.
+const LOCKED: u64 = u64::MAX;
+
+/// One ring slot: the sequence word that arbitrates ownership plus the
+/// payload it guards.
+struct Slot<T> {
+    seq: AtomicU64,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// A bounded, drop-oldest, never-blocking event ring. `T: Copy` keeps both
+/// sides trivial: a lost event is simply never read, so there is nothing to
+/// drop.
+pub struct EventRing<T> {
+    slots: Box<[Slot<T>]>,
+    mask: u64,
+    /// Next event index the producer will write. Producer-owned.
+    head: AtomicU64,
+    /// Next event index the consumer will read. Consumer-owned; lives in
+    /// the ring so drains need no external cursor state.
+    tail: AtomicU64,
+    /// Events pushed that will never be popped: dropped on slot contention
+    /// (producer side) plus overwritten before consumption (consumer side).
+    lost: AtomicU64,
+}
+
+// Safety: every slot access is gated by winning a CAS of the slot's `seq`
+// to LOCKED, so no two threads ever touch a slot's payload concurrently;
+// payloads are `Copy` (no drop obligations) and only published via
+// Release/Acquire pairs on `seq`.
+unsafe impl<T: Copy + Send> Send for EventRing<T> {}
+unsafe impl<T: Copy + Send> Sync for EventRing<T> {}
+
+impl<T: Copy> EventRing<T> {
+    /// A ring holding at least `capacity` events (rounded up to the next
+    /// power of two, minimum 2).
+    pub fn new(capacity: usize) -> EventRing<T> {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Box<[Slot<T>]> = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        EventRing {
+            slots,
+            mask: cap as u64 - 1,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+        }
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.mask as usize + 1
+    }
+
+    /// Sequence word an idle slot holds once event `index` has been written
+    /// into it. Strictly increasing per slot, never 0 (the empty marker)
+    /// and never [`LOCKED`].
+    #[inline]
+    fn seq_of(index: u64) -> u64 {
+        2 * index + 2
+    }
+
+    /// Push an event; never blocks. A full ring overwrites the oldest
+    /// event; losing the slot race to the consumer drops this event. Both
+    /// forms of loss are tallied for [`EventRing::take_lost`].
+    pub fn push(&self, item: T) {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(head & self.mask) as usize];
+        let cur = slot.seq.load(Ordering::Relaxed);
+        if cur == LOCKED
+            || slot
+                .seq
+                .compare_exchange(cur, LOCKED, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            // The consumer holds (or just claimed) this slot — drop rather
+            // than wait. The event it is copying out still gets delivered.
+            self.lost.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe { (*slot.val.get()).write(item) };
+        slot.seq.store(Self::seq_of(head), Ordering::Release);
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    /// Pop the oldest available event, or `None` when drained. Consumers
+    /// must be externally serialized (see the module docs). Events the
+    /// producer overwrote before we arrived are skipped and counted lost.
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            if tail == head {
+                self.tail.store(tail, Ordering::Relaxed);
+                return None;
+            }
+            // The producer lapped us: everything older than head - cap is
+            // already overwritten. Jump the cursor and tally the loss.
+            let cap = self.mask + 1;
+            if head - tail > cap {
+                let skipped = head - tail - cap;
+                self.lost.fetch_add(skipped, Ordering::Relaxed);
+                tail = head - cap;
+            }
+            let slot = &self.slots[(tail & self.mask) as usize];
+            let want = Self::seq_of(tail);
+            if slot
+                .seq
+                .compare_exchange(want, LOCKED, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                // Overwritten (a newer generation, or mid-overwrite) —
+                // this event is gone; move on.
+                self.lost.fetch_add(1, Ordering::Relaxed);
+                tail += 1;
+                continue;
+            }
+            let item = unsafe { (*slot.val.get()).assume_init_read() };
+            // Restore the sequence so the producer's next overwrite of this
+            // slot sees the value it expects.
+            slot.seq.store(want, Ordering::Release);
+            self.tail.store(tail + 1, Ordering::Relaxed);
+            return Some(item);
+        }
+    }
+
+    /// Events lost so far (dropped on contention or overwritten unread)
+    /// since the last [`EventRing::take_lost`].
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Drain and reset the lost-event counter.
+    pub fn take_lost(&self) -> u64 {
+        self.lost.swap(0, Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn push_pop_fifo() {
+        let ring = EventRing::<u64>::new(8);
+        assert_eq!(ring.pop(), None);
+        for i in 0..5 {
+            ring.push(i);
+        }
+        for i in 0..5 {
+            assert_eq!(ring.pop(), Some(i));
+        }
+        assert_eq!(ring.pop(), None);
+        assert_eq!(ring.lost(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts_lost() {
+        let ring = EventRing::<u64>::new(4);
+        assert_eq!(ring.capacity(), 4);
+        for i in 0..7 {
+            ring.push(i);
+        }
+        // The four newest survive; the three oldest were overwritten.
+        for i in 3..7 {
+            assert_eq!(ring.pop(), Some(i));
+        }
+        assert_eq!(ring.pop(), None);
+        assert_eq!(ring.take_lost(), 3);
+        assert_eq!(ring.lost(), 0);
+    }
+
+    #[test]
+    fn wraps_across_many_generations() {
+        let ring = EventRing::<u64>::new(4);
+        for round in 0..100u64 {
+            ring.push(round);
+            assert_eq!(ring.pop(), Some(round));
+        }
+        assert_eq!(ring.lost(), 0);
+    }
+
+    #[test]
+    fn capacity_rounds_up() {
+        assert_eq!(EventRing::<u8>::new(5).capacity(), 8);
+        assert_eq!(EventRing::<u8>::new(0).capacity(), 2);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_conserves_events() {
+        const N: u64 = 200_000;
+        let ring = Arc::new(EventRing::<u64>::new(64));
+        let prod = {
+            let ring = ring.clone();
+            thread::spawn(move || {
+                for i in 0..N {
+                    ring.push(i);
+                }
+            })
+        };
+        let mut popped = 0u64;
+        let mut last: Option<u64> = None;
+        loop {
+            match ring.pop() {
+                Some(v) => {
+                    // Single producer pushing an increasing sequence: pops
+                    // must be a strictly increasing subsequence.
+                    if let Some(prev) = last {
+                        assert!(v > prev, "out of order: {prev} then {v}");
+                    }
+                    last = Some(v);
+                    popped += 1;
+                }
+                None => {
+                    if prod.is_finished() {
+                        // Final drain after the producer stopped.
+                        while let Some(v) = ring.pop() {
+                            if let Some(prev) = last {
+                                assert!(v > prev);
+                            }
+                            last = Some(v);
+                            popped += 1;
+                        }
+                        break;
+                    }
+                    thread::yield_now();
+                }
+            }
+        }
+        prod.join().unwrap();
+        // Every pushed event was either delivered or counted lost.
+        assert_eq!(popped + ring.lost(), N);
+    }
+}

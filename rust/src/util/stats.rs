@@ -118,6 +118,12 @@ impl LatencyHistogram {
         self.samples.extend_from_slice(&other.samples);
     }
 
+    /// Sum of all recorded samples (saturating) — the `_sum` series of a
+    /// Prometheus summary.
+    pub fn sum_us(&self) -> u64 {
+        self.samples.iter().fold(0u64, |acc, &v| acc.saturating_add(v))
+    }
+
     /// Exact nearest-rank percentile (`p` in [0, 100]); 0 when empty.
     pub fn percentile(&self, p: f64) -> u64 {
         if self.samples.is_empty() {

@@ -1,0 +1,441 @@
+//! Observability-plane tests: per-request lifecycle spans across every
+//! terminal state, Chrome-trace schema + replay-report reconciliation,
+//! the Prometheus page over a real admin socket, the admin `trace`
+//! window, and the zero-perturbation contract (tracing must not change
+//! a single output byte at any worker count).
+//!
+//! Tracing is process-global (one tracer count, one lane table), and
+//! cargo runs each test *file* as its own process — so only this file
+//! arms tracing, and the tests below serialize themselves on [`GATE`]
+//! so concurrently running tests in this binary cannot drain each
+//! other's span events out of the shared lane rings.
+
+use innerq::coordinator::{Engine, Policy, Preemption, Priority, Request, Scheduler};
+use innerq::obs::recorder::Recorder;
+use innerq::obs::{self, SpanKind};
+use innerq::runtime::Manifest;
+use innerq::server::{serve_with, AdminClient, Client, ServerConfig};
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::json::Json;
+use innerq::workload::replay::{replay, CostModel, Outcome};
+use innerq::workload::trace::{generate_timed, Arrival, TimedRequest, TimedTraceConfig};
+use innerq::QuantMethod;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+
+/// Serializes every test that arms tracing or drains the global rings.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pull any straggler events a previous test left in the lane rings into
+/// a throwaway recorder, so this test starts from clean rings.
+fn flush_stale_events() {
+    let mut scratch = Recorder::new();
+    scratch.drain();
+}
+
+fn fake_scheduler(tag: &str, budget: usize, workers: usize, policy: Policy) -> Scheduler {
+    let dir = write_fake_artifacts(tag, '7');
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, budget);
+    sched.set_policy(policy);
+    sched
+}
+
+fn req(id: u64, prompt: &str, max_new_tokens: usize) -> Request {
+    Request::new(id, prompt, max_new_tokens)
+}
+
+fn req_class(id: u64, prompt: &str, max_new_tokens: usize, p: Priority) -> Request {
+    let mut r = Request::new(id, prompt, max_new_tokens);
+    r.priority = p;
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Lifecycle matrix: every terminal state leaves a Request span with the
+// right tag, and the stage/cache spans around it actually fire.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_lifecycle_spans_cover_every_terminal_state() {
+    let _g = gate();
+    flush_stale_events();
+    let _guard = obs::TraceGuard::arm();
+
+    // Budget fits one est-4608 sequence; offload preemption so the
+    // snapshot/restore and warm-tier spans fire too.
+    let mut sched = fake_scheduler("obs_lifecycle", 6000, 2, Policy::Slo);
+    sched.set_preemption(Preemption::Offload);
+    sched.set_warm_budget(1 << 20);
+
+    // ok + offload/restore: batch goes live, interactive preempts it into
+    // the warm tier, both complete.
+    sched.submit(req_class(1, "a=1;?a=", 2, Priority::Batch));
+    sched.tick().expect("tick");
+    sched.submit(req_class(2, "b=2;?b=", 2, Priority::Interactive));
+    let done = sched.run_to_completion().expect("run");
+    assert_eq!(done.len(), 2);
+    assert!(sched.metrics.offloads >= 1, "offload must have happened");
+
+    // rejected: estimate far over the cache budget.
+    sched.submit(req(3, "a=1;?a=", 200));
+    // expired: the deadline passes while still queued.
+    let mut doomed = req(4, "b=2;?b=", 2);
+    doomed.deadline_us = Some(sched.now_us() + 1);
+    sched.submit(doomed);
+    sched.set_now(sched.now_us() + 10_000);
+    // cancelled: admitted live, then cancelled before it can finish.
+    sched.submit(req(5, "c=3;?c=", 4));
+    sched.tick().expect("tick");
+    assert!(sched.cancel(5), "id 5 must be live to cancel");
+    let _ = sched.run_to_completion().expect("run");
+
+    let mut rec = sched.obs.lock().unwrap_or_else(|e| e.into_inner());
+    rec.drain();
+
+    let terminal: BTreeMap<u64, &'static str> = rec
+        .events()
+        .filter(|e| e.kind == SpanKind::Request)
+        .map(|e| (e.id, e.tag.expect("request span needs a terminal tag")))
+        .collect();
+    assert_eq!(terminal.get(&1), Some(&"ok"), "spans: {terminal:?}");
+    assert_eq!(terminal.get(&2), Some(&"ok"));
+    assert_eq!(terminal.get(&3), Some(&"rejected"));
+    assert_eq!(terminal.get(&4), Some(&"expired"));
+    assert_eq!(terminal.get(&5), Some(&"cancelled"));
+
+    // Stage coverage: the driver stages, the fused attention jobs (overlap
+    // is the default pipeline), and the offload path's cache spans.
+    let kinds: BTreeSet<SpanKind> = rec.events().map(|e| e.kind).collect();
+    for kind in [
+        SpanKind::Queued,
+        SpanKind::Prefill,
+        SpanKind::DecodeStep,
+        SpanKind::Request,
+        SpanKind::StageQkv,
+        SpanKind::StageOut,
+        SpanKind::StageHead,
+        SpanKind::AttnJob,
+        SpanKind::Snapshot,
+        SpanKind::Restore,
+        SpanKind::TierInsert,
+        SpanKind::TierTake,
+    ] {
+        assert!(kinds.contains(&kind), "no {kind:?} span recorded; got {kinds:?}");
+    }
+
+    // AttnJob spans carry the active ISA arm as their tag.
+    let isa = innerq::kernels::dispatch::active().name();
+    assert!(
+        rec.events()
+            .filter(|e| e.kind == SpanKind::AttnJob)
+            .all(|e| e.tag == Some(isa)),
+        "attn jobs must be tagged with the active ISA arm {isa:?}"
+    );
+
+    // Span sanity: durations are finite and every request span's window
+    // covers its decode steps' emission order (start before end).
+    for e in rec.events() {
+        assert!(e.dur_us < 120_000_000, "absurd duration in {e:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome-trace schema + reconciliation with the replay report.
+// ---------------------------------------------------------------------------
+
+fn stress_trace(n: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests: n,
+        arrival: Arrival::Poisson { rate_rps: 800.0 },
+        priority_mix: [1.0, 2.0, 1.0],
+        deadlines_us: [Some(200_000), None, None],
+        seed: 42,
+        ..TimedTraceConfig::default()
+    })
+}
+
+#[test]
+fn chrome_trace_reconciles_exactly_with_the_replay_report() {
+    let _g = gate();
+    flush_stale_events();
+    let guard = obs::TraceGuard::arm();
+
+    let trace = stress_trace(32);
+    let mut sched = fake_scheduler("obs_reconcile", 64_000, 2, Policy::Slo);
+    let report = replay(&mut sched, &trace, &CostModel::default()).expect("replay");
+
+    let doc = {
+        let mut rec = sched.obs.lock().unwrap_or_else(|e| e.into_inner());
+        rec.drain();
+        rec.chrome_trace(None)
+    };
+    drop(guard);
+
+    // Schema: the document round-trips through the parser and every event
+    // carries the complete-span shape with a known name and category.
+    let parsed = Json::parse(&doc.dump()).expect("trace JSON parses");
+    assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+    let names: BTreeSet<&str> = SpanKind::ALL.iter().map(|k| k.name()).collect();
+    let cats: BTreeSet<&str> = SpanKind::ALL.iter().map(|k| k.cat()).collect();
+    for e in events {
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert_eq!(e.get("pid").as_f64(), Some(1.0));
+        assert!(e.get("tid").as_f64().is_some());
+        assert!(e.get("ts").as_f64().unwrap() >= 0.0);
+        assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+        assert!(names.contains(e.get("name").as_str().expect("name")));
+        assert!(cats.contains(e.get("cat").as_str().expect("cat")));
+        assert!(e.get("args").get("id").as_f64().is_some());
+    }
+
+    // Reconciliation: the trace's request spans are exactly the replay
+    // report's request set — same ids, matching terminal states.
+    let spans: BTreeMap<u64, String> = events
+        .iter()
+        .filter(|e| e.get("name").as_str() == Some("request"))
+        .map(|e| {
+            (
+                e.get("args").get("id").as_f64().expect("id") as u64,
+                e.get("args").get("tag").as_str().expect("terminal tag").to_string(),
+            )
+        })
+        .collect();
+    let report_ids: BTreeSet<u64> = report.records.iter().map(|r| r.id).collect();
+    assert_eq!(
+        spans.keys().copied().collect::<BTreeSet<u64>>(),
+        report_ids,
+        "request spans must cover the replay request set exactly"
+    );
+    for r in &report.records {
+        let want = match r.outcome.expect("terminal outcome") {
+            Outcome::Ok => "ok",
+            Outcome::Rejected => "rejected",
+            Outcome::Expired => "expired",
+        };
+        assert_eq!(
+            spans.get(&r.id).map(String::as_str),
+            Some(want),
+            "request {} terminal state disagrees with the replay report",
+            r.id
+        );
+    }
+    // The stress trace must actually exercise more than the happy path.
+    assert!(report.count(Outcome::Ok) > 0);
+    assert!(
+        report.count(Outcome::Rejected) + report.count(Outcome::Expired) > 0,
+        "stress trace produced no non-ok terminals; tighten it"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Zero-perturbation: tracing must not change a single output byte.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracing_never_changes_decode_output_bytes() {
+    let _g = gate();
+    let prompts = ["a=41;?a=", "b=07;c=22;?c=", "d=99;?d=", "e=15;f=33;?f="];
+    let run = |tag: &str, workers: usize, traced: bool| -> Vec<(u64, String, usize)> {
+        flush_stale_events();
+        let _guard = traced.then(obs::TraceGuard::arm);
+        let mut sched = fake_scheduler(tag, 1 << 30, workers, Policy::Fifo);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.submit(req(i as u64, p, 4));
+        }
+        let mut done = sched.run_to_completion().expect("run");
+        done.sort_by_key(|c| c.id);
+        done.into_iter().map(|c| (c.id, c.text, c.n_generated)).collect()
+    };
+
+    let reference = run("obs_id_ref", 1, false);
+    for workers in [1usize, 2, 4] {
+        let plain = run(&format!("obs_id_w{workers}"), workers, false);
+        let traced = run(&format!("obs_id_w{workers}_t"), workers, true);
+        assert_eq!(plain, reference, "workers={workers}: untraced diverged");
+        assert_eq!(
+            traced, reference,
+            "workers={workers}: tracing changed the output bytes"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live server: Prometheus page + stats tail + admin trace window.
+// ---------------------------------------------------------------------------
+
+fn start_admin_server(
+    tag: &str,
+    io_workers: usize,
+) -> (
+    Arc<AtomicBool>,
+    innerq::server::Bound,
+    std::thread::JoinHandle<anyhow::Result<()>>,
+) {
+    let dir = write_fake_artifacts(tag, '7');
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let (bound_tx, bound_rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        let manifest = Manifest::load(&dir).expect("fake manifest");
+        let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+        engine.set_workers(2);
+        let sched = Scheduler::new(engine, 1 << 30);
+        let cfg = ServerConfig { io_workers, admin_addr: Some("127.0.0.1:0".into()) };
+        serve_with(sched, "127.0.0.1:0", cfg, stop_srv, move |b| {
+            let _ = bound_tx.send(b);
+        })
+    });
+    let bound = bound_rx.recv().expect("server bound");
+    (stop, bound, server)
+}
+
+fn stat(stats: &[(String, u64)], name: &str) -> u64 {
+    stats
+        .iter()
+        .find(|(n, _)| n == name)
+        .unwrap_or_else(|| panic!("stat '{name}' missing from admin snapshot"))
+        .1
+}
+
+#[test]
+fn admin_metrics_page_is_well_formed_and_stats_tail_is_append_only() {
+    let _g = gate();
+    flush_stale_events();
+    let (stop, bound, server) = start_admin_server("obs_metrics", 2);
+    let admin_addr = bound.admin.expect("admin plane enabled");
+    let mut admin = AdminClient::connect(admin_addr).expect("admin connect");
+
+    let mut client = Client::connect(bound.data).expect("connect");
+    for _ in 0..3 {
+        let resp = client.generate("a=15;?a=", 2).expect("completion");
+        assert_eq!(resp.get("text").as_str(), Some("77"));
+    }
+    // Wait for the snapshot to pick the completions up.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    let stats = loop {
+        let s = admin.stats().expect("stats");
+        if stat(&s, "e2e_count") >= 3 {
+            break s;
+        }
+        assert!(std::time::Instant::now() < deadline, "snapshot never caught up");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    };
+
+    // New stats ride strictly *after* the pre-existing tail (append-only
+    // contract: old parsers index by prefix order).
+    let names: Vec<&str> = stats.iter().map(|(n, _)| n.as_str()).collect();
+    let pos =
+        |n: &str| names.iter().position(|x| *x == n).unwrap_or_else(|| panic!("{n} missing"));
+    assert!(pos("uptime_secs") > pos("e2e_max_us"));
+    assert!(pos("io_conns_0") > pos("uptime_secs"));
+    assert!(pos("io_conns_1") > pos("io_conns_0"));
+    assert_eq!(names.last(), Some(&"stats_generation"));
+    assert!(stat(&stats, "stats_generation") > 0);
+    // One connection is live right now; the per-worker gauges must see it.
+    assert!(stat(&stats, "io_conns_0") + stat(&stats, "io_conns_1") >= 1);
+
+    // The generation is monotonic across snapshots.
+    let again = admin.stats().expect("stats");
+    assert!(stat(&again, "stats_generation") >= stat(&stats, "stats_generation"));
+
+    // Prometheus page: every stats field appears in the innerq_ namespace,
+    // typed; the tracing meta-series report the disabled state.
+    let page = admin.metrics().expect("metrics");
+    for required in [
+        "# TYPE innerq_decode_steps gauge",
+        "# TYPE innerq_uptime_secs gauge",
+        "# TYPE innerq_io_conns_0 gauge",
+        "# TYPE innerq_stats_generation gauge",
+        "innerq_trace_enabled 0",
+    ] {
+        assert!(page.contains(required), "metrics page missing {required:?}:\n{page}");
+    }
+    // Exposition lint: every line is a well-formed comment or sample.
+    for line in page.lines() {
+        assert!(!line.trim().is_empty(), "blank line in exposition");
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            assert!(matches!(parts.next(), Some("HELP") | Some("TYPE")), "bad comment {line:?}");
+            assert!(parts.next().unwrap().starts_with("innerq_"), "bad family in {line:?}");
+        } else {
+            let (series, value) = line.rsplit_once(' ').expect("sample needs a value");
+            assert!(series.starts_with("innerq_"), "series outside namespace: {line:?}");
+            assert!(value.parse::<f64>().is_ok(), "non-numeric value in {line:?}");
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    drop(client);
+    server.join().expect("server thread").expect("serve result");
+}
+
+#[test]
+fn admin_trace_window_produces_chrome_json_on_a_live_server() {
+    let _g = gate();
+    flush_stale_events();
+    let (stop, bound, server) = start_admin_server("obs_trace_cmd", 2);
+    let admin_addr = bound.admin.expect("admin plane enabled");
+    let mut admin = AdminClient::connect(admin_addr).expect("admin connect");
+
+    // Malformed windows are rejected in-band, before any tracing starts.
+    for bad in ["trace 0", "trace 61", "trace abc", "trace "] {
+        let resp = admin.command(bad).expect("error reply");
+        assert!(resp.starts_with("ERROR"), "{bad:?} got {resp:?}");
+    }
+
+    // Keep the data plane busy for the whole trace window.
+    let busy = Arc::new(AtomicBool::new(true));
+    let busy_c = busy.clone();
+    let data_addr = bound.data;
+    let driver = std::thread::spawn(move || {
+        let mut client = Client::connect(data_addr).expect("connect");
+        let mut ok = 0u64;
+        while busy_c.load(Ordering::Relaxed) {
+            let resp = client.generate("a=15;?a=", 2).expect("completion");
+            assert_eq!(resp.get("text").as_str(), Some("77"));
+            ok += 1;
+        }
+        ok
+    });
+
+    // The trace command blocks for the window, then replies one JSON line.
+    let reply = admin.command("trace 1").expect("trace reply");
+    busy.store(false, Ordering::Relaxed);
+    let completed = driver.join().expect("driver thread");
+    assert!(completed > 0, "no requests completed during the window");
+
+    let parsed = Json::parse(&reply).expect("trace reply must be JSON");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents");
+    assert!(!events.is_empty(), "a busy 1s window must capture spans");
+    let names: BTreeSet<&str> = events
+        .iter()
+        .map(|e| e.get("name").as_str().expect("name"))
+        .collect();
+    for required in ["request", "prefill", "decode_step", "ingress", "egress"] {
+        assert!(names.contains(required), "window missing {required} spans: {names:?}");
+    }
+    assert!(
+        events
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("request"))
+            .all(|e| e.get("args").get("tag").as_str() == Some("ok")),
+        "every request in this workload completes ok"
+    );
+
+    // The window is over: tracing must be disarmed again.
+    let page = admin.metrics().expect("metrics");
+    assert!(page.contains("innerq_trace_enabled 0"), "tracer leaked past the window");
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().expect("server thread").expect("serve result");
+}
