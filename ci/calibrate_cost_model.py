@@ -23,13 +23,18 @@ Derivable from a Chrome trace (--from-trace TRACE.json, produced by
     spans' (tokens, dur) points (shared-hit prefills skip the bulk work,
     so they are excluded from the fit);
   * offload_us_per_kib / restore_us_per_kib — slope over the snapshot /
-    restore spans' (KiB, dur) points.
+    restore spans' (KiB, dur) points;
+  * tick_overhead_us — the scheduler driver emits a `driver_tick` span
+    around every tick; ticks that did no work (args.worked == 0) are pure
+    driver overhead, so their median duration *is* the fixed per-tick
+    cost. When a trace has no idle ticks (a saturated server), the
+    minimum over all driver_tick spans bounds it from above.
 When both an artifact dir and --from-trace are given, the two sources
 override disjoint coefficient sets and compose into one file.
 
-Not derivable yet (kept at defaults): tick_overhead_us (buried inside
-every span) and prefix_saving_us_per_kib (a *counterfactual* saving — the
-trace records the hit's cost, not the private prefill it avoided).
+Not derivable yet (kept at its default): prefix_saving_us_per_kib — a
+*counterfactual* saving; the trace records the hit's cost, not the
+private prefill it avoided. Every other coefficient is now measurable.
 
 Usage:
     # After downloading a CI artifact set (see ci/seed_baselines.py):
@@ -120,7 +125,9 @@ def trace_coefficients(path):
 
     Spans are matched by name (see rust/src/obs/mod.rs SpanKind::name):
     `prefill` spans with args.shared_bytes == 0 give prefill_us_per_token,
-    `snapshot` / `restore` spans give offload/restore_us_per_kib.
+    `snapshot` / `restore` spans give offload/restore_us_per_kib, and
+    `driver_tick` spans give tick_overhead_us (median of idle ticks —
+    args.worked == 0 — or, absent any, the minimum over all ticks).
     """
     with open(path) as f:
         doc = json.load(f)
@@ -130,6 +137,7 @@ def trace_coefficients(path):
         return {}
 
     prefill, snapshot, restore = [], [], []
+    idle_ticks, all_ticks = [], []
     for e in events:
         args = e.get("args", {})
         dur = float(e.get("dur", 0))
@@ -140,8 +148,28 @@ def trace_coefficients(path):
             snapshot.append((float(args.get("bytes", 0)) / 1024.0, dur))
         elif name == "restore":
             restore.append((float(args.get("bytes", 0)) / 1024.0, dur))
+        elif name == "driver_tick":
+            all_ticks.append(dur)
+            if float(args.get("worked", 0)) == 0:
+                idle_ticks.append(dur)
 
     model = {}
+    if idle_ticks:
+        idle_ticks.sort()
+        overhead = idle_ticks[len(idle_ticks) // 2]
+        how = f"median of {len(idle_ticks)} idle driver_tick spans"
+    elif all_ticks:
+        overhead = min(all_ticks)
+        how = (f"min of {len(all_ticks)} driver_tick spans "
+               "(no idle ticks; upper bound)")
+    else:
+        overhead = None
+        print("[calibrate]   no driver_tick spans; keeping the default "
+              "tick_overhead_us")
+    if overhead is not None:
+        model["tick_overhead_us"] = max(1, round(overhead))
+        print(f"[calibrate]   driver tick overhead: "
+              f"{model['tick_overhead_us']} us ({how})")
     for key, label, points in [
         ("prefill_us_per_token", "prefill us/token (private spans)", prefill),
         ("offload_us_per_kib", "snapshot us/KiB", snapshot),

@@ -6,8 +6,9 @@ Compares a freshly emitted bench JSON (BENCH_kernels.json from
 `cargo bench --bench overload_tail`, BENCH_offload.json from
 `cargo bench --bench offload_vs_recompute`, BENCH_decode.json from
 `cargo bench --bench decode_scaling`, BENCH_prefix.json from
-`cargo bench --bench prefix_sharing`, or BENCH_server.json from
-`cargo bench --bench server_loadgen`) against a committed baseline
+`cargo bench --bench prefix_sharing`, BENCH_server.json from
+`cargo bench --bench server_loadgen`, or BENCH_fleet.json from
+`cargo bench --bench fleet_scaling`) against a committed baseline
 snapshot and fails when throughput regresses by more than the threshold —
 so CI catches "still bit-exact but 2x slower" changes, not just bit
 mismatches.
@@ -43,7 +44,11 @@ Cells are keyed per bench type:
     noise; byte-identity vs the replay oracle is asserted in the bench
     itself before any timing is emitted). Rows without a "traced" field
     predate the tracing-overhead cells and key as untraced; the traced=True
-    cells are the tracing-overhead guard.
+    cells are the tracing-overhead guard;
+  * fleet_scaling:        (policy, replicas, trace), metric throughput_rps
+    (virtual-clock fleet replay — deterministic across worker and replica
+    counts; the affinity-vs-round-robin locality contract is asserted in
+    the bench itself before any cell is recorded).
 """
 
 import argparse
@@ -86,6 +91,9 @@ def cells(doc):
             # no "traced" field and key as untraced cells.
             key = (r["method"], r["io_workers"], r["rate_rps"],
                    bool(r.get("traced", False)))
+            metric = "throughput_rps"
+        elif bench == "fleet_scaling":
+            key = (r["policy"], r["replicas"], r["trace"])
             metric = "throughput_rps"
         else:
             continue

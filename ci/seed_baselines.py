@@ -48,6 +48,7 @@ KNOWN_BENCHES = {
     "decode_scaling",
     "prefix_sharing",
     "server_loadgen",
+    "fleet_scaling",
 }
 
 

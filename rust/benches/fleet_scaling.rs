@@ -1,0 +1,303 @@
+//! Data-parallel fleet scaling: replay the same traces through `replay_fleet`
+//! while sweeping replica count x router policy x trace family, and record
+//! throughput, completion, migration traffic, and the cache-locality
+//! counters (prefix bytes shared, restore bytes) that separate the affinity
+//! router from blind placement. The multi-turn family round-robins requests
+//! over 5 sessions sharing a long prefix — 5 is coprime with every replica
+//! count swept, so session→replica alignment can never make policies agree
+//! by accident. A single-turn control family (nothing shareable, no
+//! locality to exploit) rides along.
+//!
+//! Before timing anything the run asserts two contracts (any panic fails
+//! CI):
+//!   * determinism — per (policy, replicas, trace), the full fleet report
+//!     is byte-identical between workers=1 and workers=4 and across
+//!     back-to-back runs;
+//!   * locality — on the multi-turn trace at every replica count > 1, the
+//!     affinity router strictly increases prefix bytes shared AND strictly
+//!     reduces priced restore+prefill work (prefill + restore cost minus
+//!     the prefix-sharing credit, under the replay `CostModel`) versus
+//!     round-robin placement.
+//!
+//! ```bash
+//! cargo bench --bench fleet_scaling           # full sweep
+//! cargo bench --bench fleet_scaling quick     # CI smoke
+//! ```
+
+use innerq::coordinator::{Engine, Fleet, Policy, Preemption, Scheduler, StepMetrics};
+use innerq::quant::MethodConfig;
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::util::json::Json;
+use innerq::workload::replay::{replay_fleet, CostModel, FleetReplayReport, Outcome};
+use innerq::workload::trace::{
+    generate_multi_turn, generate_timed, Arrival, MultiTurnTraceConfig, TimedRequest,
+    TimedTraceConfig,
+};
+use innerq::QuantMethod;
+
+/// Comfortable per-replica budget: the sweep measures placement quality,
+/// not admission control, so nothing should be rejected at any replica
+/// count on these traces.
+const BUDGET: usize = 64_000;
+const SEED: u64 = 2026;
+/// Coprime with the swept replica counts {1, 2, 4} — see module docs.
+const SESSIONS: usize = 5;
+
+/// Paper bit-widths, serving-sized windows: with the default 128-token
+/// window the fake model's bucket-sized prompts never quantize their
+/// prefix and there would be nothing for the affinity router to score.
+fn serving_cfg() -> MethodConfig {
+    let mut cfg = QuantMethod::InnerQBase.config();
+    cfg.w_sink = cfg.w_sink.min(4);
+    cfg.w_recent = cfg.w_recent.min(8).max(4);
+    cfg
+}
+
+fn replica(dir: &std::path::Path, workers: usize) -> Scheduler {
+    let manifest = Manifest::load(dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, serving_cfg()).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, BUDGET);
+    sched.set_policy(Policy::Slo);
+    sched.set_preemption(Preemption::Offload);
+    sched.set_warm_budget(1 << 20);
+    sched
+}
+
+fn fleet(dir: &std::path::Path, policy: &str, n_replicas: usize, workers: usize) -> Fleet {
+    let router = innerq::coordinator::parse_router(policy).expect("router name");
+    Fleet::new((0..n_replicas).map(|_| replica(dir, workers)).collect(), router)
+}
+
+/// Chat-style family: long shared session prefixes, short per-turn suffixes.
+fn multi_turn_trace(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_multi_turn(&MultiTurnTraceConfig {
+        base: TimedTraceConfig {
+            n_requests,
+            arrival: Arrival::Poisson { rate_rps },
+            vars_range: (2, 4),
+            seed: SEED,
+            ..TimedTraceConfig::default()
+        },
+        n_sessions: SESSIONS,
+        prefix_vars: 20,
+    })
+}
+
+/// Control family: independent prompts, nothing shareable.
+fn single_turn_trace(rate_rps: f64, n_requests: usize) -> Vec<TimedRequest> {
+    generate_timed(&TimedTraceConfig {
+        n_requests,
+        arrival: Arrival::Poisson { rate_rps },
+        seed: SEED,
+        ..TimedTraceConfig::default()
+    })
+}
+
+fn run_cell(
+    dir: &std::path::Path,
+    policy: &str,
+    n_replicas: usize,
+    workers: usize,
+    trace: &[TimedRequest],
+    cost: &CostModel,
+) -> FleetReplayReport {
+    let mut f = fleet(dir, policy, n_replicas, workers);
+    replay_fleet(&mut f, trace, cost).expect("fleet replay")
+}
+
+/// Virtual microseconds of restore + prefill work the fleet was priced for,
+/// net of the prefix-sharing credit — the quantity the affinity router
+/// exists to shrink. Restores and prefix savings use the same per-KiB
+/// rounding as `CostModel` pricing so the comparison is exact.
+fn priced_work_us(m: &StepMetrics, cost: &CostModel) -> i64 {
+    let prefill = m.prefill_tokens * cost.prefill_us_per_token;
+    let restore = m.restore_bytes * cost.restore_us_per_kib / 1024;
+    let saving = m.prefix_bytes_shared * cost.prefix_saving_us_per_kib / 1024;
+    prefill as i64 + restore as i64 - saving as i64
+}
+
+/// Determinism contract: per (policy, replicas) on the multi-turn trace,
+/// the full fleet report — placement, per-replica latencies, everything —
+/// is byte-identical between workers=1 and workers=4 and across
+/// back-to-back runs.
+fn assert_determinism_contract(
+    dir: &std::path::Path,
+    policies: &[&'static str],
+    replica_counts: &[usize],
+    trace: &[TimedRequest],
+    cost: &CostModel,
+) {
+    for &policy in policies {
+        for &n in replica_counts {
+            let a = run_cell(dir, policy, n, 1, trace, cost).to_json().dump();
+            let b = run_cell(dir, policy, n, 4, trace, cost).to_json().dump();
+            assert_eq!(a, b, "{policy} x{n}: fleet replay diverged between workers=1 and 4");
+            let c = run_cell(dir, policy, n, 1, trace, cost).to_json().dump();
+            assert_eq!(a, c, "{policy} x{n}: fleet replay diverged across back-to-back runs");
+        }
+    }
+    eprintln!(
+        "[fleet_scaling] determinism contract holds ({} policies x {:?} replicas)",
+        policies.len(),
+        replica_counts
+    );
+}
+
+struct Cell {
+    policy: &'static str,
+    replicas: usize,
+    trace: &'static str,
+    rate_rps: f64,
+    report: FleetReplayReport,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let n_requests: usize = args
+        .iter()
+        .filter_map(|a| a.parse().ok())
+        .next()
+        .unwrap_or(if quick { 40 } else { 80 });
+    let rate = 2000.0; // far past single-replica capacity: placement matters
+    let replica_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let policies: &[&'static str] = &["round-robin", "least-loaded", "affinity"];
+    let cost = CostModel::default();
+    let dir = write_fake_artifacts("fleet_scaling", '7');
+
+    eprintln!(
+        "[fleet_scaling] {n_requests} requests/cell, {} policies x {:?} replicas x 2 traces, \
+         budget={BUDGET}/replica, quick={quick}",
+        policies.len(),
+        replica_counts
+    );
+
+    let families: [(&'static str, fn(f64, usize) -> Vec<TimedRequest>); 2] =
+        [("multi_turn", multi_turn_trace), ("single_turn", single_turn_trace)];
+
+    assert_determinism_contract(
+        &dir,
+        policies,
+        replica_counts,
+        &multi_turn_trace(rate, n_requests),
+        &cost,
+    );
+
+    // Locality contract: at every replica count > 1 the affinity router
+    // must strictly beat round-robin on the multi-turn trace, both on raw
+    // cache locality (prefix bytes shared) and on the priced work bill —
+    // asserted before any cell is recorded.
+    let mut cells: Vec<Cell> = Vec::new();
+    for (family, gen) in families {
+        let trace = gen(rate, n_requests);
+        for &n in replica_counts {
+            let mut by_policy: Vec<(&'static str, u64, i64)> = Vec::new();
+            for &policy in policies {
+                let report = run_cell(&dir, policy, n, 1, &trace, &cost);
+                assert_eq!(
+                    report.completed(),
+                    n_requests,
+                    "{policy} x{n} {family}: every request must complete at this budget"
+                );
+                by_policy.push((
+                    policy,
+                    report.metrics.prefix_bytes_shared,
+                    priced_work_us(&report.metrics, &cost),
+                ));
+                cells.push(Cell { policy, replicas: n, trace: family, rate_rps: rate, report });
+            }
+            if family == "multi_turn" && n > 1 {
+                let shared = |p: &str| by_policy.iter().find(|c| c.0 == p).unwrap().1;
+                let work = |p: &str| by_policy.iter().find(|c| c.0 == p).unwrap().2;
+                assert!(
+                    shared("affinity") > shared("round-robin"),
+                    "x{n}: affinity must strictly increase prefix bytes shared \
+                     (affinity={} vs round-robin={})",
+                    shared("affinity"),
+                    shared("round-robin")
+                );
+                assert!(
+                    work("affinity") < work("round-robin"),
+                    "x{n}: affinity must strictly reduce priced restore+prefill work \
+                     (affinity={}us vs round-robin={}us)",
+                    work("affinity"),
+                    work("round-robin")
+                );
+            }
+        }
+    }
+    eprintln!("[fleet_scaling] locality contract holds (affinity beats round-robin, multi-turn)");
+
+    println!(
+        "{:<13} {:<12} {:>4} {:>5} {:>5} {:>7} {:>10} {:>10} {:>12} {:>8}",
+        "policy", "trace", "reps", "ok", "migr", "hits", "shared_kb", "restore_kb", "work_us",
+        "req/s"
+    );
+    for c in &cells {
+        println!(
+            "{:<13} {:<12} {:>4} {:>5} {:>5} {:>7} {:>10.1} {:>10.1} {:>12} {:>8.1}",
+            c.policy,
+            c.trace,
+            c.replicas,
+            c.report.completed(),
+            c.report.migrations,
+            c.report.metrics.prefix_hits,
+            c.report.metrics.prefix_bytes_shared as f64 / 1024.0,
+            c.report.metrics.restore_bytes as f64 / 1024.0,
+            priced_work_us(&c.report.metrics, &cost),
+            c.report.throughput_rps(),
+        );
+    }
+
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("policy", Json::str(c.policy)),
+                ("replicas", Json::Num(c.replicas as f64)),
+                ("trace", Json::str(c.trace)),
+                ("rate_rps", Json::Num(c.rate_rps)),
+                ("budget_bytes", Json::Num(BUDGET as f64)),
+                ("n_requests", Json::Num(c.report.n_requests() as f64)),
+                ("completed", Json::Num(c.report.completed() as f64)),
+                (
+                    "rejected",
+                    Json::Num(
+                        c.report.replicas.iter().map(|r| r.count(Outcome::Rejected)).sum::<usize>()
+                            as f64,
+                    ),
+                ),
+                ("migrations", Json::Num(c.report.migrations as f64)),
+                ("migrated_bytes", Json::Num(c.report.migrated_bytes as f64)),
+                ("prefix_hits", Json::Num(c.report.metrics.prefix_hits as f64)),
+                (
+                    "prefix_bytes_shared",
+                    Json::Num(c.report.metrics.prefix_bytes_shared as f64),
+                ),
+                ("restores", Json::Num(c.report.metrics.restores as f64)),
+                ("restore_bytes", Json::Num(c.report.metrics.restore_bytes as f64)),
+                ("prefill_tokens", Json::Num(c.report.metrics.prefill_tokens as f64)),
+                (
+                    "priced_work_us",
+                    Json::Num(priced_work_us(&c.report.metrics, &cost) as f64),
+                ),
+                ("ticks", Json::Num(c.report.ticks() as f64)),
+                ("virtual_us", Json::Num(c.report.end_us() as f64)),
+                ("throughput_rps", Json::Num(c.report.throughput_rps())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fleet_scaling")),
+        ("quick", Json::Bool(quick)),
+        ("n_requests", Json::Num(n_requests as f64)),
+        ("policy", Json::str("slo")),
+        ("budget_bytes", Json::Num(BUDGET as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_fleet.json";
+    std::fs::write(path, doc.dump()).expect("write BENCH_fleet.json");
+    eprintln!("[fleet_scaling] wrote {path}");
+}

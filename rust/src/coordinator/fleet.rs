@@ -1,0 +1,410 @@
+//! Data-parallel engine replicas behind a cache-affinity router.
+//!
+//! One [`Scheduler`] — one engine, one worker pool, one cache budget — is
+//! the hard ceiling on aggregate throughput. A [`Fleet`] runs N full
+//! scheduler replicas side by side, each owning its *own* `CachePool`
+//! budget, warm tier, and prefix store, and places every incoming request
+//! on exactly one replica via a pluggable [`RouterPolicy`]:
+//!
+//! * [`RoundRobin`] — strict rotation; the load-spreading baseline.
+//! * [`LeastLoaded`] — fewest pending requests wins (ties to the lowest
+//!   index), so bursts spread by occupancy instead of arrival order.
+//! * [`Affinity`] — placement locality as a latency optimization. A
+//!   replica already holding the request's offload snapshot (warm-tier
+//!   residency) wins outright; otherwise the replica whose prefix store
+//!   would serve the largest shared-prefix image set
+//!   ([`Scheduler::probe_prefix_bytes`], the rolling prefix hash from the
+//!   content-addressed store) wins; otherwise fall back to least-loaded.
+//!   Landing a multi-turn or readmitted request where its bytes already
+//!   live skips a full re-prefill — routing *is* the optimization.
+//!
+//! ## Migration is a byte copy
+//!
+//! When affinity and load conflict — the snapshot-holding replica is
+//! overloaded past [`Affinity::migrate_headroom`] — the router may *move*
+//! the offloaded request instead of following it: the snapshot frames are
+//! copied verbatim between warm tiers (the PR 4/5 snapshot byte format is
+//! purely value-based, so the bytes mean the same thing on any replica
+//! with the same `MethodConfig`) and the scheduler-side bookkeeping is
+//! re-homed via [`Scheduler::export_warm`] / [`Scheduler::import_warm`].
+//! [`Fleet::try_migrate`] asserts byte-identity of the destination
+//! residency against the source frames. Two cases refuse to migrate and
+//! fall back to following the snapshot: by-reference snapshots (their
+//! core frames carry prefix-image hashes pinned in the *source* replica's
+//! store) and partial residencies (dropped window frames cannot carry
+//! their frame kind across the copy).
+//!
+//! ## Determinism
+//!
+//! Routing reads only deterministic replica state (pending counts, tier
+//! residency, prefix probes) and policy-local counters — never a clock —
+//! so for a fixed trace, policy, and replica count, placement is exact and
+//! the fleet replay harness (`workload::replay::replay_fleet`) is
+//! byte-identical across worker counts.
+
+use crate::cache::store::FrameKind;
+use crate::coordinator::request::{Completion, Request, StepMetrics};
+use crate::coordinator::scheduler::Scheduler;
+use anyhow::Result;
+
+/// Where the router put a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Replica index the request should run on.
+    pub replica: usize,
+    /// When `Some(src)`, the request's offload snapshot lives on `src` but
+    /// load says it should run on [`Placement::replica`]: the fleet should
+    /// migrate the snapshot (and fall back to `src` if migration refuses).
+    pub migrate_from: Option<usize>,
+}
+
+impl Placement {
+    /// A plain placement with no migration.
+    pub fn on(replica: usize) -> Placement {
+        Placement { replica, migrate_from: None }
+    }
+}
+
+/// A pluggable placement policy. `place` may mutate policy-local state
+/// (e.g. the round-robin cursor) but must be a deterministic function of
+/// that state and the replicas' observable state — the fleet replay
+/// determinism contract depends on it.
+pub trait RouterPolicy {
+    /// Stable CLI/report name.
+    fn name(&self) -> &'static str;
+    /// Choose a replica for `req` given the current replica states.
+    fn place(&mut self, req: &Request, replicas: &[Scheduler]) -> Placement;
+}
+
+/// Index of the least-loaded replica by pending count, ties to the lowest
+/// index. The shared fallback of every shipped policy.
+fn least_loaded_of(replicas: &[Scheduler]) -> usize {
+    replicas
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, s)| (s.pending(), *i))
+        .map(|(i, _)| i)
+        .expect("a fleet has at least one replica")
+}
+
+/// Strict rotation over replica indices.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RouterPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&mut self, _req: &Request, replicas: &[Scheduler]) -> Placement {
+        let r = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        Placement::on(r)
+    }
+}
+
+/// Fewest pending (queued + live + offloaded) requests wins.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl RouterPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn place(&mut self, _req: &Request, replicas: &[Scheduler]) -> Placement {
+        Placement::on(least_loaded_of(replicas))
+    }
+}
+
+/// Cache-affinity placement: snapshot residency, then prefix-store
+/// residency, then load (see the module docs for the full decision flow).
+#[derive(Debug)]
+pub struct Affinity {
+    /// How many pending requests the snapshot holder may exceed the
+    /// least-loaded replica by before the router migrates the snapshot to
+    /// the least-loaded replica instead of following it. Affinity is worth
+    /// some queueing (a restore is far cheaper than a re-prefill), but not
+    /// unbounded head-of-line blocking.
+    pub migrate_headroom: usize,
+}
+
+impl Default for Affinity {
+    fn default() -> Self {
+        Affinity { migrate_headroom: 4 }
+    }
+}
+
+impl RouterPolicy for Affinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn place(&mut self, req: &Request, replicas: &[Scheduler]) -> Placement {
+        // 1. Snapshot residency: the replica holding this request's
+        //    offloaded frames (or its warm bookkeeping) serves a readmit
+        //    with a restore instead of a re-prefill.
+        if let Some(h) =
+            replicas.iter().position(|s| s.tier.contains(req.id) || s.holds_warm(req.id))
+        {
+            let least = least_loaded_of(replicas);
+            if replicas[h].pending() > replicas[least].pending() + self.migrate_headroom {
+                return Placement { replica: least, migrate_from: Some(h) };
+            }
+            return Placement::on(h);
+        }
+        // 2. Prefix residency: the replica whose store would lend the most
+        //    shared-prefix bytes (first index wins ties).
+        let mut best: Option<(usize, usize)> = None; // (bytes, replica)
+        for (i, s) in replicas.iter().enumerate() {
+            let bytes = s.probe_prefix_bytes(req);
+            if bytes > 0 && best.map_or(true, |(b, _)| bytes > b) {
+                best = Some((bytes, i));
+            }
+        }
+        if let Some((_, i)) = best {
+            return Placement::on(i);
+        }
+        // 3. No locality signal: spread by load.
+        Placement::on(least_loaded_of(replicas))
+    }
+}
+
+/// Parse a router policy from its CLI name
+/// (`round-robin` / `least-loaded` / `affinity`).
+pub fn parse_router(name: &str) -> Option<Box<dyn RouterPolicy + Send>> {
+    match name {
+        "round-robin" => Some(Box::new(RoundRobin::default())),
+        "least-loaded" => Some(Box::new(LeastLoaded)),
+        "affinity" => Some(Box::new(Affinity::default())),
+        _ => None,
+    }
+}
+
+/// N scheduler replicas behind one router. The fleet owns placement and
+/// cross-replica migration; each replica's admission, preemption, and
+/// decode stay entirely replica-local.
+pub struct Fleet {
+    replicas: Vec<Scheduler>,
+    router: Box<dyn RouterPolicy + Send>,
+    /// Snapshots moved between warm tiers by the router.
+    pub migrations: u64,
+    /// Bytes those migrations copied.
+    pub migrated_bytes: u64,
+}
+
+impl Fleet {
+    /// A fleet over `replicas` (each with its own engine, pools, and
+    /// budgets — build and configure them first) routed by `router`.
+    /// Replica indices are fixed at construction; each scheduler's driver
+    /// spans are tagged with its replica ([`Scheduler::set_replica`]).
+    pub fn new(mut replicas: Vec<Scheduler>, router: Box<dyn RouterPolicy + Send>) -> Fleet {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        for (i, s) in replicas.iter_mut().enumerate() {
+            s.set_replica(i);
+        }
+        // One shared flight recorder: every replica drains the global span
+        // lanes into it, so a single trace export sees the whole fleet
+        // (replica tags keep the spans apart).
+        let obs = replicas[0].obs.clone();
+        for s in replicas.iter_mut().skip(1) {
+            s.obs = obs.clone();
+        }
+        Fleet { replicas, router, migrations: 0, migrated_bytes: 0 }
+    }
+
+    /// Number of replicas.
+    pub fn n(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The active router policy's name.
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Replica `i`, read-only.
+    pub fn replica(&self, i: usize) -> &Scheduler {
+        &self.replicas[i]
+    }
+
+    /// Replica `i`, mutable (tests and the replay driver tick replicas
+    /// individually; live serving uses [`Fleet::tick`]).
+    pub fn replica_mut(&mut self, i: usize) -> &mut Scheduler {
+        &mut self.replicas[i]
+    }
+
+    /// All replicas, read-only.
+    pub fn replicas(&self) -> &[Scheduler] {
+        &self.replicas
+    }
+
+    /// Ask the router where it would place `req`, mutating only
+    /// policy-local state (the round-robin cursor advances). Exposed for
+    /// tests; [`Fleet::submit_at`] is route + migrate + enqueue.
+    pub fn route(&mut self, req: &Request) -> Placement {
+        self.router.place(req, &self.replicas)
+    }
+
+    /// Route `req` and enqueue it on the chosen replica with an explicit
+    /// submission timestamp (the replay driver passes the trace arrival
+    /// time). When the router asks for a migration that then refuses —
+    /// by-ref snapshot, partial residency, destination tier full — the
+    /// request follows its snapshot to the holder instead. Returns the
+    /// replica index the request landed on.
+    pub fn submit_at(&mut self, req: Request, submitted_us: u64) -> usize {
+        let p = self.route(&req);
+        let dest = match p.migrate_from {
+            Some(src) if self.try_migrate(req.id, src, p.replica) => p.replica,
+            Some(src) => src,
+            None => p.replica,
+        };
+        self.replicas[dest].submit_at(req, submitted_us);
+        dest
+    }
+
+    /// Route `req` and enqueue it at the destination replica's current
+    /// virtual time (deadlines count from the clock of whichever replica
+    /// the request lands on). Returns the replica index.
+    pub fn submit(&mut self, req: Request) -> usize {
+        let p = self.route(&req);
+        let dest = match p.migrate_from {
+            Some(src) if self.try_migrate(req.id, src, p.replica) => p.replica,
+            Some(src) => src,
+            None => p.replica,
+        };
+        let now = self.replicas[dest].now_us();
+        self.replicas[dest].submit_at(req, now);
+        dest
+    }
+
+    /// Move the offloaded request `id`'s snapshot from replica `src`'s warm
+    /// tier to replica `dst`'s as a byte copy, re-homing its scheduler-side
+    /// bookkeeping. Asserts the destination residency is byte-identical to
+    /// the source frames. Returns false — with all state exactly as it was
+    /// — when the snapshot is not fully resident on `src`, snapshots by
+    /// reference into `src`'s prefix store, is not offloaded on `src` at
+    /// all, or `dst`'s tier refuses the bytes.
+    pub fn try_migrate(&mut self, id: u64, src: usize, dst: usize) -> bool {
+        if src == dst || src >= self.replicas.len() || dst >= self.replicas.len() {
+            return false;
+        }
+        // A partial residency has lost droppable window frames; the taken
+        // bytes no longer carry their frame kinds, so a faithful re-insert
+        // on either side would silently promote them to required. Refuse —
+        // the holder can still restore locally via its window-rebuild path.
+        if !self.replicas[src].tier.contains(id) || self.replicas[src].tier.is_partial(id) {
+            return false;
+        }
+        let Some(entry) = self.replicas[src].export_warm(id) else {
+            return false;
+        };
+        let taken = match self.replicas[src].tier.take_frames(id) {
+            Some(t) if t.is_full() => t,
+            // contains + !is_partial above make this unreachable; restore
+            // the bookkeeping rather than panic if accounting ever drifts.
+            _ => {
+                self.replicas[src].import_warm(entry);
+                return false;
+            }
+        };
+        let frames: Vec<Vec<u8>> =
+            taken.frames.into_iter().map(|f| f.unwrap_or_default()).collect();
+        let class = entry.req.priority.level();
+        let parts: Vec<(&[u8], FrameKind)> =
+            frames.iter().map(|f| (f.as_slice(), FrameKind::Required)).collect();
+        if self.replicas[dst].tier.insert_frames(id, class, &parts).is_some() {
+            // The router's whole claim is that migration is a byte copy:
+            // prove it on every migration, not just in tests.
+            let image: Vec<u8> = frames.concat();
+            let copied = self.replicas[dst]
+                .tier
+                .peek(id)
+                .expect("migrated resident must be readable");
+            assert_eq!(copied, image, "cross-replica migration corrupted snapshot bytes");
+            self.replicas[dst].import_warm(entry);
+            self.migrations += 1;
+            self.migrated_bytes += image.len() as u64;
+            true
+        } else {
+            // Destination refused (budget / more-important residents): put
+            // the frames and bookkeeping back where they were.
+            let restored = self.replicas[src].tier.insert_frames(id, class, &parts).is_some();
+            debug_assert!(restored, "source tier refused bytes it just held");
+            self.replicas[src].import_warm(entry);
+            false
+        }
+    }
+
+    /// Advance every replica's virtual clock (monotonic per replica).
+    pub fn set_now(&mut self, now_us: u64) {
+        for s in &mut self.replicas {
+            s.set_now(now_us);
+        }
+    }
+
+    /// One tick of every replica, in index order. Returns how many replicas
+    /// did work.
+    pub fn tick(&mut self) -> Result<usize> {
+        let mut worked = 0;
+        for s in &mut self.replicas {
+            if s.tick()? {
+                worked += 1;
+            }
+        }
+        Ok(worked)
+    }
+
+    /// Requests pending across all replicas.
+    pub fn pending(&self) -> usize {
+        self.replicas.iter().map(|s| s.pending()).sum()
+    }
+
+    /// Drain every replica's completed requests.
+    pub fn drain_done(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for s in &mut self.replicas {
+            out.append(&mut s.done);
+        }
+        out
+    }
+
+    /// Tick every replica until the whole fleet is idle, then return every
+    /// completion sorted by request id (cross-replica completion order is
+    /// not meaningful; id order is deterministic).
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.tick()? > 0 {}
+        let mut done = self.drain_done();
+        done.sort_by_key(|c| c.id);
+        Ok(done)
+    }
+
+    /// Sum of every replica's scheduler counters.
+    pub fn aggregate_metrics(&self) -> StepMetrics {
+        let mut m = StepMetrics::default();
+        for s in &self.replicas {
+            m.absorb(&s.metrics);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_router_knows_the_cli_names() {
+        for (name, expect) in [
+            ("round-robin", "round-robin"),
+            ("least-loaded", "least-loaded"),
+            ("affinity", "affinity"),
+        ] {
+            assert_eq!(parse_router(name).unwrap().name(), expect);
+        }
+        assert!(parse_router("random").is_none());
+        assert!(parse_router("roundrobin").is_none());
+    }
+}

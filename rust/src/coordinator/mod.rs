@@ -5,9 +5,11 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod fleet;
 pub mod request;
 pub mod scheduler;
 
 pub use engine::{Engine, PipelineMode, PrefixOutcome, Sequence};
+pub use fleet::{parse_router, Affinity, Fleet, LeastLoaded, Placement, RoundRobin, RouterPolicy};
 pub use request::{Completion, Phase, Priority, Request, SchedEvent, StepMetrics};
-pub use scheduler::{Policy, Preemption, Scheduler};
+pub use scheduler::{Policy, Preemption, Scheduler, WarmExport};

@@ -327,3 +327,51 @@ pub struct StepMetrics {
     /// over prefix hits — bytes the cache pool did *not* have to reserve.
     pub prefix_bytes_shared: u64,
 }
+
+impl StepMetrics {
+    /// Add every counter of `other` into `self` — the fleet aggregate over
+    /// per-replica schedulers (`coordinator::fleet`). Field-by-field so a
+    /// newly added counter cannot be silently dropped from the aggregate.
+    pub fn absorb(&mut self, other: &StepMetrics) {
+        let StepMetrics {
+            prefill_tokens,
+            decode_steps,
+            batched_seqs,
+            preemptions,
+            attn_jobs,
+            stale_reservations,
+            rejected,
+            expired,
+            cancelled,
+            offloads,
+            offload_bytes,
+            restores,
+            restore_bytes,
+            offload_lost,
+            window_frames_dropped,
+            window_rebuilds,
+            bypass_admissions,
+            prefix_hits,
+            prefix_bytes_shared,
+        } = *other;
+        self.prefill_tokens += prefill_tokens;
+        self.decode_steps += decode_steps;
+        self.batched_seqs += batched_seqs;
+        self.preemptions += preemptions;
+        self.attn_jobs += attn_jobs;
+        self.stale_reservations += stale_reservations;
+        self.rejected += rejected;
+        self.expired += expired;
+        self.cancelled += cancelled;
+        self.offloads += offloads;
+        self.offload_bytes += offload_bytes;
+        self.restores += restores;
+        self.restore_bytes += restore_bytes;
+        self.offload_lost += offload_lost;
+        self.window_frames_dropped += window_frames_dropped;
+        self.window_rebuilds += window_rebuilds;
+        self.bypass_admissions += bypass_admissions;
+        self.prefix_hits += prefix_hits;
+        self.prefix_bytes_shared += prefix_bytes_shared;
+    }
+}

@@ -160,6 +160,24 @@ struct Warm {
     ttft_us: Option<u64>,
 }
 
+/// An offloaded request's scheduler-side bookkeeping, detached from its
+/// scheduler for cross-replica migration ([`Scheduler::export_warm`] /
+/// [`Scheduler::import_warm`]). The bulky part — the serialized snapshot
+/// frames — stays in the source warm tier; the fleet router moves those
+/// separately as a byte copy (`coordinator::fleet`).
+pub struct WarmExport {
+    /// The offloaded request itself.
+    pub req: Request,
+    /// Virtual time of first submission (deadlines count from here).
+    pub submitted_us: u64,
+    /// Tokens decoded before preemption.
+    pub generated: Vec<i32>,
+    /// The sampled-but-not-yet-fed token decode resumes with.
+    pub next_token: i32,
+    /// Wall-clock time to first token, if the request got that far.
+    pub ttft_us: Option<u64>,
+}
+
 impl Warm {
     fn deadline_abs(&self) -> Option<u64> {
         self.req.deadline_us.map(|d| self.submitted_us.saturating_add(d))
@@ -243,6 +261,9 @@ pub struct Scheduler {
     now_us: u64,
     stop_token: i32,
     rng: Rng,
+    /// Static replica annotation for driver spans when this scheduler is one
+    /// of a fleet ([`Scheduler::set_replica`]); None for a lone scheduler.
+    replica_tag: Option<&'static str>,
 }
 
 /// How much larger the default warm-tier budget is than the cache budget:
@@ -302,7 +323,15 @@ impl Scheduler {
             now_us: 0,
             stop_token,
             rng: Rng::new(0xd1ce),
+            replica_tag: None,
         }
+    }
+
+    /// Tag this scheduler as fleet replica `idx`: its driver-tick spans
+    /// carry the replica tag so a fleet trace separates per-replica
+    /// timelines. Tagging never changes scheduling behavior.
+    pub fn set_replica(&mut self, idx: usize) {
+        self.replica_tag = Some(obs::replica_tag(idx));
     }
 
     /// Resize the engine's attention worker pool (1 = serial baseline).
@@ -556,6 +585,60 @@ impl Scheduler {
         let base = prefix_base_hash(&self.engine.cfg, &tokens[..req.prefix_len]);
         let d = &self.engine.manifest.model;
         self.prefix_store.probe_set(base, d.n_layers, d.n_kv_heads).unwrap_or(0)
+    }
+
+    /// Bytes `req` would borrow from this scheduler's prefix store if it
+    /// were admitted here right now (0 when sharing is off, no prefix is
+    /// declared, or any image of the set is missing). Read-only; exposed for
+    /// the fleet router's affinity scoring (`coordinator::fleet`).
+    pub fn probe_prefix_bytes(&self, req: &Request) -> usize {
+        self.probed_shared_bytes(req)
+    }
+
+    /// Whether this scheduler holds the offloaded (warm) bookkeeping for
+    /// request `id`. The snapshot frames themselves live in
+    /// [`Scheduler::tier`]; a fleet affinity router treats either as
+    /// residency.
+    pub fn holds_warm(&self, id: u64) -> bool {
+        self.warm.iter().any(|w| w.req.id == id)
+    }
+
+    /// Detach the offloaded request `id`'s scheduler-side bookkeeping for
+    /// migration to another replica. The snapshot frames stay in this
+    /// scheduler's warm tier — the fleet moves them separately as a byte
+    /// copy. Refuses (None, state untouched) when `id` is not offloaded
+    /// here, or when it snapshotted *by reference* into this replica's
+    /// prefix store: by-ref frames carry image hashes whose pins are local
+    /// to this replica, so they cannot be resolved anywhere else.
+    pub fn export_warm(&mut self, id: u64) -> Option<WarmExport> {
+        if self.prefix_refs.contains_key(&id) {
+            return None;
+        }
+        let i = self.warm.iter().position(|w| w.req.id == id)?;
+        let w = self.warm.remove(i);
+        self.bypass_used.remove(&id);
+        Some(WarmExport {
+            req: w.req,
+            submitted_us: w.submitted_us,
+            generated: w.generated,
+            next_token: w.next_token,
+            ttft_us: w.ttft_us,
+        })
+    }
+
+    /// Adopt an offloaded request exported from another replica
+    /// ([`Scheduler::export_warm`]). The caller must have moved the
+    /// request's snapshot frames into this scheduler's warm tier first;
+    /// without them, readmission degrades to the offload-lost re-prefill
+    /// path (correct, but the migration bought nothing).
+    pub fn import_warm(&mut self, e: WarmExport) {
+        self.warm.push(Warm {
+            req: e.req,
+            submitted_us: e.submitted_us,
+            generated: e.generated,
+            next_token: e.next_token,
+            ttft_us: e.ttft_us,
+        });
     }
 
     /// Release the prefix-store pins a retiring request holds (no-op for
@@ -1144,6 +1227,13 @@ impl Scheduler {
     /// cache budget allows, then one decode step over the live batch.
     /// Returns false when idle.
     pub fn tick(&mut self) -> Result<bool> {
+        // Whole-tick span, idle ticks included: an idle tick (`worked == 0`)
+        // does nothing but run the loop machinery, so its duration is a pure
+        // sample of the driver's per-tick overhead — what the replay cost
+        // model's `tick_overhead_us` coefficient prices, and what
+        // ci/calibrate_cost_model.py --from-trace fits from these spans.
+        let t_tick = obs::start();
+        let live_at_entry = self.live.len() as u64;
         // Drain the tracing rings into the flight recorder once per tick
         // (the tracing plane's drain cadence). `try_lock`: an admin `trace`
         // reply holding the recorder must never stall the driver.
@@ -1153,6 +1243,7 @@ impl Scheduler {
             }
         }
         if self.queue.is_empty() && self.live.is_empty() && self.warm.is_empty() {
+            self.driver_tick_span(t_tick, live_at_entry, 0);
             return Ok(false);
         }
         self.expire_deadlines();
@@ -1247,7 +1338,26 @@ impl Scheduler {
                 self.release_prefix(l.req.id);
             }
         }
+        self.driver_tick_span(t_tick, live_at_entry, 1);
         Ok(true)
+    }
+
+    /// Close the whole-tick span opened at the top of [`Scheduler::tick`],
+    /// tagged with this scheduler's replica when it is part of a fleet.
+    fn driver_tick_span(&self, t0: u64, live_at_entry: u64, worked: u64) {
+        match self.replica_tag {
+            Some(tag) => obs::span_tag(
+                obs::SpanKind::DriverTick,
+                live_at_entry,
+                t0,
+                live_at_entry,
+                worked,
+                tag,
+            ),
+            None => {
+                obs::span(obs::SpanKind::DriverTick, live_at_entry, t0, live_at_entry, worked)
+            }
+        }
     }
 
     fn sample(&mut self, logits: &[f32], temperature: Option<f32>) -> i32 {

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! innerq serve       [--method M] [--addr HOST:PORT] [--artifacts DIR] [--workers N]
+//!                    [--replicas N] [--router round-robin|least-loaded|affinity]
 //!                    [--io-workers N] [--admin-port PORT] [--trace-out PATH]
 //!                    [--budget BYTES] [--policy fifo|slo]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
@@ -11,6 +12,7 @@
 //!                    [--pipeline barrier|overlap] [--isa auto|scalar|avx2|avx512|neon]
 //!                    [--trace-out PATH]
 //! innerq serve-trace [--trace timed|multi-turn] [--sessions N]
+//!                    [--replicas N] [--router round-robin|least-loaded|affinity]
 //!                    [--arrival poisson|bursty|ramp|batch] [--rate R] [--requests N]
 //!                    [--seed S] [--budget BYTES] [--policy fifo|slo] [--workers N]
 //!                    [--preemption recompute|offload] [--warm-budget BYTES]
@@ -36,6 +38,14 @@
 //!
 //! `--workers N` sizes the decode-attention worker pool (default 1 = the
 //! serial baseline; the driver thread counts as one worker).
+//!
+//! `--replicas N` (default 1) runs N full data-parallel scheduler replicas
+//! — each with its own engine, worker pool, cache budget, warm tier, and
+//! prefix store — behind a `--router` policy (default `affinity`): requests
+//! land where their offload snapshot or shared-prefix bytes already live,
+//! falling back to least-loaded (`coordinator::fleet`). For `serve-trace`
+//! this switches to the fleet replay harness with per-replica virtual
+//! clocks.
 //!
 //! `--pipeline overlap` (the default) runs each decode step as one task
 //! graph of fused append+attend jobs chained between driver-only PJRT
@@ -67,7 +77,7 @@
 use anyhow::{anyhow, Result};
 use innerq::coordinator::{PipelineMode, Policy, Preemption, Request, Scheduler};
 use innerq::runtime::Manifest;
-use innerq::workload::replay::{replay, CostModel};
+use innerq::workload::replay::{replay, replay_fleet, CostModel};
 use innerq::workload::trace::{
     generate_multi_turn, generate_timed, Arrival, MultiTurnTraceConfig, TimedTraceConfig,
 };
@@ -144,6 +154,24 @@ fn pipeline(args: &Args) -> Result<PipelineMode> {
     let name = args.get("pipeline", "overlap");
     PipelineMode::parse(&name)
         .ok_or_else(|| anyhow!("unknown pipeline mode '{name}'; one of: barrier, overlap"))
+}
+
+/// `--replicas N` (default 1): how many data-parallel scheduler replicas to
+/// run behind the router.
+fn replicas_flag(args: &Args) -> Result<usize> {
+    let n: usize = args.get("replicas", "1").parse()?;
+    if n == 0 {
+        return Err(anyhow!("--replicas must be >= 1"));
+    }
+    Ok(n)
+}
+
+/// `--router NAME` (default affinity — with one replica every policy places
+/// identically, so the default only matters at `--replicas >= 2`).
+fn router_flag(name: &str) -> Result<Box<dyn innerq::coordinator::RouterPolicy + Send>> {
+    innerq::coordinator::parse_router(name).ok_or_else(|| {
+        anyhow!("unknown router '{name}'; one of: round-robin, least-loaded, affinity")
+    })
 }
 
 /// Apply `--isa` (kernel dispatch-arm override) and return the arm that is
@@ -252,11 +280,23 @@ fn main() -> Result<()> {
             let m = method(&args)?;
             let workers: usize = args.get("workers", "1").parse()?;
             let budget: usize = args.get("budget", &(1usize << 30).to_string()).parse()?;
+            let n_replicas = replicas_flag(&args)?;
+            let router_name = args.get("router", "affinity");
+            let router = router_flag(&router_name)?;
             eprintln!("[serve] loading {} stages ...", manifest.artifacts.len());
-            let mut engine = innerq::coordinator::Engine::new(manifest, m.config())?;
-            engine.set_workers(workers);
-            let mut sched = Scheduler::new(engine, budget);
-            configure_sched(&mut sched, &args)?;
+            // Data-parallel replicas: each gets its own engine (same
+            // artifacts), worker pool, cache budget, warm tier, and prefix
+            // store; the router places each request on exactly one.
+            let mut replicas = Vec::with_capacity(n_replicas);
+            for _ in 0..n_replicas {
+                let mut engine =
+                    innerq::coordinator::Engine::new(manifest.clone(), m.config())?;
+                engine.set_workers(workers);
+                let mut sched = Scheduler::new(engine, budget);
+                configure_sched(&mut sched, &args)?;
+                replicas.push(sched);
+            }
+            let fleet = innerq::coordinator::Fleet::new(replicas, router);
             let addr = args.get("addr", "127.0.0.1:7071");
             // Staged front-end shape: N IO workers polling non-blocking
             // sockets, plus an optional admin/metrics listener on its own
@@ -270,16 +310,18 @@ fn main() -> Result<()> {
                 Some(format!("{host}:{admin_port}"))
             };
             eprintln!(
-                "[serve] method={} addr={addr} workers={workers} io-workers={io_workers} \
-                 policy={:?} preemption={} pipeline={} isa={isa}",
+                "[serve] method={} addr={addr} replicas={n_replicas} router={} \
+                 workers={workers} io-workers={io_workers} policy={:?} preemption={} \
+                 pipeline={} isa={isa}",
                 m.name(),
-                sched.policy(),
-                sched.preemption().name(),
-                sched.engine.pipeline().name()
+                fleet.router_name(),
+                fleet.replica(0).policy(),
+                fleet.replica(0).preemption().name(),
+                fleet.replica(0).engine.pipeline().name()
             );
-            let recorder = sched.obs.clone();
-            innerq::server::serve_with(
-                sched,
+            let recorder = fleet.replica(0).obs.clone();
+            innerq::server::serve_fleet(
+                fleet,
                 &addr,
                 innerq::server::ServerConfig { io_workers, admin_addr },
                 std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)),
@@ -366,16 +408,8 @@ fn main() -> Result<()> {
                     ))
                 }
             };
-            let mut sched = trace_scheduler(&args, budget, workers)?;
-            eprintln!(
-                "[serve-trace] trace={family} arrival={} rate={rate} requests={n_requests} \
-                 budget={budget} policy={:?} preemption={} workers={workers} seed={seed} \
-                 prefix-share={} isa={isa}",
-                arrival.name(),
-                sched.policy(),
-                sched.preemption().name(),
-                if sched.prefix_share() { "on" } else { "off" }
-            );
+            let n_replicas = replicas_flag(&args)?;
+            let router_name = args.get("router", "affinity");
             // Replay cost coefficients: the built-in defaults, or a
             // calibration file produced by ci/calibrate_cost_model.py from
             // real bench numbers.
@@ -383,6 +417,45 @@ fn main() -> Result<()> {
                 "" => CostModel::default(),
                 path => CostModel::load(path).map_err(|e| anyhow!("--cost-model {path}: {e}"))?,
             };
+            let json_path = args.get("json", "");
+            let banner = |sched: &Scheduler| {
+                eprintln!(
+                    "[serve-trace] trace={family} arrival={} rate={rate} requests={n_requests} \
+                     budget={budget} policy={:?} preemption={} workers={workers} seed={seed} \
+                     prefix-share={} isa={isa}",
+                    arrival.name(),
+                    sched.policy(),
+                    sched.preemption().name(),
+                    if sched.prefix_share() { "on" } else { "off" }
+                );
+            };
+            if n_replicas > 1 {
+                // Fleet replay: per-replica virtual clocks behind the
+                // router; the report carries per-replica and aggregate
+                // numbers (see workload::replay::replay_fleet).
+                let mut replicas = Vec::with_capacity(n_replicas);
+                for _ in 0..n_replicas {
+                    replicas.push(trace_scheduler(&args, budget, workers)?);
+                }
+                let mut fleet =
+                    innerq::coordinator::Fleet::new(replicas, router_flag(&router_name)?);
+                banner(fleet.replica(0));
+                eprintln!("[serve-trace] fleet: replicas={n_replicas} router={router_name}");
+                let report = replay_fleet(&mut fleet, &trace, &cost)?;
+                println!("== serve-trace fleet report ==");
+                report.print_summary();
+                if !json_path.is_empty() {
+                    std::fs::write(&json_path, report.to_json().dump())?;
+                    eprintln!("[serve-trace] wrote {json_path}");
+                }
+                if let Some((guard, path)) = traced {
+                    write_trace_out(&fleet.replica(0).obs, &path)?;
+                    drop(guard);
+                }
+                return Ok(());
+            }
+            let mut sched = trace_scheduler(&args, budget, workers)?;
+            banner(&sched);
             let report = replay(&mut sched, &trace, &cost)?;
             if report.metrics.prefix_hits > 0 {
                 eprintln!(
@@ -393,7 +466,6 @@ fn main() -> Result<()> {
             }
             println!("== serve-trace report ==");
             report.print_summary();
-            let json_path = args.get("json", "");
             if !json_path.is_empty() {
                 std::fs::write(&json_path, report.to_json().dump())?;
                 eprintln!("[serve-trace] wrote {json_path}");
@@ -448,6 +520,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: innerq <serve|generate|serve-trace|exp|info> [flags]\n\
                  \n  serve       --method M --addr HOST:PORT --artifacts DIR --workers N\
+                 \n              --replicas N --router round-robin|least-loaded|affinity\
                  \n              --io-workers N --admin-port PORT --trace-out PATH\
                  \n              --budget BYTES --policy fifo|slo\
                  \n              --preemption recompute|offload --warm-budget BYTES\
@@ -457,6 +530,7 @@ fn main() -> Result<()> {
                  \n              --pipeline barrier|overlap --isa auto|scalar|avx2|avx512|neon\
                  \n              --trace-out PATH\
                  \n  serve-trace --trace timed|multi-turn --sessions N\
+                 \n              --replicas N --router round-robin|least-loaded|affinity\
                  \n              --arrival poisson|bursty|ramp|batch --rate R --requests N\
                  \n              --seed S --budget BYTES --policy fifo|slo --workers N\
                  \n              --preemption recompute|offload --warm-budget BYTES\

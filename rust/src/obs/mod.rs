@@ -181,11 +181,15 @@ pub enum SpanKind {
     /// IO-worker egress: one flush of a connection's buffered response
     /// bytes. `id` = conn id; `b` = bytes written.
     Egress,
+    /// One full scheduler driver-loop tick, idle ticks included (an idle
+    /// tick is a pure-overhead sample: `b == 0`). In a fleet the tag is the
+    /// replica ([`replica_tag`]). `id` = live batch size at entry.
+    DriverTick,
 }
 
 impl SpanKind {
     /// Every kind, for exporters and tests.
-    pub const ALL: [SpanKind; 16] = [
+    pub const ALL: [SpanKind; 17] = [
         SpanKind::Queued,
         SpanKind::Prefill,
         SpanKind::DecodeStep,
@@ -202,6 +206,7 @@ impl SpanKind {
         SpanKind::TierTake,
         SpanKind::Ingress,
         SpanKind::Egress,
+        SpanKind::DriverTick,
     ];
 
     /// Stable span name (Chrome trace `name`, Prometheus `stage` label).
@@ -223,6 +228,7 @@ impl SpanKind {
             SpanKind::TierTake => "tier_take",
             SpanKind::Ingress => "ingress",
             SpanKind::Egress => "egress",
+            SpanKind::DriverTick => "driver_tick",
         }
     }
 
@@ -230,7 +236,7 @@ impl SpanKind {
     pub fn cat(self) -> &'static str {
         match self {
             SpanKind::Queued | SpanKind::Prefill | SpanKind::Request => "request",
-            SpanKind::DecodeStep => "driver",
+            SpanKind::DecodeStep | SpanKind::DriverTick => "driver",
             SpanKind::StageQkv | SpanKind::StageOut | SpanKind::StageHead => "stage",
             SpanKind::AttnJob => "job",
             SpanKind::QuantEvict
@@ -257,8 +263,20 @@ impl SpanKind {
             SpanKind::TierInsert | SpanKind::TierTake => ("bytes", "aux"),
             SpanKind::Ingress => ("conn", "bytes"),
             SpanKind::Egress => ("conn", "bytes"),
+            SpanKind::DriverTick => ("live", "worked"),
         }
     }
+}
+
+/// Static replica tags for span annotation (`span_tag` takes a
+/// `&'static str`). Replicas beyond the table clamp to the last entry —
+/// fleet sizes that large are not a supported configuration anyway.
+pub fn replica_tag(replica: usize) -> &'static str {
+    const TAGS: [&str; 16] = [
+        "r0", "r1", "r2", "r3", "r4", "r5", "r6", "r7", "r8", "r9", "r10", "r11", "r12", "r13",
+        "r14", "r15",
+    ];
+    TAGS[replica.min(TAGS.len() - 1)]
 }
 
 /// One completed span, as pushed into a lane ring. Fixed-size and `Copy`

@@ -31,4 +31,4 @@ mod admin;
 mod io_worker;
 
 pub use conn::{fuzz_protocol_bytes, MAX_LINE_BYTES};
-pub use tcp::{serve, serve_with, AdminClient, Bound, Client, ServerConfig};
+pub use tcp::{serve, serve_fleet, serve_with, AdminClient, Bound, Client, ServerConfig};

@@ -22,8 +22,17 @@
 //! pins all release mid-decode). A second admin listener
 //! ([`super::admin`]) exports live counters without ever touching the data
 //! plane.
+//!
+//! The driver actually owns a [`Fleet`] of scheduler replicas:
+//! [`serve_with`] wraps its single scheduler in a one-replica fleet, and
+//! [`serve_fleet`] serves N data-parallel replicas behind a
+//! [`crate::coordinator::fleet::RouterPolicy`]. Either way there is exactly
+//! one driver thread — placement is a routing decision, not a concurrency
+//! one — and the admin snapshot sums replica counters under the same
+//! names a single-replica server exports, plus per-replica gauges.
 
-use crate::coordinator::request::{Priority, Request};
+use crate::coordinator::fleet::{Fleet, RoundRobin};
+use crate::coordinator::request::{Priority, Request, StepMetrics};
 use crate::coordinator::Scheduler;
 use crate::server::admin::{admin_loop, SharedSnapshot};
 use crate::server::conn::read_line_capped;
@@ -70,6 +79,7 @@ pub struct Bound {
 struct Route {
     worker: usize,
     conn_id: u64,
+    replica: usize,
     stream: bool,
     tag: Option<String>,
 }
@@ -96,9 +106,32 @@ pub fn serve(
 /// `addr` (and the admin listener at `cfg.admin_addr`, if set), reports the
 /// bound addresses via `on_bound`, then runs the driver loop on the calling
 /// thread until `stop` flips true. Every stage thread is joined before
-/// returning.
+/// returning. Internally a one-replica [`serve_fleet`] — round-robin over
+/// one replica always places on replica 0.
 pub fn serve_with(
-    mut sched: Scheduler,
+    sched: Scheduler,
+    addr: &str,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+    on_bound: impl FnOnce(Bound),
+) -> Result<()> {
+    serve_fleet(
+        Fleet::new(vec![sched], Box::new(RoundRobin::default())),
+        addr,
+        cfg,
+        stop,
+        on_bound,
+    )
+}
+
+/// Serve a data-parallel [`Fleet`]: each incoming request is placed on one
+/// replica by the fleet's router, runs there end to end, and streams back
+/// through the same staged front end. One driver thread ticks every
+/// replica each iteration; all replicas drain their spans into one shared
+/// flight recorder (replica-tagged), so the admin `trace` command sees the
+/// whole fleet.
+pub fn serve_fleet(
+    mut fleet: Fleet,
     addr: &str,
     cfg: ServerConfig,
     stop: Arc<AtomicBool>,
@@ -178,22 +211,25 @@ pub fn serve_with(
     });
 
     // Admin plane: its connections read the driver-refreshed snapshot, and
-    // `metrics`/`trace` additionally read the scheduler's flight recorder
-    // (shared by Arc; the driver only ever try-locks it, so a slow admin
-    // read delays observability, never decoding).
+    // `metrics`/`trace` additionally read the fleet's flight recorder —
+    // `Fleet::new` pointed every replica at one shared recorder, so replica
+    // 0's handle sees the whole fleet (the driver only ever try-locks it,
+    // so a slow admin read delays observability, never decoding).
     let snapshot: SharedSnapshot = Arc::new(Mutex::new(Vec::new()));
     let admin_handle = admin_listener.map(|l| {
         let snap = snapshot.clone();
-        let recorder = sched.obs.clone();
+        let recorder = fleet.replica(0).obs.clone();
         let stop_a = stop.clone();
         std::thread::spawn(move || admin_loop(l, snap, recorder, stop_a))
     });
 
-    // Driver loop (owns the engine; decode attention fans out over the
-    // engine's worker pool). The scheduler's virtual clock is advanced from
-    // wall-clock elapsed time so request deadlines expire in live serving
-    // exactly as they would in a replay.
-    sched.record_progress(true);
+    // Driver loop (owns every replica's engine; decode attention fans out
+    // over each engine's own worker pool). Replica virtual clocks are
+    // advanced from wall-clock elapsed time so request deadlines expire in
+    // live serving exactly as they would in a replay.
+    for i in 0..fleet.n() {
+        fleet.replica_mut(i).record_progress(true);
+    }
     let started = Instant::now();
     let mut routes: HashMap<u64, Route> = HashMap::new();
     let mut next_req = 1u64;
@@ -202,7 +238,7 @@ pub fn serve_with(
     let mut pending: Vec<(usize, ToDriver)> = Vec::new();
     let mut stats_generation = 0u64;
     while !stop.load(Ordering::Relaxed) {
-        sched.set_now(started.elapsed().as_micros() as u64);
+        fleet.set_now(started.elapsed().as_micros() as u64);
         let mut busy = false;
 
         // Ingest: messages parked by a full outbound queue first, then the
@@ -210,43 +246,45 @@ pub fn serve_with(
         // worker; arrival-interleaved for several, like any real server).
         for (w, msg) in std::mem::take(&mut pending) {
             busy = true;
-            handle_msg(&mut sched, &mut routes, &mut next_req, w, msg);
+            handle_msg(&mut fleet, &mut routes, &mut next_req, w, msg);
         }
         for w in 0..n_workers {
             while let Some(msg) = from_workers[w].try_pop() {
                 busy = true;
-                handle_msg(&mut sched, &mut routes, &mut next_req, w, msg);
+                handle_msg(&mut fleet, &mut routes, &mut next_req, w, msg);
             }
         }
 
-        busy |= sched.tick()?;
+        busy |= fleet.tick()? > 0;
 
         // Stream per-token lines for requests that opted in.
-        for (id, tok) in sched.take_progress() {
-            let Some(r) = routes.get(&id) else { continue };
-            if !r.stream {
-                continue;
+        for i in 0..fleet.n() {
+            let progress = fleet.replica_mut(i).take_progress();
+            for (id, tok) in progress {
+                let Some(r) = routes.get(&id) else { continue };
+                if !r.stream {
+                    continue;
+                }
+                let text = fleet.replica(i).engine.manifest.decode_text(&[tok]);
+                let mut fields =
+                    vec![("id", Json::Num(id as f64)), ("token", Json::str(&text))];
+                if let Some(tag) = &r.tag {
+                    fields.push(("tag", Json::str(tag)));
+                }
+                let (worker, conn_id) = (r.worker, r.conn_id);
+                send_to_worker(
+                    &mut to_workers,
+                    &mut from_workers,
+                    &mut pending,
+                    &stop,
+                    worker,
+                    Outbound { conn_id, line: Json::obj(fields).dump() },
+                );
             }
-            let mut fields = vec![
-                ("id", Json::Num(id as f64)),
-                ("token", Json::str(&sched.engine.manifest.decode_text(&[tok]))),
-            ];
-            if let Some(tag) = &r.tag {
-                fields.push(("tag", Json::str(tag)));
-            }
-            let (worker, conn_id) = (r.worker, r.conn_id);
-            send_to_worker(
-                &mut to_workers,
-                &mut from_workers,
-                &mut pending,
-                &stop,
-                worker,
-                Outbound { conn_id, line: Json::obj(fields).dump() },
-            );
         }
 
         // Flush completions (including failed ones, which carry `error`).
-        let done: Vec<_> = sched.done.drain(..).collect();
+        let done: Vec<_> = fleet.drain_done();
         for c in done {
             let Some(r) = routes.remove(&c.id) else { continue };
             if c.error.is_none() {
@@ -281,7 +319,7 @@ pub fn serve_with(
             stats_generation += 1;
             let mut snap = snapshot.lock().unwrap_or_else(|e| e.into_inner());
             *snap = build_snapshot(
-                &sched,
+                &fleet,
                 &ttft_hist,
                 &e2e_hist,
                 started,
@@ -305,10 +343,11 @@ pub fn serve_with(
     Ok(())
 }
 
-/// Apply one worker message to the scheduler: assign an id and submit, or
-/// cancel everything a vanished connection still had pending.
+/// Apply one worker message to the fleet: assign an id, route, and submit,
+/// or cancel everything a vanished connection still had pending (on
+/// whichever replica each request was placed).
 fn handle_msg(
-    sched: &mut Scheduler,
+    fleet: &mut Fleet,
     routes: &mut HashMap<u64, Route>,
     next_req: &mut u64,
     worker: usize,
@@ -323,17 +362,18 @@ fn handle_msg(
             req.priority = spec.priority;
             req.deadline_us = spec.deadline_us;
             req.prefix_len = spec.prefix_len;
-            routes.insert(id, Route { worker, conn_id, stream: spec.stream, tag: spec.tag });
-            sched.submit(req);
+            let (stream, tag) = (spec.stream, spec.tag);
+            let replica = fleet.submit(req);
+            routes.insert(id, Route { worker, conn_id, replica, stream, tag });
         }
         ToDriver::Disconnect { conn_id } => {
-            let ids: Vec<u64> = routes
+            let doomed: Vec<(u64, usize)> = routes
                 .iter()
                 .filter(|(_, r)| r.worker == worker && r.conn_id == conn_id)
-                .map(|(&id, _)| id)
+                .map(|(&id, r)| (id, r.replica))
                 .collect();
-            for id in ids {
-                sched.cancel(id);
+            for (id, replica) in doomed {
+                fleet.replica_mut(replica).cancel(id);
                 routes.remove(&id);
             }
         }
@@ -379,21 +419,30 @@ fn send_to_worker(
 /// bytes, residents, pins) are instantaneous. The layout is append-only:
 /// existing names never change meaning or order, new fields only go on the
 /// end (scrapers index by name, goldens diff by prefix).
+///
+/// Scheduler-level counters are *summed across replicas* under the exact
+/// names a single-replica server has always exported, so scrapers don't
+/// care how many replicas sit behind the address; the appended fleet block
+/// (`fleet_replicas`, per-replica `replica{i}_pending` gauges, migration
+/// counters) is where replica structure shows.
 fn build_snapshot(
-    sched: &Scheduler,
+    fleet: &Fleet,
     ttft: &LatencyHistogram,
     e2e: &LatencyHistogram,
     started: Instant,
     conn_gauges: &[Arc<AtomicUsize>],
     generation: u64,
 ) -> Vec<(String, u64)> {
-    let m = &sched.metrics;
-    let ts = &sched.tier.stats;
-    let ps = &sched.prefix_store.stats;
-    let mut out: Vec<(String, u64)> = Vec::with_capacity(64);
+    let replicas = fleet.replicas();
+    let sum = |f: fn(&Scheduler) -> u64| -> u64 { replicas.iter().map(f).sum() };
+    let mut m = StepMetrics::default();
+    for s in replicas {
+        m.absorb(&s.metrics);
+    }
+    let mut out: Vec<(String, u64)> = Vec::with_capacity(64 + replicas.len());
     let mut push = |name: &str, v: u64| out.push((name.to_string(), v));
     push("uptime_us", started.elapsed().as_micros() as u64);
-    push("pending", sched.pending() as u64);
+    push("pending", sum(|s| s.pending() as u64));
     // StepMetrics (monotonic).
     push("prefill_tokens", m.prefill_tokens);
     push("decode_steps", m.decode_steps);
@@ -415,24 +464,24 @@ fn build_snapshot(
     push("prefix_hits", m.prefix_hits);
     push("prefix_bytes_shared", m.prefix_bytes_shared);
     // Cache pool (gauges).
-    push("pool_used_bytes", sched.pool.used_bytes() as u64);
-    push("pool_free_bytes", sched.pool.free_bytes() as u64);
-    push("pool_reserved", sched.pool.n_reserved() as u64);
+    push("pool_used_bytes", sum(|s| s.pool.used_bytes() as u64));
+    push("pool_free_bytes", sum(|s| s.pool.free_bytes() as u64));
+    push("pool_reserved", sum(|s| s.pool.n_reserved() as u64));
     // Warm tier.
-    push("tier_residents", sched.tier.n_residents() as u64);
-    push("tier_resident_bytes", sched.tier.resident_bytes() as u64);
-    push("tier_inserts", ts.inserts);
-    push("tier_hits", ts.hits);
-    push("tier_evictions", ts.evictions);
-    push("tier_evicted_bytes", ts.evicted_bytes);
+    push("tier_residents", sum(|s| s.tier.n_residents() as u64));
+    push("tier_resident_bytes", sum(|s| s.tier.resident_bytes() as u64));
+    push("tier_inserts", sum(|s| s.tier.stats.inserts));
+    push("tier_hits", sum(|s| s.tier.stats.hits));
+    push("tier_evictions", sum(|s| s.tier.stats.evictions));
+    push("tier_evicted_bytes", sum(|s| s.tier.stats.evicted_bytes));
     // Prefix store.
-    push("prefix_images", sched.prefix_store.n_images() as u64);
-    push("prefix_resident_bytes", sched.prefix_store.resident_bytes() as u64);
-    push("prefix_pinned_images", sched.prefix_store.pinned_images() as u64);
-    push("prefix_pins", sched.prefix_pins() as u64);
-    push("prefix_store_hits", ps.hits);
-    push("prefix_store_inserts", ps.inserts);
-    push("prefix_store_released", ps.released);
+    push("prefix_images", sum(|s| s.prefix_store.n_images() as u64));
+    push("prefix_resident_bytes", sum(|s| s.prefix_store.resident_bytes() as u64));
+    push("prefix_pinned_images", sum(|s| s.prefix_store.pinned_images() as u64));
+    push("prefix_pins", sum(|s| s.prefix_pins() as u64));
+    push("prefix_store_hits", sum(|s| s.prefix_store.stats.hits));
+    push("prefix_store_inserts", sum(|s| s.prefix_store.stats.inserts));
+    push("prefix_store_released", sum(|s| s.prefix_store.stats.released));
     // Latency percentiles over completed requests (live histograms).
     let t = ttft.summary();
     push("ttft_count", t.count as u64);
@@ -454,6 +503,14 @@ fn build_snapshot(
         push(&format!("io_conns_{w}"), gauge.load(Ordering::Relaxed) as u64);
     }
     push("stats_generation", generation);
+    // Fleet block: structure gauges a single-replica server also exports
+    // (with fleet_replicas = 1), so dashboards need one query shape.
+    push("fleet_replicas", replicas.len() as u64);
+    push("fleet_migrations", fleet.migrations);
+    push("fleet_migrated_bytes", fleet.migrated_bytes);
+    for (i, s) in replicas.iter().enumerate() {
+        push(&format!("replica{i}_pending"), s.pending() as u64);
+    }
     out
 }
 

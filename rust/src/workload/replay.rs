@@ -13,7 +13,16 @@
 //! Per-request TTFT / TPOT / end-to-end latency are reconstructed from the
 //! scheduler's [`SchedEvent`] stream and aggregated into exact
 //! [`LatencyHistogram`]s, overall and per priority class.
+//!
+//! [`replay_fleet`] scales the same harness to a data-parallel [`Fleet`]:
+//! each replica runs on its own virtual clock (replicas are concurrent
+//! machines, not a longer serial one), arrivals are routed by the fleet's
+//! [`crate::coordinator::fleet::RouterPolicy`] at the instant every busy
+//! replica has caught up to them, and the result is a [`FleetReplayReport`]
+//! with per-replica [`ReplayReport`]s plus fleet aggregates — deterministic
+//! under the contract documented on that type.
 
+use crate::coordinator::fleet::Fleet;
 use crate::coordinator::request::{Priority, SchedEvent, StepMetrics};
 use crate::coordinator::Scheduler;
 use crate::util::json::Json;
@@ -450,23 +459,7 @@ pub fn replay(
 ) -> Result<ReplayReport> {
     sched.record_events(true);
     sched.done.clear();
-    let mut records: Vec<RequestRecord> = trace
-        .iter()
-        .map(|t| RequestRecord {
-            id: t.req.id,
-            priority: t.req.priority,
-            arrival_us: t.arrival_us,
-            admitted_us: None,
-            finished_us: None,
-            n_generated: 0,
-            text: String::new(),
-            preemptions: 0,
-            offloads: 0,
-            restores: 0,
-            prefix_hits: 0,
-            outcome: None,
-        })
-        .collect();
+    let mut records: Vec<RequestRecord> = trace.iter().map(blank_record).collect();
     let idx_of: HashMap<u64, usize> =
         trace.iter().enumerate().map(|(i, t)| (t.req.id, i)).collect();
 
@@ -500,44 +493,7 @@ pub fn replay(
         }
         for ev in sched.take_events() {
             let Some(&ri) = idx_of.get(&ev.id()) else { continue };
-            let r = &mut records[ri];
-            match ev {
-                SchedEvent::Submitted { .. } => {}
-                SchedEvent::Admitted { .. } => {
-                    if r.admitted_us.is_none() {
-                        r.admitted_us = Some(now);
-                    }
-                }
-                SchedEvent::Preempted { .. } => r.preemptions += 1,
-                SchedEvent::Offloaded { .. } => {
-                    r.preemptions += 1;
-                    r.offloads += 1;
-                }
-                SchedEvent::Restored { .. } => r.restores += 1,
-                SchedEvent::PrefixHit { .. } => r.prefix_hits += 1,
-                // The fallback re-prefill shows up as a second Admitted.
-                SchedEvent::OffloadLost { .. } => {}
-                SchedEvent::Rejected { .. } => {
-                    r.outcome = Some(Outcome::Rejected);
-                    r.finished_us = Some(now);
-                    last_terminal_us = now;
-                }
-                SchedEvent::Expired { .. } => {
-                    r.outcome = Some(Outcome::Expired);
-                    r.finished_us = Some(now);
-                    last_terminal_us = now;
-                }
-                SchedEvent::Finished { n_generated, .. } => {
-                    r.outcome = Some(Outcome::Ok);
-                    r.finished_us = Some(now);
-                    r.n_generated = n_generated;
-                    last_terminal_us = now;
-                }
-                // Cancellation is a live-server concept (client disconnect);
-                // a replayed trace has no client to hang up, so this never
-                // fires here.
-                SchedEvent::Cancelled { .. } => {}
-            }
+            apply_event(&mut records[ri], ev, now, &mut last_terminal_us);
         }
         for c in sched.done.drain(..) {
             if c.error.is_none() {
@@ -556,6 +512,331 @@ pub fn replay(
     }
     sched.record_events(false);
     Ok(ReplayReport { records, ticks, end_us: last_terminal_us, metrics: sched.metrics })
+}
+
+/// A fresh record for one trace request, before any events land.
+fn blank_record(t: &TimedRequest) -> RequestRecord {
+    RequestRecord {
+        id: t.req.id,
+        priority: t.req.priority,
+        arrival_us: t.arrival_us,
+        admitted_us: None,
+        finished_us: None,
+        n_generated: 0,
+        text: String::new(),
+        preemptions: 0,
+        offloads: 0,
+        restores: 0,
+        prefix_hits: 0,
+        outcome: None,
+    }
+}
+
+/// Fold one scheduler event into its request's record, stamping terminal
+/// transitions at virtual time `now`. Shared by the single-scheduler and
+/// fleet replay drivers so both reconstruct timelines identically.
+fn apply_event(r: &mut RequestRecord, ev: SchedEvent, now: u64, last_terminal_us: &mut u64) {
+    match ev {
+        SchedEvent::Submitted { .. } => {}
+        SchedEvent::Admitted { .. } => {
+            if r.admitted_us.is_none() {
+                r.admitted_us = Some(now);
+            }
+        }
+        SchedEvent::Preempted { .. } => r.preemptions += 1,
+        SchedEvent::Offloaded { .. } => {
+            r.preemptions += 1;
+            r.offloads += 1;
+        }
+        SchedEvent::Restored { .. } => r.restores += 1,
+        SchedEvent::PrefixHit { .. } => r.prefix_hits += 1,
+        // The fallback re-prefill shows up as a second Admitted.
+        SchedEvent::OffloadLost { .. } => {}
+        SchedEvent::Rejected { .. } => {
+            r.outcome = Some(Outcome::Rejected);
+            r.finished_us = Some(now);
+            *last_terminal_us = now;
+        }
+        SchedEvent::Expired { .. } => {
+            r.outcome = Some(Outcome::Expired);
+            r.finished_us = Some(now);
+            *last_terminal_us = now;
+        }
+        SchedEvent::Finished { n_generated, .. } => {
+            r.outcome = Some(Outcome::Ok);
+            r.finished_us = Some(now);
+            r.n_generated = n_generated;
+            *last_terminal_us = now;
+        }
+        // Cancellation is a live-server concept (client disconnect);
+        // a replayed trace has no client to hang up, so this never
+        // fires here.
+        SchedEvent::Cancelled { .. } => {}
+    }
+}
+
+/// Everything a fleet replay produced: one [`ReplayReport`] per replica
+/// (index = replica id) plus fleet-level aggregates.
+///
+/// ## Determinism contract
+///
+/// For a fixed trace, router policy, and replica count,
+/// [`FleetReplayReport::to_json`] is byte-identical across *worker* counts
+/// — each replica's engine fan-out is byte-identical at any pool size, and
+/// everything else here is virtual-clock arithmetic.
+///
+/// Across *replica* counts, latency cannot be invariant (placement changes
+/// queueing), so the replica-count contract is narrower:
+/// [`FleetReplayReport::outcomes_json`] — per-request terminal outcome,
+/// completion text, and generated-token count, sorted by id, with no
+/// replica or latency fields — is byte-identical across replica counts for
+/// the deadline-free greedy traces the generators emit by default, where
+/// placement can change *when* a request runs but never *what* it
+/// produces. `benches/fleet_scaling.rs` and `tests/fleet_router.rs` assert
+/// both halves.
+#[derive(Debug, Clone)]
+pub struct FleetReplayReport {
+    /// Per-replica reports; index is the replica id.
+    pub replicas: Vec<ReplayReport>,
+    /// Scheduler counters summed across replicas.
+    pub metrics: StepMetrics,
+    /// Router policy name ([`Fleet::router_name`]).
+    pub router: &'static str,
+    /// Snapshots the router migrated between warm tiers.
+    pub migrations: u64,
+    /// Bytes those migrations copied.
+    pub migrated_bytes: u64,
+}
+
+impl FleetReplayReport {
+    /// Ticks executed across all replicas.
+    pub fn ticks(&self) -> u64 {
+        self.replicas.iter().map(|r| r.ticks).sum()
+    }
+
+    /// Virtual time at which the last replica retired its last request.
+    pub fn end_us(&self) -> u64 {
+        self.replicas.iter().map(|r| r.end_us).max().unwrap_or(0)
+    }
+
+    /// Completed requests across the fleet.
+    pub fn completed(&self) -> usize {
+        self.replicas.iter().map(|r| r.count(Outcome::Ok)).sum()
+    }
+
+    /// Requests replayed across the fleet.
+    pub fn n_requests(&self) -> usize {
+        self.replicas.iter().map(|r| r.records.len()).sum()
+    }
+
+    /// Completed requests per virtual second. Replicas run concurrently,
+    /// so the denominator is the *latest* per-replica end time, not the
+    /// sum — this is the number that should scale with replica count.
+    pub fn throughput_rps(&self) -> f64 {
+        let end = self.end_us();
+        if end == 0 {
+            return 0.0;
+        }
+        self.completed() as f64 / (end as f64 * 1e-6)
+    }
+
+    /// The replica-count-invariant sub-document: per-request terminal
+    /// outcome, text, and token count, sorted by id. Deliberately excludes
+    /// every placement-dependent field (replica, latency, tick counts) —
+    /// see the type-level determinism contract.
+    pub fn outcomes_json(&self) -> Json {
+        let mut rows: Vec<&RequestRecord> =
+            self.replicas.iter().flat_map(|r| r.records.iter()).collect();
+        rows.sort_by_key(|r| r.id);
+        let rows: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("text", Json::str(&r.text)),
+                    ("n_generated", Json::Num(r.n_generated as f64)),
+                    (
+                        "outcome",
+                        r.outcome.map_or(Json::Null, |o| Json::str(o.name())),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// Canonical machine-readable fleet report: fleet aggregates, the
+    /// replica-count-invariant `outcomes` block, and the full per-replica
+    /// [`ReplayReport::to_json`] documents. Byte-identical across worker
+    /// counts for a fixed (trace, router, replica count).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("harness", Json::str("fleet_replay")),
+            ("router", Json::str(self.router)),
+            ("n_replicas", Json::Num(self.replicas.len() as f64)),
+            ("n_requests", Json::Num(self.n_requests() as f64)),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("migrations", Json::Num(self.migrations as f64)),
+            ("migrated_bytes", Json::Num(self.migrated_bytes as f64)),
+            ("prefill_tokens", Json::Num(self.metrics.prefill_tokens as f64)),
+            ("restores", Json::Num(self.metrics.restores as f64)),
+            ("restore_bytes", Json::Num(self.metrics.restore_bytes as f64)),
+            ("prefix_hits", Json::Num(self.metrics.prefix_hits as f64)),
+            (
+                "prefix_bytes_shared",
+                Json::Num(self.metrics.prefix_bytes_shared as f64),
+            ),
+            ("ticks", Json::Num(self.ticks() as f64)),
+            ("virtual_us", Json::Num(self.end_us() as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("outcomes", self.outcomes_json()),
+            (
+                "replicas",
+                Json::Arr(self.replicas.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable summary: fleet totals, then one line per replica.
+    pub fn print_summary(&self) {
+        let ms = |us: u64| us as f64 / 1e3;
+        println!(
+            "fleet [{}] x{}   requests {}   completed {}   migrations {} ({} KiB)   \
+             virtual time {:.1} ms   throughput {:.1} req/s",
+            self.router,
+            self.replicas.len(),
+            self.n_requests(),
+            self.completed(),
+            self.migrations,
+            self.migrated_bytes / 1024,
+            ms(self.end_us()),
+            self.throughput_rps(),
+        );
+        for (i, r) in self.replicas.iter().enumerate() {
+            let e = r.overall().e2e.summary();
+            println!(
+                "  replica {i}: {} req, {} ok, {} ticks, {:.1} ms, prefix hits {}, \
+                 e2e p50/p99 {:.2}/{:.2} ms",
+                r.records.len(),
+                r.count(Outcome::Ok),
+                r.ticks,
+                ms(r.end_us),
+                r.metrics.prefix_hits,
+                ms(e.p50_us),
+                ms(e.p99_us),
+            );
+        }
+    }
+}
+
+/// Replay a timed trace through a [`Fleet`] on per-replica virtual clocks.
+///
+/// Each replica advances its own clock from the same deterministic
+/// [`CostModel`] — replicas are independent machines, so their clocks run
+/// concurrently, not summed. The driver always advances the
+/// furthest-behind replica that still has pending work (ties to the lowest
+/// index) until every busy replica has reached the next trace arrival;
+/// only then is the arrival routed, so the router observes each replica's
+/// state as of the arrival instant no matter how the interleaving is
+/// scheduled — which is what makes placement (and the whole report)
+/// deterministic. An idle replica's clock jumps forward when a request is
+/// routed to it, exactly like the single-scheduler driver.
+pub fn replay_fleet(
+    fleet: &mut Fleet,
+    trace: &[TimedRequest],
+    cost: &CostModel,
+) -> Result<FleetReplayReport> {
+    let n_r = fleet.n();
+    let mut now = vec![0u64; n_r];
+    let mut ticks = vec![0u64; n_r];
+    let mut last_terminal = vec![0u64; n_r];
+    let mut records: Vec<Vec<RequestRecord>> = vec![Vec::new(); n_r];
+    // id -> (home replica, index into its record list); the router fixes a
+    // request's home at submission and it never moves (offload migration
+    // re-homes *snapshots*, which happens before the request is submitted).
+    let mut home: HashMap<u64, (usize, usize)> = HashMap::new();
+    let mut prev: Vec<StepMetrics> = (0..n_r)
+        .map(|i| {
+            let s = fleet.replica_mut(i);
+            s.record_events(true);
+            s.done.clear();
+            s.metrics
+        })
+        .collect();
+
+    let mut next = 0usize; // next trace arrival
+    loop {
+        let horizon = trace.get(next).map(|t| t.arrival_us);
+        let runnable = (0..n_r)
+            .filter(|&i| fleet.replica(i).pending() > 0)
+            .filter(|&i| horizon.map_or(true, |h| now[i] < h))
+            .min_by_key(|&i| (now[i], i));
+        if let Some(i) = runnable {
+            let s = fleet.replica_mut(i);
+            s.set_now(now[i]);
+            let worked = s.tick()?;
+            // `pending() > 0` means tick always does work; guard against
+            // a livelock anyway if that invariant ever drifts.
+            debug_assert!(worked, "a replica with pending work must tick");
+            if worked {
+                ticks[i] += 1;
+                let m = s.metrics;
+                let dt = cost.tick_cost(
+                    m.prefill_tokens - prev[i].prefill_tokens,
+                    m.decode_steps - prev[i].decode_steps,
+                    m.batched_seqs - prev[i].batched_seqs,
+                    m.offload_bytes - prev[i].offload_bytes,
+                    m.restore_bytes - prev[i].restore_bytes,
+                    m.prefix_bytes_shared - prev[i].prefix_bytes_shared,
+                );
+                prev[i] = m;
+                now[i] = now[i].saturating_add(dt.max(1));
+            } else {
+                now[i] = horizon.unwrap_or(now[i]);
+            }
+            for ev in fleet.replica_mut(i).take_events() {
+                if let Some(&(rep, ri)) = home.get(&ev.id()) {
+                    apply_event(&mut records[rep][ri], ev, now[i], &mut last_terminal[i]);
+                }
+            }
+            for c in fleet.replica_mut(i).done.drain(..) {
+                if c.error.is_none() {
+                    if let Some(&(rep, ri)) = home.get(&c.id) {
+                        records[rep][ri].text = c.text;
+                    }
+                }
+            }
+            continue;
+        }
+        // Every busy replica has caught up to the next arrival: route it
+        // (anchoring deadlines at the trace arrival time, like the
+        // single-scheduler driver), or finish if the trace is drained.
+        let Some(t) = trace.get(next) else { break };
+        next += 1;
+        let dest = fleet.submit_at(t.req.clone(), t.arrival_us);
+        now[dest] = now[dest].max(t.arrival_us);
+        records[dest].push(blank_record(t));
+        home.insert(t.req.id, (dest, records[dest].len() - 1));
+        // The Submitted event this enqueued drains on dest's next tick.
+    }
+    for i in 0..n_r {
+        fleet.replica_mut(i).record_events(false);
+    }
+    let replicas: Vec<ReplayReport> = (0..n_r)
+        .map(|i| ReplayReport {
+            records: std::mem::take(&mut records[i]),
+            ticks: ticks[i],
+            end_us: last_terminal[i],
+            metrics: fleet.replica(i).metrics,
+        })
+        .collect();
+    Ok(FleetReplayReport {
+        replicas,
+        metrics: fleet.aggregate_metrics(),
+        router: fleet.router_name(),
+        migrations: fleet.migrations,
+        migrated_bytes: fleet.migrated_bytes,
+    })
 }
 
 #[cfg(test)]

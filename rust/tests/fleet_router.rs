@@ -1,0 +1,248 @@
+//! Fleet router tests: exact round-robin placement, least-loaded load
+//! spreading within per-replica budgets, affinity routing of readmits to
+//! the snapshot-holding replica (including the migrate-under-load path,
+//! whose byte-identity `Fleet::try_migrate` asserts on every copy), and
+//! the fleet replay determinism matrix — full-report byte-identity across
+//! worker counts, outcome byte-identity across replica counts.
+
+use innerq::coordinator::{
+    Affinity, Engine, Fleet, LeastLoaded, Policy, Preemption, Priority, Request, RoundRobin,
+    Scheduler,
+};
+use innerq::runtime::Manifest;
+use innerq::util::fakemodel::write_fake_artifacts;
+use innerq::workload::replay::{replay_fleet, CostModel, FleetReplayReport, Outcome};
+use innerq::workload::trace::{Arrival, MultiTurnTraceConfig, TimedTraceConfig};
+use innerq::QuantMethod;
+
+fn fake_scheduler(dir_tag: &str, workers: usize, budget: usize) -> Scheduler {
+    let dir = write_fake_artifacts(dir_tag, '7');
+    let manifest = Manifest::load(&dir).expect("fake manifest");
+    let mut engine = Engine::new(manifest, QuantMethod::InnerQBase.config()).expect("engine");
+    engine.set_workers(workers);
+    let mut sched = Scheduler::new(engine, budget);
+    sched.set_policy(Policy::Slo);
+    sched.set_preemption(Preemption::Offload);
+    sched.set_warm_budget(1 << 20);
+    sched
+}
+
+fn fake_fleet(
+    dir_tag: &str,
+    n_replicas: usize,
+    workers: usize,
+    budget: usize,
+    router: Box<dyn innerq::coordinator::RouterPolicy + Send>,
+) -> Fleet {
+    let replicas = (0..n_replicas).map(|_| fake_scheduler(dir_tag, workers, budget)).collect();
+    Fleet::new(replicas, router)
+}
+
+fn req_class(id: u64, prompt: &str, max_new_tokens: usize, p: Priority) -> Request {
+    let mut r = Request::new(id, prompt, max_new_tokens);
+    r.priority = p;
+    r
+}
+
+// ---------------------------------------------------------------------------
+// placement
+// ---------------------------------------------------------------------------
+
+/// Round-robin is exact: submission `i` lands on replica `i % n`,
+/// regardless of load.
+#[test]
+fn round_robin_placement_is_exact() {
+    let mut fleet = fake_fleet("fleet_rr", 3, 1, 64_000, Box::new(RoundRobin::default()));
+    for i in 0..7u64 {
+        let dest = fleet.submit(Request::new(i, "a=1;?a=", 2));
+        assert_eq!(dest, (i as usize) % 3, "submission {i}");
+    }
+    let done = fleet.run_to_completion().expect("fleet run");
+    assert_eq!(done.len(), 7);
+    for c in &done {
+        assert_eq!(c.text, "77", "req {}", c.id);
+        assert!(c.error.is_none());
+    }
+}
+
+/// Least-loaded spreads a burst one request per replica, so a per-replica
+/// budget that fits exactly one live sequence (6000 bytes at the fake
+/// geometry) serves the whole burst with zero preemptions and zero
+/// rejections — the same burst on one replica would thrash.
+#[test]
+fn least_loaded_spreads_a_burst_within_replica_budgets() {
+    let mut fleet = fake_fleet("fleet_ll", 4, 1, 6000, Box::new(LeastLoaded));
+    let mut dests = Vec::new();
+    for i in 0..4u64 {
+        dests.push(fleet.submit(Request::new(i, "a=1;?a=", 2)));
+    }
+    let mut sorted = dests.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![0, 1, 2, 3], "burst must spread one per replica: {dests:?}");
+    let done = fleet.run_to_completion().expect("fleet run");
+    assert_eq!(done.len(), 4);
+    for c in &done {
+        assert_eq!(c.text, "77");
+        assert!(c.error.is_none());
+    }
+    let m = fleet.aggregate_metrics();
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.preemptions, 0, "spread burst must not preempt anywhere");
+}
+
+// ---------------------------------------------------------------------------
+// affinity and migration
+// ---------------------------------------------------------------------------
+
+/// Drive replica 1 into offloading request 10 (budget fits one sequence;
+/// an interactive arrival preempts it into the warm tier).
+fn offload_victim_on_replica_1(fleet: &mut Fleet) {
+    let r1 = fleet.replica_mut(1);
+    r1.submit(req_class(10, "a=1;?a=", 2, Priority::Batch));
+    r1.tick().expect("tick"); // victim live
+    r1.submit(req_class(11, "b=2;?b=", 2, Priority::Interactive));
+    r1.tick().expect("tick"); // preempts + offloads 10
+    assert!(fleet.replica(1).tier.contains(10), "victim must be warm-resident on replica 1");
+}
+
+/// Affinity routes a readmitted request to the replica already holding its
+/// offload snapshot, even when another replica is idle.
+#[test]
+fn affinity_routes_readmit_to_snapshot_holder() {
+    let mut fleet = fake_fleet("fleet_aff", 2, 1, 6000, Box::new(Affinity::default()));
+    offload_victim_on_replica_1(&mut fleet);
+    // Replica 0 is idle (pending 0) and replica 1 is loaded (pending 2),
+    // but within the default headroom the snapshot holder still wins.
+    let p = fleet.route(&req_class(10, "a=1;?a=", 2, Priority::Batch));
+    assert_eq!(p.replica, 1, "readmit must follow the snapshot");
+    assert_eq!(p.migrate_from, None);
+    // A request with no locality anywhere falls back to least-loaded.
+    let p = fleet.route(&Request::new(99, "c=3;?c=", 2));
+    assert_eq!(p.replica, 0);
+}
+
+/// With zero headroom the loaded holder loses the placement and the router
+/// migrates the snapshot to the least-loaded replica: a verbatim byte copy
+/// between warm tiers (asserted inside `try_migrate` on every call), after
+/// which the victim restores and completes on its new home.
+#[test]
+fn affinity_migrates_snapshot_when_holder_is_overloaded() {
+    let mut fleet =
+        fake_fleet("fleet_mig", 2, 1, 6000, Box::new(Affinity { migrate_headroom: 0 }));
+    offload_victim_on_replica_1(&mut fleet);
+    let bytes_on_src = fleet.replica(1).tier.resident_bytes();
+    assert!(bytes_on_src > 0);
+
+    let p = fleet.route(&req_class(10, "a=1;?a=", 2, Priority::Batch));
+    assert_eq!(
+        p,
+        innerq::coordinator::Placement { replica: 0, migrate_from: Some(1) },
+        "holder at pending 2 vs idle replica 0 must migrate at headroom 0"
+    );
+    assert!(fleet.try_migrate(10, 1, 0), "full-windows local snapshot must migrate");
+    assert_eq!(fleet.migrations, 1);
+    assert!(fleet.migrated_bytes > 0);
+    assert_eq!(fleet.replica(1).tier.resident_bytes(), 0, "source tier must be emptied");
+    assert!(fleet.replica(0).tier.contains(10), "snapshot must now live on replica 0");
+    assert!(!fleet.replica(1).tier.contains(10), "and must be gone from replica 1");
+    assert!(fleet.replica(0).holds_warm(10), "warm bookkeeping must move with the bytes");
+    assert!(!fleet.replica(1).holds_warm(10));
+
+    // The migrated victim restores and completes on replica 0; the
+    // interactive request completes on replica 1; outputs are unchanged.
+    let done = fleet.run_to_completion().expect("fleet run");
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].id, 10);
+    for c in &done {
+        assert_eq!(c.text, "77", "req {}", c.id);
+        assert!(c.error.is_none());
+    }
+    assert_eq!(fleet.replica(0).metrics.restores, 1, "new home must restore, not re-prefill");
+    assert_eq!(fleet.replica(0).metrics.offload_lost, 0);
+    assert_eq!(fleet.aggregate_metrics().restores, 1);
+}
+
+/// Migration refuses ids that are not (fully) offloaded on the claimed
+/// source, and self- or out-of-range moves, leaving all state untouched.
+#[test]
+fn migration_refuses_non_resident_and_degenerate_moves() {
+    let mut fleet = fake_fleet("fleet_mig_no", 2, 1, 6000, Box::new(Affinity::default()));
+    assert!(!fleet.try_migrate(10, 0, 1), "nothing offloaded yet");
+    offload_victim_on_replica_1(&mut fleet);
+    assert!(!fleet.try_migrate(10, 1, 1), "self-migration is refused");
+    assert!(!fleet.try_migrate(10, 1, 7), "out-of-range destination is refused");
+    assert!(!fleet.try_migrate(77, 1, 0), "unknown id is refused");
+    assert!(fleet.replica(1).tier.contains(10), "refusals must not disturb the resident");
+    assert!(fleet.replica(1).holds_warm(10));
+    assert_eq!(fleet.migrations, 0);
+}
+
+// ---------------------------------------------------------------------------
+// fleet replay determinism matrix
+// ---------------------------------------------------------------------------
+
+fn fleet_replay(
+    dir_tag: &str,
+    router_name: &str,
+    n_replicas: usize,
+    workers: usize,
+) -> FleetReplayReport {
+    // Deadline-free greedy multi-turn trace; 5 sessions is coprime with
+    // every replica count used here, so session→replica alignment cannot
+    // accidentally make policies agree.
+    let trace = innerq::workload::trace::generate_multi_turn(&MultiTurnTraceConfig {
+        base: TimedTraceConfig {
+            n_requests: 40,
+            arrival: Arrival::Poisson { rate_rps: 2000.0 },
+            seed: 2026,
+            ..TimedTraceConfig::default()
+        },
+        n_sessions: 5,
+        ..MultiTurnTraceConfig::default()
+    });
+    let router = innerq::coordinator::parse_router(router_name).expect("router name");
+    let mut fleet = fake_fleet(dir_tag, n_replicas, workers, 64_000, router);
+    replay_fleet(&mut fleet, &trace, &CostModel::default()).expect("fleet replay")
+}
+
+/// For a fixed (policy, replica count), the full fleet report — placement,
+/// per-replica latencies, everything — is byte-identical across worker
+/// counts: each replica's engine fan-out is byte-identical at any pool
+/// size and the router never reads a wall clock.
+#[test]
+fn fleet_replay_is_byte_identical_across_worker_counts() {
+    for policy in ["round-robin", "least-loaded", "affinity"] {
+        let a = fleet_replay("fleet_det_w", policy, 2, 1);
+        assert_eq!(a.n_requests(), 40);
+        assert_eq!(a.completed(), 40, "{policy}: all requests must complete");
+        let b = fleet_replay("fleet_det_w", policy, 2, 4);
+        assert_eq!(
+            a.to_json().dump(),
+            b.to_json().dump(),
+            "{policy}: fleet replay diverged between workers=1 and workers=4"
+        );
+    }
+}
+
+/// Across replica counts latency shifts (placement changes queueing), but
+/// what each request *produces* cannot: the outcomes sub-report (terminal
+/// outcome, completion text, token count, sorted by id) is byte-identical
+/// for {1, 2, 4} replicas under every policy on a deadline-free greedy
+/// trace with a comfortable per-replica budget.
+#[test]
+fn fleet_outcomes_are_byte_identical_across_replica_counts() {
+    for policy in ["round-robin", "affinity"] {
+        let one = fleet_replay("fleet_det_r", policy, 1, 1);
+        assert_eq!(one.completed(), 40);
+        assert_eq!(one.replicas[0].count(Outcome::Rejected), 0);
+        let golden = one.outcomes_json().dump();
+        for n in [2usize, 4] {
+            let r = fleet_replay("fleet_det_r", policy, n, 1);
+            assert_eq!(
+                r.outcomes_json().dump(),
+                golden,
+                "{policy}: outcomes diverged between 1 and {n} replicas"
+            );
+        }
+    }
+}

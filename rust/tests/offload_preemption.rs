@@ -5,7 +5,9 @@
 //! recompute fallback; warm deadline expiry; replay byte-identity across
 //! worker counts with offloads in the stream).
 
-use innerq::cache::store::{restore_head, snapshot_head};
+use innerq::cache::store::{
+    restore_head, restore_sequence_frames, snapshot_head, snapshot_sequence_frames,
+};
 use innerq::cache::HeadCache;
 use innerq::coordinator::{Engine, Policy, Preemption, Priority, Request, SchedEvent, Scheduler};
 use innerq::quant::group::Mode;
@@ -81,6 +83,92 @@ fn snapshot_matrix_round_trips_every_quantized_variant() {
                     assert_eq!(b1, b2, "{tag}: restore-then-decode not bit-identical");
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot portability across engine instances
+// ---------------------------------------------------------------------------
+
+/// Greedy next token (strict argmax, first max wins) — applied identically
+/// to both sides of the twin comparison below.
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// The frame snapshot format is value-based — token history, quantized
+/// segments, window contents, nothing engine- or pool-local — so frames
+/// written on one engine must restore on a *different* engine instance
+/// (fresh PJRT stages, fresh worker pool, same `MethodConfig`), re-snapshot
+/// to the identical bytes (with and without the droppable window frames,
+/// exercising the destination's window-rebuild path), and keep decoding
+/// bit-identically to a twin that never left its home engine. This is the
+/// invariant cross-replica migration (`coordinator::fleet`) rides on.
+#[test]
+fn snapshot_frames_are_portable_across_engine_instances() {
+    let methods = [QuantMethod::InnerQBase, QuantMethod::InnerQHybrid, QuantMethod::Kivi];
+    for (mi, method) in methods.into_iter().enumerate() {
+        for drop_windows in [false, true] {
+            let tag = format!("{method:?} drop_windows={drop_windows}");
+            // Shrink the fp windows so the prompt spills into quantized
+            // segments and the core frames carry real payload.
+            let mut cfg = method.config();
+            cfg.w_sink = cfg.w_sink.min(4);
+            cfg.w_recent = cfg.w_recent.min(8).max(4);
+            let dir_a = write_fake_artifacts(&format!("port_a_{mi}_{drop_windows}"), '7');
+            let dir_b = write_fake_artifacts(&format!("port_b_{mi}_{drop_windows}"), '7');
+            let engine_a = Engine::new(Manifest::load(&dir_a).expect("manifest a"), cfg)
+                .expect("engine a");
+            let engine_b = Engine::new(Manifest::load(&dir_b).expect("manifest b"), cfg)
+                .expect("engine b");
+
+            let prompt = engine_a.manifest.encode("a=1;b=2;c=3;?a=").expect("encode");
+            let mut twin = engine_a.prefill(&prompt).expect("prefill");
+            let frames = snapshot_sequence_frames(&twin);
+
+            let layers: Vec<(&[u8], Option<&[u8]>)> = frames
+                .layers
+                .iter()
+                .map(|l| (l.core.as_slice(), (!drop_windows).then(|| l.windows.as_slice())))
+                .collect();
+            let (mut back, missing) =
+                restore_sequence_frames(&frames.meta, &layers).expect(&tag);
+            if drop_windows {
+                assert!(!missing.is_empty(), "{tag}: dropped windows must be reported");
+                engine_b.rebuild_windows(&mut back, &missing).expect(&tag);
+            } else {
+                assert!(missing.is_empty(), "{tag}: nothing should be missing");
+            }
+            // Re-snapshot on the destination: byte-identical frames, window
+            // rebuild included (it re-runs the same deterministic prefill
+            // stages the original windows came from).
+            assert_eq!(
+                snapshot_sequence_frames(&back),
+                frames,
+                "{tag}: re-snapshot on the destination engine differs"
+            );
+
+            // Continued decode must not see the move: step both sequences
+            // greedily on their own engines and compare bit-exactly.
+            for _ in 0..6 {
+                let ta = argmax(&twin.last_logits);
+                let tb = argmax(&back.last_logits);
+                assert_eq!(ta, tb, "{tag}: greedy continuation diverged");
+                engine_a.decode_step(&mut [&mut twin], &[ta]).expect(&tag);
+                engine_b.decode_step(&mut [&mut back], &[tb]).expect(&tag);
+            }
+            let bits = |s: &innerq::coordinator::Sequence| {
+                s.last_logits.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+            };
+            assert_eq!(bits(&twin), bits(&back), "{tag}: post-restore decode diverged");
+            assert_eq!(twin.tokens, back.tokens, "{tag}: token histories diverged");
         }
     }
 }
